@@ -1,0 +1,43 @@
+//! Bench: Figure 2 — basic dataflow comparison.
+//!
+//! Two latency proxies per dataflow: wall-clock of the functional
+//! interpreter (monotone in instruction count) and modeled Neoverse-N1
+//! cycles (attached as the metric column). Run `cargo bench` or
+//! `cargo bench -- --quick`.
+
+use yflows::codegen::{basic, run_conv};
+use yflows::explore;
+use yflows::dataflow::Anchor;
+use yflows::layer::ConvConfig;
+use yflows::machine::MachineConfig;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig2_basic_dataflows");
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+
+    for stride in [1usize, 2] {
+        // Reduced spatial size so a wall-clock iteration is sub-second;
+        // relative ordering is what Fig 2 claims.
+        let cfg = ConvConfig::simple(28, 28, 3, 3, stride, c, 8);
+        let input = ActTensor::random(ActShape::new(c, 28, 28), ActLayout::NCHWc { c }, 1);
+        let weights =
+            WeightTensor::random(WeightShape::new(c, 8, 3, 3), WeightLayout::CKRSc { c }, 2);
+        for (name, anchor) in [("os", Anchor::Output), ("is", Anchor::Input), ("ws", Anchor::Weight)] {
+            let prog = match anchor {
+                Anchor::Output => basic::gen_os(&cfg, &machine),
+                Anchor::Input => basic::gen_is(&cfg, &machine),
+                Anchor::Weight => basic::gen_ws(&cfg, &machine),
+            };
+            let modeled = explore::basic_cycles(&cfg, &machine, anchor, 2).cycles;
+            suite.bench_with_metric(
+                &format!("fig2/{name}/s{stride}"),
+                Some(("modeled_cycles".into(), modeled)),
+                &mut || run_conv(&prog, &cfg, &machine, &input, &weights),
+            );
+        }
+    }
+    suite.finish();
+}

@@ -1,0 +1,39 @@
+//! Bench: Figure 7 — extended vs basic dataflows, wall-clock on the
+//! functional interpreter with modeled cycles attached.
+
+use yflows::codegen::{self, run_conv};
+use yflows::dataflow::{Anchor, AuxKind, DataflowSpec};
+use yflows::explore::evaluate;
+use yflows::layer::ConvConfig;
+use yflows::machine::MachineConfig;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig7_extended_dataflows");
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+    let cfg = ConvConfig::simple(28, 28, 3, 3, 1, c, 8);
+    let input = ActTensor::random(ActShape::new(c, 28, 28), ActLayout::NCHWc { c }, 1);
+    let weights = WeightTensor::random(WeightShape::new(c, 8, 3, 3), WeightLayout::CKRSc { c }, 2);
+
+    let r = cfg.r_size();
+    let specs = [
+        ("os_basic", DataflowSpec::basic(Anchor::Output)),
+        ("os_ext", DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, r), (AuxKind::Input, r - 1)])),
+        ("is_basic", DataflowSpec::basic(Anchor::Input)),
+        ("is_ext", DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Output, r), (AuxKind::Weight, r)])),
+        ("ws_basic", DataflowSpec::basic(Anchor::Weight)),
+        ("ws_ext", DataflowSpec::extended(Anchor::Weight, vec![(AuxKind::Output, r)])),
+    ];
+    for (name, spec) in specs {
+        let prog = codegen::generate(&cfg, &spec, &machine);
+        let (_, stats) = evaluate(&cfg, &spec, &machine, 2);
+        suite.bench_with_metric(
+            &format!("fig7/{name}"),
+            Some(("modeled_cycles".into(), stats.cycles)),
+            &mut || run_conv(&prog, &cfg, &machine, &input, &weights),
+        );
+    }
+    suite.finish();
+}

@@ -1,0 +1,55 @@
+//! Bench: Figure 8 — end-to-end INT8 networks.
+//!
+//! Wall-clock benches a reduced functional net (ours vs the tuned-WS
+//! baseline kernels on the interpreter); the full-network modeled
+//! comparison (ResNet-18/34, VGGs, DenseNet-121) is attached as metrics
+//! and regenerated exactly by `yflows fig8`.
+
+use yflows::baselines::ws_neocpu;
+use yflows::codegen::{self, run_conv};
+use yflows::coordinator::plan::PlannerOptions;
+use yflows::dataflow::DataflowSpec;
+use yflows::layer::ConvConfig;
+use yflows::machine::MachineConfig;
+use yflows::nets;
+use yflows::report::fig8;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig8_e2e_int8");
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+
+    // Reduced layer for wall-clock: ours (Algorithm 8) vs tuned WS.
+    let cfg = ConvConfig::simple(30, 30, 3, 3, 1, c, 16);
+    let input = ActTensor::random(ActShape::new(c, 30, 30), ActLayout::NCHWc { c }, 3);
+    let weights = WeightTensor::random(WeightShape::new(c, 16, 3, 3), WeightLayout::CKRSc { c }, 4);
+    let ours = codegen::generate(&cfg, &DataflowSpec::optimized_os(&machine, cfg.r_size()), &machine);
+    let tuned = ws_neocpu::gen_tuned_ws(&cfg, &machine);
+    suite.bench("fig8/layer/ours-alg8", || run_conv(&ours, &cfg, &machine, &input, &weights));
+    suite.bench("fig8/layer/tuned-ws", || run_conv(&tuned, &cfg, &machine, &input, &weights));
+
+    // Planning throughput for a real network.
+    suite.bench("fig8/plan/resnet18", || {
+        yflows::coordinator::plan_network(&nets::resnet18(), PlannerOptions::default()).total_cycles()
+    });
+
+    // Full modeled e2e comparison as metrics (quick subset).
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("YFLOWS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let net_list = if quick {
+        vec![nets::resnet18()]
+    } else {
+        vec![nets::resnet18(), nets::vgg11()]
+    };
+    let (_, rows) = fig8::run(&net_list, &[1], 128, 2);
+    for r in &rows {
+        suite.bench_with_metric(
+            &format!("fig8/e2e-model/{}", r.network),
+            Some(("speedup_vs_tuned_tvm".into(), r.speedup_vs_tuned())),
+            &mut || r.ours_cycles,
+        );
+    }
+    suite.finish();
+}

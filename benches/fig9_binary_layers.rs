@@ -1,0 +1,53 @@
+//! Bench: Figure 9 — binary convolution layers, XNOR extended-OS vs the
+//! bitserial CGO'20 surrogate, wall-clock + modeled cycles.
+
+use yflows::baselines::bitserial;
+use yflows::codegen::binary::{self, run_conv_binary};
+use yflows::dataflow::{Anchor, AuxKind, DataflowSpec};
+use yflows::layer::ConvConfig;
+use yflows::machine::{MachineConfig, PerfModel};
+use yflows::quant::{pack_binary_act, pack_binary_wgt};
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::bench::BenchSuite;
+use yflows::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig9_binary_layers");
+    let machine = MachineConfig::neon(128);
+    let c_bits = machine.c_binary();
+
+    let cfg = ConvConfig::simple(16, 16, 3, 3, 1, 128, 32);
+    let mut rng = Rng::new(5);
+    let mut input = ActTensor::zeros(ActShape::new(128, 16, 16), ActLayout::NCHWc { c: c_bits });
+    for v in input.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let mut w = WeightTensor::zeros(WeightShape::new(128, 32, 3, 3), WeightLayout::CKRSc { c: c_bits });
+    for v in w.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let pin = pack_binary_act(&input, c_bits);
+    let pw = pack_binary_wgt(&w, c_bits);
+
+    let spec = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 9), (AuxKind::Input, 8)]);
+    let ours = binary::gen_binary_os_ext(&cfg, &spec, &machine);
+    let bs = bitserial::gen_bitserial(&cfg, &machine);
+
+    let schedule = binary::schedule_binary(&cfg, &machine);
+    let mut pm = PerfModel::neoverse_n1();
+    let ours_cy = pm.estimate_layer(&ours, &schedule, 2).cycles;
+    let mut pm2 = PerfModel::neoverse_n1();
+    let bs_cy = pm2.estimate_layer(&bs, &schedule, 2).cycles;
+
+    suite.bench_with_metric(
+        "fig9/xnor-ext-os",
+        Some(("modeled_cycles".into(), ours_cy)),
+        &mut || run_conv_binary(&ours, &cfg, &machine, &pin, &pw),
+    );
+    suite.bench_with_metric(
+        "fig9/bitserial",
+        Some(("modeled_speedup_ours".into(), bs_cy / ours_cy)),
+        &mut || run_conv_binary(&bs, &cfg, &machine, &pin, &pw),
+    );
+    suite.finish();
+}

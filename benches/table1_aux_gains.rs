@@ -1,0 +1,49 @@
+//! Bench: Table I — marginal memory-op gains per auxiliary vector
+//! variable, measured (static program diff) vs predicted (heuristics),
+//! plus code-generation throughput (the cost the explorer pays per
+//! candidate).
+
+use yflows::codegen;
+use yflows::dataflow::{heuristics, Anchor, AuxKind, DataflowSpec};
+use yflows::layer::ConvConfig;
+use yflows::machine::MachineConfig;
+use yflows::report::table1;
+use yflows::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("table1_aux_gains");
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+    let cfg = ConvConfig::simple(28, 28, 3, 3, 1, c, 8);
+
+    // Codegen throughput per dataflow family.
+    for (name, spec) in [
+        ("basic_os", DataflowSpec::basic(Anchor::Output)),
+        ("ext_os_w9", DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 9)])),
+        ("ext_is_o9", DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Output, 9)])),
+        ("ext_ws_o9", DataflowSpec::extended(Anchor::Weight, vec![(AuxKind::Output, 9)])),
+    ] {
+        suite.bench(&format!("table1/codegen/{name}"), || {
+            codegen::generate(&cfg, &spec, &machine).instrs.len()
+        });
+    }
+
+    // Measured-vs-predicted agreement attached as metrics.
+    for (anchor, aux) in [
+        (Anchor::Output, AuxKind::Weight),
+        (Anchor::Input, AuxKind::Output),
+        (Anchor::Weight, AuxKind::Output),
+    ] {
+        let cell = table1::measure_cell(&cfg, &machine, anchor, aux, 1);
+        let predicted = heuristics::aux_gain(&cfg, anchor, aux, 1).unwrap();
+        suite.bench_with_metric(
+            &format!("table1/measure/{}-{}", anchor.name(), aux.name()),
+            Some((
+                "measured_over_predicted_reads".into(),
+                cell.measured_reads / predicted.reads_saved.max(1.0),
+            )),
+            &mut || table1::measure_cell(&cfg, &machine, anchor, aux, 1).measured_reads,
+        );
+    }
+    suite.finish();
+}

@@ -1,0 +1,50 @@
+//! Codegen tour: dump the basic dataflows (Algorithms 1–3), an extended
+//! OS kernel (Algorithm 5), the secondary-unroll allocation sequences
+//! (Algorithm 4), and the ARM-intrinsics rendering.
+//!
+//! Run: `cargo run --release --example codegen_dump`
+
+use yflows::codegen::{self, basic, emit_c};
+use yflows::dataflow::{unroll, Anchor, AuxKind, DataflowSpec};
+use yflows::layer::ConvConfig;
+use yflows::machine::MachineConfig;
+
+fn main() {
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+    let cfg = ConvConfig::simple(5, 5, 2, 2, 1, c, 1);
+
+    println!("=== Basic dataflows (Algorithms 1-3) on {} ===\n", cfg.name());
+    for (name, prog) in [
+        ("OS (Alg 3)", basic::gen_os(&cfg, &machine)),
+        ("IS (Alg 1)", basic::gen_is(&cfg, &machine)),
+        ("WS (Alg 2)", basic::gen_ws(&cfg, &machine)),
+    ] {
+        let s = prog.stats();
+        println!(
+            "{name:12} {} instrs, {} vloads, {} scalar-RMW reductions",
+            s.instrs, s.vloads, s.scalar_rmw
+        );
+    }
+
+    println!("\n=== Algorithm 4: secondary-unroll allocation sequences ===");
+    println!("3 input vector variables per window row, stride 1:");
+    for (it, seq) in unroll::rotation_sequence(3, 1, 4).iter().enumerate() {
+        println!("  unrolled iter {it}: slots -> vars {seq:?}");
+    }
+    println!(
+        "secondary unroll factor for rows [3,3] at stride 1: {}",
+        unroll::secondary_unroll_factor(&[3, 3], 1)
+    );
+
+    println!("\n=== Extended OS (Algorithm 5 / Algorithm 8) ===");
+    let spec = DataflowSpec::extended(
+        Anchor::Output,
+        vec![(AuxKind::Weight, cfg.r_size()), (AuxKind::Input, 2)],
+    );
+    let prog = codegen::generate(&cfg, &spec, &machine);
+    println!("{}", prog.disasm());
+
+    println!("=== Same kernel as ARM NEON C ===");
+    println!("{}", emit_c::emit_c(&prog));
+}

@@ -1,0 +1,58 @@
+//! Quickstart: explore dataflows for one convolution layer, inspect the
+//! winner, verify it against the naive oracle, and print its NEON C.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use yflows::codegen::{self, emit_c};
+use yflows::explore::{self, ExploreConfig};
+use yflows::layer::{oracle::conv_ref, ConvConfig};
+use yflows::machine::MachineConfig;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::table::Table;
+
+fn main() -> yflows::Result<()> {
+    // A paper-style layer: 3x3 filter, 28x28 input, one channel block.
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+    let cfg = ConvConfig::simple(28, 28, 3, 3, 1, c, 32);
+    println!("layer {} — exploring dataflows on {} vector registers\n", cfg.name(), machine.num_regs);
+
+    // 1. Explore: enumerate → heuristic-prune → simulate → select.
+    let ex = explore::explore(&cfg, &machine, &ExploreConfig::default());
+    let mut t = Table::new(&["dataflow", "modeled cycles", "mem reads", "mem writes"]);
+    let mut cands = ex.candidates.clone();
+    cands.sort_by(|a, b| a.stats.cycles.partial_cmp(&b.stats.cycles).unwrap());
+    for cand in cands.iter().take(8) {
+        t.row(&[
+            cand.spec.name(),
+            format!("{:.0}", cand.stats.cycles),
+            cand.stats.mem_reads.to_string(),
+            cand.stats.mem_writes.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let winner = ex.best();
+    println!("winner: {} (the paper's Algorithm 8 shape)\n", winner.spec.name());
+
+    // 2. Generate the winning kernel and check it bit-exactly.
+    let prog = codegen::generate(&cfg, &winner.spec, &machine);
+    let input = ActTensor::random(ActShape::new(c, 28, 28), ActLayout::NCHWc { c }, 1);
+    let weights = WeightTensor::random(WeightShape::new(c, 32, 3, 3), WeightLayout::CKRSc { c }, 2);
+    let got = codegen::run_conv(&prog, &cfg, &machine, &input, &weights);
+    let want = conv_ref(&cfg, &input, &weights);
+    assert_eq!(got.data, want.data);
+    println!(
+        "kernel `{}` verified against the oracle: {} outputs exact ✓",
+        prog.name,
+        got.data.len()
+    );
+
+    // 3. Show the first lines of the generated ARM NEON C.
+    let c_src = emit_c::emit_c(&prog);
+    println!("\n--- generated NEON C (first 20 lines) ---");
+    for line in c_src.lines().take(20) {
+        println!("{line}");
+    }
+    println!("... ({} lines total)", c_src.lines().count());
+    Ok(())
+}

@@ -1,0 +1,68 @@
+"""AOT lowering: JAX (Layer 2) + Pallas (Layer 1) → HLO **text**
+artifacts the rust runtime loads via the `xla` crate.
+
+HLO text, NOT `lowered.compile()`/`.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --outdir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+ARTIFACTS = {
+    # name -> (function, arg-spec factory, shape dict)
+    "conv3x3": (model.single_conv, model.single_conv_specs, model.SINGLE_CONV_SHAPES),
+    "minivgg": (model.minivgg, model.minivgg_specs, model.MINIVGG_SHAPES),
+}
+
+
+def build(outdir: str) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {}
+    for name, (fn, specs, shapes) in ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*specs())
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "path": f"{name}.hlo.txt",
+            "inputs": {k: list(v) for k, v in shapes.items()},
+            "hlo_bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.outdir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+`conv_os` is the paper's winning dataflow (Algorithm 8) adapted to TPU;
+`conv_ws` is the conventional weight-stationary baseline; `ref` is the
+pure-jnp oracle both are tested against.
+"""
+
+from .conv_os import conv_os  # noqa: F401
+from .conv_ws import conv_ws  # noqa: F401
+from .ref import conv_ref, maxpool_ref  # noqa: F401

@@ -1,0 +1,94 @@
+"""Layer-1 Pallas kernel: output-stationary convolution with auxiliary
+weight stationarity, adapted from the paper's ARM-SIMD winner
+(Algorithm 8) to the TPU execution model.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation):
+  * vector registers holding the anchored output  → the output row tile
+    resident in VMEM scratch for the whole reduction (the grid's only
+    revisit-free dimension);
+  * auxiliary weight stationarity (stash all R taps) → the weight block's
+    BlockSpec index map is constant in the output-spatial grid dimension,
+    so weights stay VMEM-resident across all grid steps instead of being
+    re-fetched from HBM;
+  * the fully-unrolled tap loop (vmla per tap)      → a python-level
+    unrolled loop of (K,C)x(C,ow) matmuls feeding the MXU.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom call
+the CPU PJRT plugin cannot execute; interpret mode lowers to plain HLO,
+which is what the rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_os_kernel(x_ref, w_ref, o_ref, *, stride, fh, fw, ow):
+    """One grid step computes one full output row for all K filters.
+
+    x_ref: (C, ih, iw) — full input, VMEM-resident (index map constant).
+    w_ref: (K, C, fh, fw) — full weights, VMEM-resident (weight aux
+           stationarity: never re-fetched across grid steps).
+    o_ref: (K, 1, ow) — the anchored output tile for this grid step.
+    """
+    oy = pl.program_id(0)
+    k = w_ref.shape[0]
+    # Load the fh input rows this output row depends on.
+    rows = pl.load(
+        x_ref,
+        (slice(None), pl.dslice(oy * stride, fh), slice(None)),
+    )  # (C, fh, iw)
+    # Output tile stays in registers/VMEM until fully reduced (OS anchor).
+    acc = jnp.zeros((k, ow), dtype=jnp.float32)
+    for ry in range(fh):                     # fully unrolled tap loop
+        for rx in range(fw):
+            patch = rows[:, ry, rx : rx + stride * (ow - 1) + 1 : stride]  # (C, ow)
+            tap = w_ref[:, :, ry, rx]        # (K, C) — stashed weights
+            acc = acc + jax.lax.dot(tap, patch,
+                                    preferred_element_type=jnp.float32)
+    o_ref[:, 0, :] = acc                     # single write-back per tile
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def conv_os(x, w, stride=1):
+    """Output-stationary Pallas convolution.
+
+    Args:
+      x: (C, ih, iw) f32.
+      w: (K, C, fh, fw) f32.
+      stride: spatial stride.
+
+    Returns:
+      (K, oh, ow) f32.
+    """
+    c, ih, iw = x.shape
+    k, c2, fh, fw = w.shape
+    assert c == c2
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    kernel = functools.partial(_conv_os_kernel, stride=stride, fh=fh, fw=fw, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        grid=(oh,),
+        in_specs=[
+            # Full-array blocks with constant index maps: both operands
+            # stay VMEM-resident across the grid (weight/input reuse).
+            pl.BlockSpec((c, ih, iw), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, c2, fh, fw), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, 1, ow), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, oh, ow), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_estimate_bytes(c, ih, iw, k, fh, fw, ow):
+    """Static VMEM footprint estimate of one grid step (DESIGN.md §Perf):
+    input block + weights + output tile + accumulator, f32."""
+    inputs = c * ih * iw * 4
+    weights = k * c * fh * fw * 4
+    out_tile = k * ow * 4
+    acc = k * ow * 4
+    return inputs + weights + out_tile + acc

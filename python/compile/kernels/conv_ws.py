@@ -1,0 +1,65 @@
+"""Layer-1 Pallas kernel: weight-stationary convolution — the *baseline*
+dataflow (paper Algorithm 2) expressed on the TPU model, used by the
+kernel-level ablation in `python/tests/test_dataflows.py`.
+
+Structure: the grid iterates over filter taps (the weight anchor); each
+step loads one (K, C) tap, applies it to every output position, and
+accumulates into the output in HBM-backed accumulation — i.e. the output
+is *revisited* R times (exactly the re-streaming the paper's Fig 2 blames
+for WS's poor locality). Numerically identical to conv_os / ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_ws_kernel(x_ref, w_ref, o_ref, *, stride, fh, fw, oh, ow):
+    t = pl.program_id(0)
+    ry = t // fw
+    rx = t % fw
+    k = w_ref.shape[0]
+    tap = pl.load(w_ref, (slice(None), slice(None), pl.dslice(ry, 1), pl.dslice(rx, 1)))
+    tap = tap[:, :, 0, 0]  # (K, C)
+    rows = pl.load(x_ref, (slice(None), pl.dslice(ry, stride * (oh - 1) + 1), slice(None)))
+    c = rows.shape[0]
+    # rx is traced (derived from program_id): slice the contiguous window
+    # dynamically, then subsample with the static stride.
+    window = jax.lax.dynamic_slice(
+        rows, (0, 0, rx), (c, stride * (oh - 1) + 1, stride * (ow - 1) + 1)
+    )
+    patch = window[:, ::stride, ::stride]  # (C, oh, ow)
+    contrib = jax.lax.dot(tap, patch.reshape(c, oh * ow),
+                          preferred_element_type=jnp.float32).reshape(k, oh, ow)
+    # Output revisited every tap: accumulate in place (WS anchor).
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(t > 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + contrib
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def conv_ws(x, w, stride=1):
+    """Weight-stationary Pallas convolution (baseline dataflow)."""
+    c, ih, iw = x.shape
+    k, c2, fh, fw = w.shape
+    assert c == c2
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    kernel = functools.partial(_conv_ws_kernel, stride=stride, fh=fh, fw=fw, oh=oh, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        grid=(fh * fw,),
+        in_specs=[
+            pl.BlockSpec((c, ih, iw), lambda t: (0, 0, 0)),
+            pl.BlockSpec((k, c2, fh, fw), lambda t: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, oh, ow), lambda t: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, oh, ow), jnp.float32),
+        interpret=True,
+    )(x, w)

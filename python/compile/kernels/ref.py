@@ -1,0 +1,52 @@
+"""Pure-jnp reference convolution — the correctness oracle for the Pallas
+kernels (pytest asserts allclose between the two on every swept shape).
+
+Semantics match the rust oracle (`layer::oracle::conv_ref`): valid-only
+positions (input is pre-padded), NCHW single-image tensors, f32 carrying
+integer values so comparisons are exact.
+"""
+
+import jax.numpy as jnp
+
+
+def conv_ref(x, w, stride=1):
+    """Direct convolution.
+
+    Args:
+      x: (C, ih, iw) input.
+      w: (K, C, fh, fw) weights.
+      stride: spatial stride.
+
+    Returns:
+      (K, oh, ow) output, oh = (ih-fh)//stride + 1.
+    """
+    c, ih, iw = x.shape
+    k, c2, fh, fw = w.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    # Accumulate tap-by-tap (mirrors the paper's reduction over fh/fw/ic).
+    acc = jnp.zeros((k, oh, ow), dtype=jnp.float32)
+    for ry in range(fh):
+        for rx in range(fw):
+            patch = x[:, ry : ry + stride * (oh - 1) + 1 : stride,
+                        rx : rx + stride * (ow - 1) + 1 : stride]  # (C, oh, ow)
+            tap = w[:, :, ry, rx]  # (K, C)
+            acc = acc + jnp.einsum("kc,cyx->kyx", tap, patch)
+    return acc
+
+
+def maxpool_ref(x, f=2, stride=2):
+    """(C, h, w) max pooling, valid positions."""
+    c, h, w = x.shape
+    oh = (h - f) // stride + 1
+    ow = (w - f) // stride + 1
+    out = jnp.full((c, oh, ow), -jnp.inf, dtype=x.dtype)
+    for fy in range(f):
+        for fx in range(f):
+            out = jnp.maximum(
+                out,
+                x[:, fy : fy + stride * (oh - 1) + 1 : stride,
+                    fx : fx + stride * (ow - 1) + 1 : stride],
+            )
+    return out

@@ -1,0 +1,69 @@
+"""Layer-2: the JAX model — a small convolutional network ("MiniVGG")
+whose conv layers run through the Layer-1 Pallas OS-dataflow kernel.
+
+Build-time only: `aot.py` lowers these functions once to HLO text; the
+rust coordinator loads and executes the artifacts at inference time.
+
+All tensors are f32 carrying small-integer values so the rust↔JAX
+cross-validation is exact (integer-valued f32 arithmetic is exact far
+below 2^24).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv_os import conv_os
+from .kernels.ref import maxpool_ref
+
+
+def conv_layer(x, w, stride=1):
+    """One conv (Pallas OS kernel) + ReLU."""
+    return jax.nn.relu(conv_os(x, w, stride=stride))
+
+
+def single_conv(x, w):
+    """The cross-validation artifact: one raw conv, no activation.
+
+    Shapes (fixed at AOT time): x (16, 12, 12), w (8, 16, 3, 3).
+    """
+    return (conv_os(x, w, stride=1),)
+
+
+def minivgg(x, w1, w2, w3):
+    """MiniVGG forward:
+
+      conv3x3(16→32) + ReLU → maxpool2 → conv3x3(32→32) + ReLU →
+      conv1x1(32→10) → global average pool → logits (10,).
+
+    Shapes: x (16, 16, 16); w1 (32, 16, 3, 3); w2 (32, 32, 3, 3);
+            w3 (10, 32, 1, 1).
+    """
+    h = conv_layer(x, w1)            # (32, 14, 14)
+    h = maxpool_ref(h, 2, 2)         # (32, 7, 7)
+    h = conv_layer(h, w2)            # (32, 5, 5)
+    h = conv_os(h, w3, stride=1)     # (10, 5, 5)
+    logits = jnp.mean(h, axis=(1, 2))
+    return (logits,)
+
+
+# --- AOT shape registry -------------------------------------------------
+
+SINGLE_CONV_SHAPES = {
+    "x": (16, 12, 12),
+    "w": (8, 16, 3, 3),
+}
+
+MINIVGG_SHAPES = {
+    "x": (16, 16, 16),
+    "w1": (32, 16, 3, 3),
+    "w2": (32, 32, 3, 3),
+    "w3": (10, 32, 1, 1),
+}
+
+
+def single_conv_specs():
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for s in SINGLE_CONV_SHAPES.values()]
+
+
+def minivgg_specs():
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for s in MINIVGG_SHAPES.values()]

@@ -1,0 +1,46 @@
+"""AOT pipeline tests: artifacts are generated, deterministic, and carry
+the manifest the rust runtime expects."""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import aot
+
+
+def test_build_writes_all_artifacts(tmp_path):
+    outdir = str(tmp_path)
+    manifest = aot.build(outdir)
+    assert set(manifest) == {"conv3x3", "minivgg"}
+    for name, meta in manifest.items():
+        path = os.path.join(outdir, meta["path"])
+        assert os.path.exists(path)
+        with open(path) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        assert meta["hlo_bytes"] == len(text)
+    with open(os.path.join(outdir, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+
+
+def test_build_is_deterministic(tmp_path):
+    a = str(tmp_path / "a")
+    b = str(tmp_path / "b")
+    aot.build(a)
+    aot.build(b)
+    for name in ("conv3x3", "minivgg"):
+        with open(os.path.join(a, f"{name}.hlo.txt")) as f:
+            ta = f.read()
+        with open(os.path.join(b, f"{name}.hlo.txt")) as f:
+            tb = f.read()
+        assert ta == tb, f"{name} lowering is nondeterministic"
+
+
+def test_manifest_shapes_match_model():
+    from compile import model
+
+    assert aot.ARTIFACTS["conv3x3"][2] == model.SINGLE_CONV_SHAPES
+    assert aot.ARTIFACTS["minivgg"][2] == model.MINIVGG_SHAPES

@@ -1,0 +1,95 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+hypothesis sweeps shapes/strides; assert_allclose with rtol=0 — all data
+is integer-valued f32, so any discrepancy is a real kernel bug.
+"""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_os, conv_ws, conv_ref
+
+settings.register_profile("kernel", deadline=None, max_examples=25)
+settings.load_profile("kernel")
+
+
+def _rand(shape, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(-8, 8, shape).astype("float32"))
+
+
+@st.composite
+def conv_cases(draw):
+    fh = draw(st.integers(1, 3))
+    fw = draw(st.integers(1, 3))
+    stride = draw(st.integers(1, 2))
+    ih = draw(st.integers(fh + stride, 12))
+    iw = draw(st.integers(fw + stride, 12))
+    c = draw(st.sampled_from([1, 2, 4, 8]))
+    k = draw(st.sampled_from([1, 2, 3, 8]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return (c, ih, iw, k, fh, fw, stride, seed)
+
+
+@given(conv_cases())
+def test_conv_os_matches_ref(case):
+    c, ih, iw, k, fh, fw, stride, seed = case
+    x = _rand((c, ih, iw), seed)
+    w = _rand((k, c, fh, fw), seed + 1)
+    got = conv_os(x, w, stride=stride)
+    want = conv_ref(x, w, stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@given(conv_cases())
+def test_conv_ws_matches_ref(case):
+    c, ih, iw, k, fh, fw, stride, seed = case
+    x = _rand((c, ih, iw), seed)
+    w = _rand((k, c, fh, fw), seed + 1)
+    got = conv_ws(x, w, stride=stride)
+    want = conv_ref(x, w, stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("f", [1, 3, 5])
+def test_paper_filter_sizes(f, stride):
+    """The paper's filter sizes on a mid-size layer."""
+    if 14 < f + stride:
+        pytest.skip("filter larger than input")
+    x = _rand((8, 14, 14), 7)
+    w = _rand((4, 8, f, f), 8)
+    np.testing.assert_array_equal(
+        np.asarray(conv_os(x, w, stride=stride)),
+        np.asarray(conv_ref(x, w, stride=stride)),
+    )
+
+
+def test_identity_1x1():
+    x = _rand((4, 5, 5), 3)
+    w = jnp.eye(4, dtype=jnp.float32).reshape(4, 4, 1, 1)
+    got = conv_os(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+def test_float_inputs_close():
+    """Non-integer data: tolerance-based comparison still holds."""
+    rng = np.random.RandomState(11)
+    x = jnp.asarray(rng.randn(4, 10, 10).astype("float32"))
+    w = jnp.asarray(rng.randn(3, 4, 3, 3).astype("float32"))
+    np.testing.assert_allclose(
+        np.asarray(conv_os(x, w)), np.asarray(conv_ref(x, w)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_os_and_ws_agree_with_each_other():
+    x = _rand((8, 11, 11), 21)
+    w = _rand((5, 8, 3, 3), 22)
+    np.testing.assert_array_equal(np.asarray(conv_os(x, w)), np.asarray(conv_ws(x, w)))

@@ -1,0 +1,111 @@
+//! Bitserial binary convolution — surrogate for Cowan et al., CGO'20 [23]
+//! (the paper's Fig 9 comparison).
+//!
+//! Bitserial kernels compute a binary dot product from {0,1} bit planes
+//! with AND + popcount. With activations α = 2a−1 and weights β = 2b−1
+//! (a, b ∈ {0,1} bits over c channels):
+//!
+//! ```text
+//!   Σ αβ = 4·pc(a∧b) − 2·pc(a) − 2·pc(b) + c
+//! ```
+//!
+//! so each MAC costs one AND plus *three* popcount-accumulates (vs one
+//! XOR + one count-accumulate for the paper's XNOR-OS kernel), and the
+//! bitserial loop nest is weight-stationary with a scalar RMW per term —
+//! no output stationarity. That structural gap, not micro-tuning, is why
+//! the paper measures >12x (§VI-B).
+
+use crate::isa::{Buf, Mode, Program};
+use crate::layer::ConvConfig;
+use crate::machine::MachineConfig;
+
+use crate::codegen::basic::{in_off, wgt_off};
+use crate::codegen::Emitter;
+
+const VAR_IN: usize = 0;
+const VAR_WGT: usize = 1;
+const VAR_AND: usize = 2;
+
+/// Generate the bitserial (1-bit × 1-bit) convolution program.
+pub fn gen_bitserial(cfg: &ConvConfig, machine: &MachineConfig) -> Program {
+    let c_bytes = machine.c_int8();
+    let c_bits = machine.c_binary() as i32;
+    let mut e = Emitter::new(machine);
+    for ry in 0..cfg.fh {
+        for rx in 0..cfg.fw {
+            e.vload(VAR_WGT, Buf::Wgt, wgt_off(cfg, c_bytes, ry, rx));
+            for oy in 0..cfg.oh() {
+                for ox in 0..cfg.ow() {
+                    let e_off = oy * cfg.ow() + ox;
+                    e.vload(
+                        VAR_IN,
+                        Buf::In,
+                        in_off(cfg, c_bytes, oy * cfg.stride + ry, ox * cfg.stride + rx),
+                    );
+                    e.vand(VAR_AND, VAR_IN, VAR_WGT);
+                    // 4·pc(a∧b) − 2·pc(a) − 2·pc(b) + c
+                    e.popcnt_acc(VAR_AND, e_off, 4, c_bits);
+                    e.popcnt_acc(VAR_IN, e_off, -2, 0);
+                    e.popcnt_acc(VAR_WGT, e_off, -2, 0);
+                }
+            }
+        }
+    }
+    e.finish(format!("bitserial-{}", cfg.name()), Mode::Binary)
+}
+
+impl Emitter {
+    /// dst ← a & b.
+    pub fn vand(&mut self, dst: usize, a: usize, b: usize) {
+        for j in 0..self.n {
+            self.instrs.push(crate::isa::VInstr::VAnd {
+                dst: (dst * self.n + j) as u8,
+                a: (a * self.n + j) as u8,
+                b: (b * self.n + j) as u8,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::binary::{gen_binary_os_ext, run_conv_binary};
+    use crate::dataflow::{Anchor, AuxKind, DataflowSpec};
+    use crate::isa::validate;
+    use crate::layer::oracle::conv_ref_binary;
+    use crate::quant::{pack_binary_act, pack_binary_wgt};
+    use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bitserial_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 128, 2);
+        let mut rng = Rng::new(51);
+        let mut input = ActTensor::zeros(ActShape::new(128, 6, 6), ActLayout::NCHWc { c: 128 });
+        for v in input.data.iter_mut() {
+            *v = rng.sign();
+        }
+        let mut w = WeightTensor::zeros(WeightShape::new(128, 2, 3, 3), WeightLayout::CKRSc { c: 128 });
+        for v in w.data.iter_mut() {
+            *v = rng.sign();
+        }
+        let prog = gen_bitserial(&cfg, &m);
+        validate::validate(&prog, m.num_regs).unwrap();
+        let got = run_conv_binary(&prog, &cfg, &m, &pack_binary_act(&input, 128), &pack_binary_wgt(&w, 128));
+        let want = conv_ref_binary(&cfg, &input, &w);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn bitserial_does_more_work_than_xnor_os() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 128, 1);
+        let bs = gen_bitserial(&cfg, &m).stats();
+        let spec = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 9)]);
+        let xnor = gen_binary_os_ext(&cfg, &spec, &m).stats();
+        assert!(bs.scalar_rmw > 3 * xnor.scalar_rmw);
+        assert!(bs.instrs > xnor.instrs);
+    }
+}

@@ -1,0 +1,16 @@
+//! Baseline systems the paper compares against (§VI-B), rebuilt on the
+//! same abstract machine so comparisons are apples-to-apples:
+//!
+//! * [`scalar`] — im2col + scalar GEMM, no vectorization: the surrogate
+//!   for **TVM default mode without autotuning** (the paper's Fig 8
+//!   normalization baseline; compilers fail to autovectorize these loops,
+//!   §I).
+//! * [`ws_neocpu`] — vectorized NCHWc weight-stationary convolution with
+//!   operator-level register blocking but *no dataflow exploration*: the
+//!   surrogate for **NeoCPU [20] / TVM autotuned** kernels.
+//! * [`bitserial`] — AND-popcount bitserial binary convolution: the
+//!   surrogate for **Cowan et al. CGO'20 [23]** (Fig 9).
+
+pub mod scalar;
+pub mod ws_neocpu;
+pub mod bitserial;

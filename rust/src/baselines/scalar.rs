@@ -1,0 +1,109 @@
+//! Scalar im2col + GEMM convolution — the "TVM default / compiler
+//! autovectorization failed" baseline.
+//!
+//! Functional path: plain Rust loops (used to validate the cost model's
+//! operation counts). Performance path: an analytic cost model over the
+//! same operation counts, using scalar-instruction costs on the same
+//! Neoverse-N1 calibration as the SIMD kernels:
+//!
+//! * im2col materialization: one read + one write per (E × R × C) element;
+//! * GEMM inner loop: 2 loads + 1 multiply-add + loop overhead per MAC;
+//! * output: one store per element, plus the column-buffer traffic.
+
+use crate::layer::oracle::conv_ref;
+use crate::layer::ConvConfig;
+use crate::machine::PerfStats;
+use crate::tensor::{ActTensor, OutTensor, WeightTensor};
+
+/// Functional scalar conv (delegates to the oracle — identical math).
+pub fn conv_scalar(cfg: &ConvConfig, input: &ActTensor, weights: &WeightTensor) -> OutTensor {
+    conv_ref(cfg, input, weights)
+}
+
+/// Cost model parameters for the scalar baseline (cycles).
+#[derive(Clone, Copy, Debug)]
+pub struct ScalarCost {
+    /// Scalar load (L1 hit).
+    pub load: f64,
+    /// Scalar multiply-accumulate (madd).
+    pub mac: f64,
+    /// Scalar store.
+    pub store: f64,
+    /// Amortized loop bookkeeping per inner iteration.
+    pub loop_overhead: f64,
+    /// L1-miss penalty applied to the fraction of accesses missing.
+    pub l1_miss: f64,
+}
+
+impl ScalarCost {
+    pub fn neoverse_n1() -> ScalarCost {
+        ScalarCost { load: 1.0, mac: 1.0, store: 1.0, loop_overhead: 0.6, l1_miss: 8.0 }
+    }
+}
+
+/// Modeled cycles for the whole layer under scalar im2col+GEMM.
+pub fn estimate_cycles(cfg: &ConvConfig, cost: &ScalarCost) -> PerfStats {
+    let e = cfg.e_size() as f64;
+    let r = cfg.r_size() as f64;
+    let cpg = cfg.in_channels_per_group() as f64;
+    let k = cfg.out_channels as f64;
+    let macs = e * r * cpg * k;
+
+    // im2col: E*R*C elements copied (read + write), 1 B each; ~1/64 miss.
+    let im2col_elems = e * r * cpg * (cfg.groups as f64);
+    let im2col = im2col_elems * (cost.load + cost.store + cost.loop_overhead)
+        + im2col_elems / 64.0 * cost.l1_miss;
+    // GEMM: per MAC 2 loads + 1 madd + overhead. The column buffer
+    // (E×R×C bytes) far exceeds L1 for real layers: charge a miss per
+    // cache line of streamed column data per K-pass.
+    let gemm = macs * (2.0 * cost.load + cost.mac + cost.loop_overhead);
+    let col_bytes = im2col_elems;
+    let streaming_misses = (col_bytes / 64.0) * k.min(8.0); // L2-resident after ~8 passes
+    let out_stores = e * k * cost.store;
+    let cycles = im2col + gemm + streaming_misses * cost.l1_miss + out_stores;
+
+    PerfStats {
+        cycles,
+        instrs: (macs * 4.0 + im2col_elems * 2.0) as u64,
+        mem_reads: (macs * 2.0 + im2col_elems) as u64,
+        mem_writes: (im2col_elems + e * k) as u64,
+        l1_misses: streaming_misses as u64,
+        l2_misses: 0,
+        invocations: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ActLayout, ActShape, WeightLayout, WeightShape};
+
+    #[test]
+    fn functional_matches_oracle_trivially() {
+        let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 16, 2);
+        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 1);
+        let w = WeightTensor::random(WeightShape::new(16, 2, 3, 3), WeightLayout::CKRSc { c: 16 }, 2);
+        let a = conv_scalar(&cfg, &input, &w);
+        let b = conv_ref(&cfg, &input, &w);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn cycles_scale_with_macs() {
+        let cost = ScalarCost::neoverse_n1();
+        let small = estimate_cycles(&ConvConfig::simple(28, 28, 3, 3, 1, 64, 64), &cost);
+        let big = estimate_cycles(&ConvConfig::simple(56, 56, 3, 3, 1, 64, 64), &cost);
+        assert!(big.cycles > 3.0 * small.cycles);
+    }
+
+    #[test]
+    fn scalar_is_much_slower_than_simd_per_mac() {
+        // Sanity: per-MAC scalar cost should exceed 3 cycles (16 lanes in
+        // one SIMD op vs 1 per scalar op is what Fig 8's ~14x rests on).
+        let cost = ScalarCost::neoverse_n1();
+        let cfg = ConvConfig::simple(56, 56, 3, 3, 1, 64, 64);
+        let s = estimate_cycles(&cfg, &cost);
+        let per_mac = s.cycles / cfg.macs() as f64;
+        assert!(per_mac > 3.0, "per-mac {per_mac}");
+    }
+}

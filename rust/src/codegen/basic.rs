@@ -1,0 +1,205 @@
+//! Basic dataflows — paper Algorithms 1 (IS), 2 (WS), 3 (OS).
+//!
+//! Exactly three vector variables are live (paper §II-E): variable 0 holds
+//! the active input, 1 the active weight, 2 the active output / product
+//! scratch. All other registers stay idle — that is the limitation the
+//! extended dataflows remove.
+//!
+//! All final output writes accumulate (`RedSumAcc`) rather than store, so
+//! the same program works for every input-channel block of a layer (the
+//! coordinator zero-initializes the output tensor once).
+
+use crate::isa::{Buf, Mode, Program};
+use crate::layer::ConvConfig;
+use crate::machine::MachineConfig;
+
+use super::{taps_for_input, Emitter};
+
+const VAR_IN: usize = 0;
+const VAR_WGT: usize = 1;
+const VAR_OUT: usize = 2;
+
+/// Byte offset of input position (y, x) within a channel block.
+#[inline]
+pub(crate) fn in_off(cfg: &ConvConfig, c: usize, y: usize, x: usize) -> usize {
+    (y * cfg.iw + x) * c
+}
+
+/// Byte offset of weight tap (ry, rx) within a weight block.
+#[inline]
+pub(crate) fn wgt_off(cfg: &ConvConfig, c: usize, ry: usize, rx: usize) -> usize {
+    (ry * cfg.fw + rx) * c
+}
+
+/// Algorithm 3 — basic Output Stationary.
+///
+/// For each output element: zero the output variable, accumulate all R
+/// products in-register (`vmla`), reduce once. One reduction per output —
+/// the structural reason OS wins (Fig 2 discussion).
+pub fn gen_os(cfg: &ConvConfig, machine: &MachineConfig) -> Program {
+    let c = machine.c_int8();
+    let mut e = Emitter::new(machine);
+    for oy in 0..cfg.oh() {
+        for ox in 0..cfg.ow() {
+            e.vdup0(VAR_OUT);
+            for ry in 0..cfg.fh {
+                for rx in 0..cfg.fw {
+                    e.vload(VAR_IN, Buf::In, in_off(cfg, c, oy * cfg.stride + ry, ox * cfg.stride + rx));
+                    e.vload(VAR_WGT, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+                    e.vmla(VAR_OUT, VAR_IN, VAR_WGT);
+                }
+            }
+            e.redsum_acc(VAR_OUT, oy * cfg.ow() + ox);
+        }
+    }
+    e.finish(format!("os-basic-{}", cfg.name()), Mode::Int8)
+}
+
+/// Algorithm 1 — basic Input Stationary.
+///
+/// For each input element (loaded once): apply every relevant weight,
+/// reducing and accumulating to the output *per MAC* (`RedSumAcc`).
+/// Weights unroll in reverse (Fig 4d). For stride > 1 the relevant-weight
+/// set is irregular (Fig 5); the program records the number of
+/// code-shape transitions for the perf model.
+pub fn gen_is(cfg: &ConvConfig, machine: &MachineConfig) -> Program {
+    let c = machine.c_int8();
+    let mut e = Emitter::new(machine);
+    let mut transitions = 0usize;
+    let mut prev_shape: Option<Vec<(usize, usize)>> = None;
+    for y in 0..cfg.ih {
+        for x in 0..cfg.iw {
+            let taps = taps_for_input(cfg, y, x);
+            if taps.is_empty() {
+                continue;
+            }
+            let shape: Vec<(usize, usize)> = taps.iter().map(|&(ry, rx, _, _)| (ry, rx)).collect();
+            if cfg.stride > 1 {
+                if let Some(prev) = &prev_shape {
+                    if *prev != shape {
+                        transitions += 1;
+                    }
+                }
+                prev_shape = Some(shape);
+            }
+            e.vload(VAR_IN, Buf::In, in_off(cfg, c, y, x));
+            for (ry, rx, oy, ox) in taps {
+                e.vload(VAR_WGT, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+                e.vmul(VAR_OUT, VAR_IN, VAR_WGT);
+                e.redsum_acc(VAR_OUT, oy * cfg.ow() + ox);
+            }
+        }
+    }
+    e.finish(format!("is-basic-{}", cfg.name()), Mode::Int8)
+        .with_irregularity(transitions)
+}
+
+/// Algorithm 2 — basic Weight Stationary.
+///
+/// For each weight tap (loaded once): walk the entire output tensor,
+/// loading the matching input and reducing into the output per MAC.
+/// The whole input and output tensors are re-streamed R times — the
+/// locality cost that makes WS the slowest anchor (Finding 1).
+pub fn gen_ws(cfg: &ConvConfig, machine: &MachineConfig) -> Program {
+    let c = machine.c_int8();
+    let mut e = Emitter::new(machine);
+    for ry in 0..cfg.fh {
+        for rx in 0..cfg.fw {
+            e.vload(VAR_WGT, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+            for oy in 0..cfg.oh() {
+                for ox in 0..cfg.ow() {
+                    e.vload(VAR_IN, Buf::In, in_off(cfg, c, oy * cfg.stride + ry, ox * cfg.stride + rx));
+                    e.vmul(VAR_OUT, VAR_IN, VAR_WGT);
+                    e.redsum_acc(VAR_OUT, oy * cfg.ow() + ox);
+                }
+            }
+        }
+    }
+    e.finish(format!("ws-basic-{}", cfg.name()), Mode::Int8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::run_conv;
+    use crate::isa::validate;
+    use crate::layer::oracle::conv_ref;
+    use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+
+    fn check_against_oracle(cfg: &ConvConfig, machine: &MachineConfig, gen: fn(&ConvConfig, &MachineConfig) -> Program) {
+        let c = machine.c_int8();
+        let input = ActTensor::random(
+            ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+            ActLayout::NCHWc { c },
+            42,
+        );
+        let weights = WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            43,
+        );
+        let prog = gen(cfg, machine);
+        validate::validate(&prog, machine.num_regs).unwrap();
+        validate::validate_readonly_operands(&prog).unwrap();
+        let got = run_conv(&prog, cfg, machine, &input, &weights);
+        let want = conv_ref(cfg, &input, &weights);
+        assert_eq!(got.data, want.data, "program {} diverges from oracle", prog.name);
+    }
+
+    #[test]
+    fn os_matches_oracle_s1() {
+        let m = MachineConfig::neon(128);
+        check_against_oracle(&ConvConfig::simple(8, 8, 3, 3, 1, 16, 4), &m, gen_os);
+    }
+
+    #[test]
+    fn os_matches_oracle_s2_multiblock() {
+        let m = MachineConfig::neon(128);
+        check_against_oracle(&ConvConfig::simple(9, 9, 3, 3, 2, 32, 3), &m, gen_os);
+    }
+
+    #[test]
+    fn is_matches_oracle_s1() {
+        let m = MachineConfig::neon(128);
+        check_against_oracle(&ConvConfig::simple(8, 8, 3, 3, 1, 16, 4), &m, gen_is);
+    }
+
+    #[test]
+    fn is_matches_oracle_s2() {
+        let m = MachineConfig::neon(128);
+        check_against_oracle(&ConvConfig::simple(9, 9, 3, 3, 2, 16, 2), &m, gen_is);
+    }
+
+    #[test]
+    fn ws_matches_oracle_s1() {
+        let m = MachineConfig::neon(128);
+        check_against_oracle(&ConvConfig::simple(8, 8, 2, 2, 1, 16, 4), &m, gen_ws);
+    }
+
+    #[test]
+    fn wide_vector_variables_work() {
+        let m = MachineConfig::neon(512); // n = 4, c = 64
+        check_against_oracle(&ConvConfig::simple(6, 6, 3, 3, 1, 64, 2), &m, gen_os);
+        check_against_oracle(&ConvConfig::simple(6, 6, 3, 3, 1, 64, 2), &m, gen_is);
+        check_against_oracle(&ConvConfig::simple(6, 6, 3, 3, 1, 64, 2), &m, gen_ws);
+    }
+
+    #[test]
+    fn is_records_irregularity_for_stride2() {
+        let m = MachineConfig::neon(128);
+        let p1 = gen_is(&ConvConfig::simple(8, 8, 3, 3, 1, 16, 1), &m);
+        let p2 = gen_is(&ConvConfig::simple(8, 8, 3, 3, 2, 16, 1), &m);
+        assert_eq!(p1.irregular_transitions, 0);
+        assert!(p2.irregular_transitions > 0);
+    }
+
+    #[test]
+    fn os_has_one_reduction_per_output() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 1);
+        let os = gen_os(&cfg, &m).stats();
+        let ws = gen_ws(&cfg, &m).stats();
+        assert_eq!(os.scalar_rmw, cfg.e_size());
+        assert_eq!(ws.scalar_rmw, cfg.e_size() * cfg.r_size());
+    }
+}

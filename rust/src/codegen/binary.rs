@@ -1,0 +1,419 @@
+//! Binary (±1) network kernels: XNOR-style convolution via xor + popcount
+//! (paper §VI-B, Fig 9).
+//!
+//! Encoding: bit 1 ↔ +1, bit 0 ↔ -1. A dot product over `c` bits is
+//! `c - 2·popcount(a ⊕ b)`. The extended OS kernel keeps the running
+//! mismatch count *in a register* (`VCntAcc`, NEON vcnt+vadd.u8) and
+//! performs a single scaled reduction per output — the binary analogue of
+//! keeping outputs stationary. Per-byte count lanes hold ≤ 255, so the
+//! accumulator is flushed every [`FLUSH_TAPS`] taps (8 bits per byte per
+//! op ⇒ 31 ops max; we flush at 24 for margin).
+//!
+//! Byte offsets: a spatial position packs `c` bits = `c/8` bytes, which
+//! equals the INT8 block size `c_int8`, so the same offset arithmetic as
+//! the INT8 kernels applies.
+
+use crate::dataflow::{AuxKind, DataflowSpec};
+use crate::isa::{Buf, Mode, Program};
+use crate::layer::ConvConfig;
+use crate::machine::{Bases, Buffers, Interp, MachineConfig};
+use crate::tensor::OutTensor;
+
+use super::basic::{in_off, wgt_off};
+use super::os::InputStash;
+use super::Emitter;
+
+const VAR_IN: usize = 0;
+const VAR_WGT: usize = 1;
+const VAR_XOR: usize = 2;
+const VAR_CNT: usize = 3;
+const VAR_STASH0: usize = 4;
+
+/// Max taps accumulated into the byte-count register before a flush.
+pub const FLUSH_TAPS: usize = 24;
+
+/// Basic binary OS (Algorithm 3, XNOR form).
+pub fn gen_binary_os(cfg: &ConvConfig, machine: &MachineConfig) -> Program {
+    gen_binary_os_ext(cfg, &DataflowSpec::basic(crate::dataflow::Anchor::Output), machine)
+}
+
+/// Extended binary OS (Algorithm 5, XNOR form): optional weight/input
+/// auxiliary stationarity, same stash policies as the INT8 generator.
+pub fn gen_binary_os_ext(
+    cfg: &ConvConfig,
+    spec: &DataflowSpec,
+    machine: &MachineConfig,
+) -> Program {
+    let c_bytes = machine.c_int8(); // bytes per position (= bits/8)
+    let c_bits = machine.c_binary() as i32;
+    let r = cfg.r_size();
+    let mut e = Emitter::new(machine);
+
+    let mut next_var = VAR_STASH0;
+    let mut wgt_vars: Vec<usize> = Vec::new();
+    let mut in_vars: Vec<usize> = Vec::new();
+    for (kind, count) in &spec.aux {
+        match kind {
+            AuxKind::Weight => {
+                for _ in 0..(*count).min(r - wgt_vars.len().min(r)) {
+                    wgt_vars.push(next_var);
+                    next_var += 1;
+                }
+            }
+            AuxKind::Input => {
+                for _ in 0..*count {
+                    in_vars.push(next_var);
+                    next_var += 1;
+                }
+            }
+            AuxKind::Output => {}
+        }
+    }
+
+    for (t, &var) in wgt_vars.iter().enumerate() {
+        let (ry, rx) = (t / cfg.fw, t % cfg.fw);
+        e.vload(var, Buf::Wgt, wgt_off(cfg, c_bytes, ry, rx));
+    }
+
+    let mut stash = InputStash::new(in_vars);
+    for oy in 0..cfg.oh() {
+        for ox in 0..cfg.ow() {
+            let (wy0, wx0) = (oy * cfg.stride, ox * cfg.stride);
+            e.vdup0(VAR_CNT);
+            let mut taps_since_flush = 0usize;
+            let mut flushed_bias = false;
+            for ry in 0..cfg.fh {
+                for rx in 0..cfg.fw {
+                    let tap = ry * cfg.fw + rx;
+                    let pos = (wy0 + ry, wx0 + rx);
+                    let in_var = if let Some(v) = stash.lookup(pos) {
+                        v
+                    } else {
+                        let reusable = pos.1 >= wx0 + cfg.stride && ox + 1 < cfg.ow();
+                        let claimed = if reusable {
+                            stash.claim_dead(pos, wy0, wx0, cfg.fh, cfg.fw)
+                        } else {
+                            None
+                        };
+                        match claimed {
+                            Some(v) => {
+                                e.vload(v, Buf::In, in_off(cfg, c_bytes, pos.0, pos.1));
+                                v
+                            }
+                            None => {
+                                e.vload(VAR_IN, Buf::In, in_off(cfg, c_bytes, pos.0, pos.1));
+                                VAR_IN
+                            }
+                        }
+                    };
+                    let wgt_var = if tap < wgt_vars.len() {
+                        wgt_vars[tap]
+                    } else {
+                        e.vload(VAR_WGT, Buf::Wgt, wgt_off(cfg, c_bytes, ry, rx));
+                        VAR_WGT
+                    };
+                    e.vxor(VAR_XOR, in_var, wgt_var);
+                    e.vcnt_acc(VAR_CNT, VAR_XOR);
+                    taps_since_flush += 1;
+                    if taps_since_flush >= FLUSH_TAPS {
+                        // Mid-kernel flush to keep byte lanes < 256.
+                        let bias = if flushed_bias { 0 } else { r as i32 * c_bits };
+                        e.redsum_scale_acc(VAR_CNT, oy * cfg.ow() + ox, -2, bias);
+                        e.vdup0(VAR_CNT);
+                        flushed_bias = true;
+                        taps_since_flush = 0;
+                    }
+                }
+            }
+            let bias = if flushed_bias { 0 } else { r as i32 * c_bits };
+            e.redsum_scale_acc(VAR_CNT, oy * cfg.ow() + ox, -2, bias);
+        }
+    }
+    e.finish(format!("bin-{}-{}", spec.name(), cfg.name()), Mode::Binary)
+}
+
+/// Jammed binary OS (§VII-a on the XNOR kernel): `jam` adjacent outputs
+/// processed concurrently with batched loads/xors/count-accumulates, so
+/// no operation reads a register written by its immediate predecessor
+/// (breaks the xor→cnt and cnt→cnt RAW chains the perf model charges).
+/// Register budget: 1 active weight + 3·jam staging/accumulator vars +
+/// `num_wgt_stash` weights.
+pub fn gen_binary_os_jam(
+    cfg: &ConvConfig,
+    num_wgt_stash: usize,
+    jam: usize,
+    machine: &MachineConfig,
+) -> Program {
+    assert!(jam >= 1);
+    let c_bytes = machine.c_int8();
+    let c_bits = machine.c_binary() as i32;
+    let r = cfg.r_size();
+    let nw = num_wgt_stash.min(r);
+    // Variable map: [0] active weight; then jam input, jam xor, jam cnt;
+    // then the weight stash.
+    let in0 = 1;
+    let xor0 = in0 + jam;
+    let cnt0 = xor0 + jam;
+    let wgt0 = cnt0 + jam;
+    assert!(
+        1 + 3 * jam + nw <= machine.vars_available(),
+        "binary jam={jam} + wgt stash={nw} exceeds the register file"
+    );
+    let mut e = Emitter::new(machine);
+    for (t, var) in (wgt0..wgt0 + nw).enumerate() {
+        let (ry, rx) = (t / cfg.fw, t % cfg.fw);
+        e.vload(var, Buf::Wgt, wgt_off(cfg, c_bytes, ry, rx));
+    }
+    let ow = cfg.ow();
+    for oy in 0..cfg.oh() {
+        let mut ox = 0;
+        while ox < ow {
+            let width = jam.min(ow - ox);
+            for j in 0..width {
+                e.vdup0(cnt0 + j);
+            }
+            let mut taps_since_flush = 0usize;
+            let mut flushed_bias = false;
+            for ry in 0..cfg.fh {
+                for rx in 0..cfg.fw {
+                    let t = ry * cfg.fw + rx;
+                    let wgt_var = if t < nw {
+                        wgt0 + t
+                    } else {
+                        e.vload(0, Buf::Wgt, wgt_off(cfg, c_bytes, ry, rx));
+                        0
+                    };
+                    for j in 0..width {
+                        e.vload(
+                            in0 + j,
+                            Buf::In,
+                            in_off(cfg, c_bytes, oy * cfg.stride + ry, (ox + j) * cfg.stride + rx),
+                        );
+                    }
+                    for j in 0..width {
+                        e.vxor(xor0 + j, in0 + j, wgt_var);
+                    }
+                    for j in 0..width {
+                        e.vcnt_acc(cnt0 + j, xor0 + j);
+                    }
+                    taps_since_flush += 1;
+                    if taps_since_flush >= FLUSH_TAPS {
+                        let bias = if flushed_bias { 0 } else { r as i32 * c_bits };
+                        for j in 0..width {
+                            e.redsum_scale_acc(cnt0 + j, oy * ow + ox + j, -2, bias);
+                            e.vdup0(cnt0 + j);
+                        }
+                        flushed_bias = true;
+                        taps_since_flush = 0;
+                    }
+                }
+            }
+            let bias = if flushed_bias { 0 } else { r as i32 * c_bits };
+            for j in 0..width {
+                e.redsum_scale_acc(cnt0 + j, oy * ow + ox + j, -2, bias);
+            }
+            ox += width;
+        }
+    }
+    e.finish(format!("bin-OS+wgt{nw}+jam{jam}-{}", cfg.name()), Mode::Binary)
+}
+
+/// Basic binary WS (the per-MAC PopcntAcc path) — the weight-stationary
+/// shape prior binary frameworks use (paper §VII-e: daBNN et al. do not
+/// exploit output stationarity).
+pub fn gen_binary_ws(cfg: &ConvConfig, machine: &MachineConfig) -> Program {
+    let c_bytes = machine.c_int8();
+    let c_bits = machine.c_binary() as i32;
+    let mut e = Emitter::new(machine);
+    for ry in 0..cfg.fh {
+        for rx in 0..cfg.fw {
+            e.vload(VAR_WGT, Buf::Wgt, wgt_off(cfg, c_bytes, ry, rx));
+            for oy in 0..cfg.oh() {
+                for ox in 0..cfg.ow() {
+                    e.vload(
+                        VAR_IN,
+                        Buf::In,
+                        in_off(cfg, c_bytes, oy * cfg.stride + ry, ox * cfg.stride + rx),
+                    );
+                    e.vxor(VAR_XOR, VAR_IN, VAR_WGT);
+                    e.popcnt_acc(VAR_XOR, oy * cfg.ow() + ox, -2, c_bits);
+                }
+            }
+        }
+    }
+    e.finish(format!("bin-WS-{}", cfg.name()), Mode::Binary)
+}
+
+/// Invocation schedule for a binary layer: channel blocks of `c_binary`
+/// bits each.
+pub fn schedule_binary(cfg: &ConvConfig, machine: &MachineConfig) -> Vec<Bases> {
+    let c_bits = machine.c_binary();
+    let c_bytes = machine.c_int8();
+    assert!(
+        cfg.in_channels % c_bits == 0,
+        "C={} not a multiple of c={c_bits}",
+        cfg.in_channels
+    );
+    let num_blocks = cfg.in_channels / c_bits;
+    let h_bytes = cfg.h_size() * c_bytes;
+    let r_bytes = cfg.r_size() * c_bytes;
+    let e = cfg.e_size();
+    let mut out = Vec::with_capacity(num_blocks * cfg.out_channels);
+    for cb in 0..num_blocks {
+        for k in 0..cfg.out_channels {
+            out.push(Bases {
+                input: (cb * h_bytes) as u32,
+                weight: ((cb * cfg.out_channels + k) * r_bytes) as u32,
+                output: (k * e) as u32,
+            });
+        }
+    }
+    out
+}
+
+/// Execute a binary program over a layer given *packed* input/weight bit
+/// buffers (see `quant::pack_binary_act` / `pack_binary_wgt`).
+pub fn run_conv_binary(
+    prog: &Program,
+    cfg: &ConvConfig,
+    machine: &MachineConfig,
+    packed_input: &[i8],
+    packed_weights: &[i8],
+) -> OutTensor {
+    let mut out = OutTensor::zeros(cfg.out_channels, cfg.oh(), cfg.ow());
+    let mut interp = Interp::new(machine.num_regs);
+    for bases in schedule_binary(cfg, machine) {
+        interp.run(
+            prog,
+            &mut Buffers { input: packed_input, weight: packed_weights, output: &mut out.data },
+            bases,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Anchor;
+    use crate::isa::validate;
+    use crate::layer::oracle::conv_ref_binary;
+    use crate::quant::{pack_binary_act, pack_binary_wgt};
+    use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+    use crate::util::rng::Rng;
+
+    fn random_sign_tensors(cfg: &ConvConfig, c_bits: usize) -> (ActTensor, WeightTensor) {
+        let mut rng = Rng::new(99);
+        let mut input = ActTensor::zeros(
+            ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+            ActLayout::NCHWc { c: c_bits },
+        );
+        for v in input.data.iter_mut() {
+            *v = rng.sign();
+        }
+        let mut weights = WeightTensor::zeros(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c: c_bits },
+        );
+        for v in weights.data.iter_mut() {
+            *v = rng.sign();
+        }
+        (input, weights)
+    }
+
+    fn oracle_check_binary(cfg: &ConvConfig, m: &MachineConfig, prog: &Program) {
+        let c_bits = m.c_binary();
+        let (input, weights) = random_sign_tensors(cfg, c_bits);
+        validate::validate(prog, m.num_regs).unwrap();
+        let pin = pack_binary_act(&input, c_bits);
+        let pw = pack_binary_wgt(&weights, c_bits);
+        let got = run_conv_binary(prog, cfg, m, &pin, &pw);
+        let want = conv_ref_binary(cfg, &input, &weights);
+        assert_eq!(got.data, want.data, "{} diverges", prog.name);
+    }
+
+    #[test]
+    fn binary_os_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(7, 7, 3, 3, 1, 128, 3);
+        oracle_check_binary(&cfg, &m, &gen_binary_os(&cfg, &m));
+    }
+
+    #[test]
+    fn binary_os_extended_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(7, 7, 3, 3, 1, 128, 3);
+        let spec =
+            DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 9), (AuxKind::Input, 6)]);
+        oracle_check_binary(&cfg, &m, &gen_binary_os_ext(&cfg, &spec, &m));
+    }
+
+    #[test]
+    fn binary_ws_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 128, 2);
+        oracle_check_binary(&cfg, &m, &gen_binary_ws(&cfg, &m));
+    }
+
+    #[test]
+    fn binary_jam_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 128, 3);
+        for jam in [1, 2, 4] {
+            oracle_check_binary(&cfg, &m, &gen_binary_os_jam(&cfg, 9, jam, &m));
+        }
+        // Flush path with jam.
+        let cfg5 = ConvConfig::simple(9, 9, 5, 5, 1, 128, 2);
+        oracle_check_binary(&cfg5, &m, &gen_binary_os_jam(&cfg5, 7, 2, &m));
+    }
+
+    #[test]
+    fn binary_jam_models_faster_than_plain() {
+        use crate::machine::PerfModel;
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 128, 2);
+        let plain = gen_binary_os_ext(
+            &cfg,
+            &DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 9)]),
+            &m,
+        );
+        let jam = gen_binary_os_jam(&cfg, 9, 2, &m);
+        let sched = schedule_binary(&cfg, &m);
+        let mut pm = PerfModel::neoverse_n1();
+        let a = pm.estimate_layer(&plain, &sched, 2);
+        let mut pm2 = PerfModel::neoverse_n1();
+        let b = pm2.estimate_layer(&jam, &sched, 2);
+        assert!(b.cycles < a.cycles, "jam {} !< plain {}", b.cycles, a.cycles);
+    }
+
+    #[test]
+    fn binary_5x5_triggers_flush_and_matches() {
+        // R = 25 > FLUSH_TAPS: exercises the mid-kernel count flush.
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(9, 9, 5, 5, 1, 128, 2);
+        oracle_check_binary(&cfg, &m, &gen_binary_os(&cfg, &m));
+    }
+
+    #[test]
+    fn binary_stride2_multiblock_matches() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(9, 9, 3, 3, 2, 256, 2);
+        oracle_check_binary(&cfg, &m, &gen_binary_os(&cfg, &m));
+    }
+
+    #[test]
+    fn binary_wide_vector_matches() {
+        let m = MachineConfig::neon(256);
+        let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 256, 2);
+        oracle_check_binary(&cfg, &m, &gen_binary_os(&cfg, &m));
+    }
+
+    #[test]
+    fn os_has_fewer_rmws_than_ws() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 128, 1);
+        let os = gen_binary_os(&cfg, &m).stats();
+        let ws = gen_binary_ws(&cfg, &m).stats();
+        assert!(os.scalar_rmw < ws.scalar_rmw);
+    }
+}

@@ -1,0 +1,226 @@
+//! Depthwise convolution kernels (paper §IV lists depthwise convolutions
+//! among the covered layer types).
+//!
+//! Depthwise has no cross-channel reduction: each of the `c` sub-channels
+//! in a block accumulates independently, so the kernel is *lane-parallel*
+//! — `vmla` per tap, then a **vector** write-back (`VAccOut`) of the `c`
+//! INT32 lanes. Output stationarity is inherent (the accumulator lives in
+//! the output variable); the only useful auxiliary stationarity is
+//! weights (R taps × 1 variable each), which we always apply when they
+//! fit — mirroring Algorithm 8's weight-first allocation.
+//!
+//! Output layout for depthwise layers is position-major within a channel
+//! block: `out[(cb·oh·ow + oy·ow + ox)·c + ci]` (a vector store hits `c`
+//! consecutive elements).
+
+use crate::isa::{Buf, Mode, Program, VInstr};
+use crate::layer::ConvConfig;
+use crate::machine::{Bases, Buffers, Interp, MachineConfig};
+use crate::tensor::{ActLayout, ActTensor, WeightTensor};
+
+use super::basic::in_off;
+use super::Emitter;
+
+const VAR_IN: usize = 0;
+const VAR_WGT: usize = 1;
+const VAR_OUT: usize = 2;
+const VAR_STASH0: usize = 3;
+
+impl Emitter {
+    /// Out[off .. off+c] += the INT32 lanes of `var` (depthwise
+    /// write-back), one `VAccOut` per physical register.
+    pub fn vacc_out(&mut self, var: usize, out_elem_off: usize) {
+        for j in 0..self.n {
+            self.instrs.push(VInstr::VAccOut {
+                src: (var * self.n + j) as u8,
+                off: (out_elem_off + j * crate::isa::I8_LANES) as u32,
+            });
+        }
+    }
+}
+
+/// Depthwise weight-block byte offset for tap index `t`.
+#[inline]
+fn dw_wgt_off(c: usize, t: usize) -> usize {
+    t * c
+}
+
+/// Generate the depthwise kernel for one channel block, with weight
+/// stashing when the register file allows (`stash_weights`).
+pub fn gen_depthwise(cfg: &ConvConfig, machine: &MachineConfig, stash_weights: bool) -> Program {
+    assert_eq!(cfg.groups, cfg.in_channels, "not a depthwise config");
+    let c = machine.c_int8();
+    let r = cfg.r_size();
+    let mut e = Emitter::new(machine);
+    let avail = machine.vars_available().saturating_sub(3);
+    let nw = if stash_weights { r.min(avail) } else { 0 };
+    // Prologue: stash weight taps.
+    for t in 0..nw {
+        e.vload(VAR_STASH0 + t, Buf::Wgt, dw_wgt_off(c, t));
+    }
+    for oy in 0..cfg.oh() {
+        for ox in 0..cfg.ow() {
+            e.vdup0(VAR_OUT);
+            for ry in 0..cfg.fh {
+                for rx in 0..cfg.fw {
+                    let t = ry * cfg.fw + rx;
+                    e.vload(
+                        VAR_IN,
+                        Buf::In,
+                        in_off(cfg, c, oy * cfg.stride + ry, ox * cfg.stride + rx),
+                    );
+                    let wvar = if t < nw {
+                        VAR_STASH0 + t
+                    } else {
+                        e.vload(VAR_WGT, Buf::Wgt, dw_wgt_off(c, t));
+                        VAR_WGT
+                    };
+                    e.vmla(VAR_OUT, VAR_IN, wvar);
+                }
+            }
+            e.vacc_out(VAR_OUT, (oy * cfg.ow() + ox) * c);
+        }
+    }
+    e.finish(format!("dw-OS-{}", cfg.name()), Mode::Int8)
+}
+
+/// Pack depthwise weights: `data[(cb·R + tap)·c + ci]` = weight of channel
+/// `cb·c + ci` at tap. Accepts the oracle's depthwise weight shape
+/// (in_channels = 1, out_channels = C).
+pub fn pack_depthwise_weights(w: &WeightTensor, c: usize) -> Vec<i8> {
+    assert_eq!(w.shape.in_channels, 1, "depthwise oracle weights have cpg=1");
+    let channels = w.shape.out_channels;
+    assert!(channels % c == 0);
+    let r = w.shape.fh * w.shape.fw;
+    let mut out = vec![0i8; channels * r];
+    for cb in 0..channels / c {
+        for ry in 0..w.shape.fh {
+            for rx in 0..w.shape.fw {
+                let t = ry * w.shape.fw + rx;
+                for ci in 0..c {
+                    out[(cb * r + t) * c + ci] = w.get(0, cb * c + ci, ry, rx);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-block invocation schedule for a depthwise layer.
+pub fn schedule_depthwise(cfg: &ConvConfig, machine: &MachineConfig) -> Vec<Bases> {
+    let c = machine.c_int8();
+    assert!(cfg.in_channels % c == 0);
+    let blocks = cfg.in_channels / c;
+    let h_bytes = cfg.h_size() * c;
+    let r_bytes = cfg.r_size() * c;
+    let e_elems = cfg.e_size() * c;
+    (0..blocks)
+        .map(|cb| Bases {
+            input: (cb * h_bytes) as u32,
+            weight: (cb * r_bytes) as u32,
+            output: (cb * e_elems) as u32,
+        })
+        .collect()
+}
+
+/// Execute a depthwise layer; returns the raw position-major output
+/// buffer (`len = C·oh·ow`), with accessor [`dw_out_get`].
+pub fn run_depthwise(
+    prog: &Program,
+    cfg: &ConvConfig,
+    machine: &MachineConfig,
+    input: &ActTensor,
+    packed_weights: &[i8],
+) -> Vec<i32> {
+    let c = machine.c_int8();
+    assert_eq!(input.layout, ActLayout::NCHWc { c });
+    let mut out = vec![0i32; cfg.in_channels * cfg.e_size()];
+    let mut interp = Interp::new(machine.num_regs);
+    for bases in schedule_depthwise(cfg, machine) {
+        interp.run(
+            prog,
+            &mut Buffers { input: &input.data, weight: packed_weights, output: &mut out },
+            bases,
+        );
+    }
+    out
+}
+
+/// Read element (channel, oy, ox) of a depthwise output buffer.
+pub fn dw_out_get(out: &[i32], cfg: &ConvConfig, c: usize, ch: usize, oy: usize, ox: usize) -> i32 {
+    let (cb, ci) = (ch / c, ch % c);
+    out[(cb * cfg.e_size() + oy * cfg.ow() + ox) * c + ci]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::validate;
+    use crate::layer::oracle::conv_ref;
+    use crate::tensor::{ActShape, WeightLayout, WeightShape};
+
+    fn check(cfg: &ConvConfig, m: &MachineConfig, stash: bool) {
+        let c = m.c_int8();
+        let input = ActTensor::random(
+            ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+            ActLayout::NCHWc { c },
+            31,
+        );
+        let w = WeightTensor::random(
+            WeightShape::new(1, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRS,
+            32,
+        );
+        let prog = gen_depthwise(cfg, m, stash);
+        validate::validate(&prog, m.num_regs).unwrap();
+        let packed = pack_depthwise_weights(&w, c);
+        let got = run_depthwise(&prog, cfg, m, &input, &packed);
+        let want = conv_ref(cfg, &input, &w);
+        for ch in 0..cfg.out_channels {
+            for oy in 0..cfg.oh() {
+                for ox in 0..cfg.ow() {
+                    assert_eq!(
+                        dw_out_get(&got, cfg, c, ch, oy, ox),
+                        want.get(ch, oy, ox),
+                        "mismatch at ({ch},{oy},{ox})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        check(&ConvConfig::depthwise(8, 8, 3, 3, 1, 32), &m, true);
+    }
+
+    #[test]
+    fn depthwise_no_stash_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        check(&ConvConfig::depthwise(8, 8, 3, 3, 1, 16), &m, false);
+    }
+
+    #[test]
+    fn depthwise_stride2_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        check(&ConvConfig::depthwise(9, 9, 3, 3, 2, 32), &m, true);
+    }
+
+    #[test]
+    fn depthwise_wide_vars_match_oracle() {
+        let m = MachineConfig::neon(256);
+        check(&ConvConfig::depthwise(7, 7, 3, 3, 1, 64), &m, true);
+    }
+
+    #[test]
+    fn weight_stash_removes_loads() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::depthwise(8, 8, 3, 3, 1, 16);
+        let with = gen_depthwise(&cfg, &m, true);
+        let without = gen_depthwise(&cfg, &m, false);
+        assert!(with.mem_reads() < without.mem_reads());
+        // Exactly one input load per MAC remains + R prologue loads.
+        assert_eq!(with.mem_reads(), cfg.e_size() * cfg.r_size() + cfg.r_size());
+    }
+}

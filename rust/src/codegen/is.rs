@@ -1,0 +1,238 @@
+//! Extended input-anchored dataflows — paper Algorithm 6.
+//!
+//! The anchor input variable is loaded once per input position. Auxiliary
+//! variables stash:
+//!
+//! * **weights** — static, but in *reversed* tap order (Fig 4d): the
+//!   reversed sequence makes the per-input weight usage order identical
+//!   across successive inputs, so no rotation is needed;
+//! * **outputs** — partial sums kept in registers for the touches an
+//!   output receives within the current *input row* (`fw/s` touches);
+//!   written back (`RedSumAcc`, accumulating onto contributions from
+//!   other rows already in memory) "when the output is in the first
+//!   column of the current window" (§IV-B2), i.e. at its last touch of
+//!   the row — then the variable is recycled (the secondary-unrolled
+//!   allocation sequence of Alg. 4, realized by full unrolling).
+
+use crate::dataflow::{AuxKind, DataflowSpec};
+use crate::isa::{Buf, Mode, Program};
+use crate::layer::ConvConfig;
+use crate::machine::MachineConfig;
+
+use super::basic::{in_off, wgt_off};
+use super::{taps_for_input, Emitter};
+
+const VAR_IN: usize = 0;
+const VAR_WGT: usize = 1;
+const VAR_SCRATCH: usize = 2;
+const VAR_STASH0: usize = 3;
+
+/// Algorithm 6.
+pub fn gen_extended_is(cfg: &ConvConfig, spec: &DataflowSpec, machine: &MachineConfig) -> Program {
+    let c = machine.c_int8();
+    let r = cfg.r_size();
+    let mut e = Emitter::new(machine);
+
+    // Assign aux variables in priority order.
+    let mut next_var = VAR_STASH0;
+    let mut wgt_vars: Vec<usize> = Vec::new();
+    let mut out_vars: Vec<usize> = Vec::new();
+    for (kind, count) in &spec.aux {
+        match kind {
+            AuxKind::Weight => {
+                for _ in 0..(*count).min(r - wgt_vars.len().min(r)) {
+                    wgt_vars.push(next_var);
+                    next_var += 1;
+                }
+            }
+            AuxKind::Output => {
+                for _ in 0..*count {
+                    out_vars.push(next_var);
+                    next_var += 1;
+                }
+            }
+            AuxKind::Input => {}
+        }
+    }
+
+    // Prologue: stash weights in reversed tap order (their usage order
+    // under input anchoring).
+    for (i, &var) in wgt_vars.iter().enumerate() {
+        let rev = r - 1 - i; // reversed row-major tap index
+        let (ry, rx) = (rev / cfg.fw, rev % cfg.fw);
+        e.vload(var, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+    }
+    // Reversed-order stash lookup: tap (ry,rx) has reversed index
+    // (R-1 - (ry*fw+rx)); stashed iff that index < wgt_vars.len().
+    let wgt_lookup = |ry: usize, rx: usize| -> Option<usize> {
+        let rev_idx = r - 1 - (ry * cfg.fw + rx);
+        wgt_vars.get(rev_idx).copied()
+    };
+
+    // Output stash: map (oy, ox) -> slot, recycled per input row.
+    let mut slot_of: Vec<Option<(usize, usize)>> = vec![None; out_vars.len()];
+
+    let mut transitions = 0usize;
+    let mut prev_shape: Option<Vec<(usize, usize)>> = None;
+    for y in 0..cfg.ih {
+        // Row change: any still-stashed output was already flushed at its
+        // last in-row touch; clear the map defensively (no flush needed —
+        // lifetimes end within the row by construction).
+        slot_of.iter_mut().for_each(|s| *s = None);
+        for x in 0..cfg.iw {
+            let taps = taps_for_input(cfg, y, x);
+            if taps.is_empty() {
+                continue;
+            }
+            if cfg.stride > 1 {
+                let shape: Vec<(usize, usize)> =
+                    taps.iter().map(|&(ry, rx, _, _)| (ry, rx)).collect();
+                if let Some(prev) = &prev_shape {
+                    if *prev != shape {
+                        transitions += 1;
+                    }
+                }
+                prev_shape = Some(shape);
+            }
+            e.vload(VAR_IN, Buf::In, in_off(cfg, c, y, x));
+            for (ry, rx, oy, ox) in taps {
+                let e_off = oy * cfg.ow() + ox;
+                // Within one input row, output (oy,ox) is touched by the
+                // fw consecutive inputs x = ox·s + rx (one tap each), so
+                // its row-life runs from rx = 0 to rx = fw-1 regardless of
+                // stride.
+                let first_touch_in_row = rx == 0;
+                let last_touch_in_row = rx == cfg.fw - 1;
+                let wgt_var = match wgt_lookup(ry, rx) {
+                    Some(v) => v,
+                    None => {
+                        e.vload(VAR_WGT, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+                        VAR_WGT
+                    }
+                };
+                // Find (or allocate) the output's stash slot.
+                let slot = slot_of.iter().position(|s| *s == Some((oy, ox)));
+                let slot = match slot {
+                    Some(s) => Some(s),
+                    None if first_touch_in_row => {
+                        slot_of.iter().position(|s| s.is_none()).map(|s| {
+                            slot_of[s] = Some((oy, ox));
+                            s
+                        })
+                    }
+                    None => None,
+                };
+                match slot {
+                    Some(s) => {
+                        let var = out_vars[s];
+                        if first_touch_in_row {
+                            e.vdup0(var);
+                        }
+                        e.vmla(var, VAR_IN, wgt_var);
+                        if last_touch_in_row {
+                            e.redsum_acc(var, e_off);
+                            slot_of[s] = None;
+                        }
+                    }
+                    None => {
+                        // Unstashed path: reduce per MAC (Alg 6 else-arm).
+                        e.vmul(VAR_SCRATCH, VAR_IN, wgt_var);
+                        e.redsum_acc(VAR_SCRATCH, e_off);
+                    }
+                }
+            }
+        }
+    }
+    e.finish(format!("{}-{}", spec.name(), cfg.name()), Mode::Int8)
+        .with_irregularity(transitions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{basic, run_conv};
+    use crate::dataflow::Anchor;
+    use crate::isa::validate;
+    use crate::layer::oracle::conv_ref;
+    use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+
+    fn oracle_check(cfg: &ConvConfig, spec: &DataflowSpec, m: &MachineConfig) -> Program {
+        let c = m.c_int8();
+        let input = ActTensor::random(ActShape::new(cfg.in_channels, cfg.ih, cfg.iw), ActLayout::NCHWc { c }, 17);
+        let weights = WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            18,
+        );
+        let prog = gen_extended_is(cfg, spec, m);
+        validate::validate(&prog, m.num_regs).unwrap();
+        let got = run_conv(&prog, cfg, m, &input, &weights);
+        let want = conv_ref(cfg, &input, &weights);
+        assert_eq!(got.data, want.data, "{} diverges", prog.name);
+        prog
+    }
+
+    #[test]
+    fn weight_stash_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 3);
+        let spec = DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Weight, 9)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn output_stash_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 3);
+        let spec = DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Output, 9)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn combined_stash_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(9, 9, 3, 3, 1, 16, 2);
+        let spec = DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Output, 6), (AuxKind::Weight, 5)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn stride2_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(9, 9, 3, 3, 2, 16, 2);
+        let spec = DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Output, 4), (AuxKind::Weight, 4)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn wide_vars_match_oracle() {
+        let m = MachineConfig::neon(256);
+        let cfg = ConvConfig::simple(7, 7, 2, 2, 1, 32, 2);
+        let spec = DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Output, 4), (AuxKind::Weight, 4)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn output_stash_reduces_rmw_writes() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 16, 1);
+        let basic_prog = basic::gen_is(&cfg, &m);
+        let spec = DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Output, 9)]);
+        let ext = gen_extended_is(&cfg, &spec, &m);
+        // Stashing collapses the fw touches per (output, row) to one RMW.
+        assert!(ext.mem_writes() < basic_prog.mem_writes());
+    }
+
+    #[test]
+    fn weight_stash_eliminates_weight_loads_s1() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 1);
+        let basic_prog = basic::gen_is(&cfg, &m);
+        let spec = DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Weight, 9)]);
+        let ext = gen_extended_is(&cfg, &spec, &m);
+        // All weight loads collapse to the R prologue loads; input loads
+        // unchanged (H of them).
+        assert_eq!(ext.mem_reads(), cfg.h_size() + cfg.r_size());
+        assert!(basic_prog.mem_reads() > ext.mem_reads());
+    }
+}

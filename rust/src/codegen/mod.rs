@@ -1,0 +1,306 @@
+//! The code generator (paper §IV-B): lowers a (layer config, dataflow
+//! spec, machine config) triple to a fully-unrolled SIMD [`Program`].
+//!
+//! Structure mirrors the paper:
+//! * [`basic`] — Algorithms 1–3 (anchoring stationarity only).
+//! * [`os`] — Algorithm 5: extended output-anchored dataflows.
+//! * [`is`] — Algorithm 6: extended input-anchored dataflows
+//!   (reversed-weight unrolling, per-row output stashing).
+//! * [`ws`] — Algorithm 7: extended weight-anchored dataflows
+//!   (split weight loop to seal stashed outputs).
+//! * [`binary`] — XNOR-popcount variants for binary networks.
+//! * [`depthwise`] — lane-parallel depthwise kernels (no cross-channel
+//!   reduction; vector write-back).
+//! * [`emit_c`] — renders a program as ARM NEON intrinsics C source (what
+//!   the paper's generator emits).
+//!
+//! A program is the inner kernel for one (input-channel-block ×
+//! output-channel) combination; [`schedule`] produces the per-invocation
+//! buffer bases covering a whole layer, and [`run_conv`] executes the
+//! schedule on the functional interpreter.
+
+pub mod basic;
+pub mod os;
+pub mod os_jam;
+pub mod is;
+pub mod ws;
+pub mod binary;
+pub mod depthwise;
+pub mod emit_c;
+
+use crate::dataflow::{Anchor, DataflowSpec};
+use crate::isa::{Buf, Mode, Program, VInstr, REG_BYTES};
+use crate::layer::ConvConfig;
+use crate::machine::{Bases, Buffers, Interp, MachineConfig};
+use crate::tensor::{ActLayout, ActTensor, OutTensor, WeightLayout, WeightTensor};
+
+/// Emits instructions at *vector variable* granularity: one logical op on
+/// a variable expands to `n = regs_per_var` physical-register ops
+/// (paper §II-E: variables may span multiple registers).
+pub struct Emitter {
+    pub n: usize,
+    pub instrs: Vec<VInstr>,
+}
+
+impl Emitter {
+    pub fn new(machine: &MachineConfig) -> Emitter {
+        Emitter { n: machine.regs_per_var(), instrs: Vec::new() }
+    }
+
+    #[inline]
+    fn reg(&self, var: usize, j: usize) -> u8 {
+        (var * self.n + j) as u8
+    }
+
+    /// var ← `n` consecutive 128-bit loads from `buf` at `byte_off`.
+    pub fn vload(&mut self, var: usize, buf: Buf, byte_off: usize) {
+        for j in 0..self.n {
+            self.instrs.push(VInstr::VLoad {
+                dst: self.reg(var, j),
+                buf,
+                off: (byte_off + j * REG_BYTES) as u32,
+            });
+        }
+    }
+
+    /// var ← 0.
+    pub fn vdup0(&mut self, var: usize) {
+        for j in 0..self.n {
+            self.instrs.push(VInstr::VDupZero { dst: self.reg(var, j) });
+        }
+    }
+
+    /// dst ← a * b (lane-wise, per register pair).
+    pub fn vmul(&mut self, dst: usize, a: usize, b: usize) {
+        for j in 0..self.n {
+            self.instrs.push(VInstr::VMul {
+                dst: self.reg(dst, j),
+                a: self.reg(a, j),
+                b: self.reg(b, j),
+            });
+        }
+    }
+
+    /// acc += a * b.
+    pub fn vmla(&mut self, acc: usize, a: usize, b: usize) {
+        for j in 0..self.n {
+            self.instrs.push(VInstr::VMla {
+                acc: self.reg(acc, j),
+                a: self.reg(a, j),
+                b: self.reg(b, j),
+            });
+        }
+    }
+
+    /// dst ← src (the transfer secondary unrolling avoids; used only by
+    /// the naive-rotation ablation).
+    pub fn vmov(&mut self, dst: usize, src: usize) {
+        for j in 0..self.n {
+            self.instrs.push(VInstr::VMov { dst: self.reg(dst, j), src: self.reg(src, j) });
+        }
+    }
+
+    /// Out[off] += Σ all lanes of `var`. Reduces the variable's registers
+    /// pairwise into its register 0 (destroying it), then a RedSumAcc.
+    pub fn redsum_acc(&mut self, var: usize, out_off: usize) {
+        for j in 1..self.n {
+            self.instrs.push(VInstr::VAdd {
+                dst: self.reg(var, 0),
+                a: self.reg(var, 0),
+                b: self.reg(var, j),
+            });
+        }
+        self.instrs.push(VInstr::RedSumAcc { src: self.reg(var, 0), off: out_off as u32 });
+    }
+
+    /// Binary: var ← a ^ b.
+    pub fn vxor(&mut self, dst: usize, a: usize, b: usize) {
+        for j in 0..self.n {
+            self.instrs.push(VInstr::VXor {
+                dst: self.reg(dst, j),
+                a: self.reg(a, j),
+                b: self.reg(b, j),
+            });
+        }
+    }
+
+    /// Binary: acc += per-byte popcount of src.
+    pub fn vcnt_acc(&mut self, acc: usize, src: usize) {
+        for j in 0..self.n {
+            self.instrs.push(VInstr::VCntAcc { acc: self.reg(acc, j), src: self.reg(src, j) });
+        }
+    }
+
+    /// Binary: Out[off] += bias + scale · (sum of count bytes of var).
+    /// Reduces the variable's registers via byte-count sums.
+    pub fn redsum_scale_acc(&mut self, var: usize, out_off: usize, scale: i32, bias: i32) {
+        // Each register contributes its byte-lane sum; emit one
+        // RedSumScaleAcc per register, placing the bias on the first.
+        for j in 0..self.n {
+            self.instrs.push(VInstr::RedSumScaleAcc {
+                src: self.reg(var, j),
+                off: out_off as u32,
+                scale,
+                bias: if j == 0 { bias } else { 0 },
+            });
+        }
+    }
+
+    /// Binary per-MAC fallback: Out[off] += bias + scale·popcount(var).
+    pub fn popcnt_acc(&mut self, var: usize, out_off: usize, scale: i32, bias_total: i32) {
+        for j in 0..self.n {
+            self.instrs.push(VInstr::PopcntAcc {
+                src: self.reg(var, j),
+                off: out_off as u32,
+                scale,
+                bias: if j == 0 { bias_total } else { 0 },
+            });
+        }
+    }
+
+    pub fn finish(self, name: impl Into<String>, mode: Mode) -> Program {
+        Program::new(name, mode, self.instrs)
+    }
+}
+
+/// Generate the program for any dataflow spec (INT8 simple conv).
+pub fn generate(cfg: &ConvConfig, spec: &DataflowSpec, machine: &MachineConfig) -> Program {
+    assert!(spec.fits(machine), "dataflow {} does not fit the register file", spec.name());
+    assert!(spec.is_sensible(), "dataflow {} stashes its own anchor", spec.name());
+    if spec.aux_vars() == 0 {
+        match spec.anchor {
+            Anchor::Output => basic::gen_os(cfg, machine),
+            Anchor::Input => basic::gen_is(cfg, machine),
+            Anchor::Weight => basic::gen_ws(cfg, machine),
+        }
+    } else {
+        match spec.anchor {
+            Anchor::Output => os::gen_extended_os(cfg, spec, machine),
+            Anchor::Input => is::gen_extended_is(cfg, spec, machine),
+            Anchor::Weight => ws::gen_extended_ws(cfg, spec, machine),
+        }
+    }
+}
+
+/// The (tap, output) pairs a given input position participates in, in
+/// *reversed* tap order (paper Fig 4d: input-anchored dataflows unroll the
+/// weights in reverse so the output reuse pattern mirrors OS input reuse).
+/// Returns (ry, rx, oy, ox) tuples. For stride > 1 the set is irregular
+/// (paper Fig 5: 1, 2 or 4 weights per input for s = 2).
+pub(crate) fn taps_for_input(cfg: &ConvConfig, y: usize, x: usize) -> Vec<(usize, usize, usize, usize)> {
+    let mut out = Vec::new();
+    for ry in (0..cfg.fh).rev() {
+        for rx in (0..cfg.fw).rev() {
+            if y >= ry && x >= rx {
+                let (dy, dx) = (y - ry, x - rx);
+                if dy % cfg.stride == 0 && dx % cfg.stride == 0 {
+                    let (oy, ox) = (dy / cfg.stride, dx / cfg.stride);
+                    if oy < cfg.oh() && ox < cfg.ow() {
+                        out.push((ry, rx, oy, ox));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-invocation buffer bases covering a full layer: one invocation per
+/// (input-channel-block, output-channel) pair, k-major within a block so
+/// weight blocks stream sequentially (CKRSc order).
+pub fn schedule(cfg: &ConvConfig, machine: &MachineConfig) -> Vec<Bases> {
+    let c = machine.c_int8();
+    assert!(cfg.in_channels % c == 0, "C={} not a multiple of c={c}", cfg.in_channels);
+    let num_blocks = cfg.in_channels / c;
+    let h_bytes = cfg.h_size() * c;
+    let r_bytes = cfg.r_size() * c;
+    let e = cfg.e_size();
+    let mut out = Vec::with_capacity(num_blocks * cfg.out_channels);
+    for cb in 0..num_blocks {
+        for k in 0..cfg.out_channels {
+            out.push(Bases {
+                input: (cb * h_bytes) as u32,
+                weight: ((cb * cfg.out_channels + k) * r_bytes) as u32,
+                output: (k * e) as u32,
+            });
+        }
+    }
+    out
+}
+
+/// Execute a generated simple-conv program over a full layer on the
+/// functional interpreter. The input must be NCHWc with c matching the
+/// machine, weights CKRSc. Output is zero-initialized here (all final
+/// writes are accumulating).
+pub fn run_conv(
+    prog: &Program,
+    cfg: &ConvConfig,
+    machine: &MachineConfig,
+    input: &ActTensor,
+    weights: &WeightTensor,
+) -> OutTensor {
+    let c = machine.c_int8();
+    assert_eq!(input.layout, ActLayout::NCHWc { c });
+    assert_eq!(weights.layout, WeightLayout::CKRSc { c });
+    let mut out = OutTensor::zeros(cfg.out_channels, cfg.oh(), cfg.ow());
+    let mut interp = Interp::new(machine.num_regs);
+    let sched = schedule(cfg, machine);
+    // Validate the whole schedule up front: the max program offsets are
+    // computed once (O(program)), then each invocation's bases check is
+    // O(1). After this, the unchecked fast path is safe — the §Perf hot
+    // loop of the stack.
+    let max_in = prog.max_offset(Buf::In).unwrap_or(0) as usize;
+    let max_wgt = prog.max_offset(Buf::Wgt).unwrap_or(0) as usize;
+    let max_out = prog.max_offset(Buf::Out).unwrap_or(0) as usize;
+    for &bases in &sched {
+        assert!(
+            bases.input as usize + max_in <= input.data.len()
+                && bases.weight as usize + max_wgt <= weights.data.len()
+                && bases.output as usize + max_out <= out.data.len(),
+            "program {} exceeds buffer bounds at {:?}",
+            prog.name,
+            bases
+        );
+    }
+    for bases in sched {
+        interp.run_fast(
+            prog,
+            &mut Buffers { input: &input.data, weight: &weights.data, output: &mut out.data },
+            bases,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MachineConfig;
+
+    #[test]
+    fn emitter_expands_variables() {
+        let m = MachineConfig::neon(256); // n = 2
+        let mut e = Emitter::new(&m);
+        e.vload(1, Buf::In, 64);
+        assert_eq!(e.instrs.len(), 2);
+        assert_eq!(e.instrs[0], VInstr::VLoad { dst: 2, buf: Buf::In, off: 64 });
+        assert_eq!(e.instrs[1], VInstr::VLoad { dst: 3, buf: Buf::In, off: 80 });
+        e.redsum_acc(1, 7);
+        // one VAdd (fold reg 3 into reg 2) + one RedSumAcc
+        assert_eq!(e.instrs.len(), 4);
+    }
+
+    #[test]
+    fn schedule_covers_all_blocks() {
+        let m = MachineConfig::neon(128); // c=16
+        let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 32, 4);
+        let s = schedule(&cfg, &m);
+        assert_eq!(s.len(), 2 * 4);
+        // Second channel block starts H*c bytes in.
+        assert_eq!(s[4].input, (36 * 16) as u32);
+        // Output base depends only on k.
+        assert_eq!(s[0].output, 0);
+        assert_eq!(s[1].output, cfg.e_size() as u32);
+        assert_eq!(s[4].output, 0);
+    }
+}

@@ -1,0 +1,368 @@
+//! Extended output-anchored dataflows — paper Algorithm 5.
+//!
+//! The anchor output variable accumulates all R products in-register and
+//! reduces once per output (as in the basic OS). Auxiliary variables
+//! stash:
+//!
+//! * **weights** — the first `numWgtStash` filter taps, loaded once in the
+//!   prologue and reused by *every* output (the sequence of weight usage
+//!   is identical between consecutive outputs, so the mapping is static);
+//! * **inputs** — a sliding window over input positions. Between two
+//!   successive outputs the window shifts by `stride`, so the mapping from
+//!   position to variable must rotate; we implement the paper's secondary
+//!   unrolling (Alg. 4 / Fig 6) implicitly: the kernel is fully unrolled
+//!   and newly-needed positions are loaded *directly into the variable
+//!   whose occupant died* ("directly load vectors of input data to be
+//!   newly stashed into their corresponding vector variables"), so no
+//!   `VMov` register transfers are ever emitted.
+//!
+//! Positions that will not be reused by the next output in the row
+//! (column < window start + stride) bypass the stash and load into the
+//! active input variable — stashing them would waste a slot.
+
+use crate::dataflow::{AuxKind, DataflowSpec};
+use crate::isa::{Buf, Mode, Program};
+use crate::layer::ConvConfig;
+use crate::machine::MachineConfig;
+
+use super::basic::{in_off, wgt_off};
+use super::Emitter;
+
+const VAR_IN: usize = 0;
+const VAR_WGT: usize = 1;
+const VAR_OUT: usize = 2;
+const VAR_STASH0: usize = 3;
+
+/// Tracks which input position each stash variable holds.
+pub(crate) struct InputStash {
+    /// Variable ids dedicated to input stashing.
+    vars: Vec<usize>,
+    /// Position currently held by each variable.
+    pos: Vec<Option<(usize, usize)>>,
+}
+
+impl InputStash {
+    pub(crate) fn new(vars: Vec<usize>) -> InputStash {
+        let n = vars.len();
+        InputStash { vars, pos: vec![None; n] }
+    }
+
+    /// Look up a stashed position.
+    pub(crate) fn lookup(&self, p: (usize, usize)) -> Option<usize> {
+        self.pos
+            .iter()
+            .position(|q| *q == Some(p))
+            .map(|i| self.vars[i])
+    }
+
+    /// Find a variable whose occupant is dead w.r.t. the current window
+    /// (rows [wy0, wy0+fh), cols [wx0, wx0+fw)); claim it for `p`.
+    pub(crate) fn claim_dead(
+        &mut self,
+        p: (usize, usize),
+        wy0: usize,
+        wx0: usize,
+        fh: usize,
+        fw: usize,
+    ) -> Option<usize> {
+        let slot = self.pos.iter().position(|q| match q {
+            None => true,
+            Some((y, x)) => *y < wy0 || *y >= wy0 + fh || *x < wx0 || *x >= wx0 + fw,
+        })?;
+        self.pos[slot] = Some(p);
+        Some(self.vars[slot])
+    }
+}
+
+/// Algorithm 5. Aux variable ids are assigned in the spec's priority
+/// order starting at variable 3.
+pub fn gen_extended_os(cfg: &ConvConfig, spec: &DataflowSpec, machine: &MachineConfig) -> Program {
+    let c = machine.c_int8();
+    let r = cfg.r_size();
+    let mut e = Emitter::new(machine);
+
+    // Assign variable ids per priority order. Weight stash saturates at R
+    // (no gain beyond — Table I); leftover variables spill to the next
+    // aux kind only through the spec itself (the explorer constructs
+    // specs with explicit counts).
+    let mut next_var = VAR_STASH0;
+    let mut wgt_vars: Vec<usize> = Vec::new();
+    let mut in_vars: Vec<usize> = Vec::new();
+    for (kind, count) in &spec.aux {
+        match kind {
+            AuxKind::Weight => {
+                for _ in 0..(*count).min(r - wgt_vars.len().min(r)) {
+                    wgt_vars.push(next_var);
+                    next_var += 1;
+                }
+            }
+            AuxKind::Input => {
+                for _ in 0..*count {
+                    in_vars.push(next_var);
+                    next_var += 1;
+                }
+            }
+            AuxKind::Output => {} // filtered by is_sensible()
+        }
+    }
+
+    // Prologue (Alg 5 Prep 2): stash the first taps, row-major — the
+    // usage order, identical across outputs.
+    for (t, &var) in wgt_vars.iter().enumerate() {
+        let (ry, rx) = (t / cfg.fw, t % cfg.fw);
+        e.vload(var, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+    }
+
+    let mut stash = InputStash::new(in_vars);
+    for oy in 0..cfg.oh() {
+        for ox in 0..cfg.ow() {
+            let (wy0, wx0) = (oy * cfg.stride, ox * cfg.stride);
+            e.vdup0(VAR_OUT);
+            for ry in 0..cfg.fh {
+                for rx in 0..cfg.fw {
+                    let tap = ry * cfg.fw + rx;
+                    let pos = (wy0 + ry, wx0 + rx);
+                    // Input: stashed → reuse; reusable next output → claim
+                    // a dead slot; otherwise active variable.
+                    let in_var = if let Some(v) = stash.lookup(pos) {
+                        v
+                    } else {
+                        let reusable = pos.1 >= wx0 + cfg.stride && ox + 1 < cfg.ow();
+                        let claimed = if reusable {
+                            stash.claim_dead(pos, wy0, wx0, cfg.fh, cfg.fw)
+                        } else {
+                            None
+                        };
+                        match claimed {
+                            Some(v) => {
+                                e.vload(v, Buf::In, in_off(cfg, c, pos.0, pos.1));
+                                v
+                            }
+                            None => {
+                                e.vload(VAR_IN, Buf::In, in_off(cfg, c, pos.0, pos.1));
+                                VAR_IN
+                            }
+                        }
+                    };
+                    let wgt_var = if tap < wgt_vars.len() {
+                        wgt_vars[tap]
+                    } else {
+                        e.vload(VAR_WGT, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+                        VAR_WGT
+                    };
+                    e.vmla(VAR_OUT, in_var, wgt_var);
+                }
+            }
+            e.redsum_acc(VAR_OUT, oy * cfg.ow() + ox);
+        }
+    }
+    e.finish(format!("{}-{}", spec.name(), cfg.name()), Mode::Int8)
+}
+
+/// ABLATION — the naive rotation scheme Algorithm 4 exists to avoid.
+///
+/// Input stash slots map to window taps by a *fixed* assignment, so every
+/// window advance must physically rotate the surviving values between
+/// registers with `VMov`s (s·fh moves… (fw−s)·fh on every output).
+/// Comparing this against [`gen_extended_os`] (zero moves) isolates the
+/// benefit of secondary unrolling. Requires a full input stash (R
+/// variables).
+pub fn gen_extended_os_rotation(
+    cfg: &ConvConfig,
+    num_wgt_stash: usize,
+    machine: &MachineConfig,
+) -> Program {
+    let c = machine.c_int8();
+    let r = cfg.r_size();
+    let nw = num_wgt_stash.min(r);
+    assert!(
+        3 + nw + r <= machine.vars_available(),
+        "rotation ablation needs a full input stash"
+    );
+    let mut e = Emitter::new(machine);
+    let wgt_var0 = VAR_STASH0;
+    let in_var0 = VAR_STASH0 + nw;
+    for t in 0..nw {
+        let (ry, rx) = (t / cfg.fw, t % cfg.fw);
+        e.vload(wgt_var0 + t, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+    }
+    let slot = |ry: usize, rx: usize| in_var0 + ry * cfg.fw + rx;
+    for oy in 0..cfg.oh() {
+        for ox in 0..cfg.ow() {
+            let (wy0, wx0) = (oy * cfg.stride, ox * cfg.stride);
+            if ox == 0 {
+                // Row start: load the whole window fresh.
+                for ry in 0..cfg.fh {
+                    for rx in 0..cfg.fw {
+                        e.vload(slot(ry, rx), Buf::In, in_off(cfg, c, wy0 + ry, wx0 + rx));
+                    }
+                }
+            } else if cfg.stride < cfg.fw {
+                // Rotate survivors left by stride (the transfers secondary
+                // unrolling eliminates), then load the new columns.
+                for ry in 0..cfg.fh {
+                    for rx in cfg.stride..cfg.fw {
+                        e.vmov(slot(ry, rx - cfg.stride), slot(ry, rx));
+                    }
+                    for rx in cfg.fw - cfg.stride..cfg.fw {
+                        e.vload(slot(ry, rx), Buf::In, in_off(cfg, c, wy0 + ry, wx0 + rx));
+                    }
+                }
+            } else {
+                for ry in 0..cfg.fh {
+                    for rx in 0..cfg.fw {
+                        e.vload(slot(ry, rx), Buf::In, in_off(cfg, c, wy0 + ry, wx0 + rx));
+                    }
+                }
+            }
+            e.vdup0(VAR_OUT);
+            for ry in 0..cfg.fh {
+                for rx in 0..cfg.fw {
+                    let tap = ry * cfg.fw + rx;
+                    let wgt_var = if tap < nw {
+                        wgt_var0 + tap
+                    } else {
+                        e.vload(VAR_WGT, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+                        VAR_WGT
+                    };
+                    e.vmla(VAR_OUT, slot(ry, rx), wgt_var);
+                }
+            }
+            e.redsum_acc(VAR_OUT, oy * cfg.ow() + ox);
+        }
+    }
+    e.finish(format!("OS-rotation-ablation-{}", cfg.name()), Mode::Int8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{basic, run_conv};
+    use crate::dataflow::Anchor;
+    use crate::isa::validate;
+    use crate::layer::oracle::conv_ref;
+    use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+
+    fn oracle_check(cfg: &ConvConfig, spec: &DataflowSpec, m: &MachineConfig) -> Program {
+        let c = m.c_int8();
+        let input = ActTensor::random(ActShape::new(cfg.in_channels, cfg.ih, cfg.iw), ActLayout::NCHWc { c }, 7);
+        let weights = WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            8,
+        );
+        let prog = gen_extended_os(cfg, spec, m);
+        validate::validate(&prog, m.num_regs).unwrap();
+        let got = run_conv(&prog, cfg, m, &input, &weights);
+        let want = conv_ref(cfg, &input, &weights);
+        assert_eq!(got.data, want.data, "{} diverges", prog.name);
+        prog
+    }
+
+    #[test]
+    fn weight_stash_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 3);
+        let spec = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 9)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn partial_weight_stash_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 3);
+        let spec = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 4)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn input_stash_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 3);
+        let spec = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Input, 9)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn combined_stash_matches_oracle_stride2() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(9, 9, 3, 3, 2, 16, 2);
+        let spec = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 9), (AuxKind::Input, 6)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn optimized_dataflow_matches_oracle_all_vls() {
+        for vl in [128, 256, 512] {
+            let m = MachineConfig::neon(vl);
+            let c = m.c_int8();
+            let cfg = ConvConfig::simple(7, 7, 3, 3, 1, c, 2);
+            let spec = DataflowSpec::optimized_os(&m, cfg.r_size());
+            oracle_check(&cfg, &spec, &m);
+        }
+    }
+
+    #[test]
+    fn weight_stash_eliminates_weight_loads() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 1);
+        let basic = basic::gen_os(&cfg, &m);
+        let spec = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 9)]);
+        let ext = gen_extended_os(&cfg, &spec, &m);
+        // Basic: 2 loads per MAC. Extended: weight loads collapse to the
+        // R prologue loads.
+        let saved = basic.mem_reads() - ext.mem_reads();
+        let expected = cfg.e_size() * cfg.r_size() - cfg.r_size();
+        assert_eq!(saved, expected);
+    }
+
+    #[test]
+    fn full_input_stash_reuses_window_overlap() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 1);
+        let spec = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Input, 9)]);
+        let ext = gen_extended_os(&cfg, &spec, &m);
+        let basic = basic::gen_os(&cfg, &m);
+        // Each output (except row starts) reuses (fw-1)*fh inputs.
+        assert!(ext.mem_reads() < basic.mem_reads());
+        let per_out_reuse = (cfg.fw - 1) * cfg.fh;
+        let rows = cfg.oh();
+        let expected_saved = (cfg.e_size() - rows) * per_out_reuse;
+        let saved = basic.mem_reads() - ext.mem_reads();
+        assert_eq!(saved, expected_saved);
+    }
+
+    #[test]
+    fn rotation_ablation_matches_oracle_and_pays_vmovs() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 16, 2);
+        let c = m.c_int8();
+        let input = ActTensor::random(ActShape::new(16, 10, 10), ActLayout::NCHWc { c }, 55);
+        let weights =
+            WeightTensor::random(WeightShape::new(16, 2, 3, 3), WeightLayout::CKRSc { c }, 56);
+        let rot = gen_extended_os_rotation(&cfg, 9, &m);
+        validate::validate(&rot, m.num_regs).unwrap();
+        let got = run_conv(&rot, &cfg, &m, &input, &weights);
+        assert_eq!(got.data, conv_ref(&cfg, &input, &weights).data);
+        // The ablation pays register transfers the Alg-4 kernel avoids.
+        let spec = DataflowSpec::extended(
+            Anchor::Output,
+            vec![(AuxKind::Weight, 9), (AuxKind::Input, 9)],
+        );
+        let alg4 = gen_extended_os(&cfg, &spec, &m);
+        assert_eq!(alg4.stats().vmov, 0);
+        assert!(rot.stats().vmov > 0);
+        // Same memory traffic, strictly more instructions.
+        assert!(rot.instrs.len() > alg4.instrs.len());
+    }
+
+    #[test]
+    fn no_vmov_emitted() {
+        // The whole point of secondary unrolling: zero register transfers.
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 16, 2);
+        let spec = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 9), (AuxKind::Input, 9)]);
+        let prog = gen_extended_os(&cfg, &spec, &m);
+        assert_eq!(prog.stats().vmov, 0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Unroll-and-jam on top of the optimized OS dataflow (paper §VII-a:
+//! "further jamming can be applied on top of our technique to lower
+//! latency").
+//!
+//! The extended-OS kernel accumulates each output in one vector variable,
+//! so every `vmla` depends on the previous one — a read-after-write chain
+//! the pipeline cannot hide. Jamming processes `jam` *adjacent outputs*
+//! concurrently: their independent accumulators interleave in the
+//! instruction stream, breaking the chain (the classic unroll-and-jam
+//! payoff, visible in the perf model's `raw_hazard` term).
+//!
+//! Register budget: 2 active vars + `num_wgt_stash` weights + `jam`
+//! output accumulators ≤ the register file.
+
+use crate::isa::{Buf, Mode, Program};
+use crate::layer::ConvConfig;
+use crate::machine::MachineConfig;
+
+use super::basic::{in_off, wgt_off};
+use super::Emitter;
+
+#[allow(dead_code)]
+const VAR_IN: usize = 0;
+const VAR_WGT: usize = 1;
+const VAR_FIRST_OUT: usize = 2;
+
+/// Jammed extended-OS kernel: weight auxiliary stationarity + `jam`-way
+/// output interleaving.
+pub fn gen_os_jam(
+    cfg: &ConvConfig,
+    num_wgt_stash: usize,
+    jam: usize,
+    machine: &MachineConfig,
+) -> Program {
+    assert!(jam >= 1);
+    let c = machine.c_int8();
+    let r = cfg.r_size();
+    let nw = num_wgt_stash.min(r);
+    // Variable map: jam output accumulators, then jam input staging
+    // variables (loads batch ahead of the MACs that consume them — the
+    // software-pipelining half of unroll-and-jam), then the weight stash.
+    let in_var0 = VAR_FIRST_OUT + jam;
+    let wgt_var0 = in_var0 + jam;
+    assert!(
+        2 + 2 * jam + nw <= machine.vars_available(),
+        "jam={jam} + wgt stash={nw} exceeds the register file"
+    );
+    let mut e = Emitter::new(machine);
+    for t in 0..nw {
+        let (ry, rx) = (t / cfg.fw, t % cfg.fw);
+        e.vload(wgt_var0 + t, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+    }
+    let ow = cfg.ow();
+    for oy in 0..cfg.oh() {
+        let mut ox = 0;
+        while ox < ow {
+            let width = jam.min(ow - ox);
+            for j in 0..width {
+                e.vdup0(VAR_FIRST_OUT + j);
+            }
+            for ry in 0..cfg.fh {
+                for rx in 0..cfg.fw {
+                    let t = ry * cfg.fw + rx;
+                    let wgt_var = if t < nw {
+                        wgt_var0 + t
+                    } else {
+                        e.vload(VAR_WGT, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+                        VAR_WGT
+                    };
+                    // All loads first, then all MACs: each vmla is at
+                    // least `width` instructions from both the load that
+                    // feeds it and the previous write of its accumulator
+                    // — no RAW chains.
+                    for j in 0..width {
+                        e.vload(
+                            in_var0 + j,
+                            Buf::In,
+                            in_off(cfg, c, oy * cfg.stride + ry, (ox + j) * cfg.stride + rx),
+                        );
+                    }
+                    for j in 0..width {
+                        e.vmla(VAR_FIRST_OUT + j, in_var0 + j, wgt_var);
+                    }
+                }
+            }
+            for j in 0..width {
+                e.redsum_acc(VAR_FIRST_OUT + j, oy * ow + ox + j);
+            }
+            ox += width;
+        }
+    }
+    e.finish(format!("OS+wgt{nw}+jam{jam}-{}", cfg.name()), Mode::Int8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::run_conv;
+    use crate::isa::validate;
+    use crate::layer::oracle::conv_ref;
+    use crate::machine::{Bases, PerfModel};
+    use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+
+    fn check(cfg: &ConvConfig, jam: usize, m: &MachineConfig) -> Program {
+        let c = m.c_int8();
+        let prog = gen_os_jam(cfg, cfg.r_size(), jam, m);
+        validate::validate(&prog, m.num_regs).unwrap();
+        let input = ActTensor::random(ActShape::new(cfg.in_channels, cfg.ih, cfg.iw), ActLayout::NCHWc { c }, 61);
+        let w = WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            62,
+        );
+        let got = run_conv(&prog, cfg, m, &input, &w);
+        assert_eq!(got.data, conv_ref(cfg, &input, &w).data, "{} diverges", prog.name);
+        prog
+    }
+
+    #[test]
+    fn jam_matches_oracle_various_widths() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(9, 9, 3, 3, 1, 16, 2);
+        for jam in [1, 2, 4, 7] {
+            check(&cfg, jam, &m);
+        }
+    }
+
+    #[test]
+    fn jam_handles_row_remainders_and_stride() {
+        let m = MachineConfig::neon(128);
+        // ow = 4 with jam 3 → groups of 3 + 1.
+        check(&ConvConfig::simple(6, 6, 3, 3, 1, 16, 2), 3, &m);
+        check(&ConvConfig::simple(9, 9, 3, 3, 2, 16, 2), 3, &m);
+    }
+
+    #[test]
+    fn jam_breaks_raw_chains_and_models_faster() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(12, 12, 3, 3, 1, 16, 2);
+        let plain = gen_os_jam(&cfg, 9, 1, &m);
+        let jammed = gen_os_jam(&cfg, 9, 4, &m);
+        let mut pm = PerfModel::neoverse_n1();
+        let a = pm.run_invocation(&plain, Bases::default());
+        let mut pm2 = PerfModel::neoverse_n1();
+        let b = pm2.run_invocation(&jammed, Bases::default());
+        // Same MAC count, fewer dependency stalls.
+        assert_eq!(plain.stats().vmla, jammed.stats().vmla);
+        assert!(b.cycles < a.cycles, "jam4 {} !< jam1 {}", b.cycles, a.cycles);
+    }
+
+    #[test]
+    fn register_budget_enforced() {
+        let m = MachineConfig::neon(512); // only 8 variables
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 64, 1);
+        let result = std::panic::catch_unwind(|| gen_os_jam(&cfg, 9, 8, &m));
+        assert!(result.is_err());
+    }
+}

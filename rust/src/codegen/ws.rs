@@ -1,0 +1,196 @@
+//! Extended weight-anchored dataflows — paper Algorithm 7.
+//!
+//! The anchor weight variable is loaded once per tap. Auxiliary variables
+//! stash:
+//!
+//! * **inputs** — "always stash the earliest yet unstashed element to
+//!   exploit locality": we stash consecutive input positions starting at
+//!   the first position every tap touches, (fh-1, fw-1) — each such
+//!   (interior) position is revisited by every tap, saving ~R reads per
+//!   variable (Table I);
+//! * **outputs** — the first `numOutStash` output elements keep their
+//!   partial sums in registers across the *entire* weight loop. This
+//!   requires the paper's **loop split**: taps 0..R-1 accumulate
+//!   (`vmla`), and the final tap "seals" — accumulates then writes back.
+//!
+//! Unstashed outputs take the per-MAC reduce path exactly as in basic WS.
+
+use crate::dataflow::{AuxKind, DataflowSpec};
+use crate::isa::{Buf, Mode, Program};
+use crate::layer::ConvConfig;
+use crate::machine::MachineConfig;
+
+use super::basic::{in_off, wgt_off};
+use super::Emitter;
+
+const VAR_IN: usize = 0;
+const VAR_WGT: usize = 1;
+const VAR_SCRATCH: usize = 2;
+const VAR_STASH0: usize = 3;
+
+/// Algorithm 7.
+pub fn gen_extended_ws(cfg: &ConvConfig, spec: &DataflowSpec, machine: &MachineConfig) -> Program {
+    let c = machine.c_int8();
+    let r = cfg.r_size();
+    let mut e = Emitter::new(machine);
+
+    let mut next_var = VAR_STASH0;
+    let mut in_vars: Vec<usize> = Vec::new();
+    let mut out_vars: Vec<usize> = Vec::new();
+    for (kind, count) in &spec.aux {
+        match kind {
+            AuxKind::Input => {
+                for _ in 0..*count {
+                    in_vars.push(next_var);
+                    next_var += 1;
+                }
+            }
+            AuxKind::Output => {
+                for _ in 0..*count {
+                    out_vars.push(next_var);
+                    next_var += 1;
+                }
+            }
+            AuxKind::Weight => {}
+        }
+    }
+
+    // Input stash: consecutive positions in memory order starting at the
+    // first position used by every tap.
+    let first_pos = (cfg.fh - 1) * cfg.iw + (cfg.fw - 1);
+    let stash_of_pos = |y: usize, x: usize| -> Option<usize> {
+        let idx = y * cfg.iw + x;
+        idx.checked_sub(first_pos).and_then(|i| in_vars.get(i).copied())
+    };
+    // Prologue (Alg 7 Prep 1).
+    for (i, &var) in in_vars.iter().enumerate() {
+        let idx = first_pos + i;
+        let (y, x) = (idx / cfg.iw, idx % cfg.iw);
+        if y < cfg.ih {
+            e.vload(var, Buf::In, in_off(cfg, c, y, x));
+        }
+    }
+
+    // Output stash: outputs 0..out_vars.len() in row-major order.
+    let stash_of_out = |e_off: usize| -> Option<usize> { out_vars.get(e_off).copied() };
+
+    let num_stashed_outputs = out_vars.len().min(cfg.e_size());
+
+    for t in 0..r {
+        let (ry, rx) = (t / cfg.fw, t % cfg.fw);
+        let is_first = t == 0;
+        let is_seal = t == r - 1; // the split-loop seal (Alg 7)
+        e.vload(VAR_WGT, Buf::Wgt, wgt_off(cfg, c, ry, rx));
+        for oy in 0..cfg.oh() {
+            for ox in 0..cfg.ow() {
+                let e_off = oy * cfg.ow() + ox;
+                let (y, x) = (oy * cfg.stride + ry, ox * cfg.stride + rx);
+                let in_var = match stash_of_pos(y, x) {
+                    Some(v) => v,
+                    None => {
+                        e.vload(VAR_IN, Buf::In, in_off(cfg, c, y, x));
+                        VAR_IN
+                    }
+                };
+                match stash_of_out(e_off) {
+                    Some(var) if e_off < num_stashed_outputs => {
+                        if is_first {
+                            e.vdup0(var);
+                        }
+                        e.vmla(var, in_var, VAR_WGT);
+                        if is_seal {
+                            e.redsum_acc(var, e_off);
+                        }
+                    }
+                    _ => {
+                        e.vmul(VAR_SCRATCH, in_var, VAR_WGT);
+                        e.redsum_acc(VAR_SCRATCH, e_off);
+                    }
+                }
+            }
+        }
+    }
+    e.finish(format!("{}-{}", spec.name(), cfg.name()), Mode::Int8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{basic, run_conv};
+    use crate::dataflow::Anchor;
+    use crate::isa::validate;
+    use crate::layer::oracle::conv_ref;
+    use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+
+    fn oracle_check(cfg: &ConvConfig, spec: &DataflowSpec, m: &MachineConfig) -> Program {
+        let c = m.c_int8();
+        let input = ActTensor::random(ActShape::new(cfg.in_channels, cfg.ih, cfg.iw), ActLayout::NCHWc { c }, 27);
+        let weights = WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            28,
+        );
+        let prog = gen_extended_ws(cfg, spec, m);
+        validate::validate(&prog, m.num_regs).unwrap();
+        let got = run_conv(&prog, cfg, m, &input, &weights);
+        let want = conv_ref(cfg, &input, &weights);
+        assert_eq!(got.data, want.data, "{} diverges", prog.name);
+        prog
+    }
+
+    #[test]
+    fn input_stash_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 3);
+        let spec = DataflowSpec::extended(Anchor::Weight, vec![(AuxKind::Input, 9)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn output_stash_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 3);
+        let spec = DataflowSpec::extended(Anchor::Weight, vec![(AuxKind::Output, 9)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn combined_stash_stride2_matches_oracle() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(9, 9, 3, 3, 2, 16, 2);
+        let spec = DataflowSpec::extended(Anchor::Weight, vec![(AuxKind::Output, 5), (AuxKind::Input, 4)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn wide_vars_match_oracle() {
+        let m = MachineConfig::neon(512);
+        let cfg = ConvConfig::simple(6, 6, 2, 2, 1, 64, 2);
+        let spec = DataflowSpec::extended(Anchor::Weight, vec![(AuxKind::Output, 3), (AuxKind::Input, 2)]);
+        oracle_check(&cfg, &spec, &m);
+    }
+
+    #[test]
+    fn output_stash_saves_reads_and_writes() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 1);
+        let b = basic::gen_ws(&cfg, &m);
+        let spec = DataflowSpec::extended(Anchor::Weight, vec![(AuxKind::Output, 9)]);
+        let ext = gen_extended_ws(&cfg, &spec, &m);
+        // Each stashed output collapses R RMWs into one.
+        let writes_saved = b.mem_writes() - ext.mem_writes();
+        assert_eq!(writes_saved, 9 * (cfg.r_size() - 1));
+    }
+
+    #[test]
+    fn seal_happens_exactly_once_per_stashed_output() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(6, 6, 2, 2, 1, 16, 1);
+        let spec = DataflowSpec::extended(Anchor::Weight, vec![(AuxKind::Output, 4)]);
+        let prog = gen_extended_ws(&cfg, &spec, &m);
+        // total RMWs = stashed(4 × 1) + unstashed((E-4) × R)
+        let e_sz = cfg.e_size();
+        let r = cfg.r_size();
+        assert_eq!(prog.stats().scalar_rmw, 4 + (e_sz - 4) * r);
+    }
+}

@@ -1,0 +1,69 @@
+//! Session metrics: per-layer and end-to-end accounting, rendered for
+//! the e2e experiments and the serving example.
+
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+use super::plan::NetworkPlan;
+use super::CLOCK_HZ;
+
+/// Aggregated request metrics of a serving session.
+#[derive(Clone, Debug, Default)]
+pub struct SessionMetrics {
+    /// Per-request wall-clock latencies (seconds).
+    pub latencies: Vec<f64>,
+    pub requests: u64,
+}
+
+impl SessionMetrics {
+    pub fn record(&mut self, latency_s: f64) {
+        self.latencies.push(latency_s);
+        self.requests += 1;
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.latencies)
+    }
+
+    /// Requests per second over the observed span (mean latency based —
+    /// single worker).
+    pub fn throughput(&self) -> f64 {
+        let s = self.summary();
+        if s.mean > 0.0 {
+            1.0 / s.mean
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-layer latency table of a plan.
+pub fn plan_table(plan: &NetworkPlan) -> Table {
+    let mut t = Table::new(&["layer", "kernel", "cycles", "ms(model)", "mem_reads", "l2_miss"]);
+    for lp in &plan.layers {
+        t.row(&[
+            lp.layer.name(),
+            lp.kind.name(),
+            format!("{:.0}", lp.stats.cycles),
+            format!("{:.3}", lp.stats.cycles / CLOCK_HZ * 1e3),
+            lp.stats.mem_reads.to_string(),
+            lp.stats.l2_misses.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_summary() {
+        let mut m = SessionMetrics::default();
+        m.record(0.010);
+        m.record(0.020);
+        assert_eq!(m.requests, 2);
+        assert!((m.summary().mean - 0.015).abs() < 1e-12);
+        assert!((m.throughput() - 1.0 / 0.015).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,272 @@
+//! The inference coordinator: turns a [`Network`] into an executable
+//! plan (per-layer generated kernels + layouts), estimates end-to-end
+//! latency on the performance model, executes small networks functionally
+//! on the interpreter, and serves requests through a threaded queue
+//! ([`serve`]).
+//!
+//! Python never appears here: generated programs run on the abstract
+//! machine, and numeric cross-validation against JAX goes through the
+//! PJRT [`crate::runtime`] on AOT artifacts.
+
+pub mod plan;
+pub mod metrics;
+pub mod serve;
+
+pub use plan::{plan_network, LayerPlan, NetworkPlan, PlanKind, Planner, PlannerOptions};
+pub use metrics::SessionMetrics;
+
+use crate::layer::{ConvConfig, LayerConfig, PoolKind};
+use crate::machine::MachineConfig;
+use crate::quant::requantize_relu;
+use crate::tensor::{ActLayout, ActShape, ActTensor};
+
+/// Clock frequency used to convert modeled cycles to seconds
+/// (Neoverse-N1 reference platforms run 2.6–3.0 GHz; we use 2.6).
+pub const CLOCK_HZ: f64 = 2.6e9;
+
+/// Round channels up to a multiple of the block size (the stem conv has
+/// C = 3; NCHWc implementations zero-pad — NeoCPU does the same).
+pub fn padded_channels(c: usize, block: usize) -> usize {
+    c.div_ceil(block) * block
+}
+
+/// A conv config with channels padded for a machine's block size.
+pub fn padded_conv(cfg: &ConvConfig, machine: &MachineConfig) -> ConvConfig {
+    let c = machine.c_int8();
+    let mut out = *cfg;
+    out.in_channels = padded_channels(cfg.in_channels, c);
+    out
+}
+
+/// Functionally execute a (small) all-conv network on the interpreter:
+/// conv → requantize+ReLU chain, max/avg pooling on the scalar path.
+/// Used by examples and the PJRT cross-validation; large ImageNet nets
+/// go through the performance model instead.
+pub fn run_network_functional(
+    plan: &NetworkPlan,
+    input: &ActTensor,
+    requant_shift: u32,
+) -> crate::Result<ActTensor> {
+    let mut act = input.clone();
+    for lp in &plan.layers {
+        act = step_functional(lp, &act, requant_shift)?;
+    }
+    Ok(act)
+}
+
+fn step_functional(lp: &LayerPlan, act: &ActTensor, shift: u32) -> crate::Result<ActTensor> {
+    match (&lp.layer, &lp.kind) {
+        (LayerConfig::Conv(cfg), PlanKind::Generated { prog, machine, pad, .. }) => {
+            let c = machine.c_int8();
+            // Pad spatially and in channels to the kernel's expectations.
+            let padded = pad_act(act, *pad, cfg.in_channels, c);
+            let weights = lp
+                .weights
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("no weights bound for {}", lp.layer.name()))?;
+            let out = crate::codegen::run_conv(prog, cfg, machine, &padded, weights);
+            Ok(requantize_relu(&out, shift, ActLayout::NCHWc { c }))
+        }
+        (LayerConfig::Conv(cfg), PlanKind::DepthwiseKernel { prog, machine, pad }) => {
+            let c = machine.c_int8();
+            let padded = pad_act(act, *pad, cfg.in_channels, c);
+            let weights = lp
+                .weights
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("no weights bound for {}", lp.layer.name()))?;
+            let packed = crate::codegen::depthwise::pack_depthwise_weights(weights, c);
+            let raw = crate::codegen::depthwise::run_depthwise(prog, cfg, machine, &padded, &packed);
+            // Requantize from the depthwise position-major layout.
+            let mut out = ActTensor::zeros(
+                ActShape::new(cfg.out_channels, cfg.oh(), cfg.ow()),
+                ActLayout::NCHWc { c },
+            );
+            for ch in 0..cfg.out_channels {
+                for oy in 0..cfg.oh() {
+                    for ox in 0..cfg.ow() {
+                        let v = crate::codegen::depthwise::dw_out_get(&raw, cfg, c, ch, oy, ox);
+                        out.set(ch, oy, ox, (v >> shift).clamp(0, 127) as i8);
+                    }
+                }
+            }
+            Ok(out)
+        }
+        (LayerConfig::Conv(cfg), PlanKind::GroupedKernel { prog, machine, pad, groups, .. }) => {
+            let c = machine.c_int8();
+            let cpg = cfg.in_channels / groups;
+            let kpg = cfg.out_channels / groups;
+            anyhow::ensure!(cpg % c == 0, "group channels {cpg} must align to block size {c}");
+            let padded = pad_act(act, *pad, cfg.in_channels, c);
+            let weights = lp
+                .weights
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("no weights bound for {}", lp.layer.name()))?;
+            let view = cfg.group_view();
+            let mut acc = crate::tensor::OutTensor::zeros(cfg.out_channels, cfg.oh(), cfg.ow());
+            for g in 0..*groups {
+                // Contiguous NCHWc channel-slice of this group's input.
+                let in_base = g * cpg * cfg.ih * cfg.iw;
+                let in_len = cpg * cfg.ih * cfg.iw;
+                let group_input = ActTensor {
+                    shape: ActShape::new(cpg, cfg.ih, cfg.iw),
+                    layout: ActLayout::NCHWc { c },
+                    data: padded.data[in_base..in_base + in_len].to_vec(),
+                };
+                // Repack this group's weights (oracle shape: in=cpg, out=K).
+                let mut gw = crate::tensor::WeightTensor::zeros(
+                    crate::tensor::WeightShape::new(cpg, kpg, cfg.fh, cfg.fw),
+                    crate::tensor::WeightLayout::CKRSc { c },
+                );
+                for ci in 0..cpg {
+                    for k in 0..kpg {
+                        for ry in 0..cfg.fh {
+                            for rx in 0..cfg.fw {
+                                gw.set(ci, k, ry, rx, weights.get(ci, g * kpg + k, ry, rx));
+                            }
+                        }
+                    }
+                }
+                let group_out = crate::codegen::run_conv(prog, &view, machine, &group_input, &gw);
+                for k in 0..kpg {
+                    for oy in 0..cfg.oh() {
+                        for ox in 0..cfg.ow() {
+                            let idx = acc.index(g * kpg + k, oy, ox);
+                            acc.data[idx] = group_out.get(k, oy, ox);
+                        }
+                    }
+                }
+            }
+            Ok(requantize_relu(&acc, shift, ActLayout::NCHWc { c }))
+        }
+        (LayerConfig::ChannelShuffle { channels, groups, .. }, _) => {
+            // ShuffleNet-style transpose: channel g·n+i -> i·groups+g.
+            let n = channels / groups;
+            let mut out = ActTensor::zeros(act.shape, act.layout);
+            for g in 0..*groups {
+                for i in 0..n {
+                    let src = g * n + i;
+                    let dst = i * groups + g;
+                    for y in 0..act.shape.h {
+                        for x in 0..act.shape.w {
+                            out.set(dst, y, x, act.get(src, y, x));
+                        }
+                    }
+                }
+            }
+            Ok(out)
+        }
+        (LayerConfig::Pool(p), _) => Ok(pool_functional(p, act)),
+        (LayerConfig::GlobalAvgPool { .. }, _) => Ok(gap_functional(act)),
+        (LayerConfig::Relu { .. }, _) => Ok(act.clone()), // fused into requantize
+        (l, k) => anyhow::bail!("functional path does not support {:?} with {:?}", l.name(), k.name()),
+    }
+}
+
+/// Zero-pad spatially and in channels, preserving NCHWc.
+pub fn pad_act(act: &ActTensor, pad: usize, target_ch: usize, c: usize) -> ActTensor {
+    let spatial = act.pad_spatial(pad);
+    if spatial.shape.channels == target_ch {
+        return spatial;
+    }
+    assert!(target_ch > spatial.shape.channels);
+    let mut out = ActTensor::zeros(
+        ActShape::new(target_ch, spatial.shape.h, spatial.shape.w),
+        ActLayout::NCHWc { c },
+    );
+    for ch in 0..spatial.shape.channels {
+        for y in 0..spatial.shape.h {
+            for x in 0..spatial.shape.w {
+                out.set(ch, y, x, spatial.get(ch, y, x));
+            }
+        }
+    }
+    out
+}
+
+fn pool_functional(p: &crate::layer::PoolConfig, act: &ActTensor) -> ActTensor {
+    // Input may need spatial padding to match the pool's padded dims.
+    let pad = (p.ih - act.shape.h) / 2;
+    let a = act.pad_spatial(pad);
+    let mut out = ActTensor::zeros(
+        ActShape::new(p.channels, p.oh(), p.ow()),
+        a.layout,
+    );
+    for ch in 0..p.channels {
+        for oy in 0..p.oh() {
+            for ox in 0..p.ow() {
+                let mut best: i32 = if p.kind == PoolKind::Max { i32::MIN } else { 0 };
+                for fy in 0..p.fh {
+                    for fx in 0..p.fw {
+                        let v = a.get(ch, oy * p.stride + fy, ox * p.stride + fx) as i32;
+                        match p.kind {
+                            PoolKind::Max => best = best.max(v),
+                            PoolKind::Avg => best += v,
+                        }
+                    }
+                }
+                let v = match p.kind {
+                    PoolKind::Max => best,
+                    PoolKind::Avg => best / (p.fh * p.fw) as i32,
+                };
+                out.set(ch, oy, ox, v.clamp(-128, 127) as i8);
+            }
+        }
+    }
+    out
+}
+
+fn gap_functional(act: &ActTensor) -> ActTensor {
+    let mut out = ActTensor::zeros(ActShape::new(act.shape.channels, 1, 1), act.layout);
+    let n = (act.shape.h * act.shape.w) as i32;
+    for ch in 0..act.shape.channels {
+        let mut sum = 0i32;
+        for y in 0..act.shape.h {
+            for x in 0..act.shape.w {
+                sum += act.get(ch, y, x) as i32;
+            }
+        }
+        out.set(ch, 0, 0, (sum / n).clamp(-128, 127) as i8);
+    }
+    out
+}
+
+/// Multithreaded-latency model (paper Fig 8 sweeps 1/2/4 threads): conv
+/// layers parallelize across output channels (independent k-blocks);
+/// per-layer latency divides by the thread count that the channel count
+/// supports, plus a per-layer fork/join overhead.
+pub fn threaded_cycles(plan: &NetworkPlan, threads: usize) -> f64 {
+    const FORK_JOIN_CYCLES: f64 = 3000.0;
+    plan.layers
+        .iter()
+        .map(|lp| {
+            let par = match &lp.layer {
+                LayerConfig::Conv(c) => threads.min(c.out_channels).max(1),
+                LayerConfig::Dense(_) => threads,
+                _ => 1,
+            };
+            lp.stats.cycles / par as f64 + if par > 1 { FORK_JOIN_CYCLES } else { 0.0 }
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_channels_rounds_up() {
+        assert_eq!(padded_channels(3, 16), 16);
+        assert_eq!(padded_channels(16, 16), 16);
+        assert_eq!(padded_channels(17, 16), 32);
+    }
+
+    #[test]
+    fn pad_act_preserves_values_and_extends_channels() {
+        let t = ActTensor::random(ActShape::new(4, 3, 3), ActLayout::NCHWc { c: 4 }, 9);
+        let p = pad_act(&t, 1, 16, 16);
+        assert_eq!(p.shape.channels, 16);
+        assert_eq!(p.shape.h, 5);
+        assert_eq!(p.get(2, 1, 1), t.get(2, 0, 0));
+        assert_eq!(p.get(10, 2, 2), 0); // padded channel
+    }
+}

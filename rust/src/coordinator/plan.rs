@@ -1,0 +1,294 @@
+//! Network planning: choose a dataflow and generate a kernel for every
+//! layer, with a program cache (VGG repeats identical layer shapes) and
+//! modeled per-layer latency.
+
+use std::collections::HashMap;
+
+use crate::dataflow::DataflowSpec;
+use crate::explore::{self, ExploreConfig};
+use crate::isa::Program;
+use crate::layer::{ConvConfig, ConvKind, LayerConfig};
+use crate::machine::{MachineConfig, PerfModel, PerfStats};
+use crate::nets::Network;
+use crate::tensor::WeightTensor;
+
+use super::padded_conv;
+
+/// How a layer executes.
+#[derive(Clone, Debug)]
+pub enum PlanKind {
+    /// A generated SIMD kernel (simple conv / dense-as-conv).
+    Generated { spec: DataflowSpec, prog: Program, machine: MachineConfig, pad: usize },
+    /// Depthwise kernel (per-block schedule).
+    DepthwiseKernel { prog: Program, machine: MachineConfig, pad: usize },
+    /// Grouped conv lowered to `groups` simple-conv kernel passes.
+    GroupedKernel { spec: DataflowSpec, prog: Program, machine: MachineConfig, pad: usize, groups: usize },
+    /// Scalar auxiliary pass (pool / gap / shuffle / relu).
+    ScalarPass,
+}
+
+impl PlanKind {
+    pub fn name(&self) -> String {
+        match self {
+            // The program name reflects the actual winner (which may be a
+            // §VII-a jammed variant rather than the seed spec).
+            PlanKind::Generated { prog, .. } => {
+                prog.name.split("-(").next().unwrap_or(&prog.name).to_string()
+            }
+            PlanKind::DepthwiseKernel { .. } => "DW-OS".into(),
+            PlanKind::GroupedKernel { spec, groups, .. } => format!("{}×g{groups}", spec.name()),
+            PlanKind::ScalarPass => "scalar".into(),
+        }
+    }
+}
+
+/// One planned layer.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub layer: LayerConfig,
+    pub kind: PlanKind,
+    pub stats: PerfStats,
+    /// Weights bound for functional execution (None for model-only plans).
+    pub weights: Option<WeightTensor>,
+}
+
+/// A fully planned network.
+#[derive(Clone, Debug)]
+pub struct NetworkPlan {
+    pub name: String,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl NetworkPlan {
+    pub fn total_cycles(&self) -> f64 {
+        self.layers.iter().map(|l| l.stats.cycles).sum()
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.total_cycles() / super::CLOCK_HZ
+    }
+}
+
+/// Planner options.
+#[derive(Clone, Debug)]
+pub struct PlannerOptions {
+    pub machine: MachineConfig,
+    /// Explore dataflows per layer (slow) vs apply the paper's Algorithm 8
+    /// directly (the validated winner).
+    pub explore_each_layer: bool,
+    /// Invocations simulated exactly per layer before extrapolating.
+    pub perf_sample: usize,
+}
+
+impl Default for PlannerOptions {
+    fn default() -> Self {
+        PlannerOptions {
+            machine: MachineConfig::neon(128),
+            explore_each_layer: false,
+            perf_sample: 2,
+        }
+    }
+}
+
+/// The planner: caches generated programs by (config, spec) key.
+pub struct Planner {
+    pub opts: PlannerOptions,
+    cache: HashMap<String, (Program, PerfStats)>,
+}
+
+impl Planner {
+    pub fn new(opts: PlannerOptions) -> Planner {
+        Planner { opts, cache: HashMap::new() }
+    }
+
+    /// Plan a simple conv layer (also used for dense-as-1×1-conv).
+    ///
+    /// Candidates: the Algorithm-8 extended-OS kernel and its
+    /// unroll-and-jam variants (§VII-a: "further jamming can be applied
+    /// on top of our technique") — the cheapest modeled one wins.
+    fn plan_simple_conv(&mut self, cfg: &ConvConfig, pad: usize) -> LayerPlan {
+        let machine = self.opts.machine;
+        let padded = padded_conv(cfg, &machine);
+        let spec = if self.opts.explore_each_layer {
+            explore::explore(&padded, &machine, &ExploreConfig::default())
+                .best()
+                .spec
+                .clone()
+        } else {
+            DataflowSpec::optimized_os(&machine, padded.r_size())
+        };
+        let key = format!("{:?}-{}", padded, spec.name());
+        let sample = self.opts.perf_sample;
+        let (prog, stats) = self
+            .cache
+            .entry(key)
+            .or_insert_with(|| {
+                let schedule = crate::codegen::schedule(&padded, &machine);
+                let mut best: Option<(crate::isa::Program, PerfStats)> = None;
+                let mut consider = |prog: crate::isa::Program| {
+                    let mut pm = PerfModel::neoverse_n1();
+                    let stats = pm.estimate_layer(&prog, &schedule, sample);
+                    if best.as_ref().map(|(_, b)| stats.cycles < b.cycles).unwrap_or(true) {
+                        best = Some((prog, stats));
+                    }
+                };
+                consider(crate::codegen::generate(&padded, &spec, &machine));
+                let r = padded.r_size();
+                for jam in [2usize, 4] {
+                    if 2 + 2 * jam + r.min(machine.aux_vars_available()) <= machine.vars_available() {
+                        consider(crate::codegen::os_jam::gen_os_jam(
+                            &padded,
+                            r.min(machine.vars_available() - 2 - 2 * jam),
+                            jam,
+                            &machine,
+                        ));
+                    }
+                }
+                best.unwrap()
+            })
+            .clone();
+        LayerPlan {
+            layer: LayerConfig::Conv(padded),
+            kind: PlanKind::Generated { spec, prog, machine, pad },
+            stats,
+            weights: None,
+        }
+    }
+
+    fn plan_depthwise(&mut self, cfg: &ConvConfig, pad: usize) -> LayerPlan {
+        let machine = self.opts.machine;
+        let c = machine.c_int8();
+        let mut padded = *cfg;
+        padded.in_channels = super::padded_channels(cfg.in_channels, c);
+        padded.out_channels = padded.in_channels;
+        padded.groups = padded.in_channels;
+        let prog = crate::codegen::depthwise::gen_depthwise(&padded, &machine, true);
+        let schedule = crate::codegen::depthwise::schedule_depthwise(&padded, &machine);
+        let mut pm = PerfModel::neoverse_n1();
+        let stats = pm.estimate_layer(&prog, &schedule, self.opts.perf_sample);
+        LayerPlan {
+            layer: LayerConfig::Conv(padded),
+            kind: PlanKind::DepthwiseKernel { prog, machine, pad },
+            stats,
+            weights: None,
+        }
+    }
+
+    fn plan_grouped(&mut self, cfg: &ConvConfig, pad: usize) -> LayerPlan {
+        let machine = self.opts.machine;
+        let view = padded_conv(&cfg.group_view(), &machine);
+        let spec = DataflowSpec::optimized_os(&machine, view.r_size());
+        let prog = crate::codegen::generate(&view, &spec, &machine);
+        let schedule = crate::codegen::schedule(&view, &machine);
+        let mut pm = PerfModel::neoverse_n1();
+        let one = pm.estimate_layer(&prog, &schedule, self.opts.perf_sample);
+        let stats = one.scaled(cfg.groups as f64);
+        LayerPlan {
+            layer: LayerConfig::Conv(*cfg),
+            kind: PlanKind::GroupedKernel { spec, prog, machine, pad, groups: cfg.groups },
+            stats,
+            weights: None,
+        }
+    }
+
+    fn plan_scalar(&self, layer: &LayerConfig) -> LayerPlan {
+        // Cheap per-element pass: ~1 cycle per element read.
+        let cycles = match layer {
+            LayerConfig::Pool(p) => p.reads() as f64 * 1.2,
+            LayerConfig::GlobalAvgPool { channels, h, w } => (channels * h * w) as f64 * 1.0,
+            LayerConfig::ChannelShuffle { channels, h, w, .. } => (channels * h * w) as f64 * 2.0,
+            LayerConfig::Relu { channels, h, w } => (channels * h * w) as f64 * 0.5,
+            _ => 0.0,
+        };
+        LayerPlan {
+            layer: layer.clone(),
+            kind: PlanKind::ScalarPass,
+            stats: PerfStats { cycles, ..Default::default() },
+            weights: None,
+        }
+    }
+
+    /// Plan one layer. `pad` is the spatial padding the coordinator must
+    /// materialize before the kernel runs (configs store padded dims, so
+    /// this is derived by the caller from shape bookkeeping; network
+    /// plans use the stored configs directly with pad deduced per layer).
+    pub fn plan_layer(&mut self, layer: &LayerConfig, pad: usize) -> LayerPlan {
+        match layer {
+            LayerConfig::Conv(cfg) => match cfg.kind {
+                ConvKind::Simple => self.plan_simple_conv(cfg, pad),
+                ConvKind::Depthwise => self.plan_depthwise(cfg, pad),
+                ConvKind::Grouped => self.plan_grouped(cfg, pad),
+            },
+            LayerConfig::Dense(d) => self.plan_simple_conv(&d.as_conv(), 0),
+            other => self.plan_scalar(other),
+        }
+    }
+}
+
+/// Plan a whole network. Padding per conv layer is inferred from the
+/// difference between the stored (padded) dims and the previous layer's
+/// output shape.
+pub fn plan_network(net: &Network, opts: PlannerOptions) -> NetworkPlan {
+    let mut planner = Planner::new(opts);
+    let mut layers = Vec::with_capacity(net.layers.len());
+    let mut prev_hw: Option<(usize, usize)> = None;
+    for layer in &net.layers {
+        let pad = match (layer, prev_hw) {
+            (LayerConfig::Conv(c), Some((h, _))) => (c.ih.saturating_sub(h)) / 2,
+            (LayerConfig::Conv(c), None) => (c.ih.saturating_sub(224)) / 2, // stem
+            _ => 0,
+        };
+        layers.push(planner.plan_layer(layer, pad));
+        let (_, h, w) = layer.out_shape();
+        prev_hw = Some((h, w));
+    }
+    NetworkPlan { name: net.name.clone(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    #[test]
+    fn plans_resnet18_with_positive_latency() {
+        let net = nets::resnet18();
+        let plan = plan_network(&net, PlannerOptions::default());
+        assert_eq!(plan.layers.len(), net.layers.len());
+        assert!(plan.total_cycles() > 1e6);
+        // Every conv got a generated kernel.
+        for lp in &plan.layers {
+            if lp.layer.is_conv() {
+                assert!(!matches!(lp.kind, PlanKind::ScalarPass));
+            }
+        }
+    }
+
+    #[test]
+    fn program_cache_dedupes_repeated_layers() {
+        // VGG-16 has repeated conv shapes; the cache should make the
+        // number of distinct programs smaller than the conv count.
+        let net = nets::vgg16();
+        let mut planner = Planner::new(PlannerOptions::default());
+        let mut count = 0;
+        for l in &net.layers {
+            if l.is_conv() {
+                planner.plan_layer(l, 1);
+                count += 1;
+            }
+        }
+        assert!(planner.cache.len() < count, "{} !< {count}", planner.cache.len());
+    }
+
+    #[test]
+    fn depthwise_layers_get_depthwise_kernels() {
+        let net = nets::mobilenet_v1();
+        let plan = plan_network(&net, PlannerOptions::default());
+        let dw = plan
+            .layers
+            .iter()
+            .filter(|lp| matches!(lp.kind, PlanKind::DepthwiseKernel { .. }))
+            .count();
+        assert_eq!(dw, 13);
+    }
+}

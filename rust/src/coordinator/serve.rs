@@ -1,0 +1,119 @@
+//! A minimal threaded serving loop: requests enter a channel, a worker
+//! pool executes the planned network functionally, responses flow back
+//! with latency stamps. This is the L3 "request loop" of the
+//! architecture (std::thread + mpsc — tokio is not available offline,
+//! and a blocking pool is the right tool for a CPU-bound inference
+//! server anyway).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::tensor::ActTensor;
+
+use super::metrics::SessionMetrics;
+use super::plan::NetworkPlan;
+use super::run_network_functional;
+
+/// A request: input tensor + response channel.
+struct Request {
+    input: ActTensor,
+    reply: mpsc::Sender<crate::Result<ActTensor>>,
+}
+
+/// Threaded inference server over a functional plan.
+pub struct Server {
+    tx: Option<mpsc::Sender<Request>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Mutex<SessionMetrics>>,
+}
+
+impl Server {
+    /// Spawn `workers` threads sharing one request queue.
+    pub fn start(plan: NetworkPlan, workers: usize, requant_shift: u32) -> Server {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Mutex::new(SessionMetrics::default()));
+        let plan = Arc::new(plan);
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            let plan = Arc::clone(&plan);
+            handles.push(std::thread::spawn(move || loop {
+                let req = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok(req) = req else { break };
+                let t0 = Instant::now();
+                let out = run_network_functional(&plan, &req.input, requant_shift);
+                metrics.lock().unwrap().record(t0.elapsed().as_secs_f64());
+                let _ = req.reply.send(out);
+            }));
+        }
+        Server { tx: Some(tx), workers: handles, metrics }
+    }
+
+    /// Submit a request; returns the response receiver.
+    pub fn submit(&self, input: ActTensor) -> mpsc::Receiver<crate::Result<ActTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server already shut down")
+            .send(Request { input, reply })
+            .expect("worker pool hung up");
+        rx
+    }
+
+    /// Drain and join.
+    pub fn shutdown(mut self) -> SessionMetrics {
+        drop(self.tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        let m = self.metrics.lock().unwrap();
+        m.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::{Planner, PlannerOptions, NetworkPlan};
+    use crate::layer::{ConvConfig, LayerConfig};
+    use crate::machine::MachineConfig;
+    use crate::tensor::{ActLayout, ActShape, WeightLayout, WeightShape, WeightTensor};
+
+    fn tiny_plan() -> NetworkPlan {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 16, 16);
+        let mut planner = Planner::new(PlannerOptions { machine: m, ..Default::default() });
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
+        lp.weights = Some(WeightTensor::random(
+            WeightShape::new(16, 16, 3, 3),
+            WeightLayout::CKRSc { c: 16 },
+            5,
+        ));
+        NetworkPlan { name: "tiny".into(), layers: vec![lp] }
+    }
+
+    #[test]
+    fn serves_requests_and_records_metrics() {
+        let server = Server::start(tiny_plan(), 2, 8);
+        let mut rxs = Vec::new();
+        for seed in 0..6 {
+            let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed);
+            rxs.push(server.submit(input));
+        }
+        for rx in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out.shape.channels, 16);
+            assert_eq!(out.shape.h, 4);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.requests, 6);
+        assert!(metrics.summary().mean > 0.0);
+    }
+}

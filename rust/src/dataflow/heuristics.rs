@@ -1,0 +1,243 @@
+//! Table I heuristics: closed-form memory-operation reductions per
+//! additional auxiliary vector variable, and the Observations 1–5 the
+//! paper derives from them.
+//!
+//! The "gain" of allocating one more vector variable to an auxiliary data
+//! type is the reduction in 128-bit-granule memory reads/writes per
+//! kernel invocation (one input-channel-block × output-channel pair).
+//! These are *heuristics* — "simplified formulations that are close
+//! approximations" (§IV-A4) — validated against the simulator's exact
+//! counters by the `table1` experiment.
+
+use crate::layer::ConvConfig;
+
+use super::{Anchor, AuxKind};
+
+/// Predicted reduction in memory operations for allocating the
+/// `var_index`-th (1-based) auxiliary vector variable of `aux` kind under
+/// `anchor`, for the given layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Gain {
+    pub reads_saved: f64,
+    pub writes_saved: f64,
+}
+
+impl Gain {
+    pub fn total(&self) -> f64 {
+        self.reads_saved + self.writes_saved
+    }
+}
+
+/// Table I, one row lookup. `var_index` is 1-based (the k-th variable
+/// allocated to this aux kind). Returns `None` when the table assigns no
+/// further gain (allocation beyond the listed variable ranges).
+pub fn aux_gain(cfg: &ConvConfig, anchor: Anchor, aux: AuxKind, var_index: usize) -> Option<Gain> {
+    let h = cfg.h_size() as f64;
+    let e = cfg.e_size() as f64;
+    let r = cfg.r_size() as f64;
+    let s = cfg.stride as f64;
+    let fw = cfg.fw as f64;
+    let fh = cfg.fh as f64;
+    let ih = cfg.ih as f64;
+    match (anchor, aux) {
+        // --- Output-anchored: both input and weight aux variables save E
+        // reads each (every output revisits all R taps), up to R variables.
+        (Anchor::Output, AuxKind::Input) | (Anchor::Output, AuxKind::Weight) => {
+            if var_index <= cfg.r_size() {
+                Some(Gain { reads_saved: e, writes_saved: 0.0 })
+            } else {
+                None
+            }
+        }
+        (Anchor::Output, AuxKind::Output) => None, // anchor's own type
+
+        // --- Weight-anchored.
+        (Anchor::Weight, AuxKind::Input) => {
+            // Each stashed input is revisited once per weight: R reads
+            // saved (≈ H/s²), up to H variables.
+            if var_index <= cfg.h_size() {
+                Some(Gain { reads_saved: r, writes_saved: 0.0 })
+            } else {
+                None
+            }
+        }
+        (Anchor::Weight, AuxKind::Output) => {
+            // Stashed outputs skip a scalar RMW per weight: R reads and
+            // R writes saved, up to E variables.
+            if var_index <= cfg.e_size() {
+                Some(Gain { reads_saved: r, writes_saved: r })
+            } else {
+                None
+            }
+        }
+        (Anchor::Weight, AuxKind::Weight) => None,
+
+        // --- Input-anchored.
+        (Anchor::Input, AuxKind::Weight) => {
+            if cfg.stride == 1 {
+                // All R weights reused between successive inputs: each
+                // stashed weight saves H reads, up to R variables.
+                if var_index <= cfg.r_size() {
+                    Some(Gain { reads_saved: h, writes_saved: 0.0 })
+                } else {
+                    None
+                }
+            } else {
+                // Sparse reuse (Fig 5): first fw variables save H/s each;
+                // the next fw save H/((fw-s)·s); nothing beyond.
+                if var_index <= cfg.fw {
+                    Some(Gain { reads_saved: h / s, writes_saved: 0.0 })
+                } else if var_index <= 2 * cfg.fw && fw > s {
+                    Some(Gain { reads_saved: h / ((fw - s) * s), writes_saved: 0.0 })
+                } else {
+                    None
+                }
+            }
+        }
+        (Anchor::Input, AuxKind::Output) => {
+            if cfg.stride == 1 {
+                // Mirrors OS input-stashing: H reads + H writes per
+                // variable, up to R variables.
+                if var_index <= cfg.r_size() {
+                    Some(Gain { reads_saved: h, writes_saved: h })
+                } else {
+                    None
+                }
+            } else {
+                // Nonlinear regime (Table I, bottom rows).
+                let v1 = h + h / fw;
+                match var_index {
+                    1 => Some(Gain { reads_saved: v1, writes_saved: v1 }),
+                    2 if fw > s => {
+                        let v2 = ih / (fw - s) * v1 + ih / s * (fw - s - 1.0);
+                        Some(Gain { reads_saved: v2, writes_saved: v2 })
+                    }
+                    i if i >= 3 && (i as f64) <= 3.0 + fw - s && fh > s && fw > s => {
+                        let v = (fh - s) * (fw - s) * h / r;
+                        Some(Gain { reads_saved: v, writes_saved: v })
+                    }
+                    _ => None,
+                }
+            }
+        }
+        (Anchor::Input, AuxKind::Input) => None,
+    }
+}
+
+/// Total predicted gain for allocating `count` variables of `aux`.
+pub fn total_gain(cfg: &ConvConfig, anchor: Anchor, aux: AuxKind, count: usize) -> Gain {
+    let mut g = Gain::default();
+    for i in 1..=count {
+        match aux_gain(cfg, anchor, aux, i) {
+            Some(gi) => {
+                g.reads_saved += gi.reads_saved;
+                g.writes_saved += gi.writes_saved;
+            }
+            None => break,
+        }
+    }
+    g
+}
+
+/// Observations 1–5 (§IV-A4) as predicates over the heuristic table, so
+/// tests can verify the formulas actually imply the paper's observations.
+pub mod observations {
+    use super::*;
+
+    /// Observation 1: weight-anchored dataflows gain the least from
+    /// auxiliary stationarities.
+    pub fn obs1_ws_gains_least(cfg: &ConvConfig, vars: usize) -> bool {
+        let ws = total_gain(cfg, Anchor::Weight, AuxKind::Output, vars).total();
+        let os = total_gain(cfg, Anchor::Output, AuxKind::Weight, vars).total();
+        let is_ = total_gain(cfg, Anchor::Input, AuxKind::Output, vars).total();
+        ws <= os && ws <= is_
+    }
+
+    /// Observation 3: under OS, input-priority vs weight-priority differ
+    /// by nothing in the heuristic (both save E per variable).
+    pub fn obs3_os_priorities_equal(cfg: &ConvConfig, vars: usize) -> bool {
+        let w = total_gain(cfg, Anchor::Output, AuxKind::Weight, vars).total();
+        let i = total_gain(cfg, Anchor::Output, AuxKind::Input, vars).total();
+        (w - i).abs() < 1e-9
+    }
+
+    /// Observation 4: under IS, output-priority beats weight-priority.
+    pub fn obs4_is_output_first(cfg: &ConvConfig, vars: usize) -> bool {
+        let o = total_gain(cfg, Anchor::Input, AuxKind::Output, vars).total();
+        let w = total_gain(cfg, Anchor::Input, AuxKind::Weight, vars).total();
+        o >= w
+    }
+
+    /// Observation 5: under WS, output-priority beats input-priority.
+    pub fn obs5_ws_output_first(cfg: &ConvConfig, vars: usize) -> bool {
+        let o = total_gain(cfg, Anchor::Weight, AuxKind::Output, vars).total();
+        let i = total_gain(cfg, Anchor::Weight, AuxKind::Input, vars).total();
+        o >= i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_s1() -> ConvConfig {
+        ConvConfig::simple(56, 56, 3, 3, 1, 16, 128)
+    }
+
+    fn cfg_s2() -> ConvConfig {
+        ConvConfig::simple(56, 56, 3, 3, 2, 16, 128)
+    }
+
+    #[test]
+    fn os_gain_is_e_per_var() {
+        let cfg = cfg_s1();
+        let g = aux_gain(&cfg, Anchor::Output, AuxKind::Weight, 1).unwrap();
+        assert_eq!(g.reads_saved, cfg.e_size() as f64);
+        assert_eq!(g.writes_saved, 0.0);
+        // Saturates at R variables.
+        assert!(aux_gain(&cfg, Anchor::Output, AuxKind::Weight, 9).is_some());
+        assert!(aux_gain(&cfg, Anchor::Output, AuxKind::Weight, 10).is_none());
+    }
+
+    #[test]
+    fn ws_output_saves_reads_and_writes() {
+        let cfg = cfg_s1();
+        let g = aux_gain(&cfg, Anchor::Weight, AuxKind::Output, 1).unwrap();
+        assert_eq!(g.reads_saved, cfg.r_size() as f64);
+        assert_eq!(g.writes_saved, cfg.r_size() as f64);
+    }
+
+    #[test]
+    fn is_weight_gain_shrinks_with_stride() {
+        let g1 = aux_gain(&cfg_s1(), Anchor::Input, AuxKind::Weight, 1).unwrap();
+        let g2 = aux_gain(&cfg_s2(), Anchor::Input, AuxKind::Weight, 1).unwrap();
+        assert!(g1.reads_saved > g2.reads_saved);
+    }
+
+    #[test]
+    fn observations_hold_on_paper_configs() {
+        for (f, i, nf) in [(3, 56, 128), (4, 56, 256), (5, 112, 512), (3, 112, 128)] {
+            for s in [1, 2] {
+                let cfg = ConvConfig::simple(i, i, f, f, s, 16, nf);
+                assert!(observations::obs1_ws_gains_least(&cfg, 4), "obs1 {f} {i} {nf} s{s}");
+                assert!(observations::obs3_os_priorities_equal(&cfg, 4));
+                assert!(observations::obs4_is_output_first(&cfg, 2));
+                assert!(observations::obs5_ws_output_first(&cfg, 4));
+            }
+        }
+    }
+
+    #[test]
+    fn total_gain_accumulates_and_saturates() {
+        let cfg = cfg_s1(); // R = 9
+        let g = total_gain(&cfg, Anchor::Output, AuxKind::Weight, 20);
+        assert_eq!(g.reads_saved, (cfg.e_size() * 9) as f64);
+    }
+
+    #[test]
+    fn anchor_self_aux_has_no_gain() {
+        assert!(aux_gain(&cfg_s1(), Anchor::Output, AuxKind::Output, 1).is_none());
+        assert!(aux_gain(&cfg_s1(), Anchor::Input, AuxKind::Input, 1).is_none());
+        assert!(aux_gain(&cfg_s1(), Anchor::Weight, AuxKind::Weight, 1).is_none());
+    }
+}

@@ -1,0 +1,191 @@
+//! Dataflow taxonomy (paper §II–III).
+//!
+//! A dataflow is described by one **anchoring stationarity** — which data
+//! type's iteration order drives the loop nest (IS / WS / OS, Algorithms
+//! 1–3) — plus zero or more **auxiliary stationarities**: other data types
+//! stashed in the otherwise-idle vector registers (§III). The basic
+//! dataflows use exactly three vector variables (input/weight/output);
+//! extended dataflows allocate the remaining `vars_available() - 3`
+//! variables to auxiliary data.
+
+pub mod heuristics;
+pub mod unroll;
+
+use crate::machine::MachineConfig;
+
+/// Which data type anchors the loop nest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Anchor {
+    Input,
+    Weight,
+    Output,
+}
+
+impl Anchor {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Anchor::Input => "IS",
+            Anchor::Weight => "WS",
+            Anchor::Output => "OS",
+        }
+    }
+
+    pub fn all() -> [Anchor; 3] {
+        [Anchor::Input, Anchor::Weight, Anchor::Output]
+    }
+}
+
+/// A data type available for auxiliary stashing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AuxKind {
+    Input,
+    Weight,
+    Output,
+}
+
+impl AuxKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AuxKind::Input => "in",
+            AuxKind::Weight => "wgt",
+            AuxKind::Output => "out",
+        }
+    }
+}
+
+/// A complete (extended) dataflow specification: the anchoring
+/// stationarity plus an ordered list of auxiliary allocations, each a
+/// (data type, #vector variables) pair. Order encodes priority — the
+/// paper's Findings 3–5 compare priority choices.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct DataflowSpec {
+    pub anchor: Anchor,
+    pub aux: Vec<(AuxKind, usize)>,
+}
+
+impl DataflowSpec {
+    /// The basic (anchoring-only) dataflow.
+    pub fn basic(anchor: Anchor) -> DataflowSpec {
+        DataflowSpec { anchor, aux: Vec::new() }
+    }
+
+    /// Extended dataflow with explicit aux allocation.
+    pub fn extended(anchor: Anchor, aux: Vec<(AuxKind, usize)>) -> DataflowSpec {
+        DataflowSpec { anchor, aux }
+    }
+
+    /// The paper's winner (Algorithm 8): OS anchoring, auxiliary weight
+    /// stationarity first, then inputs with whatever variables remain.
+    /// `r` is the filter tap count (weights saturate at R variables).
+    pub fn optimized_os(machine: &MachineConfig, r: usize) -> DataflowSpec {
+        let avail = machine.aux_vars_available();
+        let wgt = avail.min(r);
+        let inp = (avail - wgt).min(r.saturating_sub(1));
+        let mut aux = vec![(AuxKind::Weight, wgt)];
+        if inp > 0 {
+            aux.push((AuxKind::Input, inp));
+        }
+        DataflowSpec { anchor: Anchor::Output, aux }
+    }
+
+    /// Total auxiliary vector variables allocated.
+    pub fn aux_vars(&self) -> usize {
+        self.aux.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Variables of a given aux kind.
+    pub fn aux_of(&self, kind: AuxKind) -> usize {
+        self.aux
+            .iter()
+            .filter(|(k, _)| *k == kind)
+            .map(|(_, n)| n)
+            .sum()
+    }
+
+    /// Does the allocation fit the machine's register file (3 anchoring
+    /// variables + aux)?
+    pub fn fits(&self, machine: &MachineConfig) -> bool {
+        3 + self.aux_vars() <= machine.vars_available()
+    }
+
+    /// Auxiliary stashing of the anchor's own data type is meaningless
+    /// (the anchor already owns a live variable); the explorer filters
+    /// such specs out.
+    pub fn is_sensible(&self) -> bool {
+        !self.aux.iter().any(|(k, n)| {
+            *n > 0
+                && matches!(
+                    (self.anchor, k),
+                    (Anchor::Input, AuxKind::Input)
+                        | (Anchor::Weight, AuxKind::Weight)
+                        | (Anchor::Output, AuxKind::Output)
+                )
+        })
+    }
+
+    /// Display name, e.g. "OS+wgt5+in2" or "IS" (basic).
+    pub fn name(&self) -> String {
+        let mut s = self.anchor.name().to_string();
+        for (k, n) in &self.aux {
+            if *n > 0 {
+                s.push('+');
+                s.push_str(k.name());
+                s.push_str(&n.to_string());
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_has_no_aux() {
+        let d = DataflowSpec::basic(Anchor::Output);
+        assert_eq!(d.aux_vars(), 0);
+        assert_eq!(d.name(), "OS");
+    }
+
+    #[test]
+    fn optimized_os_fills_registers() {
+        let m = MachineConfig::neon(128); // 32 vars, 29 aux
+        let d = DataflowSpec::optimized_os(&m, 9);
+        assert_eq!(d.anchor, Anchor::Output);
+        assert_eq!(d.aux_of(AuxKind::Weight), 9); // saturates at R
+        assert_eq!(d.aux_of(AuxKind::Input), 8); // R-1
+        assert!(d.fits(&m));
+        assert!(d.is_sensible());
+    }
+
+    #[test]
+    fn optimized_os_512_is_tight() {
+        let m = MachineConfig::neon(512); // 8 vars, 5 aux
+        let d = DataflowSpec::optimized_os(&m, 9);
+        assert_eq!(d.aux_vars(), 5);
+        assert!(d.fits(&m));
+    }
+
+    #[test]
+    fn senseless_self_stash_detected() {
+        let d = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Output, 1)]);
+        assert!(!d.is_sensible());
+    }
+
+    #[test]
+    fn fits_respects_register_file() {
+        let m = MachineConfig::neon(512); // 8 vars
+        let d = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 6)]);
+        assert!(!d.fits(&m)); // 3 + 6 > 8
+    }
+
+    #[test]
+    fn name_includes_priorities_in_order() {
+        let d = DataflowSpec::extended(
+            Anchor::Input,
+            vec![(AuxKind::Output, 2), (AuxKind::Weight, 1)],
+        );
+        assert_eq!(d.name(), "IS+out2+wgt1");
+    }
+}

@@ -1,0 +1,103 @@
+//! Secondary unrolling (paper Algorithm 4, Fig 6).
+//!
+//! When inputs are stashed under output-anchored dataflows (or outputs
+//! under input-anchored dataflows, s = 1), the *mapping* from window
+//! position to vector variable shifts by `stride` every time the anchor
+//! advances. Using a fixed mapping would force register-to-register
+//! transfers (`VMov`) to rotate the stash; the paper instead unrolls the
+//! anchor loop by the LCM of all per-row variable counts that exceed the
+//! stride and rotates the **allocation sequence** per unrolled iteration,
+//! so the data stays put and only the names change.
+//!
+//! Our code generator emits fully-unrolled kernels, so the rotation falls
+//! out naturally from its position→variable map; this module provides the
+//! explicit sequences for (a) the `codegen_dump` example, which shows the
+//! paper's allocation tables, (b) the naive-rotation ablation (VMov-based)
+//! and (c) unit validation of the generator's behaviour against Alg. 4.
+
+/// Greatest common divisor.
+pub fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 { a } else { gcd(b, a % b) }
+}
+
+/// Least common multiple (lcm(0, x) = x by convention here).
+pub fn lcm(a: usize, b: usize) -> usize {
+    if a == 0 || b == 0 {
+        a.max(b)
+    } else {
+        a / gcd(a, b) * b
+    }
+}
+
+/// The secondary unroll factor: LCM of all per-row stash-variable counts
+/// strictly greater than the stride (Alg. 4). Rows with counts ≤ stride
+/// keep a fixed sequence and do not constrain the factor.
+pub fn secondary_unroll_factor(vars_per_row: &[usize], stride: usize) -> usize {
+    let mut factor = 1;
+    for &n in vars_per_row {
+        if n > stride {
+            factor = lcm(factor, n);
+        }
+    }
+    factor
+}
+
+/// Allocation sequences for one row holding `count` stash variables:
+/// element `[it][slot]` is the variable used for window slot `slot` at
+/// unrolled iteration `it`. Each iteration rotates left by `stride` when
+/// `count > stride`, else stays fixed (Alg. 4).
+pub fn rotation_sequence(count: usize, stride: usize, iterations: usize) -> Vec<Vec<usize>> {
+    let base: Vec<usize> = (0..count).collect();
+    let mut out = Vec::with_capacity(iterations);
+    let mut cur = base;
+    for _ in 0..iterations {
+        out.push(cur.clone());
+        if count > stride {
+            cur.rotate_left(stride % count.max(1));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_lcm_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(0, 5), 5);
+    }
+
+    #[test]
+    fn unroll_factor_ignores_small_rows() {
+        // rows with 3, 2, 1 variables; stride 1 → lcm(3, 2) = 6
+        assert_eq!(secondary_unroll_factor(&[3, 2, 1], 1), 6);
+        // stride 2 → only the 3-variable row counts
+        assert_eq!(secondary_unroll_factor(&[3, 2, 1], 2), 3);
+        // stride ≥ all counts → no secondary unrolling needed
+        assert_eq!(secondary_unroll_factor(&[3, 2, 1], 3), 1);
+    }
+
+    #[test]
+    fn rotation_cycles_after_count_iterations() {
+        let seq = rotation_sequence(3, 1, 4);
+        assert_eq!(seq[0], vec![0, 1, 2]);
+        assert_eq!(seq[1], vec![1, 2, 0]);
+        assert_eq!(seq[2], vec![2, 0, 1]);
+        assert_eq!(seq[3], vec![0, 1, 2]); // full cycle
+    }
+
+    #[test]
+    fn no_rotation_when_count_le_stride() {
+        let seq = rotation_sequence(2, 2, 3);
+        assert!(seq.iter().all(|s| *s == vec![0, 1]));
+    }
+
+    #[test]
+    fn rotation_by_stride() {
+        let seq = rotation_sequence(4, 2, 2);
+        assert_eq!(seq[1], vec![2, 3, 0, 1]);
+    }
+}

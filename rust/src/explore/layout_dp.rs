@@ -1,0 +1,211 @@
+//! End-to-end memory-layout synchronization (paper §IV-C).
+//!
+//! Consecutive layers must agree on the activation layout or pay a
+//! transformation. The paper uses "the commonly adopted dynamic
+//! programming approach based on searched results": per layer, the cost
+//! of running it under each candidate layout (from the explorer's
+//! perf model); between layers, the transformation cost when layouts
+//! differ. The DP picks the per-layer layouts minimizing the total.
+//!
+//! The paper also observes (§IV-C) that because reductions run over
+//! fw/fh/ic, outputs can be written in *any* layout at no extra cost —
+//! which collapses most transformation edges to zero. We model exactly
+//! that: a conv layer can emit its output directly in the next layer's
+//! block size, so only genuinely incompatible transitions pay.
+
+use crate::util::table::Table;
+
+/// Per-layer candidate: `run_cost[i][j]` = modeled cycles of layer `i`
+/// under layout choice `j`.
+#[derive(Clone, Debug)]
+pub struct LayoutProblem {
+    /// Candidate block sizes (the `c` of NCHWc), same list for all layers.
+    pub block_sizes: Vec<usize>,
+    /// run_cost[layer][choice].
+    pub run_cost: Vec<Vec<f64>>,
+    /// transform_cost[layer][from_choice][to_choice]: cost of converting
+    /// layer `layer`'s output from `from` to feed layer `layer+1` at `to`.
+    pub transform_cost: Vec<Vec<Vec<f64>>>,
+}
+
+/// DP result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayoutPlan {
+    /// Chosen layout index per layer.
+    pub choice: Vec<usize>,
+    pub total_cost: f64,
+}
+
+/// Classic chain DP: O(layers × choices²).
+pub fn solve(p: &LayoutProblem) -> LayoutPlan {
+    let n = p.run_cost.len();
+    let m = p.block_sizes.len();
+    assert!(n > 0 && m > 0);
+    // dp[j] = best cost ending at current layer with choice j.
+    let mut dp: Vec<f64> = p.run_cost[0].clone();
+    let mut back: Vec<Vec<usize>> = vec![vec![0; m]];
+    for i in 1..n {
+        let mut next = vec![f64::INFINITY; m];
+        let mut prev_of = vec![0usize; m];
+        for j in 0..m {
+            for pj in 0..m {
+                let t = p.transform_cost[i - 1][pj][j];
+                let cost = dp[pj] + t + p.run_cost[i][j];
+                if cost < next[j] {
+                    next[j] = cost;
+                    prev_of[j] = pj;
+                }
+            }
+        }
+        dp = next;
+        back.push(prev_of);
+    }
+    // Trace back.
+    let (mut j, mut best) = (0usize, f64::INFINITY);
+    for (idx, &c) in dp.iter().enumerate() {
+        if c < best {
+            best = c;
+            j = idx;
+        }
+    }
+    let mut choice = vec![0usize; n];
+    choice[n - 1] = j;
+    for i in (1..n).rev() {
+        j = back[i][j];
+        choice[i - 1] = j;
+    }
+    LayoutPlan { choice, total_cost: best }
+}
+
+/// Build a layout problem for a network's simple-conv chain: run cost =
+/// the explorer's modeled cycles for the Algorithm-8 kernel at each
+/// candidate block size; transform cost = one element-copy pass when the
+/// block size changes between consecutive conv layers (§IV-C notes conv
+/// outputs can be written in any layout for free, so only *input*-side
+/// block-size mismatches pay — we charge the copy conservatively).
+pub fn problem_for_network(
+    net: &crate::nets::Network,
+    block_sizes: &[usize],
+    sample: usize,
+) -> (LayoutProblem, Vec<String>) {
+    use crate::dataflow::DataflowSpec;
+    use crate::layer::LayerConfig;
+    let mut run_cost = Vec::new();
+    let mut names = Vec::new();
+    let mut out_elems = Vec::new();
+    for layer in &net.layers {
+        let LayerConfig::Conv(cfg) = layer else { continue };
+        if cfg.groups != 1 {
+            continue;
+        }
+        let mut per_choice = Vec::new();
+        for &c in block_sizes {
+            let machine = crate::machine::MachineConfig::neon(c * 8);
+            let padded = crate::coordinator::padded_conv(cfg, &machine);
+            let spec = DataflowSpec::optimized_os(&machine, padded.r_size());
+            let (_, stats) = crate::explore::evaluate(&padded, &spec, &machine, sample);
+            per_choice.push(stats.cycles);
+        }
+        run_cost.push(per_choice);
+        names.push(cfg.name());
+        out_elems.push((cfg.e_size() * cfg.out_channels) as f64);
+    }
+    let m = block_sizes.len();
+    let transform_cost: Vec<Vec<Vec<f64>>> = out_elems
+        .iter()
+        .map(|&elems| {
+            (0..m)
+                .map(|from| {
+                    (0..m)
+                        .map(|to| if from == to { 0.0 } else { elems * 2.0 })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    (
+        LayoutProblem { block_sizes: block_sizes.to_vec(), run_cost, transform_cost },
+        names,
+    )
+}
+
+/// Render the plan for reports.
+pub fn render(p: &LayoutProblem, plan: &LayoutPlan, layer_names: &[String]) -> Table {
+    let mut t = Table::new(&["layer", "layout", "run_cycles"]);
+    for (i, &j) in plan.choice.iter().enumerate() {
+        t.row(&[
+            layer_names.get(i).cloned().unwrap_or_else(|| format!("L{i}")),
+            format!("NCHW{}c", p.block_sizes[j]),
+            format!("{:.0}", p.run_cost[i][j]),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_transforms(n: usize, m: usize, cost: f64) -> Vec<Vec<Vec<f64>>> {
+        (0..n)
+            .map(|_| {
+                (0..m)
+                    .map(|from| {
+                        (0..m)
+                            .map(|to| if from == to { 0.0 } else { cost })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn picks_cheapest_when_transforms_free() {
+        let p = LayoutProblem {
+            block_sizes: vec![16, 32],
+            run_cost: vec![vec![10.0, 5.0], vec![3.0, 9.0]],
+            transform_cost: uniform_transforms(2, 2, 0.0),
+        };
+        let plan = solve(&p);
+        assert_eq!(plan.choice, vec![1, 0]);
+        assert_eq!(plan.total_cost, 8.0);
+    }
+
+    #[test]
+    fn expensive_transform_forces_consistency() {
+        let p = LayoutProblem {
+            block_sizes: vec![16, 32],
+            run_cost: vec![vec![10.0, 5.0], vec![3.0, 9.0]],
+            transform_cost: uniform_transforms(2, 2, 100.0),
+        };
+        let plan = solve(&p);
+        // Staying consistent: either [0,0]=13 or [1,1]=14 → [0,0].
+        assert_eq!(plan.choice, vec![0, 0]);
+        assert_eq!(plan.total_cost, 13.0);
+    }
+
+    #[test]
+    fn mixed_transform_crossover() {
+        // Transform worth paying exactly once.
+        let p = LayoutProblem {
+            block_sizes: vec![16, 32],
+            run_cost: vec![vec![1.0, 50.0], vec![1.0, 50.0], vec![50.0, 1.0]],
+            transform_cost: uniform_transforms(3, 2, 5.0),
+        };
+        let plan = solve(&p);
+        assert_eq!(plan.choice, vec![0, 0, 1]);
+        assert_eq!(plan.total_cost, 1.0 + 1.0 + 5.0 + 1.0);
+    }
+
+    #[test]
+    fn single_layer_chain() {
+        let p = LayoutProblem {
+            block_sizes: vec![16, 32, 64],
+            run_cost: vec![vec![3.0, 2.0, 4.0]],
+            transform_cost: uniform_transforms(1, 3, 1.0),
+        };
+        let plan = solve(&p);
+        assert_eq!(plan.choice, vec![1]);
+    }
+}

@@ -1,0 +1,228 @@
+//! The exploration engine (paper §IV): enumerate extended-dataflow
+//! candidates, prune with the Table I heuristics, evaluate survivors on
+//! the performance model, and select the fastest.
+//!
+//! This two-stage structure is the paper's methodology verbatim: "First,
+//! we analyze reuse opportunities and develop heuristics … Next, we
+//! empirically compare different implementations of the extended
+//! dataflows by varying vector register allocation schemes using a code
+//! generator."
+
+pub mod layout_dp;
+
+use crate::dataflow::heuristics::total_gain;
+use crate::dataflow::{Anchor, AuxKind, DataflowSpec};
+use crate::isa::Program;
+use crate::layer::ConvConfig;
+use crate::machine::{MachineConfig, PerfModel, PerfStats};
+
+/// One evaluated candidate.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub spec: DataflowSpec,
+    pub heuristic_gain: f64,
+    pub stats: PerfStats,
+}
+
+/// Exploration output: every evaluated candidate plus the selected one.
+#[derive(Clone, Debug)]
+pub struct Exploration {
+    pub candidates: Vec<Candidate>,
+    /// Index of the winner in `candidates`.
+    pub best: usize,
+}
+
+impl Exploration {
+    pub fn best(&self) -> &Candidate {
+        &self.candidates[self.best]
+    }
+}
+
+/// Exploration parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ExploreConfig {
+    /// Candidates surviving heuristic pruning per anchor (the three basic
+    /// dataflows are always evaluated in addition).
+    pub survivors_per_anchor: usize,
+    /// Invocations simulated exactly before extrapolating.
+    pub perf_sample: usize,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig { survivors_per_anchor: 4, perf_sample: 2 }
+    }
+}
+
+/// The two aux kinds available under each anchor.
+fn aux_kinds(anchor: Anchor) -> [AuxKind; 2] {
+    match anchor {
+        Anchor::Output => [AuxKind::Weight, AuxKind::Input],
+        Anchor::Input => [AuxKind::Output, AuxKind::Weight],
+        Anchor::Weight => [AuxKind::Output, AuxKind::Input],
+    }
+}
+
+/// Enumerate allocation candidates for one anchor: both priority orders
+/// of its two aux kinds × all splits of the available variables, with
+/// per-kind caps (weight stash saturates at R; input/output window
+/// stashes saturate at R too — Table I variable ranges).
+pub fn enumerate_specs(cfg: &ConvConfig, machine: &MachineConfig, anchor: Anchor) -> Vec<DataflowSpec> {
+    let avail = machine.aux_vars_available();
+    let r = cfg.r_size();
+    let cap = |k: AuxKind| -> usize {
+        match (anchor, k) {
+            (Anchor::Output, AuxKind::Weight) => r,
+            (Anchor::Output, AuxKind::Input) => r,
+            (Anchor::Input, AuxKind::Weight) => r,
+            (Anchor::Input, AuxKind::Output) => r,
+            (Anchor::Weight, AuxKind::Input) => avail,
+            (Anchor::Weight, AuxKind::Output) => avail,
+            _ => 0,
+        }
+    };
+    let [k1, k2] = aux_kinds(anchor);
+    let mut out = vec![DataflowSpec::basic(anchor)];
+    for (first, second) in [(k1, k2), (k2, k1)] {
+        for n1 in 0..=cap(first).min(avail) {
+            let n2 = (avail - n1).min(cap(second));
+            let mut aux = Vec::new();
+            if n1 > 0 {
+                aux.push((first, n1));
+            }
+            if n2 > 0 {
+                aux.push((second, n2));
+            }
+            if aux.is_empty() {
+                continue;
+            }
+            let spec = DataflowSpec::extended(anchor, aux);
+            if spec.fits(machine) && spec.is_sensible() && !out.contains(&spec) {
+                out.push(spec);
+            }
+        }
+    }
+    out
+}
+
+/// Heuristic score of a spec: total predicted memory-op reduction.
+pub fn heuristic_score(cfg: &ConvConfig, spec: &DataflowSpec) -> f64 {
+    spec.aux
+        .iter()
+        .map(|(k, n)| total_gain(cfg, spec.anchor, *k, *n).total())
+        .sum()
+}
+
+/// Generate and perf-model one spec.
+pub fn evaluate(cfg: &ConvConfig, spec: &DataflowSpec, machine: &MachineConfig, sample: usize) -> (Program, PerfStats) {
+    let prog = crate::codegen::generate(cfg, spec, machine);
+    let schedule = crate::codegen::schedule(cfg, machine);
+    let mut pm = PerfModel::neoverse_n1();
+    let stats = pm.estimate_layer(&prog, &schedule, sample);
+    (prog, stats)
+}
+
+/// Full exploration for one layer: enumerate → prune → simulate → pick.
+pub fn explore(cfg: &ConvConfig, machine: &MachineConfig, xcfg: &ExploreConfig) -> Exploration {
+    let mut candidates: Vec<Candidate> = Vec::new();
+    for anchor in Anchor::all() {
+        let mut specs = enumerate_specs(cfg, machine, anchor);
+        // Heuristic pruning: keep the basic dataflow plus the
+        // `survivors_per_anchor` best-scoring extended specs.
+        let mut scored: Vec<(f64, DataflowSpec)> = specs
+            .drain(..)
+            .map(|s| (heuristic_score(cfg, &s), s))
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut kept: Vec<(f64, DataflowSpec)> = Vec::new();
+        for (score, spec) in scored {
+            let is_basic = spec.aux_vars() == 0;
+            if is_basic || kept.iter().filter(|(_, s)| s.aux_vars() > 0).count() < xcfg.survivors_per_anchor {
+                kept.push((score, spec));
+            }
+        }
+        for (score, spec) in kept {
+            let (_prog, stats) = evaluate(cfg, &spec, machine, xcfg.perf_sample);
+            candidates.push(Candidate { spec, heuristic_gain: score, stats });
+        }
+    }
+    let best = candidates
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.stats.cycles.partial_cmp(&b.1.stats.cycles).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    Exploration { candidates, best }
+}
+
+/// Convenience: cycles of a named basic dataflow.
+pub fn basic_cycles(cfg: &ConvConfig, machine: &MachineConfig, anchor: Anchor, sample: usize) -> PerfStats {
+    evaluate(cfg, &DataflowSpec::basic(anchor), machine, sample).1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ConvConfig {
+        ConvConfig::simple(12, 12, 3, 3, 1, 16, 8)
+    }
+
+    #[test]
+    fn enumeration_includes_basic_and_fits() {
+        let m = MachineConfig::neon(128);
+        let cfg = small_cfg();
+        for anchor in Anchor::all() {
+            let specs = enumerate_specs(&cfg, &m, anchor);
+            assert!(specs.iter().any(|s| s.aux_vars() == 0));
+            assert!(specs.iter().all(|s| s.fits(&m) && s.is_sensible()));
+            assert!(specs.len() > 3);
+        }
+    }
+
+    #[test]
+    fn explore_picks_an_extended_os() {
+        let m = MachineConfig::neon(128);
+        let cfg = small_cfg();
+        let ex = explore(&cfg, &m, &ExploreConfig::default());
+        let best = ex.best();
+        // The paper's central result: the winner is output-anchored with
+        // auxiliary stationarities.
+        assert_eq!(best.spec.anchor, Anchor::Output, "winner was {}", best.spec.name());
+        assert!(best.spec.aux_vars() > 0);
+    }
+
+    #[test]
+    fn extended_beats_basic_for_each_anchor() {
+        let m = MachineConfig::neon(128);
+        let cfg = small_cfg();
+        let ex = explore(&cfg, &m, &ExploreConfig::default());
+        for anchor in [Anchor::Output, Anchor::Input] {
+            let basic = ex
+                .candidates
+                .iter()
+                .find(|c| c.spec.anchor == anchor && c.spec.aux_vars() == 0)
+                .unwrap();
+            let best_ext = ex
+                .candidates
+                .iter()
+                .filter(|c| c.spec.anchor == anchor && c.spec.aux_vars() > 0)
+                .min_by(|a, b| a.stats.cycles.partial_cmp(&b.stats.cycles).unwrap())
+                .unwrap();
+            assert!(
+                best_ext.stats.cycles < basic.stats.cycles,
+                "{anchor:?}: ext {} !< basic {}",
+                best_ext.stats.cycles,
+                basic.stats.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn heuristic_score_monotone_in_vars() {
+        let cfg = small_cfg();
+        let s1 = heuristic_score(&cfg, &DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 2)]));
+        let s2 = heuristic_score(&cfg, &DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 5)]));
+        assert!(s2 > s1);
+    }
+}

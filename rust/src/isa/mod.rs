@@ -1,0 +1,199 @@
+//! The abstract SIMD instruction set targeted by the code generator.
+//!
+//! Modeled on ARM NEON (the paper's target, §II): 128-bit physical vector
+//! registers; *vector variables* may span 1–4 consecutive registers
+//! (vector length 128/256/512 — §II-E). The code generator emits
+//! per-physical-register instructions, so the ISA itself has no notion of
+//! multi-register variables.
+//!
+//! Memory operands address three named buffers (the paper's inputs /
+//! weights / outputs). `In`/`Wgt` are byte-addressed INT8 (or bit-packed
+//! binary) arrays; `Out` is an element-addressed INT32 array, because the
+//! paper's kernels write outputs as scalars after in-register reduction
+//! (§IV-C: reductions run over fw/fh/ic, enabling single-element writes).
+//!
+//! Each instruction's offset is relative to a per-invocation *base* for
+//! its buffer, so one generated program is reused across all channel-block
+//! combinations of a layer (§IV Alg 5–7 "for each iblk/wblk/oblk combo").
+
+pub mod program;
+pub mod validate;
+
+pub use program::{Mode, ProgStats, Program};
+pub use validate::{validate, ValidationError};
+
+/// Physical vector register width in bits (NEON: 128).
+pub const REG_BITS: usize = 128;
+/// INT8 lanes per physical register.
+pub const I8_LANES: usize = 16;
+/// Bytes per physical register.
+pub const REG_BYTES: usize = 16;
+
+/// Physical vector register id.
+pub type Reg = u8;
+
+/// The three memory spaces generated code can address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Buf {
+    /// Input activations (INT8 bytes, or packed binary bits).
+    In,
+    /// Weights (INT8 bytes, or packed binary bits).
+    Wgt,
+    /// Outputs (INT32 elements).
+    Out,
+}
+
+/// One abstract-SIMD instruction.
+///
+/// The scalar-interface macros (`RedSumAcc`, `RedSumStore`, `PopcntAcc`)
+/// bundle the NEON sequence the paper's kernels use at those points
+/// (`addv` + scalar load/add/store); the performance model charges them
+/// accordingly (see `machine::perf::CostModel`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VInstr {
+    /// dst ← 16 bytes from `buf[base + off ..]` (vld1q).
+    VLoad { dst: Reg, buf: Buf, off: u32 },
+    /// `buf[base + off ..]` ← 16 bytes from src (vst1q). In/Wgt only.
+    VStore { src: Reg, buf: Buf, off: u32 },
+    /// dst ← 0 (vmovq_n_s8(0)).
+    VDupZero { dst: Reg },
+    /// dst ← a * b, lane-wise (vmulq).
+    VMul { dst: Reg, a: Reg, b: Reg },
+    /// acc ← acc + a * b, lane-wise (vmlaq).
+    VMla { acc: Reg, a: Reg, b: Reg },
+    /// dst ← a + b, lane-wise (vaddq).
+    VAdd { dst: Reg, a: Reg, b: Reg },
+    /// dst ← src (register-register transfer the paper's secondary
+    /// unrolling exists to avoid — kept in the ISA so the naive rotation
+    /// scheme can be generated and measured as an ablation).
+    VMov { dst: Reg, src: Reg },
+    /// Out[out_base + off] += Σ lanes(src). (addv + ldr + add + str)
+    RedSumAcc { src: Reg, off: u32 },
+    /// Out[out_base + off] = Σ lanes(src). (addv + str)
+    RedSumStore { src: Reg, off: u32 },
+    /// Out[out_base + off .. +16] ← the 16 INT32 lanes of src
+    /// (depthwise conv: per-lane accumulation, vector write-back).
+    VStoreOut { src: Reg, off: u32 },
+    /// Out[out_base + off .. +16] += the 16 INT32 lanes of src.
+    VAccOut { src: Reg, off: u32 },
+    /// dst ← a ^ b (binary networks: XNOR-conv is xor + popcount-correct).
+    VXor { dst: Reg, a: Reg, b: Reg },
+    /// dst ← a & b (bitserial baseline).
+    VAnd { dst: Reg, a: Reg, b: Reg },
+    /// Out[out_base + off] += bias + scale * popcount(src).
+    /// XNOR conv uses (bias = +lanes, scale = -2); bitserial uses
+    /// (bias = 0, scale = ±2^k).
+    PopcntAcc { src: Reg, off: u32, scale: i32, bias: i32 },
+    /// acc ← acc + per-byte-popcount(src) (NEON vcnt + vadd). Keeps the
+    /// running XNOR mismatch count *in a register*, so extended binary
+    /// dataflows avoid a scalar RMW per MAC. Each byte lane of `acc`
+    /// saturates semantically at 255: codegen must flush (RedSumScaleAcc)
+    /// before 32 accumulations (8 bits × 32 > 255).
+    VCntAcc { acc: Reg, src: Reg },
+    /// Out[out_base + off] += bias + scale * Σ byte lanes(src)
+    /// (addv across the 16 count bytes + scalar fixup).
+    RedSumScaleAcc { src: Reg, off: u32, scale: i32, bias: i32 },
+}
+
+impl VInstr {
+    /// Registers read by the instruction.
+    pub fn reads(&self) -> Vec<Reg> {
+        use VInstr::*;
+        match *self {
+            VLoad { .. } | VDupZero { .. } => vec![],
+            VStore { src, .. } | RedSumAcc { src, .. } | RedSumStore { src, .. }
+            | VStoreOut { src, .. } | VAccOut { src, .. } | PopcntAcc { src, .. }
+            | RedSumScaleAcc { src, .. } => vec![src],
+            VMul { a, b, .. } | VAdd { a, b, .. } | VXor { a, b, .. } | VAnd { a, b, .. } => {
+                vec![a, b]
+            }
+            VMla { acc, a, b } => vec![acc, a, b],
+            VCntAcc { acc, src } => vec![acc, src],
+            VMov { src, .. } => vec![src],
+        }
+    }
+
+    /// Register written by the instruction, if any.
+    pub fn writes(&self) -> Option<Reg> {
+        use VInstr::*;
+        match *self {
+            VLoad { dst, .. } | VDupZero { dst } | VMul { dst, .. } | VAdd { dst, .. }
+            | VMov { dst, .. } | VXor { dst, .. } | VAnd { dst, .. } => Some(dst),
+            VMla { acc, .. } | VCntAcc { acc, .. } => Some(acc),
+            VStore { .. } | RedSumAcc { .. } | RedSumStore { .. } | VStoreOut { .. }
+            | VAccOut { .. } | PopcntAcc { .. } | RedSumScaleAcc { .. } => None,
+        }
+    }
+
+    /// Is this a vector memory read?
+    pub fn is_mem_read(&self) -> bool {
+        matches!(self, VInstr::VLoad { .. })
+    }
+
+    /// Is this a memory write (vector or the scalar part of a reduce)?
+    pub fn is_mem_write(&self) -> bool {
+        matches!(
+            self,
+            VInstr::VStore { .. }
+                | VInstr::RedSumAcc { .. }
+                | VInstr::RedSumStore { .. }
+                | VInstr::VStoreOut { .. }
+                | VInstr::VAccOut { .. }
+                | VInstr::PopcntAcc { .. }
+                | VInstr::RedSumScaleAcc { .. }
+        )
+    }
+
+    /// Disassembly in a NEON-intrinsics-flavoured syntax.
+    pub fn disasm(&self) -> String {
+        use VInstr::*;
+        match *self {
+            VLoad { dst, buf, off } => format!("v{dst} = vld1q({buf:?} + {off})"),
+            VStore { src, buf, off } => format!("vst1q({buf:?} + {off}, v{src})"),
+            VDupZero { dst } => format!("v{dst} = vdupq_n(0)"),
+            VMul { dst, a, b } => format!("v{dst} = vmulq(v{a}, v{b})"),
+            VMla { acc, a, b } => format!("v{acc} = vmlaq(v{acc}, v{a}, v{b})"),
+            VAdd { dst, a, b } => format!("v{dst} = vaddq(v{a}, v{b})"),
+            VMov { dst, src } => format!("v{dst} = v{src}"),
+            RedSumAcc { src, off } => format!("Out[{off}] += vaddvq(v{src})"),
+            RedSumStore { src, off } => format!("Out[{off}] = vaddvq(v{src})"),
+            VStoreOut { src, off } => format!("Out[{off}..+16] = widen(v{src})"),
+            VAccOut { src, off } => format!("Out[{off}..+16] += widen(v{src})"),
+            VXor { dst, a, b } => format!("v{dst} = veorq(v{a}, v{b})"),
+            VAnd { dst, a, b } => format!("v{dst} = vandq(v{a}, v{b})"),
+            PopcntAcc { src, off, scale, bias } => {
+                format!("Out[{off}] += {bias} + {scale}*popcount(v{src})")
+            }
+            VCntAcc { acc, src } => format!("v{acc} = vaddq(v{acc}, vcntq(v{src}))"),
+            RedSumScaleAcc { src, off, scale, bias } => {
+                format!("Out[{off}] += {bias} + {scale}*vaddvq(v{src})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_writes() {
+        let i = VInstr::VMla { acc: 1, a: 2, b: 3 };
+        assert_eq!(i.reads(), vec![1, 2, 3]);
+        assert_eq!(i.writes(), Some(1));
+        let l = VInstr::VLoad { dst: 4, buf: Buf::In, off: 0 };
+        assert!(l.reads().is_empty());
+        assert_eq!(l.writes(), Some(4));
+        assert!(l.is_mem_read());
+        let r = VInstr::RedSumAcc { src: 0, off: 9 };
+        assert!(r.is_mem_write());
+        assert_eq!(r.writes(), None);
+    }
+
+    #[test]
+    fn disasm_contains_operands() {
+        let i = VInstr::VMul { dst: 0, a: 1, b: 2 };
+        let s = i.disasm();
+        assert!(s.contains("v0") && s.contains("v1") && s.contains("v2"));
+    }
+}

@@ -1,0 +1,210 @@
+//! Programs: the unit the code generator produces and the machine runs.
+//!
+//! A [`Program`] is the fully-unrolled inner kernel for one
+//! (input-channel-block, output-channel) combination of a layer; the
+//! coordinator re-executes it with different buffer bases for every block
+//! combination (paper Alg. 5–7 outer loop). Instruction offsets are
+//! relative to those bases.
+
+use super::{Buf, VInstr};
+
+/// Data interpretation mode of a program.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// INT8 elements, INT32 accumulation (8-bit quantized networks).
+    Int8,
+    /// Bit-packed ±1 elements (binary networks): registers hold 128 bits.
+    Binary,
+}
+
+/// Static statistics of a program (one invocation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProgStats {
+    pub instrs: usize,
+    /// Vector loads (the paper's "# mem reads" unit: one 128-bit read).
+    pub vloads: usize,
+    /// Vector stores.
+    pub vstores: usize,
+    /// Scalar read-modify-writes of Out (RedSumAcc / PopcntAcc).
+    pub scalar_rmw: usize,
+    /// Scalar stores of Out (RedSumStore).
+    pub scalar_store: usize,
+    pub vmul: usize,
+    pub vmla: usize,
+    pub vadd: usize,
+    pub vmov: usize,
+    pub vdup: usize,
+    pub vbit: usize,
+    /// Approximate code size in bytes (4 B per scalar/vector op; the
+    /// scalar-interface macros expand to several real instructions).
+    pub code_bytes: usize,
+}
+
+/// A generated SIMD program.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub name: String,
+    pub mode: Mode,
+    pub instrs: Vec<VInstr>,
+    /// Number of physical registers the program requires (max id + 1).
+    pub regs_used: usize,
+    /// Count of irregular code-shape transitions per invocation: points
+    /// where the unrolled body switches between structurally different
+    /// cases (e.g. input-anchored stride-2 kernels, where successive
+    /// anchors involve 1/2/4 weights — paper Fig 5: "code structure
+    /// becomes less regular"). The perf model charges front-end bubbles
+    /// per transition.
+    pub irregular_transitions: usize,
+}
+
+impl Program {
+    pub fn new(name: impl Into<String>, mode: Mode, instrs: Vec<VInstr>) -> Program {
+        let regs_used = instrs
+            .iter()
+            .flat_map(|i| {
+                i.writes()
+                    .into_iter()
+                    .chain(i.reads())
+                    .collect::<Vec<_>>()
+            })
+            .map(|r| r as usize + 1)
+            .max()
+            .unwrap_or(0);
+        Program { name: name.into(), mode, instrs, regs_used, irregular_transitions: 0 }
+    }
+
+    /// Attach an irregularity count (builder style).
+    pub fn with_irregularity(mut self, transitions: usize) -> Program {
+        self.irregular_transitions = transitions;
+        self
+    }
+
+    /// Static statistics (one invocation).
+    pub fn stats(&self) -> ProgStats {
+        let mut s = ProgStats::default();
+        s.instrs = self.instrs.len();
+        for i in &self.instrs {
+            match i {
+                VInstr::VLoad { .. } => s.vloads += 1,
+                VInstr::VStore { .. } => s.vstores += 1,
+                VInstr::RedSumAcc { .. }
+                | VInstr::PopcntAcc { .. }
+                | VInstr::RedSumScaleAcc { .. } => s.scalar_rmw += 1,
+                VInstr::RedSumStore { .. } => s.scalar_store += 1,
+                VInstr::VStoreOut { .. } | VInstr::VAccOut { .. } => s.vstores += 1,
+                VInstr::VMul { .. } => s.vmul += 1,
+                VInstr::VMla { .. } => s.vmla += 1,
+                VInstr::VAdd { .. } | VInstr::VCntAcc { .. } => s.vadd += 1,
+                VInstr::VMov { .. } => s.vmov += 1,
+                VInstr::VDupZero { .. } => s.vdup += 1,
+                VInstr::VXor { .. } | VInstr::VAnd { .. } => s.vbit += 1,
+            }
+            // Macro expansion sizes (RedSumAcc ≈ addv+ldr+add+str = 4 ops).
+            s.code_bytes += match i {
+                VInstr::RedSumAcc { .. } => 16,
+                VInstr::RedSumStore { .. } => 8,
+                VInstr::PopcntAcc { .. } => 20,
+                VInstr::RedSumScaleAcc { .. } => 20,
+                VInstr::VCntAcc { .. } => 8,
+                VInstr::VStoreOut { .. } | VInstr::VAccOut { .. } => 16,
+                _ => 4,
+            };
+        }
+        s
+    }
+
+    /// Total vector memory reads per invocation (paper Table I metric).
+    pub fn mem_reads(&self) -> usize {
+        self.stats().vloads
+    }
+
+    /// Total memory writes per invocation (vector stores + scalar RMW
+    /// writes + scalar stores) — paper Table I "# mem writes".
+    pub fn mem_writes(&self) -> usize {
+        let s = self.stats();
+        s.vstores + s.scalar_rmw + s.scalar_store
+    }
+
+    /// Highest byte offset read from a buffer (for bounds checking).
+    pub fn max_offset(&self, buf: Buf) -> Option<u32> {
+        self.instrs
+            .iter()
+            .filter_map(|i| match *i {
+                VInstr::VLoad { buf: b, off, .. } | VInstr::VStore { buf: b, off, .. }
+                    if b == buf =>
+                {
+                    Some(off + super::REG_BYTES as u32)
+                }
+                VInstr::RedSumAcc { off, .. }
+                | VInstr::RedSumStore { off, .. }
+                | VInstr::PopcntAcc { off, .. }
+                | VInstr::RedSumScaleAcc { off, .. }
+                    if buf == Buf::Out =>
+                {
+                    Some(off + 1)
+                }
+                VInstr::VStoreOut { off, .. } | VInstr::VAccOut { off, .. } if buf == Buf::Out => {
+                    Some(off + super::I8_LANES as u32)
+                }
+                _ => None,
+            })
+            .max()
+    }
+
+    /// Full disassembly (debugging / `codegen_dump` example).
+    pub fn disasm(&self) -> String {
+        let mut out = format!("; program `{}` mode={:?} regs={}\n", self.name, self.mode, self.regs_used);
+        for (pc, i) in self.instrs.iter().enumerate() {
+            out.push_str(&format!("{pc:6}: {}\n", i.disasm()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Buf;
+
+    fn tiny() -> Program {
+        Program::new(
+            "t",
+            Mode::Int8,
+            vec![
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VLoad { dst: 1, buf: Buf::Wgt, off: 16 },
+                VInstr::VMul { dst: 2, a: 0, b: 1 },
+                VInstr::RedSumAcc { src: 2, off: 3 },
+            ],
+        )
+    }
+
+    #[test]
+    fn regs_used_is_max_plus_one() {
+        assert_eq!(tiny().regs_used, 3);
+    }
+
+    #[test]
+    fn stats_count_classes() {
+        let s = tiny().stats();
+        assert_eq!(s.vloads, 2);
+        assert_eq!(s.vmul, 1);
+        assert_eq!(s.scalar_rmw, 1);
+        assert_eq!(s.instrs, 4);
+    }
+
+    #[test]
+    fn mem_metrics() {
+        let p = tiny();
+        assert_eq!(p.mem_reads(), 2);
+        assert_eq!(p.mem_writes(), 1);
+    }
+
+    #[test]
+    fn max_offsets() {
+        let p = tiny();
+        assert_eq!(p.max_offset(Buf::In), Some(16));
+        assert_eq!(p.max_offset(Buf::Wgt), Some(32));
+        assert_eq!(p.max_offset(Buf::Out), Some(4));
+    }
+}

@@ -1,0 +1,158 @@
+//! Static validation of generated programs.
+//!
+//! The paper stresses (§I) that hand-rolled SIMD is error-prone — vector
+//! register dependencies and register-file limits are exactly what their
+//! code generator gets right by construction. We verify the same
+//! invariants mechanically for every program we generate:
+//!
+//! 1. no register is read before it is written (def-before-use);
+//! 2. the program fits the physical register file;
+//! 3. stores to In/Wgt never occur in conv kernels (read-only operands) —
+//!    checked by the caller via [`validate_readonly_operands`];
+//! 4. instruction mode matches the program mode (no binary ops in INT8
+//!    programs and vice versa).
+
+use super::{Mode, Program, VInstr};
+
+/// Validation failure.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum ValidationError {
+    #[error("instruction {pc}: register v{reg} read before any write")]
+    UseBeforeDef { pc: usize, reg: u8 },
+    #[error("program needs {needed} registers, machine has {available}")]
+    TooManyRegisters { needed: usize, available: usize },
+    #[error("instruction {pc}: {what} not allowed in {mode:?} mode")]
+    ModeMismatch { pc: usize, what: &'static str, mode: Mode },
+    #[error("instruction {pc}: store to read-only operand buffer")]
+    StoreToOperand { pc: usize },
+}
+
+/// Validate def-before-use, register-file fit, and mode consistency.
+pub fn validate(prog: &Program, num_regs: usize) -> Result<(), ValidationError> {
+    if prog.regs_used > num_regs {
+        return Err(ValidationError::TooManyRegisters {
+            needed: prog.regs_used,
+            available: num_regs,
+        });
+    }
+    let mut defined = vec![false; prog.regs_used.max(1)];
+    for (pc, instr) in prog.instrs.iter().enumerate() {
+        // VMla reads its accumulator; all reads must be defined.
+        for r in instr.reads() {
+            if !defined[r as usize] {
+                return Err(ValidationError::UseBeforeDef { pc, reg: r });
+            }
+        }
+        if let Some(w) = instr.writes() {
+            defined[w as usize] = true;
+        }
+        match (prog.mode, instr) {
+            (Mode::Int8, VInstr::VXor { .. })
+            | (Mode::Int8, VInstr::VAnd { .. })
+            | (Mode::Int8, VInstr::VCntAcc { .. })
+            | (Mode::Int8, VInstr::PopcntAcc { .. }) => {
+                return Err(ValidationError::ModeMismatch { pc, what: "binary op", mode: prog.mode })
+            }
+            (Mode::Binary, VInstr::VMul { .. })
+            | (Mode::Binary, VInstr::VMla { .. })
+            | (Mode::Binary, VInstr::RedSumAcc { .. })
+            | (Mode::Binary, VInstr::RedSumStore { .. })
+            | (Mode::Binary, VInstr::VStoreOut { .. })
+            | (Mode::Binary, VInstr::VAccOut { .. }) => {
+                return Err(ValidationError::ModeMismatch {
+                    pc,
+                    what: "arithmetic op",
+                    mode: prog.mode,
+                })
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+/// Convolution kernels must treat In and Wgt as read-only.
+pub fn validate_readonly_operands(prog: &Program) -> Result<(), ValidationError> {
+    for (pc, instr) in prog.instrs.iter().enumerate() {
+        if let VInstr::VStore { .. } = instr {
+            return Err(ValidationError::StoreToOperand { pc });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Buf;
+
+    #[test]
+    fn detects_use_before_def() {
+        let p = Program::new(
+            "bad",
+            Mode::Int8,
+            vec![VInstr::VMul { dst: 0, a: 1, b: 2 }],
+        );
+        assert!(matches!(
+            validate(&p, 32),
+            Err(ValidationError::UseBeforeDef { pc: 0, reg: 1 })
+        ));
+    }
+
+    #[test]
+    fn detects_register_overflow() {
+        let p = Program::new(
+            "wide",
+            Mode::Int8,
+            vec![VInstr::VLoad { dst: 31, buf: Buf::In, off: 0 }],
+        );
+        assert!(validate(&p, 16).is_err());
+        assert!(validate(&p, 32).is_ok());
+    }
+
+    #[test]
+    fn detects_mode_mismatch() {
+        let p = Program::new(
+            "mixed",
+            Mode::Int8,
+            vec![
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VLoad { dst: 1, buf: Buf::Wgt, off: 0 },
+                VInstr::VXor { dst: 2, a: 0, b: 1 },
+            ],
+        );
+        assert!(matches!(
+            validate(&p, 32),
+            Err(ValidationError::ModeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn accepts_valid_program() {
+        let p = Program::new(
+            "ok",
+            Mode::Int8,
+            vec![
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VLoad { dst: 1, buf: Buf::Wgt, off: 0 },
+                VInstr::VMul { dst: 2, a: 0, b: 1 },
+                VInstr::RedSumAcc { src: 2, off: 0 },
+            ],
+        );
+        assert!(validate(&p, 32).is_ok());
+        assert!(validate_readonly_operands(&p).is_ok());
+    }
+
+    #[test]
+    fn rejects_store_to_operand() {
+        let p = Program::new(
+            "w",
+            Mode::Int8,
+            vec![
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VStore { src: 0, buf: Buf::In, off: 0 },
+            ],
+        );
+        assert!(validate_readonly_operands(&p).is_err());
+    }
+}

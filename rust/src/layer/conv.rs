@@ -1,0 +1,221 @@
+//! Convolution layer configuration (paper Fig 3 notation).
+//!
+//! `ih/iw` here are the *pre-padded* input dimensions the generated kernel
+//! sees: padding is applied when materializing the input tensor, never
+//! inside generated code (the paper's kernels likewise iterate over valid
+//! positions only; "disregarding edge cases" in §IV-A4).
+
+/// Convolution flavor (paper §IV: simple, depthwise, grouped, shuffled
+/// grouped — shuffling itself is a separate `ChannelShuffle` layer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ConvKind {
+    /// Dense convolution over all input channels.
+    Simple,
+    /// One filter per channel; `groups == in_channels == out_channels`.
+    Depthwise,
+    /// Channels split into `groups` independent convolutions.
+    Grouped,
+}
+
+/// Static configuration of one convolution layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ConvConfig {
+    /// Input height/width *after* padding.
+    pub ih: usize,
+    pub iw: usize,
+    /// Filter height/width (fh = R rows, fw = S columns in CKRSc terms).
+    pub fh: usize,
+    pub fw: usize,
+    /// Stride (paper evaluates s ∈ {1, 2}).
+    pub stride: usize,
+    /// Total input channels (C).
+    pub in_channels: usize,
+    /// Total output channels / filters (K, "nf" in the figures).
+    pub out_channels: usize,
+    /// Group count (1 for Simple; in_channels for Depthwise).
+    pub groups: usize,
+    pub kind: ConvKind,
+}
+
+impl ConvConfig {
+    /// A simple (dense) convolution.
+    pub fn simple(
+        ih: usize,
+        iw: usize,
+        fh: usize,
+        fw: usize,
+        stride: usize,
+        in_channels: usize,
+        out_channels: usize,
+    ) -> Self {
+        ConvConfig {
+            ih,
+            iw,
+            fh,
+            fw,
+            stride,
+            in_channels,
+            out_channels,
+            groups: 1,
+            kind: ConvKind::Simple,
+        }
+    }
+
+    /// A depthwise convolution.
+    pub fn depthwise(ih: usize, iw: usize, fh: usize, fw: usize, stride: usize, channels: usize) -> Self {
+        ConvConfig {
+            ih,
+            iw,
+            fh,
+            fw,
+            stride,
+            in_channels: channels,
+            out_channels: channels,
+            groups: channels,
+            kind: ConvKind::Depthwise,
+        }
+    }
+
+    /// A grouped convolution.
+    pub fn grouped(
+        ih: usize,
+        iw: usize,
+        fh: usize,
+        fw: usize,
+        stride: usize,
+        in_channels: usize,
+        out_channels: usize,
+        groups: usize,
+    ) -> Self {
+        assert!(in_channels % groups == 0 && out_channels % groups == 0);
+        ConvConfig {
+            ih,
+            iw,
+            fh,
+            fw,
+            stride,
+            in_channels,
+            out_channels,
+            groups,
+            kind: ConvKind::Grouped,
+        }
+    }
+
+    /// Output height: `(ih - fh) / s + 1` (valid positions only).
+    pub fn oh(&self) -> usize {
+        assert!(self.ih >= self.fh, "input smaller than filter");
+        (self.ih - self.fh) / self.stride + 1
+    }
+
+    pub fn ow(&self) -> usize {
+        assert!(self.iw >= self.fw);
+        (self.iw - self.fw) / self.stride + 1
+    }
+
+    /// H = ih·iw (paper notation: input tensor spatial size per channel
+    /// block).
+    pub fn h_size(&self) -> usize {
+        self.ih * self.iw
+    }
+
+    /// R = fh·fw (filter tap count).
+    pub fn r_size(&self) -> usize {
+        self.fh * self.fw
+    }
+
+    /// E = oh·ow (output spatial size).
+    pub fn e_size(&self) -> usize {
+        self.oh() * self.ow()
+    }
+
+    /// Input channels seen by one output channel.
+    pub fn in_channels_per_group(&self) -> usize {
+        self.in_channels / self.groups
+    }
+
+    pub fn out_channels_per_group(&self) -> usize {
+        self.out_channels / self.groups
+    }
+
+    /// Total multiply-accumulates.
+    pub fn macs(&self) -> u64 {
+        (self.e_size() * self.r_size() * self.in_channels_per_group() * self.out_channels) as u64
+    }
+
+    /// Display name in the paper's figure format `(fw/fh, iw/ih, nf)`.
+    pub fn name(&self) -> String {
+        format!(
+            "({}, {}, {})s{}",
+            self.fw, self.iw, self.out_channels, self.stride
+        )
+    }
+
+    /// Per-group view: the simple conv each group performs. Used by the
+    /// coordinator to lower Grouped/Depthwise onto the simple-conv code
+    /// generator.
+    pub fn group_view(&self) -> ConvConfig {
+        ConvConfig {
+            in_channels: self.in_channels_per_group(),
+            out_channels: self.out_channels_per_group(),
+            groups: 1,
+            kind: ConvKind::Simple,
+            ..*self
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_dims_stride1() {
+        let c = ConvConfig::simple(56, 56, 3, 3, 1, 16, 32);
+        assert_eq!(c.oh(), 54);
+        assert_eq!(c.ow(), 54);
+        assert_eq!(c.e_size(), 54 * 54);
+        assert_eq!(c.r_size(), 9);
+    }
+
+    #[test]
+    fn output_dims_stride2() {
+        let c = ConvConfig::simple(56, 56, 3, 3, 2, 16, 32);
+        assert_eq!(c.oh(), 27);
+        assert_eq!(c.ow(), 27);
+    }
+
+    #[test]
+    fn macs_counts() {
+        let c = ConvConfig::simple(6, 6, 3, 3, 1, 8, 4);
+        // E=16, R=9, C=8, K=4
+        assert_eq!(c.macs(), 16 * 9 * 8 * 4);
+    }
+
+    #[test]
+    fn depthwise_groups() {
+        let c = ConvConfig::depthwise(10, 10, 3, 3, 1, 32);
+        assert_eq!(c.groups, 32);
+        assert_eq!(c.in_channels_per_group(), 1);
+        assert_eq!(c.macs(), (8 * 8 * 9 * 32) as u64);
+    }
+
+    #[test]
+    fn group_view_slices_channels() {
+        let c = ConvConfig::grouped(8, 8, 3, 3, 1, 32, 64, 4);
+        let g = c.group_view();
+        assert_eq!(g.in_channels, 8);
+        assert_eq!(g.out_channels, 16);
+        assert_eq!(g.groups, 1);
+        assert_eq!(g.kind, ConvKind::Simple);
+    }
+
+    #[test]
+    fn paper_h_approx_e_s2() {
+        // H ≈ E·s² (paper Fig 3 notation remark).
+        let c = ConvConfig::simple(56, 56, 3, 3, 2, 16, 32);
+        let h = c.h_size() as f64;
+        let e = c.e_size() as f64;
+        let ratio = h / (e * 4.0);
+        assert!((0.9..1.2).contains(&ratio), "H/E*s^2 = {ratio}");
+    }
+}

@@ -1,0 +1,38 @@
+//! Fully-connected layer configuration. A dense layer is a 1×1 conv over a
+//! 1×1 spatial extent, and the coordinator lowers it exactly that way so
+//! the dataflow machinery applies unchanged (paper §IV: "this methodology
+//! can be applied to most layers").
+
+use super::conv::ConvConfig;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DenseConfig {
+    pub in_features: usize,
+    pub out_features: usize,
+}
+
+impl DenseConfig {
+    pub fn new(in_features: usize, out_features: usize) -> Self {
+        DenseConfig { in_features, out_features }
+    }
+
+    /// Equivalent 1×1 convolution over a 1×1 image.
+    pub fn as_conv(&self) -> ConvConfig {
+        ConvConfig::simple(1, 1, 1, 1, 1, self.in_features, self.out_features)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_as_conv() {
+        let d = DenseConfig::new(512, 1000);
+        let c = d.as_conv();
+        assert_eq!(c.in_channels, 512);
+        assert_eq!(c.out_channels, 1000);
+        assert_eq!(c.e_size(), 1);
+        assert_eq!(c.macs(), 512 * 1000);
+    }
+}

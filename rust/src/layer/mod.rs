@@ -1,0 +1,68 @@
+//! Layer configurations. The paper's focus is convolution layers (simple,
+//! depthwise, grouped, shuffled-grouped — §IV); pooling/dense/activation
+//! configs exist so the model zoo (`nets`) can describe whole networks for
+//! the end-to-end experiments (Fig 8).
+
+pub mod conv;
+pub mod pool;
+pub mod dense;
+pub mod oracle;
+
+pub use conv::{ConvConfig, ConvKind};
+pub use dense::DenseConfig;
+pub use pool::{PoolConfig, PoolKind};
+
+/// One layer of a network, as the coordinator sees it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerConfig {
+    Conv(ConvConfig),
+    Pool(PoolConfig),
+    Dense(DenseConfig),
+    /// ReLU / quantized clamp — fused into the preceding producer by the
+    /// coordinator; modeled as a per-element pass otherwise.
+    Relu { channels: usize, h: usize, w: usize },
+    /// Global average pool (ResNet/DenseNet tail).
+    GlobalAvgPool { channels: usize, h: usize, w: usize },
+    /// Channel shuffle between grouped convs (ShuffleNet §IV).
+    ChannelShuffle { channels: usize, h: usize, w: usize, groups: usize },
+}
+
+impl LayerConfig {
+    /// Output activation shape (channels, h, w) of the layer.
+    pub fn out_shape(&self) -> (usize, usize, usize) {
+        match self {
+            LayerConfig::Conv(c) => (c.out_channels, c.oh(), c.ow()),
+            LayerConfig::Pool(p) => (p.channels, p.oh(), p.ow()),
+            LayerConfig::Dense(d) => (d.out_features, 1, 1),
+            LayerConfig::Relu { channels, h, w } => (*channels, *h, *w),
+            LayerConfig::GlobalAvgPool { channels, .. } => (*channels, 1, 1),
+            LayerConfig::ChannelShuffle { channels, h, w, .. } => (*channels, *h, *w),
+        }
+    }
+
+    /// Multiply-accumulate count (the work metric used for roofline and
+    /// for distributing simulated threads).
+    pub fn macs(&self) -> u64 {
+        match self {
+            LayerConfig::Conv(c) => c.macs(),
+            LayerConfig::Dense(d) => (d.in_features * d.out_features) as u64,
+            _ => 0,
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, LayerConfig::Conv(_))
+    }
+
+    /// Short display name.
+    pub fn name(&self) -> String {
+        match self {
+            LayerConfig::Conv(c) => c.name(),
+            LayerConfig::Pool(p) => format!("pool{}x{}s{}", p.fh, p.fw, p.stride),
+            LayerConfig::Dense(d) => format!("fc{}x{}", d.in_features, d.out_features),
+            LayerConfig::Relu { .. } => "relu".into(),
+            LayerConfig::GlobalAvgPool { .. } => "gap".into(),
+            LayerConfig::ChannelShuffle { groups, .. } => format!("shuffle-g{groups}"),
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Reference (naive) convolution oracle.
+//!
+//! Every generated SIMD program must reproduce this bit-exactly when
+//! interpreted on the abstract machine — this is the core correctness
+//! signal for the whole code generator (INT32 accumulation, so equality is
+//! exact, no tolerance).
+
+use crate::layer::conv::{ConvConfig, ConvKind};
+use crate::tensor::{ActTensor, OutTensor, WeightTensor};
+
+/// Naive direct convolution: INT8 inputs/weights, INT32 accumulation.
+///
+/// `input` must already be padded (ih × iw are the padded dims in `cfg`);
+/// channel mapping follows `cfg.kind` (Simple / Depthwise / Grouped).
+pub fn conv_ref(cfg: &ConvConfig, input: &ActTensor, weights: &WeightTensor) -> OutTensor {
+    assert_eq!(input.shape.channels, cfg.in_channels);
+    assert_eq!(input.shape.h, cfg.ih);
+    assert_eq!(input.shape.w, cfg.iw);
+    assert_eq!(weights.shape.out_channels, cfg.out_channels);
+    assert_eq!(weights.shape.fh, cfg.fh);
+    assert_eq!(weights.shape.fw, cfg.fw);
+    assert_eq!(weights.shape.in_channels, cfg.in_channels_per_group());
+
+    let mut out = OutTensor::zeros(cfg.out_channels, cfg.oh(), cfg.ow());
+    let cpg = cfg.in_channels_per_group();
+    let kpg = cfg.out_channels_per_group();
+    for k in 0..cfg.out_channels {
+        let group = match cfg.kind {
+            ConvKind::Simple => 0,
+            ConvKind::Depthwise => k,
+            ConvKind::Grouped => k / kpg,
+        };
+        for oy in 0..cfg.oh() {
+            for ox in 0..cfg.ow() {
+                let mut acc: i32 = 0;
+                for ci in 0..cpg {
+                    let in_ch = group * cpg + ci;
+                    for ry in 0..cfg.fh {
+                        for rx in 0..cfg.fw {
+                            let iy = oy * cfg.stride + ry;
+                            let ix = ox * cfg.stride + rx;
+                            let a = input.get(in_ch, iy, ix) as i32;
+                            let w = weights.get(ci, k, ry, rx) as i32;
+                            acc += a * w;
+                        }
+                    }
+                }
+                let idx = out.index(k, oy, ox);
+                out.data[idx] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Binary (±1) convolution oracle: inputs/weights hold only +1/-1 (stored
+/// as i8); output = signed dot product, INT32.
+pub fn conv_ref_binary(cfg: &ConvConfig, input: &ActTensor, weights: &WeightTensor) -> OutTensor {
+    debug_assert!(input.data.iter().all(|&v| v == 1 || v == -1));
+    debug_assert!(weights.data.iter().all(|&v| v == 1 || v == -1));
+    conv_ref(cfg, input, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ActLayout, ActShape, WeightLayout, WeightShape};
+
+    #[test]
+    fn identity_filter_copies_input() {
+        // 1x1 conv with weight=1 on a single channel copies the input.
+        let cfg = ConvConfig::simple(4, 4, 1, 1, 1, 1, 1);
+        let mut input = ActTensor::zeros(ActShape::new(1, 4, 4), ActLayout::NCHWc { c: 1 });
+        for y in 0..4 {
+            for x in 0..4 {
+                input.set(0, y, x, (y * 4 + x) as i8);
+            }
+        }
+        let mut w = WeightTensor::zeros(WeightShape::new(1, 1, 1, 1), WeightLayout::CKRSc { c: 1 });
+        w.set(0, 0, 0, 0, 1);
+        let out = conv_ref(&cfg, &input, &w);
+        for y in 0..4 {
+            for x in 0..4 {
+                assert_eq!(out.get(0, y, x), (y * 4 + x) as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn box_filter_sums_window() {
+        let cfg = ConvConfig::simple(3, 3, 2, 2, 1, 1, 1);
+        let mut input = ActTensor::zeros(ActShape::new(1, 3, 3), ActLayout::NCHWc { c: 1 });
+        let mut v = 1i8;
+        for y in 0..3 {
+            for x in 0..3 {
+                input.set(0, y, x, v);
+                v += 1;
+            }
+        }
+        let mut w = WeightTensor::zeros(WeightShape::new(1, 1, 2, 2), WeightLayout::CKRSc { c: 1 });
+        for ry in 0..2 {
+            for rx in 0..2 {
+                w.set(0, 0, ry, rx, 1);
+            }
+        }
+        let out = conv_ref(&cfg, &input, &w);
+        // window at (0,0): 1+2+4+5 = 12
+        assert_eq!(out.get(0, 0, 0), 12);
+        // window at (1,1): 5+6+8+9 = 28
+        assert_eq!(out.get(0, 1, 1), 28);
+    }
+
+    #[test]
+    fn depthwise_keeps_channels_separate() {
+        let cfg = ConvConfig::depthwise(3, 3, 3, 3, 1, 2);
+        let mut input = ActTensor::zeros(ActShape::new(2, 3, 3), ActLayout::NCHWc { c: 2 });
+        for y in 0..3 {
+            for x in 0..3 {
+                input.set(0, y, x, 1);
+                input.set(1, y, x, 2);
+            }
+        }
+        // Depthwise weights: in_channels_per_group = 1.
+        let mut w = WeightTensor::zeros(WeightShape::new(1, 2, 3, 3), WeightLayout::CKRS);
+        for ry in 0..3 {
+            for rx in 0..3 {
+                w.set(0, 0, ry, rx, 1);
+                w.set(0, 1, ry, rx, 1);
+            }
+        }
+        let out = conv_ref(&cfg, &input, &w);
+        assert_eq!(out.get(0, 0, 0), 9);
+        assert_eq!(out.get(1, 0, 0), 18);
+    }
+
+    #[test]
+    fn stride_subsamples() {
+        let cfg = ConvConfig::simple(5, 5, 1, 1, 2, 1, 1);
+        let mut input = ActTensor::zeros(ActShape::new(1, 5, 5), ActLayout::NCHWc { c: 1 });
+        for y in 0..5 {
+            for x in 0..5 {
+                input.set(0, y, x, (10 * y + x) as i8);
+            }
+        }
+        let mut w = WeightTensor::zeros(WeightShape::new(1, 1, 1, 1), WeightLayout::CKRS);
+        w.set(0, 0, 0, 0, 1);
+        let out = conv_ref(&cfg, &input, &w);
+        assert_eq!(out.h, 3);
+        assert_eq!(out.get(0, 1, 2), 10 * 2 + 4);
+    }
+}

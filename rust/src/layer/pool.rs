@@ -1,0 +1,63 @@
+//! Pooling layer configuration. Pooling is not the paper's focus (conv
+//! dominates latency — §IV), but the model zoo needs it to express real
+//! networks, and the coordinator executes it as a cheap scalar pass.
+
+/// Max or average pooling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PoolConfig {
+    pub channels: usize,
+    /// Input spatial dims (pre-padded).
+    pub ih: usize,
+    pub iw: usize,
+    pub fh: usize,
+    pub fw: usize,
+    pub stride: usize,
+    pub kind: PoolKind,
+}
+
+impl PoolConfig {
+    pub fn max(channels: usize, ih: usize, iw: usize, f: usize, stride: usize) -> Self {
+        PoolConfig { channels, ih, iw, fh: f, fw: f, stride, kind: PoolKind::Max }
+    }
+
+    pub fn avg(channels: usize, ih: usize, iw: usize, f: usize, stride: usize) -> Self {
+        PoolConfig { channels, ih, iw, fh: f, fw: f, stride, kind: PoolKind::Avg }
+    }
+
+    pub fn oh(&self) -> usize {
+        (self.ih - self.fh) / self.stride + 1
+    }
+
+    pub fn ow(&self) -> usize {
+        (self.iw - self.fw) / self.stride + 1
+    }
+
+    /// Element reads performed (cost proxy for the e2e latency model).
+    pub fn reads(&self) -> u64 {
+        (self.channels * self.oh() * self.ow() * self.fh * self.fw) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims() {
+        let p = PoolConfig::max(64, 112, 112, 2, 2);
+        assert_eq!(p.oh(), 56);
+        assert_eq!(p.ow(), 56);
+    }
+
+    #[test]
+    fn reads_count() {
+        let p = PoolConfig::avg(2, 4, 4, 2, 2);
+        assert_eq!(p.reads(), (2 * 2 * 2 * 4) as u64);
+    }
+}

@@ -1,0 +1,60 @@
+//! # YFlows — systematic dataflow exploration and SIMD code generation
+//! for efficient neural-network inference on CPUs.
+//!
+//! Reproduction of Zhou et al., *"YFlows: Systematic Dataflow Exploration
+//! and Code Generation for Efficient Neural Network Inference using SIMD
+//! Architectures on CPUs"* (2023).
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — offline-environment stand-ins: PRNG, stats, a small
+//!   criterion-like bench harness, property-testing helpers, CLI parsing,
+//!   table/CSV rendering.
+//! * [`tensor`] — tensor shapes and memory layouts (NCHW / NHWC / NCHWc /
+//!   CKRSc) plus layout-transformation cost accounting (paper §II-D, §IV-C).
+//! * [`layer`] — layer configurations (simple / depthwise / grouped /
+//!   shuffled-group convolutions, pooling, dense).
+//! * [`isa`] — the abstract SIMD instruction set (ARM-NEON-like) that the
+//!   code generator targets: 128-bit vector registers, vload / vmla /
+//!   vredsum / … (paper §II, Algorithms 1–3).
+//! * [`machine`] — the abstract SIMD machine: a functional interpreter
+//!   (real numerics, bit-exact vs the naive oracle) and a performance model
+//!   (per-class instruction costs + L1/L2 data-cache and i-cache models)
+//!   calibrated to an ARM Neoverse-N1 (the paper's testbed).
+//! * [`dataflow`] — anchoring + auxiliary stationarities, the Table I
+//!   heuristics, and secondary-unroll allocation sequences (Algorithm 4).
+//! * [`codegen`] — the paper's code generator: basic IS/WS/OS dataflows
+//!   (Algorithms 1–3) and extended dataflows (Algorithms 5–7), plus binary
+//!   (XNOR-popcount) variants and an ARM-intrinsics C emitter.
+//! * [`quant`] — INT8 quantization and binarization / bit-plane packing.
+//! * [`baselines`] — comparison systems: scalar im2col+GEMM (TVM-default
+//!   surrogate), register-blocked weight-stationary conv (NeoCPU / tuned-TVM
+//!   surrogate), bitserial binary conv (Cowan et al. CGO'20 surrogate).
+//! * [`explore`] — the exploration engine (enumerate → heuristic-prune →
+//!   simulate → select) and the §IV-C dynamic-programming layout
+//!   synchronizer.
+//! * [`nets`] — model zoo (ResNet-18/34, VGG-11/13/16, DenseNet-121,
+//!   MobileNet-V1) as per-layer configuration lists.
+//! * [`coordinator`] — the inference session: per-layer plan selection,
+//!   compiled-program cache, threaded execution, request loop, metrics.
+//! * [`runtime`] — PJRT (via the `xla` crate) loader that executes the
+//!   AOT-lowered JAX/Pallas artifacts for numeric cross-validation.
+//! * [`report`] — renderers that regenerate every paper table and figure.
+
+pub mod util;
+pub mod tensor;
+pub mod layer;
+pub mod isa;
+pub mod machine;
+pub mod dataflow;
+pub mod codegen;
+pub mod quant;
+pub mod baselines;
+pub mod explore;
+pub mod nets;
+pub mod coordinator;
+pub mod runtime;
+pub mod report;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

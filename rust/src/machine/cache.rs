@@ -1,0 +1,192 @@
+//! Set-associative LRU cache model (L1D + L2) for the performance model.
+//!
+//! Calibrated to the paper's testbed, ARM Neoverse-N1: 64 KiB 4-way L1D,
+//! 1 MiB 8-way private L2, 64-byte lines. Only hit/miss classification is
+//! modeled — the perf model turns misses into cycle penalties.
+
+/// One cache level.
+#[derive(Clone, Debug)]
+pub struct Cache {
+    line_bytes: usize,
+    sets: usize,
+    ways: usize,
+    /// tags[set * ways + way]; u64::MAX = invalid.
+    tags: Vec<u64>,
+    /// LRU stamps, monotonically increasing counter.
+    stamps: Vec<u64>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    pub fn new(total_bytes: usize, ways: usize, line_bytes: usize) -> Cache {
+        let lines = total_bytes / line_bytes;
+        let sets = lines / ways;
+        assert!(sets.is_power_of_two(), "set count must be a power of two");
+        Cache {
+            line_bytes,
+            sets,
+            ways,
+            tags: vec![u64::MAX; sets * ways],
+            stamps: vec![0; sets * ways],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Neoverse-N1 L1 data cache: 64 KiB, 4-way, 64 B lines.
+    pub fn n1_l1d() -> Cache {
+        Cache::new(64 * 1024, 4, 64)
+    }
+
+    /// Neoverse-N1 private L2: 1 MiB, 8-way, 64 B lines.
+    pub fn n1_l2() -> Cache {
+        Cache::new(1024 * 1024, 8, 64)
+    }
+
+    /// Access `bytes` bytes at `addr`; returns the number of *missing*
+    /// lines (0 = all hit). A 16-byte vector access can straddle a line.
+    pub fn access(&mut self, addr: u64, bytes: usize) -> usize {
+        let first = addr / self.line_bytes as u64;
+        let last = (addr + bytes.max(1) as u64 - 1) / self.line_bytes as u64;
+        let mut missed = 0;
+        for line in first..=last {
+            if !self.touch(line) {
+                missed += 1;
+            }
+        }
+        missed
+    }
+
+    /// Touch one line; true = hit.
+    fn touch(&mut self, line: u64) -> bool {
+        self.tick += 1;
+        let set = (line as usize) & (self.sets - 1);
+        let base = set * self.ways;
+        // Hit?
+        for way in 0..self.ways {
+            if self.tags[base + way] == line {
+                self.stamps[base + way] = self.tick;
+                self.hits += 1;
+                return true;
+            }
+        }
+        // Miss: evict LRU.
+        self.misses += 1;
+        let mut victim = 0;
+        let mut oldest = u64::MAX;
+        for way in 0..self.ways {
+            if self.tags[base + way] == u64::MAX {
+                victim = way;
+                break;
+            }
+            if self.stamps[base + way] < oldest {
+                oldest = self.stamps[base + way];
+                victim = way;
+            }
+        }
+        self.tags[base + victim] = line;
+        self.stamps[base + victim] = self.tick;
+        false
+    }
+
+    /// Reset statistics but keep contents (for cold/steady-state sampling).
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Flush contents and statistics.
+    pub fn flush(&mut self) {
+        self.tags.fill(u64::MAX);
+        self.stamps.fill(0);
+        self.tick = 0;
+        self.reset_stats();
+    }
+}
+
+/// Two-level hierarchy: returns (l1_misses, l2_misses) per access.
+#[derive(Clone, Debug)]
+pub struct Hierarchy {
+    pub l1: Cache,
+    pub l2: Cache,
+}
+
+impl Hierarchy {
+    pub fn neoverse_n1() -> Hierarchy {
+        Hierarchy { l1: Cache::n1_l1d(), l2: Cache::n1_l2() }
+    }
+
+    /// Access; L2 sees only L1 misses (inclusive fill).
+    pub fn access(&mut self, addr: u64, bytes: usize) -> (usize, usize) {
+        let l1_miss = self.l1.access(addr, bytes);
+        let mut l2_miss = 0;
+        if l1_miss > 0 {
+            l2_miss = self.l2.access(addr, bytes);
+        }
+        (l1_miss, l2_miss)
+    }
+
+    pub fn flush(&mut self) {
+        self.l1.flush();
+        self.l2.flush();
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.l1.reset_stats();
+        self.l2.reset_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeat_access_hits() {
+        let mut c = Cache::new(1024, 2, 64);
+        assert_eq!(c.access(0, 16), 1); // cold miss
+        assert_eq!(c.access(0, 16), 0); // hit
+        assert_eq!(c.access(48, 32), 1); // straddles into the next line
+        assert_eq!(c.hits, 2); // line 0 hit twice (second access + straddle)
+    }
+
+    #[test]
+    fn lru_eviction() {
+        // 2 sets x 2 ways x 64B = 256B cache. Lines mapping to set 0: 0,2,4...
+        let mut c = Cache::new(256, 2, 64);
+        assert_eq!(c.access(0 * 64, 1), 1); // line 0 -> set 0
+        assert_eq!(c.access(2 * 64, 1), 1); // line 2 -> set 0
+        assert_eq!(c.access(0 * 64, 1), 0); // refresh line 0
+        assert_eq!(c.access(4 * 64, 1), 1); // evicts line 2 (LRU)
+        assert_eq!(c.access(2 * 64, 1), 1); // line 2 gone (evicts line 0, now LRU)
+        assert_eq!(c.access(4 * 64, 1), 0); // line 4 kept
+    }
+
+    #[test]
+    fn working_set_fits_l1() {
+        let mut h = Hierarchy::neoverse_n1();
+        // 32 KiB working set streamed twice: second pass must be all-hit.
+        for pass in 0..2 {
+            h.reset_stats();
+            let mut addr = 0u64;
+            while addr < 32 * 1024 {
+                h.access(addr, 16);
+                addr += 16;
+            }
+            if pass == 1 {
+                assert_eq!(h.l1.misses, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn flush_clears() {
+        let mut c = Cache::new(1024, 2, 64);
+        c.access(0, 16);
+        c.flush();
+        assert_eq!(c.access(0, 16), 1);
+    }
+}

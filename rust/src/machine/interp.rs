@@ -1,0 +1,485 @@
+//! Functional interpreter: executes generated programs on real data.
+//!
+//! INT8 mode widens each 8-bit lane to i32 at load time (the NEON kernels
+//! do the same via vmull/saddl chains — we model the *macro* semantics).
+//! Binary mode keeps 128 bits per register as two u64 words.
+//!
+//! The interpreter is the hot path of every wall-clock benchmark, so the
+//! inner loop avoids per-instruction allocation and bounds checks are
+//! hoisted where possible.
+
+use crate::isa::{Buf, Mode, Program, VInstr, I8_LANES, REG_BYTES};
+
+use super::Bases;
+
+/// The three memory spaces bound for execution.
+pub struct Buffers<'a> {
+    /// INT8 input bytes (or packed binary bits).
+    pub input: &'a [i8],
+    /// INT8 weight bytes (or packed binary bits).
+    pub weight: &'a [i8],
+    /// INT32 outputs (accumulated in place).
+    pub output: &'a mut [i32],
+}
+
+/// Register state: 16 i32 lanes per register (INT8 mode) — binary mode
+/// reinterprets the first 2 lanes' storage as 2×u64 via a separate file.
+#[derive(Clone)]
+pub struct Interp {
+    /// i32 lanes, 16 per register.
+    lanes: Vec<i32>,
+    /// binary registers: 2×u64 per register.
+    bits: Vec<u64>,
+    num_regs: usize,
+}
+
+impl Interp {
+    pub fn new(num_regs: usize) -> Interp {
+        Interp {
+            lanes: vec![0; num_regs * I8_LANES],
+            bits: vec![0; num_regs * 2],
+            num_regs,
+        }
+    }
+
+    /// Execute `prog` once with the given buffer bases.
+    ///
+    /// Panics on out-of-bounds access (generated programs are validated
+    /// against layer bounds by the coordinator before execution; a panic
+    /// here means a codegen bug, which tests are designed to surface).
+    pub fn run(&mut self, prog: &Program, bufs: &mut Buffers, bases: Bases) {
+        assert!(prog.regs_used <= self.num_regs);
+        match prog.mode {
+            Mode::Int8 => self.run_int8(prog, bufs, bases),
+            Mode::Binary => self.run_binary(prog, bufs, bases),
+        }
+    }
+
+    /// Check that every access of `prog` under `bases` stays inside the
+    /// bound buffers — the precondition of [`Interp::run_fast`]. O(1)
+    /// (uses the program's precomputed max offsets), so callers can
+    /// validate a whole invocation schedule cheaply.
+    pub fn bounds_ok(prog: &Program, bufs: &Buffers, bases: Bases) -> bool {
+        use crate::isa::Buf;
+        let fits = |max: Option<u32>, base: u32, len: usize| match max {
+            None => true,
+            Some(m) => base as usize + m as usize <= len,
+        };
+        fits(prog.max_offset(Buf::In), bases.input, bufs.input.len())
+            && fits(prog.max_offset(Buf::Wgt), bases.weight, bufs.weight.len())
+            && fits(prog.max_offset(Buf::Out), bases.output, bufs.output.len())
+    }
+
+    /// Fast-path execution: identical semantics to [`Interp::run`] but
+    /// with unchecked buffer/lane indexing in the hot loops (§Perf
+    /// optimization — see EXPERIMENTS.md). Callers MUST have verified
+    /// [`Interp::bounds_ok`] for this (program, buffers, bases) triple;
+    /// `debug_assert`s re-check in debug builds.
+    pub fn run_fast(&mut self, prog: &Program, bufs: &mut Buffers, bases: Bases) {
+        debug_assert!(Self::bounds_ok(prog, bufs, bases));
+        assert!(prog.regs_used <= self.num_regs);
+        match prog.mode {
+            Mode::Int8 => self.run_int8_fast(prog, bufs, bases),
+            Mode::Binary => self.run_binary(prog, bufs, bases),
+        }
+    }
+
+    fn run_int8_fast(&mut self, prog: &Program, bufs: &mut Buffers, bases: Bases) {
+        let lanes = &mut self.lanes[..];
+        // Hoist the per-buffer base pointers out of the dispatch loop
+        // (§Perf: saves the buf-select branch + slice re-borrow per load).
+        let in_ptr = unsafe { bufs.input.as_ptr().add(bases.input as usize) };
+        let wgt_ptr = unsafe { bufs.weight.as_ptr().add(bases.weight as usize) };
+        // SAFETY throughout: register ids < num_regs (asserted above) and
+        // buffer offsets were validated via bounds_ok; all lane indices
+        // are reg*16+l with l < 16.
+        for instr in &prog.instrs {
+            match *instr {
+                VInstr::VLoad { dst, buf, off } => unsafe {
+                    let src = match buf {
+                        Buf::In => in_ptr.add(off as usize),
+                        Buf::Wgt => wgt_ptr.add(off as usize),
+                        Buf::Out => unreachable!("VLoad from Out"),
+                    };
+                    let d = dst as usize * I8_LANES;
+                    for l in 0..I8_LANES {
+                        *lanes.get_unchecked_mut(d + l) = *src.add(l) as i32;
+                    }
+                },
+                VInstr::VDupZero { dst } => {
+                    let d = dst as usize * I8_LANES;
+                    lanes[d..d + I8_LANES].fill(0);
+                }
+                VInstr::VMla { acc, a, b } => unsafe {
+                    let (d, a, b) =
+                        (acc as usize * I8_LANES, a as usize * I8_LANES, b as usize * I8_LANES);
+                    for l in 0..I8_LANES {
+                        *lanes.get_unchecked_mut(d + l) +=
+                            *lanes.get_unchecked(a + l) * *lanes.get_unchecked(b + l);
+                    }
+                },
+                VInstr::VMul { dst, a, b } => unsafe {
+                    let (d, a, b) =
+                        (dst as usize * I8_LANES, a as usize * I8_LANES, b as usize * I8_LANES);
+                    for l in 0..I8_LANES {
+                        *lanes.get_unchecked_mut(d + l) =
+                            *lanes.get_unchecked(a + l) * *lanes.get_unchecked(b + l);
+                    }
+                },
+                VInstr::VAdd { dst, a, b } => unsafe {
+                    let (d, a, b) =
+                        (dst as usize * I8_LANES, a as usize * I8_LANES, b as usize * I8_LANES);
+                    for l in 0..I8_LANES {
+                        *lanes.get_unchecked_mut(d + l) =
+                            *lanes.get_unchecked(a + l) + *lanes.get_unchecked(b + l);
+                    }
+                },
+                VInstr::VMov { dst, src } => {
+                    let (d, s) = (dst as usize * I8_LANES, src as usize * I8_LANES);
+                    lanes.copy_within(s..s + I8_LANES, d);
+                }
+                VInstr::RedSumAcc { src, off } => unsafe {
+                    let s = src as usize * I8_LANES;
+                    let mut sum = 0i32;
+                    for l in 0..I8_LANES {
+                        sum += *lanes.get_unchecked(s + l);
+                    }
+                    *bufs.output.get_unchecked_mut((bases.output + off) as usize) += sum;
+                },
+                VInstr::RedSumStore { src, off } => unsafe {
+                    let s = src as usize * I8_LANES;
+                    let mut sum = 0i32;
+                    for l in 0..I8_LANES {
+                        sum += *lanes.get_unchecked(s + l);
+                    }
+                    *bufs.output.get_unchecked_mut((bases.output + off) as usize) = sum;
+                },
+                VInstr::RedSumScaleAcc { src, off, scale, bias } => unsafe {
+                    let s = src as usize * I8_LANES;
+                    let mut sum = 0i32;
+                    for l in 0..I8_LANES {
+                        sum += *lanes.get_unchecked(s + l);
+                    }
+                    *bufs.output.get_unchecked_mut((bases.output + off) as usize) +=
+                        bias + scale * sum;
+                },
+                VInstr::VStoreOut { src, off } => {
+                    let s = src as usize * I8_LANES;
+                    let base = (bases.output + off) as usize;
+                    bufs.output[base..base + I8_LANES].copy_from_slice(&lanes[s..s + I8_LANES]);
+                }
+                VInstr::VAccOut { src, off } => {
+                    let s = src as usize * I8_LANES;
+                    let base = (bases.output + off) as usize;
+                    for l in 0..I8_LANES {
+                        bufs.output[base + l] += lanes[s + l];
+                    }
+                }
+                _ => {
+                    // Rare instructions fall back to the checked path
+                    // (none exist in Int8 mode today; defensive).
+                    panic!("unsupported instruction in Int8 fast path: {instr:?}")
+                }
+            }
+        }
+    }
+
+    fn run_int8(&mut self, prog: &Program, bufs: &mut Buffers, bases: Bases) {
+        let lanes = &mut self.lanes;
+        for instr in &prog.instrs {
+            match *instr {
+                VInstr::VLoad { dst, buf, off } => {
+                    let src: &[i8] = match buf {
+                        Buf::In => &bufs.input[(bases.input + off) as usize..],
+                        Buf::Wgt => &bufs.weight[(bases.weight + off) as usize..],
+                        Buf::Out => panic!("VLoad from Out is not defined"),
+                    };
+                    let d = dst as usize * I8_LANES;
+                    for l in 0..I8_LANES {
+                        lanes[d + l] = src[l] as i32;
+                    }
+                }
+                VInstr::VStore { .. } => panic!("VStore to operand in conv kernel"),
+                VInstr::VDupZero { dst } => {
+                    let d = dst as usize * I8_LANES;
+                    lanes[d..d + I8_LANES].fill(0);
+                }
+                VInstr::VMul { dst, a, b } => {
+                    let (d, a, b) = (dst as usize * I8_LANES, a as usize * I8_LANES, b as usize * I8_LANES);
+                    for l in 0..I8_LANES {
+                        lanes[d + l] = lanes[a + l] * lanes[b + l];
+                    }
+                }
+                VInstr::VMla { acc, a, b } => {
+                    let (d, a, b) = (acc as usize * I8_LANES, a as usize * I8_LANES, b as usize * I8_LANES);
+                    for l in 0..I8_LANES {
+                        lanes[d + l] += lanes[a + l] * lanes[b + l];
+                    }
+                }
+                VInstr::VAdd { dst, a, b } => {
+                    let (d, a, b) = (dst as usize * I8_LANES, a as usize * I8_LANES, b as usize * I8_LANES);
+                    for l in 0..I8_LANES {
+                        lanes[d + l] = lanes[a + l] + lanes[b + l];
+                    }
+                }
+                VInstr::VMov { dst, src } => {
+                    let (d, s) = (dst as usize * I8_LANES, src as usize * I8_LANES);
+                    lanes.copy_within(s..s + I8_LANES, d);
+                }
+                VInstr::RedSumAcc { src, off } => {
+                    let s = src as usize * I8_LANES;
+                    let sum: i32 = lanes[s..s + I8_LANES].iter().sum();
+                    bufs.output[(bases.output + off) as usize] += sum;
+                }
+                VInstr::RedSumStore { src, off } => {
+                    let s = src as usize * I8_LANES;
+                    let sum: i32 = lanes[s..s + I8_LANES].iter().sum();
+                    bufs.output[(bases.output + off) as usize] = sum;
+                }
+                VInstr::VStoreOut { src, off } => {
+                    let s = src as usize * I8_LANES;
+                    let base = (bases.output + off) as usize;
+                    bufs.output[base..base + I8_LANES].copy_from_slice(&lanes[s..s + I8_LANES]);
+                }
+                VInstr::VAccOut { src, off } => {
+                    let s = src as usize * I8_LANES;
+                    let base = (bases.output + off) as usize;
+                    for l in 0..I8_LANES {
+                        bufs.output[base + l] += lanes[s + l];
+                    }
+                }
+                VInstr::RedSumScaleAcc { src, off, scale, bias } => {
+                    let s = src as usize * I8_LANES;
+                    let sum: i32 = lanes[s..s + I8_LANES].iter().sum();
+                    bufs.output[(bases.output + off) as usize] += bias + scale * sum;
+                }
+                VInstr::VXor { .. }
+                | VInstr::VAnd { .. }
+                | VInstr::VCntAcc { .. }
+                | VInstr::PopcntAcc { .. } => {
+                    panic!("binary op in Int8 program (validation should have caught this)")
+                }
+            }
+        }
+    }
+
+    fn run_binary(&mut self, prog: &Program, bufs: &mut Buffers, bases: Bases) {
+        let bits = &mut self.bits;
+        for instr in &prog.instrs {
+            match *instr {
+                VInstr::VLoad { dst, buf, off } => {
+                    let src: &[i8] = match buf {
+                        Buf::In => &bufs.input[(bases.input + off) as usize..],
+                        Buf::Wgt => &bufs.weight[(bases.weight + off) as usize..],
+                        Buf::Out => panic!("VLoad from Out is not defined"),
+                    };
+                    let d = dst as usize * 2;
+                    bits[d] = word_le(&src[0..8]);
+                    bits[d + 1] = word_le(&src[8..REG_BYTES]);
+                }
+                VInstr::VDupZero { dst } => {
+                    let d = dst as usize * 2;
+                    bits[d] = 0;
+                    bits[d + 1] = 0;
+                }
+                VInstr::VXor { dst, a, b } => {
+                    let (d, a, b) = (dst as usize * 2, a as usize * 2, b as usize * 2);
+                    bits[d] = bits[a] ^ bits[b];
+                    bits[d + 1] = bits[a + 1] ^ bits[b + 1];
+                }
+                VInstr::VAnd { dst, a, b } => {
+                    let (d, a, b) = (dst as usize * 2, a as usize * 2, b as usize * 2);
+                    bits[d] = bits[a] & bits[b];
+                    bits[d + 1] = bits[a + 1] & bits[b + 1];
+                }
+                VInstr::VMov { dst, src } => {
+                    let (d, s) = (dst as usize * 2, src as usize * 2);
+                    bits[d] = bits[s];
+                    bits[d + 1] = bits[s + 1];
+                }
+                VInstr::PopcntAcc { src, off, scale, bias } => {
+                    let s = src as usize * 2;
+                    let cnt = (bits[s].count_ones() + bits[s + 1].count_ones()) as i32;
+                    bufs.output[(bases.output + off) as usize] += bias + scale * cnt;
+                }
+                VInstr::VCntAcc { acc, src } => {
+                    // Per-byte popcount of src, accumulated per byte lane
+                    // without inter-byte carry (NEON vcnt + vadd.u8).
+                    let (a, s) = (acc as usize * 2, src as usize * 2);
+                    bits[a] = bytewise_add(bits[a], bytewise_popcount(bits[s]));
+                    bits[a + 1] = bytewise_add(bits[a + 1], bytewise_popcount(bits[s + 1]));
+                }
+                VInstr::RedSumScaleAcc { src, off, scale, bias } => {
+                    // Sum the 16 count bytes of a VCntAcc accumulator.
+                    let s = src as usize * 2;
+                    let sum = (byte_lane_sum(bits[s]) + byte_lane_sum(bits[s + 1])) as i32;
+                    bufs.output[(bases.output + off) as usize] += bias + scale * sum;
+                }
+                other => panic!("instruction {other:?} not defined in Binary mode"),
+            }
+        }
+    }
+}
+
+/// SWAR per-byte popcount: each byte of the result holds the popcount of
+/// the corresponding byte of `x` (0..=8) — semantics of NEON `vcnt.u8`.
+#[inline]
+fn bytewise_popcount(x: u64) -> u64 {
+    let mut v = x;
+    v = v - ((v >> 1) & 0x5555_5555_5555_5555);
+    v = (v & 0x3333_3333_3333_3333) + ((v >> 2) & 0x3333_3333_3333_3333);
+    (v + (v >> 4)) & 0x0F0F_0F0F_0F0F_0F0F
+}
+
+/// Per-byte add without carry propagation between bytes. Valid while each
+/// byte sum stays < 256 (codegen flushes accumulators well before that).
+#[inline]
+fn bytewise_add(a: u64, b: u64) -> u64 {
+    let low = (a & 0x7F7F_7F7F_7F7F_7F7F) + (b & 0x7F7F_7F7F_7F7F_7F7F);
+    low ^ ((a ^ b) & 0x8080_8080_8080_8080)
+}
+
+/// Sum of the 8 byte lanes of a word.
+#[inline]
+fn byte_lane_sum(x: u64) -> u64 {
+    x.to_le_bytes().iter().map(|&b| b as u64).sum()
+}
+
+#[inline]
+fn word_le(bytes: &[i8]) -> u64 {
+    let mut w = 0u64;
+    for (i, &b) in bytes.iter().enumerate() {
+        w |= (b as u8 as u64) << (8 * i);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Program;
+
+    #[test]
+    fn int8_dot_product() {
+        // out[0] += Σ in[0..16] * wgt[0..16]
+        let prog = Program::new(
+            "dot",
+            Mode::Int8,
+            vec![
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VLoad { dst: 1, buf: Buf::Wgt, off: 0 },
+                VInstr::VMul { dst: 2, a: 0, b: 1 },
+                VInstr::RedSumAcc { src: 2, off: 0 },
+            ],
+        );
+        let input: Vec<i8> = (0..16).map(|i| i as i8).collect();
+        let weight: Vec<i8> = vec![2; 16];
+        let mut output = vec![10i32];
+        let mut interp = Interp::new(8);
+        interp.run(
+            &prog,
+            &mut Buffers { input: &input, weight: &weight, output: &mut output },
+            Bases::default(),
+        );
+        let expected: i32 = 10 + (0..16).map(|i| i * 2).sum::<i32>();
+        assert_eq!(output[0], expected);
+    }
+
+    #[test]
+    fn int8_mla_accumulates() {
+        let prog = Program::new(
+            "mla",
+            Mode::Int8,
+            vec![
+                VInstr::VDupZero { dst: 2 },
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VLoad { dst: 1, buf: Buf::Wgt, off: 0 },
+                VInstr::VMla { acc: 2, a: 0, b: 1 },
+                VInstr::VMla { acc: 2, a: 0, b: 1 },
+                VInstr::RedSumStore { src: 2, off: 0 },
+            ],
+        );
+        let input = vec![3i8; 16];
+        let weight = vec![1i8; 16];
+        let mut output = vec![0i32];
+        Interp::new(4).run(
+            &prog,
+            &mut Buffers { input: &input, weight: &weight, output: &mut output },
+            Bases::default(),
+        );
+        assert_eq!(output[0], 2 * 16 * 3);
+    }
+
+    #[test]
+    fn bases_shift_accesses() {
+        let prog = Program::new(
+            "b",
+            Mode::Int8,
+            vec![
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VLoad { dst: 1, buf: Buf::Wgt, off: 0 },
+                VInstr::VMul { dst: 2, a: 0, b: 1 },
+                VInstr::RedSumStore { src: 2, off: 0 },
+            ],
+        );
+        let mut input = vec![0i8; 32];
+        input[16..].fill(1);
+        let weight = vec![1i8; 16];
+        let mut output = vec![0i32; 2];
+        Interp::new(4).run(
+            &prog,
+            &mut Buffers { input: &input, weight: &weight, output: &mut output },
+            Bases { input: 16, weight: 0, output: 1 },
+        );
+        assert_eq!(output, vec![0, 16]);
+    }
+
+    #[test]
+    fn binary_xnor_popcount() {
+        // XNOR dot product of two 128-bit vectors via xor + popcount:
+        // dot = lanes - 2*popcount(a^b).
+        let prog = Program::new(
+            "bxor",
+            Mode::Binary,
+            vec![
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VLoad { dst: 1, buf: Buf::Wgt, off: 0 },
+                VInstr::VXor { dst: 2, a: 0, b: 1 },
+                VInstr::PopcntAcc { src: 2, off: 0, scale: -2, bias: 128 },
+            ],
+        );
+        // input = all ones bits (= all +1), weight = all zero bits (= all -1)
+        let input = vec![-1i8; 16]; // 0xFF bytes
+        let weight = vec![0i8; 16];
+        let mut output = vec![0i32];
+        Interp::new(4).run(
+            &prog,
+            &mut Buffers { input: &input, weight: &weight, output: &mut output },
+            Bases::default(),
+        );
+        // all lanes disagree: dot = -128
+        assert_eq!(output[0], 128 - 2 * 128);
+    }
+
+    #[test]
+    fn vmov_copies_register() {
+        let prog = Program::new(
+            "mov",
+            Mode::Int8,
+            vec![
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VMov { dst: 3, src: 0 },
+                VInstr::RedSumStore { src: 3, off: 0 },
+            ],
+        );
+        let input: Vec<i8> = (1..=16).collect();
+        let weight = vec![0i8; 16];
+        let mut output = vec![0i32];
+        Interp::new(4).run(
+            &prog,
+            &mut Buffers { input: &input, weight: &weight, output: &mut output },
+            Bases::default(),
+        );
+        assert_eq!(output[0], (1..=16).sum::<i32>());
+    }
+}

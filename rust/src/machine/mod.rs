@@ -1,0 +1,129 @@
+//! The abstract SIMD machine the generated programs run on.
+//!
+//! Two independent consumers of the same [`crate::isa::Program`]:
+//!
+//! * [`interp`] — a *functional* interpreter: executes the program on real
+//!   INT8 / bit-packed data and produces INT32 outputs. Used for
+//!   correctness (bit-exact vs the naive oracle) and for wall-clock
+//!   benchmarks (its runtime is monotone in the instruction count, giving
+//!   a second latency proxy independent of the cost model).
+//! * [`perf`] — a *performance* model: walks the instruction stream with a
+//!   data-cache + i-cache simulator ([`cache`]) and per-class instruction
+//!   costs calibrated to the paper's testbed (ARM Neoverse-N1), producing
+//!   modeled cycles and the memory-operation counters that Table I
+//!   reasons about.
+
+pub mod cache;
+pub mod interp;
+pub mod perf;
+
+pub use interp::{Buffers, Interp};
+pub use perf::{CostModel, PerfStats, PerfModel};
+
+/// Machine configuration (the paper's §II-E register-file terms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MachineConfig {
+    /// Number of 128-bit physical vector registers (NEON/aarch64: 32).
+    pub num_regs: usize,
+    /// Vector-variable size in bits (paper sweeps 128 / 256 / 512).
+    pub vec_var_bits: usize,
+}
+
+impl MachineConfig {
+    /// aarch64 NEON: 32 × 128-bit registers.
+    pub fn neon(vec_var_bits: usize) -> Self {
+        assert!(
+            vec_var_bits % crate::isa::REG_BITS == 0,
+            "vector variable must be a multiple of the register size"
+        );
+        MachineConfig { num_regs: 32, vec_var_bits }
+    }
+
+    /// x86-64 AVX2: 16 architectural ymm registers, modeled as 32
+    /// 128-bit halves (one 256-bit vector variable = one ymm). The paper
+    /// evaluates both x86 and ARM; the interesting contrast is the
+    /// *register count* — 16 variables instead of 32 leaves fewer
+    /// auxiliary slots, shrinking extended-dataflow gains.
+    pub fn avx2() -> Self {
+        MachineConfig { num_regs: 32, vec_var_bits: 256 }
+    }
+
+    /// x86-64 SSE4: 16 × 128-bit xmm registers — the smallest register
+    /// file swept (16 variables, 13 auxiliary).
+    pub fn sse4() -> Self {
+        MachineConfig { num_regs: 16, vec_var_bits: 128 }
+    }
+
+    /// Registers per vector variable (n in §IV-B: size(vec_var)/size(vec_reg)).
+    pub fn regs_per_var(&self) -> usize {
+        self.vec_var_bits / crate::isa::REG_BITS
+    }
+
+    /// Total vector variables the register file can hold.
+    pub fn vars_available(&self) -> usize {
+        self.num_regs / self.regs_per_var()
+    }
+
+    /// Vector variables available for auxiliary data after the three
+    /// anchoring variables (input/weight/output) are allocated (Alg. 8).
+    pub fn aux_vars_available(&self) -> usize {
+        self.vars_available().saturating_sub(3)
+    }
+
+    /// INT8 elements per vector variable (the channel-block size c).
+    pub fn c_int8(&self) -> usize {
+        self.vec_var_bits / 8
+    }
+
+    /// Binary elements (bits) per vector variable.
+    pub fn c_binary(&self) -> usize {
+        self.vec_var_bits
+    }
+}
+
+/// Buffer base offsets for one program invocation (one iblk/wblk/oblk
+/// combination): byte offsets for In/Wgt, element offset for Out.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Bases {
+    pub input: u32,
+    pub weight: u32,
+    pub output: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neon_config_derived_quantities() {
+        let m = MachineConfig::neon(128);
+        assert_eq!(m.regs_per_var(), 1);
+        assert_eq!(m.vars_available(), 32);
+        assert_eq!(m.aux_vars_available(), 29);
+        assert_eq!(m.c_int8(), 16);
+        assert_eq!(m.c_binary(), 128);
+
+        let m = MachineConfig::neon(512);
+        assert_eq!(m.regs_per_var(), 4);
+        assert_eq!(m.vars_available(), 8);
+        assert_eq!(m.aux_vars_available(), 5);
+        assert_eq!(m.c_int8(), 64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_multiple_var_size() {
+        MachineConfig::neon(200);
+    }
+
+    #[test]
+    fn x86_register_files() {
+        let avx2 = MachineConfig::avx2();
+        assert_eq!(avx2.vars_available(), 16); // 16 ymm
+        assert_eq!(avx2.aux_vars_available(), 13);
+        assert_eq!(avx2.c_int8(), 32);
+        let sse = MachineConfig::sse4();
+        assert_eq!(sse.vars_available(), 16);
+        assert_eq!(sse.c_int8(), 16);
+    }
+}

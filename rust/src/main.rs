@@ -1,0 +1,235 @@
+//! `yflows` — CLI entrypoint.
+//!
+//! Subcommands regenerate every table/figure of the paper's evaluation,
+//! run the explorer on a single layer, dump generated NEON C, execute the
+//! end-to-end coordinator, and cross-validate against the PJRT artifacts.
+
+use yflows::dataflow::{Anchor, DataflowSpec};
+use yflows::layer::ConvConfig;
+use yflows::machine::MachineConfig;
+use yflows::nets;
+use yflows::report::{self, Sweep};
+use yflows::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "yflows — systematic SIMD dataflow exploration (paper reproduction)
+
+USAGE: yflows <command> [options]
+
+Experiments (paper artifacts):
+  fig2        Basic dataflow comparison (Fig 2)       [--quick]
+  table1      Heuristic validation (Table I)          [--f 3 --i 56 --vl 128]
+  fig7        Extended dataflow comparison (Fig 7a/b) [--quick]
+  findings    Findings 1-5 validation                 [--quick]
+  fig8        End-to-end INT8 nets vs TVM (Fig 8)     [--nets resnet18,vgg16 --threads 1,2,4]
+  fig9        Binary layers vs bitserial (Fig 9)
+  vgg-neocpu  VGG conv layers vs NeoCPU-WS (§VI-B)
+  ablation    Design-choice ablations (Alg 4, reductions, jam)
+  isa-compare Register-file comparison (NEON/SSE4/AVX2/SVE)
+
+Tools:
+  explore     Explore dataflows for one conv layer    [--f 3 --i 56 --nf 128 --s 1 --vl 128]
+  codegen     Dump generated NEON C for a dataflow    [--anchor os --f 3 --i 8]
+  plan        Plan a network end-to-end               [--net resnet18 --vl 128]
+  validate    Cross-validate vs PJRT artifact         [--artifact artifacts/conv3x3.hlo.txt]
+
+Common options: --quick (reduced sweep), --sample N (perf-model sampling), --out DIR (CSV dir)"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> yflows::Result<()> {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    // Optional config file (see configs/default.toml) — CLI flags win.
+    let file_cfg = match args.opt("config") {
+        Some(path) => yflows::util::config::Config::load(path)?,
+        None => yflows::util::config::Config::default(),
+    };
+    let sample = args.get_parse::<usize>(
+        "sample",
+        file_cfg.get_parse("planner", "perf_sample", 2usize),
+    );
+    let sweep = if quick {
+        Sweep::quick()
+    } else if args.opt("config").is_some() {
+        yflows::util::config::sweep_from(&file_cfg)
+    } else {
+        Sweep::paper()
+    };
+    let outdir = args.get("out", "results").to_string();
+    std::fs::create_dir_all(&outdir).ok();
+
+    match args.command.as_deref() {
+        Some("fig2") => {
+            let (t, rows) = report::fig2::run(&sweep, sample);
+            println!("{}", t.render());
+            println!("{}", report::fig2::summary(&rows));
+            t.write_csv(&format!("{outdir}/fig2.csv"))?;
+        }
+        Some("table1") => {
+            let f = args.get_parse::<usize>("f", 3);
+            let i = args.get_parse::<usize>("i", 56);
+            let vl = args.get_parse::<usize>("vl", 128);
+            let machine = MachineConfig::neon(vl);
+            let cfg = ConvConfig::simple(i, i, f, f, 1, machine.c_int8(), 128);
+            let (t, _) = report::table1::run(&cfg, &machine);
+            println!("{}", t.render());
+            t.write_csv(&format!("{outdir}/table1.csv"))?;
+        }
+        Some("fig7") => {
+            let survivors = args.get_parse::<usize>("survivors", if quick { 2 } else { 4 });
+            let (ta, tb, rows) = report::fig7::run(&sweep, survivors, sample);
+            println!("== Fig 7a: extended over basic ==\n{}", ta.render());
+            println!("== Fig 7b: relative latency of extended ==\n{}", tb.render());
+            println!("{}", report::fig7::summary_text(&report::fig7::summarize(&rows)));
+            ta.write_csv(&format!("{outdir}/fig7a.csv"))?;
+            tb.write_csv(&format!("{outdir}/fig7b.csv"))?;
+        }
+        Some("findings") => {
+            let (t, _) = report::findings::run(&sweep, sample);
+            println!("{}", t.render());
+            t.write_csv(&format!("{outdir}/findings.csv"))?;
+        }
+        Some("fig8") => {
+            let net_names = args.get("nets", "resnet18,resnet34,vgg11,vgg13,vgg16,densenet121");
+            let nets: Vec<_> = net_names
+                .split(',')
+                .filter_map(nets::by_name)
+                .collect();
+            let threads = args.get_usize_list("threads", &[1, 2, 4]);
+            let vl = args.get_parse::<usize>("vl", 128);
+            let (t, rows) = report::fig8::run(&nets, &threads, vl, sample);
+            println!("{}", t.render());
+            println!("{}", report::fig8::summary(&rows));
+            t.write_csv(&format!("{outdir}/fig8.csv"))?;
+        }
+        Some("fig9") => {
+            let layers = report::fig9::binary_resnet_layers();
+            let (t, rows) = report::fig9::run(&layers, sample);
+            println!("{}", t.render());
+            println!("{}", report::fig9::summary(&rows));
+            t.write_csv(&format!("{outdir}/fig9.csv"))?;
+        }
+        Some("vgg-neocpu") => {
+            let layers = report::vgg_neocpu::vgg_conv_layers();
+            let vl = args.get_parse::<usize>("vl", 128);
+            let (t, rows) = report::vgg_neocpu::run(&layers, vl, sample);
+            println!("{}", t.render());
+            println!("{}", report::vgg_neocpu::summary(&rows));
+            t.write_csv(&format!("{outdir}/vgg_neocpu.csv"))?;
+        }
+        Some("ablation") => {
+            let f = args.get_parse::<usize>("f", 3);
+            let i = args.get_parse::<usize>("i", 28);
+            let vl = args.get_parse::<usize>("vl", 128);
+            let machine = MachineConfig::neon(vl);
+            let cfg = ConvConfig::simple(i, i, f, f, 1, machine.c_int8(), 32);
+            let (t1, r1) = report::ablation::secondary_unroll(&cfg, &machine, sample);
+            println!("== Ablation 1: secondary unrolling (Alg 4) ==\n{}", t1.render());
+            println!("naive rotation is {r1:.2}x slower\n");
+            let (t2, r2) = report::ablation::in_register_reduction(&cfg, &machine, sample);
+            println!("== Ablation 2: in-register reduction ==\n{}", t2.render());
+            println!("per-MAC reduction is {r2:.2}x slower\n");
+            let t3 = report::ablation::weight_stash_sweep(&cfg, &machine, sample);
+            println!("== Ablation 3: weight-stash variable sweep ==\n{}", t3.render());
+            let t4 = report::ablation::jam_sweep(&cfg, &machine, sample);
+            println!("== Ablation 4: unroll-and-jam width sweep (§VII-a) ==\n{}", t4.render());
+        }
+        Some("explore") => {
+            let f = args.get_parse::<usize>("f", 3);
+            let i = args.get_parse::<usize>("i", 56);
+            let nf = args.get_parse::<usize>("nf", 128);
+            let s = args.get_parse::<usize>("s", 1);
+            let vl = args.get_parse::<usize>("vl", 128);
+            let machine = MachineConfig::neon(vl);
+            let cfg = ConvConfig::simple(i, i, f, f, s, machine.c_int8(), nf);
+            let ex = yflows::explore::explore(&cfg, &machine, &Default::default());
+            let mut t = yflows::util::table::Table::new(&["dataflow", "heuristic", "cycles", "mem_reads", "mem_writes"]);
+            let mut cands = ex.candidates.clone();
+            cands.sort_by(|a, b| a.stats.cycles.partial_cmp(&b.stats.cycles).unwrap());
+            for c in &cands {
+                t.row(&[
+                    c.spec.name(),
+                    format!("{:.0}", c.heuristic_gain),
+                    format!("{:.0}", c.stats.cycles),
+                    c.stats.mem_reads.to_string(),
+                    c.stats.mem_writes.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("winner: {}", ex.best().spec.name());
+        }
+        Some("codegen") => {
+            let f = args.get_parse::<usize>("f", 3);
+            let i = args.get_parse::<usize>("i", 8);
+            let vl = args.get_parse::<usize>("vl", 128);
+            let machine = MachineConfig::neon(vl);
+            let cfg = ConvConfig::simple(i, i, f, f, 1, machine.c_int8(), 1);
+            let anchor = match args.get("anchor", "os") {
+                "is" => Anchor::Input,
+                "ws" => Anchor::Weight,
+                _ => Anchor::Output,
+            };
+            let spec = if args.flag("basic") {
+                DataflowSpec::basic(anchor)
+            } else if anchor == Anchor::Output {
+                DataflowSpec::optimized_os(&machine, cfg.r_size())
+            } else {
+                DataflowSpec::basic(anchor)
+            };
+            let prog = yflows::codegen::generate(&cfg, &spec, &machine);
+            println!("{}", yflows::codegen::emit_c::emit_c(&prog));
+        }
+        Some("plan") => {
+            let net = nets::by_name(args.get("net", "resnet18"))
+                .ok_or_else(|| anyhow::anyhow!("unknown net"))?;
+            let mut opts = yflows::util::config::planner_from(&file_cfg);
+            if let Some(vl) = args.opt("vl") {
+                opts.machine = MachineConfig::neon(vl.parse().unwrap_or(128));
+            }
+            if args.flag("explore") {
+                opts.explore_each_layer = true;
+            }
+            opts.perf_sample = sample;
+            let plan = yflows::coordinator::plan_network(&net, opts);
+            println!("{}", yflows::coordinator::metrics::plan_table(&plan).render());
+            println!(
+                "total: {:.1} Mcycles = {:.2} ms (modeled @2.6GHz)",
+                plan.total_cycles() / 1e6,
+                plan.total_seconds() * 1e3
+            );
+        }
+        Some("isa-compare") => {
+            let f = args.get_parse::<usize>("f", 3);
+            let i = args.get_parse::<usize>("i", 56);
+            let (t, _) = report::isa_compare::run(f, i, sample);
+            println!("{}", t.render());
+            t.write_csv(&format!("{outdir}/isa_compare.csv"))?;
+        }
+        Some("layout") => {
+            // §IV-C: layout synchronization across a network via DP.
+            let net = nets::by_name(args.get("net", "resnet18"))
+                .ok_or_else(|| anyhow::anyhow!("unknown net"))?;
+            let blocks = args.get_usize_list("blocks", &[16, 32, 64]);
+            let (problem, names) =
+                yflows::explore::layout_dp::problem_for_network(&net, &blocks, sample);
+            let plan = yflows::explore::layout_dp::solve(&problem);
+            println!(
+                "{}",
+                yflows::explore::layout_dp::render(&problem, &plan, &names).render()
+            );
+            println!("total cost (cycles incl. transforms): {:.0}", plan.total_cost);
+        }
+        Some("validate") => {
+            let path = args.get("artifact", "artifacts/conv3x3.hlo.txt").to_string();
+            let rt = yflows::runtime::Runtime::cpu()?;
+            let module = rt.load(&path)?;
+            println!("loaded {} on {}", module.path, rt.platform());
+            println!("run `cargo test --test runtime_crosscheck` for the full numeric comparison");
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,335 @@
+//! Model zoo: the networks of the paper's end-to-end evaluation (Fig 8:
+//! ResNet-18/34, VGG-11/13/16, DenseNet-121; plus MobileNet-V1 to
+//! exercise depthwise kernels) expressed as layer-config lists over
+//! ImageNet-shaped inputs (224×224×3, batch 1).
+//!
+//! Convolution `ih/iw` are the *padded* dims (padding is materialized by
+//! the coordinator when it lays out tensors, matching the kernels'
+//! valid-only iteration).
+
+use crate::layer::{ConvConfig, DenseConfig, LayerConfig, PoolConfig};
+
+/// A network: an ordered list of layers.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<LayerConfig>,
+}
+
+impl Network {
+    /// Total MACs (conv + fc).
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Conv layers only (the latency-dominant set the paper optimizes).
+    pub fn conv_layers(&self) -> Vec<&ConvConfig> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                LayerConfig::Conv(c) => Some(c),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Incremental builder tracking the activation shape.
+struct NetBuilder {
+    ch: usize,
+    h: usize,
+    w: usize,
+    layers: Vec<LayerConfig>,
+}
+
+impl NetBuilder {
+    fn new(ch: usize, h: usize, w: usize) -> Self {
+        NetBuilder { ch, h, w, layers: Vec::new() }
+    }
+
+    fn conv(&mut self, out_ch: usize, f: usize, stride: usize, pad: usize) -> &mut Self {
+        let cfg = ConvConfig::simple(self.h + 2 * pad, self.w + 2 * pad, f, f, stride, self.ch, out_ch);
+        self.ch = out_ch;
+        self.h = cfg.oh();
+        self.w = cfg.ow();
+        self.layers.push(LayerConfig::Conv(cfg));
+        self
+    }
+
+    fn depthwise(&mut self, f: usize, stride: usize, pad: usize) -> &mut Self {
+        let cfg = ConvConfig::depthwise(self.h + 2 * pad, self.w + 2 * pad, f, f, stride, self.ch);
+        self.h = cfg.oh();
+        self.w = cfg.ow();
+        self.layers.push(LayerConfig::Conv(cfg));
+        self
+    }
+
+    fn maxpool(&mut self, f: usize, stride: usize, pad: usize) -> &mut Self {
+        let cfg = PoolConfig::max(self.ch, self.h + 2 * pad, self.w + 2 * pad, f, stride);
+        self.h = cfg.oh();
+        self.w = cfg.ow();
+        self.layers.push(LayerConfig::Pool(cfg));
+        self
+    }
+
+    fn avgpool(&mut self, f: usize, stride: usize) -> &mut Self {
+        let cfg = PoolConfig::avg(self.ch, self.h, self.w, f, stride);
+        self.h = cfg.oh();
+        self.w = cfg.ow();
+        self.layers.push(LayerConfig::Pool(cfg));
+        self
+    }
+
+    fn gap(&mut self) -> &mut Self {
+        self.layers.push(LayerConfig::GlobalAvgPool { channels: self.ch, h: self.h, w: self.w });
+        self.h = 1;
+        self.w = 1;
+        self
+    }
+
+    fn fc(&mut self, out: usize) -> &mut Self {
+        self.layers.push(LayerConfig::Dense(DenseConfig::new(self.ch * self.h * self.w, out)));
+        self.ch = out;
+        self.h = 1;
+        self.w = 1;
+        self
+    }
+
+    fn finish(self, name: &str) -> Network {
+        Network { name: name.to_string(), layers: self.layers }
+    }
+}
+
+/// ResNet basic block (two 3×3 convs; stride + 1×1 projection on the
+/// first block of a stage). The projection conv is included as a layer —
+/// its MACs count in the end-to-end latency exactly as in the paper's
+/// TVM baselines.
+fn resnet_basic(b: &mut NetBuilder, out_ch: usize, stride: usize) {
+    if stride != 1 || b.ch != out_ch {
+        // Projection shortcut (runs alongside the main path; we count its
+        // cost in sequence, a conservative single-core model).
+        let proj = ConvConfig::simple(b.h, b.w, 1, 1, stride, b.ch, out_ch);
+        b.layers.push(LayerConfig::Conv(proj));
+    }
+    b.conv(out_ch, 3, stride, 1);
+    b.conv(out_ch, 3, 1, 1);
+}
+
+/// ResNet-18 (blocks [2,2,2,2]).
+pub fn resnet18() -> Network {
+    resnet(&[2, 2, 2, 2], "resnet18")
+}
+
+/// ResNet-34 (blocks [3,4,6,3]).
+pub fn resnet34() -> Network {
+    resnet(&[3, 4, 6, 3], "resnet34")
+}
+
+fn resnet(blocks: &[usize; 4], name: &str) -> Network {
+    let mut b = NetBuilder::new(3, 224, 224);
+    b.conv(64, 7, 2, 3).maxpool(3, 2, 1);
+    let widths = [64, 128, 256, 512];
+    for (stage, (&n, &w)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for i in 0..n {
+            let stride = if stage > 0 && i == 0 { 2 } else { 1 };
+            resnet_basic(&mut b, w, stride);
+        }
+    }
+    b.gap().fc(1000);
+    b.finish(name)
+}
+
+/// VGG family: config letters per Simonyan & Zisserman.
+fn vgg(cfg: &[&[usize]], name: &str) -> Network {
+    let mut b = NetBuilder::new(3, 224, 224);
+    for group in cfg {
+        for &ch in *group {
+            b.conv(ch, 3, 1, 1);
+        }
+        b.maxpool(2, 2, 0);
+    }
+    b.fc(4096).fc(4096).fc(1000);
+    b.finish(name)
+}
+
+pub fn vgg11() -> Network {
+    vgg(&[&[64], &[128], &[256, 256], &[512, 512], &[512, 512]], "vgg11")
+}
+
+pub fn vgg13() -> Network {
+    vgg(&[&[64, 64], &[128, 128], &[256, 256], &[512, 512], &[512, 512]], "vgg13")
+}
+
+pub fn vgg16() -> Network {
+    vgg(
+        &[&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]],
+        "vgg16",
+    )
+}
+
+/// DenseNet-121: growth 32, blocks [6,12,24,16], 1×1 bottleneck (4·growth)
+/// before each 3×3, compression-0.5 transitions.
+pub fn densenet121() -> Network {
+    let growth = 32;
+    let mut b = NetBuilder::new(3, 224, 224);
+    b.conv(64, 7, 2, 3).maxpool(3, 2, 1);
+    let mut channels = 64;
+    let blocks = [6usize, 12, 24, 16];
+    for (bi, &n) in blocks.iter().enumerate() {
+        for _ in 0..n {
+            // Bottleneck 1×1 then 3×3; DenseNet concatenates, so the
+            // running channel count grows by `growth` per layer.
+            let bottleneck = ConvConfig::simple(b.h, b.w, 1, 1, 1, channels, 4 * growth);
+            b.layers.push(LayerConfig::Conv(bottleneck));
+            let conv3 = ConvConfig::simple(b.h + 2, b.w + 2, 3, 3, 1, 4 * growth, growth);
+            b.layers.push(LayerConfig::Conv(conv3));
+            channels += growth;
+        }
+        if bi + 1 < blocks.len() {
+            // Transition: 1×1 halving channels + 2×2 average pool.
+            let half = channels / 2;
+            let t = ConvConfig::simple(b.h, b.w, 1, 1, 1, channels, half);
+            b.layers.push(LayerConfig::Conv(t));
+            b.ch = half;
+            channels = half;
+            b.avgpool(2, 2);
+        }
+    }
+    b.ch = channels;
+    b.gap().fc(1000);
+    b.finish("densenet121")
+}
+
+/// MobileNet-V1 (depthwise-separable stacks) — exercises the depthwise
+/// code generator.
+pub fn mobilenet_v1() -> Network {
+    let mut b = NetBuilder::new(3, 224, 224);
+    b.conv(32, 3, 2, 1);
+    let plan: &[(usize, usize)] = &[
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for &(out_ch, stride) in plan {
+        b.depthwise(3, stride, 1);
+        b.conv(out_ch, 1, 1, 0);
+    }
+    b.gap().fc(1000);
+    b.finish("mobilenet_v1")
+}
+
+/// A ShuffleNet-style stage (paper §IV lists shuffled grouped
+/// convolutions): 1×1 grouped conv → channel shuffle → 3×3 depthwise →
+/// 1×1 grouped conv, repeated. Small input so it doubles as a functional
+/// test workload.
+pub fn shufflenet_stage(channels: usize, groups: usize, h: usize, w: usize, units: usize) -> Network {
+    let mut b = NetBuilder::new(channels, h, w);
+    for _ in 0..units {
+        let cfg1 = ConvConfig::grouped(b.h, b.w, 1, 1, 1, b.ch, channels, groups);
+        b.layers.push(LayerConfig::Conv(cfg1));
+        b.ch = channels;
+        b.layers.push(LayerConfig::ChannelShuffle { channels, h: b.h, w: b.w, groups });
+        b.depthwise(3, 1, 1);
+        let cfg2 = ConvConfig::grouped(b.h, b.w, 1, 1, 1, channels, channels, groups);
+        b.layers.push(LayerConfig::Conv(cfg2));
+    }
+    b.finish("shufflenet_stage")
+}
+
+/// All Fig 8 networks.
+pub fn fig8_networks() -> Vec<Network> {
+    vec![resnet18(), resnet34(), vgg11(), vgg13(), vgg16(), densenet121()]
+}
+
+/// Look a network up by name.
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "resnet18" => Some(resnet18()),
+        "resnet34" => Some(resnet34()),
+        "vgg11" => Some(vgg11()),
+        "vgg13" => Some(vgg13()),
+        "vgg16" => Some(vgg16()),
+        "densenet121" => Some(densenet121()),
+        "mobilenet_v1" => Some(mobilenet_v1()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_shape_chain_is_consistent() {
+        let net = resnet18();
+        // 17 weighted convs + 3 projections + pool + gap + fc
+        let convs = net.conv_layers();
+        assert_eq!(convs.len(), 17 + 3);
+        // Final conv stage operates at 7x7.
+        let last_conv = convs.last().unwrap();
+        assert_eq!(last_conv.oh(), 7);
+        assert_eq!(last_conv.out_channels, 512);
+    }
+
+    #[test]
+    fn resnet34_has_more_layers() {
+        assert!(resnet34().conv_layers().len() > resnet18().conv_layers().len());
+        assert!(resnet34().macs() > resnet18().macs());
+    }
+
+    #[test]
+    fn vgg16_macs_in_expected_range() {
+        // VGG-16 is ~15.5 GMACs at 224². Allow model-construction slack.
+        let g = vgg16().macs() as f64 / 1e9;
+        assert!((14.0..17.0).contains(&g), "VGG-16 GMACs = {g}");
+    }
+
+    #[test]
+    fn vgg_family_ordering() {
+        assert!(vgg11().macs() < vgg13().macs());
+        assert!(vgg13().macs() < vgg16().macs());
+    }
+
+    #[test]
+    fn densenet_channels_grow_and_compress() {
+        let net = densenet121();
+        let convs = net.conv_layers();
+        // Final dense-block layer consumes 1024 - growth channels via its
+        // bottleneck; last transition went 512.
+        assert!(convs.iter().any(|c| c.in_channels == 512));
+        // All dense-block channel counts are multiples of 32.
+        assert!(convs.iter().all(|c| c.in_channels % 32 == 0 || c.in_channels == 3));
+    }
+
+    #[test]
+    fn mobilenet_has_depthwise() {
+        let net = mobilenet_v1();
+        let dw = net
+            .conv_layers()
+            .iter()
+            .filter(|c| c.groups == c.in_channels && c.groups > 1)
+            .count();
+        assert_eq!(dw, 13);
+        // Ends at 7x7x1024.
+        let (ch, h, _) = net.layers[net.layers.len() - 3].out_shape();
+        assert_eq!((ch, h), (1024, 7));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["resnet18", "vgg16", "densenet121", "mobilenet_v1"] {
+            assert_eq!(by_name(n).unwrap().name, n);
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

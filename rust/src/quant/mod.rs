@@ -1,0 +1,216 @@
+//! Quantization support: INT8 requantization between layers and binary
+//! (±1) bit-plane packing (paper evaluates both 8-bit and binary
+//! networks; the bitserial baseline additionally needs multi-bit plane
+//! decomposition).
+
+use crate::tensor::{ActLayout, ActTensor, OutTensor, WeightTensor};
+
+/// Requantize an INT32 accumulator tensor back to INT8 activations with a
+/// power-of-two scale (arithmetic shift) + ReLU clamp — the integer-only
+/// inter-layer step used by the coordinator's end-to-end INT8 pipeline.
+pub fn requantize_relu(acc: &OutTensor, shift: u32, layout: ActLayout) -> ActTensor {
+    let mut out = ActTensor::zeros(
+        crate::tensor::ActShape::new(acc.channels, acc.h, acc.w),
+        layout,
+    );
+    for k in 0..acc.channels {
+        for y in 0..acc.h {
+            for x in 0..acc.w {
+                let v = acc.get(k, y, x) >> shift;
+                let v = v.clamp(0, 127) as i8; // ReLU + saturate
+                out.set(k, y, x, v);
+            }
+        }
+    }
+    out
+}
+
+/// Signed requantization (no ReLU), used for residual-add paths.
+pub fn requantize(acc: &OutTensor, shift: u32, layout: ActLayout) -> ActTensor {
+    let mut out = ActTensor::zeros(
+        crate::tensor::ActShape::new(acc.channels, acc.h, acc.w),
+        layout,
+    );
+    for k in 0..acc.channels {
+        for y in 0..acc.h {
+            for x in 0..acc.w {
+                let v = (acc.get(k, y, x) >> shift).clamp(-128, 127) as i8;
+                out.set(k, y, x, v);
+            }
+        }
+    }
+    out
+}
+
+/// Binarize an INT32 accumulator to ±1 activations (sign function), the
+/// inter-layer step of binary networks.
+pub fn binarize(acc: &OutTensor, layout: ActLayout) -> ActTensor {
+    let mut out = ActTensor::zeros(
+        crate::tensor::ActShape::new(acc.channels, acc.h, acc.w),
+        layout,
+    );
+    for k in 0..acc.channels {
+        for y in 0..acc.h {
+            for x in 0..acc.w {
+                out.set(k, y, x, if acc.get(k, y, x) >= 0 { 1 } else { -1 });
+            }
+        }
+    }
+    out
+}
+
+/// Pack a ±1 activation tensor into bit planes for the binary kernels:
+/// per channel block of `c_bits` channels, per spatial position, `c_bits`
+/// bits (bit 1 ↔ +1) in little-endian byte order — matching the
+/// interpreter's 128-bit register loads.
+///
+/// Layout: `byte[(cb·H·W + y·W + x) · c_bits/8 + b/8]`, bit `b%8` holds
+/// channel `cb·c_bits + b`.
+pub fn pack_binary_act(t: &ActTensor, c_bits: usize) -> Vec<i8> {
+    assert!(t.shape.channels % c_bits == 0);
+    assert!(c_bits % 8 == 0);
+    let bpp = c_bits / 8; // bytes per position
+    let blocks = t.shape.channels / c_bits;
+    let mut out = vec![0i8; blocks * t.shape.h * t.shape.w * bpp];
+    for cb in 0..blocks {
+        for y in 0..t.shape.h {
+            for x in 0..t.shape.w {
+                let base = ((cb * t.shape.h + y) * t.shape.w + x) * bpp;
+                for b in 0..c_bits {
+                    if t.get(cb * c_bits + b, y, x) > 0 {
+                        out[base + b / 8] = (out[base + b / 8] as u8 | (1u8 << (b % 8))) as i8;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack a ±1 weight tensor (CKRSc semantics) into bit planes matching
+/// [`pack_binary_act`]: `byte[((cb·K + k)·R + tap) · c_bits/8 + b/8]`.
+pub fn pack_binary_wgt(w: &WeightTensor, c_bits: usize) -> Vec<i8> {
+    assert!(w.shape.in_channels % c_bits == 0);
+    let bpp = c_bits / 8;
+    let blocks = w.shape.in_channels / c_bits;
+    let r = w.shape.fh * w.shape.fw;
+    let mut out = vec![0i8; blocks * w.shape.out_channels * r * bpp];
+    for cb in 0..blocks {
+        for k in 0..w.shape.out_channels {
+            for ry in 0..w.shape.fh {
+                for rx in 0..w.shape.fw {
+                    let tap = ry * w.shape.fw + rx;
+                    let base = ((cb * w.shape.out_channels + k) * r + tap) * bpp;
+                    for b in 0..c_bits {
+                        if w.get(cb * c_bits + b, k, ry, rx) > 0 {
+                            out[base + b / 8] =
+                                (out[base + b / 8] as u8 | (1u8 << (b % 8))) as i8;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Decompose an INT8 tensor into `bits` unsigned bit planes (bitserial
+/// baseline, Cowan et al. CGO'20): plane `p` holds bit `p` of each
+/// (offset-binary) element. Returns planes in the same packed layout as
+/// [`pack_binary_act`]. Elements are first offset by +128 to make them
+/// unsigned (the baseline handles the offset algebraically).
+pub fn bit_planes_act(t: &ActTensor, c_bits: usize, bits: usize) -> Vec<Vec<i8>> {
+    let mut planes = Vec::with_capacity(bits);
+    for p in 0..bits {
+        let mut plane = ActTensor::zeros(t.shape, t.layout);
+        for ch in 0..t.shape.channels {
+            for y in 0..t.shape.h {
+                for x in 0..t.shape.w {
+                    let u = (t.get(ch, y, x) as i32 + 128) as u32; // offset-binary
+                    plane.set(ch, y, x, if (u >> p) & 1 == 1 { 1 } else { -1 });
+                }
+            }
+        }
+        planes.push(pack_binary_act(&plane, c_bits));
+    }
+    planes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ActShape, WeightLayout, WeightShape};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn requantize_relu_clamps() {
+        let mut acc = OutTensor::zeros(1, 1, 3);
+        acc.data = vec![-100, 256, 100000];
+        let t = requantize_relu(&acc, 1, ActLayout::NCHWc { c: 1 });
+        assert_eq!(t.get(0, 0, 0), 0); // ReLU
+        assert_eq!(t.get(0, 0, 1), 127); // 256>>1 = 128 -> clamp 127
+        assert_eq!(t.get(0, 0, 2), 127);
+    }
+
+    #[test]
+    fn binarize_signs() {
+        let mut acc = OutTensor::zeros(1, 1, 2);
+        acc.data = vec![-5, 7];
+        let t = binarize(&acc, ActLayout::NCHWc { c: 1 });
+        assert_eq!(t.get(0, 0, 0), -1);
+        assert_eq!(t.get(0, 0, 1), 1);
+    }
+
+    #[test]
+    fn pack_binary_act_roundtrip_bits() {
+        let mut rng = Rng::new(5);
+        let shape = ActShape::new(128, 2, 3);
+        let mut t = ActTensor::zeros(shape, ActLayout::NCHWc { c: 128 });
+        for v in t.data.iter_mut() {
+            *v = rng.sign();
+        }
+        let packed = pack_binary_act(&t, 128);
+        assert_eq!(packed.len(), 2 * 3 * 16);
+        // Spot-check each bit.
+        for ch in 0..128 {
+            for y in 0..2 {
+                for x in 0..3 {
+                    let base = (y * 3 + x) * 16;
+                    let bit = (packed[base + ch / 8] as u8 >> (ch % 8)) & 1;
+                    assert_eq!(bit == 1, t.get(ch, y, x) > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_binary_wgt_layout() {
+        let shape = WeightShape::new(128, 2, 1, 1);
+        let mut w = WeightTensor::zeros(shape, WeightLayout::CKRSc { c: 128 });
+        w.data.fill(-1);
+        w.set(3, 1, 0, 0, 1); // channel 3, k=1
+        let packed = pack_binary_wgt(&w, 128);
+        assert_eq!(packed.len(), 2 * 16);
+        // k=1 block starts at byte 16; channel 3 = byte 0 bit 3.
+        assert_eq!(packed[16] as u8, 1 << 3);
+        assert_eq!(packed[0], 0);
+    }
+
+    #[test]
+    fn bit_planes_reconstruct_values() {
+        let shape = ActShape::new(128, 1, 1);
+        let mut t = ActTensor::zeros(shape, ActLayout::NCHWc { c: 128 });
+        let mut rng = Rng::new(6);
+        rng.fill_i8(&mut t.data);
+        let planes = bit_planes_act(&t, 128, 8);
+        // Reconstruct channel ch from the 8 planes' bits.
+        for ch in 0..128 {
+            let mut u = 0u32;
+            for (p, plane) in planes.iter().enumerate() {
+                let bit = (plane[ch / 8] as u8 >> (ch % 8)) & 1;
+                u |= (bit as u32) << p;
+            }
+            assert_eq!(u as i32 - 128, t.get(ch, 0, 0) as i32);
+        }
+    }
+}

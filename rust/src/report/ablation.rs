@@ -1,0 +1,141 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! 1. **Secondary unrolling (Alg 4)** vs naive register rotation — the
+//!    paper's motivation for rotating allocation *names* instead of
+//!    *values*.
+//! 2. **In-register reduction** (accumulate in a vector variable, one
+//!    `vredsum` per output — §IV-B1) vs per-MAC reduction.
+//! 3. **Weight-stash saturation** — marginal gain of each added weight
+//!    variable under OS (diminishing at R, Table I's variable cap).
+
+use crate::codegen::{self, os};
+use crate::dataflow::{Anchor, AuxKind, DataflowSpec};
+use crate::layer::ConvConfig;
+use crate::machine::{MachineConfig, PerfModel};
+use crate::util::table::Table;
+
+fn cycles(prog: &crate::isa::Program, cfg: &ConvConfig, machine: &MachineConfig, sample: usize) -> f64 {
+    let schedule = codegen::schedule(cfg, machine);
+    let mut pm = PerfModel::neoverse_n1();
+    pm.estimate_layer(prog, &schedule, sample).cycles
+}
+
+/// Ablation 1: Alg-4 allocation rotation vs VMov rotation.
+pub fn secondary_unroll(cfg: &ConvConfig, machine: &MachineConfig, sample: usize) -> (Table, f64) {
+    let spec = DataflowSpec::extended(
+        Anchor::Output,
+        vec![(AuxKind::Weight, cfg.r_size()), (AuxKind::Input, cfg.r_size())],
+    );
+    let alg4 = codegen::generate(cfg, &spec, machine);
+    let rot = os::gen_extended_os_rotation(cfg, cfg.r_size(), machine);
+    let a = cycles(&alg4, cfg, machine, sample);
+    let b = cycles(&rot, cfg, machine, sample);
+    let mut t = Table::new(&["scheme", "instrs", "vmovs", "cycles"]);
+    t.row(&[
+        "secondary unroll (Alg 4)".into(),
+        alg4.instrs.len().to_string(),
+        alg4.stats().vmov.to_string(),
+        format!("{a:.0}"),
+    ]);
+    t.row(&[
+        "naive rotation (VMov)".into(),
+        rot.instrs.len().to_string(),
+        rot.stats().vmov.to_string(),
+        format!("{b:.0}"),
+    ]);
+    (t, b / a)
+}
+
+/// Ablation 2: in-register output accumulation vs per-MAC reduction
+/// (basic OS vs a WS-shaped per-MAC-reduce kernel on the same anchor
+/// order).
+pub fn in_register_reduction(cfg: &ConvConfig, machine: &MachineConfig, sample: usize) -> (Table, f64) {
+    let os_prog = codegen::basic::gen_os(cfg, machine);
+    // Per-MAC reduce with the same (output-major) traversal: reuse the IS
+    // generator's per-MAC path via basic WS on a transposed view is not
+    // equivalent; instead compare against basic WS, whose only structural
+    // difference in reduction behaviour is the per-MAC RedSumAcc.
+    let per_mac = codegen::basic::gen_ws(cfg, machine);
+    let a = cycles(&os_prog, cfg, machine, sample);
+    let b = cycles(&per_mac, cfg, machine, sample);
+    let mut t = Table::new(&["reduction scheme", "scalar RMWs", "cycles"]);
+    t.row(&[
+        "in-register, 1 vredsum/output".into(),
+        os_prog.stats().scalar_rmw.to_string(),
+        format!("{a:.0}"),
+    ]);
+    t.row(&[
+        "per-MAC vredsum (R/output)".into(),
+        per_mac.stats().scalar_rmw.to_string(),
+        format!("{b:.0}"),
+    ]);
+    (t, b / a)
+}
+
+/// Ablation 4: unroll-and-jam width sweep on the optimized OS kernel
+/// (paper §VII-a: jamming composes with the dataflow technique).
+pub fn jam_sweep(cfg: &ConvConfig, machine: &MachineConfig, sample: usize) -> Table {
+    let mut t = Table::new(&["jam width", "instrs", "cycles"]);
+    // Budget: 2 active + jam outs + jam ins + R weights.
+    let max_jam = (machine.vars_available().saturating_sub(2 + cfg.r_size()) / 2).max(1);
+    let mut jam = 1;
+    while jam <= max_jam {
+        let prog = crate::codegen::os_jam::gen_os_jam(cfg, cfg.r_size(), jam, machine);
+        t.row(&[
+            jam.to_string(),
+            prog.instrs.len().to_string(),
+            format!("{:.0}", cycles(&prog, cfg, machine, sample)),
+        ]);
+        jam *= 2;
+    }
+    t
+}
+
+/// Ablation 3: weight-stash variable sweep under OS.
+pub fn weight_stash_sweep(cfg: &ConvConfig, machine: &MachineConfig, sample: usize) -> Table {
+    let mut t = Table::new(&["#wgt vars", "mem reads", "cycles"]);
+    let max = cfg.r_size().min(machine.aux_vars_available());
+    for n in 0..=max {
+        let spec = if n == 0 {
+            DataflowSpec::basic(Anchor::Output)
+        } else {
+            DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, n)])
+        };
+        let prog = codegen::generate(cfg, &spec, machine);
+        t.row(&[
+            n.to_string(),
+            prog.mem_reads().to_string(),
+            format!("{:.0}", cycles(&prog, cfg, machine, sample)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secondary_unroll_wins() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(12, 12, 3, 3, 1, 16, 4);
+        let (_, ratio) = secondary_unroll(&cfg, &m, 2);
+        assert!(ratio > 1.0, "rotation should be slower, got {ratio}");
+    }
+
+    #[test]
+    fn in_register_reduction_wins() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(12, 12, 3, 3, 1, 16, 4);
+        let (_, ratio) = in_register_reduction(&cfg, &m, 2);
+        assert!(ratio > 1.5, "per-MAC reduce should be much slower, got {ratio}");
+    }
+
+    #[test]
+    fn weight_stash_monotone() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 16, 2);
+        let t = weight_stash_sweep(&cfg, &m, 2);
+        assert_eq!(t.len(), 10); // 0..=9
+    }
+}

@@ -1,0 +1,109 @@
+//! Figure 2: relative latency of the three basic dataflows across the §V
+//! sweep, normalized to OS.
+//!
+//! Paper reference points: at stride 1, OS is by median 1.93× faster
+//! than IS and 3.41× faster than WS; at stride 2, 5.39× (IS) and 2.81×
+//! (WS).
+
+use crate::dataflow::Anchor;
+use crate::explore;
+use crate::machine::MachineConfig;
+use crate::report::Sweep;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// One measured row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub config: String,
+    pub stride: usize,
+    pub vl: usize,
+    /// Relative latency (cycles / OS cycles) per anchor.
+    pub is_rel: f64,
+    pub ws_rel: f64,
+}
+
+/// Run the experiment.
+pub fn run(sweep: &Sweep, sample: usize) -> (Table, Vec<Row>) {
+    let mut rows = Vec::new();
+    for &vl in &sweep.vls {
+        let machine = MachineConfig::neon(vl);
+        let c = machine.c_int8();
+        for &stride in &sweep.strides {
+            for cfg in sweep.configs(stride, c) {
+                let os = explore::basic_cycles(&cfg, &machine, Anchor::Output, sample).cycles;
+                let is_ = explore::basic_cycles(&cfg, &machine, Anchor::Input, sample).cycles;
+                let ws = explore::basic_cycles(&cfg, &machine, Anchor::Weight, sample).cycles;
+                rows.push(Row {
+                    config: cfg.name(),
+                    stride,
+                    vl,
+                    is_rel: is_ / os,
+                    ws_rel: ws / os,
+                });
+            }
+        }
+    }
+    let mut t = Table::new(&["config(fw,iw,nf)", "VL", "OS", "IS/OS", "WS/OS"]);
+    for r in &rows {
+        t.row(&[
+            r.config.clone(),
+            r.vl.to_string(),
+            "1.00".to_string(),
+            format!("{:.2}", r.is_rel),
+            format!("{:.2}", r.ws_rel),
+        ]);
+    }
+    (t, rows)
+}
+
+/// The quoted medians: (IS/OS, WS/OS) for a stride.
+pub fn medians(rows: &[Row], stride: usize) -> (f64, f64) {
+    let is_: Vec<f64> = rows.iter().filter(|r| r.stride == stride).map(|r| r.is_rel).collect();
+    let ws: Vec<f64> = rows.iter().filter(|r| r.stride == stride).map(|r| r.ws_rel).collect();
+    (stats::median(&is_), stats::median(&ws))
+}
+
+/// Text summary comparing against the paper's numbers.
+pub fn summary(rows: &[Row]) -> String {
+    let (is1, ws1) = medians(rows, 1);
+    let (is2, ws2) = medians(rows, 2);
+    format!(
+        "Fig 2 medians (ours vs paper):\n\
+         s=1: OS vs IS {is1:.2}x (paper 1.93x), OS vs WS {ws1:.2}x (paper 3.41x)\n\
+         s=2: OS vs IS {is2:.2}x (paper 5.39x), OS vs WS {ws2:.2}x (paper 2.81x)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_sweep() -> Sweep {
+        Sweep {
+            filters: vec![3],
+            inputs: vec![16],
+            nfs: vec![8],
+            strides: vec![1, 2],
+            vls: vec![128],
+        }
+    }
+
+    #[test]
+    fn os_wins_everywhere() {
+        let (_, rows) = run(&tiny_sweep(), 2);
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.is_rel > 1.0, "IS should be slower than OS: {r:?}");
+            assert!(r.ws_rel > 1.0, "WS should be slower than OS: {r:?}");
+        }
+    }
+
+    #[test]
+    fn is_degrades_at_stride_2_relative_to_stride_1() {
+        let (_, rows) = run(&tiny_sweep(), 2);
+        let (is1, _) = medians(&rows, 1);
+        let (is2, _) = medians(&rows, 2);
+        assert!(is2 > is1, "IS s2 ({is2}) should look worse vs OS than s1 ({is1})");
+    }
+}

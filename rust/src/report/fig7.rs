@@ -1,0 +1,155 @@
+//! Figure 7: extended-dataflow performance.
+//!
+//! * 7a — speedup of the most-optimized extended dataflow over its basic
+//!   anchoring-only dataflow, per anchor. Paper medians: OS ≈ 1.78×,
+//!   IS ≈ 1.96×, WS ≈ 1.08×.
+//! * 7b — relative latency of the most-optimized extended dataflows,
+//!   normalized to extended OS. Paper: optimized OS ≈ 7.41× faster than
+//!   optimized WS by median, and beats optimized IS in ~90% of configs.
+
+use crate::dataflow::Anchor;
+use crate::explore::{self, ExploreConfig};
+use crate::machine::MachineConfig;
+use crate::report::Sweep;
+use crate::util::stats;
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub config: String,
+    pub stride: usize,
+    pub vl: usize,
+    /// basic cycles per anchor [OS, IS, WS]
+    pub basic: [f64; 3],
+    /// best extended cycles per anchor [OS, IS, WS]
+    pub ext: [f64; 3],
+}
+
+impl Row {
+    pub fn speedup(&self, anchor_idx: usize) -> f64 {
+        self.basic[anchor_idx] / self.ext[anchor_idx]
+    }
+
+    pub fn rel_to_os(&self, anchor_idx: usize) -> f64 {
+        self.ext[anchor_idx] / self.ext[0]
+    }
+}
+
+const ANCHORS: [Anchor; 3] = [Anchor::Output, Anchor::Input, Anchor::Weight];
+
+/// Run the sweep; `survivors` controls exploration breadth.
+pub fn run(sweep: &Sweep, survivors: usize, sample: usize) -> (Table, Table, Vec<Row>) {
+    let xcfg = ExploreConfig { survivors_per_anchor: survivors, perf_sample: sample };
+    let mut rows = Vec::new();
+    for &vl in &sweep.vls {
+        let machine = MachineConfig::neon(vl);
+        let c = machine.c_int8();
+        for &stride in &sweep.strides {
+            for cfg in sweep.configs(stride, c) {
+                let ex = explore::explore(&cfg, &machine, &xcfg);
+                let mut basic = [0.0f64; 3];
+                let mut ext = [f64::INFINITY; 3];
+                for cand in &ex.candidates {
+                    let ai = ANCHORS.iter().position(|a| *a == cand.spec.anchor).unwrap();
+                    if cand.spec.aux_vars() == 0 {
+                        basic[ai] = cand.stats.cycles;
+                    } else if cand.stats.cycles < ext[ai] {
+                        ext[ai] = cand.stats.cycles;
+                    }
+                }
+                // A fully-saturated anchor may have no extended candidate
+                // (e.g. tiny register files); fall back to basic.
+                for ai in 0..3 {
+                    if !ext[ai].is_finite() {
+                        ext[ai] = basic[ai];
+                    }
+                }
+                rows.push(Row { config: cfg.name(), stride, vl, basic, ext });
+            }
+        }
+    }
+    let mut ta = Table::new(&["config", "VL", "s", "OS ext/basic", "IS ext/basic", "WS ext/basic"]);
+    let mut tb = Table::new(&["config", "VL", "s", "OS", "IS/OS", "WS/OS"]);
+    for r in &rows {
+        ta.row(&[
+            r.config.clone(),
+            r.vl.to_string(),
+            r.stride.to_string(),
+            format!("{:.2}", r.speedup(0)),
+            format!("{:.2}", r.speedup(1)),
+            format!("{:.2}", r.speedup(2)),
+        ]);
+        tb.row(&[
+            r.config.clone(),
+            r.vl.to_string(),
+            r.stride.to_string(),
+            "1.00".into(),
+            format!("{:.2}", r.rel_to_os(1)),
+            format!("{:.2}", r.rel_to_os(2)),
+        ]);
+    }
+    (ta, tb, rows)
+}
+
+/// Summary statistics quoted in the paper's Findings.
+pub struct Fig7Summary {
+    /// Median ext/basic speedup per anchor [OS, IS, WS].
+    pub speedup_medians: [f64; 3],
+    /// Median optimized WS / optimized OS latency ratio.
+    pub ws_over_os_median: f64,
+    /// Fraction of configs where optimized OS beats optimized IS.
+    pub os_beats_is_fraction: f64,
+}
+
+pub fn summarize(rows: &[Row]) -> Fig7Summary {
+    let mut speedup_medians = [0.0; 3];
+    for ai in 0..3 {
+        let v: Vec<f64> = rows.iter().map(|r| r.speedup(ai)).collect();
+        speedup_medians[ai] = stats::median(&v);
+    }
+    let ws_rel: Vec<f64> = rows.iter().map(|r| r.rel_to_os(2)).collect();
+    let os_wins = rows.iter().filter(|r| r.ext[0] <= r.ext[1]).count();
+    Fig7Summary {
+        speedup_medians,
+        ws_over_os_median: stats::median(&ws_rel),
+        os_beats_is_fraction: os_wins as f64 / rows.len().max(1) as f64,
+    }
+}
+
+pub fn summary_text(s: &Fig7Summary) -> String {
+    format!(
+        "Fig 7 summaries (ours vs paper):\n\
+         7a ext-over-basic medians: OS {:.2}x (paper 1.78x), IS {:.2}x (paper 1.96x), WS {:.2}x (paper 1.08x)\n\
+         7b optimized WS/OS median: {:.2}x (paper 7.41x); OS beats IS in {:.0}% of configs (paper ~90%)",
+        s.speedup_medians[0],
+        s.speedup_medians[1],
+        s.speedup_medians[2],
+        s.ws_over_os_median,
+        s.os_beats_is_fraction * 100.0
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Sweep {
+        Sweep { filters: vec![3], inputs: vec![14], nfs: vec![8], strides: vec![1], vls: vec![128] }
+    }
+
+    #[test]
+    fn extended_os_is_fastest_overall() {
+        let (_, _, rows) = run(&tiny(), 2, 2);
+        let s = summarize(&rows);
+        assert!(s.os_beats_is_fraction >= 0.5);
+        assert!(s.ws_over_os_median > 1.0);
+    }
+
+    #[test]
+    fn ws_gains_least_from_extension() {
+        let (_, _, rows) = run(&tiny(), 2, 2);
+        let s = summarize(&rows);
+        assert!(s.speedup_medians[2] <= s.speedup_medians[0]);
+        assert!(s.speedup_medians[2] <= s.speedup_medians[1]);
+    }
+}

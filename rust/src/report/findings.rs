@@ -1,0 +1,149 @@
+//! Findings 1–5 (§VI-A): targeted comparisons validating the heuristics'
+//! observations on measured (modeled) latency.
+
+use crate::dataflow::{Anchor, AuxKind, DataflowSpec};
+use crate::explore::evaluate;
+use crate::layer::ConvConfig;
+use crate::machine::MachineConfig;
+use crate::report::Sweep;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// Priority-pair comparison: cycles(first-priority-A) / cycles(first-
+/// priority-B) per config.
+fn priority_ratio(
+    cfg: &ConvConfig,
+    machine: &MachineConfig,
+    anchor: Anchor,
+    a_first: (AuxKind, AuxKind),
+    sample: usize,
+) -> f64 {
+    let avail = machine.aux_vars_available();
+    let r = cfg.r_size();
+    let cap = |k: AuxKind| -> usize {
+        match k {
+            AuxKind::Weight => r,
+            _ => r,
+        }
+    };
+    let make = |first: AuxKind, second: AuxKind| {
+        let n1 = cap(first).min(avail);
+        let n2 = (avail - n1).min(cap(second));
+        let mut aux = vec![(first, n1)];
+        if n2 > 0 {
+            aux.push((second, n2));
+        }
+        DataflowSpec::extended(anchor, aux)
+    };
+    let sa = make(a_first.0, a_first.1);
+    let sb = make(a_first.1, a_first.0);
+    let (_, pa) = evaluate(cfg, &sa, machine, sample);
+    let (_, pb) = evaluate(cfg, &sb, machine, sample);
+    pa.cycles / pb.cycles
+}
+
+/// All five findings evaluated over a sweep.
+pub struct FindingsReport {
+    /// F1: median ext-over-basic speedup per anchor (OS, IS, WS) — WS
+    /// must be smallest.
+    pub f1_speedups: [f64; 3],
+    /// F2: fraction of configs where optimized OS ≤ optimized IS.
+    pub f2_os_wins: f64,
+    /// F3: median |input-first / weight-first − 1| under OS (paper: ≤6%).
+    pub f3_os_priority_delta: f64,
+    /// F4: median weight-first / output-first under IS (paper: ≈1.08).
+    pub f4_is_ratio: f64,
+    /// F5: median input-first / output-first under WS (paper: ≤1.03).
+    pub f5_ws_ratio: f64,
+}
+
+pub fn run(sweep: &Sweep, sample: usize) -> (Table, FindingsReport) {
+    // Reuse fig7 for F1/F2.
+    let (_, _, rows) = super::fig7::run(sweep, 2, sample);
+    let f7 = super::fig7::summarize(&rows);
+
+    let mut f3 = Vec::new();
+    let mut f4 = Vec::new();
+    let mut f5 = Vec::new();
+    for &vl in &sweep.vls {
+        let machine = MachineConfig::neon(vl);
+        let c = machine.c_int8();
+        for &stride in &sweep.strides {
+            for cfg in sweep.configs(stride, c) {
+                f3.push(
+                    (priority_ratio(&cfg, &machine, Anchor::Output, (AuxKind::Input, AuxKind::Weight), sample)
+                        - 1.0)
+                        .abs(),
+                );
+                f4.push(priority_ratio(&cfg, &machine, Anchor::Input, (AuxKind::Weight, AuxKind::Output), sample));
+                f5.push(priority_ratio(&cfg, &machine, Anchor::Weight, (AuxKind::Input, AuxKind::Output), sample));
+            }
+        }
+    }
+    let report = FindingsReport {
+        f1_speedups: f7.speedup_medians,
+        f2_os_wins: f7.os_beats_is_fraction,
+        f3_os_priority_delta: stats::median(&f3),
+        f4_is_ratio: stats::median(&f4),
+        f5_ws_ratio: stats::median(&f5),
+    };
+
+    let mut t = Table::new(&["finding", "ours", "paper", "validated"]);
+    t.row(&[
+        "F1: WS gains least from aux".into(),
+        format!(
+            "WS {:.2}x vs OS {:.2}x / IS {:.2}x",
+            report.f1_speedups[2], report.f1_speedups[0], report.f1_speedups[1]
+        ),
+        "WS 1.08x vs OS 1.78x / IS 1.96x".to_string(),
+        (report.f1_speedups[2] <= report.f1_speedups[0]
+            && report.f1_speedups[2] <= report.f1_speedups[1])
+            .to_string(),
+    ]);
+    t.row(&[
+        "F2: optimized OS beats IS".into(),
+        format!("{:.0}% of configs", report.f2_os_wins * 100.0),
+        "~90% of configs".to_string(),
+        (report.f2_os_wins >= 0.5).to_string(),
+    ]);
+    t.row(&[
+        "F3: OS in-vs-wgt priority".into(),
+        format!("median delta {:.1}%", report.f3_os_priority_delta * 100.0),
+        "within 6%".to_string(),
+        (report.f3_os_priority_delta < 0.10).to_string(),
+    ]);
+    t.row(&[
+        "F4: IS out-first wins".into(),
+        format!("wgt-first/out-first = {:.2}x", report.f4_is_ratio),
+        "~1.08x".to_string(),
+        (report.f4_is_ratio >= 1.0).to_string(),
+    ]);
+    t.row(&[
+        "F5: WS out-first wins (small)".into(),
+        format!("in-first/out-first = {:.2}x", report.f5_ws_ratio),
+        "≤1.03x".to_string(),
+        (report.f5_ws_ratio >= 0.97).to_string(),
+    ]);
+    (t, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn findings_hold_on_small_sweep() {
+        let sweep = Sweep {
+            filters: vec![3],
+            inputs: vec![14],
+            nfs: vec![8],
+            strides: vec![1],
+            vls: vec![128],
+        };
+        let (_t, r) = run(&sweep, 2);
+        // F1: WS gains least.
+        assert!(r.f1_speedups[2] <= r.f1_speedups[0] + 1e-9);
+        // F4: output-first at least as good as weight-first under IS.
+        assert!(r.f4_is_ratio >= 0.99, "f4 = {}", r.f4_is_ratio);
+    }
+}

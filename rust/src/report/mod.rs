@@ -1,0 +1,91 @@
+//! Experiment harnesses: one submodule per paper table/figure, each
+//! producing a [`crate::util::table::Table`] with the same rows/series
+//! the paper reports, plus the summary statistics quoted in the text
+//! (median speedups etc.). The CLI (`yflows <experiment>`) prints them
+//! and writes CSVs under `results/`.
+
+pub mod fig2;
+pub mod table1;
+pub mod fig7;
+pub mod findings;
+pub mod fig8;
+pub mod fig9;
+pub mod vgg_neocpu;
+pub mod ablation;
+pub mod isa_compare;
+
+use crate::layer::ConvConfig;
+
+/// The paper's §V experiment grid.
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    /// Filter sizes (fh = fw).
+    pub filters: Vec<usize>,
+    /// Input sizes (ih = iw).
+    pub inputs: Vec<usize>,
+    /// Filter counts (nf).
+    pub nfs: Vec<usize>,
+    pub strides: Vec<usize>,
+    /// Vector lengths (bits).
+    pub vls: Vec<usize>,
+}
+
+impl Sweep {
+    /// The full §V grid.
+    pub fn paper() -> Sweep {
+        Sweep {
+            filters: vec![3, 4, 5],
+            inputs: vec![56, 112],
+            nfs: vec![128, 256, 512],
+            strides: vec![1, 2],
+            vls: vec![128, 256, 512],
+        }
+    }
+
+    /// Reduced grid for quick runs / CI.
+    pub fn quick() -> Sweep {
+        Sweep {
+            filters: vec![3, 5],
+            inputs: vec![56],
+            nfs: vec![128],
+            strides: vec![1, 2],
+            vls: vec![128, 512],
+        }
+    }
+
+    /// All layer configs of the sweep for a given stride & vector length.
+    /// One input channel block (C = c), as in the paper's kernel-level
+    /// experiments (the channel dimension only multiplies invocations).
+    pub fn configs(&self, stride: usize, c: usize) -> Vec<ConvConfig> {
+        let mut out = Vec::new();
+        for &f in &self.filters {
+            for &i in &self.inputs {
+                for &nf in &self.nfs {
+                    out.push(ConvConfig::simple(i, i, f, f, stride, c, nf));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Results directory for CSV output.
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from("results")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sweep_size() {
+        let s = Sweep::paper();
+        assert_eq!(s.configs(1, 16).len(), 3 * 2 * 3);
+    }
+
+    #[test]
+    fn quick_is_smaller() {
+        assert!(Sweep::quick().configs(1, 16).len() < Sweep::paper().configs(1, 16).len());
+    }
+}

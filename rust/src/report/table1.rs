@@ -1,0 +1,145 @@
+//! Table I validation: the heuristic formulas predict the reduction in
+//! memory operations per additional auxiliary vector variable; here we
+//! *measure* those reductions on generated programs (static instruction
+//! counts — exact, no perf model involved) and report measured vs
+//! predicted.
+
+use crate::dataflow::heuristics::aux_gain;
+use crate::dataflow::{Anchor, AuxKind, DataflowSpec};
+use crate::layer::ConvConfig;
+use crate::machine::MachineConfig;
+use crate::util::table::Table;
+
+/// Measured vs predicted gain for one (anchor, aux, var_index) cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub anchor: Anchor,
+    pub aux: AuxKind,
+    pub var_index: usize,
+    pub measured_reads: f64,
+    pub predicted_reads: f64,
+    pub measured_writes: f64,
+    pub predicted_writes: f64,
+}
+
+impl Cell {
+    /// Relative agreement on reads (1.0 = exact).
+    pub fn reads_ratio(&self) -> f64 {
+        if self.predicted_reads == 0.0 {
+            if self.measured_reads.abs() < 1.0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.measured_reads / self.predicted_reads
+        }
+    }
+}
+
+fn mem_ops(cfg: &ConvConfig, spec: &DataflowSpec, machine: &MachineConfig) -> (f64, f64) {
+    let prog = crate::codegen::generate(cfg, spec, machine);
+    (prog.mem_reads() as f64, prog.mem_writes() as f64)
+}
+
+/// Measure the marginal gain of the k-th aux variable of `aux` under
+/// `anchor` by diffing programs with k-1 and k variables.
+pub fn measure_cell(
+    cfg: &ConvConfig,
+    machine: &MachineConfig,
+    anchor: Anchor,
+    aux: AuxKind,
+    var_index: usize,
+) -> Cell {
+    let spec_k = |k: usize| {
+        if k == 0 {
+            DataflowSpec::basic(anchor)
+        } else {
+            DataflowSpec::extended(anchor, vec![(aux, k)])
+        }
+    };
+    let (r0, w0) = mem_ops(cfg, &spec_k(var_index - 1), machine);
+    let (r1, w1) = mem_ops(cfg, &spec_k(var_index), machine);
+    let predicted = aux_gain(cfg, anchor, aux, var_index).unwrap_or_default();
+    Cell {
+        anchor,
+        aux,
+        var_index,
+        measured_reads: r0 - r1,
+        predicted_reads: predicted.reads_saved,
+        measured_writes: w0 - w1,
+        predicted_writes: predicted.writes_saved,
+    }
+}
+
+/// Run the validation over the representative cells of Table I.
+pub fn run(cfg: &ConvConfig, machine: &MachineConfig) -> (Table, Vec<Cell>) {
+    let pairs: &[(Anchor, AuxKind)] = &[
+        (Anchor::Output, AuxKind::Weight),
+        (Anchor::Output, AuxKind::Input),
+        (Anchor::Input, AuxKind::Weight),
+        (Anchor::Input, AuxKind::Output),
+        (Anchor::Weight, AuxKind::Input),
+        (Anchor::Weight, AuxKind::Output),
+    ];
+    let max_vars = machine.aux_vars_available().min(cfg.r_size()).min(4);
+    let mut cells = Vec::new();
+    for &(anchor, aux) in pairs {
+        for k in 1..=max_vars {
+            cells.push(measure_cell(cfg, machine, anchor, aux, k));
+        }
+    }
+    let mut t = Table::new(&[
+        "anchor", "aux", "var#", "Δreads(meas)", "Δreads(pred)", "Δwrites(meas)", "Δwrites(pred)",
+    ]);
+    for c in &cells {
+        t.row(&[
+            c.anchor.name().to_string(),
+            c.aux.name().to_string(),
+            c.var_index.to_string(),
+            format!("{:.0}", c.measured_reads),
+            format!("{:.0}", c.predicted_reads),
+            format!("{:.0}", c.measured_writes),
+            format!("{:.0}", c.predicted_writes),
+        ]);
+    }
+    (t, cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn os_weight_gain_matches_formula_exactly() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(12, 12, 3, 3, 1, 16, 4);
+        let cell = measure_cell(&cfg, &m, Anchor::Output, AuxKind::Weight, 1);
+        // Stashing the first weight tap saves exactly E loads minus the
+        // one prologue load.
+        let e = cfg.e_size() as f64;
+        assert!((cell.measured_reads - (e - 1.0)).abs() <= 1.0, "measured {}", cell.measured_reads);
+        assert_eq!(cell.predicted_reads, e);
+    }
+
+    #[test]
+    fn ws_output_gain_saves_reads_and_writes() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 16, 2);
+        let cell = measure_cell(&cfg, &m, Anchor::Weight, AuxKind::Output, 1);
+        assert!(cell.measured_writes > 0.0);
+        assert_eq!(cell.predicted_writes, cfg.r_size() as f64);
+        // Within 2x of the heuristic (the formulas are approximations).
+        let ratio = cell.measured_writes / cell.predicted_writes;
+        assert!((0.5..=2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn full_run_covers_all_pairs() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 16, 2);
+        let (t, cells) = run(&cfg, &m);
+        assert_eq!(cells.len(), 6 * 4);
+        assert_eq!(t.len(), cells.len());
+    }
+}

@@ -1,0 +1,104 @@
+//! PJRT runtime: loads the HLO-text artifacts AOT-lowered by
+//! `python/compile/aot.py` (JAX + Pallas, build-time only) and executes
+//! them on the XLA CPU client via the `xla` crate.
+//!
+//! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Role in the system: numeric cross-validation. The same convolution a
+//! generated SIMD program computes on the abstract machine is executed
+//! through JAX/XLA (Pallas kernel lowered with interpret=True), and the
+//! results must agree exactly (integer-valued f32 data keeps everything
+//! exact well below f32's 2^24 integer range).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+}
+
+/// The PJRT CPU runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<LoadedModule> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(LoadedModule { exe, path: path.display().to_string() })
+    }
+}
+
+impl LoadedModule {
+    /// Execute with f32 inputs of the given shapes; returns the flattened
+    /// f32 outputs of the (1-tuple) result.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(dims).context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<f32>().context("reading f32 result")?;
+        Ok(values)
+    }
+}
+
+/// Default artifact directory (relative to the repo root).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("YFLOWS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// Is an artifact present (so tests can skip gracefully when
+/// `make artifacts` has not run)?
+pub fn artifact_path(name: &str) -> Option<std::path::PathBuf> {
+    let p = artifacts_dir().join(name);
+    p.exists().then_some(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_none() {
+        assert!(artifact_path("definitely-not-present.hlo.txt").is_none());
+    }
+}

@@ -1,0 +1,218 @@
+//! Concrete memory layouts and their index arithmetic (paper §II-D, Fig 1).
+//!
+//! * `NCHW`  — channels-major (framework default; TVM/PyTorch default).
+//! * `NHWC`  — channels-innermost (TensorFlow default; the paper notes it
+//!   equals NCHWc for binary nets with ≤512 channels).
+//! * `NCHWc` — channel blocks of `c`; inside a block, spatial-major with
+//!   the `c` sub-channels contiguous. This is the layout the code
+//!   generator targets: one vector variable covers the `c` sub-channels of
+//!   one spatial position.
+//!
+//! Weights:
+//! * `CKRS`  — plain layout (input-channel major).
+//! * `CKRSc` — the paper's layout: for each (input-channel-block, output
+//!   channel), the R=fh·fw filter taps are contiguous with `c` sub-channel
+//!   values per tap, matching the input block layout.
+
+use super::{ActShape, WeightShape};
+
+/// Activation tensor layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActLayout {
+    NCHW,
+    NHWC,
+    NCHWc { c: usize },
+}
+
+impl ActLayout {
+    /// Panics if the layout is incompatible with the shape (programmer
+    /// error: the explorer only proposes valid layouts).
+    pub fn validate(&self, shape: &ActShape) {
+        if let ActLayout::NCHWc { c } = self {
+            assert!(*c > 0 && shape.channels % c == 0,
+                "NCHWc requires c | channels (c={c}, channels={})", shape.channels);
+        }
+    }
+
+    /// Flat element index of (channel, y, x).
+    #[inline]
+    pub fn index(&self, shape: &ActShape, ch: usize, y: usize, x: usize) -> usize {
+        debug_assert!(ch < shape.channels && y < shape.h && x < shape.w);
+        match *self {
+            ActLayout::NCHW => (ch * shape.h + y) * shape.w + x,
+            ActLayout::NHWC => (y * shape.w + x) * shape.channels + ch,
+            ActLayout::NCHWc { c } => {
+                let cb = ch / c; // channel block
+                let ci = ch % c; // sub-channel within block
+                ((cb * shape.h + y) * shape.w + x) * c + ci
+            }
+        }
+    }
+
+    /// Base element offset of channel block `cb` under NCHWc.
+    #[inline]
+    pub fn block_base(&self, shape: &ActShape, cb: usize) -> usize {
+        match *self {
+            ActLayout::NCHWc { c } => cb * shape.h * shape.w * c,
+            _ => panic!("block_base only defined for NCHWc"),
+        }
+    }
+
+    /// Element offset of spatial position (y, x) *within* a channel block
+    /// (the unit the generated vector loads address).
+    #[inline]
+    pub fn in_block_offset(&self, shape: &ActShape, y: usize, x: usize) -> usize {
+        match *self {
+            ActLayout::NCHWc { c } => (y * shape.w + x) * c,
+            _ => panic!("in_block_offset only defined for NCHWc"),
+        }
+    }
+
+    /// Short name for reports.
+    pub fn name(&self) -> String {
+        match *self {
+            ActLayout::NCHW => "NCHW".into(),
+            ActLayout::NHWC => "NHWC".into(),
+            ActLayout::NCHWc { c } => format!("NCHW{c}c"),
+        }
+    }
+}
+
+/// Weight tensor layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WeightLayout {
+    CKRS,
+    CKRSc { c: usize },
+}
+
+impl WeightLayout {
+    pub fn validate(&self, shape: &WeightShape) {
+        if let WeightLayout::CKRSc { c } = self {
+            assert!(*c > 0 && shape.in_channels % c == 0,
+                "CKRSc requires c | in_channels (c={c}, C={})", shape.in_channels);
+        }
+    }
+
+    /// Flat element index of (input channel, output channel, tap row, tap col).
+    #[inline]
+    pub fn index(&self, shape: &WeightShape, ci: usize, k: usize, ry: usize, rx: usize) -> usize {
+        debug_assert!(
+            ci < shape.in_channels && k < shape.out_channels && ry < shape.fh && rx < shape.fw
+        );
+        match *self {
+            WeightLayout::CKRS => ((ci * shape.out_channels + k) * shape.fh + ry) * shape.fw + rx,
+            WeightLayout::CKRSc { c } => {
+                let cb = ci / c;
+                let cc = ci % c;
+                ((((cb * shape.out_channels + k) * shape.fh + ry) * shape.fw + rx) * c) + cc
+            }
+        }
+    }
+
+    /// Base element offset of the (channel block, output channel) weight
+    /// block: R = fh·fw taps of c sub-channels each.
+    #[inline]
+    pub fn block_base(&self, shape: &WeightShape, cb: usize, k: usize) -> usize {
+        match *self {
+            WeightLayout::CKRSc { c } => (cb * shape.out_channels + k) * shape.fh * shape.fw * c,
+            _ => panic!("block_base only defined for CKRSc"),
+        }
+    }
+
+    /// Element offset of tap (ry, rx) within a weight block.
+    #[inline]
+    pub fn in_block_offset(&self, shape: &WeightShape, ry: usize, rx: usize) -> usize {
+        match *self {
+            WeightLayout::CKRSc { c } => (ry * shape.fw + rx) * c,
+            _ => panic!("in_block_offset only defined for CKRSc"),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            WeightLayout::CKRS => "CKRS".into(),
+            WeightLayout::CKRSc { c } => format!("CKRS{c}c"),
+        }
+    }
+}
+
+/// Cost (elements moved) of transforming an activation tensor between two
+/// layouts — the §IV-C dynamic program minimizes the sum of these along a
+/// network. Identical layouts cost 0; everything else is one full copy.
+pub fn transform_cost(shape: &ActShape, from: ActLayout, to: ActLayout) -> usize {
+    if from == to {
+        0
+    } else {
+        shape.elements()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nchwc_index_matches_definition() {
+        let shape = ActShape::new(8, 2, 3);
+        let l = ActLayout::NCHWc { c: 4 };
+        // channel 5 = block 1, sub 1; (y=1, x=2)
+        let idx = l.index(&shape, 5, 1, 2);
+        assert_eq!(idx, ((1 * 2 + 1) * 3 + 2) * 4 + 1);
+        assert_eq!(l.block_base(&shape, 1), 2 * 3 * 4);
+        assert_eq!(l.in_block_offset(&shape, 1, 2), (1 * 3 + 2) * 4);
+    }
+
+    #[test]
+    fn all_layout_indices_are_bijective() {
+        let shape = ActShape::new(8, 3, 5);
+        for layout in [ActLayout::NCHW, ActLayout::NHWC, ActLayout::NCHWc { c: 4 }] {
+            let mut seen = vec![false; shape.elements()];
+            for ch in 0..shape.channels {
+                for y in 0..shape.h {
+                    for x in 0..shape.w {
+                        let i = layout.index(&shape, ch, y, x);
+                        assert!(!seen[i], "collision in {layout:?}");
+                        seen[i] = true;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&b| b));
+        }
+    }
+
+    #[test]
+    fn weight_indices_bijective() {
+        let shape = WeightShape::new(8, 3, 2, 2);
+        for layout in [WeightLayout::CKRS, WeightLayout::CKRSc { c: 4 }] {
+            let mut seen = vec![false; shape.elements()];
+            for ci in 0..shape.in_channels {
+                for k in 0..shape.out_channels {
+                    for ry in 0..shape.fh {
+                        for rx in 0..shape.fw {
+                            let i = layout.index(&shape, ci, k, ry, rx);
+                            assert!(!seen[i]);
+                            seen[i] = true;
+                        }
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&b| b));
+        }
+    }
+
+    #[test]
+    fn transform_cost_zero_iff_same() {
+        let shape = ActShape::new(16, 4, 4);
+        assert_eq!(transform_cost(&shape, ActLayout::NCHW, ActLayout::NCHW), 0);
+        assert_eq!(
+            transform_cost(&shape, ActLayout::NCHW, ActLayout::NHWC),
+            shape.elements()
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_block_size_rejected() {
+        ActLayout::NCHWc { c: 3 }.validate(&ActShape::new(8, 2, 2));
+    }
+}

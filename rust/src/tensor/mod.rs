@@ -1,0 +1,239 @@
+//! Tensor shapes, memory layouts and layout transformations (paper §II-D).
+//!
+//! The paper stores activations in **NCHWc**: channels are split into
+//! blocks of `c`, each *channel block* holds `c × H × W` elements in
+//! spatial-major order with the `c` sub-channels contiguous (so one
+//! 128/256/512-bit vector load grabs the `c` sub-channel values of a single
+//! spatial position). Weights are stored in **CKRSc** to match. Outputs are
+//! written back as scalar elements (the reduction runs over `fw`, `fh` and
+//! the input-channel axis), so their layout is flexible (§IV-C).
+
+pub mod layout;
+
+pub use layout::{ActLayout, transform_cost, WeightLayout};
+
+use crate::util::rng::Rng;
+
+/// Shape of an activation tensor (batch = 1 throughout, as in the paper's
+/// latency experiments).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ActShape {
+    /// Total channels.
+    pub channels: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl ActShape {
+    pub fn new(channels: usize, h: usize, w: usize) -> Self {
+        ActShape { channels, h, w }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.channels * self.h * self.w
+    }
+}
+
+/// An INT8 activation tensor in a concrete layout.
+#[derive(Clone, Debug)]
+pub struct ActTensor {
+    pub shape: ActShape,
+    pub layout: ActLayout,
+    pub data: Vec<i8>,
+}
+
+impl ActTensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: ActShape, layout: ActLayout) -> Self {
+        layout.validate(&shape);
+        ActTensor {
+            shape,
+            layout,
+            data: vec![0; shape.elements()],
+        }
+    }
+
+    /// Random tensor (deterministic from seed).
+    pub fn random(shape: ActShape, layout: ActLayout, seed: u64) -> Self {
+        let mut t = Self::zeros(shape, layout);
+        let mut rng = Rng::new(seed);
+        rng.fill_i8(&mut t.data);
+        t
+    }
+
+    /// Read one logical element (channel, y, x).
+    pub fn get(&self, ch: usize, y: usize, x: usize) -> i8 {
+        self.data[self.layout.index(&self.shape, ch, y, x)]
+    }
+
+    /// Write one logical element.
+    pub fn set(&mut self, ch: usize, y: usize, x: usize, v: i8) {
+        let i = self.layout.index(&self.shape, ch, y, x);
+        self.data[i] = v;
+    }
+
+    /// Convert to another layout (copying). Returns the new tensor and the
+    /// number of elements moved (the §IV-C transformation cost unit).
+    pub fn to_layout(&self, layout: ActLayout) -> (ActTensor, usize) {
+        if layout == self.layout {
+            return (self.clone(), 0);
+        }
+        let mut out = ActTensor::zeros(self.shape, layout);
+        for ch in 0..self.shape.channels {
+            for y in 0..self.shape.h {
+                for x in 0..self.shape.w {
+                    out.set(ch, y, x, self.get(ch, y, x));
+                }
+            }
+        }
+        let moved = self.shape.elements();
+        (out, moved)
+    }
+
+    /// Zero-pad spatially by `pad` on each side, preserving layout.
+    /// Conv codegen assumes pre-padded inputs (padding handled at tensor
+    /// materialization, not inside generated kernels).
+    pub fn pad_spatial(&self, pad: usize) -> ActTensor {
+        if pad == 0 {
+            return self.clone();
+        }
+        let new_shape = ActShape::new(self.shape.channels, self.shape.h + 2 * pad, self.shape.w + 2 * pad);
+        let mut out = ActTensor::zeros(new_shape, self.layout);
+        for ch in 0..self.shape.channels {
+            for y in 0..self.shape.h {
+                for x in 0..self.shape.w {
+                    out.set(ch, y + pad, x + pad, self.get(ch, y, x));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Shape of a convolution weight tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WeightShape {
+    /// Input channels (C in the paper's CKRSc).
+    pub in_channels: usize,
+    /// Output channels / filters (K).
+    pub out_channels: usize,
+    /// Filter height (R rows).
+    pub fh: usize,
+    /// Filter width (S columns).
+    pub fw: usize,
+}
+
+impl WeightShape {
+    pub fn new(in_channels: usize, out_channels: usize, fh: usize, fw: usize) -> Self {
+        WeightShape { in_channels, out_channels, fh, fw }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.in_channels * self.out_channels * self.fh * self.fw
+    }
+}
+
+/// An INT8 weight tensor in a concrete layout.
+#[derive(Clone, Debug)]
+pub struct WeightTensor {
+    pub shape: WeightShape,
+    pub layout: WeightLayout,
+    pub data: Vec<i8>,
+}
+
+impl WeightTensor {
+    pub fn zeros(shape: WeightShape, layout: WeightLayout) -> Self {
+        layout.validate(&shape);
+        WeightTensor {
+            shape,
+            layout,
+            data: vec![0; shape.elements()],
+        }
+    }
+
+    pub fn random(shape: WeightShape, layout: WeightLayout, seed: u64) -> Self {
+        let mut t = Self::zeros(shape, layout);
+        let mut rng = Rng::new(seed);
+        rng.fill_i8(&mut t.data);
+        t
+    }
+
+    pub fn get(&self, ci: usize, k: usize, ry: usize, rx: usize) -> i8 {
+        self.data[self.layout.index(&self.shape, ci, k, ry, rx)]
+    }
+
+    pub fn set(&mut self, ci: usize, k: usize, ry: usize, rx: usize, v: i8) {
+        let i = self.layout.index(&self.shape, ci, k, ry, rx);
+        self.data[i] = v;
+    }
+}
+
+/// An INT32 output tensor (accumulator precision), K-major scalar layout:
+/// `index = (k * oh + y) * ow + x`.
+#[derive(Clone, Debug)]
+pub struct OutTensor {
+    pub channels: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<i32>,
+}
+
+impl OutTensor {
+    pub fn zeros(channels: usize, h: usize, w: usize) -> Self {
+        OutTensor {
+            channels,
+            h,
+            w,
+            data: vec![0; channels * h * w],
+        }
+    }
+
+    #[inline]
+    pub fn index(&self, k: usize, y: usize, x: usize) -> usize {
+        (k * self.h + y) * self.w + x
+    }
+
+    pub fn get(&self, k: usize, y: usize, x: usize) -> i32 {
+        self.data[self.index(k, y, x)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_roundtrip_layouts() {
+        let shape = ActShape::new(8, 3, 4);
+        let t = ActTensor::random(shape, ActLayout::NCHWc { c: 4 }, 1);
+        let (nhwc, moved) = t.to_layout(ActLayout::NHWC);
+        assert_eq!(moved, shape.elements());
+        let (back, _) = nhwc.to_layout(ActLayout::NCHWc { c: 4 });
+        assert_eq!(t.data, back.data);
+    }
+
+    #[test]
+    fn padding_preserves_values() {
+        let shape = ActShape::new(4, 2, 2);
+        let t = ActTensor::random(shape, ActLayout::NCHWc { c: 4 }, 2);
+        let p = t.pad_spatial(1);
+        assert_eq!(p.shape.h, 4);
+        assert_eq!(p.get(1, 0, 0), 0); // border is zero
+        assert_eq!(p.get(1, 1, 1), t.get(1, 0, 0));
+    }
+
+    #[test]
+    fn out_tensor_indexing() {
+        let o = OutTensor::zeros(2, 3, 4);
+        assert_eq!(o.index(1, 2, 3), 1 * 12 + 2 * 4 + 3);
+        assert_eq!(o.data.len(), 24);
+    }
+
+    #[test]
+    fn weight_get_set() {
+        let shape = WeightShape::new(8, 2, 3, 3);
+        let mut w = WeightTensor::zeros(shape, WeightLayout::CKRSc { c: 4 });
+        w.set(5, 1, 2, 2, 77);
+        assert_eq!(w.get(5, 1, 2, 2), 77);
+    }
+}

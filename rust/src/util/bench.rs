@@ -1,0 +1,270 @@
+//! A minimal criterion-style benchmark harness (criterion itself is not
+//! available offline). Each `cargo bench` target is a plain binary that
+//! builds a [`BenchSuite`], registers closures, and calls [`BenchSuite::run`].
+//!
+//! Measurements: wall-clock per iteration with automatic iteration-count
+//! calibration, warm-up, and outlier-robust summaries. Results are printed
+//! as an aligned table and appended to `target/yflows-bench/<suite>.csv`
+//! so successive runs can be diffed (used by the §Perf iteration log).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+use super::table::Table;
+
+/// One benchmark result row.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration.
+    pub summary: Summary,
+    pub iters_per_sample: u64,
+    /// Optional user-attached metric (e.g. modeled cycles) for context.
+    pub metric: Option<(String, f64)>,
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Target time spent measuring each benchmark.
+    pub measure_time: Duration,
+    /// Warm-up time before measuring.
+    pub warmup_time: Duration,
+    /// Number of samples to collect.
+    pub samples: usize,
+    /// Quick mode (set by `--quick` or YFLOWS_BENCH_QUICK=1): fewer samples.
+    pub quick: bool,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("YFLOWS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        if quick {
+            BenchConfig {
+                measure_time: Duration::from_millis(200),
+                warmup_time: Duration::from_millis(50),
+                samples: 10,
+                quick,
+            }
+        } else {
+            BenchConfig {
+                measure_time: Duration::from_millis(1500),
+                warmup_time: Duration::from_millis(300),
+                samples: 30,
+                quick,
+            }
+        }
+    }
+}
+
+/// A suite of named benchmarks producing one report.
+pub struct BenchSuite {
+    pub name: String,
+    pub config: BenchConfig,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        // `cargo bench -- <filter>` passes the filter as a free argument.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with("--"));
+        BenchSuite {
+            name: name.to_string(),
+            config: BenchConfig::default(),
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Should this benchmark run under the current CLI filter?
+    fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Benchmark a closure. The closure's return value is black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) {
+        self.bench_with_metric(name, None, &mut f)
+    }
+
+    /// Benchmark a closure attaching an auxiliary metric column
+    /// (e.g. modeled cycles from the machine perf model).
+    pub fn bench_with_metric<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        metric: Option<(String, f64)>,
+        f: &mut F,
+    ) {
+        if !self.enabled(name) {
+            return;
+        }
+        // Calibrate: how many iterations fit in ~10ms?
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            let dt = t0.elapsed();
+            if dt >= Duration::from_millis(10) || iters >= 1 << 24 {
+                break;
+            }
+            iters *= 2;
+        }
+        // Warm-up.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.config.warmup_time {
+            black_box(f());
+        }
+        // Measure.
+        let per_sample = (self.config.measure_time.as_secs_f64()
+            / self.config.samples as f64)
+            .max(1e-4);
+        let sample_iters = ((per_sample
+            / (Duration::from_millis(10).as_secs_f64() / iters as f64))
+            .ceil() as u64)
+            .max(1);
+        let mut samples = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            for _ in 0..sample_iters {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / sample_iters as f64);
+        }
+        let summary = Summary::of(&samples);
+        eprintln!(
+            "  {:<48} {:>12}/iter (median), n={}x{}",
+            name,
+            fmt_duration(summary.median),
+            self.config.samples,
+            sample_iters
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary,
+            iters_per_sample: sample_iters,
+            metric,
+        });
+    }
+
+    /// Print the report table and append CSV history.
+    pub fn finish(&self) {
+        let mut t = Table::new(&["benchmark", "median", "mean", "stddev", "min", "metric"]);
+        for r in &self.results {
+            let metric = match &r.metric {
+                Some((k, v)) => format!("{k}={v:.3e}"),
+                None => String::new(),
+            };
+            t.row(&[
+                r.name.clone(),
+                fmt_duration(r.summary.median),
+                fmt_duration(r.summary.mean),
+                fmt_duration(r.summary.stddev),
+                fmt_duration(r.summary.min),
+                metric,
+            ]);
+        }
+        println!("\n== bench suite: {} ==", self.name);
+        println!("{}", t.render());
+        if let Err(e) = self.append_csv() {
+            eprintln!("warning: could not write bench CSV: {e}");
+        }
+    }
+
+    fn append_csv(&self) -> std::io::Result<()> {
+        let dir = PathBuf::from("target/yflows-bench");
+        fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        let new = !path.exists();
+        let mut file = fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        if new {
+            writeln!(file, "unix_time,benchmark,median_s,mean_s,stddev_s,min_s,metric")?;
+        }
+        let now = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_secs();
+        for r in &self.results {
+            let mut line = String::new();
+            let metric = match &r.metric {
+                Some((k, v)) => format!("{k}={v}"),
+                None => String::new(),
+            };
+            write!(
+                line,
+                "{},{},{:.9},{:.9},{:.9},{:.9},{}",
+                now, r.name, r.summary.median, r.summary.mean, r.summary.stddev, r.summary.min, metric
+            )
+            .unwrap();
+            writeln!(file, "{line}")?;
+        }
+        Ok(())
+    }
+
+    /// Access collected results (used by tests).
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from deleting a computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human duration formatting (s / ms / µs / ns).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" µs"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn suite_collects_results() {
+        let mut s = BenchSuite::new("selftest");
+        s.config = BenchConfig {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(1),
+            samples: 3,
+            quick: true,
+        };
+        s.filter = None;
+        let mut acc = 0u64;
+        s.bench("noop-add", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(s.results().len(), 1);
+        assert!(s.results()[0].summary.median >= 0.0);
+    }
+}

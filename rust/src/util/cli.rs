@@ -1,0 +1,135 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `yflows <subcommand> [--flag] [--key value] [--key=value]`
+//! with typed accessors and automatic usage/error messages.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// Free positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator (used by tests).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Boolean flag: present (as bare flag or "true"/"1").
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// String option with default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.options.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Optional string option.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default; exits with a message on parse failure.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.options.get(key) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("error: could not parse --{key} {s}");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Comma-separated list of usize values, e.g. `--vl 128,256,512`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.options.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("error: could not parse --{key} element {t}");
+                        std::process::exit(2);
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = argv("fig2 --quick --vl 256 --out=results.csv extra");
+        assert_eq!(a.command.as_deref(), Some("fig2"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("vl", ""), "256");
+        assert_eq!(a.get("out", ""), "results.csv");
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = argv("x --n 17 --ratio 0.5");
+        assert_eq!(a.get_parse::<usize>("n", 0), 17);
+        assert!((a.get_parse::<f64>("ratio", 0.0) - 0.5).abs() < 1e-12);
+        assert_eq!(a.get_parse::<usize>("missing", 3), 3);
+    }
+
+    #[test]
+    fn list_accessor() {
+        let a = argv("x --vl 128,512");
+        assert_eq!(a.get_usize_list("vl", &[]), vec![128, 512]);
+        assert_eq!(a.get_usize_list("none", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = argv("cmd --a --b val");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b", ""), "val");
+    }
+}

@@ -1,0 +1,181 @@
+//! Minimal TOML-subset config files (serde/toml are unavailable offline).
+//!
+//! Supports what the launcher needs: `[section]` headers, `key = value`
+//! pairs (string / integer / float / bool / comma lists), `#` comments.
+//! Used by `yflows --config <file>` to set machine, sweep and planner
+//! options without long command lines — see `configs/default.toml`.
+
+use std::collections::BTreeMap;
+
+/// Parsed config: section → key → raw value string.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config, ParseError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let trimmed = raw.split('#').next().unwrap_or("").trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            if let Some(name) = trimmed.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or(ParseError { line, msg: "unterminated section header".into() })?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = trimmed.split_once('=') {
+                let key = k.trim().to_string();
+                if key.is_empty() {
+                    return Err(ParseError { line, msg: "empty key".into() });
+                }
+                let value = v.trim().trim_matches('"').to_string();
+                cfg.sections.entry(section.clone()).or_default().insert(key, value);
+            } else {
+                return Err(ParseError { line, msg: format!("expected key = value, got `{trimmed}`") });
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    /// Raw string lookup: `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> T {
+        self.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        match self.get(section, key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => default,
+        }
+    }
+
+    /// Comma-separated usize list.
+    pub fn get_usize_list(&self, section: &str, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(section, key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+        }
+    }
+
+    /// All keys of a section (diagnostics).
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(|k| k.as_str()).collect())
+            .unwrap_or_default()
+    }
+}
+
+/// Build a [`crate::report::Sweep`] from the `[sweep]` section, falling
+/// back to the paper grid.
+pub fn sweep_from(cfg: &Config) -> crate::report::Sweep {
+    let paper = crate::report::Sweep::paper();
+    crate::report::Sweep {
+        filters: cfg.get_usize_list("sweep", "filters", &paper.filters),
+        inputs: cfg.get_usize_list("sweep", "inputs", &paper.inputs),
+        nfs: cfg.get_usize_list("sweep", "nfs", &paper.nfs),
+        strides: cfg.get_usize_list("sweep", "strides", &paper.strides),
+        vls: cfg.get_usize_list("sweep", "vls", &paper.vls),
+    }
+}
+
+/// Build [`crate::coordinator::plan::PlannerOptions`] from `[planner]`.
+pub fn planner_from(cfg: &Config) -> crate::coordinator::plan::PlannerOptions {
+    let vl = cfg.get_parse("planner", "vector_length", 128usize);
+    crate::coordinator::plan::PlannerOptions {
+        machine: crate::machine::MachineConfig::neon(vl),
+        explore_each_layer: cfg.get_bool("planner", "explore_each_layer", false),
+        perf_sample: cfg.get_parse("planner", "perf_sample", 2usize),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# launcher config
+[planner]
+vector_length = 256
+explore_each_layer = true
+perf_sample = 4
+
+[sweep]
+filters = 3,5
+inputs = 56
+vls = 128, 512
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("planner", "vector_length"), Some("256"));
+        assert_eq!(c.get_parse("planner", "perf_sample", 0usize), 4);
+        assert!(c.get_bool("planner", "explore_each_layer", false));
+        assert_eq!(c.get_usize_list("sweep", "filters", &[]), vec![3, 5]);
+        assert_eq!(c.get_usize_list("sweep", "vls", &[]), vec![128, 512]);
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_parse("x", "y", 7usize), 7);
+        assert_eq!(c.get_usize_list("a", "b", &[1]), vec![1]);
+        assert!(!c.get_bool("a", "b", false));
+    }
+
+    #[test]
+    fn reports_parse_errors_with_lines() {
+        let err = Config::parse("[planner\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = Config::parse("\njust-a-token\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let c = Config::parse("[s]\nname = \"hello\" # trailing\n").unwrap();
+        assert_eq!(c.get("s", "name"), Some("hello"));
+    }
+
+    #[test]
+    fn builds_sweep_and_planner() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let s = sweep_from(&c);
+        assert_eq!(s.filters, vec![3, 5]);
+        assert_eq!(s.strides, crate::report::Sweep::paper().strides); // default
+        let p = planner_from(&c);
+        assert_eq!(p.machine.vec_var_bits, 256);
+        assert!(p.explore_each_layer);
+    }
+}

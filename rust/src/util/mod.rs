@@ -1,0 +1,15 @@
+//! Small, dependency-free utilities.
+//!
+//! The build environment is fully offline and only ships the `xla` crate's
+//! dependency closure, so the usual ecosystem crates (clap, criterion,
+//! proptest, serde, rand) are re-implemented here at the scale this project
+//! needs.
+
+pub mod rng;
+pub mod stats;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod table;
+pub mod prop;
+pub mod json;

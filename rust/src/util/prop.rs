@@ -1,0 +1,72 @@
+//! Property-based testing helper (proptest is unavailable offline).
+//!
+//! A property is a closure over an [`Rng`]; [`check`] runs it `cases` times
+//! with derived seeds and reports the failing seed on panic, so failures
+//! can be replayed deterministically with [`check_one`].
+
+use super::rng::Rng;
+
+/// Number of cases to run by default. Override with YFLOWS_PROP_CASES.
+pub fn default_cases() -> usize {
+    std::env::var("YFLOWS_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` for `cases` derived seeds. On panic, re-raises with the seed
+/// embedded in the message so the case can be replayed.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000_0000u64 ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property `{name}` failed at case {case} (seed={seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single seed (for debugging a reported failure).
+pub fn check_one<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 32, |rng| {
+            let a = rng.next_u32() as u64;
+            let b = rng.next_u32() as u64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 4, |_| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut captured = Vec::new();
+        check_one(42, |rng| captured.push(rng.next_u64()));
+        let mut captured2 = Vec::new();
+        check_one(42, |rng| captured2.push(rng.next_u64()));
+        assert_eq!(captured, captured2);
+    }
+}

@@ -1,0 +1,145 @@
+//! Integration: every generated dataflow kernel must reproduce the naive
+//! oracle bit-exactly across a broad (shape × stride × vector length ×
+//! dataflow) matrix. This is the end-to-end correctness statement for
+//! the whole code generator.
+
+use yflows::codegen::{self, run_conv};
+use yflows::dataflow::{Anchor, AuxKind, DataflowSpec};
+use yflows::isa::validate;
+use yflows::layer::{oracle::conv_ref, ConvConfig};
+use yflows::machine::MachineConfig;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+
+fn check(cfg: &ConvConfig, spec: &DataflowSpec, machine: &MachineConfig, seed: u64) {
+    let c = machine.c_int8();
+    let input = ActTensor::random(
+        ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+        ActLayout::NCHWc { c },
+        seed,
+    );
+    let weights = WeightTensor::random(
+        WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+        WeightLayout::CKRSc { c },
+        seed + 1,
+    );
+    let prog = codegen::generate(cfg, spec, machine);
+    validate::validate(&prog, machine.num_regs)
+        .unwrap_or_else(|e| panic!("{}: {e}", spec.name()));
+    validate::validate_readonly_operands(&prog).unwrap();
+    let got = run_conv(&prog, cfg, machine, &input, &weights);
+    let want = conv_ref(cfg, &input, &weights);
+    assert_eq!(
+        got.data, want.data,
+        "dataflow {} diverges on {} (vl={})",
+        spec.name(),
+        cfg.name(),
+        machine.vec_var_bits
+    );
+}
+
+/// All specs worth sweeping for a config/machine.
+fn specs_for(cfg: &ConvConfig, machine: &MachineConfig) -> Vec<DataflowSpec> {
+    let avail = machine.aux_vars_available();
+    let r = cfg.r_size();
+    let mut specs = vec![
+        DataflowSpec::basic(Anchor::Output),
+        DataflowSpec::basic(Anchor::Input),
+        DataflowSpec::basic(Anchor::Weight),
+        DataflowSpec::optimized_os(machine, r),
+    ];
+    for n in [1, 2, r.min(avail)] {
+        specs.push(DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, n)]));
+        specs.push(DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Input, n)]));
+        specs.push(DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Output, n)]));
+        specs.push(DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Weight, n)]));
+        specs.push(DataflowSpec::extended(Anchor::Weight, vec![(AuxKind::Output, n)]));
+        specs.push(DataflowSpec::extended(Anchor::Weight, vec![(AuxKind::Input, n)]));
+    }
+    specs.push(DataflowSpec::extended(
+        Anchor::Input,
+        vec![(AuxKind::Output, r.min(avail / 2)), (AuxKind::Weight, r.min(avail / 2))],
+    ));
+    specs.push(DataflowSpec::extended(
+        Anchor::Weight,
+        vec![(AuxKind::Output, avail / 2), (AuxKind::Input, avail / 2)],
+    ));
+    specs.retain(|s| s.fits(machine) && s.is_sensible() && s.aux_vars() <= avail);
+    specs.dedup();
+    specs
+}
+
+#[test]
+fn full_matrix_vl128() {
+    let machine = MachineConfig::neon(128);
+    let mut seed = 1000;
+    for (f, i, s) in [(3, 9, 1), (3, 9, 2), (2, 8, 1), (4, 11, 1), (5, 12, 2), (1, 6, 1)] {
+        let cfg = ConvConfig::simple(i, i, f, f, s, 16, 3);
+        for spec in specs_for(&cfg, &machine) {
+            check(&cfg, &spec, &machine, seed);
+            seed += 7;
+        }
+    }
+}
+
+#[test]
+fn full_matrix_vl256() {
+    let machine = MachineConfig::neon(256);
+    let mut seed = 2000;
+    for (f, i, s) in [(3, 9, 1), (3, 10, 2), (2, 7, 1)] {
+        let cfg = ConvConfig::simple(i, i, f, f, s, 32, 2);
+        for spec in specs_for(&cfg, &machine) {
+            check(&cfg, &spec, &machine, seed);
+            seed += 7;
+        }
+    }
+}
+
+#[test]
+fn full_matrix_vl512() {
+    let machine = MachineConfig::neon(512);
+    let mut seed = 3000;
+    for (f, i, s) in [(3, 8, 1), (2, 9, 2)] {
+        let cfg = ConvConfig::simple(i, i, f, f, s, 64, 2);
+        for spec in specs_for(&cfg, &machine) {
+            check(&cfg, &spec, &machine, seed);
+            seed += 7;
+        }
+    }
+}
+
+#[test]
+fn multi_channel_block_accumulation() {
+    // C spans several channel blocks: outputs accumulate across blocks.
+    let machine = MachineConfig::neon(128);
+    for c_total in [32, 48, 64] {
+        let cfg = ConvConfig::simple(7, 7, 3, 3, 1, c_total, 4);
+        check(&cfg, &DataflowSpec::optimized_os(&machine, 9), &machine, 500 + c_total as u64);
+        check(&cfg, &DataflowSpec::basic(Anchor::Input), &machine, 600 + c_total as u64);
+        check(&cfg, &DataflowSpec::basic(Anchor::Weight), &machine, 700 + c_total as u64);
+    }
+}
+
+#[test]
+fn rectangular_filters_and_inputs() {
+    let machine = MachineConfig::neon(128);
+    for (fh, fw, ih, iw, s) in [(1, 3, 6, 9, 1), (3, 1, 9, 6, 1), (2, 3, 8, 9, 2), (5, 3, 11, 9, 1)] {
+        let mut cfg = ConvConfig::simple(ih, iw, fh, fw, s, 16, 2);
+        cfg.fh = fh;
+        cfg.fw = fw;
+        for spec in [
+            DataflowSpec::basic(Anchor::Output),
+            DataflowSpec::basic(Anchor::Input),
+            DataflowSpec::basic(Anchor::Weight),
+            DataflowSpec::optimized_os(&machine, cfg.r_size()),
+        ] {
+            check(&cfg, &spec, &machine, 900);
+        }
+    }
+}
+
+#[test]
+fn dense_as_1x1_conv() {
+    let machine = MachineConfig::neon(128);
+    let cfg = yflows::layer::DenseConfig::new(64, 10).as_conv();
+    check(&cfg, &DataflowSpec::optimized_os(&machine, 1), &machine, 1234);
+}

@@ -1,0 +1,175 @@
+//! Integration: coordinator end-to-end — planning real networks, the
+//! layout DP over explorer costs, functional multi-layer inference, and
+//! the serving loop.
+
+use yflows::coordinator::{self, plan::{NetworkPlan, Planner, PlannerOptions}, serve::Server};
+use yflows::explore::layout_dp::{solve, LayoutProblem};
+use yflows::layer::{ConvConfig, LayerConfig, PoolConfig};
+use yflows::machine::MachineConfig;
+use yflows::nets;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+
+fn bound_plan(machine: MachineConfig) -> NetworkPlan {
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let c = machine.c_int8();
+    let layers = vec![
+        (LayerConfig::Conv(ConvConfig::simple(14, 14, 3, 3, 1, 16, 32)), 1usize),
+        (LayerConfig::Pool(PoolConfig::max(32, 12, 12, 2, 2)), 0),
+        (LayerConfig::Conv(ConvConfig::simple(6, 6, 3, 3, 1, 32, 16)), 0),
+    ];
+    let mut planned = Vec::new();
+    let mut seed = 40;
+    for (layer, pad) in layers {
+        let mut lp = planner.plan_layer(&layer, pad);
+        if let LayerConfig::Conv(cfg) = &lp.layer {
+            lp.weights = Some(WeightTensor::random(
+                WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+                WeightLayout::CKRSc { c },
+                seed,
+            ));
+            seed += 1;
+        }
+        planned.push(lp);
+    }
+    NetworkPlan { name: "pipeline".into(), layers: planned }
+}
+
+#[test]
+fn functional_pipeline_produces_correct_shapes() {
+    let machine = MachineConfig::neon(128);
+    let plan = bound_plan(machine);
+    // Input is 12x12 (conv pad 1 → 14x14 padded dims in the config).
+    let input = ActTensor::random(ActShape::new(16, 12, 12), ActLayout::NCHWc { c: 16 }, 7);
+    let out = coordinator::run_network_functional(&plan, &input, 9).expect("pipeline run");
+    // conv(pad1) 12→12, pool 12→6, conv(valid) 6→4.
+    assert_eq!(out.shape.channels, 16);
+    assert_eq!((out.shape.h, out.shape.w), (4, 4));
+    // INT8 requantized activations stay in range by construction.
+    assert!(out.data.iter().all(|&v| (0..=127).contains(&(v as i32))));
+}
+
+#[test]
+fn functional_pipeline_is_deterministic() {
+    let machine = MachineConfig::neon(128);
+    let plan = bound_plan(machine);
+    let input = ActTensor::random(ActShape::new(16, 12, 12), ActLayout::NCHWc { c: 16 }, 8);
+    let a = coordinator::run_network_functional(&plan, &input, 9).unwrap();
+    let b = coordinator::run_network_functional(&plan, &input, 9).unwrap();
+    assert_eq!(a.data, b.data);
+}
+
+#[test]
+fn server_round_trips_many_requests() {
+    let machine = MachineConfig::neon(128);
+    let server = Server::start(bound_plan(machine), 3, 9);
+    let mut rxs = Vec::new();
+    for seed in 0..12 {
+        rxs.push(server.submit(ActTensor::random(
+            ActShape::new(16, 12, 12),
+            ActLayout::NCHWc { c: 16 },
+            seed,
+        )));
+    }
+    for rx in rxs {
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!((out.shape.h, out.shape.w), (4, 4));
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests, 12);
+}
+
+#[test]
+fn layout_dp_over_explorer_costs_picks_consistent_blocks() {
+    // Build a real LayoutProblem from per-layer explorer costs at three
+    // block sizes and verify the DP output is optimal vs brute force.
+    let block_sizes = vec![16usize, 32, 64];
+    let layers = [
+        ConvConfig::simple(10, 10, 3, 3, 1, 64, 8),
+        ConvConfig::simple(8, 8, 3, 3, 1, 64, 8),
+    ];
+    let mut run_cost = Vec::new();
+    for cfg in &layers {
+        let mut per_choice = Vec::new();
+        for &c in &block_sizes {
+            let machine = MachineConfig::neon(c * 8);
+            let spec = yflows::dataflow::DataflowSpec::optimized_os(&machine, cfg.r_size());
+            let (_, stats) = yflows::explore::evaluate(cfg, &spec, &machine, 2);
+            per_choice.push(stats.cycles);
+        }
+        run_cost.push(per_choice);
+    }
+    // Transform cost: proportional to tensor elements when blocks differ.
+    let elems = (layers[0].e_size() * layers[0].out_channels) as f64;
+    let transform: Vec<Vec<Vec<f64>>> = vec![
+        (0..3)
+            .map(|a| (0..3).map(|b| if a == b { 0.0 } else { elems * 2.0 }).collect())
+            .collect();
+        2
+    ];
+    let problem = LayoutProblem { block_sizes, run_cost: run_cost.clone(), transform_cost: transform.clone() };
+    let plan = solve(&problem);
+
+    // Brute force all 9 assignments.
+    let mut best = f64::INFINITY;
+    for a in 0..3 {
+        for b in 0..3 {
+            let cost = run_cost[0][a] + transform[0][a][b] + run_cost[1][b];
+            best = best.min(cost);
+        }
+    }
+    assert!((plan.total_cost - best).abs() < 1e-6, "DP {} vs brute {}", plan.total_cost, best);
+}
+
+#[test]
+fn shufflenet_stage_runs_functionally() {
+    // Grouped conv + channel shuffle + depthwise end-to-end on the
+    // functional path (the paper's §IV layer menu beyond simple convs).
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+    let net = nets::shufflenet_stage(32, 2, 8, 8, 1);
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut layers = Vec::new();
+    let mut prev_hw = (8usize, 8usize);
+    let mut seed = 90;
+    for layer in &net.layers {
+        let pad = match layer {
+            LayerConfig::Conv(cfg) => (cfg.ih.saturating_sub(prev_hw.0)) / 2,
+            _ => 0,
+        };
+        let mut lp = planner.plan_layer(layer, pad);
+        if let LayerConfig::Conv(cfg) = &lp.layer {
+            let in_ch = cfg.in_channels_per_group();
+            lp.weights = Some(WeightTensor::random(
+                WeightShape::new(in_ch, cfg.out_channels, cfg.fh, cfg.fw),
+                if cfg.groups == cfg.in_channels {
+                    yflows::tensor::WeightLayout::CKRS
+                } else {
+                    WeightLayout::CKRSc { c: c.min(in_ch) }
+                },
+                seed,
+            ));
+            seed += 1;
+        }
+        let (_, h, w) = layer.out_shape();
+        prev_hw = (h, w);
+        layers.push(lp);
+    }
+    let plan = NetworkPlan { name: net.name, layers };
+    let input = ActTensor::random(ActShape::new(32, 8, 8), ActLayout::NCHWc { c: 16 }, 3);
+    let out = coordinator::run_network_functional(&plan, &input, 9).expect("shuffle pipeline");
+    assert_eq!(out.shape.channels, 32);
+    assert_eq!((out.shape.h, out.shape.w), (8, 8));
+}
+
+#[test]
+fn plan_all_fig8_networks() {
+    // Every Fig 8 network plans without panicking and with sane totals.
+    for net in nets::fig8_networks() {
+        let plan = coordinator::plan_network(
+            &net,
+            PlannerOptions { machine: MachineConfig::neon(128), explore_each_layer: false, perf_sample: 1 },
+        );
+        assert!(plan.total_cycles() > 1e6, "{} too cheap", net.name);
+        assert_eq!(plan.layers.len(), net.layers.len());
+    }
+}

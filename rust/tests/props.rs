@@ -1,0 +1,194 @@
+//! Property-based tests over randomized configurations (the offline
+//! stand-in for proptest — see `util::prop`): codegen invariants that
+//! must hold for *any* layer/dataflow/machine combination.
+
+use yflows::codegen::{self, run_conv};
+use yflows::dataflow::{heuristics, Anchor, AuxKind, DataflowSpec};
+use yflows::isa::validate;
+use yflows::layer::{oracle::conv_ref, ConvConfig};
+use yflows::machine::{Bases, MachineConfig, PerfModel};
+use yflows::quant::{pack_binary_act, pack_binary_wgt};
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::prop::{check, default_cases};
+use yflows::util::rng::Rng;
+
+/// Draw a random valid (config, spec, machine) triple.
+fn draw_case(rng: &mut Rng) -> (ConvConfig, DataflowSpec, MachineConfig) {
+    let vl = *rng.pick(&[128usize, 256, 512]);
+    let machine = MachineConfig::neon(vl);
+    let c = machine.c_int8();
+    let fh = rng.range(1, 3);
+    let fw = rng.range(1, 3);
+    let stride = rng.range(1, 2);
+    let ih = rng.range(fh + stride, 9);
+    let iw = rng.range(fw + stride, 9);
+    let blocks = rng.range(1, 2);
+    let k = rng.range(1, 3);
+    let cfg = ConvConfig::simple(ih, iw, fh, fw, stride, blocks * c, k);
+
+    let anchor = *rng.pick(&Anchor::all());
+    let avail = machine.aux_vars_available();
+    let kinds: Vec<AuxKind> = match anchor {
+        Anchor::Output => vec![AuxKind::Weight, AuxKind::Input],
+        Anchor::Input => vec![AuxKind::Output, AuxKind::Weight],
+        Anchor::Weight => vec![AuxKind::Output, AuxKind::Input],
+    };
+    let mut aux = Vec::new();
+    let mut left = avail;
+    for kind in kinds {
+        if left == 0 || rng.range(0, 1) == 0 {
+            continue;
+        }
+        let n = rng.range(0, left.min(cfg.r_size()));
+        if n > 0 {
+            aux.push((kind, n));
+            left -= n;
+        }
+    }
+    (cfg, DataflowSpec::extended(anchor, aux), machine)
+}
+
+#[test]
+fn prop_generated_programs_validate_and_match_oracle() {
+    check("codegen-correct", default_cases(), |rng| {
+        let (cfg, spec, machine) = draw_case(rng);
+        let c = machine.c_int8();
+        let prog = codegen::generate(&cfg, &spec, &machine);
+        // Invariant 1: fits the register file and is def-before-use clean.
+        validate::validate(&prog, machine.num_regs).expect("invalid program");
+        validate::validate_readonly_operands(&prog).expect("writes operand buffer");
+        // Invariant 2: register usage never exceeds the allocation bound.
+        let n = machine.regs_per_var();
+        assert!(prog.regs_used <= (3 + spec.aux_vars()) * n);
+        // Invariant 3: bit-exact vs oracle.
+        let seed = rng.next_u64();
+        let input = ActTensor::random(
+            ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+            ActLayout::NCHWc { c },
+            seed,
+        );
+        let weights = WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            seed ^ 0xABCD,
+        );
+        let got = run_conv(&prog, &cfg, &machine, &input, &weights);
+        let want = conv_ref(&cfg, &input, &weights);
+        assert_eq!(got.data, want.data, "{} on {}", spec.name(), cfg.name());
+    });
+}
+
+#[test]
+fn prop_extended_never_increases_mem_reads() {
+    // Adding aux variables can only remove loads (never add them).
+    check("aux-monotone-reads", default_cases(), |rng| {
+        let (cfg, spec, machine) = draw_case(rng);
+        let basic = codegen::generate(&cfg, &DataflowSpec::basic(spec.anchor), &machine);
+        let ext = codegen::generate(&cfg, &spec, &machine);
+        assert!(
+            ext.mem_reads() <= basic.mem_reads() + spec.aux_vars(),
+            "{}: ext reads {} > basic {} (+prologue {})",
+            spec.name(),
+            ext.mem_reads(),
+            basic.mem_reads(),
+            spec.aux_vars()
+        );
+    });
+}
+
+#[test]
+fn prop_layout_transforms_roundtrip() {
+    check("layout-roundtrip", default_cases(), |rng| {
+        let c = *rng.pick(&[4usize, 8, 16]);
+        let blocks = rng.range(1, 3);
+        let shape = ActShape::new(blocks * c, rng.range(1, 6), rng.range(1, 6));
+        let t = ActTensor::random(shape, ActLayout::NCHWc { c }, rng.next_u64());
+        let (nchw, _) = t.to_layout(ActLayout::NCHW);
+        let (nhwc, _) = nchw.to_layout(ActLayout::NHWC);
+        let (back, _) = nhwc.to_layout(ActLayout::NCHWc { c });
+        assert_eq!(t.data, back.data);
+    });
+}
+
+#[test]
+fn prop_binary_pack_preserves_dot_products() {
+    check("binary-pack", default_cases() / 2, |rng| {
+        let machine = MachineConfig::neon(128);
+        let c_bits = machine.c_binary();
+        let cfg = ConvConfig::simple(rng.range(4, 7), rng.range(4, 7), 3, 3, 1, c_bits, 2);
+        let mut input = ActTensor::zeros(
+            ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+            ActLayout::NCHWc { c: c_bits },
+        );
+        for v in input.data.iter_mut() {
+            *v = rng.sign();
+        }
+        let mut w = WeightTensor::zeros(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, 3, 3),
+            WeightLayout::CKRSc { c: c_bits },
+        );
+        for v in w.data.iter_mut() {
+            *v = rng.sign();
+        }
+        let prog = codegen::binary::gen_binary_os(&cfg, &machine);
+        let got = codegen::binary::run_conv_binary(
+            &prog,
+            &cfg,
+            &machine,
+            &pack_binary_act(&input, c_bits),
+            &pack_binary_wgt(&w, c_bits),
+        );
+        let want = conv_ref(&cfg, &input, &w);
+        assert_eq!(got.data, want.data);
+    });
+}
+
+#[test]
+fn prop_heuristic_sign_matches_measurement() {
+    // Wherever the heuristic predicts a positive read gain for the first
+    // aux variable, the measured program must load strictly less.
+    check("heuristic-sign", default_cases() / 2, |rng| {
+        let machine = MachineConfig::neon(128);
+        let c = machine.c_int8();
+        let f = rng.range(2, 3);
+        let i = rng.range(f + 2, 10);
+        let cfg = ConvConfig::simple(i, i, f, f, 1, c, 2);
+        for (anchor, aux) in [
+            (Anchor::Output, AuxKind::Weight),
+            (Anchor::Output, AuxKind::Input),
+            (Anchor::Input, AuxKind::Weight),
+            (Anchor::Weight, AuxKind::Output),
+        ] {
+            let predicted = heuristics::aux_gain(&cfg, anchor, aux, 1);
+            if predicted.map(|g| g.reads_saved > 0.0).unwrap_or(false) {
+                let b = codegen::generate(&cfg, &DataflowSpec::basic(anchor), &machine);
+                let e = codegen::generate(
+                    &cfg,
+                    &DataflowSpec::extended(anchor, vec![(aux, 1)]),
+                    &machine,
+                );
+                assert!(
+                    e.mem_reads() < b.mem_reads() || e.mem_writes() < b.mem_writes(),
+                    "{anchor:?}+{aux:?}: no measured gain despite predicted"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_perf_model_cycles_positive_and_monotone_in_invocations() {
+    check("perf-monotone", default_cases() / 2, |rng| {
+        let machine = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(rng.range(5, 8), rng.range(5, 8), 3, 3, 1, 16, 2);
+        let prog = codegen::generate(&cfg, &DataflowSpec::basic(Anchor::Output), &machine);
+        let mut pm = PerfModel::neoverse_n1();
+        let one = pm.run_invocation(&prog, Bases::default());
+        assert!(one.cycles > 0.0);
+        let mut pm2 = PerfModel::neoverse_n1();
+        let sched: Vec<Bases> = (0..4).map(|k| Bases { output: k * 16, ..Default::default() }).collect();
+        let four = pm2.run_layer_exact(&prog, &sched);
+        assert!(four.cycles > one.cycles);
+        assert_eq!(four.invocations, 4);
+    });
+}

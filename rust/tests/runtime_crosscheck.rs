@@ -1,0 +1,102 @@
+//! Integration: the PJRT runtime executes the AOT-lowered JAX/Pallas
+//! artifacts and must agree bit-for-bit with (a) the rust naive oracle
+//! and (b) the generated SIMD kernels. Skips (with a notice) when
+//! `make artifacts` has not been run.
+
+use yflows::codegen;
+use yflows::dataflow::DataflowSpec;
+use yflows::layer::{oracle::conv_ref, ConvConfig};
+use yflows::machine::MachineConfig;
+use yflows::runtime::{artifact_path, Runtime};
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::rng::Rng;
+
+fn int_vec(rng: &mut Rng, n: usize, span: i32) -> Vec<f32> {
+    (0..n).map(|_| (rng.range(0, 2 * span as usize) as i32 - span) as f32).collect()
+}
+
+#[test]
+fn conv3x3_artifact_matches_oracle_and_codegen() {
+    let Some(path) = artifact_path("conv3x3.hlo.txt") else {
+        eprintln!("skipping: artifacts/conv3x3.hlo.txt not built (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT client");
+    let module = rt.load(&path).expect("load artifact");
+
+    let mut rng = Rng::new(77);
+    let x = int_vec(&mut rng, 16 * 12 * 12, 7);
+    let w = int_vec(&mut rng, 8 * 16 * 3 * 3, 7);
+    let jax_out = module
+        .run_f32(&[(&x, &[16, 12, 12]), (&w, &[8, 16, 3, 3])])
+        .expect("execute artifact");
+    assert_eq!(jax_out.len(), 8 * 10 * 10);
+
+    // Rust oracle on the same data (NCHW → our tensor types).
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+    let cfg = ConvConfig::simple(12, 12, 3, 3, 1, 16, 8);
+    let mut input = ActTensor::zeros(ActShape::new(16, 12, 12), ActLayout::NCHWc { c });
+    for ch in 0..16 {
+        for y in 0..12 {
+            for xx in 0..12 {
+                input.set(ch, y, xx, x[(ch * 12 + y) * 12 + xx] as i8);
+            }
+        }
+    }
+    let mut weights = WeightTensor::zeros(WeightShape::new(16, 8, 3, 3), WeightLayout::CKRSc { c });
+    for k in 0..8 {
+        for ch in 0..16 {
+            for ry in 0..3 {
+                for rx in 0..3 {
+                    weights.set(ch, k, ry, rx, w[((k * 16 + ch) * 3 + ry) * 3 + rx] as i8);
+                }
+            }
+        }
+    }
+    let oracle = conv_ref(&cfg, &input, &weights);
+
+    // (a) JAX == oracle.
+    for k in 0..8 {
+        for oy in 0..10 {
+            for ox in 0..10 {
+                let jax_v = jax_out[(k * 10 + oy) * 10 + ox];
+                assert_eq!(jax_v, oracle.get(k, oy, ox) as f32, "JAX vs oracle at ({k},{oy},{ox})");
+            }
+        }
+    }
+
+    // (b) generated kernel == oracle (hence == JAX).
+    let spec = DataflowSpec::optimized_os(&machine, cfg.r_size());
+    let prog = codegen::generate(&cfg, &spec, &machine);
+    let ours = codegen::run_conv(&prog, &cfg, &machine, &input, &weights);
+    assert_eq!(ours.data, oracle.data);
+}
+
+#[test]
+fn minivgg_artifact_executes_and_is_deterministic() {
+    let Some(path) = artifact_path("minivgg.hlo.txt") else {
+        eprintln!("skipping: artifacts/minivgg.hlo.txt not built (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT client");
+    let module = rt.load(&path).expect("load artifact");
+    let mut rng = Rng::new(99);
+    let x = int_vec(&mut rng, 16 * 16 * 16, 4);
+    let w1 = int_vec(&mut rng, 32 * 16 * 3 * 3, 4);
+    let w2 = int_vec(&mut rng, 32 * 32 * 3 * 3, 4);
+    let w3 = int_vec(&mut rng, 10 * 32 * 1 * 1, 4);
+    let inputs: Vec<(&[f32], &[i64])> = vec![
+        (&x, &[16, 16, 16][..]),
+        (&w1, &[32, 16, 3, 3][..]),
+        (&w2, &[32, 32, 3, 3][..]),
+        (&w3, &[10, 32, 1, 1][..]),
+    ];
+    let a = module.run_f32(&inputs).expect("run 1");
+    let b = module.run_f32(&inputs).expect("run 2");
+    assert_eq!(a.len(), 10);
+    assert_eq!(a, b, "MiniVGG artifact is nondeterministic");
+    // ReLU + integer inputs → logits are finite and not all zero.
+    assert!(a.iter().all(|v| v.is_finite()));
+    assert!(a.iter().any(|v| *v != 0.0));
+}
