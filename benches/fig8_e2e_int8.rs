@@ -30,9 +30,12 @@ fn main() {
     suite.bench("fig8/layer/ours-alg8", || run_conv(&ours, &cfg, &machine, &input, &weights));
     suite.bench("fig8/layer/tuned-ws", || run_conv(&tuned, &cfg, &machine, &input, &weights));
 
-    // Planning throughput for a real network.
+    // Planning throughput for a real network. Must bypass the plan
+    // cache: the memoized plan_network would make every iteration after
+    // the first a cache hit, benching clone cost instead of planning.
     suite.bench("fig8/plan/resnet18", || {
-        yflows::coordinator::plan_network(&nets::resnet18(), PlannerOptions::default()).total_cycles()
+        yflows::coordinator::plan_network_uncached(&nets::resnet18(), PlannerOptions::default())
+            .total_cycles()
     });
 
     // Full modeled e2e comparison as metrics (quick subset).

@@ -12,6 +12,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+# hypothesis is optional in offline environments; skip (don't error) the
+# property sweep when it is absent.
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import conv_os, conv_ws, conv_ref

@@ -1,18 +1,22 @@
-//! Session metrics: per-layer and end-to-end accounting, rendered for
-//! the e2e experiments and the serving example.
+//! Session metrics: per-request latency tails (p50/p95/p99), the
+//! batch-size histogram of the batched scheduler, plan-cache hit rates,
+//! and per-layer accounting — rendered for the e2e experiments and the
+//! serving example.
 
-use crate::util::stats::Summary;
+use crate::util::stats::{percentile, Summary};
 use crate::util::table::Table;
 
-use super::plan::NetworkPlan;
+use super::plan::{NetworkPlan, PlanCacheStats};
 use super::CLOCK_HZ;
 
 /// Aggregated request metrics of a serving session.
 #[derive(Clone, Debug, Default)]
 pub struct SessionMetrics {
-    /// Per-request wall-clock latencies (seconds).
+    /// Per-request wall-clock latencies (seconds), submit → response.
     pub latencies: Vec<f64>,
     pub requests: u64,
+    /// Size of every batch the scheduler dispatched, in dispatch order.
+    pub batch_sizes: Vec<usize>,
 }
 
 impl SessionMetrics {
@@ -21,12 +25,34 @@ impl SessionMetrics {
         self.requests += 1;
     }
 
+    /// Record one dispatched batch of `size` requests.
+    pub fn record_batch(&mut self, size: usize) {
+        self.batch_sizes.push(size);
+    }
+
     pub fn summary(&self) -> Summary {
         Summary::of(&self.latencies)
     }
 
-    /// Requests per second over the observed span (mean latency based —
-    /// single worker).
+    /// Median request latency (seconds).
+    pub fn p50(&self) -> f64 {
+        percentile(&self.latencies, 50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        percentile(&self.latencies, 95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.latencies, 99.0)
+    }
+
+    /// Inverse of the mean *response* time (1 / mean latency). Under
+    /// the batched multi-worker server, latencies are submit→response
+    /// (they include queue and batch-formation wait), so this is a
+    /// serial-equivalent proxy, **not** the server's request rate —
+    /// measure that from wall clock over a request count, as the
+    /// `resnet_e2e` example does.
     pub fn throughput(&self) -> f64 {
         let s = self.summary();
         if s.mean > 0.0 {
@@ -35,6 +61,53 @@ impl SessionMetrics {
             0.0
         }
     }
+
+    /// Batch-size histogram: (size, count of batches with that size),
+    /// ascending by size.
+    pub fn batch_histogram(&self) -> Vec<(usize, usize)> {
+        let mut hist: Vec<(usize, usize)> = Vec::new();
+        for &size in &self.batch_sizes {
+            match hist.iter_mut().find(|(s, _)| *s == size) {
+                Some((_, n)) => *n += 1,
+                None => hist.push((size, 1)),
+            }
+        }
+        hist.sort_by_key(|&(s, _)| s);
+        hist
+    }
+
+    /// Mean requests per dispatched batch (0 when nothing dispatched).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    /// Largest batch the scheduler dispatched.
+    pub fn max_batch_observed(&self) -> usize {
+        self.batch_sizes.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Serving-session report: latency tails, batching behaviour, and the
+/// plan cache's hit rate, as one renderable table.
+pub fn session_table(m: &SessionMetrics, cache: &PlanCacheStats) -> Table {
+    let mut t = Table::new(&["metric", "value"]);
+    let s = m.summary();
+    t.row(&["requests".to_string(), m.requests.to_string()]);
+    t.row(&["mean latency (ms)".to_string(), format!("{:.3}", s.mean * 1e3)]);
+    t.row(&["p50 latency (ms)".to_string(), format!("{:.3}", m.p50() * 1e3)]);
+    t.row(&["p95 latency (ms)".to_string(), format!("{:.3}", m.p95() * 1e3)]);
+    t.row(&["p99 latency (ms)".to_string(), format!("{:.3}", m.p99() * 1e3)]);
+    t.row(&["batches".to_string(), m.batch_sizes.len().to_string()]);
+    t.row(&["mean batch size".to_string(), format!("{:.2}", m.mean_batch_size())]);
+    t.row(&["max batch size".to_string(), m.max_batch_observed().to_string()]);
+    t.row(&[
+        "plan cache hit rate".to_string(),
+        format!("{:.0}% ({} hits / {} misses)", cache.hit_rate() * 100.0, cache.hits, cache.misses),
+    ]);
+    t
 }
 
 /// Per-layer latency table of a plan.
@@ -65,5 +138,47 @@ mod tests {
         assert_eq!(m.requests, 2);
         assert!((m.summary().mean - 0.015).abs() < 1e-12);
         assert!((m.throughput() - 1.0 / 0.015).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut m = SessionMetrics::default();
+        for i in 1..=100 {
+            m.record(i as f64 / 1000.0);
+        }
+        assert!((m.p50() - 0.0505).abs() < 1e-9);
+        assert!(m.p95() > m.p50());
+        assert!(m.p99() > m.p95());
+        assert!(m.p99() <= 0.100);
+    }
+
+    #[test]
+    fn batch_histogram_counts_sizes() {
+        let mut m = SessionMetrics::default();
+        for size in [1, 4, 4, 2, 4, 1] {
+            m.record_batch(size);
+        }
+        assert_eq!(m.batch_histogram(), vec![(1, 2), (2, 1), (4, 3)]);
+        assert_eq!(m.max_batch_observed(), 4);
+        assert!((m.mean_batch_size() - 16.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_batches_are_safe() {
+        let m = SessionMetrics::default();
+        assert_eq!(m.batch_histogram(), vec![]);
+        assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.max_batch_observed(), 0);
+    }
+
+    #[test]
+    fn session_table_renders() {
+        let mut m = SessionMetrics::default();
+        m.record(0.002);
+        m.record_batch(1);
+        let cache = PlanCacheStats { hits: 3, misses: 1, entries: 1 };
+        let rendered = session_table(&m, &cache).render();
+        assert!(rendered.contains("plan cache hit rate"));
+        assert!(rendered.contains("75%"));
     }
 }

@@ -1,8 +1,15 @@
-//! The inference coordinator: turns a [`Network`] into an executable
-//! plan (per-layer generated kernels + layouts), estimates end-to-end
-//! latency on the performance model, executes small networks functionally
-//! on the interpreter, and serves requests through a threaded queue
-//! ([`serve`]).
+//! The inference coordinator: the serving engine of the system.
+//!
+//! * [`plan`] — turns a [`crate::nets::Network`] into an executable
+//!   [`NetworkPlan`] (per-layer generated kernels + modeled latency),
+//!   memoized in a process-wide **plan cache** keyed by
+//!   (network fingerprint, machine, planner knobs), so dataflow
+//!   exploration runs once per model × machine, not once per session.
+//! * [`serve`] — the **batched request scheduler**: a batcher thread
+//!   coalesces up to `max_batch` queued requests under a latency
+//!   deadline and a worker pool executes whole batches functionally.
+//! * [`metrics`] — [`SessionMetrics`]: latency tails (p50/p95/p99),
+//!   batch-size histogram, and plan-cache hit rates.
 //!
 //! Python never appears here: generated programs run on the abstract
 //! machine, and numeric cross-validation against JAX goes through the
@@ -12,8 +19,13 @@ pub mod plan;
 pub mod metrics;
 pub mod serve;
 
-pub use plan::{plan_network, LayerPlan, NetworkPlan, PlanKind, Planner, PlannerOptions};
+pub use plan::{
+    global_plan_cache, network_fingerprint, plan_network, plan_network_shared,
+    plan_network_uncached, LayerPlan, NetworkPlan, PlanCache, PlanCacheKey, PlanCacheStats,
+    PlanKind, Planner, PlannerOptions,
+};
 pub use metrics::SessionMetrics;
+pub use serve::{Server, ServerConfig};
 
 use crate::layer::{ConvConfig, LayerConfig, PoolKind};
 use crate::machine::MachineConfig;
@@ -52,6 +64,22 @@ pub fn run_network_functional(
         act = step_functional(lp, &act, requant_shift)?;
     }
     Ok(act)
+}
+
+/// Execute one coalesced batch: every image runs through the same plan
+/// (weights and programs stay hot across the batch). Per-image results
+/// are independent — a failing image does not poison its batchmates —
+/// and each is bit-identical to an unbatched
+/// [`run_network_functional`] call on the same input.
+pub fn run_network_batch(
+    plan: &NetworkPlan,
+    inputs: &[&ActTensor],
+    requant_shift: u32,
+) -> Vec<crate::Result<ActTensor>> {
+    inputs
+        .iter()
+        .map(|&input| run_network_functional(plan, input, requant_shift))
+        .collect()
 }
 
 fn step_functional(lp: &LayerPlan, act: &ActTensor, shift: u32) -> crate::Result<ActTensor> {
@@ -230,6 +258,38 @@ fn gap_functional(act: &ActTensor) -> ActTensor {
     out
 }
 
+/// Modeled speedup of serving `batch` images back-to-back (one batch on
+/// one worker, caches staying warm between consecutive images — the
+/// [`crate::machine::PerfModel::estimate_layer_batched`] model) versus
+/// `batch` independent cold runs, over the plan's generated conv
+/// kernels. This is the perf-model justification for the batched
+/// scheduler in [`serve`]; returns 1.0 when the plan has no generated
+/// kernels or `batch <= 1`.
+pub fn modeled_batch_speedup(plan: &NetworkPlan, batch: usize) -> f64 {
+    if batch <= 1 {
+        return 1.0;
+    }
+    let sample = 2;
+    let mut cold = 0.0;
+    let mut batched = 0.0;
+    for lp in &plan.layers {
+        if let (LayerConfig::Conv(cfg), PlanKind::Generated { prog, machine, .. }) =
+            (&lp.layer, &lp.kind)
+        {
+            let schedule = crate::codegen::schedule(cfg, machine);
+            let mut pm = crate::machine::PerfModel::neoverse_n1();
+            cold += pm.estimate_layer(prog, &schedule, sample).cycles * batch as f64;
+            let mut pm = crate::machine::PerfModel::neoverse_n1();
+            batched += pm.estimate_layer_batched(prog, &schedule, sample, batch).cycles;
+        }
+    }
+    if batched > 0.0 {
+        cold / batched
+    } else {
+        1.0
+    }
+}
+
 /// Multithreaded-latency model (paper Fig 8 sweeps 1/2/4 threads): conv
 /// layers parallelize across output channels (independent k-blocks);
 /// per-layer latency divides by the thread count that the channel count
@@ -258,6 +318,24 @@ mod tests {
         assert_eq!(padded_channels(3, 16), 16);
         assert_eq!(padded_channels(16, 16), 16);
         assert_eq!(padded_channels(17, 16), 32);
+    }
+
+    #[test]
+    fn batch_speedup_at_least_one_and_kicks_in_for_convs() {
+        let machine = crate::machine::MachineConfig::neon(128);
+        let cfg = crate::layer::ConvConfig::simple(10, 10, 3, 3, 1, 16, 8);
+        let mut planner = plan::Planner::new(plan::PlannerOptions {
+            machine,
+            ..Default::default()
+        });
+        let lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
+        let p = NetworkPlan { name: "b".into(), layers: vec![lp] };
+        assert_eq!(modeled_batch_speedup(&p, 1), 1.0);
+        let s8 = modeled_batch_speedup(&p, 8);
+        // Warm-cache images are never slower than cold ones.
+        assert!(s8 >= 1.0, "batch speedup {s8}");
+        // And the cold transient exists, so there is something to amortize.
+        assert!(s8 > 1.0, "expected a strict modeled win, got {s8}");
     }
 
     #[test]

@@ -1,8 +1,17 @@
 //! Network planning: choose a dataflow and generate a kernel for every
-//! layer, with a program cache (VGG repeats identical layer shapes) and
-//! modeled per-layer latency.
+//! layer, with two levels of memoization:
+//!
+//! * a per-planner **program cache** keyed by (padded config, spec) —
+//!   VGG repeats identical layer shapes within one network;
+//! * a process-wide **plan cache** keyed by (network fingerprint,
+//!   machine, planner knobs) — serving sessions for the same model on
+//!   the same machine reuse the full [`NetworkPlan`] instead of
+//!   re-running dataflow exploration per session ([`plan_network`]
+//!   consults it; [`plan_network_uncached`] bypasses it).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::dataflow::DataflowSpec;
 use crate::explore::{self, ExploreConfig};
@@ -78,6 +87,10 @@ pub struct PlannerOptions {
     pub explore_each_layer: bool,
     /// Invocations simulated exactly per layer before extrapolating.
     pub perf_sample: usize,
+    /// Worker threads for per-layer dataflow exploration (cold-start
+    /// planning scales with cores; 1 = sequential). Does not affect the
+    /// chosen plan — parallel exploration is bit-identical.
+    pub explore_threads: usize,
 }
 
 impl Default for PlannerOptions {
@@ -86,6 +99,9 @@ impl Default for PlannerOptions {
             machine: MachineConfig::neon(128),
             explore_each_layer: false,
             perf_sample: 2,
+            explore_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
         }
     }
 }
@@ -110,10 +126,15 @@ impl Planner {
         let machine = self.opts.machine;
         let padded = padded_conv(cfg, &machine);
         let spec = if self.opts.explore_each_layer {
-            explore::explore(&padded, &machine, &ExploreConfig::default())
-                .best()
-                .spec
-                .clone()
+            explore::explore_parallel(
+                &padded,
+                &machine,
+                &ExploreConfig::default(),
+                self.opts.explore_threads,
+            )
+            .best()
+            .spec
+            .clone()
         } else {
             DataflowSpec::optimized_os(&machine, padded.r_size())
         };
@@ -225,10 +246,155 @@ impl Planner {
     }
 }
 
-/// Plan a whole network. Padding per conv layer is inferred from the
-/// difference between the stored (padded) dims and the previous layer's
-/// output shape.
+/// Stable 64-bit fingerprint of a network (FNV-1a over the name and
+/// every layer config). Two `Network` values with the same name and
+/// identical layer lists fingerprint identically — that is what the
+/// plan cache keys on. The name is deliberately included: cached plans
+/// carry `net.name`, so structurally-equal networks with different
+/// names get separate entries rather than a plan displaying the wrong
+/// name.
+pub fn network_fingerprint(net: &Network) -> u64 {
+    fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = eat(h, net.name.as_bytes());
+    for layer in &net.layers {
+        h = eat(h, format!("{layer:?}").as_bytes());
+    }
+    h
+}
+
+/// Plan-cache key: everything that determines the resulting plan.
+/// (`explore_threads` is deliberately absent — it changes planning
+/// latency, never the plan.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanCacheKey {
+    pub fingerprint: u64,
+    pub machine: MachineConfig,
+    pub explore_each_layer: bool,
+    pub perf_sample: usize,
+}
+
+impl PlanCacheKey {
+    pub fn new(net: &Network, opts: &PlannerOptions) -> PlanCacheKey {
+        PlanCacheKey {
+            fingerprint: network_fingerprint(net),
+            machine: opts.machine,
+            explore_each_layer: opts.explore_each_layer,
+            perf_sample: opts.perf_sample,
+        }
+    }
+}
+
+/// Counters of a [`PlanCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl PlanCacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Memoizes full network plans by [`PlanCacheKey`]. A process-wide
+/// instance backs [`plan_network`] ([`global_plan_cache`]); tests and
+/// embedders can hold private instances for isolation.
+#[derive(Default)]
+pub struct PlanCache {
+    map: Mutex<HashMap<PlanCacheKey, Arc<NetworkPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Return the cached plan for (net, opts), planning on miss. Planning
+    /// happens outside the map lock; two racing sessions may both plan a
+    /// cold network, but the first insert wins and both get the same
+    /// `Arc`, so downstream consumers can rely on pointer equality.
+    pub fn plan(&self, net: &Network, opts: &PlannerOptions) -> Arc<NetworkPlan> {
+        let key = PlanCacheKey::new(net, opts);
+        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        let planned = Arc::new(plan_network_uncached(net, opts.clone()));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        Arc::clone(map.entry(key).or_insert(planned))
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().unwrap().len(),
+        }
+    }
+
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+/// The process-wide plan cache behind [`plan_network`].
+pub fn global_plan_cache() -> &'static PlanCache {
+    static CACHE: OnceLock<PlanCache> = OnceLock::new();
+    CACHE.get_or_init(PlanCache::new)
+}
+
+/// Process-wide count of *actual* (uncached) network plannings.
+static PLANNING_RUNS: AtomicU64 = AtomicU64::new(0);
+
+/// How many times a network has actually been planned (cache misses +
+/// direct [`plan_network_uncached`] calls) in this process. An ops
+/// counter: a serving deployment whose planning count keeps growing has
+/// a plan-cache keying problem. Tests may only assert monotonic growth
+/// — the counter is global, and the test harness plans concurrently.
+pub fn planning_count() -> u64 {
+    PLANNING_RUNS.load(Ordering::Relaxed)
+}
+
+/// Plan a whole network, memoized through the global plan cache: a
+/// repeated call for the same network + machine returns the cached
+/// plan without re-running exploration or codegen. Cached plans carry
+/// no weights (`weights: None`); bind them on the returned clone.
+///
+/// This convenience deep-clones the cached plan so callers can mutate
+/// it (bind weights). Read-only consumers should use
+/// [`plan_network_shared`] and skip the copy.
 pub fn plan_network(net: &Network, opts: PlannerOptions) -> NetworkPlan {
+    (*plan_network_shared(net, opts)).clone()
+}
+
+/// [`plan_network`] without the deep clone: the cache's own
+/// `Arc<NetworkPlan>` (repeated calls return the same allocation).
+pub fn plan_network_shared(net: &Network, opts: PlannerOptions) -> Arc<NetworkPlan> {
+    global_plan_cache().plan(net, &opts)
+}
+
+/// Plan a whole network, bypassing the plan cache. Padding per conv
+/// layer is inferred from the difference between the stored (padded)
+/// dims and the previous layer's output shape.
+pub fn plan_network_uncached(net: &Network, opts: PlannerOptions) -> NetworkPlan {
+    PLANNING_RUNS.fetch_add(1, Ordering::Relaxed);
     let mut planner = Planner::new(opts);
     let mut layers = Vec::with_capacity(net.layers.len());
     let mut prev_hw: Option<(usize, usize)> = None;
@@ -278,6 +444,54 @@ mod tests {
             }
         }
         assert!(planner.cache.len() < count, "{} !< {count}", planner.cache.len());
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeat_and_skips_replanning() {
+        let net = nets::resnet18();
+        let opts = PlannerOptions::default();
+        let cache = PlanCache::new();
+        let first = cache.plan(&net, &opts);
+        assert_eq!(cache.stats(), PlanCacheStats { hits: 0, misses: 1, entries: 1 });
+        let second = cache.plan(&net, &opts);
+        // Pointer equality: the hit path returned the cached Arc without
+        // re-running planning (a re-plan would show up as a second miss).
+        assert!(Arc::ptr_eq(&first, &second));
+        assert_eq!(cache.stats(), PlanCacheStats { hits: 1, misses: 1, entries: 1 });
+    }
+
+    #[test]
+    fn plan_cache_misses_on_different_machine() {
+        let net = nets::resnet18();
+        let cache = PlanCache::new();
+        cache.plan(&net, &PlannerOptions::default());
+        let opts256 = PlannerOptions {
+            machine: MachineConfig::neon(256),
+            ..Default::default()
+        };
+        cache.plan(&net, &opts256);
+        assert_eq!(cache.stats(), PlanCacheStats { hits: 0, misses: 2, entries: 2 });
+    }
+
+    #[test]
+    fn uncached_planning_advances_the_counter() {
+        // Only monotonic growth is assertable: the counter is global and
+        // other tests plan concurrently.
+        let before = planning_count();
+        plan_network_uncached(&nets::resnet18(), PlannerOptions::default());
+        assert!(planning_count() > before);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_networks() {
+        assert_eq!(
+            network_fingerprint(&nets::resnet18()),
+            network_fingerprint(&nets::resnet18())
+        );
+        assert_ne!(
+            network_fingerprint(&nets::resnet18()),
+            network_fingerprint(&nets::vgg16())
+        );
     }
 
     #[test]

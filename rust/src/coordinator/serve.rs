@@ -1,59 +1,180 @@
-//! A minimal threaded serving loop: requests enter a channel, a worker
-//! pool executes the planned network functionally, responses flow back
-//! with latency stamps. This is the L3 "request loop" of the
-//! architecture (std::thread + mpsc — tokio is not available offline,
-//! and a blocking pool is the right tool for a CPU-bound inference
-//! server anyway).
+//! The batched serving engine (L3 of the architecture).
+//!
+//! Requests enter a single submission channel. A dedicated **batcher**
+//! thread coalesces queued requests into batches: it dispatches as soon
+//! as [`ServerConfig::max_batch`] requests are pending, or when the
+//! oldest request in the forming batch has waited
+//! [`ServerConfig::batch_deadline`] — the classic
+//! throughput-vs-tail-latency knob of TPU-style serving. A pool of
+//! **worker** threads executes whole batches against the shared
+//! [`NetworkPlan`], one image at a time back-to-back
+//! ([`super::run_network_batch`]): what batching buys on this substrate
+//! is per-batch scheduling/channel overhead amortized across images and
+//! a warm data cache between consecutive images of a batch — the latter
+//! is what [`crate::machine::PerfModel::estimate_layer_batched`] models
+//! (see [`super::modeled_batch_speedup`]).
+//!
+//! The tradeoff is explicit: a batch occupies one worker, so
+//! latency-sensitive deployments with idle workers should set
+//! `max_batch: 1` (which recovers the old per-request dispatch exactly)
+//! or a small `batch_deadline`; throughput-bound deployments raise
+//! both.
+//!
+//! Batching never changes results: a batched request produces the
+//! bit-identical output of an unbatched
+//! [`super::run_network_functional`] call (`serve_concurrency`
+//! integration test).
+//!
+//! std::thread + mpsc, not tokio: tokio is unavailable offline, and a
+//! blocking pool is the right tool for a CPU-bound inference server.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::tensor::ActTensor;
 
 use super::metrics::SessionMetrics;
 use super::plan::NetworkPlan;
-use super::run_network_functional;
+use super::run_network_batch;
 
-/// A request: input tensor + response channel.
+/// Serving configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// Maximum requests coalesced into one batch.
+    pub max_batch: usize,
+    /// How long the batcher holds an under-full batch open waiting for
+    /// more requests before dispatching it anyway.
+    pub batch_deadline: Duration,
+    /// Requantization shift applied after every conv layer.
+    pub requant_shift: u32,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_deadline: Duration::from_millis(2),
+            requant_shift: 8,
+        }
+    }
+}
+
+/// A request: input tensor + response channel + submission stamp.
 struct Request {
     input: ActTensor,
     reply: mpsc::Sender<crate::Result<ActTensor>>,
+    enqueued: Instant,
 }
 
-/// Threaded inference server over a functional plan.
+/// A coalesced batch handed from the batcher to the worker pool.
+struct Batch {
+    requests: Vec<Request>,
+}
+
+/// Batched threaded inference server over a functional plan.
 pub struct Server {
     tx: Option<mpsc::Sender<Request>>,
+    batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    config: ServerConfig,
     pub metrics: Arc<Mutex<SessionMetrics>>,
 }
 
 impl Server {
-    /// Spawn `workers` threads sharing one request queue.
+    /// Spawn with the legacy signature (kept for callers that predate
+    /// batching). `max_batch: 1` so those callers keep the old
+    /// per-request dispatch semantics exactly — no coalescing, no
+    /// deadline hold; opt into batching via [`Server::start_with`].
     pub fn start(plan: NetworkPlan, workers: usize, requant_shift: u32) -> Server {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let rx = Arc::new(Mutex::new(rx));
+        Server::start_with(
+            plan,
+            ServerConfig { workers, requant_shift, max_batch: 1, ..Default::default() },
+        )
+    }
+
+    /// Spawn the batcher + worker pool.
+    pub fn start_with(plan: NetworkPlan, config: ServerConfig) -> Server {
+        let config = ServerConfig {
+            workers: config.workers.max(1),
+            max_batch: config.max_batch.max(1),
+            ..config
+        };
+        let (tx, submit_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
         let metrics = Arc::new(Mutex::new(SessionMetrics::default()));
         let plan = Arc::new(plan);
-        let mut handles = Vec::new();
-        for _ in 0..workers.max(1) {
-            let rx = Arc::clone(&rx);
+
+        let batcher = std::thread::spawn({
+            let max_batch = config.max_batch;
+            let deadline = config.batch_deadline;
+            move || {
+                loop {
+                    // Block for the batch's first request.
+                    let Ok(first) = submit_rx.recv() else { break };
+                    let mut requests = vec![first];
+                    let close_at = Instant::now() + deadline;
+                    let mut disconnected = false;
+                    while requests.len() < max_batch {
+                        let now = Instant::now();
+                        if now >= close_at {
+                            break;
+                        }
+                        match submit_rx.recv_timeout(close_at - now) {
+                            Ok(req) => requests.push(req),
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                disconnected = true;
+                                break;
+                            }
+                        }
+                    }
+                    if batch_tx.send(Batch { requests }).is_err() || disconnected {
+                        break;
+                    }
+                }
+                // batch_tx drops here → workers drain and exit.
+            }
+        });
+
+        let mut workers = Vec::new();
+        for _ in 0..config.workers {
+            let batch_rx = Arc::clone(&batch_rx);
             let metrics = Arc::clone(&metrics);
             let plan = Arc::clone(&plan);
-            handles.push(std::thread::spawn(move || loop {
-                let req = {
-                    let guard = rx.lock().unwrap();
+            let shift = config.requant_shift;
+            workers.push(std::thread::spawn(move || loop {
+                let batch = {
+                    let guard = batch_rx.lock().unwrap();
                     guard.recv()
                 };
-                let Ok(req) = req else { break };
-                let t0 = Instant::now();
-                let out = run_network_functional(&plan, &req.input, requant_shift);
-                metrics.lock().unwrap().record(t0.elapsed().as_secs_f64());
-                let _ = req.reply.send(out);
+                let Ok(batch) = batch else { break };
+                let inputs: Vec<&ActTensor> =
+                    batch.requests.iter().map(|r| &r.input).collect();
+                let outputs = run_network_batch(&plan, &inputs, shift);
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.record_batch(batch.requests.len());
+                    for req in &batch.requests {
+                        m.record(req.enqueued.elapsed().as_secs_f64());
+                    }
+                }
+                for (req, out) in batch.requests.into_iter().zip(outputs) {
+                    let _ = req.reply.send(out);
+                }
             }));
         }
-        Server { tx: Some(tx), workers: handles, metrics }
+
+        Server { tx: Some(tx), batcher: Some(batcher), workers, config, metrics }
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.config
     }
 
     /// Submit a request; returns the response receiver.
@@ -62,14 +183,17 @@ impl Server {
         self.tx
             .as_ref()
             .expect("server already shut down")
-            .send(Request { input, reply })
-            .expect("worker pool hung up");
+            .send(Request { input, reply, enqueued: Instant::now() })
+            .expect("batcher hung up");
         rx
     }
 
-    /// Drain and join.
+    /// Drain and join: pending requests are still batched and answered.
     pub fn shutdown(mut self) -> SessionMetrics {
         drop(self.tx.take());
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -81,7 +205,7 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::plan::{Planner, PlannerOptions, NetworkPlan};
+    use crate::coordinator::plan::{NetworkPlan, Planner, PlannerOptions};
     use crate::layer::{ConvConfig, LayerConfig};
     use crate::machine::MachineConfig;
     use crate::tensor::{ActLayout, ActShape, WeightLayout, WeightShape, WeightTensor};
@@ -115,5 +239,43 @@ mod tests {
         let metrics = server.shutdown();
         assert_eq!(metrics.requests, 6);
         assert!(metrics.summary().mean > 0.0);
+        // Every request went through some batch; none oversize.
+        assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), 6);
+        assert!(metrics.max_batch_observed() <= 8);
+    }
+
+    #[test]
+    fn single_request_is_dispatched_after_deadline() {
+        let config = ServerConfig {
+            workers: 1,
+            max_batch: 16,
+            batch_deadline: Duration::from_millis(1),
+            requant_shift: 8,
+        };
+        let server = Server::start_with(tiny_plan(), config);
+        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 1);
+        let rx = server.submit(input);
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.shape.channels, 16);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.batch_sizes, vec![1]);
+    }
+
+    #[test]
+    fn pending_requests_are_answered_on_shutdown() {
+        let server = Server::start_with(
+            tiny_plan(),
+            ServerConfig { workers: 1, max_batch: 4, ..Default::default() },
+        );
+        let mut rxs = Vec::new();
+        for seed in 0..9 {
+            let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed);
+            rxs.push(server.submit(input));
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.requests, 9);
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
     }
 }

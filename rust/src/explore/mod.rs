@@ -10,11 +10,23 @@
 
 pub mod layout_dp;
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
 use crate::dataflow::heuristics::total_gain;
 use crate::dataflow::{Anchor, AuxKind, DataflowSpec};
 use crate::isa::Program;
 use crate::layer::ConvConfig;
 use crate::machine::{MachineConfig, PerfModel, PerfStats};
+
+/// Process-wide count of exploration runs (enumerate→prune→simulate
+/// sweeps). The coordinator's plan cache exists to keep this from growing
+/// per-request; tests assert on the delta.
+static EXPLORATION_RUNS: AtomicU64 = AtomicU64::new(0);
+
+/// How many full explorations have run in this process.
+pub fn exploration_count() -> u64 {
+    EXPLORATION_RUNS.load(Ordering::Relaxed)
+}
 
 /// One evaluated candidate.
 #[derive(Clone, Debug)]
@@ -122,36 +134,109 @@ pub fn evaluate(cfg: &ConvConfig, spec: &DataflowSpec, machine: &MachineConfig, 
     (prog, stats)
 }
 
-/// Full exploration for one layer: enumerate → prune → simulate → pick.
-pub fn explore(cfg: &ConvConfig, machine: &MachineConfig, xcfg: &ExploreConfig) -> Exploration {
-    let mut candidates: Vec<Candidate> = Vec::new();
+/// Enumerate + heuristic-prune the candidate specs for every anchor:
+/// each anchor keeps its basic dataflow plus the
+/// `survivors_per_anchor` best-scoring extended specs. The returned
+/// order is deterministic (anchor order, then descending score), so the
+/// sequential and parallel evaluators produce identical `Exploration`s.
+fn pruned_specs(cfg: &ConvConfig, machine: &MachineConfig, xcfg: &ExploreConfig) -> Vec<(f64, DataflowSpec)> {
+    let mut kept: Vec<(f64, DataflowSpec)> = Vec::new();
     for anchor in Anchor::all() {
         let mut specs = enumerate_specs(cfg, machine, anchor);
-        // Heuristic pruning: keep the basic dataflow plus the
-        // `survivors_per_anchor` best-scoring extended specs.
         let mut scored: Vec<(f64, DataflowSpec)> = specs
             .drain(..)
             .map(|s| (heuristic_score(cfg, &s), s))
             .collect();
         scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        let mut kept: Vec<(f64, DataflowSpec)> = Vec::new();
+        let mut ext_kept = 0usize;
         for (score, spec) in scored {
             let is_basic = spec.aux_vars() == 0;
-            if is_basic || kept.iter().filter(|(_, s)| s.aux_vars() > 0).count() < xcfg.survivors_per_anchor {
+            if is_basic || ext_kept < xcfg.survivors_per_anchor {
+                if !is_basic {
+                    ext_kept += 1;
+                }
                 kept.push((score, spec));
             }
         }
-        for (score, spec) in kept {
-            let (_prog, stats) = evaluate(cfg, &spec, machine, xcfg.perf_sample);
-            candidates.push(Candidate { spec, heuristic_gain: score, stats });
-        }
     }
-    let best = candidates
+    kept
+}
+
+fn select_best(candidates: &[Candidate]) -> usize {
+    candidates
         .iter()
         .enumerate()
         .min_by(|a, b| a.1.stats.cycles.partial_cmp(&b.1.stats.cycles).unwrap())
         .map(|(i, _)| i)
-        .unwrap();
+        .unwrap()
+}
+
+/// Full exploration for one layer: enumerate → prune → simulate → pick.
+pub fn explore(cfg: &ConvConfig, machine: &MachineConfig, xcfg: &ExploreConfig) -> Exploration {
+    explore_parallel(cfg, machine, xcfg, 1)
+}
+
+/// [`explore`], with the simulate stage fanned out over `threads` worker
+/// threads (each candidate is evaluated with its own independent
+/// `PerfModel`, so candidates are embarrassingly parallel). Cold-start
+/// planning cost scales with cores; results are bit-identical to the
+/// sequential path regardless of thread count.
+pub fn explore_parallel(
+    cfg: &ConvConfig,
+    machine: &MachineConfig,
+    xcfg: &ExploreConfig,
+    threads: usize,
+) -> Exploration {
+    EXPLORATION_RUNS.fetch_add(1, Ordering::Relaxed);
+    let specs = pruned_specs(cfg, machine, xcfg);
+    let n = specs.len();
+    let threads = threads.max(1).min(n.max(1));
+    let mut slots: Vec<Option<Candidate>> = Vec::new();
+    slots.resize_with(n, || None);
+    if threads <= 1 {
+        for (slot, (score, spec)) in slots.iter_mut().zip(&specs) {
+            let (_prog, stats) = evaluate(cfg, spec, machine, xcfg.perf_sample);
+            *slot = Some(Candidate { spec: spec.clone(), heuristic_gain: *score, stats });
+        }
+    } else {
+        // Work-stealing over a shared index; results land in their
+        // original slot so ordering stays deterministic.
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(threads);
+            for _ in 0..threads {
+                let specs = &specs;
+                let next = &next;
+                handles.push(scope.spawn(move || {
+                    let mut done: Vec<(usize, Candidate)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= specs.len() {
+                            break;
+                        }
+                        let (score, spec) = &specs[i];
+                        let (_prog, stats) = evaluate(cfg, spec, machine, xcfg.perf_sample);
+                        done.push((i, Candidate {
+                            spec: spec.clone(),
+                            heuristic_gain: *score,
+                            stats,
+                        }));
+                    }
+                    done
+                }));
+            }
+            for h in handles {
+                for (i, c) in h.join().expect("exploration worker panicked") {
+                    slots[i] = Some(c);
+                }
+            }
+        });
+    }
+    let candidates: Vec<Candidate> = slots
+        .into_iter()
+        .map(|c| c.expect("every candidate evaluated"))
+        .collect();
+    let best = select_best(&candidates);
     Exploration { candidates, best }
 }
 
@@ -216,6 +301,29 @@ mod tests {
                 basic.stats.cycles
             );
         }
+    }
+
+    #[test]
+    fn parallel_exploration_matches_sequential() {
+        let m = MachineConfig::neon(128);
+        let cfg = small_cfg();
+        let seq = explore(&cfg, &m, &ExploreConfig::default());
+        let par = explore_parallel(&cfg, &m, &ExploreConfig::default(), 4);
+        assert_eq!(seq.candidates.len(), par.candidates.len());
+        assert_eq!(seq.best, par.best);
+        for (a, b) in seq.candidates.iter().zip(&par.candidates) {
+            assert_eq!(a.spec, b.spec);
+            assert_eq!(a.stats.cycles, b.stats.cycles);
+            assert_eq!(a.stats.mem_reads, b.stats.mem_reads);
+        }
+    }
+
+    #[test]
+    fn exploration_counter_advances() {
+        let before = exploration_count();
+        let m = MachineConfig::neon(128);
+        explore(&small_cfg(), &m, &ExploreConfig::default());
+        assert!(exploration_count() > before);
     }
 
     #[test]

@@ -35,10 +35,12 @@
 //!   synchronizer.
 //! * [`nets`] — model zoo (ResNet-18/34, VGG-11/13/16, DenseNet-121,
 //!   MobileNet-V1) as per-layer configuration lists.
-//! * [`coordinator`] — the inference session: per-layer plan selection,
-//!   compiled-program cache, threaded execution, request loop, metrics.
-//! * [`runtime`] — PJRT (via the `xla` crate) loader that executes the
-//!   AOT-lowered JAX/Pallas artifacts for numeric cross-validation.
+//! * [`coordinator`] — the serving engine: per-layer plan selection with
+//!   a process-wide plan cache (memoized exploration), a batched request
+//!   scheduler over a worker pool, and latency/batching metrics.
+//! * [`runtime`] — PJRT (via the `xla` crate, behind the `pjrt` feature)
+//!   loader that executes the AOT-lowered JAX/Pallas artifacts for
+//!   numeric cross-validation.
 //! * [`report`] — renderers that regenerate every paper table and figure.
 
 pub mod util;

@@ -21,7 +21,8 @@ pub use interp::{Buffers, Interp};
 pub use perf::{CostModel, PerfStats, PerfModel};
 
 /// Machine configuration (the paper's §II-E register-file terms).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `Hash` so the coordinator's plan cache can key on it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct MachineConfig {
     /// Number of 128-bit physical vector registers (NEON/aarch64: 32).
     pub num_regs: usize,

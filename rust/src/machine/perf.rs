@@ -291,6 +291,27 @@ impl PerfModel {
         total.add(&last.scaled(rest));
         total
     }
+
+    /// Modeled cost of executing the same layer for `batch` images
+    /// back-to-back (the coordinator's batched serving path). The first
+    /// image pays the cold-cache transient; subsequent images run against
+    /// the hierarchy the first image warmed, which is where batching's
+    /// modeled win comes from (weights stay resident across images).
+    pub fn estimate_layer_batched(
+        &mut self,
+        prog: &Program,
+        schedule: &[Bases],
+        sample: usize,
+        batch: usize,
+    ) -> PerfStats {
+        let mut total = self.estimate_layer(prog, schedule, sample);
+        if batch > 1 {
+            // Re-estimate on the now-warm hierarchy and extrapolate.
+            let warm = self.estimate_layer(prog, schedule, sample);
+            total.add(&warm.scaled((batch - 1) as f64));
+        }
+        total
+    }
 }
 
 #[inline]
@@ -358,6 +379,24 @@ mod tests {
         let rel = (est.cycles - exact.cycles).abs() / exact.cycles;
         assert!(rel < 0.25, "extrapolation error {rel}");
         assert_eq!(est.invocations, exact.invocations);
+    }
+
+    #[test]
+    fn batched_estimate_amortizes_cold_misses() {
+        let prog = dot_prog();
+        let schedule: Vec<Bases> = (0..16)
+            .map(|i| Bases { input: 0, weight: 0, output: i })
+            .collect();
+        let mut pm = PerfModel::neoverse_n1();
+        let single = pm.estimate_layer(&prog, &schedule, 4);
+        let mut pm2 = PerfModel::neoverse_n1();
+        let batch = 8;
+        let batched = pm2.estimate_layer_batched(&prog, &schedule, 4, batch);
+        // Total grows with the batch, but per-image cost must not exceed
+        // the cold single-image cost.
+        assert!(batched.cycles > single.cycles);
+        assert!(batched.cycles / batch as f64 <= single.cycles);
+        assert_eq!(batched.invocations, single.invocations * batch as u64);
     }
 
     #[test]

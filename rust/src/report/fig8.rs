@@ -89,7 +89,7 @@ pub fn run(nets: &[Network], threads: &[usize], vl: usize, sample: usize) -> (Ta
     for net in nets {
         let plan = coordinator::plan_network(
             net,
-            PlannerOptions { machine, explore_each_layer: false, perf_sample: sample },
+            PlannerOptions { machine, explore_each_layer: false, perf_sample: sample, ..Default::default() },
         );
         let (tuned1, scalar1) = baseline_cycles(net, &machine, sample);
         for &t in threads {

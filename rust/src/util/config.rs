@@ -116,6 +116,7 @@ pub fn planner_from(cfg: &Config) -> crate::coordinator::plan::PlannerOptions {
         machine: crate::machine::MachineConfig::neon(vl),
         explore_each_layer: cfg.get_bool("planner", "explore_each_layer", false),
         perf_sample: cfg.get_parse("planner", "perf_sample", 2usize),
+        ..Default::default()
     }
 }
 

@@ -167,7 +167,12 @@ fn plan_all_fig8_networks() {
     for net in nets::fig8_networks() {
         let plan = coordinator::plan_network(
             &net,
-            PlannerOptions { machine: MachineConfig::neon(128), explore_each_layer: false, perf_sample: 1 },
+            PlannerOptions {
+                machine: MachineConfig::neon(128),
+                explore_each_layer: false,
+                perf_sample: 1,
+                ..Default::default()
+            },
         );
         assert!(plan.total_cycles() > 1e6, "{} too cheap", net.name);
         assert_eq!(plan.layers.len(), net.layers.len());

@@ -1,0 +1,84 @@
+//! Golden tests: the exact instruction listings the code generator emits
+//! for one OS, one WS, and one binary kernel, diffed against checked-in
+//! listings under `rust/tests/goldens/`. Refactors of the generator,
+//! emitter, or ISA disassembly cannot silently change emitted code.
+//!
+//! Updating: run with `YFLOWS_BLESS=1` to rewrite the goldens, then
+//! review the diff like any other code change. A missing golden file is
+//! written on first run (and the test passes), so a fresh checkout
+//! self-bootstraps.
+
+use std::fs;
+use std::path::PathBuf;
+
+use yflows::codegen;
+use yflows::dataflow::{Anchor, DataflowSpec};
+use yflows::isa::Program;
+use yflows::layer::ConvConfig;
+use yflows::machine::MachineConfig;
+
+fn goldens_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/goldens")
+}
+
+fn assert_golden(name: &str, prog: &Program) {
+    let path = goldens_dir().join(name);
+    let got = prog.disasm();
+    let bless = std::env::var("YFLOWS_BLESS").is_ok();
+    if bless || !path.exists() {
+        fs::create_dir_all(goldens_dir()).expect("create goldens dir");
+        fs::write(&path, &got).expect("write golden");
+        if !bless {
+            eprintln!("golden {name} was missing — wrote {} lines; commit it", got.lines().count());
+        }
+        return;
+    }
+    let want = fs::read_to_string(&path).expect("read golden");
+    if got != want {
+        // Show the first diverging line to keep failures readable.
+        let mut line_no = 0usize;
+        for (g, w) in got.lines().zip(want.lines()) {
+            line_no += 1;
+            if g != w {
+                panic!(
+                    "golden {name} diverges at line {line_no}:\n  golden:  {w}\n  current: {g}\n\
+                     (rerun with YFLOWS_BLESS=1 to accept the new output)"
+                );
+            }
+        }
+        panic!(
+            "golden {name} length changed: {} lines vs {} golden \
+             (rerun with YFLOWS_BLESS=1 to accept the new output)",
+            got.lines().count(),
+            want.lines().count()
+        );
+    }
+}
+
+/// The shared layer shape: tiny but non-trivial (3×3 filter, 3×3 output
+/// positions), so listings stay reviewable.
+fn golden_cfg() -> ConvConfig {
+    ConvConfig::simple(5, 5, 3, 3, 1, 16, 2)
+}
+
+#[test]
+fn golden_os_basic_listing() {
+    let machine = MachineConfig::neon(128);
+    let prog = codegen::generate(&golden_cfg(), &DataflowSpec::basic(Anchor::Output), &machine);
+    assert_golden("os_basic.txt", &prog);
+}
+
+#[test]
+fn golden_ws_basic_listing() {
+    let machine = MachineConfig::neon(128);
+    let prog = codegen::generate(&golden_cfg(), &DataflowSpec::basic(Anchor::Weight), &machine);
+    assert_golden("ws_basic.txt", &prog);
+}
+
+#[test]
+fn golden_binary_os_listing() {
+    let machine = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(4, 4, 3, 3, 1, machine.c_binary(), 1);
+    let prog = codegen::binary::gen_binary_os(&cfg, &machine);
+    assert_golden("binary_os.txt", &prog);
+}

@@ -3,10 +3,12 @@
 //! must hold for *any* layer/dataflow/machine combination.
 
 use yflows::codegen::{self, run_conv};
+use yflows::coordinator::plan::{PlanCache, PlannerOptions};
 use yflows::dataflow::{heuristics, Anchor, AuxKind, DataflowSpec};
 use yflows::isa::validate;
-use yflows::layer::{oracle::conv_ref, ConvConfig};
+use yflows::layer::{oracle::conv_ref, ConvConfig, LayerConfig};
 use yflows::machine::{Bases, MachineConfig, PerfModel};
+use yflows::nets::Network;
 use yflows::quant::{pack_binary_act, pack_binary_wgt};
 use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
 use yflows::util::prop::{check, default_cases};
@@ -171,6 +173,94 @@ fn prop_heuristic_sign_matches_measurement() {
                     e.mem_reads() < b.mem_reads() || e.mem_writes() < b.mem_writes(),
                     "{anchor:?}+{aux:?}: no measured gain despite predicted"
                 );
+            }
+        }
+    });
+}
+
+/// Draw a small random all-conv network (channel counts aligned to the
+/// 128-bit block size so every machine in the sweep can plan it).
+fn draw_network(rng: &mut Rng) -> Network {
+    let depth = rng.range(1, 3);
+    let mut layers = Vec::new();
+    let mut ch = 16 * rng.range(1, 2);
+    let mut hw = rng.range(8, 12);
+    for _ in 0..depth {
+        let f = rng.range(1, 3);
+        if hw <= f {
+            break;
+        }
+        let out = 16 * rng.range(1, 2);
+        layers.push(LayerConfig::Conv(ConvConfig::simple(hw, hw, f, f, 1, ch, out)));
+        ch = out;
+        hw = hw - f + 1;
+    }
+    Network { name: format!("prop-net-{depth}-{ch}-{hw}"), layers }
+}
+
+#[test]
+fn prop_plan_cache_same_key_hits_different_machine_misses() {
+    check("plan-cache", 12, |rng| {
+        let net = draw_network(rng);
+        let cache = PlanCache::new();
+        let opts = PlannerOptions { machine: MachineConfig::neon(128), ..Default::default() };
+        let a = cache.plan(&net, &opts);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 1, 1));
+
+        // Same network + machine ⇒ hit, and the identical NetworkPlan.
+        let b = cache.plan(&net, &opts);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        assert_eq!(a.layers.len(), b.layers.len());
+        assert_eq!(a.total_cycles(), b.total_cycles());
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.kind.name(), lb.kind.name());
+            assert_eq!(la.stats.cycles, lb.stats.cycles);
+        }
+
+        // Same network, different machine ⇒ miss (new entry).
+        let wide = PlannerOptions { machine: MachineConfig::neon(256), ..Default::default() };
+        let c = cache.plan(&net, &wide);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 2));
+        assert!(!std::sync::Arc::ptr_eq(&a, &c));
+
+        // An equal but separately-constructed network still hits (the
+        // key is a structural fingerprint, not object identity).
+        let twin = Network { name: net.name.clone(), layers: net.layers.clone() };
+        cache.plan(&twin, &opts);
+        assert_eq!(cache.stats().hits, 2);
+    });
+}
+
+#[test]
+fn prop_heuristic_gain_monotone_under_unroll_growth() {
+    // Growing the secondary unroll (allocating more auxiliary vector
+    // variables to the same data type) can never reduce the predicted
+    // total gain: each additional variable contributes a non-negative
+    // saving until the Table I range saturates, after which the total
+    // stays flat.
+    check("gain-monotone-unroll", default_cases(), |rng| {
+        let f = rng.range(1, 5);
+        let stride = rng.range(1, 2);
+        let i = rng.range(f + stride, 14);
+        let cfg = ConvConfig::simple(i, i, f, f, stride, 16, rng.range(1, 64));
+        for anchor in Anchor::all() {
+            for aux in [AuxKind::Input, AuxKind::Weight, AuxKind::Output] {
+                let mut prev = 0.0f64;
+                for vars in 1..=(2 * cfg.r_size() + 2) {
+                    let g = heuristics::total_gain(&cfg, anchor, aux, vars);
+                    assert!(
+                        g.total() >= prev - 1e-9,
+                        "{anchor:?}+{aux:?} gain fell from {prev} to {} at {vars} vars ({})",
+                        g.total(),
+                        cfg.name()
+                    );
+                    assert!(g.reads_saved >= 0.0 && g.writes_saved >= 0.0);
+                    prev = g.total();
+                }
             }
         }
     });

@@ -1,0 +1,158 @@
+//! Integration: the batched serving engine under concurrent load.
+//!
+//! * N requests from M submitter threads all receive responses.
+//! * No dispatched batch ever exceeds `max_batch`, and every request is
+//!   accounted for in the batch-size histogram.
+//! * Batched execution is bit-identical to unbatched
+//!   `run_network_functional` on the same inputs.
+//! * A backlog behind a single worker actually coalesces (mean batch
+//!   size > 1), which is the observable form of the scheduler working.
+
+use std::time::Duration;
+
+use yflows::coordinator::{
+    self,
+    plan::{NetworkPlan, Planner, PlannerOptions},
+    serve::{Server, ServerConfig},
+};
+use yflows::layer::{ConvConfig, LayerConfig};
+use yflows::machine::MachineConfig;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+
+const SHIFT: u32 = 9;
+
+fn two_layer_plan(machine: MachineConfig) -> NetworkPlan {
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let c = machine.c_int8();
+    let specs = [
+        (ConvConfig::simple(10, 10, 3, 3, 1, 16, 32), 1usize), // 8x8 input, pad 1
+        (ConvConfig::simple(8, 8, 3, 3, 1, 32, 16), 0),
+    ];
+    let mut layers = Vec::new();
+    let mut seed = 900;
+    for (cfg, pad) in specs {
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), pad);
+        lp.weights = Some(WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            seed,
+        ));
+        seed += 1;
+        layers.push(lp);
+    }
+    NetworkPlan { name: "serve-stress".into(), layers }
+}
+
+fn input_for(seed: u64) -> ActTensor {
+    ActTensor::random(ActShape::new(16, 8, 8), ActLayout::NCHWc { c: 16 }, seed)
+}
+
+#[test]
+fn concurrent_submissions_all_answered_batched_and_bit_identical() {
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 8;
+    const N: usize = THREADS * PER_THREAD;
+    const MAX_BATCH: usize = 4;
+
+    let machine = MachineConfig::neon(128);
+    let plan = two_layer_plan(machine);
+    // Unbatched reference outputs, one per request seed.
+    let reference: Vec<ActTensor> = (0..N as u64)
+        .map(|seed| {
+            coordinator::run_network_functional(&plan, &input_for(seed), SHIFT)
+                .expect("reference run")
+        })
+        .collect();
+
+    let config = ServerConfig {
+        workers: 2,
+        max_batch: MAX_BATCH,
+        batch_deadline: Duration::from_millis(20),
+        requant_shift: SHIFT,
+    };
+    let server = Server::start_with(plan, config);
+
+    // M submitter threads × K requests each; responses checked in-thread
+    // against the precomputed unbatched reference.
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let server = &server;
+            let reference = &reference;
+            scope.spawn(move || {
+                for k in 0..PER_THREAD {
+                    let id = t * PER_THREAD + k;
+                    let rx = server.submit(input_for(id as u64));
+                    let out = rx
+                        .recv()
+                        .expect("server dropped reply")
+                        .expect("inference failed");
+                    assert_eq!(
+                        out.data, reference[id].data,
+                        "request {id}: batched result differs from unbatched"
+                    );
+                }
+            });
+        }
+    });
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests as usize, N, "every request must be answered");
+    assert_eq!(
+        metrics.batch_sizes.iter().sum::<usize>(),
+        N,
+        "histogram must account for every request"
+    );
+    assert!(
+        metrics.max_batch_observed() <= MAX_BATCH,
+        "batch of {} exceeds max_batch {MAX_BATCH}",
+        metrics.max_batch_observed()
+    );
+    assert_eq!(metrics.latencies.len(), N);
+    assert!(metrics.p99() >= metrics.p50());
+}
+
+#[test]
+fn backlog_behind_single_worker_coalesces() {
+    const N: usize = 32;
+    const MAX_BATCH: usize = 4;
+    let machine = MachineConfig::neon(128);
+    let config = ServerConfig {
+        workers: 1,
+        max_batch: MAX_BATCH,
+        // Generous deadline: the submission loop below finishes far
+        // inside it, so the batcher fills batches to max_batch.
+        batch_deadline: Duration::from_millis(200),
+        requant_shift: SHIFT,
+    };
+    let server = Server::start_with(two_layer_plan(machine), config);
+    let mut pending = Vec::new();
+    for seed in 0..N as u64 {
+        pending.push(server.submit(input_for(seed)));
+    }
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests as usize, N);
+    assert!(metrics.batch_sizes.iter().all(|&b| b <= MAX_BATCH));
+    assert!(
+        metrics.mean_batch_size() > 1.0,
+        "a {N}-deep backlog must coalesce, got sizes {:?}",
+        metrics.batch_sizes
+    );
+    assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), N);
+}
+
+#[test]
+fn batch_run_matches_per_image_runs() {
+    let machine = MachineConfig::neon(128);
+    let plan = two_layer_plan(machine);
+    let inputs: Vec<ActTensor> = (100..108).map(input_for).collect();
+    let refs: Vec<&ActTensor> = inputs.iter().collect();
+    let batched = coordinator::run_network_batch(&plan, &refs, SHIFT);
+    assert_eq!(batched.len(), inputs.len());
+    for (input, out) in inputs.iter().zip(batched) {
+        let single = coordinator::run_network_functional(&plan, input, SHIFT).unwrap();
+        assert_eq!(single.data, out.unwrap().data);
+    }
+}
