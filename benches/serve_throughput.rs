@@ -1,0 +1,204 @@
+//! Bench: serving throughput — prepared execution engine vs the seed
+//! (unprepared) functional path, on a batched ResNet-style workload.
+//!
+//! Measures, for the same weight-bound plan and the same batch of
+//! images:
+//!
+//! * **seed path** — `coordinator::run_network_batch` (sequential,
+//!   per-request replanning/packing/allocation, checked interpreter);
+//! * **prepared path** — `exec::PreparedNetwork::run_batch` (prepared
+//!   schedules, decoded traces, arena reuse, fused requantize, images
+//!   fanned across threads).
+//!
+//! Both paths are first asserted bit-identical on the benchmark inputs.
+//!
+//! Modes:
+//! * `--smoke`  — CI mode: tiny workload, correctness gate + one timed
+//!   round, no CSV/JSON side effects beyond stdout.
+//! * `--json [PATH]` — additionally write a BENCH_2.json-style record
+//!   (default path `BENCH_2.json`): per-image latency p50/p99 and
+//!   images/sec for both paths, plus the speedup.
+//!
+//! Run: `cargo bench --bench serve_throughput [-- --smoke|--json]`
+
+use std::time::Instant;
+
+use yflows::coordinator::{
+    self,
+    plan::{NetworkPlan, Planner, PlannerOptions},
+};
+use yflows::exec::PreparedNetwork;
+use yflows::layer::{ConvConfig, LayerConfig, PoolConfig};
+use yflows::machine::MachineConfig;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::bench::{black_box, fmt_duration};
+use yflows::util::json::Json;
+use yflows::util::stats::percentile;
+
+const SHIFT: u32 = 9;
+
+/// A reduced ResNet-style stack: conv/conv/pool/conv/conv/gap with
+/// 3x3 kernels, growing channels, one downsampling pool.
+fn resnet_style_plan(machine: MachineConfig) -> NetworkPlan {
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut layers = Vec::new();
+    let mut seed = 9000u64;
+    let convs = [
+        (ConvConfig::simple(18, 18, 3, 3, 1, 16, 32), 1usize), // 16x16x16 in
+        (ConvConfig::simple(18, 18, 3, 3, 1, 32, 32), 1),
+    ];
+    for (cfg, pad) in convs {
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), pad);
+        lp.bind_weights(WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            seed,
+        ));
+        seed += 1;
+        layers.push(lp);
+    }
+    layers.push(planner.plan_layer(&LayerConfig::Pool(PoolConfig::max(32, 16, 16, 2, 2)), 0));
+    for (cfg, pad) in [
+        (ConvConfig::simple(10, 10, 3, 3, 1, 32, 64), 1usize),
+        (ConvConfig::simple(10, 10, 3, 3, 1, 64, 64), 1),
+    ] {
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), pad);
+        lp.bind_weights(WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            seed,
+        ));
+        seed += 1;
+        layers.push(lp);
+    }
+    layers.push(planner.plan_layer(&LayerConfig::GlobalAvgPool { channels: 64, h: 8, w: 8 }, 0));
+    NetworkPlan { name: "resnet-style-bench".into(), layers }
+}
+
+fn input_for(seed: u64) -> ActTensor {
+    ActTensor::random(ActShape::new(16, 16, 16), ActLayout::NCHWc { c: 16 }, seed)
+}
+
+/// Per-image latencies (seconds) of `f` over `n` sequential images.
+fn image_latencies(n: u64, mut f: impl FnMut(&ActTensor)) -> Vec<f64> {
+    (0..n)
+        .map(|seed| {
+            let input = input_for(seed);
+            let t0 = Instant::now();
+            f(&input);
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args.iter().position(|a| a == "--json").map(|i| {
+        args.get(i + 1)
+            .filter(|p| !p.starts_with("--"))
+            .cloned()
+            .unwrap_or_else(|| "BENCH_2.json".to_string())
+    });
+
+    let machine = MachineConfig::neon(128);
+    let plan = resnet_style_plan(machine);
+    let prepared = PreparedNetwork::prepare(&plan).expect("plan must prepare");
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let batch: u64 = if smoke { 4 } else { 16 };
+    let rounds: usize = if smoke { 1 } else { 8 };
+    let latency_images: u64 = if smoke { 4 } else { 32 };
+
+    let inputs: Vec<ActTensor> = (0..batch).map(input_for).collect();
+    let refs: Vec<&ActTensor> = inputs.iter().collect();
+
+    // Correctness gate: prepared (parallel) == seed path, bit-identical.
+    let seed_out = coordinator::run_network_batch(&plan, &refs, SHIFT);
+    let prep_out = prepared.run_batch(&refs, SHIFT, threads);
+    for (i, (a, b)) in seed_out.iter().zip(&prep_out).enumerate() {
+        let (a, b) = (a.as_ref().expect("seed image"), b.as_ref().expect("prepared image"));
+        assert_eq!(a.data, b.data, "prepared output diverges from seed at image {i}");
+    }
+    println!(
+        "correctness: prepared == seed on {batch}-image batch ({} layers, {} fused pairs)",
+        prepared.num_layers(),
+        prepared.fused_pairs()
+    );
+    if smoke {
+        // One timed round each, purely informational — CI asserts only
+        // the bit-identity gate above.
+        let t0 = Instant::now();
+        black_box(coordinator::run_network_batch(&plan, &refs, SHIFT));
+        let seed_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        black_box(prepared.run_batch(&refs, SHIFT, threads));
+        let prep_s = t0.elapsed().as_secs_f64();
+        println!(
+            "smoke OK: seed {} / prepared {} per {batch}-image batch ({threads} threads)",
+            fmt_duration(seed_s),
+            fmt_duration(prep_s)
+        );
+        return;
+    }
+
+    // Throughput: images/sec over `rounds` full batches.
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        black_box(coordinator::run_network_batch(&plan, &refs, SHIFT));
+    }
+    let seed_ips = (batch as f64 * rounds as f64) / t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        black_box(prepared.run_batch(&refs, SHIFT, threads));
+    }
+    let prep_ips = (batch as f64 * rounds as f64) / t0.elapsed().as_secs_f64();
+    let speedup = prep_ips / seed_ips;
+
+    // Per-image latency tails, one image at a time (no batching) so the
+    // numbers isolate per-request overhead rather than queueing.
+    let seed_lat = image_latencies(latency_images, |input| {
+        black_box(coordinator::run_network_functional(&plan, input, SHIFT).unwrap());
+    });
+    let mut arena = prepared.new_arena();
+    let prep_lat = image_latencies(latency_images, |input| {
+        black_box(prepared.run(input, SHIFT, &mut arena).unwrap());
+    });
+
+    println!("\n== serve_throughput (batch {batch}, {threads} threads) ==");
+    println!(
+        "seed     : {:>8.1} images/sec  p50 {}  p99 {}",
+        seed_ips,
+        fmt_duration(percentile(&seed_lat, 50.0)),
+        fmt_duration(percentile(&seed_lat, 99.0)),
+    );
+    println!(
+        "prepared : {:>8.1} images/sec  p50 {}  p99 {}",
+        prep_ips,
+        fmt_duration(percentile(&prep_lat, 50.0)),
+        fmt_duration(percentile(&prep_lat, 99.0)),
+    );
+    println!("speedup  : {speedup:.2}x images/sec (target ≥ 1.5x)");
+
+    if let Some(path) = json_path {
+        let mut path_obj = Json::obj();
+        path_obj
+            .set("bench", Json::s("serve_throughput"))
+            .set("workload", Json::s("resnet-style 4-conv stack, 16x16x16 input"))
+            .set("batch", Json::from_u64(batch))
+            .set("rounds", Json::from_u64(rounds as u64))
+            .set("threads", Json::from_u64(threads as u64))
+            .set("requant_shift", Json::from_u64(SHIFT as u64))
+            .set("bit_identical", Json::Bool(true))
+            .set("seed_images_per_sec", Json::Num(seed_ips))
+            .set("prepared_images_per_sec", Json::Num(prep_ips))
+            .set("speedup_images_per_sec", Json::Num(speedup))
+            .set("seed_p50_s", Json::Num(percentile(&seed_lat, 50.0)))
+            .set("seed_p99_s", Json::Num(percentile(&seed_lat, 99.0)))
+            .set("prepared_p50_s", Json::Num(percentile(&prep_lat, 50.0)))
+            .set("prepared_p99_s", Json::Num(percentile(&prep_lat, 99.0)));
+        std::fs::write(&path, path_obj.render()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

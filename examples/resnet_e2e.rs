@@ -120,7 +120,7 @@ fn small_net_plan(machine: MachineConfig) -> NetworkPlan {
     let mut pads = [1usize, 1, 0].iter();
     for cfg in specs {
         let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), *pads.next().unwrap());
-        lp.weights = Some(WeightTensor::random(
+        lp.bind_weights(WeightTensor::random(
             WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
             WeightLayout::CKRSc { c: machine.c_int8() },
             seed,
@@ -145,6 +145,7 @@ fn serve_requests() {
         max_batch: 8,
         batch_deadline: std::time::Duration::from_millis(5),
         requant_shift: 9,
+        exec_threads: 0,
     };
     let server = Server::start_with(plan, config);
     let n_requests = 24;

@@ -152,6 +152,19 @@ pub fn dw_out_get(out: &[i32], cfg: &ConvConfig, c: usize, ch: usize, oy: usize,
     out[(cb * cfg.e_size() + oy * cfg.ow() + ox) * c + ci]
 }
 
+/// Requantize+ReLU a raw depthwise output straight into an NCHWc
+/// activation tensor. The depthwise position-major layout coincides
+/// flat-index-wise with NCHWc — both index as `(cb·E + oy·ow + ox)·c +
+/// ci` — so the per-element [`dw_out_get`] triple loop reduces to one
+/// linear pass (the §Perf fused output traversal; bit-identical to the
+/// old loop by the index identity).
+pub fn dw_requantize_relu_into(raw: &[i32], shift: u32, out: &mut ActTensor) {
+    assert_eq!(raw.len(), out.data.len(), "depthwise output size mismatch");
+    for (dst, &v) in out.data.iter_mut().zip(raw) {
+        *dst = (v >> shift).clamp(0, 127) as i8;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +224,32 @@ mod tests {
     fn depthwise_wide_vars_match_oracle() {
         let m = MachineConfig::neon(256);
         check(&ConvConfig::depthwise(7, 7, 3, 3, 1, 64), &m, true);
+    }
+
+    #[test]
+    fn fused_requantize_matches_triple_loop() {
+        let m = MachineConfig::neon(128);
+        let c = m.c_int8();
+        let cfg = ConvConfig::depthwise(8, 8, 3, 3, 1, 32);
+        let input = ActTensor::random(ActShape::new(32, 8, 8), ActLayout::NCHWc { c }, 7);
+        let w = WeightTensor::random(WeightShape::new(1, 32, 3, 3), WeightLayout::CKRS, 8);
+        let prog = gen_depthwise(&cfg, &m, true);
+        let packed = pack_depthwise_weights(&w, c);
+        let raw = run_depthwise(&prog, &cfg, &m, &input, &packed);
+        let shift = 6;
+        let mut fused = ActTensor::zeros(
+            ActShape::new(32, cfg.oh(), cfg.ow()),
+            ActLayout::NCHWc { c },
+        );
+        dw_requantize_relu_into(&raw, shift, &mut fused);
+        for ch in 0..cfg.out_channels {
+            for oy in 0..cfg.oh() {
+                for ox in 0..cfg.ow() {
+                    let v = dw_out_get(&raw, &cfg, c, ch, oy, ox);
+                    assert_eq!(fused.get(ch, oy, ox), (v >> shift).clamp(0, 127) as i8);
+                }
+            }
+        }
     }
 
     #[test]

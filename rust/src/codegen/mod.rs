@@ -32,7 +32,7 @@ use crate::dataflow::{Anchor, DataflowSpec};
 use crate::isa::{Buf, Mode, Program, VInstr, REG_BYTES};
 use crate::layer::ConvConfig;
 use crate::machine::{Bases, Buffers, Interp, MachineConfig};
-use crate::tensor::{ActLayout, ActTensor, OutTensor, WeightLayout, WeightTensor};
+use crate::tensor::{ActLayout, ActTensor, OutTensor, WeightLayout, WeightShape, WeightTensor};
 
 /// Emits instructions at *vector variable* granularity: one logical op on
 /// a variable expands to `n = regs_per_var` physical-register ops
@@ -224,6 +224,39 @@ pub fn schedule(cfg: &ConvConfig, machine: &MachineConfig) -> Vec<Bases> {
                 output: (k * e) as u32,
             });
         }
+    }
+    out
+}
+
+/// Repack a grouped layer's weights into the per-group CKRSc tensors the
+/// per-group simple-conv kernel expects (in = channels-per-group,
+/// out = filters-per-group). Plan-invariant: hoisted out of the request
+/// loop — memoized by `coordinator::LayerPlan::packed_weights` and
+/// reused by the prepared execution engine (`crate::exec`).
+pub fn pack_group_weights(
+    cfg: &ConvConfig,
+    weights: &WeightTensor,
+    groups: usize,
+    c: usize,
+) -> Vec<WeightTensor> {
+    let cpg = cfg.in_channels / groups;
+    let kpg = cfg.out_channels / groups;
+    let mut out = Vec::with_capacity(groups);
+    for g in 0..groups {
+        let mut gw = WeightTensor::zeros(
+            WeightShape::new(cpg, kpg, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+        );
+        for ci in 0..cpg {
+            for k in 0..kpg {
+                for ry in 0..cfg.fh {
+                    for rx in 0..cfg.fw {
+                        gw.set(ci, k, ry, rx, weights.get(ci, g * kpg + k, ry, rx));
+                    }
+                }
+            }
+        }
+        out.push(gw);
     }
     out
 }

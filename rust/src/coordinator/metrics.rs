@@ -17,6 +17,10 @@ pub struct SessionMetrics {
     pub requests: u64,
     /// Size of every batch the scheduler dispatched, in dispatch order.
     pub batch_sizes: Vec<usize>,
+    /// Wall-clock seconds each dispatched batch spent *executing* (no
+    /// queueing/batch-formation wait), in dispatch order — pairs with
+    /// `batch_sizes`.
+    pub batch_exec_seconds: Vec<f64>,
 }
 
 impl SessionMetrics {
@@ -28,6 +32,23 @@ impl SessionMetrics {
     /// Record one dispatched batch of `size` requests.
     pub fn record_batch(&mut self, size: usize) {
         self.batch_sizes.push(size);
+    }
+
+    /// Record the execution wall-clock of one dispatched batch.
+    pub fn record_batch_exec(&mut self, seconds: f64) {
+        self.batch_exec_seconds.push(seconds);
+    }
+
+    /// Executed images per second over all dispatched batches
+    /// (Σ batch sizes / Σ batch execution seconds) — the engine-side
+    /// throughput, independent of queueing. 0 when nothing was timed.
+    pub fn exec_images_per_sec(&self) -> f64 {
+        let secs: f64 = self.batch_exec_seconds.iter().sum();
+        if secs > 0.0 {
+            self.batch_sizes.iter().sum::<usize>() as f64 / secs
+        } else {
+            0.0
+        }
     }
 
     pub fn summary(&self) -> Summary {
@@ -104,6 +125,10 @@ pub fn session_table(m: &SessionMetrics, cache: &PlanCacheStats) -> Table {
     t.row(&["mean batch size".to_string(), format!("{:.2}", m.mean_batch_size())]);
     t.row(&["max batch size".to_string(), m.max_batch_observed().to_string()]);
     t.row(&[
+        "exec images/sec".to_string(),
+        format!("{:.1}", m.exec_images_per_sec()),
+    ]);
+    t.row(&[
         "plan cache hit rate".to_string(),
         format!("{:.0}% ({} hits / {} misses)", cache.hit_rate() * 100.0, cache.hits, cache.misses),
     ]);
@@ -164,6 +189,17 @@ mod tests {
     }
 
     #[test]
+    fn exec_throughput_from_batch_timings() {
+        let mut m = SessionMetrics::default();
+        assert_eq!(m.exec_images_per_sec(), 0.0);
+        m.record_batch(4);
+        m.record_batch_exec(0.5);
+        m.record_batch(2);
+        m.record_batch_exec(0.5);
+        assert!((m.exec_images_per_sec() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn empty_batches_are_safe() {
         let m = SessionMetrics::default();
         assert_eq!(m.batch_histogram(), vec![]);
@@ -176,7 +212,7 @@ mod tests {
         let mut m = SessionMetrics::default();
         m.record(0.002);
         m.record_batch(1);
-        let cache = PlanCacheStats { hits: 3, misses: 1, entries: 1 };
+        let cache = PlanCacheStats { hits: 3, misses: 1, entries: 1, ..Default::default() };
         let rendered = session_table(&m, &cache).render();
         assert!(rendered.contains("plan cache hit rate"));
         assert!(rendered.contains("75%"));

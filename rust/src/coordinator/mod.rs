@@ -20,12 +20,14 @@ pub mod metrics;
 pub mod serve;
 
 pub use plan::{
-    global_plan_cache, network_fingerprint, plan_network, plan_network_shared,
-    plan_network_uncached, LayerPlan, NetworkPlan, PlanCache, PlanCacheKey, PlanCacheStats,
-    PlanKind, Planner, PlannerOptions,
+    global_plan_cache, network_fingerprint, plan_fingerprint, plan_network, plan_network_shared,
+    plan_network_uncached, LayerPlan, NetworkPlan, PackedWeights, PlanCache, PlanCacheKey,
+    PlanCacheStats, PlanKind, Planner, PlannerOptions,
 };
 pub use metrics::SessionMetrics;
 pub use serve::{Server, ServerConfig};
+
+use std::borrow::Cow;
 
 use crate::layer::{ConvConfig, LayerConfig, PoolKind};
 use crate::machine::MachineConfig;
@@ -71,6 +73,12 @@ pub fn run_network_functional(
 /// are independent — a failing image does not poison its batchmates —
 /// and each is bit-identical to an unbatched
 /// [`run_network_functional`] call on the same input.
+///
+/// This is the sequential, *unprepared* reference path (and the
+/// baseline the `serve_throughput` bench measures against). The serving
+/// hot path uses [`crate::exec::PreparedNetwork::run_batch`], which
+/// fans the batch across threads with per-thread arenas and skips all
+/// plan-derived per-request work — bit-identical to this function.
 pub fn run_network_batch(
     plan: &NetworkPlan,
     inputs: &[&ActTensor],
@@ -86,7 +94,8 @@ fn step_functional(lp: &LayerPlan, act: &ActTensor, shift: u32) -> crate::Result
     match (&lp.layer, &lp.kind) {
         (LayerConfig::Conv(cfg), PlanKind::Generated { prog, machine, pad, .. }) => {
             let c = machine.c_int8();
-            // Pad spatially and in channels to the kernel's expectations.
+            // Pad spatially and in channels to the kernel's expectations
+            // (borrowed, copy-free, when already aligned).
             let padded = pad_act(act, *pad, cfg.in_channels, c);
             let weights = lp
                 .weights
@@ -98,25 +107,20 @@ fn step_functional(lp: &LayerPlan, act: &ActTensor, shift: u32) -> crate::Result
         (LayerConfig::Conv(cfg), PlanKind::DepthwiseKernel { prog, machine, pad }) => {
             let c = machine.c_int8();
             let padded = pad_act(act, *pad, cfg.in_channels, c);
-            let weights = lp
-                .weights
-                .as_ref()
-                .ok_or_else(|| anyhow::anyhow!("no weights bound for {}", lp.layer.name()))?;
-            let packed = crate::codegen::depthwise::pack_depthwise_weights(weights, c);
-            let raw = crate::codegen::depthwise::run_depthwise(prog, cfg, machine, &padded, &packed);
-            // Requantize from the depthwise position-major layout.
+            // Tap-major packing is plan-invariant: memoized per layer,
+            // not recomputed per request.
+            let packed = lp.packed_weights(c)?;
+            let PackedWeights::Depthwise(packed) = &*packed else {
+                anyhow::bail!("packed-weight kind mismatch for {}", lp.layer.name());
+            };
+            let raw = crate::codegen::depthwise::run_depthwise(prog, cfg, machine, &padded, packed);
+            // Requantize from the depthwise position-major layout in one
+            // fused linear pass (replaces the dw_out_get triple loop).
             let mut out = ActTensor::zeros(
                 ActShape::new(cfg.out_channels, cfg.oh(), cfg.ow()),
                 ActLayout::NCHWc { c },
             );
-            for ch in 0..cfg.out_channels {
-                for oy in 0..cfg.oh() {
-                    for ox in 0..cfg.ow() {
-                        let v = crate::codegen::depthwise::dw_out_get(&raw, cfg, c, ch, oy, ox);
-                        out.set(ch, oy, ox, (v >> shift).clamp(0, 127) as i8);
-                    }
-                }
-            }
+            crate::codegen::depthwise::dw_requantize_relu_into(&raw, shift, &mut out);
             Ok(out)
         }
         (LayerConfig::Conv(cfg), PlanKind::GroupedKernel { prog, machine, pad, groups, .. }) => {
@@ -125,10 +129,12 @@ fn step_functional(lp: &LayerPlan, act: &ActTensor, shift: u32) -> crate::Result
             let kpg = cfg.out_channels / groups;
             anyhow::ensure!(cpg % c == 0, "group channels {cpg} must align to block size {c}");
             let padded = pad_act(act, *pad, cfg.in_channels, c);
-            let weights = lp
-                .weights
-                .as_ref()
-                .ok_or_else(|| anyhow::anyhow!("no weights bound for {}", lp.layer.name()))?;
+            // Per-group weight repacks are plan-invariant: hoisted out of
+            // the request loop into the memoized packed form.
+            let packed = lp.packed_weights(c)?;
+            let PackedWeights::Grouped(group_weights) = &*packed else {
+                anyhow::bail!("packed-weight kind mismatch for {}", lp.layer.name());
+            };
             let view = cfg.group_view();
             let mut acc = crate::tensor::OutTensor::zeros(cfg.out_channels, cfg.oh(), cfg.ow());
             for g in 0..*groups {
@@ -140,21 +146,8 @@ fn step_functional(lp: &LayerPlan, act: &ActTensor, shift: u32) -> crate::Result
                     layout: ActLayout::NCHWc { c },
                     data: padded.data[in_base..in_base + in_len].to_vec(),
                 };
-                // Repack this group's weights (oracle shape: in=cpg, out=K).
-                let mut gw = crate::tensor::WeightTensor::zeros(
-                    crate::tensor::WeightShape::new(cpg, kpg, cfg.fh, cfg.fw),
-                    crate::tensor::WeightLayout::CKRSc { c },
-                );
-                for ci in 0..cpg {
-                    for k in 0..kpg {
-                        for ry in 0..cfg.fh {
-                            for rx in 0..cfg.fw {
-                                gw.set(ci, k, ry, rx, weights.get(ci, g * kpg + k, ry, rx));
-                            }
-                        }
-                    }
-                }
-                let group_out = crate::codegen::run_conv(prog, &view, machine, &group_input, &gw);
+                let group_out =
+                    crate::codegen::run_conv(prog, &view, machine, &group_input, &group_weights[g]);
                 for k in 0..kpg {
                     for oy in 0..cfg.oh() {
                         for ox in 0..cfg.ow() {
@@ -167,20 +160,8 @@ fn step_functional(lp: &LayerPlan, act: &ActTensor, shift: u32) -> crate::Result
             Ok(requantize_relu(&acc, shift, ActLayout::NCHWc { c }))
         }
         (LayerConfig::ChannelShuffle { channels, groups, .. }, _) => {
-            // ShuffleNet-style transpose: channel g·n+i -> i·groups+g.
-            let n = channels / groups;
             let mut out = ActTensor::zeros(act.shape, act.layout);
-            for g in 0..*groups {
-                for i in 0..n {
-                    let src = g * n + i;
-                    let dst = i * groups + g;
-                    for y in 0..act.shape.h {
-                        for x in 0..act.shape.w {
-                            out.set(dst, y, x, act.get(src, y, x));
-                        }
-                    }
-                }
-            }
+            shuffle_into(*channels, *groups, act, &mut out);
             Ok(out)
         }
         (LayerConfig::Pool(p), _) => Ok(pool_functional(p, act)),
@@ -190,35 +171,46 @@ fn step_functional(lp: &LayerPlan, act: &ActTensor, shift: u32) -> crate::Result
     }
 }
 
-/// Zero-pad spatially and in channels, preserving NCHWc.
-pub fn pad_act(act: &ActTensor, pad: usize, target_ch: usize, c: usize) -> ActTensor {
-    let spatial = act.pad_spatial(pad);
-    if spatial.shape.channels == target_ch {
-        return spatial;
+/// Zero-pad spatially and in channels, preserving NCHWc. Fast path
+/// (satellite of PR 2): when `pad == 0` and the channel count already
+/// matches the kernel's block-padded expectation, the input is returned
+/// borrowed — no allocation, no copy. The mid-network layers of aligned
+/// models all hit this path.
+pub fn pad_act<'a>(
+    act: &'a ActTensor,
+    pad: usize,
+    target_ch: usize,
+    c: usize,
+) -> Cow<'a, ActTensor> {
+    if pad == 0 && act.shape.channels == target_ch {
+        return Cow::Borrowed(act);
     }
-    assert!(target_ch > spatial.shape.channels);
+    assert!(target_ch >= act.shape.channels);
     let mut out = ActTensor::zeros(
-        ActShape::new(target_ch, spatial.shape.h, spatial.shape.w),
+        ActShape::new(target_ch, act.shape.h + 2 * pad, act.shape.w + 2 * pad),
         ActLayout::NCHWc { c },
     );
-    for ch in 0..spatial.shape.channels {
-        for y in 0..spatial.shape.h {
-            for x in 0..spatial.shape.w {
-                out.set(ch, y, x, spatial.get(ch, y, x));
-            }
-        }
-    }
-    out
+    act.write_padded_into(pad, &mut out);
+    Cow::Owned(out)
 }
 
 fn pool_functional(p: &crate::layer::PoolConfig, act: &ActTensor) -> ActTensor {
     // Input may need spatial padding to match the pool's padded dims.
     let pad = (p.ih - act.shape.h) / 2;
-    let a = act.pad_spatial(pad);
-    let mut out = ActTensor::zeros(
-        ActShape::new(p.channels, p.oh(), p.ow()),
-        a.layout,
-    );
+    let a: Cow<ActTensor> = if pad == 0 {
+        Cow::Borrowed(act)
+    } else {
+        Cow::Owned(act.pad_spatial(pad))
+    };
+    let mut out = ActTensor::zeros(ActShape::new(p.channels, p.oh(), p.ow()), a.layout);
+    pool_into(p, &a, &mut out);
+    out
+}
+
+/// Pooling core over a pre-padded input (`a.shape.h == p.ih`), writing
+/// every element of `out`. Shared by the functional path and the
+/// prepared execution engine so both produce identical bytes.
+pub(crate) fn pool_into(p: &crate::layer::PoolConfig, a: &ActTensor, out: &mut ActTensor) {
     for ch in 0..p.channels {
         for oy in 0..p.oh() {
             for ox in 0..p.ow() {
@@ -240,11 +232,17 @@ fn pool_functional(p: &crate::layer::PoolConfig, act: &ActTensor) -> ActTensor {
             }
         }
     }
-    out
 }
 
 fn gap_functional(act: &ActTensor) -> ActTensor {
     let mut out = ActTensor::zeros(ActShape::new(act.shape.channels, 1, 1), act.layout);
+    gap_into(act, &mut out);
+    out
+}
+
+/// Global-average-pool core, writing every element of `out` (shape
+/// `(channels, 1, 1)`). Shared with the prepared execution engine.
+pub(crate) fn gap_into(act: &ActTensor, out: &mut ActTensor) {
     let n = (act.shape.h * act.shape.w) as i32;
     for ch in 0..act.shape.channels {
         let mut sum = 0i32;
@@ -255,7 +253,23 @@ fn gap_functional(act: &ActTensor) -> ActTensor {
         }
         out.set(ch, 0, 0, (sum / n).clamp(-128, 127) as i8);
     }
-    out
+}
+
+/// ShuffleNet-style channel transpose (`g·n+i → i·groups+g`), writing
+/// every element of `out`. Shared with the prepared execution engine.
+pub(crate) fn shuffle_into(channels: usize, groups: usize, act: &ActTensor, out: &mut ActTensor) {
+    let n = channels / groups;
+    for g in 0..groups {
+        for i in 0..n {
+            let src = g * n + i;
+            let dst = i * groups + g;
+            for y in 0..act.shape.h {
+                for x in 0..act.shape.w {
+                    out.set(dst, y, x, act.get(src, y, x));
+                }
+            }
+        }
+    }
 }
 
 /// Modeled speedup of serving `batch` images back-to-back (one batch on
@@ -346,5 +360,15 @@ mod tests {
         assert_eq!(p.shape.h, 5);
         assert_eq!(p.get(2, 1, 1), t.get(2, 0, 0));
         assert_eq!(p.get(10, 2, 2), 0); // padded channel
+    }
+
+    #[test]
+    fn pad_act_aligned_zero_pad_borrows() {
+        let t = ActTensor::random(ActShape::new(16, 3, 3), ActLayout::NCHWc { c: 16 }, 3);
+        // Fast path: no padding needed → no allocation, no copy.
+        assert!(matches!(pad_act(&t, 0, 16, 16), Cow::Borrowed(_)));
+        // Any real padding still materializes a new tensor.
+        assert!(matches!(pad_act(&t, 1, 16, 16), Cow::Owned(_)));
+        assert!(matches!(pad_act(&t, 0, 32, 16), Cow::Owned(_)));
     }
 }

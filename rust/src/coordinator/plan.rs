@@ -51,14 +51,90 @@ impl PlanKind {
     }
 }
 
+/// Plan-invariant packed weights of a layer, computed once (not per
+/// request): depthwise tap-major packing, grouped per-group CKRSc
+/// repacks. Stored behind a [`OnceLock`] memo on [`LayerPlan`].
+#[derive(Clone, Debug)]
+pub enum PackedWeights {
+    /// Tap-major depthwise packing
+    /// ([`crate::codegen::depthwise::pack_depthwise_weights`]).
+    Depthwise(Vec<i8>),
+    /// One CKRSc weight tensor per group
+    /// ([`crate::codegen::pack_group_weights`]).
+    Grouped(Vec<WeightTensor>),
+}
+
 /// One planned layer.
 #[derive(Clone, Debug)]
 pub struct LayerPlan {
     pub layer: LayerConfig,
     pub kind: PlanKind,
     pub stats: PerfStats,
-    /// Weights bound for functional execution (None for model-only plans).
-    pub weights: Option<WeightTensor>,
+    /// Weights bound for functional execution (None for model-only
+    /// plans). `pub(crate)`: outside the crate, [`LayerPlan::bind_weights`]
+    /// is the only way to set weights — it also invalidates the packed
+    /// memo below, so stale packs can never be served.
+    pub(crate) weights: Option<WeightTensor>,
+    /// Lazily-computed packed-weight memo, tagged with the block size it
+    /// was packed for (see [`LayerPlan::packed_weights`]). Cleared by
+    /// [`LayerPlan::bind_weights`].
+    pub(crate) packed: OnceLock<(usize, Arc<PackedWeights>)>,
+}
+
+impl LayerPlan {
+    /// Bind (or rebind) weights, invalidating the packed-weight memo.
+    /// The only way to change weights (by design: a direct field write
+    /// after execution populated the memo would serve stale packs).
+    pub fn bind_weights(&mut self, w: WeightTensor) {
+        self.weights = Some(w);
+        self.packed = OnceLock::new();
+    }
+
+    /// The bound weights, if any.
+    pub fn weights(&self) -> Option<&WeightTensor> {
+        self.weights.as_ref()
+    }
+
+    /// The packed form of this layer's weights for its kernel kind,
+    /// computed on first use and memoized — the per-request repacking
+    /// the seed did in `step_functional` is hoisted here (PR 2
+    /// satellite). Only meaningful for depthwise/grouped kinds. A call
+    /// with a different block size than the memoized pack (one plan
+    /// reused across machines) packs fresh without touching the memo,
+    /// so a mismatched `c` can never be served from cache.
+    pub fn packed_weights(&self, c: usize) -> crate::Result<Arc<PackedWeights>> {
+        let w = self
+            .weights
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no weights bound for {}", self.layer.name()))?;
+        if let Some((memo_c, packed)) = self.packed.get() {
+            if *memo_c == c {
+                return Ok(Arc::clone(packed));
+            }
+            return Ok(Arc::new(self.pack_for_kind(w, c)));
+        }
+        let packed = Arc::new(self.pack_for_kind(w, c));
+        // A concurrent first caller may win the race; both Arcs hold
+        // identical content, so either is fine to return.
+        let _ = self.packed.set((c, Arc::clone(&packed)));
+        Ok(packed)
+    }
+
+    fn pack_for_kind(&self, w: &WeightTensor, c: usize) -> PackedWeights {
+        match (&self.layer, &self.kind) {
+            (_, PlanKind::DepthwiseKernel { .. }) => PackedWeights::Depthwise(
+                crate::codegen::depthwise::pack_depthwise_weights(w, c),
+            ),
+            (LayerConfig::Conv(cfg), PlanKind::GroupedKernel { groups, .. }) => {
+                PackedWeights::Grouped(crate::codegen::pack_group_weights(cfg, w, *groups, c))
+            }
+            (l, k) => panic!(
+                "packed_weights is only defined for depthwise/grouped layers, not {:?}/{}",
+                l.name(),
+                k.name()
+            ),
+        }
+    }
 }
 
 /// A fully planned network.
@@ -173,6 +249,7 @@ impl Planner {
             kind: PlanKind::Generated { spec, prog, machine, pad },
             stats,
             weights: None,
+            packed: OnceLock::new(),
         }
     }
 
@@ -192,6 +269,7 @@ impl Planner {
             kind: PlanKind::DepthwiseKernel { prog, machine, pad },
             stats,
             weights: None,
+            packed: OnceLock::new(),
         }
     }
 
@@ -209,6 +287,7 @@ impl Planner {
             kind: PlanKind::GroupedKernel { spec, prog, machine, pad, groups: cfg.groups },
             stats,
             weights: None,
+            packed: OnceLock::new(),
         }
     }
 
@@ -226,6 +305,7 @@ impl Planner {
             kind: PlanKind::ScalarPass,
             stats: PerfStats { cycles, ..Default::default() },
             weights: None,
+            packed: OnceLock::new(),
         }
     }
 
@@ -269,6 +349,53 @@ pub fn network_fingerprint(net: &Network) -> u64 {
     h
 }
 
+/// Stable 64-bit fingerprint of a *weight-bound* plan: the name, every
+/// layer config, the chosen kernel (program name + machine + pad), and
+/// every weight byte. Two plans fingerprint identically iff prepared
+/// execution would be identical — this keys the prepared-network side
+/// of the cache ([`PlanCache::prepared`]).
+pub fn plan_fingerprint(plan: &NetworkPlan) -> u64 {
+    fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+    fn eat_i8(mut h: u64, bytes: &[i8]) -> u64 {
+        for &b in bytes {
+            h ^= (b as u8) as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = eat(h, plan.name.as_bytes());
+    for lp in &plan.layers {
+        h = eat(h, format!("{:?}", lp.layer).as_bytes());
+        let kind_sig = match &lp.kind {
+            PlanKind::Generated { prog, machine, pad, .. } => {
+                format!("gen:{}:{machine:?}:{pad}", prog.name)
+            }
+            PlanKind::DepthwiseKernel { prog, machine, pad } => {
+                format!("dw:{}:{machine:?}:{pad}", prog.name)
+            }
+            PlanKind::GroupedKernel { prog, machine, pad, groups, .. } => {
+                format!("grp:{}:{machine:?}:{pad}:{groups}", prog.name)
+            }
+            PlanKind::ScalarPass => "scalar".to_string(),
+        };
+        h = eat(h, kind_sig.as_bytes());
+        if let Some(w) = &lp.weights {
+            h = eat(h, format!("{:?}:{:?}", w.shape, w.layout).as_bytes());
+            h = eat_i8(h, &w.data);
+        } else {
+            h = eat(h, b"unbound");
+        }
+    }
+    h
+}
+
 /// Plan-cache key: everything that determines the resulting plan.
 /// (`explore_threads` is deliberately absent — it changes planning
 /// latency, never the plan.)
@@ -291,12 +418,17 @@ impl PlanCacheKey {
     }
 }
 
-/// Counters of a [`PlanCache`].
+/// Counters of a [`PlanCache`] (both sides: plans and prepared
+/// networks).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PlanCacheStats {
     pub hits: u64,
     pub misses: u64,
     pub entries: usize,
+    /// Prepared-network side ([`PlanCache::prepared`]).
+    pub prepared_hits: u64,
+    pub prepared_misses: u64,
+    pub prepared_entries: usize,
 }
 
 impl PlanCacheStats {
@@ -318,6 +450,13 @@ pub struct PlanCache {
     map: Mutex<HashMap<PlanCacheKey, Arc<NetworkPlan>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Prepared execution engines, keyed by [`plan_fingerprint`] of the
+    /// weight-bound plan they were compiled from (the plan side above is
+    /// weightless, so prepared networks are cached alongside it under
+    /// their own key).
+    prepared: Mutex<HashMap<u64, Arc<crate::exec::PreparedNetwork>>>,
+    prepared_hits: AtomicU64,
+    prepared_misses: AtomicU64,
 }
 
 impl PlanCache {
@@ -341,16 +480,52 @@ impl PlanCache {
         Arc::clone(map.entry(key).or_insert(planned))
     }
 
+    /// Compile `plan` into a [`crate::exec::PreparedNetwork`] once,
+    /// memoized by [`plan_fingerprint`] (configs + kernels + weight
+    /// bytes): every server/session serving the same weight-bound plan
+    /// shares one prepared engine. Preparation happens outside the map
+    /// lock; on a cold-start race the first insert wins and both callers
+    /// get the same `Arc`.
+    pub fn prepared(
+        &self,
+        plan: &NetworkPlan,
+    ) -> crate::Result<Arc<crate::exec::PreparedNetwork>> {
+        // Prepared engines embed a full copy of the model's weights, and
+        // every weight rebind is a new fingerprint — so unlike the
+        // weightless plan side, this side is bounded: once full, an
+        // arbitrary old entry is evicted (in-flight `Arc`s stay valid; a
+        // re-used old plan simply re-prepares).
+        const MAX_PREPARED_ENTRIES: usize = 8;
+        let key = plan_fingerprint(plan);
+        if let Some(hit) = self.prepared.lock().unwrap().get(&key) {
+            self.prepared_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(hit));
+        }
+        let built = Arc::new(crate::exec::PreparedNetwork::prepare(plan)?);
+        self.prepared_misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.prepared.lock().unwrap();
+        if !map.contains_key(&key) && map.len() >= MAX_PREPARED_ENTRIES {
+            if let Some(evict) = map.keys().next().copied() {
+                map.remove(&evict);
+            }
+        }
+        Ok(Arc::clone(map.entry(key).or_insert(built)))
+    }
+
     pub fn stats(&self) -> PlanCacheStats {
         PlanCacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             entries: self.map.lock().unwrap().len(),
+            prepared_hits: self.prepared_hits.load(Ordering::Relaxed),
+            prepared_misses: self.prepared_misses.load(Ordering::Relaxed),
+            prepared_entries: self.prepared.lock().unwrap().len(),
         }
     }
 
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
+        self.prepared.lock().unwrap().clear();
     }
 }
 
@@ -452,12 +627,14 @@ mod tests {
         let opts = PlannerOptions::default();
         let cache = PlanCache::new();
         let first = cache.plan(&net, &opts);
-        assert_eq!(cache.stats(), PlanCacheStats { hits: 0, misses: 1, entries: 1 });
+        let want = PlanCacheStats { hits: 0, misses: 1, entries: 1, ..Default::default() };
+        assert_eq!(cache.stats(), want);
         let second = cache.plan(&net, &opts);
         // Pointer equality: the hit path returned the cached Arc without
         // re-running planning (a re-plan would show up as a second miss).
         assert!(Arc::ptr_eq(&first, &second));
-        assert_eq!(cache.stats(), PlanCacheStats { hits: 1, misses: 1, entries: 1 });
+        let want = PlanCacheStats { hits: 1, misses: 1, entries: 1, ..Default::default() };
+        assert_eq!(cache.stats(), want);
     }
 
     #[test]
@@ -470,7 +647,8 @@ mod tests {
             ..Default::default()
         };
         cache.plan(&net, &opts256);
-        assert_eq!(cache.stats(), PlanCacheStats { hits: 0, misses: 2, entries: 2 });
+        let want = PlanCacheStats { hits: 0, misses: 2, entries: 2, ..Default::default() };
+        assert_eq!(cache.stats(), want);
     }
 
     #[test]
@@ -492,6 +670,63 @@ mod tests {
             network_fingerprint(&nets::resnet18()),
             network_fingerprint(&nets::vgg16())
         );
+    }
+
+    #[test]
+    fn packed_weights_are_memoized_per_layer() {
+        let machine = MachineConfig::neon(128);
+        let cfg = ConvConfig::depthwise(6, 6, 3, 3, 1, 32);
+        let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
+        lp.bind_weights(WeightTensor::random(
+            crate::tensor::WeightShape::new(1, 32, 3, 3),
+            crate::tensor::WeightLayout::CKRS,
+            7,
+        ));
+        let a = lp.packed_weights(16).unwrap();
+        let b = lp.packed_weights(16).unwrap();
+        // Same Arc: the pack ran once, not per call.
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(matches!(&*a, PackedWeights::Depthwise(_)));
+        // Rebinding invalidates the memo.
+        lp.bind_weights(WeightTensor::random(
+            crate::tensor::WeightShape::new(1, 32, 3, 3),
+            crate::tensor::WeightLayout::CKRS,
+            8,
+        ));
+        let c = lp.packed_weights(16).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn prepared_cache_hits_by_plan_fingerprint() {
+        let machine = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 16, 16);
+        let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
+        lp.bind_weights(WeightTensor::random(
+            crate::tensor::WeightShape::new(16, 16, 3, 3),
+            crate::tensor::WeightLayout::CKRSc { c: 16 },
+            42,
+        ));
+        let plan = NetworkPlan { name: "prep".into(), layers: vec![lp] };
+        let cache = PlanCache::new();
+        let a = cache.prepared(&plan).unwrap();
+        let b = cache.prepared(&plan).unwrap();
+        // One preparation, shared Arc.
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.prepared_hits, s.prepared_misses, s.prepared_entries), (1, 1, 1));
+        // Different weight bytes → different fingerprint → new entry.
+        let mut plan2 = plan.clone();
+        plan2.layers[0].bind_weights(WeightTensor::random(
+            crate::tensor::WeightShape::new(16, 16, 3, 3),
+            crate::tensor::WeightLayout::CKRSc { c: 16 },
+            43,
+        ));
+        assert_ne!(plan_fingerprint(&plan), plan_fingerprint(&plan2));
+        cache.prepared(&plan2).unwrap();
+        assert_eq!(cache.stats().prepared_entries, 2);
     }
 
     #[test]

@@ -6,12 +6,15 @@
 //! oldest request in the forming batch has waited
 //! [`ServerConfig::batch_deadline`] — the classic
 //! throughput-vs-tail-latency knob of TPU-style serving. A pool of
-//! **worker** threads executes whole batches against the shared
-//! [`NetworkPlan`], one image at a time back-to-back
-//! ([`super::run_network_batch`]): what batching buys on this substrate
-//! is per-batch scheduling/channel overhead amortized across images and
-//! a warm data cache between consecutive images of a batch — the latter
-//! is what [`crate::machine::PerfModel::estimate_layer_batched`] models
+//! **worker** threads executes whole batches on the **prepared
+//! execution engine** ([`crate::exec::PreparedNetwork`], compiled once
+//! at startup and shared through the plan cache): per-request
+//! replanning/packing/allocation is gone, and each batch's images fan
+//! out across [`ServerConfig::exec_threads`] threads with thread-local
+//! arenas + register files. Plans that cannot be prepared (no weights
+//! bound) fall back to the sequential functional path
+//! ([`super::run_network_batch`]). Batch amortization on warm caches is
+//! modeled by [`crate::machine::PerfModel::estimate_layer_batched`]
 //! (see [`super::modeled_batch_speedup`]).
 //!
 //! The tradeoff is explicit: a batch occupies one worker, so
@@ -51,6 +54,10 @@ pub struct ServerConfig {
     pub batch_deadline: Duration,
     /// Requantization shift applied after every conv layer.
     pub requant_shift: u32,
+    /// Threads the prepared engine fans one batch's images across
+    /// (`0` = auto: available cores / `workers`, at least 1). Ignored on
+    /// the fallback path for plans that cannot be prepared.
+    pub exec_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -60,6 +67,7 @@ impl Default for ServerConfig {
             max_batch: 8,
             batch_deadline: Duration::from_millis(2),
             requant_shift: 8,
+            exec_threads: 0,
         }
     }
 }
@@ -82,6 +90,10 @@ pub struct Server {
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     config: ServerConfig,
+    /// Whether batches run on the prepared engine (false = plan could
+    /// not be prepared, e.g. no weights bound; the per-request
+    /// functional path is used and reports errors per request).
+    prepared: bool,
     pub metrics: Arc<Mutex<SessionMetrics>>,
 }
 
@@ -98,16 +110,45 @@ impl Server {
     }
 
     /// Spawn the batcher + worker pool.
+    ///
+    /// The plan is compiled to a [`crate::exec::PreparedNetwork`] once
+    /// at startup, memoized through the process-wide plan cache
+    /// ([`super::plan::PlanCache::prepared`]) so concurrent servers for
+    /// the same weight-bound plan share one prepared engine. Plans that
+    /// cannot be prepared (e.g. no weights bound) fall back to the
+    /// per-request functional path, preserving the old error behaviour.
     pub fn start_with(plan: NetworkPlan, config: ServerConfig) -> Server {
+        let workers_n = config.workers.max(1);
+        let exec_threads = if config.exec_threads == 0 {
+            (std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) / workers_n)
+                .max(1)
+        } else {
+            config.exec_threads
+        };
         let config = ServerConfig {
-            workers: config.workers.max(1),
+            workers: workers_n,
             max_batch: config.max_batch.max(1),
+            exec_threads,
             ..config
         };
         let (tx, submit_rx) = mpsc::channel::<Request>();
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let metrics = Arc::new(Mutex::new(SessionMetrics::default()));
+        let prepared_net = match super::plan::global_plan_cache().prepared(&plan) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                // Weightless plans are the expected case here; a *bound*
+                // plan failing to prepare is a real defect the operator
+                // should see, so the reason is never swallowed silently.
+                eprintln!(
+                    "yflows server: plan '{}' not prepared ({e:#}); \
+                     falling back to the sequential functional path",
+                    plan.name
+                );
+                None
+            }
+        };
         let plan = Arc::new(plan);
 
         let batcher = std::thread::spawn({
@@ -143,11 +184,14 @@ impl Server {
         });
 
         let mut workers = Vec::new();
+        let has_prepared = prepared_net.is_some();
         for _ in 0..config.workers {
             let batch_rx = Arc::clone(&batch_rx);
             let metrics = Arc::clone(&metrics);
             let plan = Arc::clone(&plan);
+            let prepared_net = prepared_net.clone();
             let shift = config.requant_shift;
+            let exec_threads = config.exec_threads;
             workers.push(std::thread::spawn(move || loop {
                 let batch = {
                     let guard = batch_rx.lock().unwrap();
@@ -156,10 +200,18 @@ impl Server {
                 let Ok(batch) = batch else { break };
                 let inputs: Vec<&ActTensor> =
                     batch.requests.iter().map(|r| &r.input).collect();
-                let outputs = run_network_batch(&plan, &inputs, shift);
+                let exec_start = Instant::now();
+                let outputs = match &prepared_net {
+                    // Hot path: prepared engine, images fanned across
+                    // threads — bit-identical to the functional path.
+                    Some(p) => p.run_batch(&inputs, shift, exec_threads),
+                    None => run_network_batch(&plan, &inputs, shift),
+                };
+                let exec_seconds = exec_start.elapsed().as_secs_f64();
                 {
                     let mut m = metrics.lock().unwrap();
                     m.record_batch(batch.requests.len());
+                    m.record_batch_exec(exec_seconds);
                     for req in &batch.requests {
                         m.record(req.enqueued.elapsed().as_secs_f64());
                     }
@@ -170,7 +222,20 @@ impl Server {
             }));
         }
 
-        Server { tx: Some(tx), batcher: Some(batcher), workers, config, metrics }
+        Server {
+            tx: Some(tx),
+            batcher: Some(batcher),
+            workers,
+            config,
+            prepared: has_prepared,
+            metrics,
+        }
+    }
+
+    /// Whether batches run on the prepared execution engine (vs the
+    /// functional fallback for unpreparable plans).
+    pub fn is_prepared(&self) -> bool {
+        self.prepared
     }
 
     pub fn config(&self) -> &ServerConfig {
@@ -215,7 +280,7 @@ mod tests {
         let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 16, 16);
         let mut planner = Planner::new(PlannerOptions { machine: m, ..Default::default() });
         let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
-        lp.weights = Some(WeightTensor::random(
+        lp.bind_weights(WeightTensor::random(
             WeightShape::new(16, 16, 3, 3),
             WeightLayout::CKRSc { c: 16 },
             5,
@@ -251,6 +316,7 @@ mod tests {
             max_batch: 16,
             batch_deadline: Duration::from_millis(1),
             requant_shift: 8,
+            exec_threads: 0,
         };
         let server = Server::start_with(tiny_plan(), config);
         let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 1);
@@ -259,6 +325,33 @@ mod tests {
         assert_eq!(out.shape.channels, 16);
         let metrics = server.shutdown();
         assert_eq!(metrics.batch_sizes, vec![1]);
+    }
+
+    #[test]
+    fn server_uses_prepared_engine_and_times_batches() {
+        let server = Server::start(tiny_plan(), 1, 8);
+        assert!(server.is_prepared(), "weight-bound plan must prepare");
+        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 4);
+        server.submit(input).recv().unwrap().unwrap();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.batch_exec_seconds.len(), metrics.batch_sizes.len());
+        assert!(metrics.exec_images_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn weightless_plan_falls_back_to_functional_path() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 16, 16);
+        let mut planner = Planner::new(PlannerOptions { machine: m, ..Default::default() });
+        let lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0); // no weights bound
+        let plan = NetworkPlan { name: "weightless".into(), layers: vec![lp] };
+        let server = Server::start(plan, 1, 8);
+        assert!(!server.is_prepared());
+        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 1);
+        // Old behaviour preserved: the request itself errors.
+        let out = server.submit(input).recv().unwrap();
+        assert!(out.is_err());
+        server.shutdown();
     }
 
     #[test]

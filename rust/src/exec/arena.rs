@@ -1,0 +1,96 @@
+//! The execution arena: every buffer a prepared network needs to run one
+//! image, preallocated once and reused for the life of a worker thread.
+//!
+//! The seed hot path allocated per layer per request (padded inputs,
+//! INT32 accumulators, requantized outputs). Prepared execution replaces
+//! all of that with four reusable allocations:
+//!
+//! * two **ping-pong activation buffers** — layer *n* reads one and
+//!   writes the other, then they swap roles;
+//! * one **padded-input staging buffer** — spatial/channel padding is
+//!   written here instead of into a fresh tensor;
+//! * one **INT32 accumulator** — conv kernels accumulate here before the
+//!   fused requantize pass.
+//!
+//! Capacities are sized at prepare time from the plan's declared layer
+//! shapes; per-image use only `clear` + `resize`s within capacity, so
+//! the hot path never reallocates. Buffers are taken out as plain
+//! `ActTensor`s (moving the `Vec`, not copying it) so the scalar passes
+//! can run on them unchanged, and are returned the same way.
+
+use crate::machine::Interp;
+use crate::tensor::{ActLayout, ActShape, ActTensor};
+
+/// Reusable per-thread execution state: ping-pong activations, padding
+/// stage, accumulator, and the interpreter register file.
+pub struct ExecArena {
+    act: [Vec<i8>; 2],
+    padded: Vec<i8>,
+    pub(crate) acc: Vec<i32>,
+    pub(crate) interp: Interp,
+}
+
+impl ExecArena {
+    pub(crate) fn with_capacity(
+        max_act: usize,
+        max_padded: usize,
+        max_acc: usize,
+        num_regs: usize,
+    ) -> ExecArena {
+        ExecArena {
+            act: [Vec::with_capacity(max_act), Vec::with_capacity(max_act)],
+            padded: Vec::with_capacity(max_padded),
+            acc: Vec::with_capacity(max_acc),
+            interp: Interp::new(num_regs),
+        }
+    }
+
+    /// Take ping-pong slot `slot` as a zero-filled tensor of `shape`.
+    /// The backing `Vec` is moved out (no copy) and must be handed back
+    /// via [`ExecArena::put_act`] once the tensor is done.
+    pub(crate) fn take_act(
+        &mut self,
+        slot: usize,
+        shape: ActShape,
+        layout: ActLayout,
+    ) -> ActTensor {
+        layout.validate(&shape); // same panic an ActTensor::zeros would raise
+        let mut data = std::mem::take(&mut self.act[slot]);
+        data.clear();
+        data.resize(shape.elements(), 0);
+        ActTensor { shape, layout, data }
+    }
+
+    /// Return a tensor taken with [`ExecArena::take_act`] to its slot.
+    pub(crate) fn put_act(&mut self, slot: usize, t: ActTensor) {
+        self.act[slot] = t.data;
+    }
+
+    /// Take the padding stage as a zero-filled tensor (same take/put
+    /// discipline as the activation slots).
+    pub(crate) fn take_padded(&mut self, shape: ActShape, layout: ActLayout) -> ActTensor {
+        layout.validate(&shape);
+        let mut data = std::mem::take(&mut self.padded);
+        data.clear();
+        data.resize(shape.elements(), 0);
+        ActTensor { shape, layout, data }
+    }
+
+    pub(crate) fn put_padded(&mut self, t: ActTensor) {
+        self.padded = t.data;
+    }
+
+    /// Zero the accumulator and size it to `n` elements (allocation is
+    /// reused; `clear` + `resize` re-zeroes every element, so no state
+    /// survives from the previous layer or image).
+    pub(crate) fn reset_acc(&mut self, n: usize) {
+        self.acc.clear();
+        self.acc.resize(n, 0);
+    }
+
+    /// Split-borrow the interpreter and the accumulator together (the
+    /// kernel loop needs both mutably at once).
+    pub(crate) fn interp_and_acc(&mut self) -> (&mut Interp, &mut Vec<i32>) {
+        (&mut self.interp, &mut self.acc)
+    }
+}

@@ -1,0 +1,580 @@
+//! The prepared execution engine: compile a plan once, execute per image
+//! with zero plan-derived work on the hot path.
+//!
+//! The paper's thesis is that inference time is won by deciding the
+//! dataflow *once* and then executing a maximally-reusing schedule — yet
+//! the seed's serving path re-derived plan-invariant state on **every
+//! request**: `run_conv` recomputed the invocation schedule and
+//! re-validated its bounds per image, `step_functional` re-packed
+//! depthwise/grouped weights per request, `pad_act` allocated and copied
+//! activations per layer, and batches executed strictly sequentially.
+//! [`PreparedNetwork`] moves all of that to *prepare* time:
+//!
+//! * each layer's full invocation schedule (absolute
+//!   [`crate::machine::Bases`] stream) is precomputed and bounds-checked
+//!   once against the plan's **declared** buffer sizes, so execution
+//!   takes the unchecked interpreter path with no per-image validation;
+//! * each generated [`crate::isa::Program`] is pre-decoded into a flat
+//!   micro-op trace ([`DecodedProgram`]) with the dominant VLoad→VMla
+//!   pairs fused, cutting per-instruction dispatch;
+//! * depthwise and per-group weights are packed exactly once (shared
+//!   with the functional path through
+//!   [`crate::coordinator::LayerPlan::packed_weights`]);
+//! * activations flow through a ping-pong [`ExecArena`] sized from the
+//!   plan, so per-layer padding and output allocations become writes
+//!   into reused buffers, and requantize+ReLU is fused into the output
+//!   traversal (one pass from INT32 accumulator to INT8 activation);
+//! * [`PreparedNetwork::run_batch`] fans a coalesced batch across
+//!   threads, each with its own arena and register file.
+//!
+//! **Bit-identity.** Prepared execution produces byte-for-byte the same
+//! outputs as [`crate::coordinator::run_network_functional`] on every
+//! kernel kind — the `exec_equivalence` integration test enforces this,
+//! and prepare-time [`crate::isa::validate`] (def-before-use) guarantees
+//! reusing one register file across layers and images cannot leak state
+//! into results.
+//!
+//! Prepared networks are memoized alongside the plan cache
+//! ([`crate::coordinator::PlanCache::prepared`]), keyed by the
+//! weight-bound plan fingerprint.
+
+mod arena;
+
+pub use arena::ExecArena;
+
+use crate::coordinator::plan::{LayerPlan, NetworkPlan, PackedWeights, PlanKind};
+use crate::coordinator::{gap_into, pool_into, shuffle_into};
+use crate::layer::{ConvConfig, LayerConfig, PoolConfig};
+use crate::machine::{Bases, Buffers, DecodedProgram};
+use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout};
+
+/// A compiled simple/depthwise conv executor: decoded trace, absolute
+/// schedule, packed weights, and the declared buffer sizes the schedule
+/// was validated against at prepare time.
+struct PreparedConv {
+    cfg: ConvConfig,
+    c: usize,
+    pad: usize,
+    prog: DecodedProgram,
+    sched: Vec<Bases>,
+    /// CKRSc bytes (simple conv) or tap-major packed bytes (depthwise).
+    /// Deliberately a private copy so the engine is self-contained and
+    /// immune to later plan mutation; sharing with the plan's
+    /// `Arc<PackedWeights>` is a known follow-up memory optimization.
+    weights: Vec<i8>,
+    /// Declared padded-input element count (in_channels · ih · iw).
+    in_elems: usize,
+    /// Declared accumulator element count.
+    acc_elems: usize,
+    num_regs: usize,
+}
+
+/// A compiled grouped-conv executor: one kernel + schedule shared by all
+/// groups, per-group packed weights, zero-copy group input/output slices.
+struct PreparedGrouped {
+    cfg: ConvConfig,
+    c: usize,
+    pad: usize,
+    groups: usize,
+    prog: DecodedProgram,
+    sched: Vec<Bases>,
+    group_weights: Vec<Vec<i8>>,
+    group_in_elems: usize,
+    group_out_elems: usize,
+    in_elems: usize,
+    acc_elems: usize,
+    num_regs: usize,
+}
+
+enum PreparedKind {
+    Conv(PreparedConv),
+    Depthwise(PreparedConv),
+    Grouped(PreparedGrouped),
+    Pool(PoolConfig),
+    Gap,
+    Shuffle { channels: usize, groups: usize },
+    /// ReLU: fused into requantization upstream; identity at execution.
+    Identity,
+}
+
+/// One compiled layer executor.
+pub struct PreparedLayer {
+    kind: PreparedKind,
+    /// Output element count from the plan (arena sizing only; runtime
+    /// shapes for scalar passes follow the incoming activation exactly
+    /// as the functional path does).
+    est_out_elems: usize,
+}
+
+/// A network compiled for repeated execution. See the module docs.
+pub struct PreparedNetwork {
+    pub name: String,
+    layers: Vec<PreparedLayer>,
+    max_act: usize,
+    max_padded: usize,
+    max_acc: usize,
+    num_regs: usize,
+}
+
+impl PreparedNetwork {
+    /// Compile a weight-bound plan. All plan-shaped failure modes (no
+    /// weights bound, wrong weight layout, schedule exceeding declared
+    /// bounds, unsupported layer kinds, invalid programs) surface here,
+    /// once — not per request.
+    pub fn prepare(plan: &NetworkPlan) -> crate::Result<PreparedNetwork> {
+        let mut layers = Vec::with_capacity(plan.layers.len());
+        let (mut max_act, mut max_padded, mut max_acc) = (0usize, 0usize, 0usize);
+        let mut num_regs = 32usize;
+        for lp in &plan.layers {
+            let prepared = prepare_layer(lp)?;
+            match &prepared.kind {
+                PreparedKind::Conv(pc) | PreparedKind::Depthwise(pc) => {
+                    max_padded = max_padded.max(pc.in_elems);
+                    max_acc = max_acc.max(pc.acc_elems);
+                    num_regs = num_regs.max(pc.num_regs);
+                }
+                PreparedKind::Grouped(pg) => {
+                    max_padded = max_padded.max(pg.in_elems);
+                    max_acc = max_acc.max(pg.acc_elems);
+                    num_regs = num_regs.max(pg.num_regs);
+                }
+                PreparedKind::Pool(p) => {
+                    max_padded = max_padded.max(p.channels * p.ih * p.iw);
+                }
+                _ => {}
+            }
+            max_act = max_act.max(prepared.est_out_elems);
+            layers.push(prepared);
+        }
+        Ok(PreparedNetwork {
+            name: plan.name.clone(),
+            layers,
+            max_act,
+            max_padded,
+            max_acc,
+            num_regs,
+        })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total VLoad→VMla pairs fused across all kernel traces
+    /// (diagnostics/tests).
+    pub fn fused_pairs(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match &l.kind {
+                PreparedKind::Conv(pc) | PreparedKind::Depthwise(pc) => pc.prog.fused_pairs,
+                PreparedKind::Grouped(pg) => pg.prog.fused_pairs,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// A fresh arena sized for this network (one per worker thread).
+    pub fn new_arena(&self) -> ExecArena {
+        ExecArena::with_capacity(self.max_act, self.max_padded, self.max_acc, self.num_regs)
+    }
+
+    /// Execute one image. Bit-identical to
+    /// [`crate::coordinator::run_network_functional`] on the plan this
+    /// was prepared from.
+    pub fn run(
+        &self,
+        input: &ActTensor,
+        shift: u32,
+        arena: &mut ExecArena,
+    ) -> crate::Result<ActTensor> {
+        let mut slot = 0usize;
+        let mut cur: Option<ActTensor> = None;
+        for layer in &self.layers {
+            let src = cur.as_ref().unwrap_or(input);
+            let out = match &layer.kind {
+                PreparedKind::Identity => None,
+                PreparedKind::Conv(pc) => Some(exec_conv(pc, src, shift, slot, arena)?),
+                PreparedKind::Depthwise(pc) => Some(exec_depthwise(pc, src, shift, slot, arena)?),
+                PreparedKind::Grouped(pg) => Some(exec_grouped(pg, src, shift, slot, arena)?),
+                PreparedKind::Pool(p) => Some(exec_pool(p, src, slot, arena)),
+                PreparedKind::Gap => {
+                    let mut out =
+                        arena.take_act(slot, ActShape::new(src.shape.channels, 1, 1), src.layout);
+                    gap_into(src, &mut out);
+                    Some(out)
+                }
+                PreparedKind::Shuffle { channels, groups } => {
+                    let mut out = arena.take_act(slot, src.shape, src.layout);
+                    shuffle_into(*channels, *groups, src, &mut out);
+                    Some(out)
+                }
+            };
+            if let Some(out) = out {
+                if let Some(prev) = cur.take() {
+                    arena.put_act(1 - slot, prev);
+                }
+                cur = Some(out);
+                slot ^= 1;
+            }
+        }
+        match cur {
+            Some(out) => {
+                // The result must outlive the arena: one clone per image
+                // (the arena keeps its buffer for the next image).
+                let result = out.clone();
+                arena.put_act(1 - slot, out);
+                Ok(result)
+            }
+            None => Ok(input.clone()),
+        }
+    }
+
+    /// Execute a coalesced batch, fanning images across up to `threads`
+    /// workers, each with a thread-local arena + register file. Results
+    /// keep submission order and are bit-identical to sequential
+    /// per-image [`PreparedNetwork::run`] calls — images are
+    /// independent, so parallelism cannot change bytes.
+    pub fn run_batch(
+        &self,
+        inputs: &[&ActTensor],
+        shift: u32,
+        threads: usize,
+    ) -> Vec<crate::Result<ActTensor>> {
+        let threads = threads.max(1).min(inputs.len().max(1));
+        if threads <= 1 {
+            let mut arena = self.new_arena();
+            return inputs.iter().map(|&i| self.run(i, shift, &mut arena)).collect();
+        }
+        let chunk = inputs.len().div_ceil(threads);
+        let chunk_results: Vec<Vec<crate::Result<ActTensor>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = inputs
+                .chunks(chunk)
+                .map(|part| {
+                    scope.spawn(move || {
+                        let mut arena = self.new_arena();
+                        part.iter().map(|&i| self.run(i, shift, &mut arena)).collect()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("prepared batch worker panicked"))
+                .collect()
+        });
+        chunk_results.into_iter().flatten().collect()
+    }
+}
+
+fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
+    match (&lp.layer, &lp.kind) {
+        (LayerConfig::Conv(cfg), PlanKind::Generated { prog, machine, pad, .. }) => {
+            let c = machine.c_int8();
+            let weights = lp.weights.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("no weights bound for {}", lp.layer.name())
+            })?;
+            anyhow::ensure!(
+                weights.layout == WeightLayout::CKRSc { c },
+                "weights for {} must be CKRSc with c={c}",
+                lp.layer.name()
+            );
+            anyhow::ensure!(
+                cfg.out_channels % c == 0,
+                "output channels {} of {} must align to block size {c}",
+                cfg.out_channels,
+                lp.layer.name()
+            );
+            // Def-before-use holds, so one register file can be reused
+            // across layers and images without leaking state.
+            crate::isa::validate(prog, machine.num_regs)?;
+            let dp = DecodedProgram::decode(prog);
+            let sched = crate::codegen::schedule(cfg, machine);
+            let in_elems = cfg.in_channels * cfg.h_size();
+            let acc_elems = cfg.out_channels * cfg.e_size();
+            for &b in &sched {
+                anyhow::ensure!(
+                    dp.bases_fit(b, in_elems, weights.data.len(), acc_elems),
+                    "program {} exceeds declared buffer bounds at {:?}",
+                    dp.name,
+                    b
+                );
+            }
+            Ok(PreparedLayer {
+                est_out_elems: acc_elems,
+                kind: PreparedKind::Conv(PreparedConv {
+                    cfg: *cfg,
+                    c,
+                    pad: *pad,
+                    prog: dp,
+                    sched,
+                    weights: weights.data.clone(),
+                    in_elems,
+                    acc_elems,
+                    num_regs: machine.num_regs,
+                }),
+            })
+        }
+        (LayerConfig::Conv(cfg), PlanKind::DepthwiseKernel { prog, machine, pad }) => {
+            let c = machine.c_int8();
+            let packed = lp.packed_weights(c)?;
+            let PackedWeights::Depthwise(packed) = &*packed else {
+                anyhow::bail!("packed-weight kind mismatch for {}", lp.layer.name());
+            };
+            crate::isa::validate(prog, machine.num_regs)?;
+            let dp = DecodedProgram::decode(prog);
+            let sched = crate::codegen::depthwise::schedule_depthwise(cfg, machine);
+            let in_elems = cfg.in_channels * cfg.h_size();
+            let acc_elems = cfg.in_channels * cfg.e_size();
+            for &b in &sched {
+                anyhow::ensure!(
+                    dp.bases_fit(b, in_elems, packed.len(), acc_elems),
+                    "program {} exceeds declared buffer bounds at {:?}",
+                    dp.name,
+                    b
+                );
+            }
+            Ok(PreparedLayer {
+                est_out_elems: acc_elems,
+                kind: PreparedKind::Depthwise(PreparedConv {
+                    cfg: *cfg,
+                    c,
+                    pad: *pad,
+                    prog: dp,
+                    sched,
+                    weights: packed.to_vec(),
+                    in_elems,
+                    acc_elems,
+                    num_regs: machine.num_regs,
+                }),
+            })
+        }
+        (LayerConfig::Conv(cfg), PlanKind::GroupedKernel { prog, machine, pad, groups, .. }) => {
+            let c = machine.c_int8();
+            let cpg = cfg.in_channels / groups;
+            anyhow::ensure!(cpg % c == 0, "group channels {cpg} must align to block size {c}");
+            anyhow::ensure!(
+                cfg.out_channels % c == 0,
+                "output channels {} of {} must align to block size {c}",
+                cfg.out_channels,
+                lp.layer.name()
+            );
+            let packed = lp.packed_weights(c)?;
+            let PackedWeights::Grouped(gws) = &*packed else {
+                anyhow::bail!("packed-weight kind mismatch for {}", lp.layer.name());
+            };
+            anyhow::ensure!(gws.len() == *groups, "expected {groups} packed weight groups");
+            crate::isa::validate(prog, machine.num_regs)?;
+            let dp = DecodedProgram::decode(prog);
+            let view = cfg.group_view();
+            let sched = crate::codegen::schedule(&view, machine);
+            let group_in_elems = view.in_channels * view.h_size();
+            let group_out_elems = view.out_channels * view.e_size();
+            let wlen = gws[0].data.len();
+            anyhow::ensure!(
+                gws.iter().all(|w| w.data.len() == wlen),
+                "packed weight groups differ in size"
+            );
+            for &b in &sched {
+                anyhow::ensure!(
+                    dp.bases_fit(b, group_in_elems, wlen, group_out_elems),
+                    "program {} exceeds declared buffer bounds at {:?}",
+                    dp.name,
+                    b
+                );
+            }
+            let acc_elems = cfg.out_channels * cfg.e_size();
+            Ok(PreparedLayer {
+                est_out_elems: acc_elems,
+                kind: PreparedKind::Grouped(PreparedGrouped {
+                    cfg: *cfg,
+                    c,
+                    pad: *pad,
+                    groups: *groups,
+                    prog: dp,
+                    sched,
+                    group_weights: gws.iter().map(|w| w.data.clone()).collect(),
+                    group_in_elems,
+                    group_out_elems,
+                    in_elems: cfg.in_channels * cfg.h_size(),
+                    acc_elems,
+                    num_regs: machine.num_regs,
+                }),
+            })
+        }
+        (LayerConfig::Pool(p), _) => Ok(PreparedLayer {
+            est_out_elems: p.channels * p.oh() * p.ow(),
+            kind: PreparedKind::Pool(*p),
+        }),
+        (LayerConfig::GlobalAvgPool { channels, .. }, _) => Ok(PreparedLayer {
+            est_out_elems: *channels,
+            kind: PreparedKind::Gap,
+        }),
+        (LayerConfig::ChannelShuffle { channels, h, w, groups }, _) => Ok(PreparedLayer {
+            est_out_elems: channels * h * w,
+            kind: PreparedKind::Shuffle { channels: *channels, groups: *groups },
+        }),
+        (LayerConfig::Relu { .. }, _) => {
+            Ok(PreparedLayer { est_out_elems: 0, kind: PreparedKind::Identity })
+        }
+        (l, k) => anyhow::bail!(
+            "prepared execution does not support {:?} with {:?}",
+            l.name(),
+            k.name()
+        ),
+    }
+}
+
+/// Stage `src` into the arena's padding buffer, spatially padded by
+/// `pad` and channel-extended to `cfg.in_channels` — identical bytes to
+/// `coordinator::pad_act`, but into a reused allocation.
+fn stage_padded(
+    cfg: &ConvConfig,
+    c: usize,
+    pad: usize,
+    src: &ActTensor,
+    arena: &mut ExecArena,
+) -> crate::Result<ActTensor> {
+    anyhow::ensure!(
+        src.shape.h + 2 * pad == cfg.ih && src.shape.w + 2 * pad == cfg.iw,
+        "input {}x{} with pad {pad} does not match layer input {}x{}",
+        src.shape.h,
+        src.shape.w,
+        cfg.ih,
+        cfg.iw
+    );
+    anyhow::ensure!(
+        src.shape.channels <= cfg.in_channels,
+        "input has {} channels, layer expects at most {}",
+        src.shape.channels,
+        cfg.in_channels
+    );
+    let mut padded =
+        arena.take_padded(ActShape::new(cfg.in_channels, cfg.ih, cfg.iw), ActLayout::NCHWc { c });
+    src.write_padded_into(pad, &mut padded);
+    Ok(padded)
+}
+
+/// Requantize+ReLU a k-major INT32 accumulator into an NCHWc activation
+/// in one pass — the same arithmetic as `quant::requantize_relu`
+/// (`(v >> shift).clamp(0, 127)`), fused into the output traversal.
+fn requant_conv_into(acc: &[i32], shift: u32, c: usize, out: &mut ActTensor) {
+    let e = out.shape.h * out.shape.w;
+    debug_assert_eq!(acc.len(), out.shape.channels * e);
+    for k in 0..out.shape.channels {
+        let (cb, ci) = (k / c, k % c);
+        let base = cb * e * c + ci;
+        for (pos, &v) in acc[k * e..(k + 1) * e].iter().enumerate() {
+            out.data[base + pos * c] = (v >> shift).clamp(0, 127) as i8;
+        }
+    }
+}
+
+/// Shared body of the simple-conv and depthwise executors: stage the
+/// padded input, zero the accumulator, run the full prevalidated
+/// schedule, return the staging buffer, and take the output tensor. The
+/// two kinds differ only in the requantize pass the caller applies to
+/// `arena.acc` afterwards.
+fn run_conv_kernel(
+    pc: &PreparedConv,
+    src: &ActTensor,
+    slot: usize,
+    arena: &mut ExecArena,
+) -> crate::Result<ActTensor> {
+    let padded = stage_padded(&pc.cfg, pc.c, pc.pad, src, arena)?;
+    debug_assert_eq!(padded.data.len(), pc.in_elems);
+    arena.reset_acc(pc.acc_elems);
+    {
+        let (interp, acc) = arena.interp_and_acc();
+        let mut bufs =
+            Buffers { input: &padded.data, weight: &pc.weights, output: acc.as_mut_slice() };
+        // Bounds were validated for the whole schedule at prepare time.
+        for &bases in &pc.sched {
+            interp.run_decoded(&pc.prog, &mut bufs, bases);
+        }
+    }
+    arena.put_padded(padded);
+    Ok(arena.take_act(
+        slot,
+        ActShape::new(pc.cfg.out_channels, pc.cfg.oh(), pc.cfg.ow()),
+        ActLayout::NCHWc { c: pc.c },
+    ))
+}
+
+fn exec_conv(
+    pc: &PreparedConv,
+    src: &ActTensor,
+    shift: u32,
+    slot: usize,
+    arena: &mut ExecArena,
+) -> crate::Result<ActTensor> {
+    let mut out = run_conv_kernel(pc, src, slot, arena)?;
+    requant_conv_into(&arena.acc, shift, pc.c, &mut out);
+    Ok(out)
+}
+
+fn exec_depthwise(
+    pc: &PreparedConv,
+    src: &ActTensor,
+    shift: u32,
+    slot: usize,
+    arena: &mut ExecArena,
+) -> crate::Result<ActTensor> {
+    let mut out = run_conv_kernel(pc, src, slot, arena)?;
+    // Position-major raw output coincides flat-index-wise with NCHWc.
+    crate::codegen::depthwise::dw_requantize_relu_into(&arena.acc, shift, &mut out);
+    Ok(out)
+}
+
+fn exec_grouped(
+    pg: &PreparedGrouped,
+    src: &ActTensor,
+    shift: u32,
+    slot: usize,
+    arena: &mut ExecArena,
+) -> crate::Result<ActTensor> {
+    let padded = stage_padded(&pg.cfg, pg.c, pg.pad, src, arena)?;
+    debug_assert_eq!(padded.data.len(), pg.in_elems);
+    arena.reset_acc(pg.acc_elems);
+    {
+        let (interp, acc) = arena.interp_and_acc();
+        for g in 0..pg.groups {
+            // Zero-copy slices: the group's input channels are contiguous
+            // in NCHWc, and its output channels are contiguous in the
+            // k-major accumulator.
+            let gin = &padded.data[g * pg.group_in_elems..(g + 1) * pg.group_in_elems];
+            let gout = &mut acc[g * pg.group_out_elems..(g + 1) * pg.group_out_elems];
+            let mut bufs = Buffers { input: gin, weight: &pg.group_weights[g], output: gout };
+            for &bases in &pg.sched {
+                interp.run_decoded(&pg.prog, &mut bufs, bases);
+            }
+        }
+    }
+    arena.put_padded(padded);
+    let mut out = arena.take_act(
+        slot,
+        ActShape::new(pg.cfg.out_channels, pg.cfg.oh(), pg.cfg.ow()),
+        ActLayout::NCHWc { c: pg.c },
+    );
+    requant_conv_into(&arena.acc, shift, pg.c, &mut out);
+    Ok(out)
+}
+
+fn exec_pool(p: &PoolConfig, src: &ActTensor, slot: usize, arena: &mut ExecArena) -> ActTensor {
+    // Same padding arithmetic as the functional path.
+    let pad = (p.ih - src.shape.h) / 2;
+    let out_shape = ActShape::new(p.channels, p.oh(), p.ow());
+    if pad == 0 {
+        let mut out = arena.take_act(slot, out_shape, src.layout);
+        pool_into(p, src, &mut out);
+        out
+    } else {
+        let mut staged = arena.take_padded(
+            ActShape::new(src.shape.channels, src.shape.h + 2 * pad, src.shape.w + 2 * pad),
+            src.layout,
+        );
+        src.write_padded_into(pad, &mut staged);
+        let mut out = arena.take_act(slot, out_shape, src.layout);
+        pool_into(p, &staged, &mut out);
+        arena.put_padded(staged);
+        out
+    }
+}

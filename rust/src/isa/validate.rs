@@ -15,17 +15,38 @@
 use super::{Mode, Program, VInstr};
 
 /// Validation failure.
-#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+///
+/// `Display` + `std::error::Error` are implemented by hand: `thiserror`
+/// is not available offline and the crate deliberately depends on
+/// `anyhow` alone.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ValidationError {
-    #[error("instruction {pc}: register v{reg} read before any write")]
     UseBeforeDef { pc: usize, reg: u8 },
-    #[error("program needs {needed} registers, machine has {available}")]
     TooManyRegisters { needed: usize, available: usize },
-    #[error("instruction {pc}: {what} not allowed in {mode:?} mode")]
     ModeMismatch { pc: usize, what: &'static str, mode: Mode },
-    #[error("instruction {pc}: store to read-only operand buffer")]
     StoreToOperand { pc: usize },
 }
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValidationError::UseBeforeDef { pc, reg } => {
+                write!(f, "instruction {pc}: register v{reg} read before any write")
+            }
+            ValidationError::TooManyRegisters { needed, available } => {
+                write!(f, "program needs {needed} registers, machine has {available}")
+            }
+            ValidationError::ModeMismatch { pc, what, mode } => {
+                write!(f, "instruction {pc}: {what} not allowed in {mode:?} mode")
+            }
+            ValidationError::StoreToOperand { pc } => {
+                write!(f, "instruction {pc}: store to read-only operand buffer")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ValidationError {}
 
 /// Validate def-before-use, register-file fit, and mode consistency.
 pub fn validate(prog: &Program, num_regs: usize) -> Result<(), ValidationError> {

@@ -38,6 +38,11 @@
 //! * [`coordinator`] — the serving engine: per-layer plan selection with
 //!   a process-wide plan cache (memoized exploration), a batched request
 //!   scheduler over a worker pool, and latency/batching metrics.
+//! * [`exec`] — the prepared execution engine: plans compile once into
+//!   per-layer executors (pre-validated schedules, pre-decoded micro-op
+//!   traces, pre-packed weights, ping-pong activation arenas, fused
+//!   requantization), then execute per image with no plan-derived work —
+//!   bit-identical to the functional path, parallel across a batch.
 //! * [`runtime`] — PJRT (via the `xla` crate, behind the `pjrt` feature)
 //!   loader that executes the AOT-lowered JAX/Pallas artifacts for
 //!   numeric cross-validation.
@@ -55,6 +60,7 @@ pub mod baselines;
 pub mod explore;
 pub mod nets;
 pub mod coordinator;
+pub mod exec;
 pub mod runtime;
 pub mod report;
 

@@ -84,6 +84,64 @@ impl Interp {
         }
     }
 
+    /// Execute a pre-decoded micro-op trace ([`DecodedProgram`]): same
+    /// semantics as [`Interp::run_fast`] on the source program, with
+    /// per-instruction dispatch amortized by the decode-time fusion.
+    /// Callers MUST have validated bounds for this (trace, buffers,
+    /// bases) triple (e.g. [`DecodedProgram::bases_fit`] over a whole
+    /// schedule at prepare time); `debug_assert`s re-check here.
+    pub fn run_decoded(&mut self, dp: &DecodedProgram, bufs: &mut Buffers, bases: Bases) {
+        debug_assert!(dp.bounds_ok(bufs, bases));
+        assert!(dp.regs_used <= self.num_regs);
+        match dp.mode {
+            Mode::Int8 => {
+                let lanes = &mut self.lanes[..];
+                let in_ptr = unsafe { bufs.input.as_ptr().add(bases.input as usize) };
+                let wgt_ptr = unsafe { bufs.weight.as_ptr().add(bases.weight as usize) };
+                for op in &dp.ops {
+                    match *op {
+                        // SAFETY: same contract as the instruction step —
+                        // offsets validated by the caller, register ids
+                        // bounded by the regs_used assert above.
+                        MicroOp::LoadMla { dst, buf, off, acc, other } => unsafe {
+                            let src = match buf {
+                                Buf::In => in_ptr.add(off as usize),
+                                Buf::Wgt => wgt_ptr.add(off as usize),
+                                Buf::Out => unreachable!("VLoad from Out"),
+                            };
+                            let (d, a, o) = (
+                                dst as usize * I8_LANES,
+                                acc as usize * I8_LANES,
+                                other as usize * I8_LANES,
+                            );
+                            for l in 0..I8_LANES {
+                                let v = *src.add(l) as i32;
+                                // The loaded register is still written, so
+                                // fusion stays invisible to later readers.
+                                *lanes.get_unchecked_mut(d + l) = v;
+                                let m = v * *lanes.get_unchecked(o + l);
+                                *lanes.get_unchecked_mut(a + l) += m;
+                            }
+                        },
+                        MicroOp::Op(ref instr) => {
+                            Self::step_int8_fast(lanes, bufs, bases, in_ptr, wgt_ptr, instr)
+                        }
+                    }
+                }
+            }
+            Mode::Binary => {
+                for op in &dp.ops {
+                    match op {
+                        MicroOp::Op(instr) => self.step_binary(instr, bufs, bases),
+                        MicroOp::LoadMla { .. } => {
+                            unreachable!("decode never fuses in Binary mode")
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     fn run_int8_fast(&mut self, prog: &Program, bufs: &mut Buffers, bases: Bases) {
         let lanes = &mut self.lanes[..];
         // Hoist the per-buffer base pointers out of the dispatch loop
@@ -94,7 +152,27 @@ impl Interp {
         // buffer offsets were validated via bounds_ok; all lane indices
         // are reg*16+l with l < 16.
         for instr in &prog.instrs {
-            match *instr {
+            Self::step_int8_fast(lanes, bufs, bases, in_ptr, wgt_ptr, instr);
+        }
+    }
+
+    /// One INT8 fast-path instruction; shared by [`Interp::run_fast`]
+    /// and the decoded-trace executor ([`Interp::run_decoded`]).
+    ///
+    /// Soundness contract (enforced by callers, as in `run_fast`): the
+    /// buffer bounds of the instruction stream under `bases` have been
+    /// validated, `in_ptr`/`wgt_ptr` are derived from `bufs` at those
+    /// bases, and register ids fit the lane buffer.
+    #[inline(always)]
+    fn step_int8_fast(
+        lanes: &mut [i32],
+        bufs: &mut Buffers,
+        bases: Bases,
+        in_ptr: *const i8,
+        wgt_ptr: *const i8,
+        instr: &VInstr,
+    ) {
+        match *instr {
                 VInstr::VLoad { dst, buf, off } => unsafe {
                     let src = match buf {
                         Buf::In => in_ptr.add(off as usize),
@@ -180,7 +258,6 @@ impl Interp {
                     // (none exist in Int8 mode today; defensive).
                     panic!("unsupported instruction in Int8 fast path: {instr:?}")
                 }
-            }
         }
     }
 
@@ -264,8 +341,16 @@ impl Interp {
     }
 
     fn run_binary(&mut self, prog: &Program, bufs: &mut Buffers, bases: Bases) {
-        let bits = &mut self.bits;
         for instr in &prog.instrs {
+            self.step_binary(instr, bufs, bases);
+        }
+    }
+
+    /// One Binary-mode instruction; shared by [`Interp::run`] and the
+    /// decoded-trace executor ([`Interp::run_decoded`]).
+    fn step_binary(&mut self, instr: &VInstr, bufs: &mut Buffers, bases: Bases) {
+        let bits = &mut self.bits;
+        {
             match *instr {
                 VInstr::VLoad { dst, buf, off } => {
                     let src: &[i8] = match buf {
@@ -318,6 +403,107 @@ impl Interp {
                 other => panic!("instruction {other:?} not defined in Binary mode"),
             }
         }
+    }
+}
+
+/// One element of a pre-decoded micro-op trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MicroOp {
+    /// Fused `VLoad { dst, buf, off }` + `VMla { acc, .. }` where the MLA
+    /// consumes the just-loaded register: widen-load into `dst` and
+    /// `acc += dst * other` in a single lane pass. The load's register
+    /// write still happens, so the fusion is semantically invisible even
+    /// when a later instruction re-reads `dst`.
+    LoadMla { dst: u8, buf: Buf, off: u32, acc: u8, other: u8 },
+    /// Any other instruction, executed exactly as the fast path does.
+    Op(VInstr),
+}
+
+/// A [`Program`] pre-decoded into a flat micro-op trace (§Perf).
+///
+/// Decoding runs once at *prepare* time (see `crate::exec`), paying the
+/// instruction-pairing analysis up front so the per-request hot loop
+/// dispatches over fewer, fatter micro-ops: the dominant VLoad→VMla pair
+/// of conv kernels becomes one [`MicroOp::LoadMla`]. Fusion only
+/// triggers for adjacent pairs, so it fires for 128-bit vector variables
+/// (one physical register per logical op); wider variables interleave
+/// the expanded register ops and are left unfused — still correct, just
+/// unpaired. Binary-mode programs decode 1:1 (no fusion).
+///
+/// Execution via [`Interp::run_decoded`] is bit-identical to
+/// [`Interp::run`] / [`Interp::run_fast`] on the source program
+/// (`exec_equivalence` integration test).
+#[derive(Clone, Debug)]
+pub struct DecodedProgram {
+    pub name: String,
+    pub mode: Mode,
+    pub regs_used: usize,
+    /// How many VLoad→VMla pairs decode fused (diagnostics/tests).
+    pub fused_pairs: usize,
+    ops: Vec<MicroOp>,
+    /// Max byte/element offsets of the source program, cached so a whole
+    /// invocation schedule can be bounds-checked in O(schedule).
+    max_in: usize,
+    max_wgt: usize,
+    max_out: usize,
+}
+
+impl DecodedProgram {
+    pub fn decode(prog: &Program) -> DecodedProgram {
+        let mut ops = Vec::with_capacity(prog.instrs.len());
+        let mut fused = 0usize;
+        let mut i = 0;
+        while i < prog.instrs.len() {
+            if prog.mode == Mode::Int8 && i + 1 < prog.instrs.len() {
+                if let (VInstr::VLoad { dst, buf, off }, VInstr::VMla { acc, a, b }) =
+                    (prog.instrs[i], prog.instrs[i + 1])
+                {
+                    if acc != dst && (a == dst || b == dst) {
+                        let other = if a == dst { b } else { a };
+                        ops.push(MicroOp::LoadMla { dst, buf, off, acc, other });
+                        fused += 1;
+                        i += 2;
+                        continue;
+                    }
+                }
+            }
+            ops.push(MicroOp::Op(prog.instrs[i]));
+            i += 1;
+        }
+        DecodedProgram {
+            name: prog.name.clone(),
+            mode: prog.mode,
+            regs_used: prog.regs_used,
+            fused_pairs: fused,
+            ops,
+            max_in: prog.max_offset(Buf::In).unwrap_or(0) as usize,
+            max_wgt: prog.max_offset(Buf::Wgt).unwrap_or(0) as usize,
+            max_out: prog.max_offset(Buf::Out).unwrap_or(0) as usize,
+        }
+    }
+
+    /// Number of micro-ops in the trace.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// O(1) check that one invocation stays inside buffers of the given
+    /// lengths — the prepare-time form of [`Interp::bounds_ok`], usable
+    /// before any data is materialized (lengths come from the plan's
+    /// declared buffer sizes).
+    pub fn bases_fit(&self, bases: Bases, in_len: usize, wgt_len: usize, out_len: usize) -> bool {
+        bases.input as usize + self.max_in <= in_len
+            && bases.weight as usize + self.max_wgt <= wgt_len
+            && bases.output as usize + self.max_out <= out_len
+    }
+
+    /// [`DecodedProgram::bases_fit`] against bound buffers.
+    pub fn bounds_ok(&self, bufs: &Buffers, bases: Bases) -> bool {
+        self.bases_fit(bases, bufs.input.len(), bufs.weight.len(), bufs.output.len())
     }
 }
 
@@ -459,6 +645,87 @@ mod tests {
         );
         // all lanes disagree: dot = -128
         assert_eq!(output[0], 128 - 2 * 128);
+    }
+
+    #[test]
+    fn decoded_trace_fuses_load_mla_and_matches_run() {
+        let prog = Program::new(
+            "fuse",
+            Mode::Int8,
+            vec![
+                VInstr::VDupZero { dst: 2 },
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VLoad { dst: 1, buf: Buf::Wgt, off: 0 },
+                VInstr::VMla { acc: 2, a: 0, b: 1 },
+                VInstr::RedSumStore { src: 2, off: 0 },
+            ],
+        );
+        let dp = DecodedProgram::decode(&prog);
+        assert_eq!(dp.fused_pairs, 1);
+        assert_eq!(dp.len(), 4); // 5 instrs, one pair fused
+        let input: Vec<i8> = (0..16).map(|i| i as i8 - 5).collect();
+        let weight: Vec<i8> = (0..16).map(|i| (2 * i) as i8).collect();
+        let mut want = vec![0i32];
+        Interp::new(4).run(
+            &prog,
+            &mut Buffers { input: &input, weight: &weight, output: &mut want },
+            Bases::default(),
+        );
+        let mut got = vec![0i32];
+        Interp::new(4).run_decoded(
+            &dp,
+            &mut Buffers { input: &input, weight: &weight, output: &mut got },
+            Bases::default(),
+        );
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn decode_refuses_fusion_when_mla_overwrites_loaded_reg() {
+        let prog = Program::new(
+            "nofuse",
+            Mode::Int8,
+            vec![
+                VInstr::VDupZero { dst: 0 },
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VMla { acc: 0, a: 0, b: 0 },
+            ],
+        );
+        let dp = DecodedProgram::decode(&prog);
+        assert_eq!(dp.fused_pairs, 0);
+        assert_eq!(dp.len(), 3);
+    }
+
+    #[test]
+    fn decoded_binary_is_one_to_one_and_matches_run() {
+        let prog = Program::new(
+            "bdec",
+            Mode::Binary,
+            vec![
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VLoad { dst: 1, buf: Buf::Wgt, off: 0 },
+                VInstr::VXor { dst: 2, a: 0, b: 1 },
+                VInstr::PopcntAcc { src: 2, off: 0, scale: -2, bias: 128 },
+            ],
+        );
+        let dp = DecodedProgram::decode(&prog);
+        assert_eq!(dp.fused_pairs, 0);
+        assert_eq!(dp.len(), 4);
+        let input = vec![-86i8; 16]; // 0xAA pattern
+        let weight = vec![15i8; 16];
+        let mut want = vec![7i32];
+        Interp::new(4).run(
+            &prog,
+            &mut Buffers { input: &input, weight: &weight, output: &mut want },
+            Bases::default(),
+        );
+        let mut got = vec![7i32];
+        Interp::new(4).run_decoded(
+            &dp,
+            &mut Buffers { input: &input, weight: &weight, output: &mut got },
+            Bases::default(),
+        );
+        assert_eq!(want, got);
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod cache;
 pub mod interp;
 pub mod perf;
 
-pub use interp::{Buffers, Interp};
+pub use interp::{Buffers, DecodedProgram, Interp, MicroOp};
 pub use perf::{CostModel, PerfStats, PerfModel};
 
 /// Machine configuration (the paper's §II-E register-file terms).

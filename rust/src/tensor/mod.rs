@@ -90,6 +90,45 @@ impl ActTensor {
         (out, moved)
     }
 
+    /// Write this tensor into `out` — which MUST be zero-filled — at
+    /// spatial offset `pad` on each side; channels beyond
+    /// `self.shape.channels` stay zero (channel extension). This is the
+    /// allocation-free form of spatial+channel padding the prepared
+    /// execution engine stages into its arena; `coordinator::pad_act`
+    /// uses it too, so both paths produce identical bytes.
+    ///
+    /// Matching NCHWc block layouts take a contiguous row-copy fast
+    /// path; anything else falls back to element-wise indexing.
+    pub fn write_padded_into(&self, pad: usize, out: &mut ActTensor) {
+        assert_eq!(out.shape.h, self.shape.h + 2 * pad, "padded height mismatch");
+        assert_eq!(out.shape.w, self.shape.w + 2 * pad, "padded width mismatch");
+        assert!(out.shape.channels >= self.shape.channels, "cannot drop channels");
+        if let (ActLayout::NCHWc { c: oc }, ActLayout::NCHWc { c: sc }) =
+            (out.layout, self.layout)
+        {
+            if oc == sc && self.shape.channels % oc == 0 {
+                let row = self.shape.w * oc;
+                for cb in 0..self.shape.channels / oc {
+                    for y in 0..self.shape.h {
+                        let src = self.layout.block_base(&self.shape, cb)
+                            + self.layout.in_block_offset(&self.shape, y, 0);
+                        let dst = out.layout.block_base(&out.shape, cb)
+                            + out.layout.in_block_offset(&out.shape, y + pad, pad);
+                        out.data[dst..dst + row].copy_from_slice(&self.data[src..src + row]);
+                    }
+                }
+                return;
+            }
+        }
+        for ch in 0..self.shape.channels {
+            for y in 0..self.shape.h {
+                for x in 0..self.shape.w {
+                    out.set(ch, y + pad, x + pad, self.get(ch, y, x));
+                }
+            }
+        }
+    }
+
     /// Zero-pad spatially by `pad` on each side, preserving layout.
     /// Conv codegen assumes pre-padded inputs (padding handled at tensor
     /// materialization, not inside generated kernels).
@@ -220,6 +259,20 @@ mod tests {
         assert_eq!(p.shape.h, 4);
         assert_eq!(p.get(1, 0, 0), 0); // border is zero
         assert_eq!(p.get(1, 1, 1), t.get(1, 0, 0));
+    }
+
+    #[test]
+    fn write_padded_into_matches_pad_spatial() {
+        let t = ActTensor::random(ActShape::new(8, 3, 4), ActLayout::NCHWc { c: 4 }, 11);
+        let want = t.pad_spatial(2);
+        let mut got = ActTensor::zeros(want.shape, t.layout);
+        t.write_padded_into(2, &mut got);
+        assert_eq!(got.data, want.data);
+        // Channel extension (generic path): target block size differs.
+        let mut wide = ActTensor::zeros(ActShape::new(16, 7, 8), ActLayout::NCHWc { c: 16 });
+        t.write_padded_into(2, &mut wide);
+        assert_eq!(wide.get(2, 2, 2), t.get(2, 0, 0));
+        assert_eq!(wide.get(12, 3, 3), 0); // extended channel stays zero
     }
 
     #[test]

@@ -13,13 +13,21 @@ pub struct Config {
     sections: BTreeMap<String, BTreeMap<String, String>>,
 }
 
-/// Parse error with line information.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("config parse error at line {line}: {msg}")]
+/// Parse error with line information. (`Display`/`Error` by hand —
+/// `thiserror` is not an available dependency offline.)
+#[derive(Debug, PartialEq)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Config {
     /// Parse from text.

@@ -22,7 +22,8 @@ fn bound_plan(machine: MachineConfig) -> NetworkPlan {
     for (layer, pad) in layers {
         let mut lp = planner.plan_layer(&layer, pad);
         if let LayerConfig::Conv(cfg) = &lp.layer {
-            lp.weights = Some(WeightTensor::random(
+            let cfg = *cfg; // end the borrow of lp.layer before bind_weights
+            lp.bind_weights(WeightTensor::random(
                 WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
                 WeightLayout::CKRSc { c },
                 seed,
@@ -138,8 +139,9 @@ fn shufflenet_stage_runs_functionally() {
         };
         let mut lp = planner.plan_layer(layer, pad);
         if let LayerConfig::Conv(cfg) = &lp.layer {
+            let cfg = *cfg; // end the borrow of lp.layer before bind_weights
             let in_ch = cfg.in_channels_per_group();
-            lp.weights = Some(WeightTensor::random(
+            lp.bind_weights(WeightTensor::random(
                 WeightShape::new(in_ch, cfg.out_channels, cfg.fh, cfg.fw),
                 if cfg.groups == cfg.in_channels {
                     yflows::tensor::WeightLayout::CKRS

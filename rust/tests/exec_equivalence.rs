@@ -1,0 +1,308 @@
+//! Integration: the prepared execution engine is bit-identical to the
+//! seed functional path on every kernel kind.
+//!
+//! * Decoded micro-op traces (with VLoad→VMla fusion) reproduce the
+//!   seed `run_conv` accumulators exactly for basic OS/IS/WS and the
+//!   extended/jammed kernels, and for binary XNOR kernels.
+//! * A prepared mixed network (simple conv, depthwise, shuffle, grouped,
+//!   pool, gap) matches `run_network_functional` byte-for-byte.
+//! * Property: arena reuse never leaks activation state between
+//!   consecutive images — an image's output does not depend on what ran
+//!   through the arena before it.
+//! * Parallel `run_batch` is bit-identical to sequential execution.
+
+use yflows::codegen::{self, basic, binary, run_conv};
+use yflows::coordinator::{
+    self,
+    plan::{NetworkPlan, Planner, PlannerOptions},
+};
+use yflows::dataflow::DataflowSpec;
+use yflows::exec::PreparedNetwork;
+use yflows::isa::Program;
+use yflows::layer::{ConvConfig, LayerConfig, PoolConfig};
+use yflows::machine::{Buffers, DecodedProgram, Interp, MachineConfig};
+use yflows::quant::{pack_binary_act, pack_binary_wgt};
+use yflows::tensor::{
+    ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor,
+};
+use yflows::util::rng::Rng;
+
+const SHIFT: u32 = 9;
+
+/// Run a program over a layer via the decoded trace and compare the raw
+/// INT32 accumulator with the seed `run_conv` path.
+fn assert_decoded_matches_run_conv(prog: &Program, cfg: &ConvConfig, machine: &MachineConfig) {
+    let c = machine.c_int8();
+    let input = ActTensor::random(
+        ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+        ActLayout::NCHWc { c },
+        71,
+    );
+    let weights = WeightTensor::random(
+        WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+        WeightLayout::CKRSc { c },
+        72,
+    );
+    let want = run_conv(prog, cfg, machine, &input, &weights);
+
+    let dp = DecodedProgram::decode(prog);
+    let mut acc = vec![0i32; cfg.out_channels * cfg.e_size()];
+    let mut interp = Interp::new(machine.num_regs);
+    for bases in codegen::schedule(cfg, machine) {
+        assert!(dp.bases_fit(bases, input.data.len(), weights.data.len(), acc.len()));
+        interp.run_decoded(
+            &dp,
+            &mut Buffers { input: &input.data, weight: &weights.data, output: &mut acc },
+            bases,
+        );
+    }
+    assert_eq!(acc, want.data, "decoded trace diverges for {}", prog.name);
+}
+
+#[test]
+fn decoded_matches_run_conv_for_basic_os_is_ws() {
+    let machine = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 4);
+    for prog in [
+        basic::gen_os(&cfg, &machine),
+        basic::gen_is(&cfg, &machine),
+        basic::gen_ws(&cfg, &machine),
+    ] {
+        assert_decoded_matches_run_conv(&prog, &cfg, &machine);
+    }
+}
+
+#[test]
+fn decoded_matches_run_conv_for_extended_and_stride2() {
+    let machine = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 4);
+    let ext = codegen::generate(
+        &cfg,
+        &DataflowSpec::optimized_os(&machine, cfg.r_size()),
+        &machine,
+    );
+    assert_decoded_matches_run_conv(&ext, &cfg, &machine);
+    // Fusion must actually fire on a 128-bit extended-OS kernel.
+    assert!(
+        DecodedProgram::decode(&ext).fused_pairs > 0,
+        "expected VLoad→VMla fusion in {}",
+        ext.name
+    );
+    let s2 = ConvConfig::simple(9, 9, 3, 3, 2, 16, 4);
+    let prog = codegen::generate(
+        &s2,
+        &DataflowSpec::optimized_os(&machine, s2.r_size()),
+        &machine,
+    );
+    assert_decoded_matches_run_conv(&prog, &s2, &machine);
+    // Wide vector variables (multi-register ops) must stay correct too.
+    let m256 = MachineConfig::neon(256);
+    let cfg256 = ConvConfig::simple(8, 8, 3, 3, 1, 32, 4);
+    let prog256 = codegen::generate(
+        &cfg256,
+        &DataflowSpec::optimized_os(&m256, cfg256.r_size()),
+        &m256,
+    );
+    assert_decoded_matches_run_conv(&prog256, &cfg256, &m256);
+}
+
+#[test]
+fn decoded_matches_interp_for_binary_kernels() {
+    let machine = MachineConfig::neon(128);
+    let c_bits = machine.c_binary();
+    let cfg = ConvConfig::simple(6, 6, 3, 3, 1, c_bits, 4);
+    let mut rng = Rng::new(5);
+    let mut input = ActTensor::zeros(
+        ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+        ActLayout::NCHWc { c: c_bits },
+    );
+    for v in input.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let mut weights = WeightTensor::zeros(
+        WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+        WeightLayout::CKRSc { c: c_bits },
+    );
+    for v in weights.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let pin = pack_binary_act(&input, c_bits);
+    let pw = pack_binary_wgt(&weights, c_bits);
+    for prog in [binary::gen_binary_os(&cfg, &machine), binary::gen_binary_ws(&cfg, &machine)] {
+        let want = binary::run_conv_binary(&prog, &cfg, &machine, &pin, &pw);
+        let dp = DecodedProgram::decode(&prog);
+        assert_eq!(dp.fused_pairs, 0, "binary decode must be 1:1");
+        let mut acc = vec![0i32; cfg.out_channels * cfg.e_size()];
+        let mut interp = Interp::new(machine.num_regs);
+        for bases in binary::schedule_binary(&cfg, &machine) {
+            interp.run_decoded(
+                &dp,
+                &mut Buffers { input: &pin, weight: &pw, output: &mut acc },
+                bases,
+            );
+        }
+        assert_eq!(acc, want.data, "binary decoded trace diverges for {}", prog.name);
+    }
+}
+
+/// A mixed network exercising every prepared kernel kind: simple conv →
+/// depthwise → channel shuffle → grouped conv → max pool → GAP.
+fn mixed_plan(machine: MachineConfig) -> NetworkPlan {
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut layers = Vec::new();
+
+    // 8x8x16 input, pad 1 → 8x8x32.
+    let conv = ConvConfig::simple(10, 10, 3, 3, 1, 16, 32);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(conv), 1);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(16, 32, 3, 3),
+        WeightLayout::CKRSc { c },
+        801,
+    ));
+    layers.push(lp);
+
+    // Depthwise 3x3, pad 1, 32 ch.
+    let dw = ConvConfig::depthwise(10, 10, 3, 3, 1, 32);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(dw), 1);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(1, 32, 3, 3),
+        WeightLayout::CKRS,
+        802,
+    ));
+    layers.push(lp);
+
+    // Channel shuffle between grouped stages.
+    layers.push(planner.plan_layer(
+        &LayerConfig::ChannelShuffle { channels: 32, h: 8, w: 8, groups: 2 },
+        0,
+    ));
+
+    // Grouped conv: 2 groups of 16 channels (block-aligned for c=16).
+    let grouped = ConvConfig::grouped(10, 10, 3, 3, 1, 32, 32, 2);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(grouped), 1);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(16, 32, 3, 3),
+        WeightLayout::CKRSc { c },
+        803,
+    ));
+    layers.push(lp);
+
+    // Max pool 2x2 s2 → 4x4, then GAP.
+    layers.push(planner.plan_layer(&LayerConfig::Pool(PoolConfig::max(32, 8, 8, 2, 2)), 0));
+    layers.push(planner.plan_layer(&LayerConfig::GlobalAvgPool { channels: 32, h: 4, w: 4 }, 0));
+
+    NetworkPlan { name: "mixed-kinds".into(), layers }
+}
+
+fn mixed_input(seed: u64) -> ActTensor {
+    ActTensor::random(ActShape::new(16, 8, 8), ActLayout::NCHWc { c: 16 }, seed)
+}
+
+#[test]
+fn prepared_network_matches_functional_on_all_kinds() {
+    let machine = MachineConfig::neon(128);
+    let plan = mixed_plan(machine);
+    let prepared = PreparedNetwork::prepare(&plan).expect("prepare");
+    assert_eq!(prepared.num_layers(), plan.layers.len());
+    assert!(prepared.fused_pairs() > 0, "conv kernels should fuse VLoad→VMla");
+    let mut arena = prepared.new_arena();
+    for seed in 0..4u64 {
+        let input = mixed_input(seed);
+        let want = coordinator::run_network_functional(&plan, &input, SHIFT).expect("functional");
+        let got = prepared.run(&input, SHIFT, &mut arena).expect("prepared");
+        assert_eq!(got.shape, want.shape, "shape diverges for image {seed}");
+        assert_eq!(got.layout, want.layout, "layout diverges for image {seed}");
+        assert_eq!(got.data, want.data, "bytes diverge for image {seed}");
+    }
+}
+
+#[test]
+fn prepared_handles_stem_channel_padding() {
+    // 3-channel stem input, extended to the block-padded 16 channels —
+    // exercises the generic write_padded_into path end to end.
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let conv = ConvConfig::simple(8, 8, 3, 3, 1, 3, 16); // planner pads C 3→16
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(conv), 1);
+    let padded_c = match &lp.layer {
+        LayerConfig::Conv(cfg) => cfg.in_channels,
+        _ => unreachable!(),
+    };
+    assert_eq!(padded_c, 16);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(16, 16, 3, 3),
+        WeightLayout::CKRSc { c },
+        804,
+    ));
+    let plan = NetworkPlan { name: "stem".into(), layers: vec![lp] };
+    let prepared = PreparedNetwork::prepare(&plan).expect("prepare");
+    let mut arena = prepared.new_arena();
+    let input = ActTensor::random(ActShape::new(3, 6, 6), ActLayout::NCHWc { c: 3 }, 55);
+    let want = coordinator::run_network_functional(&plan, &input, SHIFT).unwrap();
+    let got = prepared.run(&input, SHIFT, &mut arena).unwrap();
+    assert_eq!(got.data, want.data);
+}
+
+#[test]
+fn arena_reuse_never_leaks_state_between_images() {
+    // Property: for a batch of distinct images run through ONE arena in
+    // sequence, every output equals the output of the same image run
+    // through a FRESH arena (and the functional reference). If any
+    // buffer retained state across images, the shared-arena results
+    // would diverge.
+    let machine = MachineConfig::neon(128);
+    let plan = mixed_plan(machine);
+    let prepared = PreparedNetwork::prepare(&plan).unwrap();
+    let n = 6u64;
+    let mut shared_arena = prepared.new_arena();
+    for seed in 0..n {
+        // Interleave wildly different images to maximize leak surface.
+        let input = if seed % 2 == 0 {
+            mixed_input(seed)
+        } else {
+            let mut t = mixed_input(seed);
+            t.data.fill(127);
+            t
+        };
+        let shared = prepared.run(&input, SHIFT, &mut shared_arena).unwrap();
+        let fresh = prepared.run(&input, SHIFT, &mut prepared.new_arena()).unwrap();
+        assert_eq!(shared.data, fresh.data, "arena leaked state into image {seed}");
+        let functional = coordinator::run_network_functional(&plan, &input, SHIFT).unwrap();
+        assert_eq!(shared.data, functional.data, "image {seed} diverges from functional");
+    }
+}
+
+#[test]
+fn parallel_run_batch_is_bit_identical_to_sequential() {
+    let machine = MachineConfig::neon(128);
+    let plan = mixed_plan(machine);
+    let prepared = PreparedNetwork::prepare(&plan).unwrap();
+    let inputs: Vec<ActTensor> = (0..10).map(mixed_input).collect();
+    let refs: Vec<&ActTensor> = inputs.iter().collect();
+    let sequential = prepared.run_batch(&refs, SHIFT, 1);
+    let parallel = prepared.run_batch(&refs, SHIFT, 4);
+    assert_eq!(sequential.len(), parallel.len());
+    for (i, (s, p)) in sequential.into_iter().zip(parallel).enumerate() {
+        assert_eq!(
+            s.unwrap().data,
+            p.unwrap().data,
+            "parallel batch diverges at image {i}"
+        );
+    }
+}
+
+#[test]
+fn prepared_batch_matches_unprepared_reference_batch() {
+    let machine = MachineConfig::neon(128);
+    let plan = mixed_plan(machine);
+    let prepared = PreparedNetwork::prepare(&plan).unwrap();
+    let inputs: Vec<ActTensor> = (20..26).map(mixed_input).collect();
+    let refs: Vec<&ActTensor> = inputs.iter().collect();
+    let seed_path = coordinator::run_network_batch(&plan, &refs, SHIFT);
+    let prepared_path = prepared.run_batch(&refs, SHIFT, 3);
+    for (i, (a, b)) in seed_path.into_iter().zip(prepared_path).enumerate() {
+        assert_eq!(a.unwrap().data, b.unwrap().data, "image {i} diverges");
+    }
+}

@@ -32,7 +32,7 @@ fn two_layer_plan(machine: MachineConfig) -> NetworkPlan {
     let mut seed = 900;
     for (cfg, pad) in specs {
         let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), pad);
-        lp.weights = Some(WeightTensor::random(
+        lp.bind_weights(WeightTensor::random(
             WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
             WeightLayout::CKRSc { c },
             seed,
@@ -69,6 +69,7 @@ fn concurrent_submissions_all_answered_batched_and_bit_identical() {
         max_batch: MAX_BATCH,
         batch_deadline: Duration::from_millis(20),
         requant_shift: SHIFT,
+        exec_threads: 2,
     };
     let server = Server::start_with(plan, config);
 
@@ -123,6 +124,7 @@ fn backlog_behind_single_worker_coalesces() {
         // inside it, so the batcher fills batches to max_batch.
         batch_deadline: Duration::from_millis(200),
         requant_shift: SHIFT,
+        exec_threads: 2,
     };
     let server = Server::start_with(two_layer_plan(machine), config);
     let mut pending = Vec::new();
