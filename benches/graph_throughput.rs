@@ -1,0 +1,188 @@
+//! Bench: graph-IR serving — the true ResNet topology (projection
+//! branch + residual Add nodes) vs the flattened chain approximation
+//! the model zoo used to execute (main path only, shortcuts dropped).
+//!
+//! Measures, on the prepared execution engine:
+//!
+//! * **DAG path** — `nets::resnet_prefix` (stem + basic blocks with
+//!   identity *and* projection shortcuts), prepared and batched;
+//! * **chain path** — the same main-path layers wired as a chain (no
+//!   projection conv, no Add) — what the pre-graph zoo executed.
+//!
+//! Both paths are first gated bit-identical against their own
+//! functional reference; the delta between them is the measured cost of
+//! executing the real topology (extra projection kernels + Add traffic
+//! + a third arena slot), which the perf model also predicts via
+//! `plan.total_cycles()`.
+//!
+//! Modes:
+//! * `--smoke`  — CI mode: tiny workload, correctness gates + one timed
+//!   round.
+//! * `--json [PATH]` — additionally write a BENCH_3.json-style record
+//!   (default path `BENCH_3.json`).
+//!
+//! Run: `cargo bench --bench graph_throughput [-- --smoke|--json]`
+
+use std::time::Instant;
+
+use yflows::coordinator::{
+    self,
+    plan::{plan_network_uncached, NetworkPlan, PlanKind, PlannerOptions},
+};
+use yflows::exec::PreparedNetwork;
+use yflows::layer::LayerConfig;
+use yflows::machine::MachineConfig;
+use yflows::nets::{self, Network};
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::bench::{black_box, fmt_duration};
+use yflows::util::json::Json;
+
+const SHIFT: u32 = 9;
+const C: usize = 16;
+
+/// The flattened chain the zoo used to execute: main-path layers only
+/// (1×1 projection convs and Add joins dropped), wired sequentially.
+fn main_path_chain(net: &Network) -> Network {
+    let layers: Vec<LayerConfig> = net
+        .layer_configs()
+        .filter(|l| match l {
+            LayerConfig::Add { .. } => false,
+            LayerConfig::Conv(c) => !(c.fh == 1 && c.fw == 1),
+            _ => true,
+        })
+        .cloned()
+        .collect();
+    Network::chain_at(format!("{}-flattened", net.name), layers, net.input_hw)
+}
+
+fn bind_all(plan: &mut NetworkPlan, seed: u64) {
+    for (i, lp) in plan.layers.iter_mut().enumerate() {
+        if let (LayerConfig::Conv(cfg), PlanKind::Generated { .. }) = (&lp.layer, &lp.kind) {
+            let cfg = *cfg; // end the borrow of lp.layer before bind_weights
+            lp.bind_weights(WeightTensor::random(
+                WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+                WeightLayout::CKRSc { c: C },
+                seed.wrapping_add(i as u64),
+            ));
+        }
+    }
+}
+
+fn prepare_net(net: &Network, seed: u64) -> (NetworkPlan, PreparedNetwork) {
+    let mut plan = plan_network_uncached(
+        net,
+        PlannerOptions {
+            machine: MachineConfig::neon(128),
+            explore_each_layer: false,
+            perf_sample: 1,
+            explore_threads: 1,
+        },
+    );
+    bind_all(&mut plan, seed);
+    let prepared = PreparedNetwork::prepare(&plan).expect("plan must prepare");
+    (plan, prepared)
+}
+
+/// Bit-identity gate + measured images/sec for one network.
+fn measure(
+    plan: &NetworkPlan,
+    prepared: &PreparedNetwork,
+    inputs: &[ActTensor],
+    rounds: usize,
+    threads: usize,
+) -> f64 {
+    let refs: Vec<&ActTensor> = inputs.iter().collect();
+    let functional = coordinator::run_network_batch(plan, &refs, SHIFT);
+    let prep_out = prepared.run_batch(&refs, SHIFT, threads);
+    for (i, (a, b)) in functional.iter().zip(&prep_out).enumerate() {
+        let (a, b) = (a.as_ref().expect("functional"), b.as_ref().expect("prepared"));
+        assert_eq!(a.data, b.data, "{}: prepared diverges at image {i}", plan.name);
+    }
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        black_box(prepared.run_batch(&refs, SHIFT, threads));
+    }
+    (inputs.len() * rounds) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args.iter().position(|a| a == "--json").map(|i| {
+        args.get(i + 1)
+            .filter(|p| !p.starts_with("--"))
+            .cloned()
+            .unwrap_or_else(|| "BENCH_3.json".to_string())
+    });
+
+    let (hw, blocks, stages) = if smoke { (16, 1, 2) } else { (32, 2, 2) };
+    let dag = nets::resnet_prefix(hw, hw, blocks, stages);
+    let chain = main_path_chain(&dag);
+    assert!(!dag.is_chain() && chain.is_chain());
+
+    let (dag_plan, dag_prepared) = prepare_net(&dag, 31_000);
+    let (chain_plan, chain_prepared) = prepare_net(&chain, 32_000);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let batch: u64 = if smoke { 4 } else { 16 };
+    let rounds: usize = if smoke { 1 } else { 8 };
+    let inputs: Vec<ActTensor> = (0..batch)
+        .map(|s| ActTensor::random(ActShape::new(16, hw, hw), ActLayout::NCHWc { c: C }, s))
+        .collect();
+
+    let t0 = Instant::now();
+    let dag_ips = measure(&dag_plan, &dag_prepared, &inputs, rounds, threads);
+    let chain_ips = measure(&chain_plan, &chain_prepared, &inputs, rounds, threads);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let modeled_ratio = dag_plan.total_cycles() / chain_plan.total_cycles();
+    let measured_ratio = chain_ips / dag_ips;
+    println!("\n== graph_throughput ({}, batch {batch}, {threads} threads) ==", dag.name);
+    println!(
+        "DAG   : {:>8.1} images/sec  ({} layers, {} arena slots)",
+        dag_ips,
+        dag_prepared.num_layers(),
+        dag_prepared.slot_count()
+    );
+    println!(
+        "chain : {:>8.1} images/sec  ({} layers, {} arena slots)",
+        chain_ips,
+        chain_prepared.num_layers(),
+        chain_prepared.slot_count()
+    );
+    println!(
+        "true-topology cost: {measured_ratio:.3}x measured, {modeled_ratio:.3}x modeled \
+         (wall {})",
+        fmt_duration(wall)
+    );
+    if smoke {
+        println!("smoke OK: both paths bit-identical to their functional references");
+        return;
+    }
+
+    if let Some(path) = json_path {
+        let mut o = Json::obj();
+        o.set("bench", Json::s("graph_throughput"))
+            .set(
+                "workload",
+                Json::s(&format!(
+                    "resnet_prefix {hw}x{hw} b{blocks}s{stages} (true topology) \
+                     vs flattened main-path chain"
+                )),
+            )
+            .set("batch", Json::from_u64(batch))
+            .set("rounds", Json::from_u64(rounds as u64))
+            .set("threads", Json::from_u64(threads as u64))
+            .set("requant_shift", Json::from_u64(SHIFT as u64))
+            .set("bit_identical", Json::Bool(true))
+            .set("dag_images_per_sec", Json::Num(dag_ips))
+            .set("chain_images_per_sec", Json::Num(chain_ips))
+            .set("measured_topology_cost", Json::Num(measured_ratio))
+            .set("modeled_topology_cost", Json::Num(modeled_ratio))
+            .set("dag_arena_slots", Json::from_u64(dag_prepared.slot_count() as u64))
+            .set("chain_arena_slots", Json::from_u64(chain_prepared.slot_count() as u64))
+            .set("dag_modeled_mcycles", Json::Num(dag_plan.total_cycles() / 1e6))
+            .set("chain_modeled_mcycles", Json::Num(chain_plan.total_cycles() / 1e6));
+        std::fs::write(&path, o.render()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

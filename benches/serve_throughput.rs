@@ -73,7 +73,7 @@ fn resnet_style_plan(machine: MachineConfig) -> NetworkPlan {
         layers.push(lp);
     }
     layers.push(planner.plan_layer(&LayerConfig::GlobalAvgPool { channels: 64, h: 8, w: 8 }, 0));
-    NetworkPlan { name: "resnet-style-bench".into(), layers }
+    NetworkPlan::chain("resnet-style-bench", layers)
 }
 
 fn input_for(seed: u64) -> ActTensor {

@@ -128,7 +128,7 @@ fn small_net_plan(machine: MachineConfig) -> NetworkPlan {
         seed += 1;
         layers.push(lp);
     }
-    NetworkPlan { name: "small-int8-net".into(), layers }
+    NetworkPlan::chain("small-int8-net", layers)
 }
 
 fn serve_requests() {

@@ -31,12 +31,19 @@ use std::borrow::Cow;
 
 use crate::layer::{ConvConfig, LayerConfig, PoolKind};
 use crate::machine::MachineConfig;
-use crate::quant::requantize_relu;
-use crate::tensor::{ActLayout, ActShape, ActTensor};
+use crate::quant::{requantize_relu, requantize_signed};
+use crate::tensor::{ActLayout, ActShape, ActTensor, OutTensor};
 
 /// Clock frequency used to convert modeled cycles to seconds
 /// (Neoverse-N1 reference platforms run 2.6–3.0 GHz; we use 2.6).
 pub const CLOCK_HZ: f64 = 2.6e9;
+
+/// Requantization shift applied to residual-`Add` sums (power-of-two
+/// scale, like the conv requant shift). Conv outputs are already
+/// requantized INT8, so the integer-only join is a saturating signed
+/// add: the sum is clamped to the full INT8 range by
+/// [`crate::quant::requantize_signed`] at shift 0.
+pub const ADD_REQUANT_SHIFT: u32 = 0;
 
 /// Round channels up to a multiple of the block size (the stem conv has
 /// C = 3; NCHWc implementations zero-pad — NeoCPU does the same).
@@ -52,20 +59,160 @@ pub fn padded_conv(cfg: &ConvConfig, machine: &MachineConfig) -> ConvConfig {
     out
 }
 
-/// Functionally execute a (small) all-conv network on the interpreter:
-/// conv → requantize+ReLU chain, max/avg pooling on the scalar path.
-/// Used by examples and the PJRT cross-validation; large ImageNet nets
-/// go through the performance model instead.
+/// Functionally execute a (small) network **graph** on the interpreter:
+/// conv → requantize+ReLU kernels, max/avg pooling on the scalar path,
+/// residual `Add` (signed requant) and channel `Concat` joins. Nodes
+/// run in topological (plan) order; each node reads the outputs named
+/// by its input edges (the network input when the edge list is empty),
+/// and intermediate outputs are dropped as soon as their last consumer
+/// has run. The last node's output is the network output. Used by
+/// examples and the PJRT cross-validation; large ImageNet nets go
+/// through the performance model instead.
 pub fn run_network_functional(
     plan: &NetworkPlan,
     input: &ActTensor,
     requant_shift: u32,
 ) -> crate::Result<ActTensor> {
-    let mut act = input.clone();
-    for lp in &plan.layers {
-        act = step_functional(lp, &act, requant_shift)?;
+    let n = plan.layers.len();
+    if n == 0 {
+        return Ok(input.clone());
     }
-    Ok(act)
+    let mut remaining = plan.consumer_counts();
+    let mut outs: Vec<Option<ActTensor>> = (0..n).map(|_| None).collect();
+    for (i, lp) in plan.layers.iter().enumerate() {
+        let out = match &lp.layer {
+            LayerConfig::Add { .. } => add_functional(&gather_inputs(&lp.inputs, input, &outs)?)?,
+            LayerConfig::Concat { .. } => {
+                concat_functional(&gather_inputs(&lp.inputs, input, &outs)?)?
+            }
+            _ => {
+                anyhow::ensure!(
+                    lp.inputs.len() <= 1,
+                    "{} is single-input but has {} edges",
+                    lp.layer.name(),
+                    lp.inputs.len()
+                );
+                let src = match lp.inputs.first() {
+                    Some(&j) => outs[j]
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("input {j} of node {i} already recycled"))?,
+                    None => input,
+                };
+                step_functional(lp, src, requant_shift)?
+            }
+        };
+        // Drop inputs whose last consumer just ran (keeps the live set
+        // minimal — the same liveness the prepared engine's arena is
+        // sized from).
+        for &j in &lp.inputs {
+            remaining[j] -= 1;
+            if remaining[j] == 0 {
+                outs[j] = None;
+            }
+        }
+        if remaining[i] > 0 {
+            outs[i] = Some(out);
+        }
+        // else: dead node (no consumers, not the output) — dropped
+        // immediately, mirroring the prepared engine's recycle.
+    }
+    outs[n - 1]
+        .take()
+        .ok_or_else(|| anyhow::anyhow!("network output was recycled (graph has a cycle?)"))
+}
+
+/// Resolve a node's input edges against the live output table (empty
+/// edges = the network input). Shared by the functional runner and the
+/// prepared engine so the edge semantics can never diverge between
+/// paths.
+pub(crate) fn gather_inputs<'a>(
+    inputs: &[usize],
+    input: &'a ActTensor,
+    outs: &'a [Option<ActTensor>],
+) -> crate::Result<Vec<&'a ActTensor>> {
+    if inputs.is_empty() {
+        return Ok(vec![input]);
+    }
+    inputs
+        .iter()
+        .map(|&j| {
+            outs[j]
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("input {j} recycled before use"))
+        })
+        .collect()
+}
+
+/// Residual join: widen the INT8 inputs to INT32, sum, and requantize
+/// **signed** back to INT8 via [`crate::quant::requantize_signed`] at
+/// [`ADD_REQUANT_SHIFT`] — so shortcut sums clamp to INT8 exactly like
+/// conv outputs do (but keep their sign: no ReLU on the skip path).
+pub(crate) fn add_functional(srcs: &[&ActTensor]) -> crate::Result<ActTensor> {
+    anyhow::ensure!(srcs.len() >= 2, "Add needs at least two inputs, got {}", srcs.len());
+    let shape = srcs[0].shape;
+    let mut sum = OutTensor::zeros(shape.channels, shape.h, shape.w);
+    for s in srcs {
+        anyhow::ensure!(s.shape == shape, "Add input shapes differ: {:?} vs {shape:?}", s.shape);
+        for ch in 0..shape.channels {
+            for y in 0..shape.h {
+                for x in 0..shape.w {
+                    let idx = sum.index(ch, y, x);
+                    sum.data[idx] += s.get(ch, y, x) as i32;
+                }
+            }
+        }
+    }
+    Ok(requantize_signed(&sum, ADD_REQUANT_SHIFT, srcs[0].layout))
+}
+
+/// Channel-wise concat of `srcs` in edge order.
+pub(crate) fn concat_functional(srcs: &[&ActTensor]) -> crate::Result<ActTensor> {
+    anyhow::ensure!(!srcs.is_empty(), "Concat needs at least one input");
+    let (h, w) = (srcs[0].shape.h, srcs[0].shape.w);
+    let channels = srcs.iter().map(|s| s.shape.channels).sum();
+    let mut out = ActTensor::zeros(ActShape::new(channels, h, w), srcs[0].layout);
+    concat_into(srcs, &mut out)?;
+    Ok(out)
+}
+
+/// Concat core, writing every element of `out` (shared with the
+/// prepared execution engine so both paths produce identical bytes).
+/// When everything is NCHWc with one block size and each part covers
+/// whole channel blocks, each part is one contiguous copy; anything
+/// else falls back to element-wise indexing.
+pub(crate) fn concat_into(srcs: &[&ActTensor], out: &mut ActTensor) -> crate::Result<()> {
+    let (h, w) = (out.shape.h, out.shape.w);
+    let mut off = 0usize;
+    for s in srcs {
+        anyhow::ensure!(
+            (s.shape.h, s.shape.w) == (h, w),
+            "concat spatial mismatch: {}x{} vs {h}x{w}",
+            s.shape.h,
+            s.shape.w
+        );
+        let aligned = match (out.layout, s.layout) {
+            (ActLayout::NCHWc { c: oc }, ActLayout::NCHWc { c: sc }) => {
+                oc == sc && off % oc == 0 && s.shape.channels % oc == 0
+            }
+            _ => false,
+        };
+        if aligned {
+            let ActLayout::NCHWc { c } = out.layout else { unreachable!() };
+            let base = out.layout.block_base(&out.shape, off / c);
+            out.data[base..base + s.data.len()].copy_from_slice(&s.data);
+        } else {
+            for ch in 0..s.shape.channels {
+                for y in 0..h {
+                    for x in 0..w {
+                        out.set(off + ch, y, x, s.get(ch, y, x));
+                    }
+                }
+            }
+        }
+        off += s.shape.channels;
+    }
+    anyhow::ensure!(off == out.shape.channels, "concat channel total mismatch");
+    Ok(())
 }
 
 /// Execute one coalesced batch: every image runs through the same plan
@@ -343,7 +490,7 @@ mod tests {
             ..Default::default()
         });
         let lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
-        let p = NetworkPlan { name: "b".into(), layers: vec![lp] };
+        let p = NetworkPlan::chain("b", vec![lp]);
         assert_eq!(modeled_batch_speedup(&p, 1), 1.0);
         let s8 = modeled_batch_speedup(&p, 8);
         // Warm-cache images are never slower than cold ones.
@@ -360,6 +507,46 @@ mod tests {
         assert_eq!(p.shape.h, 5);
         assert_eq!(p.get(2, 1, 1), t.get(2, 0, 0));
         assert_eq!(p.get(10, 2, 2), 0); // padded channel
+    }
+
+    #[test]
+    fn add_functional_saturates_full_signed_range() {
+        let shape = ActShape::new(16, 1, 1);
+        let layout = ActLayout::NCHWc { c: 16 };
+        let mut a = ActTensor::zeros(shape, layout);
+        let mut b = ActTensor::zeros(shape, layout);
+        a.set(0, 0, 0, 100);
+        b.set(0, 0, 0, 100); // 200 → clamps to 127
+        a.set(1, 0, 0, -100);
+        b.set(1, 0, 0, -100); // -200 → clamps to -128 (sign survives: no ReLU)
+        a.set(2, 0, 0, 30);
+        b.set(2, 0, 0, -50); // -20 stays -20
+        let out = add_functional(&[&a, &b]).unwrap();
+        assert_eq!(out.get(0, 0, 0), 127);
+        assert_eq!(out.get(1, 0, 0), -128);
+        assert_eq!(out.get(2, 0, 0), -20);
+        // Shape mismatch is an error, not a panic.
+        let c = ActTensor::zeros(ActShape::new(16, 2, 2), layout);
+        assert!(add_functional(&[&a, &c]).is_err());
+        assert!(add_functional(&[&a]).is_err());
+    }
+
+    #[test]
+    fn concat_into_block_path_matches_elementwise() {
+        let layout = ActLayout::NCHWc { c: 16 };
+        let a = ActTensor::random(ActShape::new(32, 3, 3), layout, 21);
+        let b = ActTensor::random(ActShape::new(16, 3, 3), layout, 22);
+        let out = concat_functional(&[&a, &b]).unwrap();
+        assert_eq!(out.shape.channels, 48);
+        for ch in 0..32 {
+            assert_eq!(out.get(ch, 1, 2), a.get(ch, 1, 2));
+        }
+        for ch in 0..16 {
+            assert_eq!(out.get(32 + ch, 2, 0), b.get(ch, 2, 0));
+        }
+        // Spatial mismatch errors.
+        let c = ActTensor::zeros(ActShape::new(16, 2, 2), layout);
+        assert!(concat_functional(&[&a, &c]).is_err());
     }
 
     #[test]

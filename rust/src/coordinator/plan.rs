@@ -64,11 +64,17 @@ pub enum PackedWeights {
     Grouped(Vec<WeightTensor>),
 }
 
-/// One planned layer.
+/// One planned layer (= one graph node: the layer plus its input
+/// edges, mirroring [`crate::nets::Node`]).
 #[derive(Clone, Debug)]
 pub struct LayerPlan {
     pub layer: LayerConfig,
     pub kind: PlanKind,
+    /// Indices of the planned layers feeding this one (empty = the
+    /// network input). Chain plans have `[i-1]` throughout; the
+    /// executors ([`super::run_network_functional`],
+    /// [`crate::exec::PreparedNetwork`]) follow these edges.
+    pub inputs: Vec<usize>,
     pub stats: PerfStats,
     /// Weights bound for functional execution (None for model-only
     /// plans). `pub(crate)`: outside the crate, [`LayerPlan::bind_weights`]
@@ -137,7 +143,14 @@ impl LayerPlan {
     }
 }
 
-/// A fully planned network.
+/// A fully planned network graph.
+///
+/// Construct via [`plan_network`] (edges copied from the
+/// [`crate::nets::Network`]) or [`NetworkPlan::chain`]. Hand-assembled
+/// plans must set every [`LayerPlan::inputs`] explicitly: **empty edges
+/// mean "read the network input"**, not "read the previous layer" — a
+/// struct-literal plan built from bare `plan_layer` outputs would feed
+/// the raw input to every layer.
 #[derive(Clone, Debug)]
 pub struct NetworkPlan {
     pub name: String,
@@ -145,12 +158,39 @@ pub struct NetworkPlan {
 }
 
 impl NetworkPlan {
+    /// Wire `layers` as a chain: layer `i` reads layer `i-1`, layer 0
+    /// reads the network input. The `Vec<LayerPlan>`-building test and
+    /// bench harnesses use this; graph plans come out of
+    /// [`plan_network`] with their edges copied from the network.
+    pub fn chain(name: impl Into<String>, mut layers: Vec<LayerPlan>) -> NetworkPlan {
+        for (i, lp) in layers.iter_mut().enumerate() {
+            lp.inputs = if i == 0 { Vec::new() } else { vec![i - 1] };
+        }
+        NetworkPlan { name: name.into(), layers }
+    }
+
     pub fn total_cycles(&self) -> f64 {
         self.layers.iter().map(|l| l.stats.cycles).sum()
     }
 
     pub fn total_seconds(&self) -> f64 {
         self.total_cycles() / super::CLOCK_HZ
+    }
+
+    /// How many planned layers consume each layer's output. The final
+    /// layer gets one sentinel consumer (the network output), so a live
+    /// executor never recycles it mid-run.
+    pub fn consumer_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.layers.len()];
+        for lp in &self.layers {
+            for &j in &lp.inputs {
+                counts[j] += 1;
+            }
+        }
+        if let Some(last) = counts.last_mut() {
+            *last += 1;
+        }
+        counts
     }
 }
 
@@ -248,6 +288,7 @@ impl Planner {
             layer: LayerConfig::Conv(padded),
             kind: PlanKind::Generated { spec, prog, machine, pad },
             stats,
+            inputs: Vec::new(),
             weights: None,
             packed: OnceLock::new(),
         }
@@ -268,6 +309,7 @@ impl Planner {
             layer: LayerConfig::Conv(padded),
             kind: PlanKind::DepthwiseKernel { prog, machine, pad },
             stats,
+            inputs: Vec::new(),
             weights: None,
             packed: OnceLock::new(),
         }
@@ -286,24 +328,18 @@ impl Planner {
             layer: LayerConfig::Conv(*cfg),
             kind: PlanKind::GroupedKernel { spec, prog, machine, pad, groups: cfg.groups },
             stats,
+            inputs: Vec::new(),
             weights: None,
             packed: OnceLock::new(),
         }
     }
 
     fn plan_scalar(&self, layer: &LayerConfig) -> LayerPlan {
-        // Cheap per-element pass: ~1 cycle per element read.
-        let cycles = match layer {
-            LayerConfig::Pool(p) => p.reads() as f64 * 1.2,
-            LayerConfig::GlobalAvgPool { channels, h, w } => (channels * h * w) as f64 * 1.0,
-            LayerConfig::ChannelShuffle { channels, h, w, .. } => (channels * h * w) as f64 * 2.0,
-            LayerConfig::Relu { channels, h, w } => (channels * h * w) as f64 * 0.5,
-            _ => 0.0,
-        };
         LayerPlan {
             layer: layer.clone(),
             kind: PlanKind::ScalarPass,
-            stats: PerfStats { cycles, ..Default::default() },
+            stats: scalar_pass_stats(layer),
+            inputs: Vec::new(),
             weights: None,
             packed: OnceLock::new(),
         }
@@ -326,13 +362,52 @@ impl Planner {
     }
 }
 
-/// Stable 64-bit fingerprint of a network (FNV-1a over the name and
-/// every layer config). Two `Network` values with the same name and
-/// identical layer lists fingerprint identically — that is what the
-/// plan cache keys on. The name is deliberately included: cached plans
-/// carry `net.name`, so structurally-equal networks with different
-/// names get separate entries rather than a plan displaying the wrong
-/// name.
+/// Modeled cost of a scalar (non-kernel) pass. Pool/GAP/shuffle/ReLU
+/// keep the seed's per-element formulas; the graph-IR joins (Add,
+/// Concat) are costed through [`PerfModel::estimate_stream_pass`], so
+/// their memory traffic flows through the cache hierarchy exactly like
+/// kernel traffic does and Fig 8 latencies reflect the real topology.
+pub fn scalar_pass_stats(layer: &LayerConfig) -> PerfStats {
+    match layer {
+        LayerConfig::Add { channels, h, w } => {
+            // Two INT8 input streams, widen + add + signed requantize,
+            // one INT8 output stream.
+            let elems = channels * h * w;
+            let mut pm = PerfModel::neoverse_n1();
+            pm.estimate_stream_pass(2 * elems, elems, 1.0, elems)
+        }
+        LayerConfig::Concat { parts, h, w } => {
+            // Pure copy traffic: every part read once, written once.
+            let elems = parts.iter().sum::<usize>() * h * w;
+            let mut pm = PerfModel::neoverse_n1();
+            pm.estimate_stream_pass(elems, elems, 0.25, elems)
+        }
+        // Cheap per-element passes: ~1 cycle per element read.
+        LayerConfig::Pool(p) => PerfStats { cycles: p.reads() as f64 * 1.2, ..Default::default() },
+        LayerConfig::GlobalAvgPool { channels, h, w } => {
+            PerfStats { cycles: (channels * h * w) as f64 * 1.0, ..Default::default() }
+        }
+        LayerConfig::ChannelShuffle { channels, h, w, .. } => {
+            PerfStats { cycles: (channels * h * w) as f64 * 2.0, ..Default::default() }
+        }
+        LayerConfig::Relu { channels, h, w } => {
+            PerfStats { cycles: (channels * h * w) as f64 * 0.5, ..Default::default() }
+        }
+        _ => PerfStats::default(),
+    }
+}
+
+/// Stable 64-bit fingerprint of a network (FNV-1a over the name, the
+/// input size, and every node's layer config **and input edges**). Two
+/// `Network` values with the same name and identical node lists
+/// fingerprint identically — that is what the plan cache keys on.
+/// Edges are included so a chain and a DAG over the same layer multiset
+/// (e.g. flattened vs true-residual ResNet) can never collide; a
+/// chain-built network and a graph-built chain of the same layers
+/// fingerprint identically. The name is deliberately included: cached
+/// plans carry `net.name`, so structurally-equal networks with
+/// different names get separate entries rather than a plan displaying
+/// the wrong name.
 pub fn network_fingerprint(net: &Network) -> u64 {
     fn eat(mut h: u64, bytes: &[u8]) -> u64 {
         for &b in bytes {
@@ -343,17 +418,20 @@ pub fn network_fingerprint(net: &Network) -> u64 {
     }
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     h = eat(h, net.name.as_bytes());
-    for layer in &net.layers {
-        h = eat(h, format!("{layer:?}").as_bytes());
+    h = eat(h, format!("@{:?}", net.input_hw).as_bytes());
+    for node in &net.nodes {
+        h = eat(h, format!("{:?}<-{:?}", node.layer, node.inputs).as_bytes());
     }
     h
 }
 
 /// Stable 64-bit fingerprint of a *weight-bound* plan: the name, every
-/// layer config, the chosen kernel (program name + machine + pad), and
-/// every weight byte. Two plans fingerprint identically iff prepared
-/// execution would be identical — this keys the prepared-network side
-/// of the cache ([`PlanCache::prepared`]).
+/// layer config **with its input edges**, the chosen kernel (program
+/// name + machine + pad), and every weight byte. Two plans fingerprint
+/// identically iff prepared execution would be identical — this keys
+/// the prepared-network side of the cache ([`PlanCache::prepared`]),
+/// so a chain and a DAG over the same layer multiset compile to
+/// distinct prepared engines.
 pub fn plan_fingerprint(plan: &NetworkPlan) -> u64 {
     fn eat(mut h: u64, bytes: &[u8]) -> u64 {
         for &b in bytes {
@@ -372,7 +450,7 @@ pub fn plan_fingerprint(plan: &NetworkPlan) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     h = eat(h, plan.name.as_bytes());
     for lp in &plan.layers {
-        h = eat(h, format!("{:?}", lp.layer).as_bytes());
+        h = eat(h, format!("{:?}<-{:?}", lp.layer, lp.inputs).as_bytes());
         let kind_sig = match &lp.kind {
             PlanKind::Generated { prog, machine, pad, .. } => {
                 format!("gen:{}:{machine:?}:{pad}", prog.name)
@@ -565,23 +643,33 @@ pub fn plan_network_shared(net: &Network, opts: PlannerOptions) -> Arc<NetworkPl
     global_plan_cache().plan(net, &opts)
 }
 
-/// Plan a whole network, bypassing the plan cache. Padding per conv
+/// Plan a whole network graph, bypassing the plan cache. Every node is
+/// planned individually and keeps its input edges; padding per conv
 /// layer is inferred from the difference between the stored (padded)
-/// dims and the previous layer's output shape.
+/// dims and *its own predecessor's* output shape (branches pad against
+/// their branch input, not whatever node happened to precede them in
+/// the list — the flattened-chain planner got projection shortcuts
+/// wrong here by construction).
 pub fn plan_network_uncached(net: &Network, opts: PlannerOptions) -> NetworkPlan {
+    net.validate().expect("cannot plan an invalid network graph");
     PLANNING_RUNS.fetch_add(1, Ordering::Relaxed);
     let mut planner = Planner::new(opts);
-    let mut layers = Vec::with_capacity(net.layers.len());
-    let mut prev_hw: Option<(usize, usize)> = None;
-    for layer in &net.layers {
-        let pad = match (layer, prev_hw) {
-            (LayerConfig::Conv(c), Some((h, _))) => (c.ih.saturating_sub(h)) / 2,
-            (LayerConfig::Conv(c), None) => (c.ih.saturating_sub(224)) / 2, // stem
+    let mut layers = Vec::with_capacity(net.nodes.len());
+    let mut shapes: Vec<(usize, usize, usize)> = Vec::with_capacity(net.nodes.len());
+    for node in &net.nodes {
+        let in_h = node
+            .inputs
+            .first()
+            .map(|&j| shapes[j].1)
+            .unwrap_or(net.input_hw.0);
+        let pad = match &node.layer {
+            LayerConfig::Conv(c) => (c.ih.saturating_sub(in_h)) / 2,
             _ => 0,
         };
-        layers.push(planner.plan_layer(layer, pad));
-        let (_, h, w) = layer.out_shape();
-        prev_hw = Some((h, w));
+        let mut lp = planner.plan_layer(&node.layer, pad);
+        lp.inputs = node.inputs.clone();
+        shapes.push(node.layer.out_shape());
+        layers.push(lp);
     }
     NetworkPlan { name: net.name.clone(), layers }
 }
@@ -595,12 +683,19 @@ mod tests {
     fn plans_resnet18_with_positive_latency() {
         let net = nets::resnet18();
         let plan = plan_network(&net, PlannerOptions::default());
-        assert_eq!(plan.layers.len(), net.layers.len());
+        assert_eq!(plan.layers.len(), net.nodes.len());
         assert!(plan.total_cycles() > 1e6);
-        // Every conv got a generated kernel.
+        // Every conv got a generated kernel; graph joins are costed
+        // scalar passes with real modeled traffic.
         for lp in &plan.layers {
             if lp.layer.is_conv() {
                 assert!(!matches!(lp.kind, PlanKind::ScalarPass));
+            }
+            if matches!(lp.layer, LayerConfig::Add { .. }) {
+                assert!(matches!(lp.kind, PlanKind::ScalarPass));
+                assert!(lp.stats.cycles > 0.0);
+                assert!(lp.stats.mem_reads > 0);
+                assert_eq!(lp.inputs.len(), 2);
             }
         }
     }
@@ -612,7 +707,7 @@ mod tests {
         let net = nets::vgg16();
         let mut planner = Planner::new(PlannerOptions::default());
         let mut count = 0;
-        for l in &net.layers {
+        for l in net.layer_configs() {
             if l.is_conv() {
                 planner.plan_layer(l, 1);
                 count += 1;
@@ -673,6 +768,25 @@ mod tests {
     }
 
     #[test]
+    fn fingerprint_distinguishes_topology_not_just_layer_multiset() {
+        // The true-residual graph vs the same layers flattened into a
+        // chain: identical layer multiset, different edges — the plan
+        // cache must never serve one for the other.
+        let graph = nets::resnet18();
+        let chain = crate::nets::Network::chain(
+            "resnet18",
+            graph.layer_configs().cloned().collect(),
+        );
+        assert_ne!(network_fingerprint(&graph), network_fingerprint(&chain));
+        // And a graph-built chain collides with chain() of the same
+        // layers, as it must (same edges).
+        let vgg = nets::vgg11();
+        let rebuilt =
+            crate::nets::Network::chain("vgg11", vgg.layer_configs().cloned().collect());
+        assert_eq!(network_fingerprint(&vgg), network_fingerprint(&rebuilt));
+    }
+
+    #[test]
     fn packed_weights_are_memoized_per_layer() {
         let machine = MachineConfig::neon(128);
         let cfg = ConvConfig::depthwise(6, 6, 3, 3, 1, 32);
@@ -709,7 +823,7 @@ mod tests {
             crate::tensor::WeightLayout::CKRSc { c: 16 },
             42,
         ));
-        let plan = NetworkPlan { name: "prep".into(), layers: vec![lp] };
+        let plan = NetworkPlan::chain("prep", vec![lp]);
         let cache = PlanCache::new();
         let a = cache.prepared(&plan).unwrap();
         let b = cache.prepared(&plan).unwrap();

@@ -285,7 +285,7 @@ mod tests {
             WeightLayout::CKRSc { c: 16 },
             5,
         ));
-        NetworkPlan { name: "tiny".into(), layers: vec![lp] }
+        NetworkPlan::chain("tiny", vec![lp])
     }
 
     #[test]
@@ -344,7 +344,7 @@ mod tests {
         let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 16, 16);
         let mut planner = Planner::new(PlannerOptions { machine: m, ..Default::default() });
         let lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0); // no weights bound
-        let plan = NetworkPlan { name: "weightless".into(), layers: vec![lp] };
+        let plan = NetworkPlan::chain("weightless", vec![lp]);
         let server = Server::start(plan, 1, 8);
         assert!(!server.is_prepared());
         let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 1);

@@ -3,14 +3,20 @@
 //!
 //! The seed hot path allocated per layer per request (padded inputs,
 //! INT32 accumulators, requantized outputs). Prepared execution replaces
-//! all of that with four reusable allocations:
+//! all of that with a fixed set of reusable allocations:
 //!
-//! * two **ping-pong activation buffers** — layer *n* reads one and
-//!   writes the other, then they swap roles;
+//! * **N activation slots** — one per *concurrently live* intermediate
+//!   tensor. A chain needs exactly two (the classic ping-pong pair);
+//!   graphs with residual skips or concats need as many slots as their
+//!   maximum live set (a skip tensor stays resident in its slot across
+//!   the whole block while the main path cycles through the others).
+//!   Slot count and per-slot capacity come from the prepared network's
+//!   liveness analysis ([`crate::exec::PreparedNetwork::prepare`]);
 //! * one **padded-input staging buffer** — spatial/channel padding is
 //!   written here instead of into a fresh tensor;
 //! * one **INT32 accumulator** — conv kernels accumulate here before the
-//!   fused requantize pass.
+//!   fused requantize pass (residual Adds reuse it for their widened
+//!   sums).
 //!
 //! Capacities are sized at prepare time from the plan's declared layer
 //! shapes; per-image use only `clear` + `resize`s within capacity, so
@@ -21,10 +27,10 @@
 use crate::machine::Interp;
 use crate::tensor::{ActLayout, ActShape, ActTensor};
 
-/// Reusable per-thread execution state: ping-pong activations, padding
-/// stage, accumulator, and the interpreter register file.
+/// Reusable per-thread execution state: liveness-assigned activation
+/// slots, padding stage, accumulator, and the interpreter register file.
 pub struct ExecArena {
-    act: [Vec<i8>; 2],
+    slots: Vec<Vec<i8>>,
     padded: Vec<i8>,
     pub(crate) acc: Vec<i32>,
     pub(crate) interp: Interp,
@@ -32,22 +38,30 @@ pub struct ExecArena {
 
 impl ExecArena {
     pub(crate) fn with_capacity(
-        max_act: usize,
+        slot_caps: &[usize],
         max_padded: usize,
         max_acc: usize,
         num_regs: usize,
     ) -> ExecArena {
         ExecArena {
-            act: [Vec::with_capacity(max_act), Vec::with_capacity(max_act)],
+            slots: slot_caps.iter().map(|&n| Vec::with_capacity(n)).collect(),
             padded: Vec::with_capacity(max_padded),
             acc: Vec::with_capacity(max_acc),
             interp: Interp::new(num_regs),
         }
     }
 
-    /// Take ping-pong slot `slot` as a zero-filled tensor of `shape`.
-    /// The backing `Vec` is moved out (no copy) and must be handed back
-    /// via [`ExecArena::put_act`] once the tensor is done.
+    /// Number of activation slots (== the prepared network's max live
+    /// set).
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Take slot `slot` as a zero-filled tensor of `shape`. The backing
+    /// `Vec` is moved out (no copy) and must be handed back via
+    /// [`ExecArena::put_act`] once the tensor is done. Taking a slot
+    /// that is already out panics — that would mean the liveness
+    /// assignment double-booked a buffer.
     pub(crate) fn take_act(
         &mut self,
         slot: usize,
@@ -55,7 +69,11 @@ impl ExecArena {
         layout: ActLayout,
     ) -> ActTensor {
         layout.validate(&shape); // same panic an ActTensor::zeros would raise
-        let mut data = std::mem::take(&mut self.act[slot]);
+        let mut data = std::mem::take(&mut self.slots[slot]);
+        assert!(
+            data.capacity() > 0 || shape.elements() == 0,
+            "activation slot {slot} taken while already in use"
+        );
         data.clear();
         data.resize(shape.elements(), 0);
         ActTensor { shape, layout, data }
@@ -63,7 +81,7 @@ impl ExecArena {
 
     /// Return a tensor taken with [`ExecArena::take_act`] to its slot.
     pub(crate) fn put_act(&mut self, slot: usize, t: ActTensor) {
-        self.act[slot] = t.data;
+        self.slots[slot] = t.data;
     }
 
     /// Take the padding stage as a zero-filled tensor (same take/put

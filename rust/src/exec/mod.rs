@@ -20,30 +20,40 @@
 //! * depthwise and per-group weights are packed exactly once (shared
 //!   with the functional path through
 //!   [`crate::coordinator::LayerPlan::packed_weights`]);
-//! * activations flow through a ping-pong [`ExecArena`] sized from the
-//!   plan, so per-layer padding and output allocations become writes
-//!   into reused buffers, and requantize+ReLU is fused into the output
-//!   traversal (one pass from INT32 accumulator to INT8 activation);
+//! * activations flow through a **liveness-assigned slot arena**
+//!   ([`ExecArena`]): prepare time walks the plan graph and assigns
+//!   each node's output a buffer slot with a free-list simulation, so
+//!   the arena holds exactly `max live set` buffers — two for a chain
+//!   (the classic ping-pong), more when residual skips or concat
+//!   fan-in keep tensors alive across a block. Per-layer padding and
+//!   output allocations become writes into reused buffers, and
+//!   requantize(+ReLU) is fused into every output traversal — including
+//!   the residual `Add` (INT32 sum in the accumulator, signed requant
+//!   on the way out) and `Concat` (parts written straight into the
+//!   output's channel blocks, no intermediate);
 //! * [`PreparedNetwork::run_batch`] fans a coalesced batch across
 //!   threads, each with its own arena and register file.
 //!
 //! **Bit-identity.** Prepared execution produces byte-for-byte the same
 //! outputs as [`crate::coordinator::run_network_functional`] on every
-//! kernel kind — the `exec_equivalence` integration test enforces this,
-//! and prepare-time [`crate::isa::validate`] (def-before-use) guarantees
-//! reusing one register file across layers and images cannot leak state
-//! into results.
+//! kernel kind and every graph shape (chains, residual diamonds, concat
+//! fan-in) — the `exec_equivalence` and `graph_equivalence` integration
+//! tests enforce this, and prepare-time [`crate::isa::validate`]
+//! (def-before-use) guarantees reusing one register file across layers
+//! and images cannot leak state into results.
 //!
 //! Prepared networks are memoized alongside the plan cache
 //! ([`crate::coordinator::PlanCache::prepared`]), keyed by the
-//! weight-bound plan fingerprint.
+//! weight-bound plan fingerprint (which includes the graph edges).
 
 mod arena;
 
 pub use arena::ExecArena;
 
 use crate::coordinator::plan::{LayerPlan, NetworkPlan, PackedWeights, PlanKind};
-use crate::coordinator::{gap_into, pool_into, shuffle_into};
+use crate::coordinator::{
+    concat_into, gap_into, gather_inputs, pool_into, shuffle_into, ADD_REQUANT_SHIFT,
+};
 use crate::layer::{ConvConfig, LayerConfig, PoolConfig};
 use crate::machine::{Bases, Buffers, DecodedProgram};
 use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout};
@@ -93,13 +103,25 @@ enum PreparedKind {
     Pool(PoolConfig),
     Gap,
     Shuffle { channels: usize, groups: usize },
-    /// ReLU: fused into requantization upstream; identity at execution.
+    /// Residual join: INT32 sum of all inputs in the accumulator, then
+    /// signed requantization fused into the output traversal.
+    Add,
+    /// Channel concat: parts copied straight into the output's channel
+    /// blocks (no intermediate tensor).
+    Concat,
+    /// ReLU: fused into requantization upstream; a plain copy at
+    /// execution so downstream edges can reference it like any node.
     Identity,
 }
 
-/// One compiled layer executor.
+/// One compiled layer executor (= one graph node).
 pub struct PreparedLayer {
     kind: PreparedKind,
+    /// Input edges, copied from the plan (empty = network input).
+    inputs: Vec<usize>,
+    /// Arena slot this node's output lives in (liveness-assigned at
+    /// prepare time).
+    slot: usize,
     /// Output element count from the plan (arena sizing only; runtime
     /// shapes for scalar passes follow the incoming activation exactly
     /// as the functional path does).
@@ -110,7 +132,10 @@ pub struct PreparedLayer {
 pub struct PreparedNetwork {
     pub name: String,
     layers: Vec<PreparedLayer>,
-    max_act: usize,
+    /// Per-slot byte capacity (slot count == the graph's max live set).
+    slot_caps: Vec<usize>,
+    /// Consumer count per node (+1 sentinel on the final node).
+    consumers: Vec<usize>,
     max_padded: usize,
     max_acc: usize,
     num_regs: usize,
@@ -119,13 +144,27 @@ pub struct PreparedNetwork {
 impl PreparedNetwork {
     /// Compile a weight-bound plan. All plan-shaped failure modes (no
     /// weights bound, wrong weight layout, schedule exceeding declared
-    /// bounds, unsupported layer kinds, invalid programs) surface here,
-    /// once — not per request.
+    /// bounds, unsupported layer kinds, invalid programs, malformed
+    /// graph edges) surface here, once — not per request.
     pub fn prepare(plan: &NetworkPlan) -> crate::Result<PreparedNetwork> {
-        let mut layers = Vec::with_capacity(plan.layers.len());
-        let (mut max_act, mut max_padded, mut max_acc) = (0usize, 0usize, 0usize);
+        let n = plan.layers.len();
+        let mut layers = Vec::with_capacity(n);
+        let (mut max_padded, mut max_acc) = (0usize, 0usize);
         let mut num_regs = 32usize;
-        for lp in &plan.layers {
+        for (i, lp) in plan.layers.iter().enumerate() {
+            for &j in &lp.inputs {
+                anyhow::ensure!(j < i, "layer {i} ({}) has a forward edge to {j}", lp.layer.name());
+            }
+            // Same arity rule the functional runner enforces — a
+            // malformed plan must fail here, not silently diverge.
+            if !matches!(lp.layer, LayerConfig::Add { .. } | LayerConfig::Concat { .. }) {
+                anyhow::ensure!(
+                    lp.inputs.len() <= 1,
+                    "layer {i} ({}) is single-input but has {} edges",
+                    lp.layer.name(),
+                    lp.inputs.len()
+                );
+            }
             let prepared = prepare_layer(lp)?;
             match &prepared.kind {
                 PreparedKind::Conv(pc) | PreparedKind::Depthwise(pc) => {
@@ -141,15 +180,48 @@ impl PreparedNetwork {
                 PreparedKind::Pool(p) => {
                     max_padded = max_padded.max(p.channels * p.ih * p.iw);
                 }
+                // The widened residual sum lives in the accumulator.
+                PreparedKind::Add => max_acc = max_acc.max(prepared.est_out_elems),
                 _ => {}
             }
-            max_act = max_act.max(prepared.est_out_elems);
             layers.push(prepared);
         }
+
+        // Liveness-based slot assignment: walk the schedule once,
+        // allocating each node's output from a free list and releasing
+        // inputs after their last consumer. A node's output slot is
+        // claimed *before* its inputs are released (producer and
+        // consumers overlap in time), so a node can never write into a
+        // buffer it is still reading. The resulting slot count equals
+        // the graph's maximum live set — 2 for any chain.
+        let consumers = plan.consumer_counts();
+        let mut remaining = consumers.clone();
+        let mut free: Vec<usize> = Vec::new();
+        let mut slot_caps: Vec<usize> = Vec::new();
+        for i in 0..n {
+            let slot = free.pop().unwrap_or_else(|| {
+                slot_caps.push(0);
+                slot_caps.len() - 1
+            });
+            layers[i].slot = slot;
+            slot_caps[slot] = slot_caps[slot].max(layers[i].est_out_elems.max(1));
+            for &j in &plan.layers[i].inputs {
+                remaining[j] -= 1;
+                if remaining[j] == 0 {
+                    free.push(layers[j].slot);
+                }
+            }
+            if remaining[i] == 0 {
+                // Dead node (no consumers, not the output): recycle now.
+                free.push(slot);
+            }
+        }
+
         Ok(PreparedNetwork {
             name: plan.name.clone(),
             layers,
-            max_act,
+            slot_caps,
+            consumers,
             max_padded,
             max_acc,
             num_regs,
@@ -158,6 +230,12 @@ impl PreparedNetwork {
 
     pub fn num_layers(&self) -> usize {
         self.layers.len()
+    }
+
+    /// Activation slots in the arena — the graph's maximum live set
+    /// (2 for any chain; more when skips/concats hold tensors live).
+    pub fn slot_count(&self) -> usize {
+        self.slot_caps.len()
     }
 
     /// Total VLoad→VMla pairs fused across all kernel traces
@@ -175,58 +253,99 @@ impl PreparedNetwork {
 
     /// A fresh arena sized for this network (one per worker thread).
     pub fn new_arena(&self) -> ExecArena {
-        ExecArena::with_capacity(self.max_act, self.max_padded, self.max_acc, self.num_regs)
+        ExecArena::with_capacity(&self.slot_caps, self.max_padded, self.max_acc, self.num_regs)
     }
 
-    /// Execute one image. Bit-identical to
-    /// [`crate::coordinator::run_network_functional`] on the plan this
-    /// was prepared from.
+    /// Execute one image through the topological schedule. Bit-identical
+    /// to [`crate::coordinator::run_network_functional`] on the plan
+    /// this was prepared from.
     pub fn run(
         &self,
         input: &ActTensor,
         shift: u32,
         arena: &mut ExecArena,
     ) -> crate::Result<ActTensor> {
-        let mut slot = 0usize;
-        let mut cur: Option<ActTensor> = None;
-        for layer in &self.layers {
-            let src = cur.as_ref().unwrap_or(input);
-            let out = match &layer.kind {
-                PreparedKind::Identity => None,
-                PreparedKind::Conv(pc) => Some(exec_conv(pc, src, shift, slot, arena)?),
-                PreparedKind::Depthwise(pc) => Some(exec_depthwise(pc, src, shift, slot, arena)?),
-                PreparedKind::Grouped(pg) => Some(exec_grouped(pg, src, shift, slot, arena)?),
-                PreparedKind::Pool(p) => Some(exec_pool(p, src, slot, arena)),
-                PreparedKind::Gap => {
-                    let mut out =
-                        arena.take_act(slot, ActShape::new(src.shape.channels, 1, 1), src.layout);
-                    gap_into(src, &mut out);
-                    Some(out)
-                }
-                PreparedKind::Shuffle { channels, groups } => {
-                    let mut out = arena.take_act(slot, src.shape, src.layout);
-                    shuffle_into(*channels, *groups, src, &mut out);
-                    Some(out)
+        let n = self.layers.len();
+        if n == 0 {
+            return Ok(input.clone());
+        }
+        // Two small (one machine word per node) bookkeeping vectors per
+        // image; the *tensor* buffers — the allocations that matter —
+        // all come from the arena. Folding these into the arena would
+        // need a split borrow against the slots `outs` draws from.
+        let mut remaining = self.consumers.clone();
+        let mut outs: Vec<Option<ActTensor>> = (0..n).map(|_| None).collect();
+        for i in 0..n {
+            let layer = &self.layers[i];
+            let out = {
+                let src0: &ActTensor = match layer.inputs.first() {
+                    Some(&j) => outs[j].as_ref().ok_or_else(|| {
+                        anyhow::anyhow!("input {j} of layer {i} recycled before use")
+                    })?,
+                    None => input,
+                };
+                match &layer.kind {
+                    PreparedKind::Conv(pc) => exec_conv(pc, src0, shift, layer.slot, arena)?,
+                    PreparedKind::Depthwise(pc) => {
+                        exec_depthwise(pc, src0, shift, layer.slot, arena)?
+                    }
+                    PreparedKind::Grouped(pg) => exec_grouped(pg, src0, shift, layer.slot, arena)?,
+                    PreparedKind::Pool(p) => exec_pool(p, src0, layer.slot, arena),
+                    PreparedKind::Gap => {
+                        let mut out = arena.take_act(
+                            layer.slot,
+                            ActShape::new(src0.shape.channels, 1, 1),
+                            src0.layout,
+                        );
+                        gap_into(src0, &mut out);
+                        out
+                    }
+                    PreparedKind::Shuffle { channels, groups } => {
+                        let mut out = arena.take_act(layer.slot, src0.shape, src0.layout);
+                        shuffle_into(*channels, *groups, src0, &mut out);
+                        out
+                    }
+                    PreparedKind::Identity => {
+                        let mut out = arena.take_act(layer.slot, src0.shape, src0.layout);
+                        out.data.copy_from_slice(&src0.data);
+                        out
+                    }
+                    PreparedKind::Add => {
+                        let srcs = gather_inputs(&layer.inputs, input, &outs)?;
+                        exec_add(&srcs, layer.slot, arena)?
+                    }
+                    PreparedKind::Concat => {
+                        let srcs = gather_inputs(&layer.inputs, input, &outs)?;
+                        exec_concat(&srcs, layer.slot, arena)?
+                    }
                 }
             };
-            if let Some(out) = out {
-                if let Some(prev) = cur.take() {
-                    arena.put_act(1 - slot, prev);
+            // Recycle inputs whose last consumer just ran — their slots
+            // go back to the arena for reuse by later nodes.
+            for &j in &layer.inputs {
+                remaining[j] -= 1;
+                if remaining[j] == 0 {
+                    if let Some(t) = outs[j].take() {
+                        arena.put_act(self.layers[j].slot, t);
+                    }
                 }
-                cur = Some(out);
-                slot ^= 1;
+            }
+            if remaining[i] == 0 {
+                // Dead node (no consumers, not the output) — mirror the
+                // prepare-time liveness walk and recycle it immediately.
+                arena.put_act(layer.slot, out);
+            } else {
+                outs[i] = Some(out);
             }
         }
-        match cur {
-            Some(out) => {
-                // The result must outlive the arena: one clone per image
-                // (the arena keeps its buffer for the next image).
-                let result = out.clone();
-                arena.put_act(1 - slot, out);
-                Ok(result)
-            }
-            None => Ok(input.clone()),
-        }
+        let last = outs[n - 1]
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("network output recycled mid-run"))?;
+        // The result must outlive the arena: one clone per image (the
+        // arena keeps its buffer for the next image).
+        let result = last.clone();
+        arena.put_act(self.layers[n - 1].slot, last);
+        Ok(result)
     }
 
     /// Execute a coalesced batch, fanning images across up to `threads`
@@ -266,6 +385,12 @@ impl PreparedNetwork {
 }
 
 fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
+    let node = |kind: PreparedKind, est_out_elems: usize| PreparedLayer {
+        kind,
+        inputs: lp.inputs.clone(),
+        slot: 0, // assigned by the liveness walk in `prepare`
+        est_out_elems,
+    };
     match (&lp.layer, &lp.kind) {
         (LayerConfig::Conv(cfg), PlanKind::Generated { prog, machine, pad, .. }) => {
             let c = machine.c_int8();
@@ -298,9 +423,8 @@ fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
                     b
                 );
             }
-            Ok(PreparedLayer {
-                est_out_elems: acc_elems,
-                kind: PreparedKind::Conv(PreparedConv {
+            Ok(node(
+                PreparedKind::Conv(PreparedConv {
                     cfg: *cfg,
                     c,
                     pad: *pad,
@@ -311,7 +435,8 @@ fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
                     acc_elems,
                     num_regs: machine.num_regs,
                 }),
-            })
+                acc_elems,
+            ))
         }
         (LayerConfig::Conv(cfg), PlanKind::DepthwiseKernel { prog, machine, pad }) => {
             let c = machine.c_int8();
@@ -332,9 +457,8 @@ fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
                     b
                 );
             }
-            Ok(PreparedLayer {
-                est_out_elems: acc_elems,
-                kind: PreparedKind::Depthwise(PreparedConv {
+            Ok(node(
+                PreparedKind::Depthwise(PreparedConv {
                     cfg: *cfg,
                     c,
                     pad: *pad,
@@ -345,7 +469,8 @@ fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
                     acc_elems,
                     num_regs: machine.num_regs,
                 }),
-            })
+                acc_elems,
+            ))
         }
         (LayerConfig::Conv(cfg), PlanKind::GroupedKernel { prog, machine, pad, groups, .. }) => {
             let c = machine.c_int8();
@@ -382,9 +507,8 @@ fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
                 );
             }
             let acc_elems = cfg.out_channels * cfg.e_size();
-            Ok(PreparedLayer {
-                est_out_elems: acc_elems,
-                kind: PreparedKind::Grouped(PreparedGrouped {
+            Ok(node(
+                PreparedKind::Grouped(PreparedGrouped {
                     cfg: *cfg,
                     c,
                     pad: *pad,
@@ -398,22 +522,32 @@ fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
                     acc_elems,
                     num_regs: machine.num_regs,
                 }),
-            })
+                acc_elems,
+            ))
         }
-        (LayerConfig::Pool(p), _) => Ok(PreparedLayer {
-            est_out_elems: p.channels * p.oh() * p.ow(),
-            kind: PreparedKind::Pool(*p),
-        }),
-        (LayerConfig::GlobalAvgPool { channels, .. }, _) => Ok(PreparedLayer {
-            est_out_elems: *channels,
-            kind: PreparedKind::Gap,
-        }),
-        (LayerConfig::ChannelShuffle { channels, h, w, groups }, _) => Ok(PreparedLayer {
-            est_out_elems: channels * h * w,
-            kind: PreparedKind::Shuffle { channels: *channels, groups: *groups },
-        }),
-        (LayerConfig::Relu { .. }, _) => {
-            Ok(PreparedLayer { est_out_elems: 0, kind: PreparedKind::Identity })
+        (LayerConfig::Pool(p), _) => Ok(node(PreparedKind::Pool(*p), p.channels * p.oh() * p.ow())),
+        (LayerConfig::GlobalAvgPool { channels, .. }, _) => {
+            Ok(node(PreparedKind::Gap, *channels))
+        }
+        (LayerConfig::ChannelShuffle { channels, h, w, groups }, _) => Ok(node(
+            PreparedKind::Shuffle { channels: *channels, groups: *groups },
+            channels * h * w,
+        )),
+        (LayerConfig::Relu { channels, h, w }, _) => {
+            Ok(node(PreparedKind::Identity, channels * h * w))
+        }
+        (LayerConfig::Add { channels, h, w }, _) => {
+            anyhow::ensure!(lp.inputs.len() >= 2, "Add node needs >= 2 input edges");
+            Ok(node(PreparedKind::Add, channels * h * w))
+        }
+        (LayerConfig::Concat { parts, h, w }, _) => {
+            anyhow::ensure!(
+                lp.inputs.len() == parts.len() && !parts.is_empty(),
+                "Concat node: {} parts for {} edges",
+                parts.len(),
+                lp.inputs.len()
+            );
+            Ok(node(PreparedKind::Concat, parts.iter().sum::<usize>() * h * w))
         }
         (l, k) => anyhow::bail!(
             "prepared execution does not support {:?} with {:?}",
@@ -464,6 +598,22 @@ fn requant_conv_into(acc: &[i32], shift: u32, c: usize, out: &mut ActTensor) {
         let base = cb * e * c + ci;
         for (pos, &v) in acc[k * e..(k + 1) * e].iter().enumerate() {
             out.data[base + pos * c] = (v >> shift).clamp(0, 127) as i8;
+        }
+    }
+}
+
+/// Signed requantization of a k-major INT32 accumulator into NCHWc, in
+/// one fused pass — the same arithmetic as `quant::requantize_signed`
+/// (`(v >> shift).clamp(-128, 127)`; no ReLU). Used by the residual-Add
+/// executor so shortcut sums clamp exactly like the functional path.
+fn requant_signed_into(acc: &[i32], shift: u32, c: usize, out: &mut ActTensor) {
+    let e = out.shape.h * out.shape.w;
+    debug_assert_eq!(acc.len(), out.shape.channels * e);
+    for k in 0..out.shape.channels {
+        let (cb, ci) = (k / c, k % c);
+        let base = cb * e * c + ci;
+        for (pos, &v) in acc[k * e..(k + 1) * e].iter().enumerate() {
+            out.data[base + pos * c] = (v >> shift).clamp(-128, 127) as i8;
         }
     }
 }
@@ -577,4 +727,52 @@ fn exec_pool(p: &PoolConfig, src: &ActTensor, slot: usize, arena: &mut ExecArena
         arena.put_padded(staged);
         out
     }
+}
+
+/// Residual Add: widen all inputs into the INT32 accumulator (k-major,
+/// matching `coordinator::add_functional`'s `OutTensor`), then signed
+/// requantization fused into the output traversal.
+fn exec_add(srcs: &[&ActTensor], slot: usize, arena: &mut ExecArena) -> crate::Result<ActTensor> {
+    anyhow::ensure!(srcs.len() >= 2, "Add needs at least two inputs, got {}", srcs.len());
+    let shape = srcs[0].shape;
+    let ActLayout::NCHWc { c } = srcs[0].layout else {
+        anyhow::bail!("Add expects NCHWc activations");
+    };
+    arena.reset_acc(shape.elements());
+    {
+        let acc = &mut arena.acc;
+        let (h, w) = (shape.h, shape.w);
+        for s in srcs {
+            anyhow::ensure!(
+                s.shape == shape && s.layout == srcs[0].layout,
+                "Add input shapes/layouts differ"
+            );
+            for ch in 0..shape.channels {
+                for y in 0..h {
+                    for x in 0..w {
+                        acc[(ch * h + y) * w + x] += s.get(ch, y, x) as i32;
+                    }
+                }
+            }
+        }
+    }
+    let mut out = arena.take_act(slot, shape, srcs[0].layout);
+    requant_signed_into(&arena.acc, ADD_REQUANT_SHIFT, c, &mut out);
+    Ok(out)
+}
+
+/// Channel concat: parts written straight into the output's channel
+/// blocks (shared `concat_into` core — identical bytes to the
+/// functional path).
+fn exec_concat(
+    srcs: &[&ActTensor],
+    slot: usize,
+    arena: &mut ExecArena,
+) -> crate::Result<ActTensor> {
+    anyhow::ensure!(!srcs.is_empty(), "Concat needs at least one input");
+    let (h, w) = (srcs[0].shape.h, srcs[0].shape.w);
+    let channels: usize = srcs.iter().map(|s| s.shape.channels).sum();
+    let mut out = arena.take_act(slot, ActShape::new(channels, h, w), srcs[0].layout);
+    concat_into(srcs, &mut out)?;
+    Ok(out)
 }

@@ -93,7 +93,11 @@ pub fn problem_for_network(
     let mut run_cost = Vec::new();
     let mut names = Vec::new();
     let mut out_elems = Vec::new();
-    for layer in &net.layers {
+    // Graph networks are walked in topological (node) order; the chain
+    // DP over that order is exact for chains and a sound approximation
+    // for DAGs (§IV-C's observation that conv outputs can be emitted in
+    // any layout collapses most branch edges to zero anyway).
+    for layer in net.layer_configs() {
         let LayerConfig::Conv(cfg) = layer else { continue };
         if cfg.groups != 1 {
             continue;

@@ -13,6 +13,10 @@ pub use dense::DenseConfig;
 pub use pool::{PoolConfig, PoolKind};
 
 /// One layer of a network, as the coordinator sees it.
+///
+/// The graph IR (`nets::Node`) attaches explicit input edges to each
+/// layer; `Add` and `Concat` are the two genuinely multi-input node
+/// kinds (residual shortcuts and DenseNet/ShuffleNet concatenation).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum LayerConfig {
     Conv(ConvConfig),
@@ -25,6 +29,15 @@ pub enum LayerConfig {
     GlobalAvgPool { channels: usize, h: usize, w: usize },
     /// Channel shuffle between grouped convs (ShuffleNet §IV).
     ChannelShuffle { channels: usize, h: usize, w: usize, groups: usize },
+    /// Residual element-wise add (graph IR; ResNet shortcuts). All
+    /// inputs must share this exact shape; the sum is requantized
+    /// *signed* (`quant::requantize_signed`) back to INT8 — unlike conv
+    /// outputs there is no ReLU on the shortcut sum.
+    Add { channels: usize, h: usize, w: usize },
+    /// Channel-wise concatenation (graph IR; DenseNet dense blocks).
+    /// `parts` lists the channel count contributed by each input edge,
+    /// in edge order; output channels = the sum.
+    Concat { parts: Vec<usize>, h: usize, w: usize },
 }
 
 impl LayerConfig {
@@ -37,6 +50,8 @@ impl LayerConfig {
             LayerConfig::Relu { channels, h, w } => (*channels, *h, *w),
             LayerConfig::GlobalAvgPool { channels, .. } => (*channels, 1, 1),
             LayerConfig::ChannelShuffle { channels, h, w, .. } => (*channels, *h, *w),
+            LayerConfig::Add { channels, h, w } => (*channels, *h, *w),
+            LayerConfig::Concat { parts, h, w } => (parts.iter().sum(), *h, *w),
         }
     }
 
@@ -63,6 +78,8 @@ impl LayerConfig {
             LayerConfig::Relu { .. } => "relu".into(),
             LayerConfig::GlobalAvgPool { .. } => "gap".into(),
             LayerConfig::ChannelShuffle { groups, .. } => format!("shuffle-g{groups}"),
+            LayerConfig::Add { channels, .. } => format!("add{channels}"),
+            LayerConfig::Concat { parts, .. } => format!("concat-{}", parts.len()),
         }
     }
 }

@@ -34,14 +34,18 @@
 //!   simulate → select) and the §IV-C dynamic-programming layout
 //!   synchronizer.
 //! * [`nets`] — model zoo (ResNet-18/34, VGG-11/13/16, DenseNet-121,
-//!   MobileNet-V1) as per-layer configuration lists.
-//! * [`coordinator`] — the serving engine: per-layer plan selection with
-//!   a process-wide plan cache (memoized exploration), a batched request
-//!   scheduler over a worker pool, and latency/batching metrics.
+//!   MobileNet-V1) as a **graph IR**: nodes carry layer configs plus
+//!   explicit input edges, with residual `Add` and channel `Concat`
+//!   joins (chains are the degenerate single-predecessor case).
+//! * [`coordinator`] — the serving engine: per-node plan selection with
+//!   a process-wide plan cache (memoized exploration, topology-aware
+//!   fingerprints), a batched request scheduler over a worker pool, and
+//!   latency/batching metrics.
 //! * [`exec`] — the prepared execution engine: plans compile once into
-//!   per-layer executors (pre-validated schedules, pre-decoded micro-op
-//!   traces, pre-packed weights, ping-pong activation arenas, fused
-//!   requantization), then execute per image with no plan-derived work —
+//!   per-node executors (pre-validated schedules, pre-decoded micro-op
+//!   traces, pre-packed weights, liveness-assigned activation arenas,
+//!   fused requantization — signed for residual adds), then execute the
+//!   topological schedule per image with no plan-derived work —
 //!   bit-identical to the functional path, parallel across a batch.
 //! * [`runtime`] — PJRT (via the `xla` crate, behind the `pjrt` feature)
 //!   loader that executes the AOT-lowered JAX/Pallas artifacts for

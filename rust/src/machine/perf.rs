@@ -292,6 +292,43 @@ impl PerfModel {
         total
     }
 
+    /// Modeled cost of a streaming element-wise pass over activation
+    /// memory — the graph-IR joins (`Add`: two INT8 streams in, one
+    /// out; `Concat`: copy traffic) and similar non-kernel passes. The
+    /// streams are walked through the cache hierarchy in vector-width
+    /// steps (reads against the input region, writes against the output
+    /// region), so big join tensors pay real L1/L2 miss penalties
+    /// exactly like kernel traffic does, plus `alu_per_elem` cycles of
+    /// widening/requantization arithmetic per element.
+    pub fn estimate_stream_pass(
+        &mut self,
+        read_elems: usize,
+        write_elems: usize,
+        alu_per_elem: f64,
+        elems: usize,
+    ) -> PerfStats {
+        let mut s = PerfStats { invocations: 1, ..Default::default() };
+        s.cycles += self.cost.invocation_overhead;
+        s.cycles += elems as f64 * alu_per_elem;
+        let mut addr = IN_BASE;
+        for _ in 0..read_elems.div_ceil(REG_BYTES) {
+            s.mem_reads += 1;
+            s.instrs += 1;
+            s.cycles += self.cost.vload;
+            self.charge_access(addr, REG_BYTES, &mut s);
+            addr += REG_BYTES as u64;
+        }
+        let mut addr = OUT_BASE;
+        for _ in 0..write_elems.div_ceil(REG_BYTES) {
+            s.mem_writes += 1;
+            s.instrs += 1;
+            s.cycles += self.cost.vstore;
+            self.charge_access(addr, REG_BYTES, &mut s);
+            addr += REG_BYTES as u64;
+        }
+        s
+    }
+
     /// Modeled cost of executing the same layer for `batch` images
     /// back-to-back (the coordinator's batched serving path). The first
     /// image pays the cold-cache transient; subsequent images run against
@@ -397,6 +434,25 @@ mod tests {
         assert!(batched.cycles > single.cycles);
         assert!(batched.cycles / batch as f64 <= single.cycles);
         assert_eq!(batched.invocations, single.invocations * batch as u64);
+    }
+
+    #[test]
+    fn stream_pass_charges_traffic_and_misses() {
+        let mut pm = PerfModel::neoverse_n1();
+        // A residual add over a 64×28×28 activation: 2 reads + 1 write
+        // per element.
+        let elems = 64 * 28 * 28;
+        let s = pm.estimate_stream_pass(2 * elems, elems, 1.0, elems);
+        assert_eq!(s.mem_reads as usize, (2 * elems).div_ceil(REG_BYTES));
+        assert_eq!(s.mem_writes as usize, elems.div_ceil(REG_BYTES));
+        // Cold streams larger than L1 must see misses, and the modeled
+        // cost must exceed the pure ALU component.
+        assert!(s.l1_misses > 0);
+        assert!(s.cycles > elems as f64);
+        // Scaling the tensor scales the cost.
+        let mut pm2 = PerfModel::neoverse_n1();
+        let small = pm2.estimate_stream_pass(2 * 64, 64, 1.0, 64);
+        assert!(small.cycles < s.cycles / 10.0);
     }
 
     #[test]

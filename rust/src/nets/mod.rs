@@ -1,7 +1,17 @@
 //! Model zoo: the networks of the paper's end-to-end evaluation (Fig 8:
 //! ResNet-18/34, VGG-11/13/16, DenseNet-121; plus MobileNet-V1 to
-//! exercise depthwise kernels) expressed as layer-config lists over
+//! exercise depthwise kernels) expressed as a **graph IR** over
 //! ImageNet-shaped inputs (224×224×3, batch 1).
+//!
+//! A [`Network`] is a list of [`Node`]s in topological order: each node
+//! carries a [`LayerConfig`] plus explicit input edges (indices of
+//! earlier nodes; an empty edge list means the node reads the network
+//! input). A plain chain is the degenerate single-predecessor graph —
+//! [`Network::chain`] builds one, and VGG/MobileNet remain chains — but
+//! ResNet's residual shortcuts ([`LayerConfig::Add`], projection
+//! branch planned and executed as a real branch) and DenseNet's dense
+//! blocks ([`LayerConfig::Concat`]) are now first-class topology, not
+//! flattened approximations.
 //!
 //! Convolution `ih/iw` are the *padded* dims (padding is materialized by
 //! the coordinator when it lays out tensors, matching the kernels'
@@ -9,23 +19,131 @@
 
 use crate::layer::{ConvConfig, DenseConfig, LayerConfig, PoolConfig};
 
-/// A network: an ordered list of layers.
+/// One node of the network graph: a layer plus the indices of the nodes
+/// feeding it. Edges always point backwards (`inputs[k] < own index`),
+/// so node order is a valid topological schedule. An empty `inputs`
+/// means the node reads the network input tensor.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub layer: LayerConfig,
+    pub inputs: Vec<usize>,
+}
+
+/// A network: a DAG of layers in topological order. The last node is
+/// the network output.
 #[derive(Clone, Debug)]
 pub struct Network {
     pub name: String,
-    pub layers: Vec<LayerConfig>,
+    pub nodes: Vec<Node>,
+    /// Spatial size of the network input (pad inference for the first
+    /// layer of every branch reading the input; ImageNet nets use
+    /// 224×224).
+    pub input_hw: (usize, usize),
 }
 
 impl Network {
+    /// A linear network: node `i` reads node `i-1` (node 0 reads the
+    /// network input). This is the seed `Vec<LayerConfig>` shape —
+    /// existing chain call sites keep working through it, and a
+    /// chain-built network is structurally identical (same fingerprint,
+    /// same plan, same outputs) to a builder-built chain of the same
+    /// layers.
+    /// `input_hw` defaults to ImageNet's 224×224 (the seed's implicit
+    /// assumption — it only affects pad inference for layers reading
+    /// the network input, and saturates to pad 0 for smaller configs);
+    /// chains executed at other input sizes must use
+    /// [`Network::chain_at`] so stem padding is inferred correctly.
+    pub fn chain(name: impl Into<String>, layers: Vec<LayerConfig>) -> Network {
+        Network::chain_at(name, layers, (224, 224))
+    }
+
+    /// [`Network::chain`] with an explicit input size.
+    pub fn chain_at(
+        name: impl Into<String>,
+        layers: Vec<LayerConfig>,
+        input_hw: (usize, usize),
+    ) -> Network {
+        let nodes = layers
+            .into_iter()
+            .enumerate()
+            .map(|(i, layer)| Node {
+                layer,
+                inputs: if i == 0 { Vec::new() } else { vec![i - 1] },
+            })
+            .collect();
+        Network { name: name.into(), nodes, input_hw }
+    }
+
+    /// Is this the degenerate single-predecessor graph?
+    pub fn is_chain(&self) -> bool {
+        self.nodes.iter().enumerate().all(|(i, n)| {
+            if i == 0 {
+                n.inputs.is_empty()
+            } else {
+                n.inputs.len() == 1 && n.inputs[0] == i - 1
+            }
+        })
+    }
+
+    /// Structural sanity of the graph: edges point backwards, only
+    /// Add/Concat are multi-input, and Add/Concat shapes agree with
+    /// their predecessors. The planner checks this once per network.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &j in &node.inputs {
+                let name = node.layer.name();
+                anyhow::ensure!(j < i, "node {i} ({name}) has a forward edge to {j}");
+            }
+            match &node.layer {
+                LayerConfig::Add { channels, h, w } => {
+                    anyhow::ensure!(node.inputs.len() >= 2, "Add node {i} needs >= 2 inputs");
+                    for &j in &node.inputs {
+                        let s = self.nodes[j].layer.out_shape();
+                        anyhow::ensure!(
+                            s == (*channels, *h, *w),
+                            "Add node {i} shape ({channels},{h},{w}) != input {j} shape {s:?}"
+                        );
+                    }
+                }
+                LayerConfig::Concat { parts, h, w } => {
+                    anyhow::ensure!(
+                        parts.len() == node.inputs.len() && !parts.is_empty(),
+                        "Concat node {i}: {} parts for {} inputs",
+                        parts.len(),
+                        node.inputs.len()
+                    );
+                    for (&j, &p) in node.inputs.iter().zip(parts) {
+                        let s = self.nodes[j].layer.out_shape();
+                        anyhow::ensure!(
+                            s == (p, *h, *w),
+                            "Concat node {i} part ({p},{h},{w}) != input {j} shape {s:?}"
+                        );
+                    }
+                }
+                _ => anyhow::ensure!(
+                    node.inputs.len() <= 1,
+                    "node {i} ({}) is single-input but has {} edges",
+                    node.layer.name(),
+                    node.inputs.len()
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    /// The layer configs in topological (node) order.
+    pub fn layer_configs(&self) -> impl Iterator<Item = &LayerConfig> {
+        self.nodes.iter().map(|n| &n.layer)
+    }
+
     /// Total MACs (conv + fc).
     pub fn macs(&self) -> u64 {
-        self.layers.iter().map(|l| l.macs()).sum()
+        self.layer_configs().map(|l| l.macs()).sum()
     }
 
     /// Conv layers only (the latency-dominant set the paper optimizes).
     pub fn conv_layers(&self) -> Vec<&ConvConfig> {
-        self.layers
-            .iter()
+        self.layer_configs()
             .filter_map(|l| match l {
                 LayerConfig::Conv(c) => Some(c),
                 _ => None,
@@ -34,85 +152,145 @@ impl Network {
     }
 }
 
-/// Incremental builder tracking the activation shape.
+/// Incremental graph builder tracking the activation shape of a movable
+/// *head* node. Chain-style methods (`conv`, `maxpool`, …) extend from
+/// the head; `rewind` moves the head back to a saved node to start a
+/// branch, and `add`/`concat` join branches.
 struct NetBuilder {
-    ch: usize,
-    h: usize,
-    w: usize,
-    layers: Vec<LayerConfig>,
+    nodes: Vec<Node>,
+    shapes: Vec<(usize, usize, usize)>,
+    head: Option<usize>,
+    input: (usize, usize, usize),
 }
 
 impl NetBuilder {
     fn new(ch: usize, h: usize, w: usize) -> Self {
-        NetBuilder { ch, h, w, layers: Vec::new() }
+        NetBuilder { nodes: Vec::new(), shapes: Vec::new(), head: None, input: (ch, h, w) }
+    }
+
+    /// Shape produced by the head node (the network input before any
+    /// node exists).
+    fn head_shape(&self) -> (usize, usize, usize) {
+        self.head.map(|i| self.shapes[i]).unwrap_or(self.input)
+    }
+
+    /// Index of the head node (None = network input).
+    fn head(&self) -> Option<usize> {
+        self.head
+    }
+
+    /// Move the head back to `at` (None = network input) to grow a
+    /// branch from there.
+    fn rewind(&mut self, at: Option<usize>) -> &mut Self {
+        self.head = at;
+        self
+    }
+
+    /// Append a node with explicit edges; it becomes the new head.
+    fn push(&mut self, layer: LayerConfig, inputs: Vec<usize>) -> usize {
+        let shape = layer.out_shape();
+        self.nodes.push(Node { layer, inputs });
+        self.shapes.push(shape);
+        let idx = self.nodes.len() - 1;
+        self.head = Some(idx);
+        idx
+    }
+
+    /// Append a node fed by the current head.
+    fn push_from_head(&mut self, layer: LayerConfig) -> usize {
+        let inputs = self.head.map(|i| vec![i]).unwrap_or_default();
+        self.push(layer, inputs)
     }
 
     fn conv(&mut self, out_ch: usize, f: usize, stride: usize, pad: usize) -> &mut Self {
-        let cfg = ConvConfig::simple(self.h + 2 * pad, self.w + 2 * pad, f, f, stride, self.ch, out_ch);
-        self.ch = out_ch;
-        self.h = cfg.oh();
-        self.w = cfg.ow();
-        self.layers.push(LayerConfig::Conv(cfg));
+        let (ch, h, w) = self.head_shape();
+        let cfg = ConvConfig::simple(h + 2 * pad, w + 2 * pad, f, f, stride, ch, out_ch);
+        self.push_from_head(LayerConfig::Conv(cfg));
         self
     }
 
     fn depthwise(&mut self, f: usize, stride: usize, pad: usize) -> &mut Self {
-        let cfg = ConvConfig::depthwise(self.h + 2 * pad, self.w + 2 * pad, f, f, stride, self.ch);
-        self.h = cfg.oh();
-        self.w = cfg.ow();
-        self.layers.push(LayerConfig::Conv(cfg));
+        let (ch, h, w) = self.head_shape();
+        let cfg = ConvConfig::depthwise(h + 2 * pad, w + 2 * pad, f, f, stride, ch);
+        self.push_from_head(LayerConfig::Conv(cfg));
         self
     }
 
     fn maxpool(&mut self, f: usize, stride: usize, pad: usize) -> &mut Self {
-        let cfg = PoolConfig::max(self.ch, self.h + 2 * pad, self.w + 2 * pad, f, stride);
-        self.h = cfg.oh();
-        self.w = cfg.ow();
-        self.layers.push(LayerConfig::Pool(cfg));
+        let (ch, h, w) = self.head_shape();
+        let cfg = PoolConfig::max(ch, h + 2 * pad, w + 2 * pad, f, stride);
+        self.push_from_head(LayerConfig::Pool(cfg));
         self
     }
 
     fn avgpool(&mut self, f: usize, stride: usize) -> &mut Self {
-        let cfg = PoolConfig::avg(self.ch, self.h, self.w, f, stride);
-        self.h = cfg.oh();
-        self.w = cfg.ow();
-        self.layers.push(LayerConfig::Pool(cfg));
+        let (ch, h, w) = self.head_shape();
+        let cfg = PoolConfig::avg(ch, h, w, f, stride);
+        self.push_from_head(LayerConfig::Pool(cfg));
         self
     }
 
     fn gap(&mut self) -> &mut Self {
-        self.layers.push(LayerConfig::GlobalAvgPool { channels: self.ch, h: self.h, w: self.w });
-        self.h = 1;
-        self.w = 1;
+        let (ch, h, w) = self.head_shape();
+        self.push_from_head(LayerConfig::GlobalAvgPool { channels: ch, h, w });
         self
     }
 
     fn fc(&mut self, out: usize) -> &mut Self {
-        self.layers.push(LayerConfig::Dense(DenseConfig::new(self.ch * self.h * self.w, out)));
-        self.ch = out;
-        self.h = 1;
-        self.w = 1;
+        let (ch, h, w) = self.head_shape();
+        self.push_from_head(LayerConfig::Dense(DenseConfig::new(ch * h * w, out)));
+        self
+    }
+
+    /// Residual join: element-wise Add of two equal-shaped nodes.
+    fn add(&mut self, a: usize, b: usize) -> &mut Self {
+        let sa = self.shapes[a];
+        assert_eq!(sa, self.shapes[b], "residual add requires matching shapes");
+        self.push(LayerConfig::Add { channels: sa.0, h: sa.1, w: sa.2 }, vec![a, b]);
+        self
+    }
+
+    /// Channel-wise concat of `parts` (equal spatial dims required).
+    fn concat(&mut self, parts: &[usize]) -> &mut Self {
+        let (_, h, w) = self.shapes[parts[0]];
+        let widths: Vec<usize> = parts
+            .iter()
+            .map(|&p| {
+                assert_eq!((self.shapes[p].1, self.shapes[p].2), (h, w), "concat spatial mismatch");
+                self.shapes[p].0
+            })
+            .collect();
+        self.push(LayerConfig::Concat { parts: widths, h, w }, parts.to_vec());
         self
     }
 
     fn finish(self, name: &str) -> Network {
-        Network { name: name.to_string(), layers: self.layers }
+        let net = Network {
+            name: name.to_string(),
+            nodes: self.nodes,
+            input_hw: (self.input.1, self.input.2),
+        };
+        net.validate().expect("builder produced an invalid graph");
+        net
     }
 }
 
-/// ResNet basic block (two 3×3 convs; stride + 1×1 projection on the
-/// first block of a stage). The projection conv is included as a layer —
-/// its MACs count in the end-to-end latency exactly as in the paper's
-/// TVM baselines.
+/// ResNet basic block (two 3×3 convs) with its **true** residual
+/// topology: the shortcut (identity, or a 1×1 projection conv when the
+/// shape changes) is a separate branch from the block input, joined to
+/// the main path by a signed-requantizing Add node.
 fn resnet_basic(b: &mut NetBuilder, out_ch: usize, stride: usize) {
-    if stride != 1 || b.ch != out_ch {
-        // Projection shortcut (runs alongside the main path; we count its
-        // cost in sequence, a conservative single-core model).
-        let proj = ConvConfig::simple(b.h, b.w, 1, 1, stride, b.ch, out_ch);
-        b.layers.push(LayerConfig::Conv(proj));
-    }
-    b.conv(out_ch, 3, stride, 1);
-    b.conv(out_ch, 3, 1, 1);
+    let block_in = b.head();
+    let (in_ch, _, _) = b.head_shape();
+    b.conv(out_ch, 3, stride, 1).conv(out_ch, 3, 1, 1);
+    let main = b.head().expect("main path exists");
+    let shortcut = if stride != 1 || in_ch != out_ch {
+        b.rewind(block_in).conv(out_ch, 1, stride, 0);
+        b.head().unwrap()
+    } else {
+        block_in.expect("identity shortcut needs a block input node")
+    };
+    b.add(main, shortcut);
 }
 
 /// ResNet-18 (blocks [2,2,2,2]).
@@ -139,7 +317,26 @@ fn resnet(blocks: &[usize; 4], name: &str) -> Network {
     b.finish(name)
 }
 
-/// VGG family: config letters per Simonyan & Zisserman.
+/// A ResNet-style prefix at a reduced input size (16-channel input, the
+/// 7×7/s2 stem, max-pool, then `blocks_per_stage` basic blocks for the
+/// first `stages` stages) — the true residual topology (identity *and*
+/// projection shortcuts) in a size small enough to execute functionally
+/// in tests and benches.
+pub fn resnet_prefix(h: usize, w: usize, blocks_per_stage: usize, stages: usize) -> Network {
+    assert!((1..=4).contains(&stages));
+    let mut b = NetBuilder::new(16, h, w);
+    b.conv(64, 7, 2, 3).maxpool(3, 2, 1);
+    let widths = [64, 128, 256, 512];
+    for (stage, &wd) in widths.iter().take(stages).enumerate() {
+        for i in 0..blocks_per_stage {
+            let stride = if stage > 0 && i == 0 { 2 } else { 1 };
+            resnet_basic(&mut b, wd, stride);
+        }
+    }
+    b.finish(&format!("resnet-prefix-{h}x{w}-b{blocks_per_stage}s{stages}"))
+}
+
+/// VGG family: config letters per Simonyan & Zisserman. Pure chains.
 fn vgg(cfg: &[&[usize]], name: &str) -> Network {
     let mut b = NetBuilder::new(3, 224, 224);
     for group in cfg {
@@ -167,41 +364,55 @@ pub fn vgg16() -> Network {
     )
 }
 
+/// One DenseNet unit: bottleneck 1×1 (4·growth) → 3×3 (growth), then the
+/// new feature is concatenated onto the running feature map — the true
+/// DenseNet wiring (every unit reads everything before it through the
+/// running concat).
+fn dense_unit(b: &mut NetBuilder, growth: usize) {
+    let feat = b.head().expect("dense unit needs a feature map");
+    b.conv(4 * growth, 1, 1, 0).conv(growth, 3, 1, 1);
+    let fresh = b.head().unwrap();
+    b.concat(&[feat, fresh]);
+}
+
 /// DenseNet-121: growth 32, blocks [6,12,24,16], 1×1 bottleneck (4·growth)
-/// before each 3×3, compression-0.5 transitions.
+/// before each 3×3, compression-0.5 transitions — with **true** channel
+/// concatenation nodes, not a flattened channel-count approximation.
 pub fn densenet121() -> Network {
     let growth = 32;
     let mut b = NetBuilder::new(3, 224, 224);
     b.conv(64, 7, 2, 3).maxpool(3, 2, 1);
-    let mut channels = 64;
     let blocks = [6usize, 12, 24, 16];
     for (bi, &n) in blocks.iter().enumerate() {
         for _ in 0..n {
-            // Bottleneck 1×1 then 3×3; DenseNet concatenates, so the
-            // running channel count grows by `growth` per layer.
-            let bottleneck = ConvConfig::simple(b.h, b.w, 1, 1, 1, channels, 4 * growth);
-            b.layers.push(LayerConfig::Conv(bottleneck));
-            let conv3 = ConvConfig::simple(b.h + 2, b.w + 2, 3, 3, 1, 4 * growth, growth);
-            b.layers.push(LayerConfig::Conv(conv3));
-            channels += growth;
+            dense_unit(&mut b, growth);
         }
         if bi + 1 < blocks.len() {
             // Transition: 1×1 halving channels + 2×2 average pool.
-            let half = channels / 2;
-            let t = ConvConfig::simple(b.h, b.w, 1, 1, 1, channels, half);
-            b.layers.push(LayerConfig::Conv(t));
-            b.ch = half;
-            channels = half;
+            let (channels, _, _) = b.head_shape();
+            b.conv(channels / 2, 1, 1, 0);
             b.avgpool(2, 2);
         }
     }
-    b.ch = channels;
     b.gap().fc(1000);
     b.finish("densenet121")
 }
 
+/// A DenseNet-style prefix at a reduced input size (16-channel input,
+/// stem + `units` dense units with true concats), executable
+/// functionally in tests and benches.
+pub fn densenet_prefix(h: usize, w: usize, units: usize) -> Network {
+    let growth = 32;
+    let mut b = NetBuilder::new(16, h, w);
+    b.conv(64, 7, 2, 3).maxpool(3, 2, 1);
+    for _ in 0..units {
+        dense_unit(&mut b, growth);
+    }
+    b.finish(&format!("densenet-prefix-{h}x{w}-u{units}"))
+}
+
 /// MobileNet-V1 (depthwise-separable stacks) — exercises the depthwise
-/// code generator.
+/// code generator. Pure chain.
 pub fn mobilenet_v1() -> Network {
     let mut b = NetBuilder::new(3, 224, 224);
     b.conv(32, 3, 2, 1);
@@ -235,13 +446,15 @@ pub fn mobilenet_v1() -> Network {
 pub fn shufflenet_stage(channels: usize, groups: usize, h: usize, w: usize, units: usize) -> Network {
     let mut b = NetBuilder::new(channels, h, w);
     for _ in 0..units {
-        let cfg1 = ConvConfig::grouped(b.h, b.w, 1, 1, 1, b.ch, channels, groups);
-        b.layers.push(LayerConfig::Conv(cfg1));
-        b.ch = channels;
-        b.layers.push(LayerConfig::ChannelShuffle { channels, h: b.h, w: b.w, groups });
+        let (ch, hh, ww) = b.head_shape();
+        let cfg1 = ConvConfig::grouped(hh, ww, 1, 1, 1, ch, channels, groups);
+        b.push_from_head(LayerConfig::Conv(cfg1));
+        let (_, hh, ww) = b.head_shape();
+        b.push_from_head(LayerConfig::ChannelShuffle { channels, h: hh, w: ww, groups });
         b.depthwise(3, 1, 1);
-        let cfg2 = ConvConfig::grouped(b.h, b.w, 1, 1, 1, channels, channels, groups);
-        b.layers.push(LayerConfig::Conv(cfg2));
+        let (ch, hh, ww) = b.head_shape();
+        let cfg2 = ConvConfig::grouped(hh, ww, 1, 1, 1, ch, channels, groups);
+        b.push_from_head(LayerConfig::Conv(cfg2));
     }
     b.finish("shufflenet_stage")
 }
@@ -272,13 +485,34 @@ mod tests {
     #[test]
     fn resnet18_shape_chain_is_consistent() {
         let net = resnet18();
+        net.validate().unwrap();
         // 17 weighted convs + 3 projections + pool + gap + fc
         let convs = net.conv_layers();
         assert_eq!(convs.len(), 17 + 3);
+        // 8 basic blocks → 8 residual Add nodes; the graph is not a chain.
+        let adds = net
+            .layer_configs()
+            .filter(|l| matches!(l, LayerConfig::Add { .. }))
+            .count();
+        assert_eq!(adds, 8);
+        assert!(!net.is_chain());
         // Final conv stage operates at 7x7.
         let last_conv = convs.last().unwrap();
         assert_eq!(last_conv.oh(), 7);
         assert_eq!(last_conv.out_channels, 512);
+    }
+
+    #[test]
+    fn resnet_add_nodes_join_main_and_shortcut() {
+        let net = resnet18();
+        for (i, node) in net.nodes.iter().enumerate() {
+            if let LayerConfig::Add { channels, h, w } = node.layer {
+                assert_eq!(node.inputs.len(), 2, "Add {i} arity");
+                for &j in &node.inputs {
+                    assert_eq!(net.nodes[j].layer.out_shape(), (channels, h, w));
+                }
+            }
+        }
     }
 
     #[test]
@@ -301,8 +535,21 @@ mod tests {
     }
 
     #[test]
-    fn densenet_channels_grow_and_compress() {
+    fn vgg_and_mobilenet_stay_chains() {
+        assert!(vgg16().is_chain());
+        assert!(mobilenet_v1().is_chain());
+    }
+
+    #[test]
+    fn densenet_concats_grow_and_transitions_compress() {
         let net = densenet121();
+        net.validate().unwrap();
+        // One true Concat node per dense unit.
+        let concats = net
+            .layer_configs()
+            .filter(|l| matches!(l, LayerConfig::Concat { .. }))
+            .count();
+        assert_eq!(concats, 6 + 12 + 24 + 16);
         let convs = net.conv_layers();
         // Final dense-block layer consumes 1024 - growth channels via its
         // bottleneck; last transition went 512.
@@ -321,8 +568,61 @@ mod tests {
             .count();
         assert_eq!(dw, 13);
         // Ends at 7x7x1024.
-        let (ch, h, _) = net.layers[net.layers.len() - 3].out_shape();
+        let (ch, h, _) = net.nodes[net.nodes.len() - 3].layer.out_shape();
         assert_eq!((ch, h), (1024, 7));
+    }
+
+    #[test]
+    fn prefixes_are_valid_and_small() {
+        let r = resnet_prefix(32, 32, 1, 2);
+        r.validate().unwrap();
+        assert!(!r.is_chain());
+        // One identity-shortcut Add and one projection-shortcut Add.
+        let adds = r.layer_configs().filter(|l| matches!(l, LayerConfig::Add { .. })).count();
+        assert_eq!(adds, 2);
+        let d = densenet_prefix(32, 32, 2);
+        d.validate().unwrap();
+        let (ch, _, _) = d.nodes.last().unwrap().layer.out_shape();
+        assert_eq!(ch, 64 + 2 * 32);
+    }
+
+    #[test]
+    fn chain_constructor_matches_builder_chain() {
+        let built = vgg11();
+        let layers: Vec<LayerConfig> = built.layer_configs().cloned().collect();
+        let chained = Network::chain("vgg11", layers);
+        assert!(chained.is_chain());
+        assert_eq!(built.nodes.len(), chained.nodes.len());
+        for (a, b) in built.nodes.iter().zip(&chained.nodes) {
+            assert_eq!(a.layer, b.layer);
+            assert_eq!(a.inputs, b.inputs);
+        }
+        assert_eq!(built.input_hw, chained.input_hw);
+    }
+
+    #[test]
+    fn validate_rejects_bad_graphs() {
+        // Forward edge.
+        let bad = Network {
+            name: "bad".into(),
+            nodes: vec![Node {
+                layer: LayerConfig::Relu { channels: 16, h: 4, w: 4 },
+                inputs: vec![1],
+            }],
+            input_hw: (4, 4),
+        };
+        assert!(bad.validate().is_err());
+        // Add with mismatched input shapes.
+        let bad = Network {
+            name: "bad-add".into(),
+            nodes: vec![
+                Node { layer: LayerConfig::Relu { channels: 16, h: 4, w: 4 }, inputs: vec![] },
+                Node { layer: LayerConfig::Relu { channels: 32, h: 4, w: 4 }, inputs: vec![] },
+                Node { layer: LayerConfig::Add { channels: 16, h: 4, w: 4 }, inputs: vec![0, 1] },
+            ],
+            input_hw: (4, 4),
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -25,8 +25,12 @@ pub fn requantize_relu(acc: &OutTensor, shift: u32, layout: ActLayout) -> ActTen
     out
 }
 
-/// Signed requantization (no ReLU), used for residual-add paths.
-pub fn requantize(acc: &OutTensor, shift: u32, layout: ActLayout) -> ActTensor {
+/// Signed requantization (no ReLU): clamp to the full INT8 range. This
+/// is the inter-layer step of the residual-add path — the coordinator's
+/// `Add` node sums INT8 activations in INT32 and requantizes the sum
+/// through here (shift `coordinator::ADD_REQUANT_SHIFT`), so shortcut
+/// sums saturate exactly like conv outputs do.
+pub fn requantize_signed(acc: &OutTensor, shift: u32, layout: ActLayout) -> ActTensor {
     let mut out = ActTensor::zeros(
         crate::tensor::ActShape::new(acc.channels, acc.h, acc.w),
         layout,
@@ -150,6 +154,16 @@ mod tests {
         assert_eq!(t.get(0, 0, 0), 0); // ReLU
         assert_eq!(t.get(0, 0, 1), 127); // 256>>1 = 128 -> clamp 127
         assert_eq!(t.get(0, 0, 2), 127);
+    }
+
+    #[test]
+    fn requantize_signed_clamps_full_range() {
+        let mut acc = OutTensor::zeros(1, 1, 3);
+        acc.data = vec![-300, -100, 200];
+        let t = requantize_signed(&acc, 0, ActLayout::NCHWc { c: 1 });
+        assert_eq!(t.get(0, 0, 0), -128); // negative values survive (no ReLU)…
+        assert_eq!(t.get(0, 0, 1), -100);
+        assert_eq!(t.get(0, 0, 2), 127); // …and both ends saturate
     }
 
     #[test]

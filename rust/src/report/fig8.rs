@@ -39,7 +39,7 @@ fn baseline_cycles(net: &Network, machine: &MachineConfig, sample: usize) -> (f6
     let cost = ScalarCost::neoverse_n1();
     let mut tuned = 0.0;
     let mut scalar = 0.0;
-    for layer in &net.layers {
+    for layer in net.layer_configs() {
         match layer {
             LayerConfig::Conv(cfg) if cfg.groups == 1 => {
                 let padded = coordinator::padded_conv(cfg, machine);
@@ -68,12 +68,11 @@ fn baseline_cycles(net: &Network, machine: &MachineConfig, sample: usize) -> (f6
                 scalar += scalar_cycles(&conv, &cost).cycles;
             }
             other => {
-                // Same scalar pass cost on all systems.
-                let c = match other {
-                    LayerConfig::Pool(p) => p.reads() as f64 * 1.2,
-                    LayerConfig::GlobalAvgPool { channels, h, w } => (channels * h * w) as f64,
-                    _ => 0.0,
-                };
+                // Same scalar pass cost on all systems — including the
+                // graph joins (residual Add, DenseNet Concat), costed by
+                // the shared stream-traffic model so every system's end
+                // to end latency reflects the true topology.
+                let c = crate::coordinator::plan::scalar_pass_stats(other).cycles;
                 tuned += c;
                 scalar += c;
             }
@@ -142,13 +141,13 @@ mod tests {
     use crate::layer::ConvConfig;
 
     fn tiny_net() -> Network {
-        Network {
-            name: "tiny".into(),
-            layers: vec![
+        Network::chain(
+            "tiny",
+            vec![
                 LayerConfig::Conv(ConvConfig::simple(18, 18, 3, 3, 1, 16, 32)),
                 LayerConfig::Conv(ConvConfig::simple(16, 16, 3, 3, 1, 32, 32)),
             ],
-        }
+        )
     }
 
     #[test]

@@ -10,10 +10,10 @@ use crate::util::table::Table;
 /// The distinct VGG-16 conv shapes.
 pub fn vgg_conv_layers() -> Vec<ConvConfig> {
     let mut seen: Vec<ConvConfig> = Vec::new();
-    for layer in crate::nets::vgg16().layers {
+    for layer in crate::nets::vgg16().layer_configs() {
         if let LayerConfig::Conv(c) = layer {
-            if !seen.contains(&c) {
-                seen.push(c);
+            if !seen.contains(c) {
+                seen.push(*c);
             }
         }
     }

@@ -32,7 +32,7 @@ fn bound_plan(machine: MachineConfig) -> NetworkPlan {
         }
         planned.push(lp);
     }
-    NetworkPlan { name: "pipeline".into(), layers: planned }
+    NetworkPlan::chain("pipeline", planned)
 }
 
 #[test]
@@ -132,7 +132,8 @@ fn shufflenet_stage_runs_functionally() {
     let mut layers = Vec::new();
     let mut prev_hw = (8usize, 8usize);
     let mut seed = 90;
-    for layer in &net.layers {
+    for node in &net.nodes {
+        let layer = &node.layer;
         let pad = match layer {
             LayerConfig::Conv(cfg) => (cfg.ih.saturating_sub(prev_hw.0)) / 2,
             _ => 0,
@@ -156,7 +157,7 @@ fn shufflenet_stage_runs_functionally() {
         prev_hw = (h, w);
         layers.push(lp);
     }
-    let plan = NetworkPlan { name: net.name, layers };
+    let plan = NetworkPlan::chain(net.name, layers);
     let input = ActTensor::random(ActShape::new(32, 8, 8), ActLayout::NCHWc { c: 16 }, 3);
     let out = coordinator::run_network_functional(&plan, &input, 9).expect("shuffle pipeline");
     assert_eq!(out.shape.channels, 32);
@@ -177,6 +178,10 @@ fn plan_all_fig8_networks() {
             },
         );
         assert!(plan.total_cycles() > 1e6, "{} too cheap", net.name);
-        assert_eq!(plan.layers.len(), net.layers.len());
+        assert_eq!(plan.layers.len(), net.nodes.len());
+        // Plans keep the graph edges (residual adds / dense concats).
+        for (lp, node) in plan.layers.iter().zip(&net.nodes) {
+            assert_eq!(lp.inputs, node.inputs);
+        }
     }
 }

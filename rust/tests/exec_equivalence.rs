@@ -192,7 +192,7 @@ fn mixed_plan(machine: MachineConfig) -> NetworkPlan {
     layers.push(planner.plan_layer(&LayerConfig::Pool(PoolConfig::max(32, 8, 8, 2, 2)), 0));
     layers.push(planner.plan_layer(&LayerConfig::GlobalAvgPool { channels: 32, h: 4, w: 4 }, 0));
 
-    NetworkPlan { name: "mixed-kinds".into(), layers }
+    NetworkPlan::chain("mixed-kinds", layers)
 }
 
 fn mixed_input(seed: u64) -> ActTensor {
@@ -236,7 +236,7 @@ fn prepared_handles_stem_channel_padding() {
         WeightLayout::CKRSc { c },
         804,
     ));
-    let plan = NetworkPlan { name: "stem".into(), layers: vec![lp] };
+    let plan = NetworkPlan::chain("stem", vec![lp]);
     let prepared = PreparedNetwork::prepare(&plan).expect("prepare");
     let mut arena = prepared.new_arena();
     let input = ActTensor::random(ActShape::new(3, 6, 6), ActLayout::NCHWc { c: 3 }, 55);

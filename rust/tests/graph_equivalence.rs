@@ -1,0 +1,378 @@
+//! Integration: graph-IR execution (residual Add, channel Concat,
+//! multi-fanout) is correct and bit-stable across every execution path.
+//!
+//! * Randomized DAGs (diamonds, multi-fanout, mixed concat widths): the
+//!   functional graph runner matches a **naive scalar reference**
+//!   (direct `conv_ref` + element-wise add/concat, no interpreter, no
+//!   shared padding helpers), and the prepared engine matches the
+//!   functional runner byte-for-byte.
+//! * ResNet-18 / DenseNet-121 prefixes (true skip/concat topology at
+//!   reduced input size): prepared == functional, bit-identical, and
+//!   parallel `run_batch` == sequential.
+//! * A chain-built network produces byte-identical plans and outputs to
+//!   its graph-built equivalent (the no-regression guarantee for
+//!   VGG/MobileNet).
+//! * Arena-liveness property: the prepared engine's slot count equals
+//!   the graph's maximum live set (2 for chains), and no slot is read
+//!   after being freed — a liveness bug would either trip the arena's
+//!   double-take assertion or corrupt bytes and fail the equivalence
+//!   checks.
+
+use yflows::coordinator::{
+    self,
+    plan::{plan_fingerprint, plan_network_uncached, NetworkPlan, PlanKind, PlannerOptions},
+};
+use yflows::exec::PreparedNetwork;
+use yflows::layer::{oracle::conv_ref, ConvConfig, LayerConfig};
+use yflows::machine::MachineConfig;
+use yflows::nets::{self, Network, Node};
+use yflows::quant::requantize_relu;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::prop::check;
+use yflows::util::rng::Rng;
+
+const SHIFT: u32 = 9;
+const C: usize = 16; // 128-bit block size
+
+/// Bind deterministic random CKRSc weights to every generated-conv layer
+/// of a plan (test graphs keep channels block-aligned, so the planned
+/// config's dims are the bind dims).
+fn bind_all(plan: &mut NetworkPlan, seed: u64) {
+    for (i, lp) in plan.layers.iter_mut().enumerate() {
+        if let (LayerConfig::Conv(cfg), PlanKind::Generated { .. }) = (&lp.layer, &lp.kind) {
+            let cfg = *cfg; // end the borrow of lp.layer before bind_weights
+            let shape = WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw);
+            lp.bind_weights(WeightTensor::random(
+                shape,
+                WeightLayout::CKRSc { c: C },
+                seed.wrapping_add(i as u64),
+            ));
+        }
+    }
+}
+
+/// Naive scalar reference for conv/Add/Concat graphs: direct convolution
+/// (`conv_ref`, no interpreter), element-wise joins via logical get/set
+/// (no block-copy fast paths), all outputs kept live (no arena).
+fn reference_run(plan: &NetworkPlan, input: &ActTensor, shift: u32) -> ActTensor {
+    let n = plan.layers.len();
+    let mut outs: Vec<Option<ActTensor>> = vec![None; n];
+    for (i, lp) in plan.layers.iter().enumerate() {
+        let out = {
+            let srcs: Vec<&ActTensor> = if lp.inputs.is_empty() {
+                vec![input]
+            } else {
+                lp.inputs.iter().map(|&j| outs[j].as_ref().expect("ref input")).collect()
+            };
+            match (&lp.layer, &lp.kind) {
+                (LayerConfig::Conv(cfg), PlanKind::Generated { pad, machine, .. }) => {
+                    let padded = srcs[0].pad_spatial(*pad);
+                    assert_eq!(
+                        padded.shape.channels, cfg.in_channels,
+                        "test graphs stay channel-aligned"
+                    );
+                    let acc = conv_ref(cfg, &padded, lp.weights().expect("weights bound"));
+                    requantize_relu(&acc, shift, ActLayout::NCHWc { c: machine.c_int8() })
+                }
+                (LayerConfig::Add { channels, h, w }, _) => {
+                    let mut out = ActTensor::zeros(
+                        ActShape::new(*channels, *h, *w),
+                        srcs[0].layout,
+                    );
+                    for ch in 0..*channels {
+                        for y in 0..*h {
+                            for x in 0..*w {
+                                let sum: i32 =
+                                    srcs.iter().map(|s| s.get(ch, y, x) as i32).sum();
+                                out.set(ch, y, x, sum.clamp(-128, 127) as i8);
+                            }
+                        }
+                    }
+                    out
+                }
+                (LayerConfig::Concat { parts, h, w }, _) => {
+                    let total: usize = parts.iter().sum();
+                    let mut out =
+                        ActTensor::zeros(ActShape::new(total, *h, *w), srcs[0].layout);
+                    let mut off = 0;
+                    for s in &srcs {
+                        for ch in 0..s.shape.channels {
+                            for y in 0..*h {
+                                for x in 0..*w {
+                                    out.set(off + ch, y, x, s.get(ch, y, x));
+                                }
+                            }
+                        }
+                        off += s.shape.channels;
+                    }
+                    out
+                }
+                (l, _) => panic!("reference does not model {}", l.name()),
+            }
+        };
+        outs[i] = Some(out);
+    }
+    outs[n - 1].take().expect("reference output")
+}
+
+/// 3×3 pad-1 stride-1 conv node config at spatial size `hw` (shape
+/// preserving, so any two nodes of a graph can Add/Concat).
+fn conv3(in_ch: usize, out_ch: usize, hw: usize) -> LayerConfig {
+    LayerConfig::Conv(ConvConfig::simple(hw + 2, hw + 2, 3, 3, 1, in_ch, out_ch))
+}
+
+/// Draw a random conv/Add/Concat DAG at fixed spatial size: diamonds,
+/// multi-fanout, mixed concat widths. Channels stay multiples of the
+/// block size so plans bind exact-shaped weights.
+fn random_graph(rng: &mut Rng, case: u64) -> Network {
+    let hw = 6;
+    let widths = [16usize, 32];
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut ch_of: Vec<usize> = Vec::new();
+    let c0 = *rng.pick(&widths);
+    nodes.push(Node { layer: conv3(16, c0, hw), inputs: vec![] });
+    ch_of.push(c0);
+    let steps = rng.range(3, 6);
+    for _ in 0..steps {
+        let n = nodes.len();
+        match rng.range(0, 9) {
+            // Conv from a random earlier node (fan-out when the same
+            // source is picked twice across steps).
+            0..=3 => {
+                let src = rng.range(0, n - 1);
+                let out = *rng.pick(&widths);
+                nodes.push(Node { layer: conv3(ch_of[src], out, hw), inputs: vec![src] });
+                ch_of.push(out);
+            }
+            // Residual add of an equal-width pair (diamond when both
+            // branches hang off one ancestor).
+            4..=6 => {
+                let pairs: Vec<(usize, usize)> = (0..n)
+                    .flat_map(|a| (a + 1..n).map(move |b| (a, b)))
+                    .filter(|&(a, b)| ch_of[a] == ch_of[b])
+                    .collect();
+                if let Some(&(a, b)) = pairs.get(rng.range(0, pairs.len().max(1) - 1)) {
+                    nodes.push(Node {
+                        layer: LayerConfig::Add { channels: ch_of[a], h: hw, w: hw },
+                        inputs: vec![a, b],
+                    });
+                    ch_of.push(ch_of[a]);
+                }
+            }
+            // Concat of 2–3 random nodes (repeats allowed — a node may
+            // feed the same concat twice).
+            _ => {
+                let k = rng.range(2, 3);
+                let srcs: Vec<usize> = (0..k).map(|_| rng.range(0, n - 1)).collect();
+                let parts: Vec<usize> = srcs.iter().map(|&s| ch_of[s]).collect();
+                let total = parts.iter().sum();
+                nodes.push(Node {
+                    layer: LayerConfig::Concat { parts, h: hw, w: hw },
+                    inputs: srcs,
+                });
+                ch_of.push(total);
+            }
+        }
+    }
+    let net = Network { name: format!("dag-case-{case}"), nodes, input_hw: (hw, hw) };
+    net.validate().expect("generator produced an invalid graph");
+    net
+}
+
+/// Maximum number of concurrently live node outputs under the plan's
+/// topological schedule (output claimed before inputs release — the
+/// same discipline the prepared engine's slot assignment uses).
+fn max_live_set(plan: &NetworkPlan) -> usize {
+    let n = plan.layers.len();
+    let mut remaining = plan.consumer_counts();
+    let mut alive = vec![false; n];
+    let (mut live, mut max) = (0usize, 0usize);
+    for i in 0..n {
+        alive[i] = true;
+        live += 1;
+        max = max.max(live);
+        for &j in &plan.layers[i].inputs {
+            remaining[j] -= 1;
+            if remaining[j] == 0 && alive[j] {
+                alive[j] = false;
+                live -= 1;
+            }
+        }
+        if remaining[i] == 0 {
+            alive[i] = false;
+            live -= 1;
+        }
+    }
+    max
+}
+
+fn plan_graph(net: &Network, seed: u64) -> NetworkPlan {
+    let machine = MachineConfig::neon(128);
+    let mut plan = plan_network_uncached(
+        net,
+        PlannerOptions { machine, explore_each_layer: false, perf_sample: 1, explore_threads: 1 },
+    );
+    bind_all(&mut plan, seed);
+    plan
+}
+
+#[test]
+fn random_dags_match_reference_and_prepared_matches_functional() {
+    check("graph-equivalence", 12, |rng| {
+        let case = rng.next_u64() % 1000;
+        let net = random_graph(rng, case);
+        let plan = plan_graph(&net, 0xDA6 ^ case);
+        let input =
+            ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: C }, 100 + case);
+
+        let want = reference_run(&plan, &input, SHIFT);
+        let functional =
+            coordinator::run_network_functional(&plan, &input, SHIFT).expect("functional");
+        assert_eq!(functional.shape, want.shape, "{}: shape vs reference", net.name);
+        assert_eq!(functional.data, want.data, "{}: bytes vs reference", net.name);
+
+        let prepared = PreparedNetwork::prepare(&plan).expect("prepare");
+        assert_eq!(prepared.slot_count(), max_live_set(&plan), "{}: slot count", net.name);
+        let mut arena = prepared.new_arena();
+        // Two images through one arena: leaks across images would
+        // diverge from the per-image functional results.
+        for img in 0..2 {
+            let input = ActTensor::random(
+                ActShape::new(16, 6, 6),
+                ActLayout::NCHWc { c: C },
+                200 + case + img,
+            );
+            let functional =
+                coordinator::run_network_functional(&plan, &input, SHIFT).unwrap();
+            let got = prepared.run(&input, SHIFT, &mut arena).expect("prepared");
+            assert_eq!(got.data, functional.data, "{}: prepared vs functional", net.name);
+        }
+    });
+}
+
+#[test]
+fn resnet_prefix_skip_adds_are_bit_identical() {
+    // True residual topology: identity shortcut in stage 1, projection
+    // shortcut into stage 2 — prepared must equal functional exactly.
+    let net = nets::resnet_prefix(16, 16, 1, 2);
+    assert!(!net.is_chain());
+    let plan = plan_graph(&net, 7001);
+    let prepared = PreparedNetwork::prepare(&plan).expect("prepare resnet prefix");
+    assert_eq!(prepared.slot_count(), max_live_set(&plan));
+    // A skip keeps the block input live alongside both conv outputs.
+    assert!(prepared.slot_count() >= 3, "skips must raise the live set beyond ping-pong");
+    let mut arena = prepared.new_arena();
+    for seed in 0..3u64 {
+        let input =
+            ActTensor::random(ActShape::new(16, 16, 16), ActLayout::NCHWc { c: C }, 300 + seed);
+        let want = coordinator::run_network_functional(&plan, &input, SHIFT).expect("functional");
+        let got = prepared.run(&input, SHIFT, &mut arena).expect("prepared");
+        assert_eq!(got.shape, want.shape);
+        assert_eq!(got.data, want.data, "image {seed} diverges");
+    }
+}
+
+#[test]
+fn densenet_prefix_concats_are_bit_identical() {
+    let net = nets::densenet_prefix(16, 16, 2);
+    let plan = plan_graph(&net, 7002);
+    let prepared = PreparedNetwork::prepare(&plan).expect("prepare densenet prefix");
+    assert_eq!(prepared.slot_count(), max_live_set(&plan));
+    let mut arena = prepared.new_arena();
+    for seed in 0..3u64 {
+        let input =
+            ActTensor::random(ActShape::new(16, 16, 16), ActLayout::NCHWc { c: C }, 400 + seed);
+        let want = coordinator::run_network_functional(&plan, &input, SHIFT).expect("functional");
+        let got = prepared.run(&input, SHIFT, &mut arena).expect("prepared");
+        assert_eq!(got.data, want.data, "image {seed} diverges");
+    }
+}
+
+#[test]
+fn parallel_graph_batch_is_bit_identical_to_sequential() {
+    let net = nets::resnet_prefix(16, 16, 1, 2);
+    let plan = plan_graph(&net, 7003);
+    let prepared = PreparedNetwork::prepare(&plan).unwrap();
+    let inputs: Vec<ActTensor> = (0..6)
+        .map(|s| ActTensor::random(ActShape::new(16, 16, 16), ActLayout::NCHWc { c: C }, 500 + s))
+        .collect();
+    let refs: Vec<&ActTensor> = inputs.iter().collect();
+    let sequential = prepared.run_batch(&refs, SHIFT, 1);
+    let parallel = prepared.run_batch(&refs, SHIFT, 3);
+    for (i, (s, p)) in sequential.into_iter().zip(parallel).enumerate() {
+        assert_eq!(s.unwrap().data, p.unwrap().data, "image {i} diverges");
+    }
+}
+
+#[test]
+fn chain_built_equals_graph_built_chain() {
+    // The no-regression guarantee for VGG/MobileNet-style nets: a
+    // Network::chain and a hand-wired graph with the same layers and
+    // [i-1] edges must produce the same fingerprint, byte-identical
+    // plans, and byte-identical outputs.
+    let layers = vec![
+        conv3(16, 32, 6),
+        conv3(32, 32, 6),
+        LayerConfig::GlobalAvgPool { channels: 32, h: 6, w: 6 },
+    ];
+    let chained = Network::chain_at("twin", layers.clone(), (6, 6));
+    let graphed = Network {
+        name: "twin".into(),
+        nodes: layers
+            .into_iter()
+            .enumerate()
+            .map(|(i, layer)| Node {
+                layer,
+                inputs: if i == 0 { vec![] } else { vec![i - 1] },
+            })
+            .collect(),
+        input_hw: (6, 6),
+    };
+    assert_eq!(
+        coordinator::plan::network_fingerprint(&chained),
+        coordinator::plan::network_fingerprint(&graphed)
+    );
+    let plan_a = plan_graph(&chained, 9100);
+    let plan_b = plan_graph(&graphed, 9100);
+    assert_eq!(plan_fingerprint(&plan_a), plan_fingerprint(&plan_b));
+    let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: C }, 77);
+    let a = coordinator::run_network_functional(&plan_a, &input, SHIFT).unwrap();
+    let b = coordinator::run_network_functional(&plan_b, &input, SHIFT).unwrap();
+    assert_eq!(a.data, b.data);
+    // Both prepare to 2-slot (ping-pong) engines.
+    let pa = PreparedNetwork::prepare(&plan_a).unwrap();
+    assert_eq!(pa.slot_count(), 2);
+    let got = pa.run(&input, SHIFT, &mut pa.new_arena()).unwrap();
+    assert_eq!(got.data, a.data);
+}
+
+#[test]
+fn diamond_needs_three_slots_chain_needs_two() {
+    // Chain: ping-pong exactly.
+    let chain = Network::chain_at("c2", vec![conv3(16, 16, 6), conv3(16, 16, 6)], (6, 6));
+    let plan = plan_graph(&chain, 9200);
+    assert_eq!(PreparedNetwork::prepare(&plan).unwrap().slot_count(), 2);
+
+    // Diamond: the fork output stays live under both branches, and the
+    // Add reads both branch outputs while claiming its own buffer.
+    let diamond = Network {
+        name: "diamond".into(),
+        nodes: vec![
+            Node { layer: conv3(16, 16, 6), inputs: vec![] },
+            Node { layer: conv3(16, 16, 6), inputs: vec![0] },
+            Node { layer: conv3(16, 16, 6), inputs: vec![0] },
+            Node { layer: LayerConfig::Add { channels: 16, h: 6, w: 6 }, inputs: vec![1, 2] },
+        ],
+        input_hw: (6, 6),
+    };
+    diamond.validate().unwrap();
+    let plan = plan_graph(&diamond, 9201);
+    let prepared = PreparedNetwork::prepare(&plan).unwrap();
+    assert_eq!(prepared.slot_count(), 3);
+    assert_eq!(prepared.slot_count(), max_live_set(&plan));
+    // And it still executes correctly end to end.
+    let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: C }, 11);
+    let want = coordinator::run_network_functional(&plan, &input, SHIFT).unwrap();
+    let got = prepared.run(&input, SHIFT, &mut prepared.new_arena()).unwrap();
+    assert_eq!(got.data, want.data);
+}

@@ -195,7 +195,7 @@ fn draw_network(rng: &mut Rng) -> Network {
         ch = out;
         hw = hw - f + 1;
     }
-    Network { name: format!("prop-net-{depth}-{ch}-{hw}"), layers }
+    Network::chain(format!("prop-net-{depth}-{ch}-{hw}"), layers)
 }
 
 #[test]
@@ -229,7 +229,11 @@ fn prop_plan_cache_same_key_hits_different_machine_misses() {
 
         // An equal but separately-constructed network still hits (the
         // key is a structural fingerprint, not object identity).
-        let twin = Network { name: net.name.clone(), layers: net.layers.clone() };
+        let twin = Network {
+            name: net.name.clone(),
+            nodes: net.nodes.clone(),
+            input_hw: net.input_hw,
+        };
         cache.plan(&twin, &opts);
         assert_eq!(cache.stats().hits, 2);
     });

@@ -40,7 +40,7 @@ fn two_layer_plan(machine: MachineConfig) -> NetworkPlan {
         seed += 1;
         layers.push(lp);
     }
-    NetworkPlan { name: "serve-stress".into(), layers }
+    NetworkPlan::chain("serve-stress", layers)
 }
 
 fn input_for(seed: u64) -> ActTensor {
