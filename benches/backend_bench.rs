@@ -1,0 +1,189 @@
+//! Bench: native backend vs the interpreter on a conv sweep.
+//!
+//! For each layer in the sweep, the same weight-bound plan is prepared
+//! twice — [`Backend::Interp`] (decoded-trace interpreter, the
+//! reference oracle) and [`Backend::Native`] (prepare-time-lowered
+//! kernels) — the outputs are asserted **bit-identical** on the
+//! benchmark inputs, and then per-image throughput is measured for
+//! both. The acceptance target for PR 4 is a ≥ 2x native-over-interp
+//! geomean on this sweep.
+//!
+//! Sweep: 3×3 s1, 3×3 s2, 1×1 (dense-shaped), depthwise 3×3 — all at
+//! 128-bit vectors — plus a 3×3 at 256-bit vector variables (no decode
+//! fusion: blocks form from the unfused shape).
+//!
+//! Modes:
+//! * `--smoke` — CI mode: bit-identity gate + one timed round per
+//!   layer, no file side effects.
+//! * `--json [PATH]` — additionally write a BENCH_4.json-style record
+//!   (default path `BENCH_4.json`): per-layer images/sec for both
+//!   backends, speedups, the geomean, and lowering statistics.
+//!
+//! Run: `cargo bench --bench backend_bench [-- --smoke|--json]`
+
+use std::time::Instant;
+
+use yflows::coordinator::plan::{NetworkPlan, Planner, PlannerOptions};
+use yflows::exec::{Backend, PreparedNetwork};
+use yflows::layer::{ConvConfig, LayerConfig};
+use yflows::machine::MachineConfig;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::bench::black_box;
+use yflows::util::json::Json;
+
+const SHIFT: u32 = 9;
+
+struct SweepLayer {
+    name: &'static str,
+    machine: MachineConfig,
+    plan: NetworkPlan,
+    input_shape: ActShape,
+}
+
+fn conv_layer(
+    name: &'static str,
+    machine: MachineConfig,
+    cfg: ConvConfig,
+    pad: usize,
+    seed: u64,
+) -> SweepLayer {
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), pad);
+    let depthwise = cfg.groups == cfg.in_channels && cfg.groups > 1;
+    lp.bind_weights(if depthwise {
+        WeightTensor::random(
+            WeightShape::new(1, cfg.in_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRS,
+            seed,
+        )
+    } else {
+        WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            seed,
+        )
+    });
+    let input_shape =
+        ActShape::new(cfg.in_channels, cfg.ih - 2 * pad, cfg.iw - 2 * pad);
+    SweepLayer { name, machine, plan: NetworkPlan::chain(name, vec![lp]), input_shape }
+}
+
+fn sweep() -> Vec<SweepLayer> {
+    let m128 = MachineConfig::neon(128);
+    let m256 = MachineConfig::neon(256);
+    vec![
+        conv_layer("conv3x3-s1", m128, ConvConfig::simple(18, 18, 3, 3, 1, 16, 32), 1, 41),
+        conv_layer("conv3x3-s2", m128, ConvConfig::simple(17, 17, 3, 3, 2, 16, 32), 1, 42),
+        conv_layer("conv1x1", m128, ConvConfig::simple(8, 8, 1, 1, 1, 64, 64), 0, 43),
+        conv_layer("depthwise3x3", m128, ConvConfig::depthwise(18, 18, 3, 3, 1, 32), 1, 44),
+        conv_layer("conv3x3-vl256", m256, ConvConfig::simple(10, 10, 3, 3, 1, 32, 32), 1, 45),
+    ]
+}
+
+/// Per-image throughput of `engine` over `images` sequential runs.
+fn images_per_sec(engine: &PreparedNetwork, inputs: &[ActTensor], rounds: usize) -> f64 {
+    let mut arena = engine.new_arena();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for input in inputs {
+            black_box(engine.run(input, SHIFT, &mut arena).expect("bench run"));
+        }
+    }
+    (inputs.len() * rounds) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args.iter().position(|a| a == "--json").map(|i| {
+        args.get(i + 1)
+            .filter(|p| !p.starts_with("--"))
+            .cloned()
+            .unwrap_or_else(|| "BENCH_4.json".to_string())
+    });
+
+    let images: usize = if smoke { 2 } else { 8 };
+    let rounds: usize = if smoke { 1 } else { 40 };
+
+    let mut layer_rows: Vec<Json> = Vec::new();
+    let mut log_speedup_sum = 0.0f64;
+    println!("== backend_bench: interp vs native, conv sweep ==");
+    for layer in sweep() {
+        let c = layer.machine.c_int8();
+        let interp = PreparedNetwork::prepare_with(&layer.plan, Backend::Interp)
+            .expect("interp engine must prepare");
+        let native = PreparedNetwork::prepare_with(&layer.plan, Backend::Native)
+            .expect("native engine must prepare");
+        let inputs: Vec<ActTensor> = (0..images as u64)
+            .map(|s| ActTensor::random(layer.input_shape, ActLayout::NCHWc { c }, 1000 + s))
+            .collect();
+
+        // Correctness gate: byte-identical outputs, image by image.
+        {
+            let mut ai = interp.new_arena();
+            let mut an = native.new_arena();
+            for (i, input) in inputs.iter().enumerate() {
+                let a = interp.run(input, SHIFT, &mut ai).expect("interp");
+                let b = native.run(input, SHIFT, &mut an).expect("native");
+                assert_eq!(
+                    a.data, b.data,
+                    "{}: native diverges from interp at image {i}",
+                    layer.name
+                );
+            }
+        }
+
+        let interp_ips = images_per_sec(&interp, &inputs, rounds);
+        let native_ips = images_per_sec(&native, &inputs, rounds);
+        let speedup = native_ips / interp_ips;
+        log_speedup_sum += speedup.ln();
+        let stats = native.lower_stats();
+        println!(
+            "{:<14} interp {:>9.1} img/s   native {:>9.1} img/s   speedup {:>5.2}x   \
+             (blocks {}, macs {}, elided {}, fallback {})",
+            layer.name,
+            interp_ips,
+            native_ips,
+            speedup,
+            stats.blocks,
+            stats.mac_entries,
+            stats.elided_writebacks,
+            stats.fallback_ops,
+        );
+        let mut row = Json::obj();
+        row.set("layer", Json::s(layer.name))
+            .set("interp_images_per_sec", Json::Num(interp_ips))
+            .set("native_images_per_sec", Json::Num(native_ips))
+            .set("speedup", Json::Num(speedup))
+            .set("lowered_blocks", Json::from_u64(stats.blocks as u64))
+            .set("mac_entries", Json::from_u64(stats.mac_entries as u64))
+            .set("elided_writebacks", Json::from_u64(stats.elided_writebacks as u64))
+            .set("fallback_ops", Json::from_u64(stats.fallback_ops as u64));
+        layer_rows.push(row);
+    }
+    let geomean = (log_speedup_sum / layer_rows.len() as f64).exp();
+    if smoke {
+        println!("smoke OK: all layers bit-identical across backends (geomean {geomean:.2}x)");
+        return;
+    }
+    println!("geomean speedup: {geomean:.2}x (target >= 2x)");
+
+    if let Some(path) = json_path {
+        let mut obj = Json::obj();
+        obj.set("bench", Json::s("backend_bench"))
+            .set(
+                "workload",
+                Json::s("conv sweep: 3x3s1, 3x3s2, 1x1, depthwise3x3 @128-bit + 3x3 @256-bit"),
+            )
+            .set("images", Json::from_u64(images as u64))
+            .set("rounds", Json::from_u64(rounds as u64))
+            .set("requant_shift", Json::from_u64(SHIFT as u64))
+            .set("bit_identical", Json::Bool(true))
+            .set("layers", Json::Arr(layer_rows))
+            .set("geomean_speedup_native_over_interp", Json::Num(geomean))
+            .set("target", Json::s(">= 2x geomean on the conv sweep"));
+        std::fs::write(&path, obj.render()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

@@ -76,6 +76,7 @@ fn prepare_net(net: &Network, seed: u64) -> (NetworkPlan, PreparedNetwork) {
             explore_each_layer: false,
             perf_sample: 1,
             explore_threads: 1,
+            ..Default::default()
         },
     );
     bind_all(&mut plan, seed);

@@ -39,9 +39,10 @@ const SHIFT: u32 = 9;
 
 /// A reduced ResNet-style stack: conv/conv/pool/conv/conv/gap with
 /// 3x3 kernels, growing channels, one downsampling pool.
-fn resnet_style_plan(machine: MachineConfig) -> NetworkPlan {
+fn resnet_style_plan(opts: &PlannerOptions) -> NetworkPlan {
+    let machine = opts.machine;
     let c = machine.c_int8();
-    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut planner = Planner::new(opts.clone());
     let mut layers = Vec::new();
     let mut seed = 9000u64;
     let convs = [
@@ -102,9 +103,11 @@ fn main() {
             .unwrap_or_else(|| "BENCH_2.json".to_string())
     });
 
-    let machine = MachineConfig::neon(128);
-    let plan = resnet_style_plan(machine);
-    let prepared = PreparedNetwork::prepare(&plan).expect("plan must prepare");
+    // One PlannerOptions carried through plan + prepare: the prepared
+    // engine honors `opts.backend` (native by default).
+    let opts = PlannerOptions { machine: MachineConfig::neon(128), ..Default::default() };
+    let plan = resnet_style_plan(&opts);
+    let prepared = PreparedNetwork::prepare_for(&plan, &opts).expect("plan must prepare");
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
     let batch: u64 = if smoke { 4 } else { 16 };

@@ -133,8 +133,8 @@ fn small_net_plan(machine: MachineConfig) -> NetworkPlan {
 
 fn serve_requests() {
     println!("== 3. Batched serving engine (threaded, functional INT8) ==");
-    let machine = MachineConfig::neon(128);
-    let plan = small_net_plan(machine);
+    let opts = PlannerOptions { machine: MachineConfig::neon(128), ..Default::default() };
+    let plan = small_net_plan(opts.machine);
     println!("{}", coordinator::metrics::plan_table(&plan).render());
     println!(
         "   modeled batch-8 amortization over this net's kernels: {:.2}x",
@@ -145,7 +145,10 @@ fn serve_requests() {
         max_batch: 8,
         batch_deadline: std::time::Duration::from_millis(5),
         requant_shift: 9,
-        exec_threads: 0,
+        // The planner's backend choice flows into the server's prepared
+        // engine (native by default; `Backend::Interp` for the oracle).
+        backend: opts.backend,
+        ..Default::default()
     };
     let server = Server::start_with(plan, config);
     let n_requests = 24;

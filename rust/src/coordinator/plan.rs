@@ -207,6 +207,17 @@ pub struct PlannerOptions {
     /// planning scales with cores; 1 = sequential). Does not affect the
     /// chosen plan — parallel exploration is bit-identical.
     pub explore_threads: usize,
+    /// Execution backend engines prepared from this plan should use
+    /// ([`crate::exec::Backend::Native`] by default; `Interp` keeps the
+    /// reference interpreter). Like `explore_threads`, it never changes
+    /// the *plan* — it is excluded from [`PlanCacheKey`] and instead
+    /// keys the prepared-engine side of the cache
+    /// ([`PlanCache::prepared`]). Consumed by
+    /// [`crate::exec::PreparedNetwork::prepare_for`] and by servers
+    /// that copy it into
+    /// [`crate::coordinator::ServerConfig`]`::backend`. Outputs are
+    /// bit-identical across backends.
+    pub backend: crate::exec::Backend,
 }
 
 impl Default for PlannerOptions {
@@ -218,6 +229,7 @@ impl Default for PlannerOptions {
             explore_threads: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
+            backend: crate::exec::Backend::default(),
         }
     }
 }
@@ -475,8 +487,10 @@ pub fn plan_fingerprint(plan: &NetworkPlan) -> u64 {
 }
 
 /// Plan-cache key: everything that determines the resulting plan.
-/// (`explore_threads` is deliberately absent — it changes planning
-/// latency, never the plan.)
+/// (`explore_threads` and `backend` are deliberately absent — the
+/// former changes planning latency, the latter changes how a *prepared
+/// engine* executes; neither changes the plan. The backend keys the
+/// prepared-engine side instead: [`PlanCache::prepared`].)
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanCacheKey {
     pub fingerprint: u64,
@@ -529,10 +543,12 @@ pub struct PlanCache {
     hits: AtomicU64,
     misses: AtomicU64,
     /// Prepared execution engines, keyed by [`plan_fingerprint`] of the
-    /// weight-bound plan they were compiled from (the plan side above is
-    /// weightless, so prepared networks are cached alongside it under
-    /// their own key).
-    prepared: Mutex<HashMap<u64, Arc<crate::exec::PreparedNetwork>>>,
+    /// weight-bound plan they were compiled from **and the execution
+    /// backend** (the plan side above is weightless, so prepared
+    /// networks are cached alongside it under their own key; including
+    /// the backend guarantees interpreter- and native-compiled engines
+    /// never cross-serve).
+    prepared: Mutex<HashMap<(u64, crate::exec::Backend), Arc<crate::exec::PreparedNetwork>>>,
     prepared_hits: AtomicU64,
     prepared_misses: AtomicU64,
 }
@@ -558,15 +574,18 @@ impl PlanCache {
         Arc::clone(map.entry(key).or_insert(planned))
     }
 
-    /// Compile `plan` into a [`crate::exec::PreparedNetwork`] once,
-    /// memoized by [`plan_fingerprint`] (configs + kernels + weight
-    /// bytes): every server/session serving the same weight-bound plan
-    /// shares one prepared engine. Preparation happens outside the map
-    /// lock; on a cold-start race the first insert wins and both callers
-    /// get the same `Arc`.
+    /// Compile `plan` into a [`crate::exec::PreparedNetwork`] for
+    /// `backend` once, memoized by ([`plan_fingerprint`], backend)
+    /// (configs + kernels + weight bytes + executor): every
+    /// server/session serving the same weight-bound plan on the same
+    /// backend shares one prepared engine, and engines compiled for
+    /// different backends never cross-serve. Preparation happens
+    /// outside the map lock; on a cold-start race the first insert wins
+    /// and both callers get the same `Arc`.
     pub fn prepared(
         &self,
         plan: &NetworkPlan,
+        backend: crate::exec::Backend,
     ) -> crate::Result<Arc<crate::exec::PreparedNetwork>> {
         // Prepared engines embed a full copy of the model's weights, and
         // every weight rebind is a new fingerprint — so unlike the
@@ -574,12 +593,12 @@ impl PlanCache {
         // arbitrary old entry is evicted (in-flight `Arc`s stay valid; a
         // re-used old plan simply re-prepares).
         const MAX_PREPARED_ENTRIES: usize = 8;
-        let key = plan_fingerprint(plan);
+        let key = (plan_fingerprint(plan), backend);
         if let Some(hit) = self.prepared.lock().unwrap().get(&key) {
             self.prepared_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(hit));
         }
-        let built = Arc::new(crate::exec::PreparedNetwork::prepare(plan)?);
+        let built = Arc::new(crate::exec::PreparedNetwork::prepare_with(plan, backend)?);
         self.prepared_misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.prepared.lock().unwrap();
         if !map.contains_key(&key) && map.len() >= MAX_PREPARED_ENTRIES {
@@ -825,8 +844,9 @@ mod tests {
         ));
         let plan = NetworkPlan::chain("prep", vec![lp]);
         let cache = PlanCache::new();
-        let a = cache.prepared(&plan).unwrap();
-        let b = cache.prepared(&plan).unwrap();
+        let backend = crate::exec::Backend::default();
+        let a = cache.prepared(&plan, backend).unwrap();
+        let b = cache.prepared(&plan, backend).unwrap();
         // One preparation, shared Arc.
         assert!(Arc::ptr_eq(&a, &b));
         let s = cache.stats();
@@ -839,8 +859,13 @@ mod tests {
             43,
         ));
         assert_ne!(plan_fingerprint(&plan), plan_fingerprint(&plan2));
-        cache.prepared(&plan2).unwrap();
+        cache.prepared(&plan2, backend).unwrap();
         assert_eq!(cache.stats().prepared_entries, 2);
+        // Same plan, other backend → distinct engine, never cross-served.
+        let c = cache.prepared(&plan, crate::exec::Backend::Interp).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(c.backend(), crate::exec::Backend::Interp);
+        assert_eq!(cache.stats().prepared_entries, 3);
     }
 
     #[test]

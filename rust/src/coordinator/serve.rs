@@ -36,6 +36,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::exec::Backend;
 use crate::tensor::ActTensor;
 
 use super::metrics::SessionMetrics;
@@ -58,6 +59,12 @@ pub struct ServerConfig {
     /// (`0` = auto: available cores / `workers`, at least 1). Ignored on
     /// the fallback path for plans that cannot be prepared.
     pub exec_threads: usize,
+    /// Execution backend the prepared engine is compiled for
+    /// ([`Backend::Native`] by default; [`Backend::Interp`] keeps the
+    /// reference interpreter). Outputs are bit-identical either way —
+    /// this is a performance/debugging knob, and part of the
+    /// prepared-engine cache key.
+    pub backend: Backend,
 }
 
 impl Default for ServerConfig {
@@ -68,6 +75,7 @@ impl Default for ServerConfig {
             batch_deadline: Duration::from_millis(2),
             requant_shift: 8,
             exec_threads: 0,
+            backend: Backend::default(),
         }
     }
 }
@@ -135,7 +143,8 @@ impl Server {
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let metrics = Arc::new(Mutex::new(SessionMetrics::default()));
-        let prepared_net = match super::plan::global_plan_cache().prepared(&plan) {
+        let prepared_net = match super::plan::global_plan_cache().prepared(&plan, config.backend)
+        {
             Ok(p) => Some(p),
             Err(e) => {
                 // Weightless plans are the expected case here; a *bound*
@@ -315,8 +324,7 @@ mod tests {
             workers: 1,
             max_batch: 16,
             batch_deadline: Duration::from_millis(1),
-            requant_shift: 8,
-            exec_threads: 0,
+            ..Default::default()
         };
         let server = Server::start_with(tiny_plan(), config);
         let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 1);
@@ -336,6 +344,22 @@ mod tests {
         let metrics = server.shutdown();
         assert_eq!(metrics.batch_exec_seconds.len(), metrics.batch_sizes.len());
         assert!(metrics.exec_images_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn interp_and_native_backends_serve_identical_bytes() {
+        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 77);
+        let mut outs = Vec::new();
+        for backend in [Backend::Interp, Backend::Native] {
+            let server = Server::start_with(
+                tiny_plan(),
+                ServerConfig { workers: 1, backend, ..Default::default() },
+            );
+            assert!(server.is_prepared());
+            outs.push(server.submit(input.clone()).recv().unwrap().unwrap());
+            server.shutdown();
+        }
+        assert_eq!(outs[0].data, outs[1].data, "backend outputs diverge");
     }
 
     #[test]

@@ -24,16 +24,23 @@
 //! `ActTensor`s (moving the `Vec`, not copying it) so the scalar passes
 //! can run on them unchanged, and are returned the same way.
 
-use crate::machine::Interp;
+use crate::machine::{Interp, RegFile};
 use crate::tensor::{ActLayout, ActShape, ActTensor};
 
 /// Reusable per-thread execution state: liveness-assigned activation
-/// slots, padding stage, accumulator, and the interpreter register file.
+/// slots, padding stage, accumulator, the two backend register files
+/// (interpreter lanes and the native backend's [`RegFile`] — together a
+/// few KB), and the consumer-count scratch for the liveness walk.
 pub struct ExecArena {
     slots: Vec<Vec<i8>>,
     padded: Vec<i8>,
     pub(crate) acc: Vec<i32>,
     pub(crate) interp: Interp,
+    pub(crate) regs: RegFile,
+    /// Per-run copy of the network's consumer counts (decremented as
+    /// inputs are released). Arena-hosted so `PreparedNetwork::run`
+    /// allocates nothing per image.
+    pub(crate) remaining: Vec<usize>,
 }
 
 impl ExecArena {
@@ -48,7 +55,16 @@ impl ExecArena {
             padded: Vec::with_capacity(max_padded),
             acc: Vec::with_capacity(max_acc),
             interp: Interp::new(num_regs),
+            regs: RegFile::new(num_regs),
+            remaining: Vec::new(),
         }
+    }
+
+    /// Reset the consumer-count scratch from the network's counts
+    /// (reuses the allocation after the first image).
+    pub(crate) fn load_consumers(&mut self, consumers: &[usize]) {
+        self.remaining.clear();
+        self.remaining.extend_from_slice(consumers);
     }
 
     /// Number of activation slots (== the prepared network's max live
@@ -84,6 +100,16 @@ impl ExecArena {
         self.slots[slot] = t.data;
     }
 
+    /// Hand a taken tensor to the caller *permanently* (the network
+    /// output must outlive the arena): the slot is refilled with a
+    /// fresh capacity-only buffer so the next image can still take it.
+    /// Replaces the output clone the engine used to do — a malloc
+    /// without the memset or memcpy.
+    pub(crate) fn steal_act(&mut self, slot: usize, t: ActTensor) -> ActTensor {
+        self.slots[slot] = Vec::with_capacity(t.data.capacity());
+        t
+    }
+
     /// Take the padding stage as a zero-filled tensor (same take/put
     /// discipline as the activation slots).
     pub(crate) fn take_padded(&mut self, shape: ActShape, layout: ActLayout) -> ActTensor {
@@ -106,9 +132,10 @@ impl ExecArena {
         self.acc.resize(n, 0);
     }
 
-    /// Split-borrow the interpreter and the accumulator together (the
-    /// kernel loop needs both mutably at once).
-    pub(crate) fn interp_and_acc(&mut self) -> (&mut Interp, &mut Vec<i32>) {
-        (&mut self.interp, &mut self.acc)
+    /// Split-borrow both backends' executor state and the accumulator
+    /// together (the kernel loop picks one executor and needs it
+    /// mutably alongside the accumulator).
+    pub(crate) fn exec_and_acc(&mut self) -> (&mut Interp, &mut RegFile, &mut Vec<i32>) {
+        (&mut self.interp, &mut self.regs, &mut self.acc)
     }
 }

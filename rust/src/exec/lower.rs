@@ -1,0 +1,539 @@
+//! Prepare-time lowering: decoded micro-op traces → native kernels.
+//!
+//! This is the "generate code for the chosen dataflow" step of the
+//! native backend (PR 4): a one-pass, liveness-driven translation of a
+//! [`DecodedProgram`] into the [`NativeKernel`] form the hot path
+//! executes. It is **program-faithful** — every lowered kernel is
+//! bit-identical to interpreting the source trace — and purely a
+//! prepare-time cost, run once per (layer, machine) when a
+//! [`super::PreparedNetwork`] is compiled with
+//! [`super::Backend::Native`].
+//!
+//! The pass does three things:
+//!
+//! 1. **Backward liveness.** One sweep computes, for every trace
+//!    position, the set of registers whose current value is still read
+//!    later (a `u64` bitmask per position — the register file is ≤ 32
+//!    physical registers). This drives dead-writeback elision and
+//!    end-of-block writeback decisions.
+//! 2. **Accumulator-block discovery.** A forward scan greedily grows
+//!    spans in which a small group of registers (≤
+//!    [`MAX_GROUP`]) is only ever *accumulated into* — opened at
+//!    `VDupZero`/`VMul`/`VMla`/fused-`LoadMla` (or their binary
+//!    popcount-counter analogues), extended through stash loads,
+//!    reduction folds, and output flushes, and closed the moment any op
+//!    would *read* a grouped register out of the lane array (whose copy
+//!    is stale inside a block). On close, only members that are still
+//!    live get written back. Every generated dataflow in
+//!    [`crate::codegen`] reduces to a handful of such spans — typically
+//!    one prologue of generic stash loads plus one block covering the
+//!    entire unrolled body.
+//! 3. **MAC-run compaction.** Consecutive multiply-accumulates into the
+//!    same member collapse into one flat [`MacRun`](Step::MacRun) entry
+//!    table, so the executor hoists the accumulator into a local vector
+//!    and loops over entries without re-entering the step dispatch.
+//!
+//! Anything unrecognized falls out as a generic op executed by the
+//! interpreter's own step functions — unknown shapes cost the old
+//! price, never correctness.
+
+use crate::isa::{Mode, VInstr};
+use crate::machine::native::{LowerStats, MacEnt, NativeOp, Step, NO_REG, MAX_GROUP};
+use crate::machine::{DecodedProgram, MicroOp, NativeKernel};
+
+/// Lower a decoded trace to a native kernel. Infallible: every valid
+/// program lowers (worst case: all ops on the generic fallback path).
+pub fn lower_kernel(dp: &DecodedProgram) -> NativeKernel {
+    let ops = dp.micro_ops();
+    if dp.regs_used > 64 {
+        // Register ids beyond the u64 liveness bitmask (hypothetical
+        // machines modeled with num_regs > 64): no block analysis, the
+        // whole trace runs on the generic path — slower, never wrong.
+        let mut lw = Lowering {
+            mode: dp.mode,
+            live_in: Vec::new(),
+            ops_out: Vec::with_capacity(ops.len()),
+            steps: Vec::new(),
+            macs: Vec::new(),
+            block: None,
+            stats: LowerStats::default(),
+        };
+        for op in ops {
+            lw.emit_generic(op);
+        }
+        return NativeKernel::assemble(
+            dp.name.clone(),
+            dp.mode,
+            dp.regs_used,
+            lw.ops_out,
+            lw.steps,
+            lw.macs,
+            lw.stats,
+            dp.max_offsets(),
+        );
+    }
+    let live_in = compute_liveness(ops);
+    let mut lw = Lowering {
+        mode: dp.mode,
+        live_in,
+        ops_out: Vec::with_capacity(ops.len() / 4 + 1),
+        steps: Vec::new(),
+        macs: Vec::new(),
+        block: None,
+        stats: LowerStats::default(),
+    };
+    let mut i = 0;
+    while i < ops.len() {
+        let consumed = match dp.mode {
+            Mode::Int8 => lw.try_consume_int8(&ops[i], i),
+            Mode::Binary => lw.try_consume_binary(ops, i),
+        };
+        match consumed {
+            Consume::Steps(k) => i += k,
+            Consume::Reject => {
+                if lw.block.is_some() {
+                    // Close the open block and retry the op against a
+                    // clean slate (it may open the next block itself).
+                    lw.close_block(i);
+                } else {
+                    // Nothing recognizes it: exact interpreter semantics.
+                    lw.emit_generic(&ops[i]);
+                    i += 1;
+                }
+            }
+        }
+    }
+    lw.close_block(ops.len());
+    let stats = lw.stats;
+    NativeKernel::assemble(
+        dp.name.clone(),
+        dp.mode,
+        dp.regs_used,
+        lw.ops_out,
+        lw.steps,
+        lw.macs,
+        stats,
+        dp.max_offsets(),
+    )
+}
+
+/// How a consumption attempt ended: `Steps(k)` ate `k` trace ops;
+/// `Reject` closes any open block and retries (generic path if none).
+enum Consume {
+    Steps(usize),
+    Reject,
+}
+
+/// Backward liveness: `live_in[i]` has bit `r` set iff some op at
+/// position ≥ i reads register r before any op overwrites it. Index
+/// `len` is the empty set (nothing after the trace reads anything).
+fn compute_liveness(ops: &[MicroOp]) -> Vec<u64> {
+    let n = ops.len();
+    let mut live_in = vec![0u64; n + 1];
+    let mut live = 0u64;
+    for i in (0..n).rev() {
+        match ops[i] {
+            MicroOp::LoadMla { dst, acc, other, .. } => {
+                live &= !(1 << dst);
+                live &= !(1 << acc);
+                // `other == dst` means the MLA consumes the value loaded
+                // by this very op — no *prior* register is read then.
+                if other != dst {
+                    live |= 1 << other;
+                }
+                live |= 1 << acc;
+            }
+            MicroOp::Op(ref instr) => {
+                if let Some(w) = instr.writes() {
+                    live &= !(1 << w);
+                }
+                for r in instr.reads() {
+                    live |= 1 << r;
+                }
+            }
+        }
+        live_in[i] = live;
+    }
+    live_in
+}
+
+/// An open accumulator block during the scan.
+struct OpenBlock {
+    /// Physical registers held in the local tile, in member order.
+    members: Vec<u8>,
+    /// Index into the step pool where this block's steps begin.
+    step_start: usize,
+}
+
+struct Lowering {
+    mode: Mode,
+    live_in: Vec<u64>,
+    ops_out: Vec<NativeOp>,
+    steps: Vec<Step>,
+    macs: Vec<MacEnt>,
+    block: Option<OpenBlock>,
+    stats: LowerStats,
+}
+
+impl Lowering {
+    fn member(&self, reg: u8) -> Option<u8> {
+        self.block
+            .as_ref()
+            .and_then(|b| b.members.iter().position(|&r| r == reg))
+            .map(|m| m as u8)
+    }
+
+    fn is_member(&self, reg: u8) -> bool {
+        self.member(reg).is_some()
+    }
+
+    fn block_open(&mut self) -> &mut OpenBlock {
+        if self.block.is_none() {
+            self.block = Some(OpenBlock { members: Vec::new(), step_start: self.steps.len() });
+        }
+        self.block.as_mut().unwrap()
+    }
+
+    /// Add `reg` to the open block (opening one if needed). Returns the
+    /// member index, or None when the group is full.
+    fn add_member(&mut self, reg: u8) -> Option<u8> {
+        let b = self.block_open();
+        if b.members.len() >= MAX_GROUP {
+            return None;
+        }
+        b.members.push(reg);
+        Some((b.members.len() - 1) as u8)
+    }
+
+    /// Is register `reg`'s current value read at or after trace position
+    /// `at` (before being overwritten)?
+    fn live_at(&self, reg: u8, at: usize) -> bool {
+        self.live_in[at] & (1 << reg) != 0
+    }
+
+    /// Close the open block before trace position `at`: write back every
+    /// member some later op still reads, then emit the block op.
+    fn close_block(&mut self, at: usize) {
+        let Some(b) = self.block.take() else { return };
+        for (m, &reg) in b.members.iter().enumerate() {
+            if self.live_in[at] & (1 << reg) != 0 {
+                self.steps.push(match self.mode {
+                    Mode::Int8 => Step::WriteBack { m: m as u8, reg },
+                    Mode::Binary => Step::BWriteBack { m: m as u8, reg },
+                });
+            }
+        }
+        let len = self.steps.len() - b.step_start;
+        if len > 0 {
+            self.ops_out.push(NativeOp::Block { start: b.step_start as u32, len: len as u32 });
+            self.stats.blocks += 1;
+        }
+    }
+
+    fn emit_generic(&mut self, op: &MicroOp) {
+        debug_assert!(self.block.is_none(), "generic ops never interleave an open block");
+        match *op {
+            // An unfused-able LoadMla cannot reach here (fusion implies
+            // the pair was adjacent and valid), but re-expanding it keeps
+            // the fallback total: load then MLA, exactly the interpreter
+            // pair semantics.
+            MicroOp::LoadMla { dst, buf, off, acc, other } => {
+                self.ops_out.push(NativeOp::Op(VInstr::VLoad { dst, buf, off }));
+                self.ops_out.push(NativeOp::Op(VInstr::VMla { acc, a: dst, b: other }));
+                self.stats.fallback_ops += 2;
+            }
+            MicroOp::Op(instr) => {
+                self.ops_out.push(NativeOp::Op(instr));
+                self.stats.fallback_ops += 1;
+            }
+        }
+    }
+
+    /// Append a MAC entry for member `m`, extending the trailing run
+    /// when it targets the same member (entries are contiguous in the
+    /// pool by construction — only this block appends).
+    fn push_mac(&mut self, m: u8, ent: MacEnt) {
+        self.macs.push(ent);
+        self.stats.mac_entries += 1;
+        if let Some(Step::MacRun { m: lm, n, .. }) = self.steps.last_mut() {
+            if *lm == m {
+                *n += 1;
+                return;
+            }
+        }
+        self.steps.push(Step::MacRun { m, start: (self.macs.len() - 1) as u32, n: 1 });
+    }
+
+    /// Resolve the destination writeback of a fused load at position
+    /// `i`: forced when the MLA consumes its own load (`dst == other`,
+    /// the executor writes before reading), elided when nothing ever
+    /// reads the register again.
+    fn load_dst(&mut self, dst: u8, other: u8, i: usize) -> Option<u8> {
+        if dst == other || self.live_at(dst, i + 1) {
+            Some(dst)
+        } else {
+            self.stats.elided_writebacks += 1;
+            None
+        }
+    }
+
+    /// One Int8 micro-op against the block state. `Reject` means: close
+    /// any open block and retry (with no block open, the op goes to the
+    /// generic path).
+    fn try_consume_int8(&mut self, op: &MicroOp, i: usize) -> Consume {
+        match *op {
+            MicroOp::LoadMla { dst, buf, off, acc, other } => {
+                // Reading a member's lane copy (stale inside a block) or
+                // overwriting a member with a load both end the block.
+                if self.is_member(other) || self.is_member(dst) {
+                    return Consume::Reject;
+                }
+                let m = match self.member(acc) {
+                    Some(m) => m,
+                    None => {
+                        // Self-referential MLAs can never be grouped.
+                        if other == acc || dst == acc {
+                            return Consume::Reject;
+                        }
+                        match self.add_member(acc) {
+                            Some(m) => {
+                                // The accumulator carries a pre-block
+                                // value: adopt it into the tile.
+                                self.steps.push(Step::Adopt { m, reg: acc });
+                                m
+                            }
+                            None => return Consume::Reject,
+                        }
+                    }
+                };
+                let dst = self.load_dst(dst, other, i);
+                self.push_mac(m, MacEnt::load(buf, off, other, dst));
+                Consume::Steps(1)
+            }
+            MicroOp::Op(instr) => self.try_consume_int8_instr(&instr),
+        }
+    }
+
+    fn try_consume_int8_instr(&mut self, instr: &VInstr) -> Consume {
+        match *instr {
+            VInstr::VDupZero { dst } => {
+                let m = match self.member(dst) {
+                    Some(m) => Some(m),
+                    None => self.add_member(dst),
+                };
+                match m {
+                    Some(m) => self.steps.push(Step::Zero { m }),
+                    // Group full: plain zero of a non-member register.
+                    None => self.steps.push(Step::StashZero { dst }),
+                }
+                Consume::Steps(1)
+            }
+            VInstr::VMla { acc, a, b } => {
+                if self.is_member(a) || self.is_member(b) {
+                    return Consume::Reject;
+                }
+                let m = match self.member(acc) {
+                    Some(m) => m,
+                    None => {
+                        if a == acc || b == acc {
+                            return Consume::Reject;
+                        }
+                        match self.add_member(acc) {
+                            Some(m) => {
+                                self.steps.push(Step::Adopt { m, reg: acc });
+                                m
+                            }
+                            None => return Consume::Reject,
+                        }
+                    }
+                };
+                self.push_mac(m, MacEnt::reg(a, b));
+                Consume::Steps(1)
+            }
+            VInstr::VMul { dst, a, b } => {
+                if self.is_member(a) || self.is_member(b) {
+                    return Consume::Reject;
+                }
+                // Overwrite semantics: zero the tile slot, then one MAC
+                // (0 + a·b). Reads of a/b hit the lane array, which is
+                // exact: non-members are never stale.
+                let m = match self.member(dst) {
+                    Some(m) => Some(m),
+                    None => self.add_member(dst),
+                };
+                let Some(m) = m else { return Consume::Reject };
+                self.steps.push(Step::Zero { m });
+                self.push_mac(m, MacEnt::reg(a, b));
+                Consume::Steps(1)
+            }
+            VInstr::VLoad { dst, buf, off } => {
+                if self.is_member(dst) {
+                    return Consume::Reject;
+                }
+                if self.block.is_none() {
+                    // Plain loads never open a block (prologue stash
+                    // loads run generically at identical cost).
+                    return Consume::Reject;
+                }
+                self.steps.push(Step::Stash { dst, buf, off });
+                Consume::Steps(1)
+            }
+            VInstr::VAdd { dst, a, b } => {
+                // The multi-register reduction fold (both operands in
+                // the tile): local accumulate, commutative-friendly.
+                match (self.member(a), self.member(b)) {
+                    (Some(ma), Some(mb)) if dst == a => {
+                        self.steps.push(Step::Fold { m: ma, j: mb });
+                        Consume::Steps(1)
+                    }
+                    (Some(ma), Some(mb)) if dst == b => {
+                        self.steps.push(Step::Fold { m: mb, j: ma });
+                        Consume::Steps(1)
+                    }
+                    _ => Consume::Reject,
+                }
+            }
+            VInstr::RedSumAcc { src, off } => match self.member(src) {
+                Some(m) => {
+                    self.steps.push(Step::RedAcc { m, off });
+                    Consume::Steps(1)
+                }
+                None => Consume::Reject,
+            },
+            VInstr::RedSumStore { src, off } => match self.member(src) {
+                Some(m) => {
+                    self.steps.push(Step::RedStore { m, off });
+                    Consume::Steps(1)
+                }
+                None => Consume::Reject,
+            },
+            VInstr::VAccOut { src, off } => match self.member(src) {
+                Some(m) => {
+                    self.steps.push(Step::VecAcc { m, off });
+                    Consume::Steps(1)
+                }
+                None => Consume::Reject,
+            },
+            VInstr::VStoreOut { src, off } => match self.member(src) {
+                Some(m) => {
+                    self.steps.push(Step::VecStore { m, off });
+                    Consume::Steps(1)
+                }
+                None => Consume::Reject,
+            },
+            // Everything else (VMov, RedSumScaleAcc, stores, …) is
+            // either block-neutral-but-rare or reads registers the block
+            // may hold — reject; the retry path falls back generically,
+            // with member writebacks already emitted by the close.
+            _ => Consume::Reject,
+        }
+    }
+
+    /// One Binary micro-op (with one-op lookahead for the XNOR fusion).
+    fn try_consume_binary(&mut self, ops: &[MicroOp], i: usize) -> Consume {
+        let MicroOp::Op(instr) = ops[i] else {
+            unreachable!("decode never fuses in Binary mode");
+        };
+        match instr {
+            VInstr::VDupZero { dst } => {
+                let m = match self.member(dst) {
+                    Some(m) => Some(m),
+                    None => self.add_member(dst),
+                };
+                match m {
+                    Some(m) => self.steps.push(Step::BZero { m }),
+                    None => self.steps.push(Step::BStashZero { dst }),
+                }
+                Consume::Steps(1)
+            }
+            VInstr::VLoad { dst, buf, off } => {
+                if self.is_member(dst) {
+                    return Consume::Reject;
+                }
+                if self.block.is_none() {
+                    return Consume::Reject;
+                }
+                self.steps.push(Step::BStash { dst, buf, off });
+                Consume::Steps(1)
+            }
+            VInstr::VXor { dst, a, b } => {
+                if self.is_member(a) || self.is_member(b) {
+                    return Consume::Reject;
+                }
+                // XNOR fusion: `VXor` immediately consumed by a
+                // `VCntAcc` of the xor result — the dominant binary MAC.
+                // The temp never lands in the register file when dead.
+                if let Some(MicroOp::Op(VInstr::VCntAcc { acc, src })) = ops.get(i + 1) {
+                    let (acc, src) = (*acc, *src);
+                    // `dst` must not be a member: the fused step writes
+                    // `bits[dst]` directly, which would fork the
+                    // register into two representations (fresh xor in
+                    // the file, stale counter in the tile) that the
+                    // close-time writeback would then clobber. Rejecting
+                    // closes the block; the retry fuses cleanly.
+                    if src == dst && acc != a && acc != b && acc != dst && !self.is_member(dst) {
+                        let m = match self.member(acc) {
+                            Some(m) => Some(m),
+                            None => self.add_member(acc).map(|m| {
+                                self.steps.push(Step::BAdopt { m, reg: acc });
+                                m
+                            }),
+                        };
+                        if let Some(m) = m {
+                            let dst_reg = if self.live_at(dst, i + 2) {
+                                dst
+                            } else {
+                                self.stats.elided_writebacks += 1;
+                                NO_REG
+                            };
+                            self.steps.push(Step::BXorCnt { m, a, b, dst: dst_reg });
+                            self.stats.mac_entries += 1;
+                            return Consume::Steps(2);
+                        }
+                    }
+                }
+                // Unfused xor: keep it in the block as a plain register
+                // write so a later count can still consume it.
+                if self.is_member(dst) || self.block.is_none() {
+                    return Consume::Reject;
+                }
+                self.steps.push(Step::BXor { dst, a, b });
+                Consume::Steps(1)
+            }
+            VInstr::VCntAcc { acc, src } => {
+                if self.is_member(src) {
+                    return Consume::Reject;
+                }
+                let m = match self.member(acc) {
+                    Some(m) => m,
+                    None => {
+                        if src == acc {
+                            return Consume::Reject;
+                        }
+                        match self.add_member(acc) {
+                            Some(m) => {
+                                self.steps.push(Step::BAdopt { m, reg: acc });
+                                m
+                            }
+                            None => return Consume::Reject,
+                        }
+                    }
+                };
+                self.steps.push(Step::BCnt { m, src });
+                self.stats.mac_entries += 1;
+                Consume::Steps(1)
+            }
+            VInstr::RedSumScaleAcc { src, off, scale, bias } => match self.member(src) {
+                Some(m) => {
+                    self.steps.push(Step::BRed { m, off, scale, bias });
+                    Consume::Steps(1)
+                }
+                None => Consume::Reject,
+            },
+            // PopcntAcc / VAnd / VMov read the register file directly:
+            // reject, which closes any open block (writing back live
+            // members first) and retries them on the generic path.
+            _ => Consume::Reject,
+        }
+    }
+}

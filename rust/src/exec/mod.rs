@@ -17,6 +17,14 @@
 //! * each generated [`crate::isa::Program`] is pre-decoded into a flat
 //!   micro-op trace ([`DecodedProgram`]) with the dominant VLoad→VMla
 //!   pairs fused, cutting per-instruction dispatch;
+//! * with the default [`Backend::Native`], each trace is further
+//!   **lowered to a native kernel** ([`lower`] →
+//!   [`crate::machine::native`]): register-resident accumulator blocks,
+//!   flat MAC-run tables, and dead-writeback elision remove the
+//!   interpreter's remaining per-micro-op dispatch and lane-array
+//!   round-trips ([`Backend::Interp`] keeps the trace interpreter as
+//!   the bit-exact reference oracle — outputs are byte-identical either
+//!   way, enforced by the `native_equivalence` differential suite);
 //! * depthwise and per-group weights are packed exactly once (shared
 //!   with the functional path through
 //!   [`crate::coordinator::LayerPlan::packed_weights`]);
@@ -44,19 +52,57 @@
 //!
 //! Prepared networks are memoized alongside the plan cache
 //! ([`crate::coordinator::PlanCache::prepared`]), keyed by the
-//! weight-bound plan fingerprint (which includes the graph edges).
+//! weight-bound plan fingerprint (which includes the graph edges)
+//! **plus the backend**, so interpreter- and native-compiled engines
+//! never cross-serve.
 
 mod arena;
+pub mod lower;
 
 pub use arena::ExecArena;
+pub use lower::lower_kernel;
 
-use crate::coordinator::plan::{LayerPlan, NetworkPlan, PackedWeights, PlanKind};
+use crate::coordinator::plan::{LayerPlan, NetworkPlan, PackedWeights, PlanKind, PlannerOptions};
 use crate::coordinator::{
     concat_into, gap_into, gather_inputs, pool_into, shuffle_into, ADD_REQUANT_SHIFT,
 };
 use crate::layer::{ConvConfig, LayerConfig, PoolConfig};
-use crate::machine::{Bases, Buffers, DecodedProgram};
+use crate::machine::{Bases, Buffers, DecodedProgram, Interp, LowerStats, NativeKernel, RegFile};
 use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout};
+
+/// Which executor a prepared engine compiles its kernels for.
+///
+/// * [`Backend::Native`] (the default) lowers every decoded trace to a
+///   [`NativeKernel`] at prepare time — register-resident accumulator
+///   blocks, flat MAC runs, dead-writeback elision (see
+///   [`crate::machine::native`] and [`lower`]). This is the serving hot
+///   path.
+/// * [`Backend::Interp`] keeps the decoded-trace interpreter — the
+///   bit-exact reference oracle the native backend is differentially
+///   tested against (`native_equivalence`), and the fallback for
+///   debugging a suspected lowering issue in production: the two
+///   backends produce byte-identical outputs, so swapping is free.
+///
+/// The backend is part of the prepared-engine cache key
+/// ([`crate::coordinator::PlanCache::prepared`]), so engines compiled
+/// for different backends never cross-serve.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Decoded-trace interpreter (reference oracle).
+    Interp,
+    /// Prepare-time-lowered native kernels.
+    #[default]
+    Native,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Interp => "interp",
+            Backend::Native => "native",
+        }
+    }
+}
 
 /// A compiled simple/depthwise conv executor: decoded trace, absolute
 /// schedule, packed weights, and the declared buffer sizes the schedule
@@ -66,6 +112,10 @@ struct PreparedConv {
     c: usize,
     pad: usize,
     prog: DecodedProgram,
+    /// The lowered kernel (`Some` iff the engine was prepared with
+    /// [`Backend::Native`]); `prog` stays alongside as the oracle and
+    /// the interpreter-backend executable.
+    native: Option<NativeKernel>,
     sched: Vec<Bases>,
     /// CKRSc bytes (simple conv) or tap-major packed bytes (depthwise).
     /// Deliberately a private copy so the engine is self-contained and
@@ -87,6 +137,8 @@ struct PreparedGrouped {
     pad: usize,
     groups: usize,
     prog: DecodedProgram,
+    /// See [`PreparedConv::native`].
+    native: Option<NativeKernel>,
     sched: Vec<Bases>,
     group_weights: Vec<Vec<i8>>,
     group_in_elems: usize,
@@ -131,6 +183,7 @@ pub struct PreparedLayer {
 /// A network compiled for repeated execution. See the module docs.
 pub struct PreparedNetwork {
     pub name: String,
+    backend: Backend,
     layers: Vec<PreparedLayer>,
     /// Per-slot byte capacity (slot count == the graph's max live set).
     slot_caps: Vec<usize>,
@@ -142,11 +195,30 @@ pub struct PreparedNetwork {
 }
 
 impl PreparedNetwork {
-    /// Compile a weight-bound plan. All plan-shaped failure modes (no
-    /// weights bound, wrong weight layout, schedule exceeding declared
-    /// bounds, unsupported layer kinds, invalid programs, malformed
-    /// graph edges) surface here, once — not per request.
+    /// [`PreparedNetwork::prepare_with`] on the default backend
+    /// ([`Backend::Native`]).
     pub fn prepare(plan: &NetworkPlan) -> crate::Result<PreparedNetwork> {
+        PreparedNetwork::prepare_with(plan, Backend::default())
+    }
+
+    /// [`PreparedNetwork::prepare_with`] honoring the planner's backend
+    /// choice — the wiring for embedders that carry one
+    /// [`PlannerOptions`] (e.g. built from a config file's
+    /// `[planner] backend` key) through plan + prepare.
+    pub fn prepare_for(
+        plan: &NetworkPlan,
+        opts: &PlannerOptions,
+    ) -> crate::Result<PreparedNetwork> {
+        PreparedNetwork::prepare_with(plan, opts.backend)
+    }
+
+    /// Compile a weight-bound plan for `backend`. All plan-shaped
+    /// failure modes (no weights bound, wrong weight layout, schedule
+    /// exceeding declared bounds, unsupported layer kinds, invalid
+    /// programs, malformed graph edges) surface here, once — not per
+    /// request. With [`Backend::Native`], every kernel trace is also
+    /// lowered here ([`lower_kernel`]).
+    pub fn prepare_with(plan: &NetworkPlan, backend: Backend) -> crate::Result<PreparedNetwork> {
         let n = plan.layers.len();
         let mut layers = Vec::with_capacity(n);
         let (mut max_padded, mut max_acc) = (0usize, 0usize);
@@ -165,7 +237,7 @@ impl PreparedNetwork {
                     lp.inputs.len()
                 );
             }
-            let prepared = prepare_layer(lp)?;
+            let prepared = prepare_layer(lp, backend)?;
             match &prepared.kind {
                 PreparedKind::Conv(pc) | PreparedKind::Depthwise(pc) => {
                     max_padded = max_padded.max(pc.in_elems);
@@ -219,6 +291,7 @@ impl PreparedNetwork {
 
         Ok(PreparedNetwork {
             name: plan.name.clone(),
+            backend,
             layers,
             slot_caps,
             consumers,
@@ -230,6 +303,32 @@ impl PreparedNetwork {
 
     pub fn num_layers(&self) -> usize {
         self.layers.len()
+    }
+
+    /// The backend this engine's kernels were compiled for.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Aggregate lowering statistics across all native kernels (zeros
+    /// for interpreter-backend engines). Diagnostics/tests/benches.
+    pub fn lower_stats(&self) -> LowerStats {
+        let mut total = LowerStats::default();
+        for l in &self.layers {
+            let native = match &l.kind {
+                PreparedKind::Conv(pc) | PreparedKind::Depthwise(pc) => pc.native.as_ref(),
+                PreparedKind::Grouped(pg) => pg.native.as_ref(),
+                _ => None,
+            };
+            if let Some(nk) = native {
+                let s = nk.stats();
+                total.blocks += s.blocks;
+                total.mac_entries += s.mac_entries;
+                total.elided_writebacks += s.elided_writebacks;
+                total.fallback_ops += s.fallback_ops;
+            }
+        }
+        total
     }
 
     /// Activation slots in the arena — the graph's maximum live set
@@ -269,11 +368,11 @@ impl PreparedNetwork {
         if n == 0 {
             return Ok(input.clone());
         }
-        // Two small (one machine word per node) bookkeeping vectors per
-        // image; the *tensor* buffers — the allocations that matter —
-        // all come from the arena. Folding these into the arena would
-        // need a split borrow against the slots `outs` draws from.
-        let mut remaining = self.consumers.clone();
+        // The consumer-count scratch lives in the arena (no per-image
+        // clone). `outs` stays a local: folding it into the arena would
+        // need a split borrow against the slots it draws from, and it
+        // only holds n pointers-worth of `Option`s.
+        arena.load_consumers(&self.consumers);
         let mut outs: Vec<Option<ActTensor>> = (0..n).map(|_| None).collect();
         for i in 0..n {
             let layer = &self.layers[i];
@@ -323,14 +422,14 @@ impl PreparedNetwork {
             // Recycle inputs whose last consumer just ran — their slots
             // go back to the arena for reuse by later nodes.
             for &j in &layer.inputs {
-                remaining[j] -= 1;
-                if remaining[j] == 0 {
+                arena.remaining[j] -= 1;
+                if arena.remaining[j] == 0 {
                     if let Some(t) = outs[j].take() {
                         arena.put_act(self.layers[j].slot, t);
                     }
                 }
             }
-            if remaining[i] == 0 {
+            if arena.remaining[i] == 0 {
                 // Dead node (no consumers, not the output) — mirror the
                 // prepare-time liveness walk and recycle it immediately.
                 arena.put_act(layer.slot, out);
@@ -341,11 +440,9 @@ impl PreparedNetwork {
         let last = outs[n - 1]
             .take()
             .ok_or_else(|| anyhow::anyhow!("network output recycled mid-run"))?;
-        // The result must outlive the arena: one clone per image (the
-        // arena keeps its buffer for the next image).
-        let result = last.clone();
-        arena.put_act(self.layers[n - 1].slot, last);
-        Ok(result)
+        // The result must outlive the arena: hand the buffer itself to
+        // the caller and refill the slot capacity-only — no output copy.
+        Ok(arena.steal_act(self.layers[n - 1].slot, last))
     }
 
     /// Execute a coalesced batch, fanning images across up to `threads`
@@ -384,12 +481,19 @@ impl PreparedNetwork {
     }
 }
 
-fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
+fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLayer> {
     let node = |kind: PreparedKind, est_out_elems: usize| PreparedLayer {
         kind,
         inputs: lp.inputs.clone(),
         slot: 0, // assigned by the liveness walk in `prepare`
         est_out_elems,
+    };
+    // Lower the decoded trace when the engine targets the native
+    // backend (the bounds of the lowered kernel are the trace's, so the
+    // schedule validation below covers both executables).
+    let lowered = |dp: &DecodedProgram| match backend {
+        Backend::Native => Some(lower_kernel(dp)),
+        Backend::Interp => None,
     };
     match (&lp.layer, &lp.kind) {
         (LayerConfig::Conv(cfg), PlanKind::Generated { prog, machine, pad, .. }) => {
@@ -428,6 +532,7 @@ fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
                     cfg: *cfg,
                     c,
                     pad: *pad,
+                    native: lowered(&dp),
                     prog: dp,
                     sched,
                     weights: weights.data.clone(),
@@ -462,6 +567,7 @@ fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
                     cfg: *cfg,
                     c,
                     pad: *pad,
+                    native: lowered(&dp),
                     prog: dp,
                     sched,
                     weights: packed.to_vec(),
@@ -513,6 +619,7 @@ fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
                     c,
                     pad: *pad,
                     groups: *groups,
+                    native: lowered(&dp),
                     prog: dp,
                     sched,
                     group_weights: gws.iter().map(|w| w.data.clone()).collect(),
@@ -554,6 +661,51 @@ fn prepare_layer(lp: &LayerPlan) -> crate::Result<PreparedLayer> {
             l.name(),
             k.name()
         ),
+    }
+}
+
+/// The per-layer executor a kernel loop resolved from its backend: one
+/// place that knows how to run a prevalidated invocation schedule, so
+/// the conv/grouped bodies are written once instead of per backend.
+enum BackendExec<'a> {
+    Native { nk: &'a NativeKernel, regs: &'a mut RegFile },
+    Interp { dp: &'a DecodedProgram, interp: &'a mut Interp },
+}
+
+impl<'a> BackendExec<'a> {
+    /// Pick the executor for a compiled conv layer (native kernel when
+    /// the engine was prepared with [`Backend::Native`], the decoded
+    /// trace otherwise), borrowing the matching arena state.
+    fn resolve(
+        native: Option<&'a NativeKernel>,
+        dp: &'a DecodedProgram,
+        interp: &'a mut Interp,
+        regs: &'a mut RegFile,
+    ) -> BackendExec<'a> {
+        match native {
+            Some(nk) => BackendExec::Native { nk, regs },
+            None => BackendExec::Interp { dp, interp },
+        }
+    }
+
+    /// Run the whole prevalidated schedule against one buffer binding.
+    /// Bounds were checked at prepare time (the lowered kernel shares
+    /// the trace's max offsets), so both backends take their unchecked
+    /// paths.
+    fn run_schedule(&mut self, input: &[i8], weight: &[i8], output: &mut [i32], sched: &[Bases]) {
+        let mut bufs = Buffers { input, weight, output };
+        match self {
+            BackendExec::Native { nk, regs } => {
+                for &bases in sched {
+                    nk.run(regs, &mut bufs, bases);
+                }
+            }
+            BackendExec::Interp { dp, interp } => {
+                for &bases in sched {
+                    interp.run_decoded(dp, &mut bufs, bases);
+                }
+            }
+        }
     }
 }
 
@@ -633,13 +785,9 @@ fn run_conv_kernel(
     debug_assert_eq!(padded.data.len(), pc.in_elems);
     arena.reset_acc(pc.acc_elems);
     {
-        let (interp, acc) = arena.interp_and_acc();
-        let mut bufs =
-            Buffers { input: &padded.data, weight: &pc.weights, output: acc.as_mut_slice() };
-        // Bounds were validated for the whole schedule at prepare time.
-        for &bases in &pc.sched {
-            interp.run_decoded(&pc.prog, &mut bufs, bases);
-        }
+        let (interp, regs, acc) = arena.exec_and_acc();
+        let mut exec = BackendExec::resolve(pc.native.as_ref(), &pc.prog, interp, regs);
+        exec.run_schedule(&padded.data, &pc.weights, acc, &pc.sched);
     }
     arena.put_padded(padded);
     Ok(arena.take_act(
@@ -685,17 +833,15 @@ fn exec_grouped(
     debug_assert_eq!(padded.data.len(), pg.in_elems);
     arena.reset_acc(pg.acc_elems);
     {
-        let (interp, acc) = arena.interp_and_acc();
+        let (interp, regs, acc) = arena.exec_and_acc();
+        let mut exec = BackendExec::resolve(pg.native.as_ref(), &pg.prog, interp, regs);
         for g in 0..pg.groups {
-            // Zero-copy slices: the group's input channels are contiguous
-            // in NCHWc, and its output channels are contiguous in the
-            // k-major accumulator.
+            // Zero-copy slices: the group's input channels are
+            // contiguous in NCHWc, and its output channels are
+            // contiguous in the k-major accumulator.
             let gin = &padded.data[g * pg.group_in_elems..(g + 1) * pg.group_in_elems];
             let gout = &mut acc[g * pg.group_out_elems..(g + 1) * pg.group_out_elems];
-            let mut bufs = Buffers { input: gin, weight: &pg.group_weights[g], output: gout };
-            for &bases in &pg.sched {
-                interp.run_decoded(&pg.prog, &mut bufs, bases);
-            }
+            exec.run_schedule(gin, &pg.group_weights[g], gout, &pg.sched);
         }
     }
     arena.put_padded(padded);

@@ -156,15 +156,18 @@ impl Interp {
         }
     }
 
-    /// One INT8 fast-path instruction; shared by [`Interp::run_fast`]
-    /// and the decoded-trace executor ([`Interp::run_decoded`]).
+    /// One INT8 fast-path instruction; shared by [`Interp::run_fast`],
+    /// the decoded-trace executor ([`Interp::run_decoded`]) and the
+    /// native backend's generic fallback path
+    /// ([`super::native::NativeKernel`]) — one implementation, so the
+    /// backends cannot drift apart on fallback ops.
     ///
     /// Soundness contract (enforced by callers, as in `run_fast`): the
     /// buffer bounds of the instruction stream under `bases` have been
     /// validated, `in_ptr`/`wgt_ptr` are derived from `bufs` at those
     /// bases, and register ids fit the lane buffer.
     #[inline(always)]
-    fn step_int8_fast(
+    pub(crate) fn step_int8_fast(
         lanes: &mut [i32],
         bufs: &mut Buffers,
         bases: Bases,
@@ -253,10 +256,17 @@ impl Interp {
                         bufs.output[base + l] += lanes[s + l];
                     }
                 }
-                _ => {
-                    // Rare instructions fall back to the checked path
-                    // (none exist in Int8 mode today; defensive).
-                    panic!("unsupported instruction in Int8 fast path: {instr:?}")
+                // The match is deliberately exhaustive (no `_` arm): a
+                // future instruction must be handled here explicitly at
+                // compile time instead of compiling into a latent
+                // runtime abort. The remaining variants are invalid in
+                // Int8 mode; they panic with the checked path's message.
+                VInstr::VStore { .. } => panic!("VStore to operand in conv kernel"),
+                VInstr::VXor { .. }
+                | VInstr::VAnd { .. }
+                | VInstr::VCntAcc { .. }
+                | VInstr::PopcntAcc { .. } => {
+                    panic!("binary op in Int8 program (validation should have caught this)")
                 }
         }
     }
@@ -347,62 +357,73 @@ impl Interp {
     }
 
     /// One Binary-mode instruction; shared by [`Interp::run`] and the
-    /// decoded-trace executor ([`Interp::run_decoded`]).
+    /// decoded-trace executor ([`Interp::run_decoded`]). Delegates to
+    /// [`step_binary_words`], the word-level implementation the native
+    /// backend's fallback path shares.
     fn step_binary(&mut self, instr: &VInstr, bufs: &mut Buffers, bases: Bases) {
-        let bits = &mut self.bits;
-        {
-            match *instr {
-                VInstr::VLoad { dst, buf, off } => {
-                    let src: &[i8] = match buf {
-                        Buf::In => &bufs.input[(bases.input + off) as usize..],
-                        Buf::Wgt => &bufs.weight[(bases.weight + off) as usize..],
-                        Buf::Out => panic!("VLoad from Out is not defined"),
-                    };
-                    let d = dst as usize * 2;
-                    bits[d] = word_le(&src[0..8]);
-                    bits[d + 1] = word_le(&src[8..REG_BYTES]);
-                }
-                VInstr::VDupZero { dst } => {
-                    let d = dst as usize * 2;
-                    bits[d] = 0;
-                    bits[d + 1] = 0;
-                }
-                VInstr::VXor { dst, a, b } => {
-                    let (d, a, b) = (dst as usize * 2, a as usize * 2, b as usize * 2);
-                    bits[d] = bits[a] ^ bits[b];
-                    bits[d + 1] = bits[a + 1] ^ bits[b + 1];
-                }
-                VInstr::VAnd { dst, a, b } => {
-                    let (d, a, b) = (dst as usize * 2, a as usize * 2, b as usize * 2);
-                    bits[d] = bits[a] & bits[b];
-                    bits[d + 1] = bits[a + 1] & bits[b + 1];
-                }
-                VInstr::VMov { dst, src } => {
-                    let (d, s) = (dst as usize * 2, src as usize * 2);
-                    bits[d] = bits[s];
-                    bits[d + 1] = bits[s + 1];
-                }
-                VInstr::PopcntAcc { src, off, scale, bias } => {
-                    let s = src as usize * 2;
-                    let cnt = (bits[s].count_ones() + bits[s + 1].count_ones()) as i32;
-                    bufs.output[(bases.output + off) as usize] += bias + scale * cnt;
-                }
-                VInstr::VCntAcc { acc, src } => {
-                    // Per-byte popcount of src, accumulated per byte lane
-                    // without inter-byte carry (NEON vcnt + vadd.u8).
-                    let (a, s) = (acc as usize * 2, src as usize * 2);
-                    bits[a] = bytewise_add(bits[a], bytewise_popcount(bits[s]));
-                    bits[a + 1] = bytewise_add(bits[a + 1], bytewise_popcount(bits[s + 1]));
-                }
-                VInstr::RedSumScaleAcc { src, off, scale, bias } => {
-                    // Sum the 16 count bytes of a VCntAcc accumulator.
-                    let s = src as usize * 2;
-                    let sum = (byte_lane_sum(bits[s]) + byte_lane_sum(bits[s + 1])) as i32;
-                    bufs.output[(bases.output + off) as usize] += bias + scale * sum;
-                }
-                other => panic!("instruction {other:?} not defined in Binary mode"),
-            }
+        step_binary_words(&mut self.bits, instr, bufs, bases)
+    }
+}
+
+/// One Binary-mode instruction over a raw two-words-per-register file.
+/// The single implementation behind [`Interp`]'s binary path and the
+/// native backend's generic fallback ([`super::native::NativeKernel`]).
+pub(crate) fn step_binary_words(
+    bits: &mut [u64],
+    instr: &VInstr,
+    bufs: &mut Buffers,
+    bases: Bases,
+) {
+    match *instr {
+        VInstr::VLoad { dst, buf, off } => {
+            let src: &[i8] = match buf {
+                Buf::In => &bufs.input[(bases.input + off) as usize..],
+                Buf::Wgt => &bufs.weight[(bases.weight + off) as usize..],
+                Buf::Out => panic!("VLoad from Out is not defined"),
+            };
+            let d = dst as usize * 2;
+            bits[d] = word_le(&src[0..8]);
+            bits[d + 1] = word_le(&src[8..REG_BYTES]);
         }
+        VInstr::VDupZero { dst } => {
+            let d = dst as usize * 2;
+            bits[d] = 0;
+            bits[d + 1] = 0;
+        }
+        VInstr::VXor { dst, a, b } => {
+            let (d, a, b) = (dst as usize * 2, a as usize * 2, b as usize * 2);
+            bits[d] = bits[a] ^ bits[b];
+            bits[d + 1] = bits[a + 1] ^ bits[b + 1];
+        }
+        VInstr::VAnd { dst, a, b } => {
+            let (d, a, b) = (dst as usize * 2, a as usize * 2, b as usize * 2);
+            bits[d] = bits[a] & bits[b];
+            bits[d + 1] = bits[a + 1] & bits[b + 1];
+        }
+        VInstr::VMov { dst, src } => {
+            let (d, s) = (dst as usize * 2, src as usize * 2);
+            bits[d] = bits[s];
+            bits[d + 1] = bits[s + 1];
+        }
+        VInstr::PopcntAcc { src, off, scale, bias } => {
+            let s = src as usize * 2;
+            let cnt = (bits[s].count_ones() + bits[s + 1].count_ones()) as i32;
+            bufs.output[(bases.output + off) as usize] += bias + scale * cnt;
+        }
+        VInstr::VCntAcc { acc, src } => {
+            // Per-byte popcount of src, accumulated per byte lane
+            // without inter-byte carry (NEON vcnt + vadd.u8).
+            let (a, s) = (acc as usize * 2, src as usize * 2);
+            bits[a] = bytewise_add(bits[a], bytewise_popcount(bits[s]));
+            bits[a + 1] = bytewise_add(bits[a + 1], bytewise_popcount(bits[s + 1]));
+        }
+        VInstr::RedSumScaleAcc { src, off, scale, bias } => {
+            // Sum the 16 count bytes of a VCntAcc accumulator.
+            let s = src as usize * 2;
+            let sum = (byte_lane_sum(bits[s]) + byte_lane_sum(bits[s + 1])) as i32;
+            bufs.output[(bases.output + off) as usize] += bias + scale * sum;
+        }
+        other => panic!("instruction {other:?} not defined in Binary mode"),
     }
 }
 
@@ -487,6 +508,18 @@ impl DecodedProgram {
         self.ops.len()
     }
 
+    /// The micro-op trace itself (input of the native lowering pass,
+    /// [`crate::exec::lower::lower_kernel`]).
+    pub fn micro_ops(&self) -> &[MicroOp] {
+        &self.ops
+    }
+
+    /// Cached (In, Wgt, Out) max offsets — copied into lowered kernels
+    /// so they can bounds-check invocations on their own.
+    pub(crate) fn max_offsets(&self) -> (usize, usize, usize) {
+        (self.max_in, self.max_wgt, self.max_out)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.ops.is_empty()
     }
@@ -509,8 +542,10 @@ impl DecodedProgram {
 
 /// SWAR per-byte popcount: each byte of the result holds the popcount of
 /// the corresponding byte of `x` (0..=8) — semantics of NEON `vcnt.u8`.
+/// `pub(crate)`: shared with the native backend so both execute the
+/// identical arithmetic.
 #[inline]
-fn bytewise_popcount(x: u64) -> u64 {
+pub(crate) fn bytewise_popcount(x: u64) -> u64 {
     let mut v = x;
     v = v - ((v >> 1) & 0x5555_5555_5555_5555);
     v = (v & 0x3333_3333_3333_3333) + ((v >> 2) & 0x3333_3333_3333_3333);
@@ -520,19 +555,21 @@ fn bytewise_popcount(x: u64) -> u64 {
 /// Per-byte add without carry propagation between bytes. Valid while each
 /// byte sum stays < 256 (codegen flushes accumulators well before that).
 #[inline]
-fn bytewise_add(a: u64, b: u64) -> u64 {
+pub(crate) fn bytewise_add(a: u64, b: u64) -> u64 {
     let low = (a & 0x7F7F_7F7F_7F7F_7F7F) + (b & 0x7F7F_7F7F_7F7F_7F7F);
     low ^ ((a ^ b) & 0x8080_8080_8080_8080)
 }
 
 /// Sum of the 8 byte lanes of a word.
 #[inline]
-fn byte_lane_sum(x: u64) -> u64 {
+pub(crate) fn byte_lane_sum(x: u64) -> u64 {
     x.to_le_bytes().iter().map(|&b| b as u64).sum()
 }
 
+/// `pub(crate)`: shared with the native backend's binary loads so the
+/// register image can never drift between executors.
 #[inline]
-fn word_le(bytes: &[i8]) -> u64 {
+pub(crate) fn word_le(bytes: &[i8]) -> u64 {
     let mut w = 0u64;
     for (i, &b) in bytes.iter().enumerate() {
         w |= (b as u8 as u64) << (8 * i);

@@ -12,12 +12,20 @@
 //!   costs calibrated to the paper's testbed (ARM Neoverse-N1), producing
 //!   modeled cycles and the memory-operation counters that Table I
 //!   reasons about.
+//! * [`native`] — the *native execution backend*: prepare-time-lowered
+//!   kernels ([`NativeKernel`]) with register-resident accumulator
+//!   blocks, flat MAC-run tables, and dead-writeback elision — the same
+//!   semantics as [`interp`] (the bit-exact reference oracle), minus its
+//!   per-instruction dispatch tax. Lowering lives in
+//!   [`crate::exec::lower`].
 
 pub mod cache;
 pub mod interp;
+pub mod native;
 pub mod perf;
 
 pub use interp::{Buffers, DecodedProgram, Interp, MicroOp};
+pub use native::{LowerStats, NativeKernel, RegFile};
 pub use perf::{CostModel, PerfStats, PerfModel};
 
 /// Machine configuration (the paper's §II-E register-file terms).

@@ -1,0 +1,550 @@
+//! Native execution backend: lowered SIMD kernels (§Perf, PR 4).
+//!
+//! The interpreter ([`super::interp`]) executes a program one micro-op at
+//! a time: every MAC pays an enum dispatch plus a read-modify-write of the
+//! accumulator through the heap-allocated lane array, and every fused load
+//! writes its destination register back even when nothing ever reads it.
+//! The modeled NEON/AVX kernels pay none of that — their accumulators live
+//! in architectural registers for a whole output and their loads feed the
+//! multiplier directly. A [`NativeKernel`] is the prepare-time lowering
+//! that closes this gap while staying **program-faithful** (bit-identical
+//! to [`super::Interp::run`] on the source program, enforced by the
+//! `native_equivalence` differential suite):
+//!
+//! * **Accumulator blocks** — the lowering pass ([`crate::exec::lower`])
+//!   finds spans where a small group of physical registers is only ever
+//!   *accumulated into* (the `VDupZero … VMla⁺ … RedSum`/`VStoreOut`
+//!   shape every generated dataflow reduces to). Inside a block those
+//!   registers live in a stack-local `[[i32; LANES]; MAX_GROUP]` tile:
+//!   MACs never touch the lane array, reductions sum straight out of the
+//!   tile, and the registers are written back only if something after the
+//!   block still reads them.
+//! * **MAC runs** — consecutive multiply-accumulates into one group
+//!   member are stored as a flat entry table and executed in a single
+//!   tight loop with the member hoisted into a local `[i32; LANES]`; the
+//!   per-op dispatch of the interpreter collapses to one small,
+//!   hot-predictable kind switch per entry, and the fixed-width lane loop
+//!   is written so LLVM auto-vectorizes it.
+//! * **Dead writeback elision** — a fused load whose destination register
+//!   is never read again (the common case: active input/weight variables
+//!   are overwritten every tap) skips the 16-lane register writeback
+//!   entirely.
+//! * **Binary mode** — the same block machinery over `u64` words, with
+//!   the `VXor`→`VCntAcc` XNOR pair fused so the xor result never lands
+//!   in the register file.
+//!
+//! Anything the lowering does not recognize falls back per-op to the
+//! exact interpreter step functions (shared code, not a reimplementation),
+//! so an arbitrary valid program always executes correctly — the blocks
+//! are a fast path, not a semantic fork.
+
+use crate::isa::{Buf, Mode, VInstr, I8_LANES};
+
+use super::interp::{step_binary_words, Interp};
+use super::{Bases, Buffers};
+
+/// Maximum physical registers held register-resident by one block
+/// (covers the planner's jam-4 kernels and 512-bit vector variables).
+/// When a group fills up, extra `VDupZero`s zero their register in
+/// place ([`Step::StashZero`]) and extra accumulations close the block
+/// and open a fresh one — never wrong, just more block boundaries.
+pub const MAX_GROUP: usize = 8;
+
+/// Sentinel for "no destination register" in a MAC entry or fused XNOR
+/// step (the dead-writeback elision marker).
+pub(crate) const NO_REG: u8 = u8::MAX;
+
+/// A standalone register file for the native backend (the interpreter
+/// owns its own): `lanes` holds 16 INT32 lanes per register, `bits` two
+/// 64-bit words per register. One per worker thread, reused across
+/// layers and images — sound for the same reason the interpreter's is:
+/// programs are validated def-before-use, so no kernel can observe
+/// another's leftovers.
+pub struct RegFile {
+    lanes: Vec<i32>,
+    bits: Vec<u64>,
+    num_regs: usize,
+}
+
+impl RegFile {
+    pub fn new(num_regs: usize) -> RegFile {
+        RegFile {
+            lanes: vec![0; num_regs * I8_LANES],
+            bits: vec![0; num_regs * 2],
+            num_regs,
+        }
+    }
+
+    pub fn num_regs(&self) -> usize {
+        self.num_regs
+    }
+}
+
+/// Kind tag of a [`MacEnt`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum MacKind {
+    /// `local += widen(In[off..+16]) * lanes[a]`, optionally writing the
+    /// loaded vector to register `b` (NO_REG = dead, elided).
+    LoadIn,
+    /// As `LoadIn` but from the weight buffer.
+    LoadWgt,
+    /// `local += lanes[a] * lanes[b]` (both operands already resident).
+    RegReg,
+}
+
+/// One multiply-accumulate of a MAC run. For the load kinds `a` is the
+/// resident multiplicand and `b` the loaded vector's destination register
+/// (or [`NO_REG`]); for `RegReg` they are the two operands.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct MacEnt {
+    pub(crate) kind: MacKind,
+    pub(crate) off: u32,
+    pub(crate) a: u8,
+    pub(crate) b: u8,
+}
+
+impl MacEnt {
+    pub(crate) fn load(buf: Buf, off: u32, other: u8, dst: Option<u8>) -> MacEnt {
+        let kind = match buf {
+            Buf::In => MacKind::LoadIn,
+            Buf::Wgt => MacKind::LoadWgt,
+            Buf::Out => unreachable!("VLoad from Out"),
+        };
+        MacEnt { kind, off, a: other, b: dst.unwrap_or(NO_REG) }
+    }
+
+    pub(crate) fn reg(a: u8, b: u8) -> MacEnt {
+        MacEnt { kind: MacKind::RegReg, off: 0, a, b }
+    }
+}
+
+/// One step inside an accumulator block. `m` always indexes the block's
+/// local tile (`< MAX_GROUP`); explicit register ids are carried where
+/// the lane array must be touched, so execution never needs a member
+/// lookup table.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Step {
+    /// `local[m] = 0` (a member's `VDupZero`, including mid-block
+    /// re-initialization after a flush).
+    Zero { m: u8 },
+    /// `local[m] = lanes[reg]` — adopt a register whose current value
+    /// was produced before the block (lets blocks pick up accumulators
+    /// initialized in an earlier span).
+    Adopt { m: u8, reg: u8 },
+    /// A run of `n` MAC entries into `local[m]`, executed with the
+    /// member hoisted into a local vector (`macs[start..start+n]`).
+    MacRun { m: u8, start: u32, n: u32 },
+    /// `lanes[dst] = widen(buf[off..+16])` — a live stash load inside
+    /// the block (its consumers read the lane array).
+    Stash { dst: u8, buf: Buf, off: u32 },
+    /// `lanes[dst] = 0` for a non-member register.
+    StashZero { dst: u8 },
+    /// `local[m] += local[j]` — the multi-register reduction fold
+    /// (`VAdd` of two group members, 256/512-bit vector variables).
+    Fold { m: u8, j: u8 },
+    /// `Out[off] += Σ local[m]`.
+    RedAcc { m: u8, off: u32 },
+    /// `Out[off] = Σ local[m]`.
+    RedStore { m: u8, off: u32 },
+    /// `Out[off..+16] += local[m]` (depthwise write-back).
+    VecAcc { m: u8, off: u32 },
+    /// `Out[off..+16] = local[m]`.
+    VecStore { m: u8, off: u32 },
+    /// `lanes[reg] = local[m]` — end-of-block writeback for members some
+    /// later op still reads.
+    WriteBack { m: u8, reg: u8 },
+
+    // ---- Binary-mode steps (local tile is [[u64; 2]; MAX_GROUP]) ----
+    /// `local[m] = 0` (binary member init).
+    BZero { m: u8 },
+    /// `local[m] = bits[reg]`.
+    BAdopt { m: u8, reg: u8 },
+    /// `bits[dst] = 128 bits from buf[off..+16]`.
+    BStash { dst: u8, buf: Buf, off: u32 },
+    /// `bits[dst] = 0` for a non-member register.
+    BStashZero { dst: u8 },
+    /// Fused XNOR MAC: `t = bits[a] ^ bits[b]; local[m] +=
+    /// bytewise_popcount(t)`, optionally writing `t` to `dst`
+    /// (NO_REG = dead, elided).
+    BXorCnt { m: u8, a: u8, b: u8, dst: u8 },
+    /// `bits[dst] = bits[a] ^ bits[b]` (unfused xor, result live).
+    BXor { dst: u8, a: u8, b: u8 },
+    /// `local[m] += bytewise_popcount(bits[src])` (unfused count).
+    BCnt { m: u8, src: u8 },
+    /// `Out[off] += bias + scale * Σ count bytes of local[m]`.
+    BRed { m: u8, off: u32, scale: i32, bias: i32 },
+    /// `bits[reg] = local[m]` — binary end-of-block writeback.
+    BWriteBack { m: u8, reg: u8 },
+}
+
+/// One lowered operation: an accumulator block or a generic fallback op
+/// executed by the shared interpreter step functions.
+#[derive(Clone, Debug)]
+pub(crate) enum NativeOp {
+    /// `steps[start..start+len]` executed over a fresh local tile.
+    Block { start: u32, len: u32 },
+    /// Exact interpreter semantics (shared step function).
+    Op(VInstr),
+}
+
+/// Lowering statistics (diagnostics and tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LowerStats {
+    /// Accumulator blocks formed.
+    pub blocks: usize,
+    /// MAC entries inside blocks (each one interpreter dispatch avoided).
+    pub mac_entries: usize,
+    /// Dead register writebacks elided (fused loads and XNOR temps whose
+    /// destination is never read again).
+    pub elided_writebacks: usize,
+    /// Micro-ops left on the generic per-op fallback path.
+    pub fallback_ops: usize,
+}
+
+/// A program lowered to native form. Built by
+/// [`crate::exec::lower::lower_kernel`] at prepare time; executed by
+/// [`NativeKernel::run`] on the per-request hot path.
+#[derive(Clone, Debug)]
+pub struct NativeKernel {
+    pub name: String,
+    pub mode: Mode,
+    pub regs_used: usize,
+    pub(crate) ops: Vec<NativeOp>,
+    pub(crate) steps: Vec<Step>,
+    pub(crate) macs: Vec<MacEnt>,
+    stats: LowerStats,
+    /// Max buffer offsets of the source program (bounds debug checks).
+    max_in: usize,
+    max_wgt: usize,
+    max_out: usize,
+}
+
+impl NativeKernel {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble(
+        name: String,
+        mode: Mode,
+        regs_used: usize,
+        ops: Vec<NativeOp>,
+        steps: Vec<Step>,
+        macs: Vec<MacEnt>,
+        stats: LowerStats,
+        max_offsets: (usize, usize, usize),
+    ) -> NativeKernel {
+        NativeKernel {
+            name,
+            mode,
+            regs_used,
+            ops,
+            steps,
+            macs,
+            stats,
+            max_in: max_offsets.0,
+            max_wgt: max_offsets.1,
+            max_out: max_offsets.2,
+        }
+    }
+
+    pub fn stats(&self) -> LowerStats {
+        self.stats
+    }
+
+    /// O(1) bounds check for one invocation, mirroring
+    /// [`super::DecodedProgram::bases_fit`].
+    pub fn bases_fit(&self, bases: Bases, in_len: usize, wgt_len: usize, out_len: usize) -> bool {
+        bases.input as usize + self.max_in <= in_len
+            && bases.weight as usize + self.max_wgt <= wgt_len
+            && bases.output as usize + self.max_out <= out_len
+    }
+
+    /// Execute one invocation. Semantically identical to running the
+    /// source program on [`Interp::run`] with the same buffers and bases
+    /// — except that registers proven dead are not materialized in
+    /// `regs` (unobservable by any def-before-use-valid successor).
+    ///
+    /// Safety contract (same as [`Interp::run_decoded`]): the caller has
+    /// validated bounds for this (kernel, buffers, bases) triple, e.g.
+    /// via [`NativeKernel::bases_fit`] over the whole schedule at
+    /// prepare time.
+    pub fn run(&self, regs: &mut RegFile, bufs: &mut Buffers, bases: Bases) {
+        debug_assert!(self.bases_fit(bases, bufs.input.len(), bufs.weight.len(), bufs.output.len()));
+        assert!(self.regs_used <= regs.num_regs);
+        match self.mode {
+            Mode::Int8 => self.run_int8(regs, bufs, bases),
+            Mode::Binary => self.run_binary(regs, bufs, bases),
+        }
+    }
+
+    fn run_int8(&self, regs: &mut RegFile, bufs: &mut Buffers, bases: Bases) {
+        let lanes = &mut regs.lanes[..];
+        // Hoist the per-buffer base pointers out of every dispatch, as
+        // the interpreter fast path does.
+        let in_ptr = unsafe { bufs.input.as_ptr().add(bases.input as usize) };
+        let wgt_ptr = unsafe { bufs.weight.as_ptr().add(bases.weight as usize) };
+        for op in &self.ops {
+            match *op {
+                NativeOp::Block { start, len } => {
+                    // The block's register tile. Members index into it via
+                    // `m` (bounded by MAX_GROUP at lower time); it lives on
+                    // the stack, so member traffic never leaves L1 and MAC
+                    // runs hoist their member into registers outright.
+                    let mut local = [[0i32; I8_LANES]; MAX_GROUP];
+                    let steps = &self.steps[start as usize..(start + len) as usize];
+                    for step in steps {
+                        match *step {
+                            Step::Zero { m } => local[m as usize] = [0; I8_LANES],
+                            Step::Adopt { m, reg } => {
+                                let s = reg as usize * I8_LANES;
+                                local[m as usize].copy_from_slice(&lanes[s..s + I8_LANES]);
+                            }
+                            Step::MacRun { m, start, n } => unsafe {
+                                let ents = &self.macs[start as usize..(start + n) as usize];
+                                // Hoist the member: the accumulator stays in
+                                // a local vector for the whole run — zero
+                                // lane-array RMWs per MAC (the interpreter
+                                // pays one per instruction).
+                                let mut acc = local[m as usize];
+                                for e in ents {
+                                    match e.kind {
+                                        MacKind::LoadIn | MacKind::LoadWgt => {
+                                            let base = if e.kind == MacKind::LoadIn {
+                                                in_ptr
+                                            } else {
+                                                wgt_ptr
+                                            };
+                                            let src = base.add(e.off as usize);
+                                            // Live destinations are written
+                                            // *before* the multiplicand is
+                                            // read, so `a == b` aliasing
+                                            // (MLA consuming its own load)
+                                            // stays exact.
+                                            if e.b != NO_REG {
+                                                let d = e.b as usize * I8_LANES;
+                                                for l in 0..I8_LANES {
+                                                    *lanes.get_unchecked_mut(d + l) =
+                                                        *src.add(l) as i32;
+                                                }
+                                            }
+                                            let o = e.a as usize * I8_LANES;
+                                            for l in 0..I8_LANES {
+                                                acc[l] += *src.add(l) as i32
+                                                    * *lanes.get_unchecked(o + l);
+                                            }
+                                        }
+                                        MacKind::RegReg => {
+                                            let (a, b) =
+                                                (e.a as usize * I8_LANES, e.b as usize * I8_LANES);
+                                            for l in 0..I8_LANES {
+                                                acc[l] += *lanes.get_unchecked(a + l)
+                                                    * *lanes.get_unchecked(b + l);
+                                            }
+                                        }
+                                    }
+                                }
+                                local[m as usize] = acc;
+                            },
+                            Step::Stash { dst, buf, off } => unsafe {
+                                let base = match buf {
+                                    Buf::In => in_ptr,
+                                    Buf::Wgt => wgt_ptr,
+                                    Buf::Out => unreachable!("VLoad from Out"),
+                                };
+                                let src = base.add(off as usize);
+                                let d = dst as usize * I8_LANES;
+                                for l in 0..I8_LANES {
+                                    *lanes.get_unchecked_mut(d + l) = *src.add(l) as i32;
+                                }
+                            },
+                            Step::StashZero { dst } => {
+                                let d = dst as usize * I8_LANES;
+                                lanes[d..d + I8_LANES].fill(0);
+                            }
+                            Step::Fold { m, j } => {
+                                let rhs = local[j as usize];
+                                let dst = &mut local[m as usize];
+                                for l in 0..I8_LANES {
+                                    dst[l] += rhs[l];
+                                }
+                            }
+                            Step::RedAcc { m, off } => unsafe {
+                                let sum: i32 = local[m as usize].iter().sum();
+                                *bufs.output.get_unchecked_mut((bases.output + off) as usize) +=
+                                    sum;
+                            },
+                            Step::RedStore { m, off } => unsafe {
+                                let sum: i32 = local[m as usize].iter().sum();
+                                *bufs.output.get_unchecked_mut((bases.output + off) as usize) = sum;
+                            },
+                            Step::VecAcc { m, off } => {
+                                let base = (bases.output + off) as usize;
+                                let src = &local[m as usize];
+                                for l in 0..I8_LANES {
+                                    bufs.output[base + l] += src[l];
+                                }
+                            }
+                            Step::VecStore { m, off } => {
+                                let base = (bases.output + off) as usize;
+                                bufs.output[base..base + I8_LANES]
+                                    .copy_from_slice(&local[m as usize]);
+                            }
+                            Step::WriteBack { m, reg } => {
+                                let d = reg as usize * I8_LANES;
+                                lanes[d..d + I8_LANES].copy_from_slice(&local[m as usize]);
+                            }
+                            // Exhaustive on purpose (no `_` arm): a new
+                            // Step variant must be handled here at
+                            // compile time, not abort at request time.
+                            Step::BZero { .. }
+                            | Step::BAdopt { .. }
+                            | Step::BStash { .. }
+                            | Step::BStashZero { .. }
+                            | Step::BXorCnt { .. }
+                            | Step::BXor { .. }
+                            | Step::BCnt { .. }
+                            | Step::BRed { .. }
+                            | Step::BWriteBack { .. } => {
+                                unreachable!("binary step in Int8 native kernel")
+                            }
+                        }
+                    }
+                }
+                NativeOp::Op(ref instr) => {
+                    Interp::step_int8_fast(lanes, bufs, bases, in_ptr, wgt_ptr, instr)
+                }
+            }
+        }
+    }
+
+    fn run_binary(&self, regs: &mut RegFile, bufs: &mut Buffers, bases: Bases) {
+        let bits = &mut regs.bits[..];
+        for op in &self.ops {
+            match *op {
+                NativeOp::Block { start, len } => {
+                    let mut local = [[0u64; 2]; MAX_GROUP];
+                    let steps = &self.steps[start as usize..(start + len) as usize];
+                    for step in steps {
+                        match *step {
+                            Step::BZero { m } => local[m as usize] = [0; 2],
+                            Step::BAdopt { m, reg } => {
+                                let s = reg as usize * 2;
+                                local[m as usize] = [bits[s], bits[s + 1]];
+                            }
+                            Step::BStash { dst, buf, off } => {
+                                let (w0, w1) = load_words(bufs, bases, buf, off);
+                                let d = dst as usize * 2;
+                                bits[d] = w0;
+                                bits[d + 1] = w1;
+                            }
+                            Step::BStashZero { dst } => {
+                                let d = dst as usize * 2;
+                                bits[d] = 0;
+                                bits[d + 1] = 0;
+                            }
+                            Step::BXorCnt { m, a, b, dst } => {
+                                let (a, b) = (a as usize * 2, b as usize * 2);
+                                let (t0, t1) = (bits[a] ^ bits[b], bits[a + 1] ^ bits[b + 1]);
+                                if dst != NO_REG {
+                                    let d = dst as usize * 2;
+                                    bits[d] = t0;
+                                    bits[d + 1] = t1;
+                                }
+                                let acc = &mut local[m as usize];
+                                acc[0] = super::interp::bytewise_add(
+                                    acc[0],
+                                    super::interp::bytewise_popcount(t0),
+                                );
+                                acc[1] = super::interp::bytewise_add(
+                                    acc[1],
+                                    super::interp::bytewise_popcount(t1),
+                                );
+                            }
+                            Step::BXor { dst, a, b } => {
+                                let (d, a, b) =
+                                    (dst as usize * 2, a as usize * 2, b as usize * 2);
+                                bits[d] = bits[a] ^ bits[b];
+                                bits[d + 1] = bits[a + 1] ^ bits[b + 1];
+                            }
+                            Step::BCnt { m, src } => {
+                                let s = src as usize * 2;
+                                let acc = &mut local[m as usize];
+                                acc[0] = super::interp::bytewise_add(
+                                    acc[0],
+                                    super::interp::bytewise_popcount(bits[s]),
+                                );
+                                acc[1] = super::interp::bytewise_add(
+                                    acc[1],
+                                    super::interp::bytewise_popcount(bits[s + 1]),
+                                );
+                            }
+                            Step::BRed { m, off, scale, bias } => {
+                                let acc = &local[m as usize];
+                                let sum = (super::interp::byte_lane_sum(acc[0])
+                                    + super::interp::byte_lane_sum(acc[1]))
+                                    as i32;
+                                bufs.output[(bases.output + off) as usize] += bias + scale * sum;
+                            }
+                            Step::BWriteBack { m, reg } => {
+                                let d = reg as usize * 2;
+                                bits[d] = local[m as usize][0];
+                                bits[d + 1] = local[m as usize][1];
+                            }
+                            // Exhaustive on purpose — see run_int8.
+                            Step::Zero { .. }
+                            | Step::Adopt { .. }
+                            | Step::MacRun { .. }
+                            | Step::Stash { .. }
+                            | Step::StashZero { .. }
+                            | Step::Fold { .. }
+                            | Step::RedAcc { .. }
+                            | Step::RedStore { .. }
+                            | Step::VecAcc { .. }
+                            | Step::VecStore { .. }
+                            | Step::WriteBack { .. } => {
+                                unreachable!("Int8 step in Binary native kernel")
+                            }
+                        }
+                    }
+                }
+                NativeOp::Op(ref instr) => step_binary_words(bits, instr, bufs, bases),
+            }
+        }
+    }
+}
+
+/// Load 128 bits from a buffer as two little-endian u64 words — the
+/// interpreter's own `word_le`, so the binary register image can never
+/// drift between executors.
+fn load_words(bufs: &Buffers, bases: Bases, buf: Buf, off: u32) -> (u64, u64) {
+    let src: &[i8] = match buf {
+        Buf::In => &bufs.input[(bases.input + off) as usize..],
+        Buf::Wgt => &bufs.weight[(bases.weight + off) as usize..],
+        Buf::Out => panic!("VLoad from Out is not defined"),
+    };
+    (
+        super::interp::word_le(&src[0..8]),
+        super::interp::word_le(&src[8..crate::isa::REG_BYTES]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regfile_sizes_by_register_count() {
+        let r = RegFile::new(8);
+        assert_eq!(r.num_regs(), 8);
+        assert_eq!(r.lanes.len(), 8 * I8_LANES);
+        assert_eq!(r.bits.len(), 16);
+    }
+
+    #[test]
+    fn mac_ent_encodes_dead_dst_as_sentinel() {
+        let e = MacEnt::load(Buf::In, 32, 3, None);
+        assert_eq!(e.kind, MacKind::LoadIn);
+        assert_eq!(e.b, NO_REG);
+        let e = MacEnt::load(Buf::Wgt, 0, 3, Some(5));
+        assert_eq!(e.kind, MacKind::LoadWgt);
+        assert_eq!(e.b, 5);
+    }
+}

@@ -124,6 +124,29 @@ pub fn planner_from(cfg: &Config) -> crate::coordinator::plan::PlannerOptions {
         machine: crate::machine::MachineConfig::neon(vl),
         explore_each_layer: cfg.get_bool("planner", "explore_each_layer", false),
         perf_sample: cfg.get_parse("planner", "perf_sample", 2usize),
+        // `backend = interp` opts a deployment back onto the reference
+        // interpreter; absent means native. Takes effect wherever the
+        // options are carried through to engine preparation
+        // (`PreparedNetwork::prepare_for`) or a server config
+        // (`ServerConfig::backend`). Unknown values warn loudly instead
+        // of silently picking the non-oracle default — this knob exists
+        // for oracle selection, so a typo must not defeat it.
+        backend: match cfg.get("planner", "backend") {
+            None => crate::exec::Backend::Native,
+            Some(s) if s.eq_ignore_ascii_case("interp")
+                || s.eq_ignore_ascii_case("interpreter") =>
+            {
+                crate::exec::Backend::Interp
+            }
+            Some(s) if s.eq_ignore_ascii_case("native") => crate::exec::Backend::Native,
+            Some(other) => {
+                eprintln!(
+                    "yflows config: unknown [planner] backend `{other}` — keeping the \
+                     native backend (use `interp` for the reference interpreter)"
+                );
+                crate::exec::Backend::Native
+            }
+        },
         ..Default::default()
     }
 }

@@ -210,7 +210,13 @@ fn plan_graph(net: &Network, seed: u64) -> NetworkPlan {
     let machine = MachineConfig::neon(128);
     let mut plan = plan_network_uncached(
         net,
-        PlannerOptions { machine, explore_each_layer: false, perf_sample: 1, explore_threads: 1 },
+        PlannerOptions {
+            machine,
+            explore_each_layer: false,
+            perf_sample: 1,
+            explore_threads: 1,
+            ..Default::default()
+        },
     );
     bind_all(&mut plan, seed);
     plan

@@ -1,0 +1,646 @@
+//! Integration: the native execution backend is bit-identical to the
+//! interpreter (the reference oracle) on everything that can execute.
+//!
+//! * **Randomized programs** (property fuzz): arbitrary valid Int8 and
+//!   Binary instruction streams — a mix of structured accumulation
+//!   blocks (the shapes codegen emits) and unstructured noise ops that
+//!   force the lowering's block-termination/fallback paths — produce
+//!   byte-identical outputs on `Interp::run`, `Interp::run_decoded`,
+//!   and the lowered `NativeKernel::run`, at randomized buffer bases.
+//! * **All dataflows**: basic OS/IS/WS, extended OS/IS/WS, jammed OS,
+//!   stride-2, depthwise, binary OS/WS — full layer schedules on both
+//!   backends, both 128-bit and 256-bit vector variables.
+//! * **End to end**: ResNet-prefix and DenseNet-prefix plans prepared
+//!   with `Backend::Interp` and `Backend::Native` produce identical
+//!   bytes (and match the functional runner), including batched
+//!   parallel execution.
+//! * **Lowering sanity**: extended-OS kernels actually lower into
+//!   accumulator blocks with elided dead writebacks (the speedup
+//!   mechanisms exist, not just the fallback path).
+
+use yflows::codegen::{self, basic, binary, os_jam};
+use yflows::coordinator::{
+    self,
+    plan::{plan_network_uncached, NetworkPlan, PlanKind, Planner, PlannerOptions},
+};
+use yflows::dataflow::DataflowSpec;
+use yflows::exec::{lower_kernel, Backend, PreparedNetwork};
+use yflows::isa::{validate, Buf, Mode, Program, VInstr};
+use yflows::layer::{ConvConfig, LayerConfig};
+use yflows::machine::{Bases, Buffers, DecodedProgram, Interp, MachineConfig, RegFile};
+use yflows::nets;
+use yflows::quant::{pack_binary_act, pack_binary_wgt};
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::prop::check;
+use yflows::util::rng::Rng;
+
+const SHIFT: u32 = 9;
+const C: usize = 16;
+
+/// Fuzz machine shape: small register file, bounded buffers.
+const FUZZ_REGS: usize = 8;
+const FUZZ_BUF: usize = 512; // input/weight bytes
+const FUZZ_OUT: usize = 64; // output elements
+
+// ---------------------------------------------------------------------
+// Randomized-program differential fuzz
+// ---------------------------------------------------------------------
+
+/// Generate a valid (def-before-use) Int8 instruction stream: random
+/// structured accumulation blocks interleaved with noise ops.
+fn gen_int8_program(rng: &mut Rng) -> Program {
+    let mut instrs: Vec<VInstr> = Vec::new();
+    let mut defined: Vec<u8> = Vec::new();
+    let reg = |rng: &mut Rng| rng.range(0, FUZZ_REGS - 1) as u8;
+    let off = |rng: &mut Rng| rng.range(0, FUZZ_BUF - 17) as u32;
+    let out_scalar = |rng: &mut Rng| rng.range(0, FUZZ_OUT - 1) as u32;
+    let out_vec = |rng: &mut Rng| rng.range(0, FUZZ_OUT - 17) as u32;
+    let buf = |rng: &mut Rng| if rng.range(0, 1) == 0 { Buf::In } else { Buf::Wgt };
+
+    let blocks = rng.range(1, 4);
+    for _ in 0..blocks {
+        // Structured block: dup acc, MACs (load-fed and register-only),
+        // occasional re-dup, a reduction or vector store at the end.
+        let acc = reg(rng);
+        instrs.push(VInstr::VDupZero { dst: acc });
+        if !defined.contains(&acc) {
+            defined.push(acc);
+        }
+        for _ in 0..rng.range(1, 6) {
+            match rng.range(0, 3) {
+                0 => {
+                    // load + MLA pair (fuses in decode when adjacent)
+                    let d = reg(rng);
+                    if d == acc {
+                        continue;
+                    }
+                    instrs.push(VInstr::VLoad { dst: d, buf: buf(rng), off: off(rng) });
+                    if !defined.contains(&d) {
+                        defined.push(d);
+                    }
+                    let other = if rng.range(0, 3) == 0 || defined.len() < 2 {
+                        d
+                    } else {
+                        *rng.pick(&defined)
+                    };
+                    if other != acc {
+                        instrs.push(VInstr::VMla { acc, a: d, b: other });
+                    }
+                }
+                1 => {
+                    // register-register MLA
+                    if defined.len() >= 2 {
+                        let (a, b) = (*rng.pick(&defined), *rng.pick(&defined));
+                        if a != acc && b != acc {
+                            instrs.push(VInstr::VMla { acc, a, b });
+                        }
+                    }
+                }
+                2 => {
+                    // standalone stash load (noise inside the block)
+                    let d = reg(rng);
+                    if d != acc {
+                        instrs.push(VInstr::VLoad { dst: d, buf: buf(rng), off: off(rng) });
+                        if !defined.contains(&d) {
+                            defined.push(d);
+                        }
+                    }
+                }
+                _ => {
+                    // mid-block reset (the flush-and-reopen shape)
+                    instrs.push(VInstr::VDupZero { dst: acc });
+                }
+            }
+        }
+        match rng.range(0, 3) {
+            0 => instrs.push(VInstr::RedSumAcc { src: acc, off: out_scalar(rng) }),
+            1 => instrs.push(VInstr::RedSumStore { src: acc, off: out_scalar(rng) }),
+            2 => instrs.push(VInstr::VAccOut { src: acc, off: out_vec(rng) }),
+            _ => instrs.push(VInstr::VStoreOut { src: acc, off: out_vec(rng) }),
+        }
+        // Noise between blocks: ops that terminate/fragment blocks and
+        // exercise the generic fallback + writeback decisions.
+        for _ in 0..rng.range(0, 3) {
+            if defined.is_empty() {
+                break;
+            }
+            match rng.range(0, 4) {
+                0 => {
+                    let (a, b) = (*rng.pick(&defined), *rng.pick(&defined));
+                    let d = reg(rng);
+                    instrs.push(VInstr::VMul { dst: d, a, b });
+                    if !defined.contains(&d) {
+                        defined.push(d);
+                    }
+                }
+                1 => {
+                    let (a, b) = (*rng.pick(&defined), *rng.pick(&defined));
+                    let d = *rng.pick(&defined);
+                    instrs.push(VInstr::VAdd { dst: d, a, b });
+                }
+                2 => {
+                    let s = *rng.pick(&defined);
+                    let d = reg(rng);
+                    instrs.push(VInstr::VMov { dst: d, src: s });
+                    if !defined.contains(&d) {
+                        defined.push(d);
+                    }
+                }
+                3 => {
+                    let s = *rng.pick(&defined);
+                    instrs.push(VInstr::RedSumScaleAcc {
+                        src: s,
+                        off: out_scalar(rng),
+                        scale: rng.range(0, 4) as i32 - 2,
+                        bias: rng.range(0, 20) as i32 - 10,
+                    });
+                }
+                _ => {}
+            }
+        }
+    }
+    Program::new("fuzz-int8", Mode::Int8, instrs)
+}
+
+/// Generate a valid Binary instruction stream (XNOR-count blocks plus
+/// noise: ands, movs, per-MAC popcounts).
+fn gen_binary_program(rng: &mut Rng) -> Program {
+    let mut instrs: Vec<VInstr> = Vec::new();
+    let mut defined: Vec<u8> = Vec::new();
+    let reg = |rng: &mut Rng| rng.range(0, FUZZ_REGS - 1) as u8;
+    let off = |rng: &mut Rng| rng.range(0, FUZZ_BUF - 17) as u32;
+    let out_scalar = |rng: &mut Rng| rng.range(0, FUZZ_OUT - 1) as u32;
+    let buf = |rng: &mut Rng| if rng.range(0, 1) == 0 { Buf::In } else { Buf::Wgt };
+
+    for _ in 0..rng.range(1, 3) {
+        let cnt = reg(rng);
+        instrs.push(VInstr::VDupZero { dst: cnt });
+        if !defined.contains(&cnt) {
+            defined.push(cnt);
+        }
+        for _ in 0..rng.range(1, 6) {
+            let a = reg(rng);
+            let b = reg(rng);
+            let x = reg(rng);
+            if a == cnt || b == cnt || x == cnt {
+                continue;
+            }
+            instrs.push(VInstr::VLoad { dst: a, buf: buf(rng), off: off(rng) });
+            if !defined.contains(&a) {
+                defined.push(a);
+            }
+            instrs.push(VInstr::VLoad { dst: b, buf: buf(rng), off: off(rng) });
+            if !defined.contains(&b) {
+                defined.push(b);
+            }
+            match rng.range(0, 3) {
+                0 | 1 => {
+                    instrs.push(VInstr::VXor { dst: x, a, b });
+                    if !defined.contains(&x) {
+                        defined.push(x);
+                    }
+                    instrs.push(VInstr::VCntAcc { acc: cnt, src: x });
+                }
+                2 => {
+                    instrs.push(VInstr::VAnd { dst: x, a, b });
+                    if !defined.contains(&x) {
+                        defined.push(x);
+                    }
+                    instrs.push(VInstr::PopcntAcc {
+                        src: x,
+                        off: out_scalar(rng),
+                        scale: 2,
+                        bias: 0,
+                    });
+                }
+                _ => {
+                    instrs.push(VInstr::VMov { dst: x, src: a });
+                    if !defined.contains(&x) {
+                        defined.push(x);
+                    }
+                }
+            }
+        }
+        instrs.push(VInstr::RedSumScaleAcc {
+            src: cnt,
+            off: out_scalar(rng),
+            scale: -2,
+            bias: 128,
+        });
+    }
+    Program::new("fuzz-binary", Mode::Binary, instrs)
+}
+
+/// Run `prog` on all three executors over random data at a random base
+/// and assert byte-identical outputs.
+fn assert_three_way_identical(prog: &Program, rng: &mut Rng) {
+    validate(prog, FUZZ_REGS).expect("fuzz generator must produce valid programs");
+    let margin = 32usize;
+    let mut input = vec![0i8; FUZZ_BUF + margin];
+    let mut weight = vec![0i8; FUZZ_BUF + margin];
+    rng.fill_i8(&mut input);
+    rng.fill_i8(&mut weight);
+    let bases = Bases {
+        input: rng.range(0, margin) as u32,
+        weight: rng.range(0, margin) as u32,
+        output: rng.range(0, 8) as u32,
+    };
+    let base_out: Vec<i32> = (0..FUZZ_OUT + 8).map(|i| i as i32 * 3 - 50).collect();
+
+    let mut want = base_out.clone();
+    Interp::new(FUZZ_REGS).run(
+        prog,
+        &mut Buffers { input: &input, weight: &weight, output: &mut want },
+        bases,
+    );
+
+    let dp = DecodedProgram::decode(prog);
+    let mut decoded = base_out.clone();
+    Interp::new(FUZZ_REGS).run_decoded(
+        &dp,
+        &mut Buffers { input: &input, weight: &weight, output: &mut decoded },
+        bases,
+    );
+    assert_eq!(want, decoded, "decoded trace diverges for {}", prog.name);
+
+    let nk = lower_kernel(&dp);
+    let mut native = base_out;
+    nk.run(
+        &mut RegFile::new(FUZZ_REGS),
+        &mut Buffers { input: &input, weight: &weight, output: &mut native },
+        bases,
+    );
+    assert_eq!(want, native, "native kernel diverges for {}", prog.name);
+}
+
+#[test]
+fn random_int8_programs_are_backend_identical() {
+    check("native-int8-fuzz", 96, |rng| {
+        let prog = gen_int8_program(rng);
+        assert_three_way_identical(&prog, rng);
+    });
+}
+
+#[test]
+fn random_binary_programs_are_backend_identical() {
+    check("native-binary-fuzz", 64, |rng| {
+        let prog = gen_binary_program(rng);
+        assert_three_way_identical(&prog, rng);
+    });
+}
+
+#[test]
+fn register_file_reuse_across_programs_is_backend_identical() {
+    // Prepared engines reuse one register file across layers and
+    // images; elided dead writebacks must stay unobservable under that
+    // reuse for def-before-use-valid successors.
+    check("native-regfile-reuse", 32, |rng| {
+        let progs = [gen_int8_program(rng), gen_int8_program(rng), gen_int8_program(rng)];
+        let mut input = vec![0i8; FUZZ_BUF + 32];
+        let mut weight = vec![0i8; FUZZ_BUF + 32];
+        rng.fill_i8(&mut input);
+        rng.fill_i8(&mut weight);
+        let mut want = vec![0i32; FUZZ_OUT];
+        let mut got = vec![0i32; FUZZ_OUT];
+        let mut interp = Interp::new(FUZZ_REGS);
+        let mut regs = RegFile::new(FUZZ_REGS);
+        for prog in &progs {
+            validate(prog, FUZZ_REGS).unwrap();
+            interp.run(
+                prog,
+                &mut Buffers { input: &input, weight: &weight, output: &mut want },
+                Bases::default(),
+            );
+            let nk = lower_kernel(&DecodedProgram::decode(prog));
+            nk.run(
+                &mut regs,
+                &mut Buffers { input: &input, weight: &weight, output: &mut got },
+                Bases::default(),
+            );
+        }
+        assert_eq!(want, got, "shared-register-file sequence diverges");
+    });
+}
+
+// ---------------------------------------------------------------------
+// All generated dataflows, both vector widths
+// ---------------------------------------------------------------------
+
+/// Full-layer differential run: interp vs native over the whole
+/// invocation schedule.
+fn assert_layer_identical(prog: &Program, cfg: &ConvConfig, machine: &MachineConfig) {
+    let c = machine.c_int8();
+    let input = ActTensor::random(
+        ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+        ActLayout::NCHWc { c },
+        411,
+    );
+    let weights = WeightTensor::random(
+        WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+        WeightLayout::CKRSc { c },
+        412,
+    );
+    let sched = codegen::schedule(cfg, machine);
+    let elems = cfg.out_channels * cfg.e_size();
+
+    let mut want = vec![0i32; elems];
+    let mut interp = Interp::new(machine.num_regs);
+    for &bases in &sched {
+        interp.run(
+            prog,
+            &mut Buffers { input: &input.data, weight: &weights.data, output: &mut want },
+            bases,
+        );
+    }
+
+    let nk = lower_kernel(&DecodedProgram::decode(prog));
+    let mut got = vec![0i32; elems];
+    let mut regs = RegFile::new(machine.num_regs);
+    for &bases in &sched {
+        assert!(nk.bases_fit(bases, input.data.len(), weights.data.len(), got.len()));
+        nk.run(
+            &mut regs,
+            &mut Buffers { input: &input.data, weight: &weights.data, output: &mut got },
+            bases,
+        );
+    }
+    assert_eq!(want, got, "native diverges from interp for {}", prog.name);
+}
+
+#[test]
+fn native_matches_interp_on_basic_dataflows() {
+    let m = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 4);
+    for prog in [basic::gen_os(&cfg, &m), basic::gen_is(&cfg, &m), basic::gen_ws(&cfg, &m)] {
+        assert_layer_identical(&prog, &cfg, &m);
+    }
+}
+
+#[test]
+fn native_matches_interp_on_extended_and_jammed_dataflows() {
+    let m = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 4);
+    let ext = codegen::generate(&cfg, &DataflowSpec::optimized_os(&m, cfg.r_size()), &m);
+    assert_layer_identical(&ext, &cfg, &m);
+    // Extended IS and WS exercise output-stash adoption and VMul blocks.
+    use yflows::dataflow::{Anchor, AuxKind};
+    let is_spec = DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Output, 6)]);
+    assert_layer_identical(&codegen::generate(&cfg, &is_spec, &m), &cfg, &m);
+    let ws_spec = DataflowSpec::extended(Anchor::Weight, vec![(AuxKind::Output, 6)]);
+    assert_layer_identical(&codegen::generate(&cfg, &ws_spec, &m), &cfg, &m);
+    // Jammed kernels interleave several accumulators in one block.
+    for jam in [2usize, 4] {
+        let jammed = os_jam::gen_os_jam(&cfg, cfg.r_size(), jam, &m);
+        assert_layer_identical(&jammed, &cfg, &m);
+    }
+}
+
+#[test]
+fn native_matches_interp_on_stride2_and_wide_vectors() {
+    let m = MachineConfig::neon(128);
+    let s2 = ConvConfig::simple(9, 9, 3, 3, 2, 16, 4);
+    let prog = codegen::generate(&s2, &DataflowSpec::optimized_os(&m, s2.r_size()), &m);
+    assert_layer_identical(&prog, &s2, &m);
+    // 256-bit vector variables: interleaved per-register expansion, no
+    // decode fusion — blocks form from the unfused shape instead.
+    let m256 = MachineConfig::neon(256);
+    let cfg256 = ConvConfig::simple(8, 8, 3, 3, 1, 32, 4);
+    let prog256 =
+        codegen::generate(&cfg256, &DataflowSpec::optimized_os(&m256, cfg256.r_size()), &m256);
+    assert_layer_identical(&prog256, &cfg256, &m256);
+}
+
+#[test]
+fn native_matches_interp_on_depthwise() {
+    let m = MachineConfig::neon(128);
+    let cfg = ConvConfig::depthwise(10, 10, 3, 3, 1, 32);
+    let prog = codegen::depthwise::gen_depthwise(&cfg, &m, true);
+    let c = m.c_int8();
+    let input =
+        ActTensor::random(ActShape::new(32, 10, 10), ActLayout::NCHWc { c }, 413);
+    let weights =
+        WeightTensor::random(WeightShape::new(1, 32, 3, 3), WeightLayout::CKRS, 414);
+    let packed = codegen::depthwise::pack_depthwise_weights(&weights, c);
+    let sched = codegen::depthwise::schedule_depthwise(&cfg, &m);
+    let elems = cfg.in_channels * cfg.e_size();
+
+    let mut want = vec![0i32; elems];
+    let mut interp = Interp::new(m.num_regs);
+    for &bases in &sched {
+        interp.run(
+            &prog,
+            &mut Buffers { input: &input.data, weight: &packed, output: &mut want },
+            bases,
+        );
+    }
+    let nk = lower_kernel(&DecodedProgram::decode(&prog));
+    let mut got = vec![0i32; elems];
+    let mut regs = RegFile::new(m.num_regs);
+    for &bases in &sched {
+        nk.run(
+            &mut regs,
+            &mut Buffers { input: &input.data, weight: &packed, output: &mut got },
+            bases,
+        );
+    }
+    assert_eq!(want, got, "native depthwise diverges");
+}
+
+#[test]
+fn native_matches_interp_on_binary_kernels() {
+    let m = MachineConfig::neon(128);
+    let c_bits = m.c_binary();
+    let cfg = ConvConfig::simple(6, 6, 3, 3, 1, c_bits, 4);
+    let mut rng = Rng::new(15);
+    let mut input =
+        ActTensor::zeros(ActShape::new(cfg.in_channels, cfg.ih, cfg.iw), ActLayout::NCHWc {
+            c: c_bits,
+        });
+    for v in input.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let mut weights = WeightTensor::zeros(
+        WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+        WeightLayout::CKRSc { c: c_bits },
+    );
+    for v in weights.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let pin = pack_binary_act(&input, c_bits);
+    let pw = pack_binary_wgt(&weights, c_bits);
+    for prog in [binary::gen_binary_os(&cfg, &m), binary::gen_binary_ws(&cfg, &m)] {
+        let sched = binary::schedule_binary(&cfg, &m);
+        let elems = cfg.out_channels * cfg.e_size();
+        let mut want = vec![0i32; elems];
+        let mut interp = Interp::new(m.num_regs);
+        for &bases in &sched {
+            interp.run(
+                &prog,
+                &mut Buffers { input: &pin, weight: &pw, output: &mut want },
+                bases,
+            );
+        }
+        let nk = lower_kernel(&DecodedProgram::decode(&prog));
+        let mut got = vec![0i32; elems];
+        let mut regs = RegFile::new(m.num_regs);
+        for &bases in &sched {
+            nk.run(&mut regs, &mut Buffers { input: &pin, weight: &pw, output: &mut got }, bases);
+        }
+        assert_eq!(want, got, "native binary diverges for {}", prog.name);
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end identity across backends
+// ---------------------------------------------------------------------
+
+fn bind_all(plan: &mut NetworkPlan, seed: u64) {
+    for (i, lp) in plan.layers.iter_mut().enumerate() {
+        if let (LayerConfig::Conv(cfg), PlanKind::Generated { .. }) = (&lp.layer, &lp.kind) {
+            let cfg = *cfg;
+            lp.bind_weights(WeightTensor::random(
+                WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+                WeightLayout::CKRSc { c: C },
+                seed.wrapping_add(i as u64),
+            ));
+        }
+    }
+}
+
+fn plan_prefix(net: &yflows::nets::Network, seed: u64) -> NetworkPlan {
+    let mut plan = plan_network_uncached(
+        net,
+        PlannerOptions {
+            machine: MachineConfig::neon(128),
+            explore_each_layer: false,
+            perf_sample: 1,
+            explore_threads: 1,
+            ..Default::default()
+        },
+    );
+    bind_all(&mut plan, seed);
+    plan
+}
+
+fn assert_backends_identical_e2e(plan: &NetworkPlan, input_shape: ActShape) {
+    let interp_engine = PreparedNetwork::prepare_with(plan, Backend::Interp).expect("interp");
+    let native_engine = PreparedNetwork::prepare_with(plan, Backend::Native).expect("native");
+    assert_eq!(interp_engine.backend(), Backend::Interp);
+    assert_eq!(native_engine.backend(), Backend::Native);
+    let mut arena_i = interp_engine.new_arena();
+    let mut arena_n = native_engine.new_arena();
+    for seed in 0..3u64 {
+        let input = ActTensor::random(input_shape, ActLayout::NCHWc { c: C }, 600 + seed);
+        let functional =
+            coordinator::run_network_functional(plan, &input, SHIFT).expect("functional");
+        let a = interp_engine.run(&input, SHIFT, &mut arena_i).expect("interp run");
+        let b = native_engine.run(&input, SHIFT, &mut arena_n).expect("native run");
+        assert_eq!(a.data, functional.data, "interp vs functional, image {seed}");
+        assert_eq!(b.data, functional.data, "native vs functional, image {seed}");
+        assert_eq!(a.shape, b.shape);
+    }
+    // Batched, parallel: still identical across backends.
+    let inputs: Vec<ActTensor> =
+        (0..6).map(|s| ActTensor::random(input_shape, ActLayout::NCHWc { c: C }, 700 + s)).collect();
+    let refs: Vec<&ActTensor> = inputs.iter().collect();
+    let ia = interp_engine.run_batch(&refs, SHIFT, 3);
+    let nb = native_engine.run_batch(&refs, SHIFT, 3);
+    for (i, (x, y)) in ia.into_iter().zip(nb).enumerate() {
+        assert_eq!(x.unwrap().data, y.unwrap().data, "batched image {i} diverges");
+    }
+}
+
+#[test]
+fn resnet_prefix_is_backend_identical_end_to_end() {
+    let net = nets::resnet_prefix(16, 16, 1, 2);
+    let plan = plan_prefix(&net, 8101);
+    assert_backends_identical_e2e(&plan, ActShape::new(16, 16, 16));
+}
+
+#[test]
+fn densenet_prefix_is_backend_identical_end_to_end() {
+    let net = nets::densenet_prefix(16, 16, 2);
+    let plan = plan_prefix(&net, 8102);
+    assert_backends_identical_e2e(&plan, ActShape::new(16, 16, 16));
+}
+
+#[test]
+fn mixed_kinds_including_grouped_are_backend_identical() {
+    // Simple conv → depthwise → grouped conv: all three kernel kinds
+    // under both backends in one prepared chain.
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut layers = Vec::new();
+
+    let conv = ConvConfig::simple(10, 10, 3, 3, 1, 16, 32);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(conv), 1);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(16, 32, 3, 3),
+        WeightLayout::CKRSc { c },
+        901,
+    ));
+    layers.push(lp);
+
+    let dw = ConvConfig::depthwise(10, 10, 3, 3, 1, 32);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(dw), 1);
+    lp.bind_weights(WeightTensor::random(WeightShape::new(1, 32, 3, 3), WeightLayout::CKRS, 902));
+    layers.push(lp);
+
+    let grouped = ConvConfig::grouped(10, 10, 3, 3, 1, 32, 32, 2);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(grouped), 1);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(16, 32, 3, 3),
+        WeightLayout::CKRSc { c },
+        903,
+    ));
+    layers.push(lp);
+
+    let plan = NetworkPlan::chain("mixed-backends", layers);
+    assert_backends_identical_e2e(&plan, ActShape::new(16, 8, 8));
+}
+
+// ---------------------------------------------------------------------
+// Lowering sanity: the fast paths actually exist
+// ---------------------------------------------------------------------
+
+#[test]
+fn extended_os_lowering_forms_blocks_and_elides_writebacks() {
+    let m = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 16, 4);
+    let prog = codegen::generate(&cfg, &DataflowSpec::optimized_os(&m, cfg.r_size()), &m);
+    let nk = lower_kernel(&DecodedProgram::decode(&prog));
+    let s = nk.stats();
+    assert!(s.blocks > 0, "extended-OS kernel must lower into accumulator blocks");
+    assert!(s.mac_entries > 0, "blocks must contain MAC entries");
+    assert!(
+        s.elided_writebacks > 0,
+        "active-variable loads must have their dead writebacks elided"
+    );
+    // The unrolled body is block-shaped: MACs dominate fallback ops.
+    assert!(
+        s.mac_entries > s.fallback_ops,
+        "MAC entries ({}) should dominate fallback ops ({})",
+        s.mac_entries,
+        s.fallback_ops
+    );
+}
+
+#[test]
+fn prepared_native_engine_reports_lowering_stats() {
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 16);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(16, 16, 3, 3),
+        WeightLayout::CKRSc { c },
+        77,
+    ));
+    let plan = NetworkPlan::chain("stats", vec![lp]);
+    let native = PreparedNetwork::prepare_with(&plan, Backend::Native).unwrap();
+    assert!(native.lower_stats().mac_entries > 0);
+    let interp = PreparedNetwork::prepare_with(&plan, Backend::Interp).unwrap();
+    assert_eq!(interp.lower_stats().mac_entries, 0, "interp engines hold no lowered kernels");
+}

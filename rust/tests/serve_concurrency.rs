@@ -70,6 +70,7 @@ fn concurrent_submissions_all_answered_batched_and_bit_identical() {
         batch_deadline: Duration::from_millis(20),
         requant_shift: SHIFT,
         exec_threads: 2,
+        ..Default::default()
     };
     let server = Server::start_with(plan, config);
 
@@ -125,6 +126,7 @@ fn backlog_behind_single_worker_coalesces() {
         batch_deadline: Duration::from_millis(200),
         requant_shift: SHIFT,
         exec_threads: 2,
+        ..Default::default()
     };
     let server = Server::start_with(two_layer_plan(machine), config);
     let mut pending = Vec::new();
