@@ -23,6 +23,9 @@
 
 use std::time::Instant;
 
+#[path = "common/mod.rs"]
+mod common;
+
 use yflows::coordinator::plan::{NetworkPlan, Planner, PlannerOptions};
 use yflows::exec::{Backend, PreparedNetwork};
 use yflows::layer::{ConvConfig, LayerConfig};
@@ -94,14 +97,7 @@ fn images_per_sec(engine: &PreparedNetwork, inputs: &[ActTensor], rounds: usize)
 }
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let smoke = args.iter().any(|a| a == "--smoke");
-    let json_path = args.iter().position(|a| a == "--json").map(|i| {
-        args.get(i + 1)
-            .filter(|p| !p.starts_with("--"))
-            .cloned()
-            .unwrap_or_else(|| "BENCH_4.json".to_string())
-    });
+    let common::BenchArgs { smoke, json_path } = common::parse_args("BENCH_4.json");
 
     let images: usize = if smoke { 2 } else { 8 };
     let rounds: usize = if smoke { 1 } else { 40 };
@@ -183,7 +179,6 @@ fn main() {
             .set("layers", Json::Arr(layer_rows))
             .set("geomean_speedup_native_over_interp", Json::Num(geomean))
             .set("target", Json::s(">= 2x geomean on the conv sweep"));
-        std::fs::write(&path, obj.render()).expect("write bench json");
-        println!("wrote {path}");
+        common::write_json(&path, &obj);
     }
 }

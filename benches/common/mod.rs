@@ -1,0 +1,41 @@
+//! Shared bench-harness plumbing: every bench under `benches/` takes
+//! the same two flags, parsed (and its JSON record emitted) through
+//! here instead of per-bench copies:
+//!
+//! * `--smoke` — CI mode: tiny workload, correctness gates + one timed
+//!   round, no file side effects;
+//! * `--json [PATH]` — write a `BENCH_N.json`-style record (each bench
+//!   supplies its default path).
+//!
+//! Included per-bench via `#[path = "common/mod.rs"] mod common;` —
+//! bench targets are separate crates, so this is source-level sharing,
+//! like libtest-free harnesses conventionally do.
+
+use yflows::util::json::Json;
+
+/// Parsed conventional bench flags.
+pub struct BenchArgs {
+    pub smoke: bool,
+    /// `Some(path)` when `--json` was given (`default_json` when no
+    /// explicit path followed the flag).
+    pub json_path: Option<String>,
+}
+
+/// Parse `--smoke` / `--json [PATH]` from the process arguments.
+pub fn parse_args(default_json: &str) -> BenchArgs {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args.iter().position(|a| a == "--json").map(|i| {
+        args.get(i + 1)
+            .filter(|p| !p.starts_with("--"))
+            .cloned()
+            .unwrap_or_else(|| default_json.to_string())
+    });
+    BenchArgs { smoke, json_path }
+}
+
+/// Write a bench record (the `BENCH_N.json` convention) and say so.
+pub fn write_json(path: &str, obj: &Json) {
+    std::fs::write(path, obj.render()).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -25,6 +25,9 @@
 
 use std::time::Instant;
 
+#[path = "common/mod.rs"]
+mod common;
+
 use yflows::coordinator::{
     self,
     plan::{plan_network_uncached, NetworkPlan, PlanKind, PlannerOptions},
@@ -107,14 +110,7 @@ fn measure(
 }
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let smoke = args.iter().any(|a| a == "--smoke");
-    let json_path = args.iter().position(|a| a == "--json").map(|i| {
-        args.get(i + 1)
-            .filter(|p| !p.starts_with("--"))
-            .cloned()
-            .unwrap_or_else(|| "BENCH_3.json".to_string())
-    });
+    let common::BenchArgs { smoke, json_path } = common::parse_args("BENCH_3.json");
 
     let (hw, blocks, stages) = if smoke { (16, 1, 2) } else { (32, 2, 2) };
     let dag = nets::resnet_prefix(hw, hw, blocks, stages);
@@ -183,7 +179,6 @@ fn main() {
             .set("chain_arena_slots", Json::from_u64(chain_prepared.slot_count() as u64))
             .set("dag_modeled_mcycles", Json::Num(dag_plan.total_cycles() / 1e6))
             .set("chain_modeled_mcycles", Json::Num(chain_plan.total_cycles() / 1e6));
-        std::fs::write(&path, o.render()).expect("write bench json");
-        println!("wrote {path}");
+        common::write_json(&path, &o);
     }
 }

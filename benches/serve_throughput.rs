@@ -23,6 +23,9 @@
 
 use std::time::Instant;
 
+#[path = "common/mod.rs"]
+mod common;
+
 use yflows::coordinator::{
     self,
     plan::{NetworkPlan, Planner, PlannerOptions},
@@ -94,14 +97,7 @@ fn image_latencies(n: u64, mut f: impl FnMut(&ActTensor)) -> Vec<f64> {
 }
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let smoke = args.iter().any(|a| a == "--smoke");
-    let json_path = args.iter().position(|a| a == "--json").map(|i| {
-        args.get(i + 1)
-            .filter(|p| !p.starts_with("--"))
-            .cloned()
-            .unwrap_or_else(|| "BENCH_2.json".to_string())
-    });
+    let common::BenchArgs { smoke, json_path } = common::parse_args("BENCH_2.json");
 
     // One PlannerOptions carried through plan + prepare: the prepared
     // engine honors `opts.backend` (native by default).
@@ -201,7 +197,6 @@ fn main() {
             .set("seed_p99_s", Json::Num(percentile(&seed_lat, 99.0)))
             .set("prepared_p50_s", Json::Num(percentile(&prep_lat, 50.0)))
             .set("prepared_p99_s", Json::Num(percentile(&prep_lat, 99.0)));
-        std::fs::write(&path, path_obj.render()).expect("write bench json");
-        println!("wrote {path}");
+        common::write_json(&path, &path_obj);
     }
 }

@@ -1,0 +1,108 @@
+//! Bench: empirical autotuner — model-predicted vs measured dataflow
+//! rankings on a small conv layer set.
+//!
+//! For each layer, the heuristic-pruned shortlist (top-K by perf-model
+//! score) is prepared through the native execution path,
+//! **bit-identity-gated against the interpreter oracle**, and timed
+//! with warmup + median-of-N + spread-based retry (the
+//! `yflows::tune::measure` harness — the same code the planner's
+//! `TuneMode::Measure` and the server's background tuner run). The
+//! record compares the model's pick with the measured winner and
+//! reports the Spearman rank correlation between the two rankings — a
+//! reproducible on-host check of the paper's "OS + maximum reuse wins"
+//! claim.
+//!
+//! Modes:
+//! * `--smoke`  — CI mode: two tiny layers, reduced measurement effort;
+//!   the oracle gate still runs on every candidate.
+//! * `--json [PATH]` — additionally write a BENCH_5.json-style record
+//!   (default path `BENCH_5.json`): per-layer picks, rank correlation,
+//!   agreement and OS-reuse-win rates.
+//!
+//! Run: `cargo bench --bench tune_bench [-- --smoke|--json]`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use yflows::exec::Backend;
+use yflows::layer::ConvConfig;
+use yflows::machine::MachineConfig;
+use yflows::tune::{report, TuneConfig};
+use yflows::util::json::Json;
+use yflows::util::stats::mean;
+
+fn main() {
+    let common::BenchArgs { smoke, json_path } = common::parse_args("BENCH_5.json");
+
+    let machine = MachineConfig::neon(128);
+    let layers: Vec<ConvConfig> = if smoke {
+        vec![
+            ConvConfig::simple(10, 10, 3, 3, 1, 16, 32),
+            ConvConfig::simple(8, 8, 1, 1, 1, 16, 64),
+        ]
+    } else {
+        vec![
+            ConvConfig::simple(14, 14, 3, 3, 1, 16, 32),
+            ConvConfig::simple(13, 13, 3, 3, 2, 16, 32),
+            ConvConfig::simple(8, 8, 1, 1, 1, 16, 64),
+            ConvConfig::simple(14, 14, 5, 5, 1, 16, 32),
+        ]
+    };
+    let tcfg = if smoke { TuneConfig::quick() } else { TuneConfig::default() };
+
+    println!("== tune_bench: model vs measured dataflow ranking ==");
+    let (table, rows) = report::run_layers(&layers, &machine, Backend::Native, &tcfg, None);
+    println!("{}", table.render());
+    println!("{}", report::summary(&rows));
+    assert_eq!(
+        rows.len(),
+        layers.len(),
+        "every layer must measure (all candidates are oracle-gated)"
+    );
+    if smoke {
+        println!("smoke OK: every measured candidate passed the interpreter-oracle gate");
+        return;
+    }
+
+    if let Some(path) = json_path {
+        let layer_rows: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("layer", Json::s(&r.layer))
+                    .set("model_pick", Json::s(&r.model_pick))
+                    .set("measured_pick", Json::s(&r.measured_pick))
+                    .set("agree", Json::Bool(r.agree))
+                    .set("spearman", Json::Num(r.spearman))
+                    .set("model_pick_images_per_sec", Json::Num(r.model_pick_ips))
+                    .set("measured_pick_images_per_sec", Json::Num(r.measured_pick_ips))
+                    .set("os_reuse_won", Json::Bool(r.os_reuse_won));
+                o
+            })
+            .collect();
+        let n = rows.len() as f64;
+        let mut obj = Json::obj();
+        obj.set("bench", Json::s("tune_bench"))
+            .set(
+                "workload",
+                Json::s("conv set: 3x3s1, 3x3s2, 1x1, 5x5 @128-bit; top-K shortlist measured"),
+            )
+            .set("top_k", Json::from_u64(tcfg.top_k as u64))
+            .set("reps", Json::from_u64(tcfg.reps as u64))
+            .set("oracle_gated", Json::Bool(true))
+            .set("layers", Json::Arr(layer_rows))
+            .set(
+                "mean_spearman",
+                Json::Num(mean(&rows.iter().map(|r| r.spearman).collect::<Vec<_>>())),
+            )
+            .set(
+                "model_agreement_rate",
+                Json::Num(rows.iter().filter(|r| r.agree).count() as f64 / n),
+            )
+            .set(
+                "os_reuse_win_rate",
+                Json::Num(rows.iter().filter(|r| r.os_reuse_won).count() as f64 / n),
+            );
+        common::write_json(&path, &obj);
+    }
+}

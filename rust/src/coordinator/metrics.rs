@@ -21,6 +21,12 @@ pub struct SessionMetrics {
     /// queueing/batch-formation wait), in dispatch order — pairs with
     /// `batch_sizes`.
     pub batch_exec_seconds: Vec<f64>,
+    /// Layers the background tuner measured this session (display
+    /// names, in measurement order).
+    pub tuned_layers: Vec<String>,
+    /// How many times the background tuner swapped a re-tuned prepared
+    /// engine into the serving path.
+    pub tune_swaps: u64,
 }
 
 impl SessionMetrics {
@@ -37,6 +43,15 @@ impl SessionMetrics {
     /// Record the execution wall-clock of one dispatched batch.
     pub fn record_batch_exec(&mut self, seconds: f64) {
         self.batch_exec_seconds.push(seconds);
+    }
+
+    /// Record one background-tuner pass: which layers were measured,
+    /// and whether a re-tuned engine was swapped into serving.
+    pub fn record_tuning(&mut self, layers: Vec<String>, swapped: bool) {
+        self.tuned_layers.extend(layers);
+        if swapped {
+            self.tune_swaps += 1;
+        }
     }
 
     /// Executed images per second over all dispatched batches
@@ -132,6 +147,12 @@ pub fn session_table(m: &SessionMetrics, cache: &PlanCacheStats) -> Table {
         "plan cache hit rate".to_string(),
         format!("{:.0}% ({} hits / {} misses)", cache.hit_rate() * 100.0, cache.hits, cache.misses),
     ]);
+    if !m.tuned_layers.is_empty() || m.tune_swaps > 0 {
+        t.row(&[
+            "tuned layers".to_string(),
+            format!("{} ({} engine swap(s))", m.tuned_layers.join(", "), m.tune_swaps),
+        ]);
+    }
     t
 }
 
@@ -216,5 +237,19 @@ mod tests {
         let rendered = session_table(&m, &cache).render();
         assert!(rendered.contains("plan cache hit rate"));
         assert!(rendered.contains("75%"));
+        // No tuner row for untuned sessions.
+        assert!(!rendered.contains("tuned layers"));
+    }
+
+    #[test]
+    fn tuning_activity_is_recorded_and_rendered() {
+        let mut m = SessionMetrics::default();
+        m.record_tuning(vec!["conv3x3".into()], false);
+        m.record_tuning(vec!["conv1x1".into()], true);
+        assert_eq!(m.tuned_layers, vec!["conv3x3".to_string(), "conv1x1".to_string()]);
+        assert_eq!(m.tune_swaps, 1);
+        let rendered = session_table(&m, &PlanCacheStats::default()).render();
+        assert!(rendered.contains("tuned layers"));
+        assert!(rendered.contains("conv1x1"));
     }
 }

@@ -209,15 +209,36 @@ pub struct PlannerOptions {
     pub explore_threads: usize,
     /// Execution backend engines prepared from this plan should use
     /// ([`crate::exec::Backend::Native`] by default; `Interp` keeps the
-    /// reference interpreter). Like `explore_threads`, it never changes
-    /// the *plan* — it is excluded from [`PlanCacheKey`] and instead
-    /// keys the prepared-engine side of the cache
-    /// ([`PlanCache::prepared`]). Consumed by
+    /// reference interpreter). With tuning off it never changes the
+    /// *plan* — it is excluded from [`PlanCacheKey`] and instead keys
+    /// the prepared-engine side of the cache ([`PlanCache::prepared`]);
+    /// with tuning on, the tuning db answers per backend, so it joins
+    /// the key (`PlanCacheKey::tune_backend`). Consumed by
     /// [`crate::exec::PreparedNetwork::prepare_for`] and by servers
     /// that copy it into
     /// [`crate::coordinator::ServerConfig`]`::backend`. Outputs are
     /// bit-identical across backends.
     pub backend: crate::exec::Backend,
+    /// Empirical tuning mode ([`crate::tune`]): `Off` (default) keeps
+    /// the analytic model's pick exactly; `Cached` consults the tuning
+    /// db for measured winners; `Measure` additionally measures and
+    /// records on a db miss (planning blocks on measurement). Unlike
+    /// `backend` alone, a non-`Off` mode *does* change the plan, so it
+    /// (plus the db epoch and the backend) joins [`PlanCacheKey`].
+    pub tune: crate::tune::TuneMode,
+    /// Measurement effort of `TuneMode::Measure` planning.
+    pub tune_config: crate::tune::TuneConfig,
+    /// Tuning database consulted when `tune != Off`
+    /// (`None` = the process-wide [`crate::tune::global_tune_db`]).
+    pub tune_db: Option<Arc<crate::tune::TuneDb>>,
+}
+
+impl PlannerOptions {
+    /// The tuning database this planner consults (the process-wide db
+    /// unless one was supplied).
+    pub fn tune_db(&self) -> Arc<crate::tune::TuneDb> {
+        self.tune_db.clone().unwrap_or_else(crate::tune::global_tune_db)
+    }
 }
 
 impl Default for PlannerOptions {
@@ -230,6 +251,9 @@ impl Default for PlannerOptions {
                 .map(|n| n.get())
                 .unwrap_or(1),
             backend: crate::exec::Backend::default(),
+            tune: crate::tune::TuneMode::Off,
+            tune_config: crate::tune::TuneConfig::default(),
+            tune_db: None,
         }
     }
 }
@@ -249,12 +273,18 @@ impl Planner {
     ///
     /// Candidates: the Algorithm-8 extended-OS kernel and its
     /// unroll-and-jam variants (§VII-a: "further jamming can be applied
-    /// on top of our technique") — the cheapest modeled one wins.
+    /// on top of our technique") — the cheapest modeled one wins. With
+    /// tuning enabled ([`PlannerOptions::tune`]), a recorded measured
+    /// winner overrides the model's pick (and is generated exactly: the
+    /// measurement is ground truth, so no jam second-guessing).
     fn plan_simple_conv(&mut self, cfg: &ConvConfig, pad: usize) -> LayerPlan {
         let machine = self.opts.machine;
         let padded = padded_conv(cfg, &machine);
-        let spec = if self.opts.explore_each_layer {
-            explore::explore_parallel(
+        let tuned = self.tuned_spec(&padded, pad);
+        let is_tuned = tuned.is_some();
+        let spec = match tuned {
+            Some(s) => s,
+            None if self.opts.explore_each_layer => explore::explore_parallel(
                 &padded,
                 &machine,
                 &ExploreConfig::default(),
@@ -262,16 +292,28 @@ impl Planner {
             )
             .best()
             .spec
-            .clone()
-        } else {
-            DataflowSpec::optimized_os(&machine, padded.r_size())
+            .clone(),
+            None => DataflowSpec::optimized_os(&machine, padded.r_size()),
         };
-        let key = format!("{:?}-{}", padded, spec.name());
+        // Tuned programs get their own cache entries: the same spec name
+        // resolves to different kernels on the two paths (tuned skips
+        // the jam comparison).
+        let key = format!(
+            "{:?}-{}{}",
+            padded,
+            spec.name(),
+            if is_tuned { ":tuned" } else { "" }
+        );
         let sample = self.opts.perf_sample;
         let (prog, stats) = self
             .cache
             .entry(key)
             .or_insert_with(|| {
+                if is_tuned {
+                    // Shared with `tune::retune_plan`: the measured
+                    // winner is generated exactly, identical stats.
+                    return crate::tune::kernel_for_spec(&padded, &spec, &machine, sample);
+                }
                 let schedule = crate::codegen::schedule(&padded, &machine);
                 let mut best: Option<(crate::isa::Program, PerfStats)> = None;
                 let mut consider = |prog: crate::isa::Program| {
@@ -304,6 +346,52 @@ impl Planner {
             weights: None,
             packed: OnceLock::new(),
         }
+    }
+
+    /// The tuning db's recorded winner for this (padded) layer when
+    /// tuning is enabled — in [`crate::tune::TuneMode::Measure`], a db
+    /// miss triggers an on-the-spot measurement (recorded for every
+    /// later planner). `None` means: use the analytic model's pick,
+    /// exactly as with tuning off.
+    fn tuned_spec(&self, padded: &ConvConfig, pad: usize) -> Option<DataflowSpec> {
+        use crate::tune::TuneMode;
+        if self.opts.tune == TuneMode::Off {
+            return None;
+        }
+        let db = self.opts.tune_db();
+        let key =
+            crate::tune::TuneKey::for_layer(padded, &self.opts.machine, self.opts.backend);
+        if let Some(entry) = db.get(&key) {
+            // Shared validation with `tune::retune_plan`: unusable
+            // (e.g. hand-edited) entries warn and fall back.
+            return crate::tune::usable_entry_spec(&entry, &self.opts.machine);
+        }
+        if self.opts.tune == TuneMode::Measure {
+            match crate::tune::tune_conv(
+                padded,
+                pad,
+                &self.opts.machine,
+                self.opts.backend,
+                &self.opts.tune_config,
+                None,
+            ) {
+                Ok(outcome) => {
+                    let spec = outcome.winner().spec.clone();
+                    if let Err(e) = db.record(key, outcome.entry()) {
+                        eprintln!(
+                            "yflows tune: could not persist measurement for {} ({e:#})",
+                            padded.name()
+                        );
+                    }
+                    return Some(spec);
+                }
+                Err(e) => eprintln!(
+                    "yflows tune: {} not measurable ({e:#}); using the model's pick",
+                    padded.name()
+                ),
+            }
+        }
+        None
     }
 
     fn plan_depthwise(&mut self, cfg: &ConvConfig, pad: usize) -> LayerPlan {
@@ -487,25 +575,42 @@ pub fn plan_fingerprint(plan: &NetworkPlan) -> u64 {
 }
 
 /// Plan-cache key: everything that determines the resulting plan.
-/// (`explore_threads` and `backend` are deliberately absent — the
-/// former changes planning latency, the latter changes how a *prepared
-/// engine* executes; neither changes the plan. The backend keys the
-/// prepared-engine side instead: [`PlanCache::prepared`].)
+/// (`explore_threads` is deliberately absent — it changes planning
+/// latency, never the plan. With tuning **off**, `backend` is absent
+/// too: it only changes how a *prepared engine* executes and keys the
+/// prepared-engine side instead ([`PlanCache::prepared`]). With tuning
+/// **on**, the tuning db is consulted per (layer, machine, backend) and
+/// its answers change over time, so the mode, the backend, and the db
+/// epoch all join the key — a re-tune bumps the epoch and stale tuned
+/// plans are replanned rather than served.)
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanCacheKey {
     pub fingerprint: u64,
     pub machine: MachineConfig,
     pub explore_each_layer: bool,
     pub perf_sample: usize,
+    /// Tuning mode the plan is produced under.
+    pub tune: crate::tune::TuneMode,
+    /// Backend whose tuning entries apply (`None` when tuning is off).
+    pub tune_backend: Option<crate::exec::Backend>,
+    /// [`crate::tune::TuneDb::epoch`] of the consulted db (0 when off).
+    pub tune_epoch: u64,
 }
 
 impl PlanCacheKey {
     pub fn new(net: &Network, opts: &PlannerOptions) -> PlanCacheKey {
+        let (tune_backend, tune_epoch) = match opts.tune {
+            crate::tune::TuneMode::Off => (None, 0),
+            _ => (Some(opts.backend), opts.tune_db().epoch()),
+        };
         PlanCacheKey {
             fingerprint: network_fingerprint(net),
             machine: opts.machine,
             explore_each_layer: opts.explore_each_layer,
             perf_sample: opts.perf_sample,
+            tune: opts.tune,
+            tune_backend,
+            tune_epoch,
         }
     }
 }
@@ -534,10 +639,16 @@ impl PlanCacheStats {
     }
 }
 
+/// One cached prepared engine plus its recency stamp (the prepared side
+/// of [`PlanCache`] evicts least-recently-used).
+struct PreparedSlot {
+    last_used: u64,
+    engine: Arc<crate::exec::PreparedNetwork>,
+}
+
 /// Memoizes full network plans by [`PlanCacheKey`]. A process-wide
 /// instance backs [`plan_network`] ([`global_plan_cache`]); tests and
 /// embedders can hold private instances for isolation.
-#[derive(Default)]
 pub struct PlanCache {
     map: Mutex<HashMap<PlanCacheKey, Arc<NetworkPlan>>>,
     hits: AtomicU64,
@@ -548,14 +659,44 @@ pub struct PlanCache {
     /// networks are cached alongside it under their own key; including
     /// the backend guarantees interpreter- and native-compiled engines
     /// never cross-serve).
-    prepared: Mutex<HashMap<(u64, crate::exec::Backend), Arc<crate::exec::PreparedNetwork>>>,
+    prepared: Mutex<HashMap<(u64, crate::exec::Backend), PreparedSlot>>,
     prepared_hits: AtomicU64,
     prepared_misses: AtomicU64,
+    /// Monotone recency clock for the prepared side (bumped on every
+    /// hit or insert).
+    prepared_tick: AtomicU64,
+    prepared_capacity: usize,
+}
+
+/// Default bound of the prepared-engine side (engines embed a full
+/// weight copy, so this side must stay small).
+const DEFAULT_PREPARED_CAPACITY: usize = 8;
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::with_prepared_capacity(DEFAULT_PREPARED_CAPACITY)
+    }
 }
 
 impl PlanCache {
     pub fn new() -> PlanCache {
         PlanCache::default()
+    }
+
+    /// A cache whose prepared-engine side holds at most `capacity`
+    /// entries (≥ 1). The plan side stays unbounded — weightless plans
+    /// are small.
+    pub fn with_prepared_capacity(capacity: usize) -> PlanCache {
+        PlanCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            prepared: Mutex::new(HashMap::new()),
+            prepared_hits: AtomicU64::new(0),
+            prepared_misses: AtomicU64::new(0),
+            prepared_tick: AtomicU64::new(0),
+            prepared_capacity: capacity.max(1),
+        }
     }
 
     /// Return the cached plan for (net, opts), planning on miss. Planning
@@ -570,6 +711,11 @@ impl PlanCache {
         }
         let planned = Arc::new(plan_network_uncached(net, opts.clone()));
         self.misses.fetch_add(1, Ordering::Relaxed);
+        // Measure-mode planning records measurements and bumps the
+        // tune-db epoch, which is part of the key — recompute so the
+        // fresh plan is inserted under the key the *next* identical
+        // request will look up, not an already-stale one.
+        let key = PlanCacheKey::new(net, opts);
         let mut map = self.map.lock().unwrap();
         Arc::clone(map.entry(key).or_insert(planned))
     }
@@ -589,24 +735,36 @@ impl PlanCache {
     ) -> crate::Result<Arc<crate::exec::PreparedNetwork>> {
         // Prepared engines embed a full copy of the model's weights, and
         // every weight rebind is a new fingerprint — so unlike the
-        // weightless plan side, this side is bounded: once full, an
-        // arbitrary old entry is evicted (in-flight `Arc`s stay valid; a
-        // re-used old plan simply re-prepares).
-        const MAX_PREPARED_ENTRIES: usize = 8;
+        // weightless plan side, this side is bounded. Eviction is
+        // least-recently-used: every hit restamps its entry, so a
+        // freshly tuned plan entering a full cache displaces the coldest
+        // engine, never a hot one (in-flight `Arc`s stay valid; a
+        // re-used evicted plan simply re-prepares).
         let key = (plan_fingerprint(plan), backend);
-        if let Some(hit) = self.prepared.lock().unwrap().get(&key) {
+        if let Some(slot) = self.prepared.lock().unwrap().get_mut(&key) {
+            slot.last_used = self.prepared_tick.fetch_add(1, Ordering::Relaxed);
             self.prepared_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Arc::clone(hit));
+            return Ok(Arc::clone(&slot.engine));
         }
         let built = Arc::new(crate::exec::PreparedNetwork::prepare_with(plan, backend)?);
         self.prepared_misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.prepared.lock().unwrap();
-        if !map.contains_key(&key) && map.len() >= MAX_PREPARED_ENTRIES {
-            if let Some(evict) = map.keys().next().copied() {
+        if !map.contains_key(&key) && map.len() >= self.prepared_capacity {
+            if let Some(evict) = map
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(k, _)| *k)
+            {
                 map.remove(&evict);
             }
         }
-        Ok(Arc::clone(map.entry(key).or_insert(built)))
+        // A racing cold caller may have inserted first; keep its engine
+        // (both are equivalent) and just restamp recency.
+        let slot = map
+            .entry(key)
+            .or_insert(PreparedSlot { last_used: 0, engine: built });
+        slot.last_used = self.prepared_tick.fetch_add(1, Ordering::Relaxed);
+        Ok(Arc::clone(&slot.engine))
     }
 
     pub fn stats(&self) -> PlanCacheStats {
@@ -866,6 +1024,76 @@ mod tests {
         assert!(!Arc::ptr_eq(&a, &c));
         assert_eq!(c.backend(), crate::exec::Backend::Interp);
         assert_eq!(cache.stats().prepared_entries, 3);
+    }
+
+    #[test]
+    fn prepared_cache_evicts_least_recently_used() {
+        let machine = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 16, 16);
+        let mk_plan = |seed: u64| {
+            let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+            let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
+            lp.bind_weights(WeightTensor::random(
+                crate::tensor::WeightShape::new(16, 16, 3, 3),
+                crate::tensor::WeightLayout::CKRSc { c: 16 },
+                seed,
+            ));
+            NetworkPlan::chain(format!("lru-{seed}"), vec![lp])
+        };
+        let backend = crate::exec::Backend::default();
+        let cache = PlanCache::with_prepared_capacity(2);
+        let (pa, pb, pc) = (mk_plan(1), mk_plan(2), mk_plan(3));
+        let a = cache.prepared(&pa, backend).unwrap();
+        cache.prepared(&pb, backend).unwrap();
+        // Touch A: B becomes the least-recently-used entry.
+        let a2 = cache.prepared(&pa, backend).unwrap();
+        assert!(Arc::ptr_eq(&a, &a2));
+        // Inserting C must evict B (coldest), not the just-hit A.
+        cache.prepared(&pc, backend).unwrap();
+        assert_eq!(cache.stats().prepared_entries, 2);
+        let misses = cache.stats().prepared_misses;
+        let a3 = cache.prepared(&pa, backend).unwrap();
+        assert!(Arc::ptr_eq(&a, &a3), "hot entry must survive eviction");
+        assert_eq!(cache.stats().prepared_misses, misses, "A stays cached");
+        cache.prepared(&pb, backend).unwrap();
+        assert_eq!(
+            cache.stats().prepared_misses,
+            misses + 1,
+            "B was evicted and must re-prepare"
+        );
+    }
+
+    #[test]
+    fn plan_cache_key_ignores_backend_only_when_tuning_is_off() {
+        let net = nets::resnet18();
+        let off_native = PlanCacheKey::new(&net, &PlannerOptions::default());
+        let off_interp = PlanCacheKey::new(
+            &net,
+            &PlannerOptions { backend: crate::exec::Backend::Interp, ..Default::default() },
+        );
+        // Tuning off: the backend does not change the plan.
+        assert_eq!(off_native, off_interp);
+        assert_eq!(off_native.tune_epoch, 0);
+
+        // Tuning on: the db is consulted per backend, so keys split —
+        // and they never collide with the untuned key.
+        let db = Arc::new(crate::tune::TuneDb::in_memory());
+        let tuned = |backend| {
+            PlanCacheKey::new(
+                &net,
+                &PlannerOptions {
+                    tune: crate::tune::TuneMode::Cached,
+                    tune_db: Some(Arc::clone(&db)),
+                    backend,
+                    ..Default::default()
+                },
+            )
+        };
+        let cached_native = tuned(crate::exec::Backend::Native);
+        let cached_interp = tuned(crate::exec::Backend::Interp);
+        assert_ne!(cached_native, cached_interp);
+        assert_ne!(cached_native, off_native);
+        assert_eq!(cached_native.tune_epoch, db.epoch());
     }
 
     #[test]

@@ -28,23 +28,34 @@
 //! [`super::run_network_functional`] call (`serve_concurrency`
 //! integration test).
 //!
+//! With [`ServerConfig::tune`] enabled, the server additionally applies
+//! recorded tuning-db winners to the plan at startup, and
+//! [`crate::tune::TuneMode::Measure`] spawns a **background tuning
+//! thread** that measures the plan's hottest kernels under live
+//! traffic and swaps a re-tuned prepared engine into the serving path
+//! — without blocking requests and without changing a byte of output
+//! (the `tune` integration test races submitters against the swap).
+//!
 //! std::thread + mpsc, not tokio: tokio is unavailable offline, and a
 //! blocking pool is the right tool for a CPU-bound inference server.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::exec::Backend;
+use crate::exec::{Backend, PreparedNetwork};
+use crate::layer::LayerConfig;
 use crate::tensor::ActTensor;
+use crate::tune::{self, TuneConfig, TuneDb, TuneKey, TuneMode};
 
 use super::metrics::SessionMetrics;
-use super::plan::NetworkPlan;
+use super::plan::{NetworkPlan, PlanKind};
 use super::run_network_batch;
 
 /// Serving configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Worker threads executing batches.
     pub workers: usize,
@@ -65,6 +76,29 @@ pub struct ServerConfig {
     /// this is a performance/debugging knob, and part of the
     /// prepared-engine cache key.
     pub backend: Backend,
+    /// Empirical tuning ([`crate::tune`]): with `Cached`, recorded
+    /// winners from the tuning db are applied to the plan at startup;
+    /// with `Measure`, a **background tuning thread** additionally
+    /// measures the plan's hottest generated-conv layers once traffic
+    /// is observed and swaps a re-tuned prepared engine into serving
+    /// through the plan-fingerprint cache path — without blocking
+    /// requests, and without changing a single output byte (every
+    /// measured candidate is bit-identity-gated against the
+    /// interpreter oracle). `Off` (default) serves exactly the plan it
+    /// was handed.
+    pub tune: TuneMode,
+    /// Tuning database (`None` = the process-wide
+    /// [`crate::tune::global_tune_db`]).
+    pub tune_db: Option<Arc<TuneDb>>,
+    /// Measurement effort of the background tuner (keep small: it
+    /// shares the machine with serving).
+    pub tune_config: TuneConfig,
+    /// How many of the plan's hottest (largest modeled-cycles)
+    /// generated-conv layers the background tuner measures.
+    pub tune_hot_layers: usize,
+    /// Observed requests before the background tuner starts measuring
+    /// (it tunes what traffic actually exercises, not cold plans).
+    pub tune_min_requests: u64,
 }
 
 impl Default for ServerConfig {
@@ -76,6 +110,11 @@ impl Default for ServerConfig {
             requant_shift: 8,
             exec_threads: 0,
             backend: Backend::default(),
+            tune: TuneMode::Off,
+            tune_db: None,
+            tune_config: TuneConfig::quick(),
+            tune_hot_layers: 2,
+            tune_min_requests: 8,
         }
     }
 }
@@ -97,6 +136,9 @@ pub struct Server {
     tx: Option<mpsc::Sender<Request>>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    /// Background tuning thread ([`TuneMode::Measure`] only).
+    tuner: Option<JoinHandle<()>>,
+    tuner_stop: Arc<AtomicBool>,
     config: ServerConfig,
     /// Whether batches run on the prepared engine (false = plan could
     /// not be prepared, e.g. no weights bound; the per-request
@@ -125,7 +167,12 @@ impl Server {
     /// the same weight-bound plan share one prepared engine. Plans that
     /// cannot be prepared (e.g. no weights bound) fall back to the
     /// per-request functional path, preserving the old error behaviour.
-    pub fn start_with(plan: NetworkPlan, config: ServerConfig) -> Server {
+    ///
+    /// With tuning enabled, recorded winners from the tuning db are
+    /// applied to the plan before preparation, and
+    /// [`TuneMode::Measure`] additionally spawns the background tuning
+    /// thread (see [`ServerConfig::tune`]).
+    pub fn start_with(mut plan: NetworkPlan, config: ServerConfig) -> Server {
         let workers_n = config.workers.max(1);
         let exec_threads = if config.exec_threads == 0 {
             (std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) / workers_n)
@@ -139,6 +186,20 @@ impl Server {
             exec_threads,
             ..config
         };
+        let tune_db = match config.tune {
+            TuneMode::Off => None,
+            _ => Some(config.tune_db.clone().unwrap_or_else(tune::global_tune_db)),
+        };
+        // Startup retune: serve what the db already knows is fastest on
+        // this machine (outputs are unchanged — tuned kernels are
+        // oracle-gated bit-identical).
+        if let Some(db) = &tune_db {
+            if let Some(tuned) =
+                tune::retune_plan(&plan, db, config.backend, config.tune_config.perf_sample)
+            {
+                plan = tuned;
+            }
+        }
         let (tx, submit_rx) = mpsc::channel::<Request>();
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
@@ -158,6 +219,10 @@ impl Server {
                 None
             }
         };
+        // Workers read the current engine per batch through this slot;
+        // the background tuner swaps re-tuned engines in here.
+        let engine_slot: Arc<Mutex<Option<Arc<PreparedNetwork>>>> =
+            Arc::new(Mutex::new(prepared_net.clone()));
         let plan = Arc::new(plan);
 
         let batcher = std::thread::spawn({
@@ -198,7 +263,7 @@ impl Server {
             let batch_rx = Arc::clone(&batch_rx);
             let metrics = Arc::clone(&metrics);
             let plan = Arc::clone(&plan);
-            let prepared_net = prepared_net.clone();
+            let engine_slot = Arc::clone(&engine_slot);
             let shift = config.requant_shift;
             let exec_threads = config.exec_threads;
             workers.push(std::thread::spawn(move || loop {
@@ -210,7 +275,11 @@ impl Server {
                 let inputs: Vec<&ActTensor> =
                     batch.requests.iter().map(|r| &r.input).collect();
                 let exec_start = Instant::now();
-                let outputs = match &prepared_net {
+                // Snapshot the current engine (the tuner may swap a
+                // re-tuned one in between batches; in-flight batches
+                // finish on the engine they started with).
+                let engine = engine_slot.lock().unwrap().clone();
+                let outputs = match &engine {
                     // Hot path: prepared engine, images fanned across
                     // threads — bit-identical to the functional path.
                     Some(p) => p.run_batch(&inputs, shift, exec_threads),
@@ -231,10 +300,41 @@ impl Server {
             }));
         }
 
+        let tuner_stop = Arc::new(AtomicBool::new(false));
+        let tuner = match (&tune_db, config.tune, has_prepared) {
+            (Some(db), TuneMode::Measure, true) => {
+                let db = Arc::clone(db);
+                let plan = Arc::clone(&plan);
+                let metrics = Arc::clone(&metrics);
+                let engine_slot = Arc::clone(&engine_slot);
+                let stop = Arc::clone(&tuner_stop);
+                let backend = config.backend;
+                let tcfg = config.tune_config;
+                let hot_layers = config.tune_hot_layers;
+                let min_requests = config.tune_min_requests;
+                Some(std::thread::spawn(move || {
+                    background_tuner(
+                        &plan,
+                        &db,
+                        backend,
+                        &tcfg,
+                        hot_layers,
+                        min_requests,
+                        &metrics,
+                        &engine_slot,
+                        &stop,
+                    )
+                }))
+            }
+            _ => None,
+        };
+
         Server {
             tx: Some(tx),
             batcher: Some(batcher),
             workers,
+            tuner,
+            tuner_stop,
             config,
             prepared: has_prepared,
             metrics,
@@ -263,7 +363,13 @@ impl Server {
     }
 
     /// Drain and join: pending requests are still batched and answered.
+    /// The background tuner (if any) is signalled first so it winds
+    /// down while the workers drain; it finishes at most its in-flight
+    /// layer measurement (the stop flag is checked between layers and
+    /// again before the engine-swap stage, which is skipped on
+    /// shutdown).
     pub fn shutdown(mut self) -> SessionMetrics {
+        self.tuner_stop.store(true, Ordering::Relaxed);
         drop(self.tx.take());
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
@@ -271,8 +377,131 @@ impl Server {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        if let Some(t) = self.tuner.take() {
+            let _ = t.join();
+        }
         let m = self.metrics.lock().unwrap();
         m.clone()
+    }
+}
+
+/// The background tuning thread: wait for observed traffic, measure
+/// the hottest generated-conv layers (skipping ones the db already
+/// knows), and swap a re-tuned prepared engine into the serving path.
+/// Never blocks serving — workers keep executing on the current engine
+/// while measurement runs, and the swap is one `Arc` store.
+#[allow(clippy::too_many_arguments)]
+fn background_tuner(
+    plan: &NetworkPlan,
+    db: &TuneDb,
+    backend: Backend,
+    tcfg: &TuneConfig,
+    hot_layers: usize,
+    min_requests: u64,
+    metrics: &Mutex<SessionMetrics>,
+    engine_slot: &Mutex<Option<Arc<PreparedNetwork>>>,
+    stop: &AtomicBool,
+) {
+    // Tune what traffic actually exercises: idle until the session has
+    // seen real requests. A coarse poll interval keeps an idle tuner
+    // off the metrics mutex the serving hot path records through —
+    // tuning start latency is not latency-sensitive.
+    while !stop.load(Ordering::Relaxed) {
+        if metrics.lock().unwrap().requests >= min_requests {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    if stop.load(Ordering::Relaxed) {
+        return;
+    }
+    // Hot layers: generated convs ranked by modeled share of session
+    // cycles (every request runs every layer, so the per-layer traffic
+    // weight is uniform and the modeled cost ordering is the heat
+    // ordering).
+    let mut hot: Vec<usize> = plan
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, lp)| {
+            matches!(
+                (&lp.layer, &lp.kind),
+                (LayerConfig::Conv(_), PlanKind::Generated { .. })
+            )
+        })
+        .map(|(i, _)| i)
+        .collect();
+    hot.sort_by(|&a, &b| {
+        plan.layers[b]
+            .stats
+            .cycles
+            .partial_cmp(&plan.layers[a].stats.cycles)
+            .unwrap()
+    });
+    hot.truncate(hot_layers.max(1));
+
+    let mut measured = Vec::new();
+    for i in hot {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let lp = &plan.layers[i];
+        let (LayerConfig::Conv(cfg), PlanKind::Generated { machine, pad, .. }) =
+            (&lp.layer, &lp.kind)
+        else {
+            continue;
+        };
+        let key = TuneKey::for_layer(cfg, machine, backend);
+        if db.get(&key).is_some() {
+            continue; // already measured on this machine + backend
+        }
+        // Measure with the layer's real weights so the oracle gate
+        // checks the numerics this server actually serves.
+        match tune::tune_conv(cfg, *pad, machine, backend, tcfg, lp.weights()) {
+            Ok(outcome) => {
+                measured.push(lp.layer.name());
+                if let Err(e) = db.record(key, outcome.entry()) {
+                    eprintln!(
+                        "yflows tuner: could not persist {} ({e:#})",
+                        lp.layer.name()
+                    );
+                }
+            }
+            Err(e) => eprintln!("yflows tuner: {} not measurable ({e:#})", lp.layer.name()),
+        }
+    }
+
+    // Swap: a re-tuned plan has a new fingerprint (program names encode
+    // the spec), so the prepared cache compiles a fresh engine — the
+    // old one keeps serving in-flight batches until its Arc drops. On
+    // shutdown the swap is pointless work; skip it (measurements are
+    // already persisted, the next session's startup retune applies them).
+    if stop.load(Ordering::Relaxed) {
+        if !measured.is_empty() {
+            metrics.lock().unwrap().record_tuning(measured, false);
+        }
+        return;
+    }
+    let swapped = match tune::retune_plan(plan, db, backend, tcfg.perf_sample) {
+        Some(new_plan) => {
+            match super::plan::global_plan_cache().prepared(&new_plan, backend) {
+                Ok(engine) => {
+                    *engine_slot.lock().unwrap() = Some(engine);
+                    true
+                }
+                Err(e) => {
+                    eprintln!(
+                        "yflows tuner: re-tuned plan failed to prepare ({e:#}); \
+                         keeping the current engine"
+                    );
+                    false
+                }
+            }
+        }
+        None => false,
+    };
+    if !measured.is_empty() || swapped {
+        metrics.lock().unwrap().record_tuning(measured, swapped);
     }
 }
 
@@ -375,6 +604,140 @@ mod tests {
         // Old behaviour preserved: the request itself errors.
         let out = server.submit(input).recv().unwrap();
         assert!(out.is_err());
+        server.shutdown();
+    }
+
+    /// A deliberately *mistuned* single-conv plan: the kernel is the
+    /// basic IS dataflow instead of the optimized-OS pick, so a
+    /// measurement round always records a different winner and the
+    /// tuner has something to swap.
+    fn mistuned_plan(machine: MachineConfig) -> NetworkPlan {
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 16);
+        let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 1);
+        let padded = crate::coordinator::padded_conv(&cfg, &machine);
+        let basic = crate::dataflow::DataflowSpec::basic(crate::dataflow::Anchor::Input);
+        let prog = crate::codegen::generate(&padded, &basic, &machine);
+        lp.kind = super::super::plan::PlanKind::Generated {
+            spec: basic,
+            prog,
+            machine,
+            pad: 1,
+        };
+        lp.bind_weights(WeightTensor::random(
+            WeightShape::new(16, 16, 3, 3),
+            WeightLayout::CKRSc { c: 16 },
+            123,
+        ));
+        NetworkPlan::chain("mistuned", vec![lp])
+    }
+
+    #[test]
+    fn background_tuner_swaps_engine_and_serving_stays_bit_identical() {
+        const SHIFT: u32 = 8;
+        let machine = MachineConfig::neon(128);
+        let plan = mistuned_plan(machine);
+        // Unbatched functional reference of the plan as handed in.
+        let reference: Vec<ActTensor> = (0..8u64)
+            .map(|seed| {
+                let input =
+                    ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed);
+                crate::coordinator::run_network_functional(&plan, &input, SHIFT).unwrap()
+            })
+            .collect();
+        let db = Arc::new(crate::tune::TuneDb::in_memory());
+        let server = Server::start_with(
+            plan,
+            ServerConfig {
+                workers: 2,
+                max_batch: 2,
+                requant_shift: SHIFT,
+                tune: TuneMode::Measure,
+                tune_db: Some(Arc::clone(&db)),
+                tune_config: TuneConfig::quick(),
+                tune_hot_layers: 1,
+                tune_min_requests: 1,
+                ..Default::default()
+            },
+        );
+        assert!(server.is_prepared());
+        let check = |seed: u64| {
+            let input =
+                ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed);
+            let out = server.submit(input).recv().unwrap().unwrap();
+            assert_eq!(
+                out.data, reference[seed as usize].data,
+                "request {seed} diverged from the unbatched reference"
+            );
+        };
+        // Traffic before the tuner kicks in.
+        for seed in 0..4 {
+            check(seed);
+        }
+        // Wait for the swap (the measured winner is never the basic-IS
+        // kernel: basics are pruned out of the model-ranked shortlist).
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if server.metrics.lock().unwrap().tune_swaps >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "tuner never swapped an engine in");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Served bytes are unchanged across the live engine swap.
+        for seed in 4..8 {
+            check(seed);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.tune_swaps, 1);
+        assert!(!metrics.tuned_layers.is_empty());
+        assert_eq!(db.len(), 1, "the measured layer must be recorded");
+    }
+
+    #[test]
+    fn cached_tuning_applies_db_winners_at_startup_without_changing_bytes() {
+        const SHIFT: u32 = 8;
+        let machine = MachineConfig::neon(128);
+        let plan = mistuned_plan(machine);
+        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 9);
+        let reference =
+            crate::coordinator::run_network_functional(&plan, &input, SHIFT).unwrap();
+        // Pre-seed the db: the "measured" winner is the optimized OS
+        // dataflow (as a real measurement would record).
+        let db = Arc::new(crate::tune::TuneDb::in_memory());
+        let (cfg, pad) = match (&plan.layers[0].layer, &plan.layers[0].kind) {
+            (LayerConfig::Conv(c), super::super::plan::PlanKind::Generated { pad, .. }) => {
+                (*c, *pad)
+            }
+            _ => unreachable!(),
+        };
+        db.record(
+            crate::tune::TuneKey::for_layer(&cfg, &machine, Backend::default()),
+            crate::tune::TuneEntry {
+                layer: cfg.name(),
+                pad,
+                spec: crate::dataflow::DataflowSpec::optimized_os(&machine, cfg.r_size()),
+                model_cycles: 1.0,
+                measured_sec: 1e-6,
+                spread: 0.0,
+                samples: 3,
+            },
+        )
+        .unwrap();
+        let server = Server::start_with(
+            plan,
+            ServerConfig {
+                workers: 1,
+                requant_shift: SHIFT,
+                tune: TuneMode::Cached,
+                tune_db: Some(db),
+                ..Default::default()
+            },
+        );
+        // Cached mode never spawns the measuring thread.
+        assert!(server.tuner.is_none());
+        let out = server.submit(input).recv().unwrap().unwrap();
+        assert_eq!(out.data, reference.data, "startup retune changed served bytes");
         server.shutdown();
     }
 

@@ -48,6 +48,28 @@ impl Exploration {
     pub fn best(&self) -> &Candidate {
         &self.candidates[self.best]
     }
+
+    /// The `k` best-modeled candidates (ascending modeled cycles) with
+    /// their model scores — the heuristic-pruned shortlist the
+    /// empirical tuner ([`crate::tune`]) measures on the host. Always
+    /// non-empty (k saturates at 1 from below); entry 0 is the model's
+    /// own pick, so a measured selection can only match or beat the
+    /// model on the measured set.
+    pub fn shortlist(&self, k: usize) -> Vec<(DataflowSpec, f64)> {
+        let mut order: Vec<usize> = (0..self.candidates.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.candidates[a]
+                .stats
+                .cycles
+                .partial_cmp(&self.candidates[b].stats.cycles)
+                .unwrap()
+        });
+        order
+            .into_iter()
+            .take(k.max(1))
+            .map(|i| (self.candidates[i].spec.clone(), self.candidates[i].stats.cycles))
+            .collect()
+    }
 }
 
 /// Exploration parameters.
@@ -324,6 +346,21 @@ mod tests {
         let m = MachineConfig::neon(128);
         explore(&small_cfg(), &m, &ExploreConfig::default());
         assert!(exploration_count() > before);
+    }
+
+    #[test]
+    fn shortlist_is_model_ranked_and_leads_with_the_winner() {
+        let m = MachineConfig::neon(128);
+        let ex = explore(&small_cfg(), &m, &ExploreConfig::default());
+        let top = ex.shortlist(4);
+        assert_eq!(top.len(), 4);
+        assert_eq!(top[0].0, ex.best().spec, "entry 0 must be the model's pick");
+        for pair in top.windows(2) {
+            assert!(pair[0].1 <= pair[1].1, "shortlist must ascend in modeled cycles");
+        }
+        // k saturates: never empty, never beyond the candidate count.
+        assert_eq!(ex.shortlist(0).len(), 1);
+        assert_eq!(ex.shortlist(10_000).len(), ex.candidates.len());
     }
 
     #[test]

@@ -47,6 +47,11 @@
 //!   fused requantization — signed for residual adds), then execute the
 //!   topological schedule per image with no plan-derived work —
 //!   bit-identical to the functional path, parallel across a batch.
+//! * [`tune`] — the empirical autotuner: measures the heuristic-pruned
+//!   candidate shortlist on the host CPU through the real execution
+//!   path (bit-identity-gated against the interpreter oracle) and
+//!   persists winners in a versioned on-disk tuning database consulted
+//!   by the planner and the server's background tuning thread.
 //! * [`runtime`] — PJRT (via the `xla` crate, behind the `pjrt` feature)
 //!   loader that executes the AOT-lowered JAX/Pallas artifacts for
 //!   numeric cross-validation.
@@ -65,6 +70,7 @@ pub mod explore;
 pub mod nets;
 pub mod coordinator;
 pub mod exec;
+pub mod tune;
 pub mod runtime;
 pub mod report;
 

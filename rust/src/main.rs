@@ -32,6 +32,9 @@ Tools:
   explore     Explore dataflows for one conv layer    [--f 3 --i 56 --nf 128 --s 1 --vl 128]
   codegen     Dump generated NEON C for a dataflow    [--anchor os --f 3 --i 8]
   plan        Plan a network end-to-end               [--net resnet18 --vl 128]
+  tune        Measure the §V layer set on this CPU    [--quick --vl 128 --k 4 --reps 5 --db tune_db.json]
+              (model vs measured rankings + rank correlation; --quick strongly
+               recommended for a first run — the full grid measures 18 layers)
   validate    Cross-validate vs PJRT artifact         [--artifact artifacts/conv3x3.hlo.txt]
 
 Common options: --quick (reduced sweep), --sample N (perf-model sampling), --out DIR (CSV dir)"
@@ -200,6 +203,63 @@ fn main() -> yflows::Result<()> {
                 plan.total_cycles() / 1e6,
                 plan.total_seconds() * 1e3
             );
+        }
+        Some("tune") => {
+            // Empirical autotuning sweep over the §V layer set: the
+            // heuristic-pruned shortlist of every layer is measured on
+            // this CPU (bit-identity-gated against the interpreter
+            // oracle) and compared against the perf model's ranking.
+            // The machine comes from the config file's [planner]
+            // vector_length with --vl as an override (same precedence
+            // as `plan`) — recording entries under a machine the
+            // planner will never look up would waste the whole sweep.
+            let opts = yflows::util::config::planner_from(&file_cfg);
+            let machine = match args.opt("vl") {
+                Some(vl) => MachineConfig::neon(vl.parse().unwrap_or(128)),
+                None => opts.machine,
+            };
+            let base = if quick {
+                yflows::tune::TuneConfig::quick()
+            } else {
+                yflows::tune::TuneConfig::default()
+            };
+            let tcfg = yflows::tune::TuneConfig {
+                top_k: args.get_parse::<usize>("k", base.top_k),
+                reps: args.get_parse::<usize>("reps", base.reps),
+                // `--sample` / `[planner] perf_sample` apply here like
+                // everywhere else (the `sample` binding above already
+                // encodes that precedence).
+                perf_sample: sample,
+                ..base
+            };
+            let db = match args.opt("db") {
+                Some(path) => Some(yflows::tune::TuneDb::open(path)?),
+                None => None,
+            };
+            let layers = sweep.configs(1, machine.c_int8());
+            println!(
+                "== tune: {} layers, backend {}, shortlist top-{} ==",
+                layers.len(),
+                opts.backend.name(),
+                tcfg.top_k
+            );
+            let (t, rows) = yflows::tune::report::run_layers(
+                &layers,
+                &machine,
+                opts.backend,
+                &tcfg,
+                db.as_ref(),
+            );
+            println!("{}", t.render());
+            println!("{}", yflows::tune::report::summary(&rows));
+            if let Some(db) = &db {
+                println!(
+                    "recorded {} entries to {}",
+                    db.len(),
+                    db.path().map(|p| p.display().to_string()).unwrap_or_default()
+                );
+            }
+            t.write_csv(&format!("{outdir}/tune.csv"))?;
         }
         Some("isa-compare") => {
             let f = args.get_parse::<usize>("f", 3);

@@ -1,0 +1,538 @@
+//! The persistent tuning database.
+//!
+//! [`TuneDb`] maps (layer fingerprint, [`MachineConfig`], [`Backend`])
+//! to the empirically-measured winning [`DataflowSpec`] plus its
+//! measurement stats. The on-disk form is human-readable JSON with a
+//! versioned schema (parsed by the crate's own [`Json`] reader — serde
+//! is unavailable offline, same as `util/config`):
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "entries": [
+//!     {
+//!       "layer_fp": "0f3a...", "layer": "conv3x3s1-...", "pad": 1,
+//!       "machine": {"num_regs": 32, "vec_var_bits": 128},
+//!       "backend": "native",
+//!       "spec": {"anchor": "OS", "aux": [["wgt", 5], ["in", 2]]},
+//!       "model_cycles": 1.2e6, "measured_sec": 3.4e-5,
+//!       "spread": 0.04, "samples": 5
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! Loading is **strict**: an unknown `schema_version`, a malformed
+//! entry, or an unparseable spec is an error — a stale or hand-mangled
+//! db must never be silently served. Machine mismatches are handled at
+//! lookup granularity: [`TuneDb::get`] keys on the full
+//! [`MachineConfig`], so entries recorded for another register file are
+//! simply not found.
+//!
+//! Lookups are served from an in-process map (the disk is read once, at
+//! open); [`TuneDb::record`] updates the map and atomically rewrites
+//! the file (write to a process-unique temp sibling, then rename) so a
+//! crash mid-write can never leave a torn database behind. The file is
+//! **single-writer**: each process rewrites the whole file from its own
+//! map, so two processes recording into one path are last-writer-wins
+//! (run sweeps and measuring servers against separate files, or
+//! sequentially); the process-unique temp name at least guarantees
+//! their rewrites can never interleave into a torn rename.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::dataflow::{Anchor, AuxKind, DataflowSpec};
+use crate::exec::Backend;
+use crate::layer::ConvConfig;
+use crate::machine::MachineConfig;
+use crate::util::json::Json;
+
+/// On-disk schema version. Bump on any incompatible change; old files
+/// are rejected at open (the operator re-tunes rather than serving
+/// plans selected under different measurement semantics).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Stable 64-bit FNV-1a fingerprint of a (padded) conv layer config —
+/// the layer half of a [`TuneKey`]. The coordinator's spatial `pad` is
+/// deliberately **not** part of the key: `ConvConfig` stores the
+/// post-padding dims, so the generated kernel, its schedule, and the
+/// candidate ranking are fully determined by the config alone — `pad`
+/// only says how much of the input arrives pre-padded. Keying on it
+/// would make `yflows tune` sweep entries (measured at pad 0) silently
+/// miss the same layers planned inside a network (pad ≥ 1).
+pub fn layer_fingerprint(cfg: &ConvConfig) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in format!("{cfg:?}").as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// What a tuning entry is keyed by: the layer (fingerprinted), the
+/// machine it was measured on, and the execution backend it was
+/// measured with. A db carried to a different machine or backend never
+/// answers — the lookup misses and the caller falls back to the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TuneKey {
+    pub layer_fp: u64,
+    pub machine: MachineConfig,
+    pub backend: Backend,
+}
+
+impl TuneKey {
+    pub fn for_layer(cfg: &ConvConfig, machine: &MachineConfig, backend: Backend) -> TuneKey {
+        TuneKey { layer_fp: layer_fingerprint(cfg), machine: *machine, backend }
+    }
+}
+
+/// One tuning result: the measured winner and its stats.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneEntry {
+    /// Display name of the layer (diagnostics only — the fingerprint is
+    /// authoritative).
+    pub layer: String,
+    /// Spatial padding the measurement staged its inputs with
+    /// (diagnostics only — the kernel is determined by the config, so
+    /// `pad` is not part of the key).
+    pub pad: usize,
+    /// The empirically fastest dataflow.
+    pub spec: DataflowSpec,
+    /// The perf model's cycle estimate for `spec` (for model-vs-measured
+    /// reporting).
+    pub model_cycles: f64,
+    /// Median measured per-image seconds of the winner.
+    pub measured_sec: f64,
+    /// Relative spread `(max - min) / median` of the accepted
+    /// measurement round.
+    pub spread: f64,
+    /// Timing samples in the accepted round.
+    pub samples: usize,
+}
+
+/// See the module docs. Cheap to share behind an `Arc`; all methods
+/// take `&self`.
+pub struct TuneDb {
+    /// Process-unique instance id (distinguishes two dbs with identical
+    /// contents in [`TuneDb::epoch`]).
+    id: u64,
+    path: Option<PathBuf>,
+    /// Bumped on every [`TuneDb::record`]; consumers that cache derived
+    /// state (the plan cache) key on [`TuneDb::epoch`] so a re-tune
+    /// invalidates them.
+    generation: AtomicU64,
+    map: Mutex<HashMap<TuneKey, TuneEntry>>,
+    /// Serializes file rewrites: concurrent recorders share one temp
+    /// path, so writes must not interleave (lookups never take this).
+    save_lock: Mutex<()>,
+}
+
+impl std::fmt::Debug for TuneDb {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TuneDb")
+            .field("path", &self.path)
+            .field("entries", &self.map.lock().unwrap().len())
+            .finish()
+    }
+}
+
+fn next_db_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Process-unique temp sibling for the atomic rewrite (two processes
+/// sharing a db path must never interleave writes into one temp file).
+fn tmp_path(path: &Path) -> PathBuf {
+    path.with_extension(format!("tmp.{}", std::process::id()))
+}
+
+impl TuneDb {
+    /// A db with no backing file (tests, ephemeral tuning).
+    pub fn in_memory() -> TuneDb {
+        TuneDb {
+            id: next_db_id(),
+            path: None,
+            generation: AtomicU64::new(0),
+            map: Mutex::new(HashMap::new()),
+            save_lock: Mutex::new(()),
+        }
+    }
+
+    /// Open (or create) a file-backed db. A missing file is an empty
+    /// db; an existing file must parse under the current
+    /// [`SCHEMA_VERSION`] or this errors.
+    pub fn open(path: impl AsRef<Path>) -> crate::Result<TuneDb> {
+        let path = path.as_ref().to_path_buf();
+        let map = match std::fs::read_to_string(&path) {
+            Ok(text) => Self::parse_entries(&text)
+                .map_err(|e| anyhow::anyhow!("tune db {}: {e}", path.display()))?,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => HashMap::new(),
+            Err(e) => return Err(anyhow::anyhow!("tune db {}: {e}", path.display())),
+        };
+        Ok(TuneDb {
+            id: next_db_id(),
+            path: Some(path),
+            generation: AtomicU64::new(0),
+            map: Mutex::new(map),
+            save_lock: Mutex::new(()),
+        })
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// A value that changes whenever this db's answers could change:
+    /// distinct per instance and bumped on every [`TuneDb::record`].
+    /// The plan cache folds it into its key so plans selected from a
+    /// since-updated db are replanned, not served stale.
+    pub fn epoch(&self) -> u64 {
+        self.id
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(self.generation.load(Ordering::Relaxed))
+    }
+
+    /// The recorded winner for `key`, if this db has measured it (on
+    /// this machine, for this backend).
+    pub fn get(&self, key: &TuneKey) -> Option<TuneEntry> {
+        self.map.lock().unwrap().get(key).cloned()
+    }
+
+    /// Record (or replace) a measurement and persist. The file rewrite
+    /// is atomic: the new content lands in a temp file first and is
+    /// renamed over the db, so readers never observe a torn file;
+    /// in-process recorders are serialized on the save lock, and the
+    /// temp name is process-unique so even two *processes* sharing a
+    /// path cannot interleave one temp file (their full-file rewrites
+    /// remain last-writer-wins — see the module docs).
+    pub fn record(&self, key: TuneKey, entry: TuneEntry) -> crate::Result<()> {
+        let _io = self.save_lock.lock().unwrap();
+        self.map.lock().unwrap().insert(key, entry);
+        self.generation.fetch_add(1, Ordering::Relaxed);
+        self.save_locked()
+    }
+
+    /// Record many measurements and persist **once** — the full-sweep
+    /// writer (`yflows tune`) uses this so an N-layer sweep rewrites
+    /// the file one time, not N times. (Per-layer [`TuneDb::record`]
+    /// remains right for the background tuner and Measure-mode
+    /// planning, where each persisted measurement should survive a
+    /// crash of the long-running process.)
+    pub fn record_batch(
+        &self,
+        entries: impl IntoIterator<Item = (TuneKey, TuneEntry)>,
+    ) -> crate::Result<()> {
+        let _io = self.save_lock.lock().unwrap();
+        {
+            let mut map = self.map.lock().unwrap();
+            for (key, entry) in entries {
+                map.insert(key, entry);
+            }
+        }
+        self.generation.fetch_add(1, Ordering::Relaxed);
+        self.save_locked()
+    }
+
+    /// Rewrite the backing file (no-op for in-memory dbs).
+    pub fn save(&self) -> crate::Result<()> {
+        let _io = self.save_lock.lock().unwrap();
+        self.save_locked()
+    }
+
+    fn save_locked(&self) -> crate::Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let text = self.render();
+        let tmp = tmp_path(path);
+        std::fs::write(&tmp, text)
+            .map_err(|e| anyhow::anyhow!("tune db {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("tune db {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// Serialize to the on-disk JSON form (deterministic entry order).
+    pub fn render(&self) -> String {
+        let map = self.map.lock().unwrap();
+        let mut keyed: Vec<(&TuneKey, &TuneEntry)> = map.iter().collect();
+        keyed.sort_by_key(|(k, _)| {
+            (k.layer_fp, k.machine.num_regs, k.machine.vec_var_bits, k.backend.name())
+        });
+        let entries: Vec<Json> = keyed.into_iter().map(|(k, e)| entry_to_json(k, e)).collect();
+        let mut root = Json::obj();
+        root.set("schema_version", Json::from_u64(SCHEMA_VERSION))
+            .set("entries", Json::Arr(entries));
+        root.render()
+    }
+
+    /// Strict parse of the on-disk form (see the module docs).
+    fn parse_entries(text: &str) -> Result<HashMap<TuneKey, TuneEntry>, String> {
+        let root = Json::parse(text)?;
+        let version = root
+            .get("schema_version")
+            .and_then(Json::as_u64)
+            .ok_or("missing schema_version")?;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported schema_version {version} (this build reads {SCHEMA_VERSION}); \
+                 delete the file and re-tune"
+            ));
+        }
+        let mut map = HashMap::new();
+        let entries = root.get("entries").and_then(Json::as_arr).ok_or("missing entries")?;
+        for (i, e) in entries.iter().enumerate() {
+            let (key, entry) =
+                entry_from_json(e).map_err(|msg| format!("entry {i}: {msg}"))?;
+            map.insert(key, entry);
+        }
+        Ok(map)
+    }
+}
+
+fn entry_to_json(key: &TuneKey, e: &TuneEntry) -> Json {
+    let mut machine = Json::obj();
+    machine
+        .set("num_regs", Json::from_u64(key.machine.num_regs as u64))
+        .set("vec_var_bits", Json::from_u64(key.machine.vec_var_bits as u64));
+    let mut o = Json::obj();
+    o.set("layer_fp", Json::s(&format!("{:016x}", key.layer_fp)))
+        .set("layer", Json::s(&e.layer))
+        .set("pad", Json::from_u64(e.pad as u64))
+        .set("machine", machine)
+        .set("backend", Json::s(key.backend.name()))
+        .set("spec", spec_to_json(&e.spec))
+        .set("model_cycles", Json::Num(e.model_cycles))
+        .set("measured_sec", Json::Num(e.measured_sec))
+        .set("spread", Json::Num(e.spread))
+        .set("samples", Json::from_u64(e.samples as u64));
+    o
+}
+
+fn entry_from_json(v: &Json) -> Result<(TuneKey, TuneEntry), String> {
+    let layer_fp = v
+        .get("layer_fp")
+        .and_then(Json::as_str)
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or("bad layer_fp")?;
+    let machine = v.get("machine").ok_or("missing machine")?;
+    let num_regs =
+        machine.get("num_regs").and_then(Json::as_u64).ok_or("bad machine.num_regs")? as usize;
+    let vec_var_bits = machine
+        .get("vec_var_bits")
+        .and_then(Json::as_u64)
+        .ok_or("bad machine.vec_var_bits")? as usize;
+    let backend = match v.get("backend").and_then(Json::as_str) {
+        Some("interp") => Backend::Interp,
+        Some("native") => Backend::Native,
+        other => return Err(format!("unknown backend {other:?}")),
+    };
+    let spec = spec_from_json(v.get("spec").ok_or("missing spec")?)?;
+    let key = TuneKey {
+        layer_fp,
+        machine: MachineConfig { num_regs, vec_var_bits },
+        backend,
+    };
+    let entry = TuneEntry {
+        layer: v.get("layer").and_then(Json::as_str).unwrap_or("?").to_string(),
+        pad: v.get("pad").and_then(Json::as_u64).unwrap_or(0) as usize,
+        spec,
+        model_cycles: v.get("model_cycles").and_then(Json::as_f64).ok_or("bad model_cycles")?,
+        measured_sec: v.get("measured_sec").and_then(Json::as_f64).ok_or("bad measured_sec")?,
+        spread: v.get("spread").and_then(Json::as_f64).unwrap_or(0.0),
+        samples: v.get("samples").and_then(Json::as_u64).unwrap_or(0) as usize,
+    };
+    Ok((key, entry))
+}
+
+/// `{"anchor": "OS", "aux": [["wgt", 5], ["in", 2]]}`.
+pub(crate) fn spec_to_json(spec: &DataflowSpec) -> Json {
+    let aux: Vec<Json> = spec
+        .aux
+        .iter()
+        .map(|(k, n)| Json::Arr(vec![Json::s(k.name()), Json::from_u64(*n as u64)]))
+        .collect();
+    let mut o = Json::obj();
+    o.set("anchor", Json::s(spec.anchor.name())).set("aux", Json::Arr(aux));
+    o
+}
+
+pub(crate) fn spec_from_json(v: &Json) -> Result<DataflowSpec, String> {
+    let anchor = match v.get("anchor").and_then(Json::as_str) {
+        Some("IS") => Anchor::Input,
+        Some("WS") => Anchor::Weight,
+        Some("OS") => Anchor::Output,
+        other => return Err(format!("unknown anchor {other:?}")),
+    };
+    let mut aux = Vec::new();
+    for pair in v.get("aux").and_then(Json::as_arr).ok_or("missing aux")? {
+        let items = pair.as_arr().filter(|a| a.len() == 2).ok_or("bad aux pair")?;
+        let kind = match items[0].as_str() {
+            Some("in") => AuxKind::Input,
+            Some("wgt") => AuxKind::Weight,
+            Some("out") => AuxKind::Output,
+            other => return Err(format!("unknown aux kind {other:?}")),
+        };
+        let n = items[1].as_u64().ok_or("bad aux count")? as usize;
+        aux.push((kind, n));
+    }
+    Ok(DataflowSpec { anchor, aux })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        std::env::temp_dir().join(format!(
+            "yflows-tunedb-{tag}-{}-{}.json",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    fn sample_entry() -> (TuneKey, TuneEntry) {
+        let cfg = ConvConfig::simple(12, 12, 3, 3, 1, 16, 32);
+        let machine = MachineConfig::neon(128);
+        let key = TuneKey::for_layer(&cfg, &machine, Backend::Native);
+        let entry = TuneEntry {
+            layer: "conv3x3".into(),
+            pad: 1,
+            spec: DataflowSpec::optimized_os(&machine, 9),
+            model_cycles: 12345.0,
+            measured_sec: 4.2e-5,
+            spread: 0.07,
+            samples: 5,
+        };
+        (key, entry)
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_discriminating() {
+        let a = ConvConfig::simple(12, 12, 3, 3, 1, 16, 32);
+        let b = ConvConfig::simple(12, 12, 5, 5, 1, 16, 32);
+        assert_eq!(layer_fingerprint(&a), layer_fingerprint(&a));
+        assert_ne!(layer_fingerprint(&a), layer_fingerprint(&b));
+        // `pad` is intentionally not keyed: the config already stores
+        // post-padding dims, so a sweep entry (pad 0) must serve the
+        // same layer planned inside a network (pad 1).
+        let mut bigger = a;
+        bigger.ih += 2;
+        bigger.iw += 2;
+        assert_ne!(layer_fingerprint(&a), layer_fingerprint(&bigger));
+    }
+
+    #[test]
+    fn round_trips_through_disk() {
+        let path = temp_path("roundtrip");
+        let (key, entry) = sample_entry();
+        {
+            let db = TuneDb::open(&path).unwrap();
+            assert!(db.is_empty());
+            db.record(key, entry.clone()).unwrap();
+            // Second entry under another backend: same layer, distinct key.
+            let key2 = TuneKey { backend: Backend::Interp, ..key };
+            db.record(key2, TuneEntry { spec: DataflowSpec::basic(Anchor::Input), ..entry.clone() })
+                .unwrap();
+        }
+        let reloaded = TuneDb::open(&path).unwrap();
+        assert_eq!(reloaded.len(), 2);
+        assert_eq!(reloaded.get(&key), Some(entry.clone()));
+        let got = reloaded.get(&TuneKey { backend: Backend::Interp, ..key }).unwrap();
+        assert_eq!(got.spec, DataflowSpec::basic(Anchor::Input));
+        // No tmp file left behind by the atomic rewrite.
+        assert!(!tmp_path(&path).exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn record_batch_persists_once_and_round_trips() {
+        let path = temp_path("batch");
+        let (key, entry) = sample_entry();
+        let key2 = TuneKey { backend: Backend::Interp, ..key };
+        {
+            let db = TuneDb::open(&path).unwrap();
+            let before = db.epoch();
+            db.record_batch([
+                (key, entry.clone()),
+                (key2, TuneEntry { spec: DataflowSpec::basic(Anchor::Weight), ..entry.clone() }),
+            ])
+            .unwrap();
+            assert_eq!(db.len(), 2);
+            assert_ne!(db.epoch(), before);
+        }
+        let reloaded = TuneDb::open(&path).unwrap();
+        assert_eq!(reloaded.len(), 2);
+        assert_eq!(reloaded.get(&key), Some(entry));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_stale_schema_versions() {
+        let path = temp_path("schema");
+        std::fs::write(&path, r#"{"schema_version": 999, "entries": []}"#).unwrap();
+        let err = TuneDb::open(&path).unwrap_err().to_string();
+        assert!(err.contains("schema_version 999"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_entries_instead_of_skipping() {
+        let path = temp_path("malformed");
+        std::fs::write(
+            &path,
+            r#"{"schema_version": 1, "entries": [{"layer_fp": "zz"}]}"#,
+        )
+        .unwrap();
+        assert!(TuneDb::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn lookup_misses_for_other_machine_or_backend() {
+        let db = TuneDb::in_memory();
+        let (key, entry) = sample_entry();
+        db.record(key, entry).unwrap();
+        // Same layer measured for a different register file: not served.
+        let other_machine = TuneKey { machine: MachineConfig::neon(256), ..key };
+        assert_eq!(db.get(&other_machine), None);
+        let other_backend = TuneKey { backend: Backend::Interp, ..key };
+        assert_eq!(db.get(&other_backend), None);
+        assert!(db.get(&key).is_some());
+    }
+
+    #[test]
+    fn epoch_changes_on_record_and_differs_across_instances() {
+        let a = TuneDb::in_memory();
+        let b = TuneDb::in_memory();
+        assert_ne!(a.epoch(), b.epoch());
+        let before = a.epoch();
+        let (key, entry) = sample_entry();
+        a.record(key, entry).unwrap();
+        assert_ne!(a.epoch(), before);
+    }
+
+    #[test]
+    fn spec_serialization_round_trips() {
+        for spec in [
+            DataflowSpec::basic(Anchor::Weight),
+            DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 5), (AuxKind::Input, 2)]),
+            DataflowSpec::extended(Anchor::Input, vec![(AuxKind::Output, 3)]),
+        ] {
+            let json = spec_to_json(&spec);
+            assert_eq!(spec_from_json(&json).unwrap(), spec);
+        }
+        assert!(spec_from_json(&Json::parse(r#"{"anchor":"XX","aux":[]}"#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,383 @@
+//! The measurement harness: empirically time a heuristic-pruned
+//! candidate shortlist on this machine.
+//!
+//! The paper's methodology is two-stage — heuristics prune the dataflow
+//! space, then surviving implementations are **empirically compared**.
+//! The exploration engine's second stage uses the analytic
+//! [`crate::machine::PerfModel`]; this module replaces it with real
+//! wall-clock measurement through the production execution path:
+//!
+//! 1. run the exploration engine ([`crate::explore`]) and keep the
+//!    top-K candidates by model score (the model's pick is always
+//!    candidate 0, so the tuner can only match or beat it *on the
+//!    measured set*);
+//! 2. compile each candidate through the real prepared-execution path
+//!    ([`crate::exec::PreparedNetwork`], the requested backend);
+//! 3. **bit-identity-gate** each candidate on representative inputs —
+//!    both its prepared engine and the checked interpreter path
+//!    ([`crate::coordinator::run_network_functional`]) must reproduce
+//!    the **candidate-independent** naive-oracle expectation
+//!    ([`crate::layer::oracle::conv_ref`] + requantize), so even a
+//!    self-consistent codegen bug in one dataflow disqualifies it
+//!    before any timing counts;
+//! 4. time with warmup, repetition, and outlier-robust aggregation:
+//!    the median of N samples, re-measured (up to a retry budget) while
+//!    the relative spread `(max-min)/median` exceeds tolerance —
+//!    noisy rounds are replaced by their calmest re-run, never averaged
+//!    into the result.
+
+use std::time::Instant;
+
+use crate::coordinator::plan::{LayerPlan, NetworkPlan, PlanKind};
+use crate::coordinator::run_network_functional;
+use crate::dataflow::DataflowSpec;
+use crate::exec::{Backend, PreparedNetwork};
+use crate::layer::{ConvConfig, ConvKind, LayerConfig};
+use crate::machine::MachineConfig;
+use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use crate::util::stats::{median, spearman};
+
+use super::db::{layer_fingerprint, TuneEntry};
+use super::TuneConfig;
+
+/// Requantization shift applied during measurement (matches the bench
+/// harnesses; the dataflow ranking is shift-invariant).
+pub const TUNE_SHIFT: u32 = 9;
+
+/// One timed candidate.
+#[derive(Clone, Debug)]
+pub struct CandidateMeasurement {
+    pub spec: DataflowSpec,
+    /// Analytic model estimate (cycles) — the stage-1 ranking.
+    pub model_cycles: f64,
+    /// Median measured per-image seconds (`f64::INFINITY` when the
+    /// oracle gate disqualified the candidate).
+    pub median_sec: f64,
+    /// Relative spread of the accepted measurement round.
+    pub spread: f64,
+    /// Re-measurement rounds taken beyond the first.
+    pub retries: usize,
+    /// Timing samples in the accepted round (0 when disqualified).
+    pub samples: usize,
+    /// Bit-identical to the interpreter oracle on every probe input.
+    pub oracle_ok: bool,
+}
+
+/// The result of tuning one layer.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub cfg: ConvConfig,
+    pub pad: usize,
+    /// Candidates in **model-rank order** (ascending model cycles), so
+    /// `measurements[0]` is the analytic pick.
+    pub measurements: Vec<CandidateMeasurement>,
+    /// Index of the measured winner in `measurements`.
+    pub winner: usize,
+    /// Spearman rank correlation between model and measured latency
+    /// over the oracle-passing shortlist.
+    pub spearman: f64,
+}
+
+impl TuneOutcome {
+    pub fn winner(&self) -> &CandidateMeasurement {
+        &self.measurements[self.winner]
+    }
+
+    /// The analytic pick (shortlist is model-rank ordered).
+    pub fn model_pick(&self) -> &CandidateMeasurement {
+        &self.measurements[0]
+    }
+
+    /// Did measurement agree with the model's pick?
+    pub fn agrees_with_model(&self) -> bool {
+        self.winner == 0
+    }
+
+    /// The [`TuneEntry`] this outcome records.
+    pub fn entry(&self) -> TuneEntry {
+        let w = self.winner();
+        TuneEntry {
+            layer: self.cfg.name(),
+            pad: self.pad,
+            spec: w.spec.clone(),
+            model_cycles: w.model_cycles,
+            measured_sec: w.median_sec,
+            spread: w.spread,
+            samples: w.samples,
+        }
+    }
+}
+
+/// Measure the shortlisted dataflow candidates for one simple-conv
+/// layer and pick the empirically fastest. `cfg` must already be
+/// channel-padded for `machine` (the planner hands its padded config);
+/// `weights` defaults to a fingerprint-seeded random tensor so repeated
+/// tunings of the same layer measure identical numerics.
+pub fn tune_conv(
+    cfg: &ConvConfig,
+    pad: usize,
+    machine: &MachineConfig,
+    backend: Backend,
+    tcfg: &TuneConfig,
+    weights: Option<&WeightTensor>,
+) -> crate::Result<TuneOutcome> {
+    let c = machine.c_int8();
+    anyhow::ensure!(
+        cfg.kind == ConvKind::Simple,
+        "the tuner measures simple convs (got {:?}); depthwise/grouped kernels have no \
+         dataflow choice to tune",
+        cfg.kind
+    );
+    anyhow::ensure!(
+        cfg.in_channels % c == 0 && cfg.out_channels % c == 0,
+        "layer {} channels must align to block size {c} to prepare",
+        cfg.name()
+    );
+    anyhow::ensure!(
+        2 * pad < cfg.ih && 2 * pad < cfg.iw,
+        "pad {pad} leaves no unpadded input for layer {} ({}x{})",
+        cfg.name(),
+        cfg.ih,
+        cfg.iw
+    );
+
+    let fp = layer_fingerprint(cfg);
+    let weights = match weights {
+        Some(w) => {
+            anyhow::ensure!(
+                w.layout == WeightLayout::CKRSc { c },
+                "tuner weights for {} must be CKRSc with c={c}",
+                cfg.name()
+            );
+            w.clone()
+        }
+        None => WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            fp ^ 0x5eed,
+        ),
+    };
+
+    // Stage 1: heuristic-pruned exploration, shortlisted by model score
+    // ([`crate::explore::Exploration::shortlist`]).
+    let xcfg = crate::explore::ExploreConfig {
+        perf_sample: tcfg.perf_sample,
+        ..Default::default()
+    };
+    let shortlist = crate::explore::explore(cfg, machine, &xcfg).shortlist(tcfg.top_k);
+
+    // Representative inputs (fingerprint-seeded: deterministic probes),
+    // each paired with its **candidate-independent** expected output:
+    // the naive INT32 conv oracle requantized exactly like the conv
+    // path. Gating every candidate against this single ground truth
+    // (not against its own program's interpretation) means even a
+    // self-consistent codegen bug in one dataflow — interp and native
+    // agreeing on wrong bytes — cannot slip a byte-changing kernel
+    // into the db.
+    let in_shape =
+        ActShape::new(cfg.in_channels, cfg.ih - 2 * pad, cfg.iw - 2 * pad);
+    let probes: Vec<Probe> = (0..2u64)
+        .map(|i| {
+            let input =
+                ActTensor::random(in_shape, ActLayout::NCHWc { c }, fp.wrapping_add(i));
+            let padded = crate::coordinator::pad_act(&input, pad, cfg.in_channels, c);
+            let raw = crate::layer::oracle::conv_ref(cfg, &padded, &weights);
+            let expected =
+                crate::quant::requantize_relu(&raw, TUNE_SHIFT, ActLayout::NCHWc { c });
+            Probe { input, expected }
+        })
+        .collect();
+
+    let mut measurements = Vec::with_capacity(shortlist.len());
+    for (spec, model_cycles) in shortlist {
+        measurements.push(measure_candidate(
+            cfg, pad, machine, backend, tcfg, &weights, &spec, model_cycles, &probes,
+        )?);
+    }
+
+    let winner = measurements
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| m.oracle_ok)
+        .min_by(|a, b| a.1.median_sec.partial_cmp(&b.1.median_sec).unwrap())
+        .map(|(i, _)| i)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no candidate for {} passed the interpreter oracle gate",
+                cfg.name()
+            )
+        })?;
+
+    let ok: Vec<&CandidateMeasurement> =
+        measurements.iter().filter(|m| m.oracle_ok).collect();
+    let model: Vec<f64> = ok.iter().map(|m| m.model_cycles).collect();
+    let measured: Vec<f64> = ok.iter().map(|m| m.median_sec).collect();
+    let rho = spearman(&model, &measured);
+
+    Ok(TuneOutcome { cfg: *cfg, pad, measurements, winner, spearman: rho })
+}
+
+/// One measurement probe: an input and its candidate-independent
+/// expected output (naive oracle + requantize).
+struct Probe {
+    input: ActTensor,
+    expected: ActTensor,
+}
+
+/// Compile one candidate, gate it against the oracle, and time it.
+#[allow(clippy::too_many_arguments)]
+fn measure_candidate(
+    cfg: &ConvConfig,
+    pad: usize,
+    machine: &MachineConfig,
+    backend: Backend,
+    tcfg: &TuneConfig,
+    weights: &WeightTensor,
+    spec: &DataflowSpec,
+    model_cycles: f64,
+    probes: &[Probe],
+) -> crate::Result<CandidateMeasurement> {
+    // Same kernel + stats the planner will serve from a db entry for
+    // this spec (`tune::kernel_for_spec`): what is timed here is what
+    // gets deployed, by construction.
+    let (prog, stats) = super::kernel_for_spec(cfg, spec, machine, tcfg.perf_sample);
+    let mut lp = LayerPlan {
+        layer: LayerConfig::Conv(*cfg),
+        kind: PlanKind::Generated { spec: spec.clone(), prog, machine: *machine, pad },
+        inputs: Vec::new(),
+        stats,
+        weights: None,
+        packed: std::sync::OnceLock::new(),
+    };
+    lp.bind_weights(weights.clone());
+    let plan = NetworkPlan::chain(format!("tune-{}", spec.name()), vec![lp]);
+    let engine = PreparedNetwork::prepare_with(&plan, backend)?;
+    let mut arena = engine.new_arena();
+
+    // Oracle gate, before any timing counts: the prepared engine AND
+    // the checked interpreter path must both reproduce the naive-oracle
+    // expected bytes on every probe. The interpreter comparison keeps
+    // the classic interp-vs-native differential; the naive expectation
+    // pins both to a candidate-independent ground truth.
+    for probe in probes {
+        let functional = run_network_functional(&plan, &probe.input, TUNE_SHIFT)?;
+        let got = engine.run(&probe.input, TUNE_SHIFT, &mut arena)?;
+        if functional.data != probe.expected.data || got.data != probe.expected.data {
+            return Ok(CandidateMeasurement {
+                spec: spec.clone(),
+                model_cycles,
+                median_sec: f64::INFINITY,
+                spread: 0.0,
+                retries: 0,
+                samples: 0,
+                oracle_ok: false,
+            });
+        }
+    }
+
+    // Warmup (caches, branch predictors, first-touch page faults).
+    for i in 0..tcfg.warmup {
+        let input = &probes[i % probes.len()].input;
+        let _ = engine.run(input, TUNE_SHIFT, &mut arena)?;
+    }
+
+    // Median-of-N timing with spread-based retry: a round whose
+    // relative spread exceeds tolerance is re-run (up to the retry
+    // budget) and the calmest round wins.
+    let iters = tcfg.iters_per_rep.max(1);
+    let mut best: Option<(f64, f64)> = None; // (median_sec, spread)
+    let mut rounds = 0usize;
+    for _attempt in 0..=tcfg.max_retries {
+        rounds += 1;
+        let mut samples = Vec::with_capacity(tcfg.reps.max(1));
+        for s in 0..tcfg.reps.max(1) {
+            let t0 = Instant::now();
+            for i in 0..iters {
+                let input = &probes[(s + i) % probes.len()].input;
+                let _ = engine.run(input, TUNE_SHIFT, &mut arena)?;
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let med = median(&samples);
+        let spread = if med > 0.0 {
+            (crate::util::stats::max(&samples) - crate::util::stats::min(&samples)) / med
+        } else {
+            0.0
+        };
+        if best.map(|(_, s)| spread < s).unwrap_or(true) {
+            best = Some((med, spread));
+        }
+        if spread <= tcfg.spread_tolerance {
+            break;
+        }
+    }
+    // Rounds run beyond the first — the re-measurements that actually
+    // happened, whether or not the spread ever converged.
+    let retries = rounds - 1;
+    let (median_sec, spread) = best.expect("at least one measurement round ran");
+
+    Ok(CandidateMeasurement {
+        spec: spec.clone(),
+        model_cycles,
+        median_sec,
+        spread,
+        retries,
+        samples: tcfg.reps.max(1),
+        oracle_ok: true,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::padded_conv;
+
+    #[test]
+    fn tunes_a_small_conv_and_gates_on_the_oracle() {
+        let machine = MachineConfig::neon(128);
+        let cfg = padded_conv(&ConvConfig::simple(8, 8, 3, 3, 1, 16, 16), &machine);
+        let out = tune_conv(&cfg, 1, &machine, Backend::Native, &TuneConfig::quick(), None)
+            .expect("tiny conv must tune");
+        assert!(!out.measurements.is_empty());
+        assert!(out.winner < out.measurements.len());
+        let w = out.winner();
+        assert!(w.oracle_ok, "winner must have passed the oracle gate");
+        assert!(w.median_sec.is_finite() && w.median_sec > 0.0);
+        // Shortlist is model-rank ordered.
+        for pair in out.measurements.windows(2) {
+            assert!(pair[0].model_cycles <= pair[1].model_cycles);
+        }
+        assert!((-1.0..=1.0).contains(&out.spearman));
+    }
+
+    #[test]
+    fn rejects_untunable_kinds_and_misaligned_channels() {
+        let machine = MachineConfig::neon(128);
+        let dw = ConvConfig::depthwise(8, 8, 3, 3, 1, 16);
+        assert!(
+            tune_conv(&dw, 1, &machine, Backend::Native, &TuneConfig::quick(), None).is_err()
+        );
+        let misaligned = ConvConfig::simple(8, 8, 3, 3, 1, 16, 10);
+        assert!(
+            tune_conv(&misaligned, 1, &machine, Backend::Native, &TuneConfig::quick(), None)
+                .is_err()
+        );
+        // Oversized pad: an error, not a usize underflow.
+        let small = ConvConfig::simple(8, 8, 3, 3, 1, 16, 16);
+        assert!(
+            tune_conv(&small, 5, &machine, Backend::Native, &TuneConfig::quick(), None).is_err()
+        );
+    }
+
+    #[test]
+    fn outcome_entry_carries_the_winner() {
+        let machine = MachineConfig::neon(128);
+        let cfg = padded_conv(&ConvConfig::simple(6, 6, 3, 3, 1, 16, 16), &machine);
+        let out =
+            tune_conv(&cfg, 0, &machine, Backend::Interp, &TuneConfig::quick(), None).unwrap();
+        let entry = out.entry();
+        assert_eq!(entry.spec, out.winner().spec);
+        assert_eq!(entry.pad, 0);
+        assert!(entry.measured_sec > 0.0);
+    }
+}

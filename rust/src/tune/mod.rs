@@ -1,0 +1,337 @@
+//! The empirical autotuner: measured on-machine dataflow selection with
+//! a persistent tuning database.
+//!
+//! The exploration engine ([`crate::explore`]) prunes the dataflow
+//! space with the Table I heuristics and ranks survivors on the
+//! analytic [`crate::machine::PerfModel`] — but the model is calibrated
+//! to one reference core, and the plan a server executes was never
+//! validated against the hardware it actually runs on. This subsystem
+//! closes that loop (the PolyDL-style model+measurement combination):
+//!
+//! * [`measure`] — the **measurement harness**: takes the
+//!   heuristic-pruned top-K shortlist, prepares every candidate through
+//!   the real execution path, bit-identity-gates each against the
+//!   interpreter oracle, and times it with warmup + median-of-N +
+//!   spread-based retry.
+//! * [`db`] — the **persistent tuning database** ([`TuneDb`]):
+//!   human-readable versioned JSON keyed by (layer fingerprint,
+//!   [`crate::machine::MachineConfig`], backend), memoized in-process,
+//!   atomically rewritten on update.
+//! * [`report`] — the model-vs-measured sweep report behind `yflows
+//!   tune` and `benches/tune_bench.rs`.
+//!
+//! Consumers: the planner
+//! ([`crate::coordinator::PlannerOptions`]`::tune`) consults the db
+//! before trusting the model's pick; the server
+//! ([`crate::coordinator::ServerConfig`]`::tune`) additionally runs a
+//! **background tuning thread** that measures the hottest layers of a
+//! live plan without blocking serving and swaps the re-tuned engine in
+//! through the prepared-plan fingerprint path. With [`TuneMode::Off`]
+//! (the default) nothing changes: plans are fingerprint-identical to
+//! the untuned planner's.
+
+pub mod db;
+pub mod measure;
+pub mod report;
+
+pub use db::{layer_fingerprint, TuneDb, TuneEntry, TuneKey, SCHEMA_VERSION};
+pub use measure::{tune_conv, CandidateMeasurement, TuneOutcome, TUNE_SHIFT};
+
+use std::sync::{Arc, OnceLock};
+
+use crate::coordinator::plan::{NetworkPlan, PlanKind};
+use crate::exec::Backend;
+use crate::layer::LayerConfig;
+use crate::machine::PerfModel;
+
+/// How the planner/server uses empirical tuning.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum TuneMode {
+    /// No tuning: the analytic model's pick, exactly as before the
+    /// tuner existed (plan-for-plan fingerprint-identical).
+    #[default]
+    Off,
+    /// Consult the [`TuneDb`] and use recorded winners; never measure.
+    /// Misses fall back to the model's pick.
+    Cached,
+    /// Like [`TuneMode::Cached`], but measure-and-record on a miss
+    /// (planning blocks on measurement) — and, in the server, re-tune
+    /// hot layers in the background.
+    Measure,
+}
+
+impl TuneMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TuneMode::Off => "off",
+            TuneMode::Cached => "cached",
+            TuneMode::Measure => "measure",
+        }
+    }
+}
+
+/// Measurement effort knobs (see [`measure`]).
+#[derive(Clone, Copy, Debug)]
+pub struct TuneConfig {
+    /// Shortlist size: top-K candidates by model score (the model's
+    /// pick is always included as rank 0).
+    pub top_k: usize,
+    /// Untimed warmup runs per candidate.
+    pub warmup: usize,
+    /// Timing samples per measurement round (the median is kept).
+    pub reps: usize,
+    /// Images per timing sample (amortizes clock granularity for tiny
+    /// layers).
+    pub iters_per_rep: usize,
+    /// Extra measurement rounds allowed when the spread is noisy.
+    pub max_retries: usize,
+    /// Accepted relative spread `(max - min) / median` of a round.
+    pub spread_tolerance: f64,
+    /// `perf_sample` handed to the model when scoring the shortlist.
+    pub perf_sample: usize,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            top_k: 4,
+            warmup: 2,
+            reps: 5,
+            iters_per_rep: 4,
+            max_retries: 2,
+            spread_tolerance: 0.25,
+            perf_sample: 2,
+        }
+    }
+}
+
+impl TuneConfig {
+    /// Reduced effort: CI smoke runs and background tuning under load.
+    pub fn quick() -> TuneConfig {
+        TuneConfig {
+            top_k: 3,
+            warmup: 1,
+            reps: 3,
+            iters_per_rep: 1,
+            max_retries: 1,
+            spread_tolerance: 0.6,
+            perf_sample: 1,
+        }
+    }
+}
+
+/// The process-wide tuning database used when a consumer sets a tune
+/// mode without supplying its own db: file-backed at `$YFLOWS_TUNE_DB`
+/// when that is set (and readable), in-memory otherwise.
+pub fn global_tune_db() -> Arc<TuneDb> {
+    static DB: OnceLock<Arc<TuneDb>> = OnceLock::new();
+    DB.get_or_init(|| match std::env::var("YFLOWS_TUNE_DB") {
+        Ok(path) if !path.is_empty() => match TuneDb::open(&path) {
+            Ok(db) => Arc::new(db),
+            Err(e) => {
+                eprintln!(
+                    "yflows tune: cannot open tune db `{path}` ({e:#}); \
+                     falling back to an in-memory db"
+                );
+                Arc::new(TuneDb::in_memory())
+            }
+        },
+        _ => Arc::new(TuneDb::in_memory()),
+    })
+    .clone()
+}
+
+/// The spec a db entry names, when it is usable on this machine —
+/// `None` (with a warning) otherwise. Hand-edited db entries can be
+/// arbitrary; they must never panic a planner or server. Shared by the
+/// planner's tuned path and [`retune_plan`] so validation cannot drift
+/// between them.
+pub(crate) fn usable_entry_spec(
+    entry: &TuneEntry,
+    machine: &crate::machine::MachineConfig,
+) -> Option<crate::dataflow::DataflowSpec> {
+    if entry.spec.fits(machine) && entry.spec.is_sensible() {
+        return Some(entry.spec.clone());
+    }
+    eprintln!(
+        "yflows tune: db entry for {} names dataflow {} which does not fit this \
+         machine — using the model's pick",
+        entry.layer,
+        entry.spec.name()
+    );
+    None
+}
+
+/// Generate the kernel for a tuned spec and (re-)estimate its model
+/// stats. The measurement is ground truth, so the spec is generated
+/// exactly — no jam second-guessing. Shared by the planner's tuned
+/// program-cache fill and [`retune_plan`] so the two paths always
+/// produce the same (program, stats) for the same kernel.
+pub(crate) fn kernel_for_spec(
+    cfg: &crate::layer::ConvConfig,
+    spec: &crate::dataflow::DataflowSpec,
+    machine: &crate::machine::MachineConfig,
+    perf_sample: usize,
+) -> (crate::isa::Program, crate::machine::PerfStats) {
+    let prog = crate::codegen::generate(cfg, spec, machine);
+    let schedule = crate::codegen::schedule(cfg, machine);
+    let mut pm = PerfModel::neoverse_n1();
+    let stats = pm.estimate_layer(&prog, &schedule, perf_sample);
+    (prog, stats)
+}
+
+/// Rebuild `plan` with every generated-conv kernel replaced by its
+/// recorded tuning winner (when the db knows one for this machine +
+/// backend and it differs from the current kernel). Returns `None` when
+/// nothing changes. `perf_sample` feeds the re-estimated model stats of
+/// swapped kernels (pass the planner/tuner sampling in use). Weights
+/// and edges are preserved, so the result is servable immediately; its
+/// [`crate::coordinator::plan_fingerprint`] differs from the
+/// original's (program names encode the spec), which is what lets the
+/// server swap engines through the prepared-plan fingerprint path
+/// without cross-serving.
+pub fn retune_plan(
+    plan: &NetworkPlan,
+    db: &TuneDb,
+    backend: Backend,
+    perf_sample: usize,
+) -> Option<NetworkPlan> {
+    let mut out = plan.clone();
+    let mut changed = false;
+    for lp in &mut out.layers {
+        let (cfg, spec, machine, pad) = match (&lp.layer, &lp.kind) {
+            (LayerConfig::Conv(cfg), PlanKind::Generated { spec, machine, pad, .. }) => {
+                (*cfg, spec.clone(), *machine, *pad)
+            }
+            _ => continue,
+        };
+        let key = TuneKey::for_layer(&cfg, &machine, backend);
+        let Some(entry) = db.get(&key) else { continue };
+        if entry.spec == spec {
+            continue;
+        }
+        let Some(tuned_spec) = usable_entry_spec(&entry, &machine) else { continue };
+        let (prog, stats) = kernel_for_spec(&cfg, &tuned_spec, &machine, perf_sample);
+        lp.kind = PlanKind::Generated { spec: tuned_spec, prog, machine, pad };
+        lp.stats = stats;
+        changed = true;
+    }
+    changed.then_some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::{plan_fingerprint, Planner, PlannerOptions};
+    use crate::dataflow::{Anchor, DataflowSpec};
+    use crate::layer::ConvConfig;
+    use crate::machine::MachineConfig;
+    use crate::tensor::{WeightLayout, WeightShape, WeightTensor};
+
+    fn tiny_plan(machine: MachineConfig) -> NetworkPlan {
+        let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 16, 16);
+        let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
+        lp.bind_weights(WeightTensor::random(
+            WeightShape::new(16, 16, 3, 3),
+            WeightLayout::CKRSc { c: 16 },
+            11,
+        ));
+        NetworkPlan::chain("tiny", vec![lp])
+    }
+
+    #[test]
+    fn default_mode_is_off() {
+        assert_eq!(TuneMode::default(), TuneMode::Off);
+        assert_eq!(TuneMode::Measure.name(), "measure");
+    }
+
+    #[test]
+    fn retune_plan_is_none_without_entries_and_swaps_with_them() {
+        let machine = MachineConfig::neon(128);
+        let plan = tiny_plan(machine);
+        let db = TuneDb::in_memory();
+        assert!(retune_plan(&plan, &db, Backend::Native, 2).is_none());
+
+        // Record a *different* winner for the layer; retuning must swap
+        // the kernel and change the plan fingerprint.
+        let (cfg, pad, cur_spec) = match (&plan.layers[0].layer, &plan.layers[0].kind) {
+            (LayerConfig::Conv(c), PlanKind::Generated { spec, pad, .. }) => {
+                (*c, *pad, spec.clone())
+            }
+            _ => unreachable!(),
+        };
+        let other = DataflowSpec::basic(Anchor::Input);
+        assert_ne!(other, cur_spec);
+        let key = TuneKey::for_layer(&cfg, &machine, Backend::Native);
+        db.record(
+            key,
+            TuneEntry {
+                layer: cfg.name(),
+                pad,
+                spec: other.clone(),
+                model_cycles: 1.0,
+                measured_sec: 1e-6,
+                spread: 0.0,
+                samples: 3,
+            },
+        )
+        .unwrap();
+        let tuned = retune_plan(&plan, &db, Backend::Native, 2).expect("must retune");
+        assert_ne!(plan_fingerprint(&plan), plan_fingerprint(&tuned));
+        match &tuned.layers[0].kind {
+            PlanKind::Generated { spec, .. } => assert_eq!(*spec, other),
+            k => panic!("unexpected kind {}", k.name()),
+        }
+        // Weights survive the swap (the tuned plan is servable as-is).
+        assert!(tuned.layers[0].weights().is_some());
+        // An entry recorded for another backend does not apply.
+        assert!(retune_plan(&plan, &db, Backend::Interp, 2).is_none());
+        // Same-spec entries are a no-op.
+        let db2 = TuneDb::in_memory();
+        db2.record(
+            key,
+            TuneEntry {
+                layer: cfg.name(),
+                pad,
+                spec: cur_spec,
+                model_cycles: 1.0,
+                measured_sec: 1e-6,
+                spread: 0.0,
+                samples: 3,
+            },
+        )
+        .unwrap();
+        assert!(retune_plan(&plan, &db2, Backend::Native, 2).is_none());
+    }
+
+    #[test]
+    fn unfit_db_specs_are_ignored_not_fatal() {
+        let machine = MachineConfig::neon(512); // 8 vars: big aux cannot fit
+        let plan = tiny_plan(machine);
+        let (cfg, pad) = match (&plan.layers[0].layer, &plan.layers[0].kind) {
+            (LayerConfig::Conv(c), PlanKind::Generated { pad, .. }) => (*c, *pad),
+            _ => unreachable!(),
+        };
+        let db = TuneDb::in_memory();
+        let huge = DataflowSpec::extended(
+            Anchor::Output,
+            vec![(crate::dataflow::AuxKind::Weight, 30)],
+        );
+        assert!(!huge.fits(&machine));
+        db.record(
+            TuneKey::for_layer(&cfg, &machine, Backend::Native),
+            TuneEntry {
+                layer: cfg.name(),
+                pad,
+                spec: huge,
+                model_cycles: 1.0,
+                measured_sec: 1e-6,
+                spread: 0.0,
+                samples: 1,
+            },
+        )
+        .unwrap();
+        assert!(retune_plan(&plan, &db, Backend::Native, 2).is_none());
+    }
+}

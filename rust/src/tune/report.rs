@@ -1,0 +1,153 @@
+//! Model-vs-measured tuning report: sweep a layer set, measure the
+//! shortlists, and summarize how well the analytic ranking predicts the
+//! on-machine ranking — a direct, reproducible check of the paper's
+//! "OS + maximum reuse wins" claim on the host CPU. Backs the `yflows
+//! tune` CLI command and `benches/tune_bench.rs`.
+
+use crate::exec::Backend;
+use crate::layer::ConvConfig;
+use crate::machine::MachineConfig;
+use crate::util::stats::{geomean, mean};
+use crate::util::table::Table;
+
+use super::db::{TuneDb, TuneKey};
+use super::measure::tune_conv;
+use super::TuneConfig;
+
+/// One swept layer's model-vs-measured comparison.
+#[derive(Clone, Debug)]
+pub struct TuneReportRow {
+    pub layer: String,
+    /// The analytic model's pick (shortlist rank 0).
+    pub model_pick: String,
+    /// The empirically fastest candidate.
+    pub measured_pick: String,
+    pub agree: bool,
+    /// Spearman rank correlation between model and measured latency
+    /// over the oracle-passing shortlist.
+    pub spearman: f64,
+    /// Measured images/sec of the model's pick.
+    pub model_pick_ips: f64,
+    /// Measured images/sec of the measured winner.
+    pub measured_pick_ips: f64,
+    /// Winner is output-anchored with auxiliary reuse (the paper's
+    /// headline claim).
+    pub os_reuse_won: bool,
+}
+
+/// Tune every layer, optionally recording winners into `db`, and render
+/// the comparison table. Layers that cannot be measured (e.g. channel
+/// misalignment) are skipped with a warning rather than aborting the
+/// sweep.
+pub fn run_layers(
+    layers: &[ConvConfig],
+    machine: &MachineConfig,
+    backend: Backend,
+    tcfg: &TuneConfig,
+    db: Option<&TuneDb>,
+) -> (Table, Vec<TuneReportRow>) {
+    let mut t = Table::new(&[
+        "layer",
+        "model pick",
+        "measured pick",
+        "agree",
+        "spearman",
+        "model-pick img/s",
+        "best img/s",
+    ]);
+    let mut rows = Vec::new();
+    // Winners are collected and recorded in one batch at the end: an
+    // N-layer sweep rewrites a file-backed db once, not N times.
+    let mut recorded: Vec<(TuneKey, crate::tune::TuneEntry)> = Vec::new();
+    for cfg in layers {
+        let outcome = match tune_conv(cfg, 0, machine, backend, tcfg, None) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("yflows tune: skipping {} ({e:#})", cfg.name());
+                continue;
+            }
+        };
+        if db.is_some() {
+            recorded.push((TuneKey::for_layer(cfg, machine, backend), outcome.entry()));
+        }
+        let w = outcome.winner();
+        let m = outcome.model_pick();
+        let row = TuneReportRow {
+            layer: cfg.name(),
+            model_pick: m.spec.name(),
+            measured_pick: w.spec.name(),
+            agree: outcome.agrees_with_model(),
+            spearman: outcome.spearman,
+            model_pick_ips: if m.median_sec.is_finite() { 1.0 / m.median_sec } else { 0.0 },
+            measured_pick_ips: 1.0 / w.median_sec,
+            os_reuse_won: w.spec.anchor == crate::dataflow::Anchor::Output
+                && w.spec.aux_vars() > 0,
+        };
+        t.row(&[
+            row.layer.clone(),
+            row.model_pick.clone(),
+            row.measured_pick.clone(),
+            if row.agree { "yes".into() } else { "no".into() },
+            format!("{:.3}", row.spearman),
+            format!("{:.1}", row.model_pick_ips),
+            format!("{:.1}", row.measured_pick_ips),
+        ]);
+        rows.push(row);
+    }
+    if let (Some(db), false) = (db, recorded.is_empty()) {
+        // Nothing measured → nothing recorded: an empty batch would
+        // still bump the db epoch and rewrite the file for no change.
+        if let Err(e) = db.record_batch(recorded) {
+            eprintln!("yflows tune: could not record sweep winners ({e:#})");
+        }
+    }
+    (t, rows)
+}
+
+/// Aggregate summary of a sweep (mean rank correlation, model-agreement
+/// rate, the OS+reuse win fraction, and the measured cost of trusting
+/// the model blindly).
+pub fn summary(rows: &[TuneReportRow]) -> String {
+    if rows.is_empty() {
+        return "no layers measured".into();
+    }
+    let n = rows.len();
+    let rho = mean(&rows.iter().map(|r| r.spearman).collect::<Vec<_>>());
+    let agree = rows.iter().filter(|r| r.agree).count();
+    let os = rows.iter().filter(|r| r.os_reuse_won).count();
+    let gains: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.model_pick_ips > 0.0)
+        .map(|r| r.measured_pick_ips / r.model_pick_ips)
+        .collect();
+    format!(
+        "{n} layers: mean spearman(model, measured) = {rho:.3}; model pick measured fastest \
+         on {agree}/{n}; OS+reuse won {os}/{n}; measured winner is {:.3}x the model pick's \
+         throughput (geomean)",
+        geomean(&gains)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_a_tiny_sweep_and_records_to_db() {
+        let machine = MachineConfig::neon(128);
+        let layers = [
+            ConvConfig::simple(8, 8, 3, 3, 1, 16, 16),
+            ConvConfig::depthwise(8, 8, 3, 3, 1, 16), // skipped, not fatal
+        ];
+        let db = TuneDb::in_memory();
+        let (t, rows) =
+            run_layers(&layers, &machine, Backend::Native, &TuneConfig::quick(), Some(&db));
+        assert_eq!(rows.len(), 1, "depthwise must be skipped, simple measured");
+        assert_eq!(db.len(), 1);
+        let rendered = t.render();
+        assert!(rendered.contains("measured pick"));
+        let s = summary(&rows);
+        assert!(s.contains("1 layers"), "{s}");
+        assert_eq!(summary(&[]), "no layers measured");
+    }
+}

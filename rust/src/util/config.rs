@@ -102,6 +102,19 @@ impl Config {
             .map(|m| m.keys().map(|k| k.as_str()).collect())
             .unwrap_or_default()
     }
+
+    /// Keys of `section` that are not in `known` — config-typo
+    /// detection. Consumers warn on these instead of silently ignoring
+    /// them (a misspelt key would otherwise quietly mean "use the
+    /// default", which is exactly the failure mode a config file exists
+    /// to prevent).
+    pub fn unknown_keys(&self, section: &str, known: &[&str]) -> Vec<String> {
+        self.keys(section)
+            .into_iter()
+            .filter(|k| !known.contains(k))
+            .map(str::to_string)
+            .collect()
+    }
 }
 
 /// Build a [`crate::report::Sweep`] from the `[sweep]` section, falling
@@ -117,8 +130,26 @@ pub fn sweep_from(cfg: &Config) -> crate::report::Sweep {
     }
 }
 
+/// The `[planner]` keys [`planner_from`] understands; anything else in
+/// the section is warned about (see [`Config::unknown_keys`]).
+pub const PLANNER_KEYS: &[&str] = &[
+    "vector_length",
+    "explore_each_layer",
+    "perf_sample",
+    "backend",
+    "tune",
+];
+
 /// Build [`crate::coordinator::plan::PlannerOptions`] from `[planner]`.
+/// Unrecognized keys (not just unrecognized *values*) warn loudly: a
+/// `tunee = measure` typo must not silently plan untuned.
 pub fn planner_from(cfg: &Config) -> crate::coordinator::plan::PlannerOptions {
+    for key in cfg.unknown_keys("planner", PLANNER_KEYS) {
+        eprintln!(
+            "yflows config: unknown [planner] key `{key}` ignored (known keys: {})",
+            PLANNER_KEYS.join(", ")
+        );
+    }
     let vl = cfg.get_parse("planner", "vector_length", 128usize);
     crate::coordinator::plan::PlannerOptions {
         machine: crate::machine::MachineConfig::neon(vl),
@@ -145,6 +176,23 @@ pub fn planner_from(cfg: &Config) -> crate::coordinator::plan::PlannerOptions {
                      native backend (use `interp` for the reference interpreter)"
                 );
                 crate::exec::Backend::Native
+            }
+        },
+        // `tune = cached|measure` turns on empirical tuning (db-backed
+        // measured dataflow selection); absent or `off` keeps the
+        // analytic planner exactly. Same loud-warning policy as
+        // `backend`: a typo must not silently disable tuning.
+        tune: match cfg.get("planner", "tune") {
+            None => crate::tune::TuneMode::Off,
+            Some(s) if s.eq_ignore_ascii_case("off") => crate::tune::TuneMode::Off,
+            Some(s) if s.eq_ignore_ascii_case("cached") => crate::tune::TuneMode::Cached,
+            Some(s) if s.eq_ignore_ascii_case("measure") => crate::tune::TuneMode::Measure,
+            Some(other) => {
+                eprintln!(
+                    "yflows config: unknown [planner] tune mode `{other}` — tuning stays \
+                     off (use `off`, `cached`, or `measure`)"
+                );
+                crate::tune::TuneMode::Off
             }
         },
         ..Default::default()
@@ -209,5 +257,37 @@ vls = 128, 512
         let p = planner_from(&c);
         assert_eq!(p.machine.vec_var_bits, 256);
         assert!(p.explore_each_layer);
+        assert_eq!(p.tune, crate::tune::TuneMode::Off);
+    }
+
+    #[test]
+    fn parses_tune_modes() {
+        for (text, want) in [
+            ("[planner]\ntune = cached\n", crate::tune::TuneMode::Cached),
+            ("[planner]\ntune = Measure\n", crate::tune::TuneMode::Measure),
+            ("[planner]\ntune = off\n", crate::tune::TuneMode::Off),
+            // Unknown value: warns, stays off — never silently tunes.
+            ("[planner]\ntune = maybe\n", crate::tune::TuneMode::Off),
+        ] {
+            let c = Config::parse(text).unwrap();
+            assert_eq!(planner_from(&c).tune, want, "{text}");
+        }
+    }
+
+    #[test]
+    fn flags_unknown_planner_keys() {
+        // `tunee` is the §V-sweep typo this check exists for.
+        let c = Config::parse("[planner]\ntunee = measure\nvector_length = 128\n").unwrap();
+        assert_eq!(c.unknown_keys("planner", PLANNER_KEYS), vec!["tunee".to_string()]);
+        // Every known key passes clean.
+        let all = PLANNER_KEYS
+            .iter()
+            .map(|k| format!("{k} = 1"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let c = Config::parse(&format!("[planner]\n{all}\n")).unwrap();
+        assert!(c.unknown_keys("planner", PLANNER_KEYS).is_empty());
+        // Missing section: nothing to flag.
+        assert!(Config::default().unknown_keys("planner", PLANNER_KEYS).is_empty());
     }
 }

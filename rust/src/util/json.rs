@@ -1,6 +1,8 @@
-//! Minimal JSON writer (serde_json is unavailable offline). Only the
-//! subset needed to serialize experiment reports and execution plans:
-//! objects, arrays, strings, numbers, booleans.
+//! Minimal JSON reader/writer (serde_json is unavailable offline). Only
+//! the subset needed to serialize experiment reports, execution plans,
+//! and the tuning database: objects, arrays, strings, numbers,
+//! booleans — written compactly and parsed back with a small
+//! recursive-descent parser ([`Json::parse`]).
 
 use std::collections::BTreeMap;
 use std::fmt::Write;
@@ -42,6 +44,65 @@ impl Json {
 
     pub fn from_u64(v: u64) -> Json {
         Json::Num(v as f64)
+    }
+
+    /// Parse a JSON document. Accepts exactly what [`Json::render`]
+    /// emits (plus insignificant whitespace); numbers are f64, like the
+    /// writer. Errors carry a byte offset for diagnostics.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing content at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Numeric field as an exact non-negative integer (None when the
+    /// value is fractional, negative, or too large for f64 exactness).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x < 9e15 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
     }
 
     /// Serialize to a compact string.
@@ -105,6 +166,210 @@ impl Json {
     }
 }
 
+/// Nesting depth bound of [`Json::parse`] (far beyond any document
+/// this crate writes; a bound turns runaway nesting into `Err`).
+const MAX_DEPTH: usize = 128;
+
+/// Recursive-descent JSON parser over raw bytes.
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected `{}` at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        // Each nesting level is one recursion frame; a corrupted or
+        // adversarial document must error, never overflow the stack.
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} levels at byte {}", self.pos));
+        }
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            _ => Err(format!("unexpected value at byte {}", self.pos)),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let span = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| format!("invalid number at byte {start}"))?;
+        span.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("invalid number `{span}` at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let code = self.hex4()?;
+                            // Surrogate pairs (the writer never emits
+                            // them, but accept well-formed input). The
+                            // second escape must be a low surrogate —
+                            // anything else is a strict parse error,
+                            // never a wrapped subtraction.
+                            let ch = if (0xD800..0xDC00).contains(&code) {
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err("invalid low surrogate in \\u pair".into());
+                                }
+                                char::from_u32(0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00))
+                            } else {
+                                char::from_u32(code)
+                            };
+                            out.push(ch.ok_or("invalid \\u escape")?);
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.pos - 1)),
+                    }
+                }
+                Some(_) => {
+                    // Copy a maximal run of plain UTF-8 bytes.
+                    let start = self.pos;
+                    while let Some(b) = self.peek() {
+                        if b == b'"' || b == b'\\' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    let chunk = std::str::from_utf8(&self.bytes[start..self.pos])
+                        .map_err(|_| format!("invalid UTF-8 in string at byte {start}"))?;
+                    out.push_str(chunk);
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let span = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| "invalid \\u escape".to_string())?;
+        let code =
+            u32::from_str_radix(span, 16).map_err(|_| "invalid \\u escape".to_string())?;
+        self.pos += 4;
+        Ok(code)
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected `,` or `]` at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value(depth + 1)?;
+            map.insert(key, value);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                _ => return Err(format!("expected `,` or `}}` at byte {}", self.pos)),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +395,70 @@ mod tests {
     #[test]
     fn integers_render_without_fraction() {
         assert_eq!(Json::from_u64(42).render(), "42");
+    }
+
+    #[test]
+    fn parse_round_trips_render() {
+        let mut o = Json::obj();
+        o.set("name", Json::s("OS+wgt5"))
+            .set("x", Json::Num(1.25))
+            .set("n", Json::from_u64(7))
+            .set("flag", Json::Bool(false))
+            .set("none", Json::Null)
+            .set("list", Json::Arr(vec![Json::s("a\"b\n"), Json::from_u64(2)]));
+        let text = o.render();
+        assert_eq!(Json::parse(&text).unwrap(), o);
+        // And with interleaved whitespace.
+        let spaced = text.replace(',', " ,\n\t ").replace(':', " : ");
+        assert_eq!(Json::parse(&spaced).unwrap(), o);
+    }
+
+    #[test]
+    fn parse_accessors() {
+        let v = Json::parse(r#"{"a": [1, 2.5], "s": "hi", "b": true}"#).unwrap();
+        assert_eq!(v.get("s").and_then(Json::as_str), Some("hi"));
+        assert_eq!(v.get("b").and_then(Json::as_bool), Some(true));
+        let arr = v.get("a").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[0].as_u64(), Some(1));
+        assert_eq!(arr[1].as_f64(), Some(2.5));
+        assert_eq!(arr[1].as_u64(), None); // fractional
+        assert!(v.get("missing").is_none());
+        assert!(Json::Num(-1.0).as_u64().is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("{}{}").is_err()); // trailing content
+        assert!(Json::parse("nope").is_err());
+        assert!(Json::parse("1e").is_err());
+    }
+
+    #[test]
+    fn parse_bounds_nesting_depth() {
+        // Moderate nesting parses fine...
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
+        // ...runaway nesting is an Err, never a stack overflow.
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.contains("nesting deeper"), "{err}");
+    }
+
+    #[test]
+    fn parse_unicode_escapes() {
+        assert_eq!(Json::parse(r#""a\u00e9A""#).unwrap(), Json::s("a\u{e9}A"));
+        // Surrogate pair (writer never emits these, reader accepts).
+        assert_eq!(Json::parse(r#""\ud83d\ude00""#).unwrap(), Json::s("\u{1F600}"));
+        // Raw multibyte UTF-8 passes through untouched.
+        assert_eq!(Json::parse("\"é😀\"").unwrap(), Json::s("é😀"));
+        assert!(Json::parse(r#""\ud83d""#).is_err()); // lone high surrogate
+        // High surrogate followed by a non-low-surrogate escape: a
+        // strict error, not a wrapped subtraction.
+        assert!(Json::parse(r#""\ud83dA""#).is_err());
+        assert!(Json::parse(r#""\ud800\udbff""#).is_err()); // high + high
+        assert!(Json::parse(r#""\ude00""#).is_err()); // lone low surrogate
     }
 }

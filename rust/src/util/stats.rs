@@ -53,6 +53,54 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// Fractional ranks of `xs` (1-based, ties get the average rank) — the
+/// rank transform under Spearman correlation.
+pub fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    order.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut out = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && xs[order[j + 1]] == xs[order[i]] {
+            j += 1;
+        }
+        // Positions i..=j hold an equal run: average their 1-based ranks.
+        let rank = (i + 1 + j + 1) as f64 / 2.0;
+        for &idx in &order[i..=j] {
+            out[idx] = rank;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Spearman rank correlation of two equally-long samples, in [-1, 1]
+/// (Pearson correlation of the tie-averaged rank transforms). Returns
+/// 0.0 for degenerate inputs (length < 2 or a constant side). The
+/// tuner reports this between model-predicted and measured latency
+/// rankings.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len(), "spearman needs paired samples");
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let (rx, ry) = (ranks(xs), ranks(ys));
+    let (mx, my) = (mean(&rx), mean(&ry));
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (a, b) in rx.iter().zip(&ry) {
+        cov += (a - mx) * (b - my);
+        vx += (a - mx) * (a - mx);
+        vy += (b - my) * (b - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx * vy).sqrt()
+}
+
 /// Min / max helpers that ignore NaN-free invariants (inputs are ours).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
@@ -133,5 +181,27 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(median(&[]), 0.0);
         assert_eq!(geomean(&[]), 0.0);
+        assert_eq!(spearman(&[], &[]), 0.0);
+        assert_eq!(spearman(&[1.0], &[2.0]), 0.0);
+    }
+
+    #[test]
+    fn ranks_average_ties() {
+        assert_eq!(ranks(&[10.0, 30.0, 20.0]), vec![1.0, 3.0, 2.0]);
+        assert_eq!(ranks(&[5.0, 5.0, 1.0]), vec![2.5, 2.5, 1.0]);
+    }
+
+    #[test]
+    fn spearman_extremes_and_ties() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((spearman(&xs, &[10.0, 20.0, 30.0, 40.0]) - 1.0).abs() < 1e-12);
+        assert!((spearman(&xs, &[9.0, 7.0, 5.0, 3.0]) + 1.0).abs() < 1e-12);
+        // Monotone but nonlinear is still a perfect rank match.
+        assert!((spearman(&xs, &[1.0, 100.0, 101.0, 1e6]) - 1.0).abs() < 1e-12);
+        // Constant side degenerates to 0, not NaN.
+        assert_eq!(spearman(&xs, &[7.0, 7.0, 7.0, 7.0]), 0.0);
+        // A tie dilutes but does not destroy correlation.
+        let r = spearman(&xs, &[1.0, 2.0, 2.0, 4.0]);
+        assert!(r > 0.8 && r < 1.0, "{r}");
     }
 }

@@ -1,0 +1,321 @@
+//! Integration suite for the empirical autotuner (`yflows::tune`):
+//!
+//! * every measured winner is **bit-identical to the reference
+//!   oracle** — re-verified here end-to-end, independent of the
+//!   harness's internal gate;
+//! * `TuneMode::Off` reproduces today's plans exactly (fingerprint
+//!   equality), even with a populated tuning db in reach;
+//! * `TuneDb` round-trips through disk and rejects stale schema
+//!   versions / mismatched machine fingerprints instead of silently
+//!   serving them;
+//! * background tuning under concurrent serving stays bit-identical to
+//!   unbatched execution, across the live engine swap.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use yflows::coordinator::{
+    self,
+    plan::{plan_fingerprint, plan_network_uncached, PlanKind, PlannerOptions},
+    serve::{Server, ServerConfig},
+};
+use yflows::dataflow::{Anchor, DataflowSpec};
+use yflows::exec::{Backend, PreparedNetwork};
+use yflows::layer::{ConvConfig, LayerConfig};
+use yflows::machine::MachineConfig;
+use yflows::nets::Network;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::tune::{
+    tune_conv, TuneConfig, TuneDb, TuneEntry, TuneKey, TuneMode, TUNE_SHIFT,
+};
+
+fn temp_db_path(tag: &str) -> std::path::PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "yflows-tune-it-{tag}-{}-{}.json",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// A small chain network whose convs the planner gives generated
+/// kernels (channel counts aligned to the 128-bit block size).
+fn small_net() -> Network {
+    Network::chain_at(
+        "tune-it-net",
+        vec![
+            LayerConfig::Conv(ConvConfig::simple(10, 10, 3, 3, 1, 16, 32)),
+            LayerConfig::Conv(ConvConfig::simple(10, 10, 3, 3, 1, 32, 32)),
+        ],
+        (8, 8),
+    )
+}
+
+#[test]
+fn measured_winner_is_bit_identical_to_the_oracle() {
+    let machine = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(9, 9, 3, 3, 1, 16, 16);
+    for backend in [Backend::Native, Backend::Interp] {
+        let outcome =
+            tune_conv(&cfg, 1, &machine, backend, &TuneConfig::quick(), None).expect("tunes");
+        let winner = outcome.winner();
+        assert!(winner.oracle_ok);
+
+        // Re-verify independently: rebuild the winner's kernel, prepare
+        // it, and check bytes against the checked functional path on
+        // fresh inputs (not the harness's probe inputs).
+        let prog = yflows::codegen::generate(&cfg, &winner.spec, &machine);
+        let mut planner = yflows::coordinator::plan::Planner::new(PlannerOptions {
+            machine,
+            ..Default::default()
+        });
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 1);
+        lp.kind = PlanKind::Generated { spec: winner.spec.clone(), prog, machine, pad: 1 };
+        lp.bind_weights(WeightTensor::random(
+            WeightShape::new(16, 16, 3, 3),
+            WeightLayout::CKRSc { c: 16 },
+            77,
+        ));
+        let plan = yflows::coordinator::plan::NetworkPlan::chain("verify", vec![lp]);
+        let engine = PreparedNetwork::prepare_with(&plan, backend).expect("winner prepares");
+        let mut arena = engine.new_arena();
+        for seed in 100..104u64 {
+            let input =
+                ActTensor::random(ActShape::new(16, 7, 7), ActLayout::NCHWc { c: 16 }, seed);
+            let reference =
+                coordinator::run_network_functional(&plan, &input, TUNE_SHIFT).unwrap();
+            let got = engine.run(&input, TUNE_SHIFT, &mut arena).unwrap();
+            assert_eq!(
+                reference.data, got.data,
+                "winner {} diverges from the oracle on {backend:?}",
+                winner.spec.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn tune_mode_off_reproduces_todays_plans_exactly() {
+    let net = small_net();
+    let baseline = plan_network_uncached(&net, PlannerOptions::default());
+
+    // A populated db in reach: Off must not even look at it.
+    let db = Arc::new(TuneDb::in_memory());
+    let machine = MachineConfig::neon(128);
+    for lp in &baseline.layers {
+        if let (LayerConfig::Conv(cfg), PlanKind::Generated { pad, .. }) = (&lp.layer, &lp.kind)
+        {
+            db.record(
+                TuneKey::for_layer(cfg, &machine, Backend::default()),
+                TuneEntry {
+                    layer: cfg.name(),
+                    pad: *pad,
+                    spec: DataflowSpec::basic(Anchor::Input),
+                    model_cycles: 1.0,
+                    measured_sec: 1e-9,
+                    spread: 0.0,
+                    samples: 3,
+                },
+            )
+            .unwrap();
+        }
+    }
+    assert!(db.len() >= 2);
+    let off = plan_network_uncached(
+        &net,
+        PlannerOptions {
+            tune: TuneMode::Off,
+            tune_db: Some(Arc::clone(&db)),
+            ..Default::default()
+        },
+    );
+    assert_eq!(
+        plan_fingerprint(&baseline),
+        plan_fingerprint(&off),
+        "TuneMode::Off must be plan-for-plan identical to the pre-tuner planner"
+    );
+
+    // And the same db under Cached *does* change the plan — the off
+    // equality above is meaningful, not vacuous.
+    let cached = plan_network_uncached(
+        &net,
+        PlannerOptions {
+            tune: TuneMode::Cached,
+            tune_db: Some(db),
+            ..Default::default()
+        },
+    );
+    assert_ne!(plan_fingerprint(&baseline), plan_fingerprint(&cached));
+    for lp in &cached.layers {
+        if let PlanKind::Generated { spec, .. } = &lp.kind {
+            assert_eq!(*spec, DataflowSpec::basic(Anchor::Input));
+        }
+    }
+}
+
+#[test]
+fn measure_mode_records_and_cached_replans_identically() {
+    let net = small_net();
+    let db = Arc::new(TuneDb::in_memory());
+    let opts = |mode| PlannerOptions {
+        tune: mode,
+        tune_db: Some(Arc::clone(&db)),
+        tune_config: TuneConfig::quick(),
+        ..Default::default()
+    };
+    let measured = plan_network_uncached(&net, opts(TuneMode::Measure));
+    assert_eq!(db.len(), 2, "both generated convs must be measured and recorded");
+    // A Cached replan off the now-populated db picks the same kernels.
+    let cached = plan_network_uncached(&net, opts(TuneMode::Cached));
+    assert_eq!(plan_fingerprint(&measured), plan_fingerprint(&cached));
+    // Measure again: everything hits the db, nothing re-measures.
+    let epoch = db.epoch();
+    let again = plan_network_uncached(&net, opts(TuneMode::Measure));
+    assert_eq!(plan_fingerprint(&measured), plan_fingerprint(&again));
+    assert_eq!(db.epoch(), epoch, "db hits must not re-record");
+}
+
+#[test]
+fn tune_db_round_trips_and_rejects_stale_or_mismatched_state() {
+    let path = temp_db_path("roundtrip");
+    let machine = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 16, 32);
+    let key = TuneKey::for_layer(&cfg, &machine, Backend::Native);
+    let entry = TuneEntry {
+        layer: cfg.name(),
+        pad: 1,
+        spec: DataflowSpec::optimized_os(&machine, 9),
+        model_cycles: 9.9e4,
+        measured_sec: 1.2e-5,
+        spread: 0.03,
+        samples: 5,
+    };
+    {
+        let db = TuneDb::open(&path).unwrap();
+        db.record(key, entry.clone()).unwrap();
+    }
+    // Round trip: a fresh process (simulated: fresh open) serves it.
+    let db = TuneDb::open(&path).unwrap();
+    assert_eq!(db.get(&key), Some(entry));
+    // Mismatched machine fingerprint: recorded for NEON-128, asked for
+    // NEON-256 — never served.
+    let other = TuneKey { machine: MachineConfig::neon(256), ..key };
+    assert_eq!(db.get(&other), None);
+
+    // Stale schema: rejected at open with a pointed error, not skipped.
+    let stale = temp_db_path("stale");
+    let bumped = std::fs::read_to_string(&path)
+        .unwrap()
+        .replace("\"schema_version\":1", "\"schema_version\":0");
+    std::fs::write(&stale, bumped).unwrap();
+    let err = TuneDb::open(&stale).unwrap_err().to_string();
+    assert!(err.contains("schema_version"), "{err}");
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&stale).ok();
+}
+
+#[test]
+fn background_tuning_under_concurrent_serving_stays_bit_identical() {
+    const SHIFT: u32 = 8;
+    const THREADS: usize = 3;
+    const PER_THREAD: usize = 24;
+    let machine = MachineConfig::neon(128);
+
+    // A deliberately mistuned plan (basic-IS kernel) so the tuner is
+    // guaranteed to find a different winner and swap mid-serving.
+    let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 16);
+    let mut planner =
+        yflows::coordinator::plan::Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 1);
+    let basic = DataflowSpec::basic(Anchor::Input);
+    lp.kind = PlanKind::Generated {
+        spec: basic.clone(),
+        prog: yflows::codegen::generate(&cfg, &basic, &machine),
+        machine,
+        pad: 1,
+    };
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(16, 16, 3, 3),
+        WeightLayout::CKRSc { c: 16 },
+        321,
+    ));
+    let plan = yflows::coordinator::plan::NetworkPlan::chain("bg-tune", vec![lp]);
+
+    fn input_for(seed: u64) -> ActTensor {
+        ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed)
+    }
+    let reference: Vec<ActTensor> = (0..(THREADS * PER_THREAD) as u64)
+        .map(|seed| {
+            coordinator::run_network_functional(&plan, &input_for(seed), SHIFT).unwrap()
+        })
+        .collect();
+
+    let db = Arc::new(TuneDb::in_memory());
+    let server = Server::start_with(
+        plan,
+        ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            batch_deadline: Duration::from_millis(5),
+            requant_shift: SHIFT,
+            tune: TuneMode::Measure,
+            tune_db: Some(Arc::clone(&db)),
+            tune_config: TuneConfig::quick(),
+            tune_hot_layers: 1,
+            tune_min_requests: 1,
+            ..Default::default()
+        },
+    );
+    assert!(server.is_prepared());
+
+    // Concurrent submitters racing the tuner's measurement + swap; each
+    // response must equal its precomputed unbatched reference whether
+    // it ran on the old engine or the re-tuned one.
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let server = &server;
+            let reference = &reference;
+            scope.spawn(move || {
+                for k in 0..PER_THREAD {
+                    let id = t * PER_THREAD + k;
+                    let out = server
+                        .submit(input_for(id as u64))
+                        .recv()
+                        .expect("server dropped reply")
+                        .expect("inference failed");
+                    assert_eq!(
+                        out.data, reference[id].data,
+                        "request {id}: tuned serving diverged from unbatched"
+                    );
+                }
+            });
+        }
+    });
+
+    // Give the tuner time to finish its swap, still under traffic.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut seed = (THREADS * PER_THREAD) as u64;
+    while server.metrics.lock().unwrap().tune_swaps == 0 {
+        assert!(Instant::now() < deadline, "background tuner never swapped");
+        let out = server.submit(input_for(seed % 8)).recv().unwrap().unwrap();
+        assert_eq!(out.data, reference[(seed % 8) as usize].data);
+        seed += 1;
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // Post-swap traffic is still byte-identical.
+    for id in 0..8u64 {
+        let out = server.submit(input_for(id)).recv().unwrap().unwrap();
+        assert_eq!(out.data, reference[id as usize].data, "post-swap request {id}");
+    }
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.tune_swaps, 1);
+    assert!(!metrics.tuned_layers.is_empty());
+    assert_eq!(db.len(), 1);
+    // The recorded winner is not the mistuned kernel we started with.
+    let key = TuneKey::for_layer(&cfg, &machine, Backend::default());
+    let recorded = db.get(&key).expect("winner recorded");
+    assert_ne!(recorded.spec, basic);
+}
