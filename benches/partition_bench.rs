@@ -1,0 +1,198 @@
+//! Bench: intra-layer partitioned execution vs the single-core path.
+//!
+//! For each layer in the sweep, the same weight-bound plan is prepared
+//! unpartitioned (the baseline) and with 2/4/8 forced output-band tiles.
+//! Every partitioned engine's outputs are asserted **bit-identical** to
+//! the baseline on the benchmark inputs (the partitioning contract),
+//! then per-image latency is measured with `run_with` giving each
+//! partitioned layer as many scoped threads as it has tiles — the
+//! single-image latency axis that `run_batch`'s image fan-out cannot
+//! touch.
+//!
+//! Sweep: the paper-§V-shaped conv set — 3×3 s1, 3×3 s2, 1×1
+//! (dense-shaped), depthwise 3×3, grouped 3×3 — at 128-bit vectors.
+//!
+//! Modes:
+//! * `--smoke` — CI mode: bit-identity gate + one timed round per
+//!   layer/tile count, no file side effects.
+//! * `--json [PATH]` — additionally write a BENCH_6.json-style record
+//!   (default path `BENCH_6.json`): per-layer images/sec at each tile
+//!   count, scaling vs single-core, and the host's core count.
+//!
+//! Run: `cargo bench --bench partition_bench [-- --smoke|--json]`
+
+use std::time::Instant;
+
+#[path = "common/mod.rs"]
+mod common;
+
+use yflows::coordinator::plan::{NetworkPlan, Planner, PlannerOptions};
+use yflows::exec::{Partition, PreparedNetwork};
+use yflows::layer::{ConvConfig, LayerConfig};
+use yflows::machine::MachineConfig;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::bench::black_box;
+use yflows::util::json::Json;
+
+const SHIFT: u32 = 9;
+const TILE_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+struct SweepLayer {
+    name: &'static str,
+    machine: MachineConfig,
+    plan: NetworkPlan,
+    input_shape: ActShape,
+}
+
+fn conv_layer(
+    name: &'static str,
+    machine: MachineConfig,
+    cfg: ConvConfig,
+    pad: usize,
+    seed: u64,
+) -> SweepLayer {
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), pad);
+    let depthwise = cfg.groups == cfg.in_channels && cfg.groups > 1;
+    lp.bind_weights(if depthwise {
+        WeightTensor::random(
+            WeightShape::new(1, cfg.in_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRS,
+            seed,
+        )
+    } else {
+        WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            seed,
+        )
+    });
+    let input_shape = ActShape::new(cfg.in_channels, cfg.ih - 2 * pad, cfg.iw - 2 * pad);
+    SweepLayer { name, machine, plan: NetworkPlan::chain(name, vec![lp]), input_shape }
+}
+
+fn sweep(smoke: bool) -> Vec<SweepLayer> {
+    let m = MachineConfig::neon(128);
+    if smoke {
+        // Tiny shapes: the gate still exercises every kernel kind.
+        return vec![
+            conv_layer("conv3x3-s1", m, ConvConfig::simple(10, 10, 3, 3, 1, 16, 32), 1, 61),
+            conv_layer("depthwise3x3", m, ConvConfig::depthwise(10, 10, 3, 3, 1, 32), 1, 62),
+            conv_layer("grouped3x3-g2", m, ConvConfig::grouped(10, 10, 3, 3, 1, 32, 32, 2), 1, 63),
+        ];
+    }
+    vec![
+        conv_layer("conv3x3-s1", m, ConvConfig::simple(30, 30, 3, 3, 1, 32, 64), 1, 61),
+        conv_layer("conv3x3-s2", m, ConvConfig::simple(29, 29, 3, 3, 2, 32, 64), 1, 62),
+        conv_layer("conv1x1", m, ConvConfig::simple(14, 14, 1, 1, 1, 64, 128), 0, 63),
+        conv_layer("depthwise3x3", m, ConvConfig::depthwise(30, 30, 3, 3, 1, 64), 1, 64),
+        conv_layer("grouped3x3-g4", m, ConvConfig::grouped(16, 16, 3, 3, 1, 64, 64, 4), 1, 65),
+    ]
+}
+
+/// Per-image throughput of `engine` with `intra` tile threads.
+fn images_per_sec(
+    engine: &PreparedNetwork,
+    inputs: &[ActTensor],
+    rounds: usize,
+    intra: usize,
+) -> f64 {
+    let mut arena = engine.new_arena();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for input in inputs {
+            black_box(engine.run_with(input, SHIFT, &mut arena, intra).expect("bench run"));
+        }
+    }
+    (inputs.len() * rounds) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let common::BenchArgs { smoke, json_path } = common::parse_args("BENCH_6.json");
+
+    let images: usize = if smoke { 2 } else { 8 };
+    let rounds: usize = if smoke { 1 } else { 30 };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let mut layer_rows: Vec<Json> = Vec::new();
+    println!("== partition_bench: single-core vs 2/4/8 output-band tiles ({cores} cores) ==");
+    for layer in sweep(smoke) {
+        let c = layer.machine.c_int8();
+        let inputs: Vec<ActTensor> = (0..images as u64)
+            .map(|s| ActTensor::random(layer.input_shape, ActLayout::NCHWc { c }, 2000 + s))
+            .collect();
+        let baseline = PreparedNetwork::prepare(&layer.plan).expect("baseline engine");
+        let mut arena = baseline.new_arena();
+        let want: Vec<Vec<i8>> = inputs
+            .iter()
+            .map(|i| baseline.run(i, SHIFT, &mut arena).expect("baseline run").data)
+            .collect();
+
+        let mut row = Json::obj();
+        row.set("layer", Json::s(layer.name));
+        let mut tile_rows: Vec<Json> = Vec::new();
+        let mut base_ips = 0.0f64;
+        for tiles in TILE_COUNTS {
+            let mut plan = layer.plan.clone();
+            plan.layers[0].partition = Partition::banded(tiles);
+            let engine = PreparedNetwork::prepare(&plan).expect("partitioned engine");
+
+            // Correctness gate: partitioned output bytes == baseline.
+            let mut arena = engine.new_arena();
+            for (i, input) in inputs.iter().enumerate() {
+                let got = engine.run_with(input, SHIFT, &mut arena, tiles).expect("gate run");
+                assert_eq!(
+                    got.data, want[i],
+                    "{}: {tiles}-tile output diverges at image {i}",
+                    layer.name
+                );
+            }
+
+            let ips = images_per_sec(&engine, &inputs, rounds, tiles);
+            if tiles == 1 {
+                base_ips = ips;
+            }
+            let scaling = ips / base_ips;
+            println!(
+                "{:<16} tiles {tiles} (bands {}): {:>9.1} img/s   scaling {:>5.2}x",
+                layer.name,
+                engine.max_tiles(),
+                ips,
+                scaling,
+            );
+            let mut tr = Json::obj();
+            tr.set("tiles", Json::from_u64(tiles as u64))
+                .set("effective_bands", Json::from_u64(engine.max_tiles() as u64))
+                .set("images_per_sec", Json::Num(ips))
+                .set("scaling_vs_single", Json::Num(scaling));
+            tile_rows.push(tr);
+        }
+        row.set("tile_points", Json::Arr(tile_rows));
+        layer_rows.push(row);
+    }
+    if smoke {
+        println!("smoke OK: all tile counts bit-identical to single-core");
+        return;
+    }
+
+    if let Some(path) = json_path {
+        let mut obj = Json::obj();
+        obj.set("bench", Json::s("partition_bench"))
+            .set(
+                "workload",
+                Json::s("conv sweep: 3x3s1, 3x3s2, 1x1, depthwise3x3, grouped3x3 @128-bit"),
+            )
+            .set("images", Json::from_u64(images as u64))
+            .set("rounds", Json::from_u64(rounds as u64))
+            .set("requant_shift", Json::from_u64(SHIFT as u64))
+            .set("host_cores", Json::from_u64(cores as u64))
+            .set("bit_identical", Json::Bool(true))
+            .set("layers", Json::Arr(layer_rows))
+            .set(
+                "target",
+                Json::s("latency scaling on multi-core hosts; bit-identity at every tile count"),
+            );
+        common::write_json(&path, &obj);
+    }
+}

@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::dataflow::DataflowSpec;
+use crate::exec::Partition;
 use crate::explore::{self, ExploreConfig};
 use crate::isa::Program;
 use crate::layer::{ConvConfig, ConvKind, LayerConfig};
@@ -85,6 +86,16 @@ pub struct LayerPlan {
     /// was packed for (see [`LayerPlan::packed_weights`]). Cleared by
     /// [`LayerPlan::bind_weights`].
     pub(crate) packed: OnceLock<(usize, Arc<PackedWeights>)>,
+    /// Intra-layer partition: how many output-band tiles this layer's
+    /// kernel is sharded into at prepare time
+    /// ([`crate::exec::partition`]). `Partition::single()` (the
+    /// default) keeps the one-core schedule. Chosen by the planner when
+    /// [`PlannerOptions::max_tiles`] allows ([`explore::choose_tiles`]
+    /// against the partitioned perf model), overridden by measured
+    /// tuning winners ([`crate::tune`]), and honored by
+    /// [`crate::exec::PreparedNetwork`] — execution is bit-identical
+    /// for every value, only latency changes.
+    pub partition: Partition,
 }
 
 impl LayerPlan {
@@ -231,6 +242,15 @@ pub struct PlannerOptions {
     /// Tuning database consulted when `tune != Off`
     /// (`None` = the process-wide [`crate::tune::global_tune_db`]).
     pub tune_db: Option<Arc<crate::tune::TuneDb>>,
+    /// Upper bound on intra-layer tiles per generated conv (the
+    /// cores-per-image budget). `1` (the default) disables intra-layer
+    /// partitioning entirely — plans are exactly the single-core ones.
+    /// `> 1` lets the planner shard each conv's output space across up
+    /// to this many tiles when the partitioned perf model
+    /// ([`crate::machine::PerfModel::estimate_layer_partitioned`])
+    /// prices the split as a win; the chosen count lands in
+    /// [`LayerPlan::partition`].
+    pub max_tiles: usize,
 }
 
 impl PlannerOptions {
@@ -254,6 +274,7 @@ impl Default for PlannerOptions {
             tune: crate::tune::TuneMode::Off,
             tune_config: crate::tune::TuneConfig::default(),
             tune_db: None,
+            max_tiles: 1,
         }
     }
 }
@@ -338,6 +359,28 @@ impl Planner {
                 best.unwrap()
             })
             .clone();
+        // Intra-layer partition axis: with a core budget, ask the
+        // partitioned perf model whether sharding this conv's output
+        // channels wins, and record the modeled (max-over-tiles +
+        // fork/join + LLC-contention) latency as the layer's cost.
+        let mut stats = stats;
+        let mut partition = Partition::single();
+        if self.opts.max_tiles > 1 {
+            let schedule = crate::codegen::schedule(&padded, &machine);
+            let acc_elems = padded.out_channels * padded.e_size();
+            let (tiles, cycles) = explore::choose_tiles(
+                &prog,
+                &schedule,
+                acc_elems,
+                padded.e_size(),
+                sample,
+                self.opts.max_tiles,
+            );
+            if tiles > 1 {
+                partition = Partition::banded(tiles);
+                stats.cycles = cycles;
+            }
+        }
         LayerPlan {
             layer: LayerConfig::Conv(padded),
             kind: PlanKind::Generated { spec, prog, machine, pad },
@@ -345,6 +388,7 @@ impl Planner {
             inputs: Vec::new(),
             weights: None,
             packed: OnceLock::new(),
+            partition,
         }
     }
 
@@ -404,7 +448,24 @@ impl Planner {
         let prog = crate::codegen::depthwise::gen_depthwise(&padded, &machine, true);
         let schedule = crate::codegen::depthwise::schedule_depthwise(&padded, &machine);
         let mut pm = PerfModel::neoverse_n1();
-        let stats = pm.estimate_layer(&prog, &schedule, self.opts.perf_sample);
+        let mut stats = pm.estimate_layer(&prog, &schedule, self.opts.perf_sample);
+        // Depthwise bands align to whole channel blocks (`e·c`).
+        let mut partition = Partition::single();
+        if self.opts.max_tiles > 1 {
+            let acc_elems = padded.in_channels * padded.e_size();
+            let (tiles, cycles) = explore::choose_tiles(
+                &prog,
+                &schedule,
+                acc_elems,
+                padded.e_size() * c,
+                self.opts.perf_sample,
+                self.opts.max_tiles,
+            );
+            if tiles > 1 {
+                partition = Partition::banded(tiles);
+                stats.cycles = cycles;
+            }
+        }
         LayerPlan {
             layer: LayerConfig::Conv(padded),
             kind: PlanKind::DepthwiseKernel { prog, machine, pad },
@@ -412,6 +473,7 @@ impl Planner {
             inputs: Vec::new(),
             weights: None,
             packed: OnceLock::new(),
+            partition,
         }
     }
 
@@ -423,7 +485,22 @@ impl Planner {
         let schedule = crate::codegen::schedule(&view, &machine);
         let mut pm = PerfModel::neoverse_n1();
         let one = pm.estimate_layer(&prog, &schedule, self.opts.perf_sample);
-        let stats = one.scaled(cfg.groups as f64);
+        let mut stats = one.scaled(cfg.groups as f64);
+        // Grouped convs partition across whole groups: each group is an
+        // independent kernel pass over a disjoint accumulator slice, so
+        // tile latency is the per-group cost times the largest group
+        // count any tile carries, plus the fan-out's fork/join.
+        let mut partition = Partition::single();
+        if self.opts.max_tiles > 1 && cfg.groups > 1 {
+            let tiles = self.opts.max_tiles.min(cfg.groups);
+            let per_tile_groups = cfg.groups.div_ceil(tiles);
+            let cycles = one.cycles * per_tile_groups as f64
+                + crate::machine::TILE_FORK_JOIN_CYCLES;
+            if cycles < stats.cycles {
+                partition = Partition::banded(tiles);
+                stats.cycles = cycles;
+            }
+        }
         LayerPlan {
             layer: LayerConfig::Conv(*cfg),
             kind: PlanKind::GroupedKernel { spec, prog, machine, pad, groups: cfg.groups },
@@ -431,6 +508,7 @@ impl Planner {
             inputs: Vec::new(),
             weights: None,
             packed: OnceLock::new(),
+            partition,
         }
     }
 
@@ -442,6 +520,7 @@ impl Planner {
             inputs: Vec::new(),
             weights: None,
             packed: OnceLock::new(),
+            partition: Partition::single(),
         }
     }
 
@@ -564,6 +643,10 @@ pub fn plan_fingerprint(plan: &NetworkPlan) -> u64 {
             PlanKind::ScalarPass => "scalar".to_string(),
         };
         h = eat(h, kind_sig.as_bytes());
+        // The partition changes the prepared engine (tiled schedules,
+        // arena pool), so it must split prepared-cache entries even
+        // though outputs stay bit-identical.
+        h = eat(h, format!("part:{}", lp.partition.tiles).as_bytes());
         if let Some(w) = &lp.weights {
             h = eat(h, format!("{:?}:{:?}", w.shape, w.layout).as_bytes());
             h = eat_i8(h, &w.data);
@@ -595,6 +678,9 @@ pub struct PlanCacheKey {
     pub tune_backend: Option<crate::exec::Backend>,
     /// [`crate::tune::TuneDb::epoch`] of the consulted db (0 when off).
     pub tune_epoch: u64,
+    /// Intra-layer tile budget ([`PlannerOptions::max_tiles`]) — a
+    /// different budget yields differently partitioned plans.
+    pub max_tiles: usize,
 }
 
 impl PlanCacheKey {
@@ -611,6 +697,7 @@ impl PlanCacheKey {
             tune: opts.tune,
             tune_backend,
             tune_epoch,
+            max_tiles: opts.max_tiles,
         }
     }
 }

@@ -70,6 +70,16 @@ pub struct ServerConfig {
     /// (`0` = auto: available cores / `workers`, at least 1). Ignored on
     /// the fallback path for plans that cannot be prepared.
     pub exec_threads: usize,
+    /// Threads each image's *partitioned layers* fan their tiles across
+    /// ([`crate::exec::Partition`] — intra-op parallelism, vs the
+    /// inter-image parallelism of `exec_threads`). `0` = auto: the
+    /// `exec_threads` budget left over by the batch goes to tiles
+    /// (`exec_threads / batch_len`, at least 1), so a full batch runs
+    /// image-parallel and a lone request uses the cores for tiles.
+    /// Partitioned execution is bit-identical at any value; plans with
+    /// no partitioned layers ignore this entirely. Ignored on the
+    /// fallback path.
+    pub intra_threads: usize,
     /// Execution backend the prepared engine is compiled for
     /// ([`Backend::Native`] by default; [`Backend::Interp`] keeps the
     /// reference interpreter). Outputs are bit-identical either way —
@@ -109,6 +119,7 @@ impl Default for ServerConfig {
             batch_deadline: Duration::from_millis(2),
             requant_shift: 8,
             exec_threads: 0,
+            intra_threads: 0,
             backend: Backend::default(),
             tune: TuneMode::Off,
             tune_db: None,
@@ -266,6 +277,7 @@ impl Server {
             let engine_slot = Arc::clone(&engine_slot);
             let shift = config.requant_shift;
             let exec_threads = config.exec_threads;
+            let intra_threads = config.intra_threads;
             workers.push(std::thread::spawn(move || loop {
                 let batch = {
                     let guard = batch_rx.lock().unwrap();
@@ -282,7 +294,12 @@ impl Server {
                 let outputs = match &engine {
                     // Hot path: prepared engine, images fanned across
                     // threads — bit-identical to the functional path.
-                    Some(p) => p.run_batch(&inputs, shift, exec_threads),
+                    // Cores the batch leaves idle go to intra-layer
+                    // tiles (see `ServerConfig::intra_threads`).
+                    Some(p) => {
+                        let intra = intra_for_batch(intra_threads, exec_threads, inputs.len());
+                        p.run_batch_with(&inputs, shift, exec_threads, intra)
+                    }
                     None => run_network_batch(&plan, &inputs, shift),
                 };
                 let exec_seconds = exec_start.elapsed().as_secs_f64();
@@ -383,6 +400,18 @@ impl Server {
         let m = self.metrics.lock().unwrap();
         m.clone()
     }
+}
+
+/// Intra-layer thread budget for one batch: an explicit
+/// [`ServerConfig::intra_threads`] wins; `0` = auto — the share of the
+/// image fan-out budget this batch leaves idle, so a lone request gets
+/// the cores as tile parallelism while a full batch runs
+/// image-parallel.
+fn intra_for_batch(intra_threads: usize, exec_threads: usize, batch_len: usize) -> usize {
+    if intra_threads > 0 {
+        return intra_threads;
+    }
+    (exec_threads / batch_len.max(1)).max(1)
 }
 
 /// The background tuning thread: wait for observed traffic, measure
@@ -592,6 +621,35 @@ mod tests {
     }
 
     #[test]
+    fn intra_budget_splits_leftover_cores() {
+        // Explicit setting wins.
+        assert_eq!(intra_for_batch(3, 8, 4), 3);
+        // Auto: the image budget the batch leaves idle goes to tiles.
+        assert_eq!(intra_for_batch(0, 8, 1), 8);
+        assert_eq!(intra_for_batch(0, 8, 4), 2);
+        assert_eq!(intra_for_batch(0, 8, 16), 1);
+        assert_eq!(intra_for_batch(0, 1, 0), 1);
+    }
+
+    #[test]
+    fn partitioned_plans_serve_bit_identical_bytes() {
+        let mut plan = tiny_plan();
+        plan.layers[0].partition = crate::exec::Partition::banded(2);
+        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 31);
+        let reference = crate::coordinator::run_network_functional(&plan, &input, 8).unwrap();
+        for intra in [0usize, 3] {
+            let server = Server::start_with(
+                plan.clone(),
+                ServerConfig { workers: 1, intra_threads: intra, ..Default::default() },
+            );
+            assert!(server.is_prepared());
+            let out = server.submit(input.clone()).recv().unwrap().unwrap();
+            assert_eq!(out.data, reference.data, "intra_threads={intra} changed bytes");
+            server.shutdown();
+        }
+    }
+
+    #[test]
     fn weightless_plan_falls_back_to_functional_path() {
         let m = MachineConfig::neon(128);
         let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 16, 16);
@@ -717,6 +775,7 @@ mod tests {
                 layer: cfg.name(),
                 pad,
                 spec: crate::dataflow::DataflowSpec::optimized_os(&machine, cfg.r_size()),
+                tiles: 1,
                 model_cycles: 1.0,
                 measured_sec: 1e-6,
                 spread: 0.0,

@@ -30,13 +30,20 @@ use crate::tensor::{ActLayout, ActShape, ActTensor};
 /// Reusable per-thread execution state: liveness-assigned activation
 /// slots, padding stage, accumulator, the two backend register files
 /// (interpreter lanes and the native backend's [`RegFile`] — together a
-/// few KB), and the consumer-count scratch for the liveness walk.
+/// few KB), a per-tile executor pool for intra-layer partitioned
+/// kernels, and the consumer-count scratch for the liveness walk.
 pub struct ExecArena {
     slots: Vec<Vec<i8>>,
     padded: Vec<i8>,
     pub(crate) acc: Vec<i32>,
     pub(crate) interp: Interp,
     pub(crate) regs: RegFile,
+    /// One executor state per intra-layer tile (see
+    /// [`crate::exec::partition`]): partitioned kernels give each output
+    /// band its own interpreter lanes + register file so tiles can run
+    /// on scoped threads without sharing mutable state. Sized to the
+    /// network's maximum tile count; empty when nothing is partitioned.
+    pub(crate) tile_execs: Vec<(Interp, RegFile)>,
     /// Per-run copy of the network's consumer counts (decremented as
     /// inputs are released). Arena-hosted so `PreparedNetwork::run`
     /// allocates nothing per image.
@@ -49,13 +56,20 @@ impl ExecArena {
         max_padded: usize,
         max_acc: usize,
         num_regs: usize,
+        max_tiles: usize,
     ) -> ExecArena {
+        let tile_execs = if max_tiles > 1 {
+            (0..max_tiles).map(|_| (Interp::new(num_regs), RegFile::new(num_regs))).collect()
+        } else {
+            Vec::new()
+        };
         ExecArena {
             slots: slot_caps.iter().map(|&n| Vec::with_capacity(n)).collect(),
             padded: Vec::with_capacity(max_padded),
             acc: Vec::with_capacity(max_acc),
             interp: Interp::new(num_regs),
             regs: RegFile::new(num_regs),
+            tile_execs,
             remaining: Vec::new(),
         }
     }
@@ -137,5 +151,12 @@ impl ExecArena {
     /// mutably alongside the accumulator).
     pub(crate) fn exec_and_acc(&mut self) -> (&mut Interp, &mut RegFile, &mut Vec<i32>) {
         (&mut self.interp, &mut self.regs, &mut self.acc)
+    }
+
+    /// Split-borrow the per-tile executor pool and the accumulator
+    /// together (the partitioned kernel loop hands each tile one pool
+    /// entry and one disjoint accumulator slice).
+    pub(crate) fn tiles_and_acc(&mut self) -> (&mut [(Interp, RegFile)], &mut [i32]) {
+        (&mut self.tile_execs, &mut self.acc)
     }
 }

@@ -40,7 +40,13 @@
 //!   on the way out) and `Concat` (parts written straight into the
 //!   output's channel blocks, no intermediate);
 //! * [`PreparedNetwork::run_batch`] fans a coalesced batch across
-//!   threads, each with its own arena and register file.
+//!   threads, each with its own arena and register file;
+//! * layers whose plan carries an intra-layer [`Partition`] are split at
+//!   prepare time into per-tile sub-schedules over **disjoint output
+//!   bands** ([`partition`]), and [`PreparedNetwork::run_with`] executes
+//!   the tiles on scoped threads (per-tile interpreter/register state
+//!   from the arena's tile pool), joining at the fused requantize pass —
+//!   bit-identical to the single-core path whatever the thread count.
 //!
 //! **Bit-identity.** Prepared execution produces byte-for-byte the same
 //! outputs as [`crate::coordinator::run_network_functional`] on every
@@ -58,9 +64,11 @@
 
 mod arena;
 pub mod lower;
+pub mod partition;
 
 pub use arena::ExecArena;
 pub use lower::lower_kernel;
+pub use partition::Partition;
 
 use crate::coordinator::plan::{LayerPlan, NetworkPlan, PackedWeights, PlanKind, PlannerOptions};
 use crate::coordinator::{
@@ -104,6 +112,15 @@ impl Backend {
     }
 }
 
+/// One intra-layer tile of a partitioned conv: the rebased sub-schedule
+/// for one contiguous output band and the band's accumulator length.
+/// Bands are consumed in schedule order, so offsets are implicit —
+/// tile `t` covers `[sum(len[..t]), sum(len[..=t]))` of the accumulator.
+struct TileSched {
+    sched: Vec<Bases>,
+    len: usize,
+}
+
 /// A compiled simple/depthwise conv executor: decoded trace, absolute
 /// schedule, packed weights, and the declared buffer sizes the schedule
 /// was validated against at prepare time.
@@ -127,6 +144,11 @@ struct PreparedConv {
     /// Declared accumulator element count.
     acc_elems: usize,
     num_regs: usize,
+    /// Intra-layer output-band tiles (see [`partition`]). Empty = the
+    /// layer runs the full single-core `sched`; non-empty = `sched` is
+    /// replaced at execution by these per-band sub-schedules, each
+    /// validated at prepare time against its own accumulator slice.
+    tile_scheds: Vec<TileSched>,
 }
 
 /// A compiled grouped-conv executor: one kernel + schedule shared by all
@@ -146,6 +168,10 @@ struct PreparedGrouped {
     in_elems: usize,
     acc_elems: usize,
     num_regs: usize,
+    /// Intra-layer tiles as contiguous *group* ranges `[lo, hi)` (groups
+    /// already write disjoint accumulator slices). Empty = sequential
+    /// group loop.
+    tile_groups: Vec<(usize, usize)>,
 }
 
 enum PreparedKind {
@@ -192,6 +218,10 @@ pub struct PreparedNetwork {
     max_padded: usize,
     max_acc: usize,
     num_regs: usize,
+    /// Maximum intra-layer tile count across all layers (1 = nothing in
+    /// this network is partitioned). Sizes the arena's per-tile
+    /// executor pool.
+    max_tiles: usize,
 }
 
 impl PreparedNetwork {
@@ -223,6 +253,7 @@ impl PreparedNetwork {
         let mut layers = Vec::with_capacity(n);
         let (mut max_padded, mut max_acc) = (0usize, 0usize);
         let mut num_regs = 32usize;
+        let mut max_tiles = 1usize;
         for (i, lp) in plan.layers.iter().enumerate() {
             for &j in &lp.inputs {
                 anyhow::ensure!(j < i, "layer {i} ({}) has a forward edge to {j}", lp.layer.name());
@@ -243,11 +274,13 @@ impl PreparedNetwork {
                     max_padded = max_padded.max(pc.in_elems);
                     max_acc = max_acc.max(pc.acc_elems);
                     num_regs = num_regs.max(pc.num_regs);
+                    max_tiles = max_tiles.max(pc.tile_scheds.len().max(1));
                 }
                 PreparedKind::Grouped(pg) => {
                     max_padded = max_padded.max(pg.in_elems);
                     max_acc = max_acc.max(pg.acc_elems);
                     num_regs = num_regs.max(pg.num_regs);
+                    max_tiles = max_tiles.max(pg.tile_groups.len().max(1));
                 }
                 PreparedKind::Pool(p) => {
                     max_padded = max_padded.max(p.channels * p.ih * p.iw);
@@ -298,6 +331,7 @@ impl PreparedNetwork {
             max_padded,
             max_acc,
             num_regs,
+            max_tiles,
         })
     }
 
@@ -350,19 +384,50 @@ impl PreparedNetwork {
             .sum()
     }
 
+    /// Maximum intra-layer tile count across all layers (1 = no layer
+    /// is partitioned). Diagnostics/tests.
+    pub fn max_tiles(&self) -> usize {
+        self.max_tiles
+    }
+
     /// A fresh arena sized for this network (one per worker thread).
     pub fn new_arena(&self) -> ExecArena {
-        ExecArena::with_capacity(&self.slot_caps, self.max_padded, self.max_acc, self.num_regs)
+        ExecArena::with_capacity(
+            &self.slot_caps,
+            self.max_padded,
+            self.max_acc,
+            self.num_regs,
+            self.max_tiles,
+        )
     }
 
     /// Execute one image through the topological schedule. Bit-identical
     /// to [`crate::coordinator::run_network_functional`] on the plan
-    /// this was prepared from.
+    /// this was prepared from. Partitioned layers run their tiles
+    /// sequentially (still bit-identical — tiles write disjoint
+    /// accumulator bands); use [`PreparedNetwork::run_with`] to execute
+    /// tiles on scoped threads.
     pub fn run(
         &self,
         input: &ActTensor,
         shift: u32,
         arena: &mut ExecArena,
+    ) -> crate::Result<ActTensor> {
+        self.run_with(input, shift, arena, 1)
+    }
+
+    /// [`PreparedNetwork::run`] with up to `intra_threads` scoped worker
+    /// threads per partitioned layer (tiles of one layer execute
+    /// concurrently, joining before the layer's requantize pass).
+    /// Results are byte-identical for every `intra_threads` value —
+    /// tiles cover disjoint output bands, so parallelism cannot change
+    /// bytes.
+    pub fn run_with(
+        &self,
+        input: &ActTensor,
+        shift: u32,
+        arena: &mut ExecArena,
+        intra_threads: usize,
     ) -> crate::Result<ActTensor> {
         let n = self.layers.len();
         if n == 0 {
@@ -384,11 +449,15 @@ impl PreparedNetwork {
                     None => input,
                 };
                 match &layer.kind {
-                    PreparedKind::Conv(pc) => exec_conv(pc, src0, shift, layer.slot, arena)?,
-                    PreparedKind::Depthwise(pc) => {
-                        exec_depthwise(pc, src0, shift, layer.slot, arena)?
+                    PreparedKind::Conv(pc) => {
+                        exec_conv(pc, src0, shift, layer.slot, arena, intra_threads)?
                     }
-                    PreparedKind::Grouped(pg) => exec_grouped(pg, src0, shift, layer.slot, arena)?,
+                    PreparedKind::Depthwise(pc) => {
+                        exec_depthwise(pc, src0, shift, layer.slot, arena, intra_threads)?
+                    }
+                    PreparedKind::Grouped(pg) => {
+                        exec_grouped(pg, src0, shift, layer.slot, arena, intra_threads)?
+                    }
                     PreparedKind::Pool(p) => exec_pool(p, src0, layer.slot, arena),
                     PreparedKind::Gap => {
                         let mut out = arena.take_act(
@@ -456,19 +525,55 @@ impl PreparedNetwork {
         shift: u32,
         threads: usize,
     ) -> Vec<crate::Result<ActTensor>> {
+        self.run_batch_with(inputs, shift, threads, 1)
+    }
+
+    /// [`PreparedNetwork::run_batch`] with up to `intra_threads`
+    /// additional scoped threads *per image* for partitioned layers —
+    /// the serving tier's lever for trading image-parallelism against
+    /// tile-parallelism (a one-image batch on an eight-core box can
+    /// spend the idle cores inside the layer instead of leaving them
+    /// parked).
+    ///
+    /// Images are split into one contiguous chunk per worker with sizes
+    /// balanced to within one image (`len/threads` rounded up for the
+    /// first `len % threads` workers) — never the `div_ceil` split whose
+    /// tail worker could run near-empty while earlier workers carried
+    /// full chunks.
+    pub fn run_batch_with(
+        &self,
+        inputs: &[&ActTensor],
+        shift: u32,
+        threads: usize,
+        intra_threads: usize,
+    ) -> Vec<crate::Result<ActTensor>> {
         let threads = threads.max(1).min(inputs.len().max(1));
         if threads <= 1 {
             let mut arena = self.new_arena();
-            return inputs.iter().map(|&i| self.run(i, shift, &mut arena)).collect();
+            return inputs
+                .iter()
+                .map(|&i| self.run_with(i, shift, &mut arena, intra_threads))
+                .collect();
         }
-        let chunk = inputs.len().div_ceil(threads);
+        let sizes = balanced_chunk_sizes(inputs.len(), threads);
         let chunk_results: Vec<Vec<crate::Result<ActTensor>>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = inputs
-                .chunks(chunk)
-                .map(|part| {
+            let mut rest = inputs;
+            let handles: Vec<_> = sizes
+                .iter()
+                .map(|&sz| {
+                    let (part, tail) = rest.split_at(sz);
+                    rest = tail;
+                    // Every spawned worker owns at least one image —
+                    // `balanced_chunk_sizes` never emits an empty chunk
+                    // once `threads <= inputs.len()` holds (clamped
+                    // above), and a violation here would mean idle
+                    // threads plus a skewed tail.
+                    assert!(!part.is_empty(), "batch fan-out spawned an idle worker");
                     scope.spawn(move || {
                         let mut arena = self.new_arena();
-                        part.iter().map(|&i| self.run(i, shift, &mut arena)).collect()
+                        part.iter()
+                            .map(|&i| self.run_with(i, shift, &mut arena, intra_threads))
+                            .collect()
                     })
                 })
                 .collect();
@@ -479,6 +584,48 @@ impl PreparedNetwork {
         });
         chunk_results.into_iter().flatten().collect()
     }
+}
+
+/// Balanced contiguous chunk sizes: `n` items over up to `workers`
+/// chunks, sizes differing by at most one (`n/workers` plus one extra
+/// for the first `n % workers` chunks). Replaces `div_ceil` chunking,
+/// whose last chunk could be near-empty (10 images / 4 threads gave
+/// 3+3+3+1; this gives 3+3+2+2). Never returns an empty chunk for
+/// `n > 0`.
+fn balanced_chunk_sizes(n: usize, workers: usize) -> Vec<usize> {
+    let workers = workers.max(1).min(n.max(1));
+    let (base, extra) = (n / workers, n % workers);
+    (0..workers).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Run `jobs` across up to `threads` scoped workers, each processing a
+/// balanced contiguous chunk in order. `threads <= 1` (or a single job)
+/// degrades to an in-place sequential loop — same job order, and for
+/// the partitioned executors byte-identical results either way (jobs
+/// own disjoint output bands).
+fn scoped_jobs<T: Send, F: Fn(&mut T) + Sync>(jobs: &mut [T], threads: usize, f: F) {
+    let threads = threads.max(1).min(jobs.len().max(1));
+    if threads <= 1 {
+        for j in jobs.iter_mut() {
+            f(j);
+        }
+        return;
+    }
+    let sizes = balanced_chunk_sizes(jobs.len(), threads);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = jobs;
+        for &sz in &sizes {
+            let (part, tail) = std::mem::take(&mut rest).split_at_mut(sz);
+            rest = tail;
+            assert!(!part.is_empty(), "intra-layer fan-out spawned an idle worker");
+            scope.spawn(move || {
+                for j in part {
+                    f(j);
+                }
+            });
+        }
+    });
 }
 
 fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLayer> {
@@ -527,6 +674,10 @@ fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLaye
                     b
                 );
             }
+            // Output-channel band partition: each tile's rebased
+            // sub-schedule is validated against its own slice.
+            let tile_scheds =
+                split_tiles(&dp, &sched, lp.partition, acc_elems, cfg.e_size(), in_elems, weights.data.len())?;
             Ok(node(
                 PreparedKind::Conv(PreparedConv {
                     cfg: *cfg,
@@ -539,6 +690,7 @@ fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLaye
                     in_elems,
                     acc_elems,
                     num_regs: machine.num_regs,
+                    tile_scheds,
                 }),
                 acc_elems,
             ))
@@ -562,6 +714,17 @@ fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLaye
                     b
                 );
             }
+            // Depthwise bands align to whole channel blocks (the
+            // schedule's per-invocation output unit is `e·c`).
+            let tile_scheds = split_tiles(
+                &dp,
+                &sched,
+                lp.partition,
+                acc_elems,
+                cfg.e_size() * c,
+                in_elems,
+                packed.len(),
+            )?;
             Ok(node(
                 PreparedKind::Depthwise(PreparedConv {
                     cfg: *cfg,
@@ -574,6 +737,7 @@ fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLaye
                     in_elems,
                     acc_elems,
                     num_regs: machine.num_regs,
+                    tile_scheds,
                 }),
                 acc_elems,
             ))
@@ -613,6 +777,15 @@ fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLaye
                 );
             }
             let acc_elems = cfg.out_channels * cfg.e_size();
+            // Grouped convs partition across whole groups — each group
+            // already owns a disjoint accumulator slice, so a tile is
+            // just a contiguous group range.
+            let tile_groups = if lp.partition.is_single() || *groups <= 1 {
+                Vec::new()
+            } else {
+                let bounds = partition::band_bounds(*groups, 1, lp.partition.tiles);
+                if bounds.len() > 1 { bounds } else { Vec::new() }
+            };
             Ok(node(
                 PreparedKind::Grouped(PreparedGrouped {
                     cfg: *cfg,
@@ -628,6 +801,7 @@ fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLaye
                     in_elems: cfg.in_channels * cfg.h_size(),
                     acc_elems,
                     num_regs: machine.num_regs,
+                    tile_groups,
                 }),
                 acc_elems,
             ))
@@ -662,6 +836,45 @@ fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLaye
             k.name()
         ),
     }
+}
+
+/// Split a conv schedule into per-tile sub-schedules for `part`
+/// (output bands of `align` accumulator elements each — one ofmap plane
+/// for the k-major simple-conv schedule, one channel block for
+/// depthwise), validating every rebased entry against its tile's slice.
+/// Returns an empty vec when the partition degrades to a single band
+/// (tiles = 1, or fewer bandable units than requested tiles leaves one)
+/// — the caller then keeps the plain single-core schedule path.
+fn split_tiles(
+    dp: &DecodedProgram,
+    sched: &[Bases],
+    part: Partition,
+    acc_elems: usize,
+    align: usize,
+    in_elems: usize,
+    weight_len: usize,
+) -> crate::Result<Vec<TileSched>> {
+    if part.is_single() || acc_elems == 0 || align == 0 {
+        return Ok(Vec::new());
+    }
+    let bounds = partition::band_bounds(acc_elems, align, part.tiles);
+    if bounds.len() <= 1 {
+        return Ok(Vec::new());
+    }
+    let mut tiles = Vec::with_capacity(bounds.len());
+    for (tile, &(lo, hi)) in partition::split_schedule(sched, &bounds).into_iter().zip(&bounds) {
+        let len = hi - lo;
+        for &b in &tile {
+            anyhow::ensure!(
+                dp.bases_fit(b, in_elems, weight_len, len),
+                "program {} exceeds tile accumulator band [{lo}, {hi}) at {:?}",
+                dp.name,
+                b
+            );
+        }
+        tiles.push(TileSched { sched: tile, len });
+    }
+    Ok(tiles)
 }
 
 /// The per-layer executor a kernel loop resolved from its backend: one
@@ -772,22 +985,28 @@ fn requant_signed_into(acc: &[i32], shift: u32, c: usize, out: &mut ActTensor) {
 
 /// Shared body of the simple-conv and depthwise executors: stage the
 /// padded input, zero the accumulator, run the full prevalidated
-/// schedule, return the staging buffer, and take the output tensor. The
-/// two kinds differ only in the requantize pass the caller applies to
-/// `arena.acc` afterwards.
+/// schedule — on one core, or tile-parallel across disjoint output
+/// bands when the layer is partitioned — return the staging buffer, and
+/// take the output tensor. The two kinds differ only in the requantize
+/// pass the caller applies to `arena.acc` afterwards (the join point of
+/// the partitioned fan-out).
 fn run_conv_kernel(
     pc: &PreparedConv,
     src: &ActTensor,
     slot: usize,
     arena: &mut ExecArena,
+    intra_threads: usize,
 ) -> crate::Result<ActTensor> {
     let padded = stage_padded(&pc.cfg, pc.c, pc.pad, src, arena)?;
     debug_assert_eq!(padded.data.len(), pc.in_elems);
     arena.reset_acc(pc.acc_elems);
-    {
+    if pc.tile_scheds.is_empty() {
         let (interp, regs, acc) = arena.exec_and_acc();
         let mut exec = BackendExec::resolve(pc.native.as_ref(), &pc.prog, interp, regs);
         exec.run_schedule(&padded.data, &pc.weights, acc, &pc.sched);
+    } else {
+        let (pool, acc) = arena.tiles_and_acc();
+        run_tiled_conv(pc, &padded.data, acc, pool, intra_threads);
     }
     arena.put_padded(padded);
     Ok(arena.take_act(
@@ -797,14 +1016,48 @@ fn run_conv_kernel(
     ))
 }
 
+/// Execute a partitioned conv's tiles: each tile gets one executor
+/// state from the arena pool and its disjoint accumulator band, then
+/// the tiles fan out across up to `threads` scoped workers (sequential
+/// when `threads <= 1` — byte-identical either way).
+fn run_tiled_conv(
+    pc: &PreparedConv,
+    input: &[i8],
+    acc: &mut [i32],
+    pool: &mut [(Interp, RegFile)],
+    threads: usize,
+) {
+    assert!(
+        pool.len() >= pc.tile_scheds.len(),
+        "arena tile pool ({}) smaller than layer tile count ({})",
+        pool.len(),
+        pc.tile_scheds.len()
+    );
+    let mut jobs: Vec<(&TileSched, &mut [i32], &mut (Interp, RegFile))> =
+        Vec::with_capacity(pc.tile_scheds.len());
+    let mut rest = acc;
+    for (t, ex) in pc.tile_scheds.iter().zip(pool.iter_mut()) {
+        let (band, tail) = std::mem::take(&mut rest).split_at_mut(t.len);
+        rest = tail;
+        jobs.push((t, band, ex));
+    }
+    let (native, dp, weights) = (pc.native.as_ref(), &pc.prog, &pc.weights[..]);
+    scoped_jobs(&mut jobs, threads, |job| {
+        let (t, band, ex) = job;
+        let mut exec = BackendExec::resolve(native, dp, &mut ex.0, &mut ex.1);
+        exec.run_schedule(input, weights, band, &t.sched);
+    });
+}
+
 fn exec_conv(
     pc: &PreparedConv,
     src: &ActTensor,
     shift: u32,
     slot: usize,
     arena: &mut ExecArena,
+    intra_threads: usize,
 ) -> crate::Result<ActTensor> {
-    let mut out = run_conv_kernel(pc, src, slot, arena)?;
+    let mut out = run_conv_kernel(pc, src, slot, arena, intra_threads)?;
     requant_conv_into(&arena.acc, shift, pc.c, &mut out);
     Ok(out)
 }
@@ -815,8 +1068,9 @@ fn exec_depthwise(
     shift: u32,
     slot: usize,
     arena: &mut ExecArena,
+    intra_threads: usize,
 ) -> crate::Result<ActTensor> {
-    let mut out = run_conv_kernel(pc, src, slot, arena)?;
+    let mut out = run_conv_kernel(pc, src, slot, arena, intra_threads)?;
     // Position-major raw output coincides flat-index-wise with NCHWc.
     crate::codegen::depthwise::dw_requantize_relu_into(&arena.acc, shift, &mut out);
     Ok(out)
@@ -828,11 +1082,12 @@ fn exec_grouped(
     shift: u32,
     slot: usize,
     arena: &mut ExecArena,
+    intra_threads: usize,
 ) -> crate::Result<ActTensor> {
     let padded = stage_padded(&pg.cfg, pg.c, pg.pad, src, arena)?;
     debug_assert_eq!(padded.data.len(), pg.in_elems);
     arena.reset_acc(pg.acc_elems);
-    {
+    if pg.tile_groups.is_empty() {
         let (interp, regs, acc) = arena.exec_and_acc();
         let mut exec = BackendExec::resolve(pg.native.as_ref(), &pg.prog, interp, regs);
         for g in 0..pg.groups {
@@ -843,6 +1098,43 @@ fn exec_grouped(
             let gout = &mut acc[g * pg.group_out_elems..(g + 1) * pg.group_out_elems];
             exec.run_schedule(gin, &pg.group_weights[g], gout, &pg.sched);
         }
+    } else {
+        // Tile-parallel: each tile runs a contiguous group range
+        // against its slice of the accumulator (groups are already
+        // disjoint, so the band split is exact).
+        let (pool, acc) = arena.tiles_and_acc();
+        assert!(
+            pool.len() >= pg.tile_groups.len(),
+            "arena tile pool ({}) smaller than layer tile count ({})",
+            pool.len(),
+            pg.tile_groups.len()
+        );
+        let mut jobs: Vec<((usize, usize), &mut [i32], &mut (Interp, RegFile))> =
+            Vec::with_capacity(pg.tile_groups.len());
+        let mut rest = acc;
+        for (&(g_lo, g_hi), ex) in pg.tile_groups.iter().zip(pool.iter_mut()) {
+            let (band, tail) =
+                std::mem::take(&mut rest).split_at_mut((g_hi - g_lo) * pg.group_out_elems);
+            rest = tail;
+            jobs.push(((g_lo, g_hi), band, ex));
+        }
+        let (native, dp) = (pg.native.as_ref(), &pg.prog);
+        let pdata = &padded.data[..];
+        scoped_jobs(&mut jobs, intra_threads, |job| {
+            let (range, band, ex) = job;
+            let (g_lo, g_hi) = *range;
+            let mut exec = BackendExec::resolve(native, dp, &mut ex.0, &mut ex.1);
+            for g in g_lo..g_hi {
+                let gin = &pdata[g * pg.group_in_elems..(g + 1) * pg.group_in_elems];
+                let o = (g - g_lo) * pg.group_out_elems;
+                exec.run_schedule(
+                    gin,
+                    &pg.group_weights[g],
+                    &mut band[o..o + pg.group_out_elems],
+                    &pg.sched,
+                );
+            }
+        });
     }
     arena.put_padded(padded);
     let mut out = arena.take_act(

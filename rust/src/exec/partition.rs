@@ -1,0 +1,170 @@
+//! Intra-layer partitioning: shard one conv invocation schedule across
+//! cores as disjoint output bands.
+//!
+//! The batch fan-out in [`crate::exec::PreparedNetwork::run_batch`]
+//! parallelizes across *images*, so a single image is still bound by one
+//! core. This module adds the missing axis (ROADMAP item 1, the
+//! Proximu$/nn_dataflow partitioning dimension): a generated conv's
+//! schedule — the stream of [`Bases`] invocations the kernel runs — is
+//! split into `tiles` contiguous **output bands**, each covering a
+//! disjoint range of the k-major INT32 accumulator. Tiles share the
+//! padded input and packed weights read-only and never write the same
+//! accumulator element, so they can run on scoped threads and join at
+//! the output traversal (the fused requantize pass) with **bit-identical**
+//! results to the single-core path:
+//!
+//! * every invocation writes only inside its own `output` window
+//!   (validated by `bases_fit` at prepare time against the tile's slice),
+//!   so tiles touch disjoint accumulator slices;
+//! * within a tile, invocations keep the original schedule order, so the
+//!   per-element accumulation sequence — the only place ordering could
+//!   matter even for wrapping i32 adds — is exactly the single-core one.
+//!
+//! Band boundaries are expressed in accumulator *elements* and aligned to
+//! the natural unit of the schedule's output offsets (one ofmap plane
+//! `e` for a simple conv's k-major schedule, one channel block `e·c` for
+//! the depthwise schedule). Grouped convs partition across whole groups
+//! — see [`crate::exec`]'s grouped executor. The tile count itself is a
+//! planner axis: chosen by [`crate::explore::choose_tiles`] against
+//! [`crate::machine::PerfModel::estimate_layer_partitioned`], recorded in
+//! the plan ([`crate::coordinator::LayerPlan::partition`]), and tuned
+//! empirically by [`crate::tune`].
+
+use crate::machine::Bases;
+
+/// An intra-layer partition spec: how many output-band tiles a generated
+/// conv is sharded into. `tiles == 1` is the unpartitioned single-core
+/// schedule (the default); `tiles > 1` splits the output space —
+/// output channels for simple/grouped convs, channel blocks for
+/// depthwise — into that many contiguous bands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Partition {
+    /// Requested tile count. Clamped at prepare time to the number of
+    /// bandable units the layer actually has, so an oversized request
+    /// degrades to fewer (never empty) tiles.
+    pub tiles: usize,
+}
+
+impl Default for Partition {
+    fn default() -> Self {
+        Partition::single()
+    }
+}
+
+impl Partition {
+    /// The unpartitioned spec (single-core schedule).
+    pub fn single() -> Partition {
+        Partition { tiles: 1 }
+    }
+
+    /// Split the output space into `tiles` bands.
+    pub fn banded(tiles: usize) -> Partition {
+        Partition { tiles: tiles.max(1) }
+    }
+
+    pub fn is_single(&self) -> bool {
+        self.tiles <= 1
+    }
+}
+
+/// Contiguous accumulator bands: split `total_elems` (a multiple of
+/// `align`) into up to `tiles` element ranges `(lo, hi)` whose bounds are
+/// multiples of `align`. Unit counts are balanced (sizes differ by at
+/// most one `align`); when `tiles` exceeds the number of units, only as
+/// many bands as units are returned — never an empty band.
+pub fn band_bounds(total_elems: usize, align: usize, tiles: usize) -> Vec<(usize, usize)> {
+    assert!(align > 0 && total_elems % align == 0, "{total_elems} not a multiple of {align}");
+    let units = total_elems / align;
+    let tiles = tiles.max(1).min(units.max(1));
+    let (base, extra) = (units / tiles, units % tiles);
+    let mut bounds = Vec::with_capacity(tiles);
+    let mut lo = 0usize;
+    for t in 0..tiles {
+        let take = base + usize::from(t < extra);
+        let hi = lo + take * align;
+        bounds.push((lo, hi));
+        lo = hi;
+    }
+    debug_assert_eq!(lo, total_elems);
+    bounds
+}
+
+/// Split an invocation schedule into per-band sub-schedules. Each entry
+/// is assigned to the band containing its `output` base and rebased to
+/// the band's origin (`output -= lo`), so a tile runs against its own
+/// accumulator slice exactly as the full schedule runs against the full
+/// accumulator. Relative order inside each band is preserved — the
+/// per-element accumulation sequence is the single-core one.
+///
+/// Panics if an entry's output base falls outside every band (a schedule
+/// whose offsets disagree with the declared accumulator size — the same
+/// class of bug prepare-time `bases_fit` validation exists to catch).
+pub fn split_schedule(sched: &[Bases], bounds: &[(usize, usize)]) -> Vec<Vec<Bases>> {
+    let mut tiles: Vec<Vec<Bases>> = vec![Vec::new(); bounds.len()];
+    for &b in sched {
+        let out = b.output as usize;
+        let t = bounds
+            .iter()
+            .position(|&(lo, hi)| lo <= out && out < hi)
+            .unwrap_or_else(|| panic!("schedule output base {out} outside every band"));
+        let lo = bounds[t].0;
+        tiles[t].push(Bases { output: (out - lo) as u32, ..b });
+    }
+    tiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_are_balanced_and_aligned() {
+        // 10 units of 4 elements over 4 tiles: 3,3,2,2 units.
+        let b = band_bounds(40, 4, 4);
+        assert_eq!(b, vec![(0, 12), (12, 24), (24, 32), (32, 40)]);
+        assert!(b.iter().all(|&(lo, hi)| lo % 4 == 0 && hi % 4 == 0 && hi > lo));
+    }
+
+    #[test]
+    fn bounds_clamp_to_unit_count() {
+        // 2 units but 8 requested tiles: 2 non-empty bands, not 8.
+        assert_eq!(band_bounds(8, 4, 8), vec![(0, 4), (4, 8)]);
+        // tiles = 1 is the identity band.
+        assert_eq!(band_bounds(8, 4, 1), vec![(0, 8)]);
+        // Degenerate empty accumulator still yields one (empty) band.
+        assert_eq!(band_bounds(0, 4, 3), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn split_rebases_and_preserves_order() {
+        // k-major schedule: 2 input blocks x 4 output channels, e = 5.
+        let e = 5u32;
+        let sched: Vec<Bases> = (0..2)
+            .flat_map(|cb| {
+                (0..4).map(move |k| Bases { input: cb * 100, weight: cb * 40 + k * 10, output: k * e })
+            })
+            .collect();
+        let bounds = band_bounds(20, 5, 2); // [(0,10), (10,20)]
+        let tiles = split_schedule(&sched, &bounds);
+        assert_eq!(tiles.len(), 2);
+        // Each tile: 2 blocks x 2 channels, cb-major order preserved.
+        for (t, tile) in tiles.iter().enumerate() {
+            assert_eq!(tile.len(), 4);
+            let outs: Vec<u32> = tile.iter().map(|b| b.output).collect();
+            assert_eq!(outs, vec![0, 5, 0, 5], "tile {t} outputs rebased to its slice");
+            // Input/weight bases untouched.
+            assert_eq!(tile[0].input, 0);
+            assert_eq!(tile[2].input, 100);
+        }
+        // Union of (rebased-back) entries == original schedule.
+        let total: usize = tiles.iter().map(|t| t.len()).sum();
+        assert_eq!(total, sched.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside every band")]
+    fn split_rejects_out_of_range_entries() {
+        let sched = [Bases { input: 0, weight: 0, output: 99 }];
+        split_schedule(&sched, &band_bounds(20, 5, 2));
+    }
+}

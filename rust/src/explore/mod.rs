@@ -16,7 +16,7 @@ use crate::dataflow::heuristics::total_gain;
 use crate::dataflow::{Anchor, AuxKind, DataflowSpec};
 use crate::isa::Program;
 use crate::layer::ConvConfig;
-use crate::machine::{MachineConfig, PerfModel, PerfStats};
+use crate::machine::{Bases, MachineConfig, PerfModel, PerfStats};
 
 /// Process-wide count of exploration runs (enumerate→prune→simulate
 /// sweeps). The coordinator's plan cache exists to keep this from growing
@@ -156,6 +156,41 @@ pub fn evaluate(cfg: &ConvConfig, spec: &DataflowSpec, machine: &MachineConfig, 
     (prog, stats)
 }
 
+/// Pick the intra-layer tile count (the partition axis, [`crate::exec::partition`])
+/// for one generated layer: evaluate power-of-two tile counts up to
+/// `max_tiles` with the partitioned performance model
+/// ([`PerfModel::estimate_layer_partitioned`] — max-over-tiles latency
+/// on private-L1 / sliced-LLC hierarchies, plus fork/join and
+/// shared-LLC contention) and return `(tiles, modeled_cycles)` for the
+/// cheapest. `tiles == 1` means the fan-out never pays for itself on
+/// this layer (small accumulators are dominated by the fork/join
+/// constant). `acc_elems`/`align` mirror the executor's band split, so
+/// the priced bands are exactly the bands that will run.
+pub fn choose_tiles(
+    prog: &Program,
+    schedule: &[Bases],
+    acc_elems: usize,
+    align: usize,
+    sample: usize,
+    max_tiles: usize,
+) -> (usize, f64) {
+    let pm = PerfModel::neoverse_n1();
+    let mut best_tiles = 1usize;
+    let mut best_cycles =
+        pm.estimate_layer_partitioned(prog, schedule, acc_elems, align, sample, 1);
+    let mut t = 2usize;
+    while t <= max_tiles {
+        let cycles =
+            pm.estimate_layer_partitioned(prog, schedule, acc_elems, align, sample, t);
+        if cycles < best_cycles {
+            best_tiles = t;
+            best_cycles = cycles;
+        }
+        t *= 2;
+    }
+    (best_tiles, best_cycles)
+}
+
 /// Enumerate + heuristic-prune the candidate specs for every anchor:
 /// each anchor keeps its basic dataflow plus the
 /// `survivors_per_anchor` best-scoring extended specs. The returned
@@ -285,6 +320,27 @@ mod tests {
             assert!(specs.iter().all(|s| s.fits(&m) && s.is_sensible()));
             assert!(specs.len() > 3);
         }
+    }
+
+    #[test]
+    fn choose_tiles_returns_the_cheapest_power_of_two() {
+        let m = MachineConfig::neon(128);
+        let cfg = small_cfg();
+        let spec = DataflowSpec::basic(Anchor::Output);
+        let prog = crate::codegen::generate(&cfg, &spec, &m);
+        let schedule = crate::codegen::schedule(&cfg, &m);
+        let acc = cfg.out_channels * cfg.e_size();
+        let pm = PerfModel::neoverse_n1();
+        let baseline =
+            pm.estimate_layer_partitioned(&prog, &schedule, acc, cfg.e_size(), 2, 1);
+        let (tiles, cycles) = choose_tiles(&prog, &schedule, acc, cfg.e_size(), 2, 4);
+        assert!(tiles == 1 || tiles == 2 || tiles == 4, "tiles = {tiles}");
+        assert!(cycles <= baseline, "argmin exceeded the t=1 baseline");
+        if tiles == 1 {
+            assert_eq!(cycles, baseline);
+        }
+        // Without a core budget the axis is a no-op.
+        assert_eq!(choose_tiles(&prog, &schedule, acc, cfg.e_size(), 2, 1).0, 1);
     }
 
     #[test]

@@ -92,6 +92,25 @@ impl Cache {
         false
     }
 
+    /// Total capacity in bytes (geometry accessor for slicing).
+    pub fn capacity_bytes(&self) -> usize {
+        self.sets * self.ways * self.line_bytes
+    }
+
+    /// A fresh (cold) cache holding this one's per-core slice of a
+    /// shared capacity: same ways and line size, `1/parts` of the sets
+    /// (rounded down to a power of two, at least one set). Used by the
+    /// partitioned perf model — when `parts` tiles contend for a shared
+    /// LLC, each tile's effective capacity is its slice.
+    pub fn sliced(&self, parts: usize) -> Cache {
+        let parts = parts.max(1);
+        let mut sets = (self.sets / parts).max(1);
+        if !sets.is_power_of_two() {
+            sets = sets.next_power_of_two() / 2;
+        }
+        Cache::new(sets * self.ways * self.line_bytes, self.ways, self.line_bytes)
+    }
+
     /// Reset statistics but keep contents (for cold/steady-state sampling).
     pub fn reset_stats(&mut self) {
         self.hits = 0;
@@ -180,6 +199,19 @@ mod tests {
                 assert_eq!(h.l1.misses, 0);
             }
         }
+    }
+
+    #[test]
+    fn sliced_shares_capacity_in_power_of_two_sets() {
+        let l2 = Cache::n1_l2();
+        assert_eq!(l2.capacity_bytes(), 1024 * 1024);
+        assert_eq!(l2.sliced(1).capacity_bytes(), 1024 * 1024);
+        assert_eq!(l2.sliced(4).capacity_bytes(), 256 * 1024);
+        // Non-power-of-two shares round down to a power-of-two set
+        // count (2048/3 = 682 → 512 sets → 256 KiB).
+        assert_eq!(l2.sliced(3).capacity_bytes(), 256 * 1024);
+        // Never below one set.
+        assert!(l2.sliced(1 << 20).capacity_bytes() >= 8 * 64);
     }
 
     #[test]

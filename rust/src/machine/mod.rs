@@ -26,7 +26,7 @@ pub mod perf;
 
 pub use interp::{Buffers, DecodedProgram, Interp, MicroOp};
 pub use native::{LowerStats, NativeKernel, RegFile};
-pub use perf::{CostModel, PerfStats, PerfModel};
+pub use perf::{CostModel, PerfStats, PerfModel, LLC_CONTENTION_FACTOR, TILE_FORK_JOIN_CYCLES};
 
 /// Machine configuration (the paper's §II-E register-file terms).
 /// `Hash` so the coordinator's plan cache can key on it.

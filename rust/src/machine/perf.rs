@@ -25,6 +25,17 @@ use crate::isa::{Buf, Mode, Program, VInstr, REG_BYTES};
 use super::cache::Hierarchy;
 use super::Bases;
 
+/// Modeled fork/join overhead of an intra-layer tile fan-out (thread
+/// wake + join barrier) — the same constant family as
+/// `coordinator::threaded_cycles` uses for image-level threading.
+pub const TILE_FORK_JOIN_CYCLES: f64 = 3000.0;
+
+/// Shared-LLC contention coefficient: the fraction of an L2-miss
+/// penalty charged again, per miss, scaled by the share of co-running
+/// tiles — concurrent tiles compete for LLC bandwidth and fill, so miss
+/// traffic costs more than it does single-core.
+pub const LLC_CONTENTION_FACTOR: f64 = 0.2;
+
 /// Per-class instruction costs in cycles (reciprocal throughput of the
 /// NEON macro sequence each abstract op stands for).
 #[derive(Clone, Copy, Debug)]
@@ -290,6 +301,62 @@ impl PerfModel {
         let rest = (schedule.len() - sample) as f64;
         total.add(&last.scaled(rest));
         total
+    }
+
+    /// Price an intra-layer partition ([`crate::exec::partition`]):
+    /// split `schedule` into `tiles` contiguous output bands
+    /// (`acc_elems` accumulator elements banded on `align`, mirroring
+    /// the executor's split exactly), estimate each tile on a private
+    /// hierarchy — full-size private L1, and a `1/tiles` capacity slice
+    /// of the shared LLC ([`super::cache::Cache::sliced`]) — then
+    /// combine: layer latency is the *slowest* tile (tiles run
+    /// concurrently), plus the fork/join constant
+    /// ([`TILE_FORK_JOIN_CYCLES`]), plus a shared-LLC contention term
+    /// proportional to the miss traffic the co-running tiles inject
+    /// ([`LLC_CONTENTION_FACTOR`]). Returns modeled cycles; `tiles <= 1`
+    /// degrades to the plain single-core estimate on a cold hierarchy.
+    pub fn estimate_layer_partitioned(
+        &self,
+        prog: &Program,
+        schedule: &[Bases],
+        acc_elems: usize,
+        align: usize,
+        sample: usize,
+        tiles: usize,
+    ) -> f64 {
+        let single = |cost: CostModel, hier: &Hierarchy| {
+            let mut pm = PerfModel { cost, hier: hier.clone() };
+            pm.hier.flush();
+            pm.estimate_layer(prog, schedule, sample).cycles
+        };
+        if tiles <= 1 || acc_elems == 0 || align == 0 || acc_elems % align != 0 {
+            return single(self.cost, &self.hier);
+        }
+        let bounds = crate::exec::partition::band_bounds(acc_elems, align, tiles);
+        if bounds.len() <= 1 {
+            return single(self.cost, &self.hier);
+        }
+        let tile_scheds = crate::exec::partition::split_schedule(schedule, &bounds);
+        let mut worst = 0.0f64;
+        let mut l2_misses = 0u64;
+        for ts in &tile_scheds {
+            let mut pm = PerfModel {
+                cost: self.cost,
+                hier: Hierarchy {
+                    // Private L1 per core: full geometry, cold.
+                    l1: self.hier.l1.sliced(1),
+                    // Shared LLC: this tile's capacity slice.
+                    l2: self.hier.l2.sliced(bounds.len()),
+                },
+            };
+            let st = pm.estimate_layer(prog, ts, sample);
+            worst = worst.max(st.cycles);
+            l2_misses += st.l2_misses;
+        }
+        let n = bounds.len() as f64;
+        let contention =
+            LLC_CONTENTION_FACTOR * self.cost.l2_miss * l2_misses as f64 * ((n - 1.0) / n);
+        worst + TILE_FORK_JOIN_CYCLES + contention
     }
 
     /// Modeled cost of a streaming element-wise pass over activation

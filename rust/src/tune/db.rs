@@ -8,13 +8,14 @@
 //!
 //! ```json
 //! {
-//!   "schema_version": 1,
+//!   "schema_version": 2,
 //!   "entries": [
 //!     {
 //!       "layer_fp": "0f3a...", "layer": "conv3x3s1-...", "pad": 1,
 //!       "machine": {"num_regs": 32, "vec_var_bits": 128},
 //!       "backend": "native",
 //!       "spec": {"anchor": "OS", "aux": [["wgt", 5], ["in", 2]]},
+//!       "tiles": 1,
 //!       "model_cycles": 1.2e6, "measured_sec": 3.4e-5,
 //!       "spread": 0.04, "samples": 5
 //!     }
@@ -53,7 +54,11 @@ use crate::util::json::Json;
 /// On-disk schema version. Bump on any incompatible change; old files
 /// are rejected at open (the operator re-tunes rather than serving
 /// plans selected under different measurement semantics).
-pub const SCHEMA_VERSION: u64 = 1;
+///
+/// History: v1 = spec-only winners; v2 added the intra-layer partition
+/// winner (`tiles`) — v1 entries were measured without the partition
+/// axis, so serving them as "tiles: 1 wins" would be untrue.
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Stable 64-bit FNV-1a fingerprint of a (padded) conv layer config —
 /// the layer half of a [`TuneKey`]. The coordinator's spatial `pad` is
@@ -101,6 +106,11 @@ pub struct TuneEntry {
     pub pad: usize,
     /// The empirically fastest dataflow.
     pub spec: DataflowSpec,
+    /// The empirically fastest intra-layer tile count measured with
+    /// `spec` ([`crate::exec::Partition`]); 1 = single-core execution
+    /// won (or the partition axis was not in the measured candidate
+    /// set).
+    pub tiles: usize,
     /// The perf model's cycle estimate for `spec` (for model-vs-measured
     /// reporting).
     pub model_cycles: f64,
@@ -312,6 +322,7 @@ fn entry_to_json(key: &TuneKey, e: &TuneEntry) -> Json {
         .set("machine", machine)
         .set("backend", Json::s(key.backend.name()))
         .set("spec", spec_to_json(&e.spec))
+        .set("tiles", Json::from_u64(e.tiles as u64))
         .set("model_cycles", Json::Num(e.model_cycles))
         .set("measured_sec", Json::Num(e.measured_sec))
         .set("spread", Json::Num(e.spread))
@@ -347,6 +358,7 @@ fn entry_from_json(v: &Json) -> Result<(TuneKey, TuneEntry), String> {
         layer: v.get("layer").and_then(Json::as_str).unwrap_or("?").to_string(),
         pad: v.get("pad").and_then(Json::as_u64).unwrap_or(0) as usize,
         spec,
+        tiles: (v.get("tiles").and_then(Json::as_u64).unwrap_or(1) as usize).max(1),
         model_cycles: v.get("model_cycles").and_then(Json::as_f64).ok_or("bad model_cycles")?,
         measured_sec: v.get("measured_sec").and_then(Json::as_f64).ok_or("bad measured_sec")?,
         spread: v.get("spread").and_then(Json::as_f64).unwrap_or(0.0),
@@ -410,6 +422,7 @@ mod tests {
             layer: "conv3x3".into(),
             pad: 1,
             spec: DataflowSpec::optimized_os(&machine, 9),
+            tiles: 1,
             model_cycles: 12345.0,
             measured_sec: 4.2e-5,
             spread: 0.07,
@@ -484,6 +497,10 @@ mod tests {
         std::fs::write(&path, r#"{"schema_version": 999, "entries": []}"#).unwrap();
         let err = TuneDb::open(&path).unwrap_err().to_string();
         assert!(err.contains("schema_version 999"), "{err}");
+        // v1 (pre-partition) files are stale too: those winners were
+        // measured without the tiles axis.
+        std::fs::write(&path, r#"{"schema_version": 1, "entries": []}"#).unwrap();
+        assert!(TuneDb::open(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 
@@ -492,7 +509,7 @@ mod tests {
         let path = temp_path("malformed");
         std::fs::write(
             &path,
-            r#"{"schema_version": 1, "entries": [{"layer_fp": "zz"}]}"#,
+            r#"{"schema_version": 2, "entries": [{"layer_fp": "zz"}]}"#,
         )
         .unwrap();
         assert!(TuneDb::open(&path).is_err());

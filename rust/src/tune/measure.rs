@@ -31,7 +31,7 @@ use std::time::Instant;
 use crate::coordinator::plan::{LayerPlan, NetworkPlan, PlanKind};
 use crate::coordinator::run_network_functional;
 use crate::dataflow::DataflowSpec;
-use crate::exec::{Backend, PreparedNetwork};
+use crate::exec::{Backend, Partition, PreparedNetwork};
 use crate::layer::{ConvConfig, ConvKind, LayerConfig};
 use crate::machine::MachineConfig;
 use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
@@ -48,7 +48,13 @@ pub const TUNE_SHIFT: u32 = 9;
 #[derive(Clone, Debug)]
 pub struct CandidateMeasurement {
     pub spec: DataflowSpec,
-    /// Analytic model estimate (cycles) — the stage-1 ranking.
+    /// Intra-layer tile count this candidate ran with
+    /// ([`crate::exec::Partition`]); 1 = single-core.
+    pub tiles: usize,
+    /// Analytic model estimate (cycles) — the stage-1 ranking. For
+    /// `tiles > 1` this is the partitioned estimate
+    /// ([`crate::machine::PerfModel::estimate_layer_partitioned`]), so
+    /// model-vs-measured stays apples-to-apples per candidate.
     pub model_cycles: f64,
     /// Median measured per-image seconds (`f64::INFINITY` when the
     /// oracle gate disqualified the candidate).
@@ -68,8 +74,9 @@ pub struct CandidateMeasurement {
 pub struct TuneOutcome {
     pub cfg: ConvConfig,
     pub pad: usize,
-    /// Candidates in **model-rank order** (ascending model cycles), so
-    /// `measurements[0]` is the analytic pick.
+    /// Candidates in **model-rank order** (ascending model cycles),
+    /// tile counts ascending within each spec, so `measurements[0]` is
+    /// the analytic single-core pick.
     pub measurements: Vec<CandidateMeasurement>,
     /// Index of the measured winner in `measurements`.
     pub winner: usize,
@@ -100,6 +107,7 @@ impl TuneOutcome {
             layer: self.cfg.name(),
             pad: self.pad,
             spec: w.spec.clone(),
+            tiles: w.tiles,
             model_cycles: w.model_cycles,
             measured_sec: w.median_sec,
             spread: w.spread,
@@ -188,11 +196,26 @@ pub fn tune_conv(
         })
         .collect();
 
-    let mut measurements = Vec::with_capacity(shortlist.len());
+    // The partition axis ([`crate::exec::Partition`]): each shortlisted
+    // dataflow is measured at every power-of-two tile count up to
+    // `tcfg.max_tiles`, so the recorded winner is a (spec, tiles) pair.
+    // tiles=1 comes first within each spec, keeping `measurements[0]`
+    // the analytic single-core pick.
+    let mut tile_counts = vec![1usize];
+    let mut t = 2usize;
+    while t <= tcfg.max_tiles {
+        tile_counts.push(t);
+        t *= 2;
+    }
+
+    let mut measurements = Vec::with_capacity(shortlist.len() * tile_counts.len());
     for (spec, model_cycles) in shortlist {
-        measurements.push(measure_candidate(
-            cfg, pad, machine, backend, tcfg, &weights, &spec, model_cycles, &probes,
-        )?);
+        for &tiles in &tile_counts {
+            measurements.push(measure_candidate(
+                cfg, pad, machine, backend, tcfg, &weights, &spec, tiles, model_cycles,
+                &probes,
+            )?);
+        }
     }
 
     let winner = measurements
@@ -234,6 +257,7 @@ fn measure_candidate(
     tcfg: &TuneConfig,
     weights: &WeightTensor,
     spec: &DataflowSpec,
+    tiles: usize,
     model_cycles: f64,
     probes: &[Probe],
 ) -> crate::Result<CandidateMeasurement> {
@@ -241,6 +265,21 @@ fn measure_candidate(
     // this spec (`tune::kernel_for_spec`): what is timed here is what
     // gets deployed, by construction.
     let (prog, stats) = super::kernel_for_spec(cfg, spec, machine, tcfg.perf_sample);
+    // Partitioned candidates are re-scored on the partitioned model so
+    // the recorded model-vs-measured pairs compare like with like.
+    let model_cycles = if tiles > 1 {
+        let schedule = crate::codegen::schedule(cfg, machine);
+        crate::machine::PerfModel::neoverse_n1().estimate_layer_partitioned(
+            &prog,
+            &schedule,
+            cfg.out_channels * cfg.e_size(),
+            cfg.e_size(),
+            tcfg.perf_sample,
+            tiles,
+        )
+    } else {
+        model_cycles
+    };
     let mut lp = LayerPlan {
         layer: LayerConfig::Conv(*cfg),
         kind: PlanKind::Generated { spec: spec.clone(), prog, machine: *machine, pad },
@@ -248,6 +287,7 @@ fn measure_candidate(
         stats,
         weights: None,
         packed: std::sync::OnceLock::new(),
+        partition: Partition::banded(tiles),
     };
     lp.bind_weights(weights.clone());
     let plan = NetworkPlan::chain(format!("tune-{}", spec.name()), vec![lp]);
@@ -261,10 +301,11 @@ fn measure_candidate(
     // pins both to a candidate-independent ground truth.
     for probe in probes {
         let functional = run_network_functional(&plan, &probe.input, TUNE_SHIFT)?;
-        let got = engine.run(&probe.input, TUNE_SHIFT, &mut arena)?;
+        let got = engine.run_with(&probe.input, TUNE_SHIFT, &mut arena, tiles)?;
         if functional.data != probe.expected.data || got.data != probe.expected.data {
             return Ok(CandidateMeasurement {
                 spec: spec.clone(),
+                tiles,
                 model_cycles,
                 median_sec: f64::INFINITY,
                 spread: 0.0,
@@ -278,7 +319,7 @@ fn measure_candidate(
     // Warmup (caches, branch predictors, first-touch page faults).
     for i in 0..tcfg.warmup {
         let input = &probes[i % probes.len()].input;
-        let _ = engine.run(input, TUNE_SHIFT, &mut arena)?;
+        let _ = engine.run_with(input, TUNE_SHIFT, &mut arena, tiles)?;
     }
 
     // Median-of-N timing with spread-based retry: a round whose
@@ -294,7 +335,7 @@ fn measure_candidate(
             let t0 = Instant::now();
             for i in 0..iters {
                 let input = &probes[(s + i) % probes.len()].input;
-                let _ = engine.run(input, TUNE_SHIFT, &mut arena)?;
+                let _ = engine.run_with(input, TUNE_SHIFT, &mut arena, tiles)?;
             }
             samples.push(t0.elapsed().as_secs_f64() / iters as f64);
         }
@@ -318,6 +359,7 @@ fn measure_candidate(
 
     Ok(CandidateMeasurement {
         spec: spec.clone(),
+        tiles,
         model_cycles,
         median_sec,
         spread,
@@ -367,6 +409,25 @@ mod tests {
         assert!(
             tune_conv(&small, 5, &machine, Backend::Native, &TuneConfig::quick(), None).is_err()
         );
+    }
+
+    #[test]
+    fn partition_axis_multiplies_the_measured_set() {
+        let machine = MachineConfig::neon(128);
+        let cfg = padded_conv(&ConvConfig::simple(8, 8, 3, 3, 1, 16, 32), &machine);
+        let tcfg = TuneConfig { max_tiles: 2, ..TuneConfig::quick() };
+        let out = tune_conv(&cfg, 0, &machine, Backend::Native, &tcfg, None).unwrap();
+        // Every shortlisted spec is measured at tiles = 1 and tiles = 2,
+        // and the partitioned runs pass the same bit-identity oracle
+        // gate as the single-core ones.
+        assert_eq!(out.measurements.len() % 2, 0);
+        assert!(out.measurements.iter().any(|m| m.tiles == 2));
+        assert!(out.measurements.iter().all(|m| m.tiles == 1 || m.tiles == 2));
+        assert!(out.measurements.iter().all(|m| m.oracle_ok));
+        let entry = out.entry();
+        assert!(entry.tiles == 1 || entry.tiles == 2);
+        // measurements[0] stays the analytic single-core pick.
+        assert_eq!(out.model_pick().tiles, 1);
     }
 
     #[test]

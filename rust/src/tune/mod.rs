@@ -89,6 +89,11 @@ pub struct TuneConfig {
     pub spread_tolerance: f64,
     /// `perf_sample` handed to the model when scoring the shortlist.
     pub perf_sample: usize,
+    /// Largest intra-layer tile count measured per shortlisted spec
+    /// ([`crate::exec::Partition`]): every power of two up to this is
+    /// timed, so the recorded winner is a (spec, tiles) pair. 1 (the
+    /// default) keeps the pre-partition single-core candidate set.
+    pub max_tiles: usize,
 }
 
 impl Default for TuneConfig {
@@ -101,6 +106,7 @@ impl Default for TuneConfig {
             max_retries: 2,
             spread_tolerance: 0.25,
             perf_sample: 2,
+            max_tiles: 1,
         }
     }
 }
@@ -116,6 +122,7 @@ impl TuneConfig {
             max_retries: 1,
             spread_tolerance: 0.6,
             perf_sample: 1,
+            max_tiles: 1,
         }
     }
 }
@@ -181,8 +188,9 @@ pub(crate) fn kernel_for_spec(
 }
 
 /// Rebuild `plan` with every generated-conv kernel replaced by its
-/// recorded tuning winner (when the db knows one for this machine +
-/// backend and it differs from the current kernel). Returns `None` when
+/// recorded tuning winner — dataflow spec *and* intra-layer partition
+/// ([`TuneEntry::tiles`]) — when the db knows one for this machine +
+/// backend and it differs from the current kernel. Returns `None` when
 /// nothing changes. `perf_sample` feeds the re-estimated model stats of
 /// swapped kernels (pass the planner/tuner sampling in use). Weights
 /// and edges are preserved, so the result is servable immediately; its
@@ -207,13 +215,30 @@ pub fn retune_plan(
         };
         let key = TuneKey::for_layer(&cfg, &machine, backend);
         let Some(entry) = db.get(&key) else { continue };
-        if entry.spec == spec {
+        let tuned_partition = crate::exec::Partition::banded(entry.tiles);
+        if entry.spec == spec && tuned_partition == lp.partition {
             continue;
         }
         let Some(tuned_spec) = usable_entry_spec(&entry, &machine) else { continue };
-        let (prog, stats) = kernel_for_spec(&cfg, &tuned_spec, &machine, perf_sample);
+        let (prog, mut stats) = kernel_for_spec(&cfg, &tuned_spec, &machine, perf_sample);
+        // A measured partition winner is applied alongside the spec
+        // (any tile count is bit-identical, so a hand-edited value is
+        // at worst slow, never wrong); its model stats are re-priced on
+        // the partitioned estimate.
+        if !tuned_partition.is_single() {
+            let schedule = crate::codegen::schedule(&cfg, &machine);
+            stats.cycles = PerfModel::neoverse_n1().estimate_layer_partitioned(
+                &prog,
+                &schedule,
+                cfg.out_channels * cfg.e_size(),
+                cfg.e_size(),
+                perf_sample,
+                tuned_partition.tiles,
+            );
+        }
         lp.kind = PlanKind::Generated { spec: tuned_spec, prog, machine, pad };
         lp.stats = stats;
+        lp.partition = tuned_partition;
         changed = true;
     }
     changed.then_some(out)
@@ -270,6 +295,7 @@ mod tests {
                 layer: cfg.name(),
                 pad,
                 spec: other.clone(),
+                tiles: 1,
                 model_cycles: 1.0,
                 measured_sec: 1e-6,
                 spread: 0.0,
@@ -294,7 +320,8 @@ mod tests {
             TuneEntry {
                 layer: cfg.name(),
                 pad,
-                spec: cur_spec,
+                spec: cur_spec.clone(),
+                tiles: 1,
                 model_cycles: 1.0,
                 measured_sec: 1e-6,
                 spread: 0.0,
@@ -303,6 +330,29 @@ mod tests {
         )
         .unwrap();
         assert!(retune_plan(&plan, &db2, Backend::Native, 2).is_none());
+
+        // Same spec but a measured partition winner: retuning applies
+        // the tiles and the fingerprint splits.
+        let db3 = TuneDb::in_memory();
+        db3.record(
+            key,
+            TuneEntry {
+                layer: cfg.name(),
+                pad,
+                spec: cur_spec,
+                tiles: 2,
+                model_cycles: 1.0,
+                measured_sec: 1e-6,
+                spread: 0.0,
+                samples: 3,
+            },
+        )
+        .unwrap();
+        let tiled = retune_plan(&plan, &db3, Backend::Native, 2).expect("tiles must retune");
+        assert_eq!(tiled.layers[0].partition, crate::exec::Partition::banded(2));
+        assert_ne!(plan_fingerprint(&plan), plan_fingerprint(&tiled));
+        // And the tiled plan stays servable + bit-identical.
+        assert!(tiled.layers[0].weights().is_some());
     }
 
     #[test]
@@ -325,6 +375,7 @@ mod tests {
                 layer: cfg.name(),
                 pad,
                 spec: huge,
+                tiles: 1,
                 model_cycles: 1.0,
                 measured_sec: 1e-6,
                 spread: 0.0,

@@ -75,7 +75,11 @@ pub fn run_layers(
         let row = TuneReportRow {
             layer: cfg.name(),
             model_pick: m.spec.name(),
-            measured_pick: w.spec.name(),
+            measured_pick: if w.tiles > 1 {
+                format!("{} x{} tiles", w.spec.name(), w.tiles)
+            } else {
+                w.spec.name()
+            },
             agree: outcome.agrees_with_model(),
             spearman: outcome.spearman,
             model_pick_ips: if m.median_sec.is_finite() { 1.0 / m.median_sec } else { 0.0 },

@@ -117,9 +117,14 @@ impl Config {
     }
 }
 
+/// The `[sweep]` keys [`sweep_from`] understands.
+pub const SWEEP_KEYS: &[&str] = &["filters", "inputs", "nfs", "strides", "vls"];
+
 /// Build a [`crate::report::Sweep`] from the `[sweep]` section, falling
-/// back to the paper grid.
+/// back to the paper grid. Unknown keys warn loudly — a `filers = 3`
+/// typo must not silently sweep the full paper grid.
 pub fn sweep_from(cfg: &Config) -> crate::report::Sweep {
+    warn_unknown_keys(cfg, "sweep", SWEEP_KEYS);
     let paper = crate::report::Sweep::paper();
     crate::report::Sweep {
         filters: cfg.get_usize_list("sweep", "filters", &paper.filters),
@@ -127,6 +132,20 @@ pub fn sweep_from(cfg: &Config) -> crate::report::Sweep {
         nfs: cfg.get_usize_list("sweep", "nfs", &paper.nfs),
         strides: cfg.get_usize_list("sweep", "strides", &paper.strides),
         vls: cfg.get_usize_list("sweep", "vls", &paper.vls),
+    }
+}
+
+/// Warn (once per key) about section keys no consumer understands —
+/// the shared loud-warning audit behind [`planner_from`],
+/// [`server_from`] and [`sweep_from`]. A misspelt key would otherwise
+/// quietly mean "use the default", which is exactly the failure mode a
+/// config file exists to prevent.
+fn warn_unknown_keys(cfg: &Config, section: &str, known: &[&str]) {
+    for key in cfg.unknown_keys(section, known) {
+        eprintln!(
+            "yflows config: unknown [{section}] key `{key}` ignored (known keys: {})",
+            known.join(", ")
+        );
     }
 }
 
@@ -138,23 +157,25 @@ pub const PLANNER_KEYS: &[&str] = &[
     "perf_sample",
     "backend",
     "tune",
+    "max_tiles",
 ];
 
 /// Build [`crate::coordinator::plan::PlannerOptions`] from `[planner]`.
 /// Unrecognized keys (not just unrecognized *values*) warn loudly: a
 /// `tunee = measure` typo must not silently plan untuned.
 pub fn planner_from(cfg: &Config) -> crate::coordinator::plan::PlannerOptions {
-    for key in cfg.unknown_keys("planner", PLANNER_KEYS) {
-        eprintln!(
-            "yflows config: unknown [planner] key `{key}` ignored (known keys: {})",
-            PLANNER_KEYS.join(", ")
-        );
-    }
+    warn_unknown_keys(cfg, "planner", PLANNER_KEYS);
     let vl = cfg.get_parse("planner", "vector_length", 128usize);
     crate::coordinator::plan::PlannerOptions {
         machine: crate::machine::MachineConfig::neon(vl),
         explore_each_layer: cfg.get_bool("planner", "explore_each_layer", false),
         perf_sample: cfg.get_parse("planner", "perf_sample", 2usize),
+        // `max_tiles = N` opens the intra-layer partition axis
+        // ([`crate::exec::Partition`]): the planner may shard a layer's
+        // output channels across up to N cores when the partitioned
+        // perf model says it wins. 1 (the default) plans exactly as
+        // before the axis existed.
+        max_tiles: cfg.get_parse("planner", "max_tiles", 1usize).max(1),
         // `backend = interp` opts a deployment back onto the reference
         // interpreter; absent means native. Takes effect wherever the
         // options are carried through to engine preparation
@@ -196,6 +217,39 @@ pub fn planner_from(cfg: &Config) -> crate::coordinator::plan::PlannerOptions {
             }
         },
         ..Default::default()
+    }
+}
+
+/// The `[server]` keys [`server_from`] understands.
+pub const SERVER_KEYS: &[&str] = &[
+    "workers",
+    "max_batch",
+    "batch_deadline_ms",
+    "requant_shift",
+    "exec_threads",
+    "intra_threads",
+];
+
+/// Build [`crate::coordinator::ServerConfig`] from `[server]` (backend
+/// and tuning come from `[planner]` via [`planner_from`], so one config
+/// file cannot say two different things about them). Same loud
+/// unknown-key policy as the planner: an `exec_treads = 8` typo must
+/// not silently serve on the default thread budget.
+pub fn server_from(cfg: &Config) -> crate::coordinator::ServerConfig {
+    warn_unknown_keys(cfg, "server", SERVER_KEYS);
+    let d = crate::coordinator::ServerConfig::default();
+    crate::coordinator::ServerConfig {
+        workers: cfg.get_parse("server", "workers", d.workers),
+        max_batch: cfg.get_parse("server", "max_batch", d.max_batch),
+        batch_deadline: std::time::Duration::from_millis(cfg.get_parse(
+            "server",
+            "batch_deadline_ms",
+            d.batch_deadline.as_millis() as u64,
+        )),
+        requant_shift: cfg.get_parse("server", "requant_shift", d.requant_shift),
+        exec_threads: cfg.get_parse("server", "exec_threads", d.exec_threads),
+        intra_threads: cfg.get_parse("server", "intra_threads", d.intra_threads),
+        ..d
     }
 }
 
@@ -271,6 +325,54 @@ vls = 128, 512
         ] {
             let c = Config::parse(text).unwrap();
             assert_eq!(planner_from(&c).tune, want, "{text}");
+        }
+    }
+
+    #[test]
+    fn builds_server_config_with_defaults_and_overrides() {
+        let c = Config::parse(
+            "[server]\nworkers = 3\nmax_batch = 16\nbatch_deadline_ms = 7\nintra_threads = 4\n",
+        )
+        .unwrap();
+        let s = server_from(&c);
+        assert_eq!(s.workers, 3);
+        assert_eq!(s.max_batch, 16);
+        assert_eq!(s.batch_deadline, std::time::Duration::from_millis(7));
+        assert_eq!(s.intra_threads, 4);
+        // Unset keys keep the serving defaults.
+        let d = crate::coordinator::ServerConfig::default();
+        assert_eq!(s.requant_shift, d.requant_shift);
+        assert_eq!(s.exec_threads, d.exec_threads);
+        assert_eq!(s.tune, d.tune);
+        // An empty config is exactly the default server.
+        let s = server_from(&Config::default());
+        assert_eq!(s.workers, d.workers);
+        assert_eq!(s.intra_threads, d.intra_threads);
+    }
+
+    #[test]
+    fn planner_reads_max_tiles() {
+        let c = Config::parse("[planner]\nmax_tiles = 4\n").unwrap();
+        assert_eq!(planner_from(&c).max_tiles, 4);
+        // Absent (and zero) keep the axis off.
+        assert_eq!(planner_from(&Config::default()).max_tiles, 1);
+        let c = Config::parse("[planner]\nmax_tiles = 0\n").unwrap();
+        assert_eq!(planner_from(&c).max_tiles, 1);
+    }
+
+    #[test]
+    fn flags_unknown_keys_in_every_audited_section() {
+        // `exec_treads` is the serving typo this audit exists for.
+        let c = Config::parse("[server]\nexec_treads = 8\nworkers = 2\n").unwrap();
+        assert_eq!(c.unknown_keys("server", SERVER_KEYS), vec!["exec_treads".to_string()]);
+        let c = Config::parse("[sweep]\nfilers = 3\n").unwrap();
+        assert_eq!(c.unknown_keys("sweep", SWEEP_KEYS), vec!["filers".to_string()]);
+        // Every known key passes clean in both sections.
+        for (section, keys) in [("server", SERVER_KEYS), ("sweep", SWEEP_KEYS)] {
+            let all =
+                keys.iter().map(|k| format!("{k} = 1")).collect::<Vec<_>>().join("\n");
+            let c = Config::parse(&format!("[{section}]\n{all}\n")).unwrap();
+            assert!(c.unknown_keys(section, keys).is_empty());
         }
     }
 

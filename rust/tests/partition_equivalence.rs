@@ -1,0 +1,402 @@
+//! Integration: intra-layer partitioned execution is bit-identical to
+//! the single-core path on every kernel kind and at every thread count.
+//!
+//! * Forced output-band partitions (2..8 tiles) on extended-OS,
+//!   stride-2, 256-bit, depthwise, and grouped convs match
+//!   `run_network_functional` and the unpartitioned prepared engine
+//!   byte-for-byte, at `intra_threads` 1, 2, 4, and 8.
+//! * Randomized property: random conv shapes × random tile counts ×
+//!   random intra thread counts never change a byte.
+//! * A planner given a tile budget (`max_tiles > 1`) produces plans
+//!   whose prepared outputs still match the budget-less plan exactly,
+//!   and the partition is part of the plan fingerprint.
+//! * Graph networks (residual Add, channel Concat) with partitioned
+//!   conv nodes stay bit-identical to the functional runner.
+//! * Binary XNOR kernels never flow through coordinator plans, so their
+//!   schedules are covered at the raw `partition::split_schedule`
+//!   level: per-band tile runs reproduce the full-schedule accumulator.
+//! * Racing fan-out: `run_batch_with` (image threads × tile threads)
+//!   matches sequential single-core execution image by image.
+
+use yflows::codegen::binary;
+use yflows::coordinator::{
+    self,
+    plan::{plan_fingerprint, plan_network_uncached, NetworkPlan, Planner, PlannerOptions},
+};
+use yflows::exec::{partition, Partition, PreparedNetwork};
+use yflows::layer::{ConvConfig, LayerConfig, PoolConfig};
+use yflows::machine::{Buffers, DecodedProgram, Interp, MachineConfig};
+use yflows::nets::{Network, Node};
+use yflows::quant::{pack_binary_act, pack_binary_wgt};
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::prop::check;
+
+const SHIFT: u32 = 9;
+
+/// Single-conv chain plan with weights bound (the partition under test
+/// is forced by the caller afterwards).
+fn conv_plan(machine: MachineConfig, cfg: ConvConfig, pad: usize, seed: u64) -> NetworkPlan {
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions {
+        machine,
+        explore_each_layer: false,
+        perf_sample: 1,
+        explore_threads: 1,
+        ..Default::default()
+    });
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), pad);
+    let depthwise = cfg.groups == cfg.in_channels && cfg.groups > 1;
+    lp.bind_weights(if depthwise {
+        WeightTensor::random(
+            WeightShape::new(1, cfg.in_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRS,
+            seed,
+        )
+    } else {
+        WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            seed,
+        )
+    });
+    NetworkPlan::chain("partition-case", vec![lp])
+}
+
+fn conv_input(machine: &MachineConfig, cfg: &ConvConfig, pad: usize, seed: u64) -> ActTensor {
+    ActTensor::random(
+        ActShape::new(cfg.in_channels, cfg.ih - 2 * pad, cfg.iw - 2 * pad),
+        ActLayout::NCHWc { c: machine.c_int8() },
+        seed,
+    )
+}
+
+/// The core check: force `tiles` on every conv layer of `plan`, prepare,
+/// and assert outputs match the functional path byte-for-byte at every
+/// intra-thread count (1 = sequential tiles, >1 = scoped fan-out).
+fn assert_partitioned_bit_identity(plan: &mut NetworkPlan, input: &ActTensor, tiles: usize) {
+    let want = coordinator::run_network_functional(plan, input, SHIFT).expect("functional");
+
+    for lp in plan.layers.iter_mut() {
+        if matches!(lp.layer, LayerConfig::Conv(_)) {
+            lp.partition = Partition::banded(tiles);
+        }
+    }
+    let prepared = PreparedNetwork::prepare(plan).expect("prepare partitioned");
+    if tiles > 1 {
+        assert!(
+            prepared.max_tiles() > 1,
+            "forcing {tiles} tiles must partition at least one layer"
+        );
+        assert!(prepared.max_tiles() <= tiles, "tile count must clamp to the request");
+    }
+    let mut arena = prepared.new_arena();
+    for intra in [1usize, 2, 4, 8] {
+        let got = prepared.run_with(input, SHIFT, &mut arena, intra).expect("partitioned run");
+        assert_eq!(got.shape, want.shape, "shape diverges at {tiles} tiles, intra {intra}");
+        assert_eq!(got.layout, want.layout, "layout diverges at {tiles} tiles, intra {intra}");
+        assert_eq!(got.data, want.data, "bytes diverge at {tiles} tiles, intra {intra}");
+    }
+}
+
+#[test]
+fn forced_partitions_match_functional_across_dataflows() {
+    // (machine, cfg, pad): extended OS at 128-bit, stride 2, wide
+    // vector variables at 256-bit, depthwise, grouped.
+    let m128 = MachineConfig::neon(128);
+    let m256 = MachineConfig::neon(256);
+    let cases = [
+        (m128, ConvConfig::simple(10, 10, 3, 3, 1, 16, 32), 1, 31u64),
+        (m128, ConvConfig::simple(9, 9, 3, 3, 2, 16, 32), 1, 32),
+        (m256, ConvConfig::simple(10, 10, 3, 3, 1, 32, 64), 1, 33),
+        (m128, ConvConfig::simple(6, 6, 1, 1, 1, 32, 48), 0, 34),
+        (m128, ConvConfig::depthwise(10, 10, 3, 3, 1, 32), 1, 35),
+        (m128, ConvConfig::grouped(10, 10, 3, 3, 1, 32, 32, 2), 1, 36),
+    ];
+    for (machine, cfg, pad, seed) in cases {
+        let input = conv_input(&machine, &cfg, pad, seed);
+        for tiles in [2usize, 3, 4, 8] {
+            let mut plan = conv_plan(machine, cfg, pad, seed);
+            assert_partitioned_bit_identity(&mut plan, &input, tiles);
+        }
+    }
+}
+
+#[test]
+fn random_shapes_and_tile_counts_never_change_bytes() {
+    check("partition-equivalence", 10, |rng| {
+        let machine = MachineConfig::neon(128);
+        let hw = rng.range(6, 11);
+        let stride = rng.range(1, 2);
+        let (fh, pad) = if rng.range(0, 1) == 0 { (3, 1) } else { (1, 0) };
+        // Keep (ih - fh) divisible by stride so the planner's padded
+        // shape is the drawn shape.
+        let ih = {
+            let mut ih = hw + 2 * pad;
+            while (ih - fh) % stride != 0 {
+                ih += 1;
+            }
+            ih
+        };
+        let in_ch = *rng.pick(&[16usize, 32]);
+        let out_ch = *rng.pick(&[16usize, 32, 48]);
+        let cfg = ConvConfig::simple(ih, ih, fh, fh, stride, in_ch, out_ch);
+        let tiles = rng.range(2, 6);
+        let seed = rng.next_u64();
+        let mut plan = conv_plan(machine, cfg, pad, seed);
+        let input = conv_input(&machine, &cfg, pad, seed ^ 0xA5);
+        assert_partitioned_bit_identity(&mut plan, &input, tiles);
+    });
+}
+
+#[test]
+fn planner_tile_budget_is_priced_fingerprinted_and_bit_identical() {
+    let machine = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(18, 18, 3, 3, 1, 16, 64);
+    let c = machine.c_int8();
+    let plan_with_budget = |max_tiles: usize| {
+        let mut planner =
+            Planner::new(PlannerOptions { machine, max_tiles, ..Default::default() });
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 1);
+        lp.bind_weights(WeightTensor::random(
+            WeightShape::new(16, 64, 3, 3),
+            WeightLayout::CKRSc { c },
+            77,
+        ));
+        NetworkPlan::chain("budgeted", vec![lp])
+    };
+
+    let single = plan_with_budget(1);
+    assert!(single.layers[0].partition.is_single(), "budget 1 must never partition");
+
+    let budgeted = plan_with_budget(8);
+    // Whatever the model chose, execution must not care.
+    let input = conv_input(&machine, &cfg, 1, 91);
+    let want = coordinator::run_network_functional(&single, &input, SHIFT).unwrap();
+    let prepared = PreparedNetwork::prepare(&budgeted).unwrap();
+    let mut arena = prepared.new_arena();
+    for intra in [1usize, 4] {
+        let got = prepared.run_with(&input, SHIFT, &mut arena, intra).unwrap();
+        assert_eq!(got.data, want.data, "budgeted plan diverges at intra {intra}");
+    }
+
+    // The partition is plan state: forcing a different tile count must
+    // change the fingerprint (it splits prepared-cache entries).
+    let mut forced = plan_with_budget(1);
+    forced.layers[0].partition = Partition::banded(2);
+    assert_ne!(
+        plan_fingerprint(&single),
+        plan_fingerprint(&forced),
+        "partition must be part of the plan fingerprint"
+    );
+}
+
+/// Mixed chain exercising every prepared kernel kind with partitions
+/// forced on all convs: simple conv → depthwise → shuffle → grouped →
+/// max pool → GAP.
+fn mixed_partitioned_plan(machine: MachineConfig, tiles: usize) -> NetworkPlan {
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut layers = Vec::new();
+
+    let conv = ConvConfig::simple(10, 10, 3, 3, 1, 16, 32);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(conv), 1);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(16, 32, 3, 3),
+        WeightLayout::CKRSc { c },
+        901,
+    ));
+    layers.push(lp);
+
+    let dw = ConvConfig::depthwise(10, 10, 3, 3, 1, 32);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(dw), 1);
+    lp.bind_weights(WeightTensor::random(WeightShape::new(1, 32, 3, 3), WeightLayout::CKRS, 902));
+    layers.push(lp);
+
+    layers.push(planner.plan_layer(
+        &LayerConfig::ChannelShuffle { channels: 32, h: 8, w: 8, groups: 2 },
+        0,
+    ));
+
+    let grouped = ConvConfig::grouped(10, 10, 3, 3, 1, 32, 32, 2);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(grouped), 1);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(16, 32, 3, 3),
+        WeightLayout::CKRSc { c },
+        903,
+    ));
+    layers.push(lp);
+
+    layers.push(planner.plan_layer(&LayerConfig::Pool(PoolConfig::max(32, 8, 8, 2, 2)), 0));
+    layers.push(planner.plan_layer(&LayerConfig::GlobalAvgPool { channels: 32, h: 4, w: 4 }, 0));
+
+    let mut plan = NetworkPlan::chain("mixed-partitioned", layers);
+    for lp in plan.layers.iter_mut() {
+        if matches!(lp.layer, LayerConfig::Conv(_)) {
+            lp.partition = Partition::banded(tiles);
+        }
+    }
+    plan
+}
+
+#[test]
+fn mixed_kinds_partitioned_chain_matches_functional() {
+    let machine = MachineConfig::neon(128);
+    for tiles in [2usize, 4] {
+        let plan = mixed_partitioned_plan(machine, tiles);
+        let prepared = PreparedNetwork::prepare(&plan).unwrap();
+        assert!(prepared.max_tiles() > 1);
+        let mut arena = prepared.new_arena();
+        for seed in 0..3u64 {
+            let input =
+                ActTensor::random(ActShape::new(16, 8, 8), ActLayout::NCHWc { c: 16 }, seed);
+            let want = coordinator::run_network_functional(&plan, &input, SHIFT).unwrap();
+            for intra in [1usize, 3] {
+                let got = prepared.run_with(&input, SHIFT, &mut arena, intra).unwrap();
+                assert_eq!(got.data, want.data, "tiles {tiles}, intra {intra}, image {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn graph_with_add_and_concat_partitioned_matches_functional() {
+    // Diamond with a residual Add, then a Concat of both branches:
+    //   conv0 → conv1 ─┐              ┌─ concat(1, 2) → conv4
+    //        └─ conv2 ─┴─ add(1, 2) ──┘ (conv4 reads the concat)
+    let hw = 6;
+    let conv3x3 = |in_ch: usize, out_ch: usize| {
+        LayerConfig::Conv(ConvConfig::simple(hw + 2, hw + 2, 3, 3, 1, in_ch, out_ch))
+    };
+    let net = Network {
+        name: "partitioned-diamond".into(),
+        nodes: vec![
+            Node { layer: conv3x3(16, 32), inputs: vec![] },
+            Node { layer: conv3x3(32, 32), inputs: vec![0] },
+            Node { layer: conv3x3(32, 32), inputs: vec![0] },
+            Node { layer: LayerConfig::Add { channels: 32, h: hw, w: hw }, inputs: vec![1, 2] },
+            Node {
+                layer: LayerConfig::Concat { parts: vec![32, 32], h: hw, w: hw },
+                inputs: vec![3, 1],
+            },
+            Node { layer: conv3x3(64, 32), inputs: vec![4] },
+        ],
+        input_hw: (hw, hw),
+    };
+    let machine = MachineConfig::neon(128);
+    let mut plan = plan_network_uncached(
+        &net,
+        PlannerOptions {
+            machine,
+            explore_each_layer: false,
+            perf_sample: 1,
+            explore_threads: 1,
+            ..Default::default()
+        },
+    );
+    let c = machine.c_int8();
+    for (i, lp) in plan.layers.iter_mut().enumerate() {
+        if let LayerConfig::Conv(cfg) = &lp.layer {
+            let cfg = *cfg; // end the borrow of lp.layer before bind_weights
+            lp.bind_weights(WeightTensor::random(
+                WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+                WeightLayout::CKRSc { c },
+                600 + i as u64,
+            ));
+        }
+    }
+    let input = ActTensor::random(ActShape::new(16, hw, hw), ActLayout::NCHWc { c }, 61);
+    assert_partitioned_bit_identity(&mut plan, &input, 3);
+}
+
+#[test]
+fn binary_schedules_partition_bit_identically_at_raw_level() {
+    // Binary convs never flow through coordinator plans, so cover the
+    // split at the schedule level: per-band tile runs into disjoint
+    // accumulator slices must reproduce the full-schedule accumulator.
+    let machine = MachineConfig::neon(128);
+    let c_bits = machine.c_binary();
+    let cfg = ConvConfig::simple(6, 6, 3, 3, 1, c_bits, 4);
+    let mut rng = yflows::util::rng::Rng::new(17);
+    let mut input = ActTensor::zeros(
+        ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+        ActLayout::NCHWc { c: c_bits },
+    );
+    for v in input.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let mut weights = WeightTensor::zeros(
+        WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+        WeightLayout::CKRSc { c: c_bits },
+    );
+    for v in weights.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let pin = pack_binary_act(&input, c_bits);
+    let pw = pack_binary_wgt(&weights, c_bits);
+    let sched = binary::schedule_binary(&cfg, &machine);
+    let acc_elems = cfg.out_channels * cfg.e_size();
+
+    for prog in [binary::gen_binary_os(&cfg, &machine), binary::gen_binary_ws(&cfg, &machine)] {
+        let dp = DecodedProgram::decode(&prog);
+        // Full single-core reference accumulator.
+        let mut want = vec![0i32; acc_elems];
+        let mut interp = Interp::new(machine.num_regs);
+        for &bases in &sched {
+            interp.run_decoded(
+                &dp,
+                &mut Buffers { input: &pin, weight: &pw, output: &mut want },
+                bases,
+            );
+        }
+        for tiles in [2usize, 3, 8] {
+            // The binary schedule is k-major over ofmap planes, same as
+            // the int8 simple conv: bands align to e_size.
+            let bounds = partition::band_bounds(acc_elems, cfg.e_size(), tiles);
+            let mut acc = vec![0i32; acc_elems];
+            for (tile, &(lo, hi)) in
+                partition::split_schedule(&sched, &bounds).iter().zip(&bounds)
+            {
+                let band = &mut acc[lo..hi];
+                let mut interp = Interp::new(machine.num_regs);
+                for &bases in tile {
+                    assert!(
+                        dp.bases_fit(bases, pin.len(), pw.len(), band.len()),
+                        "{}: rebased entry escapes band [{lo}, {hi})",
+                        prog.name
+                    );
+                    interp.run_decoded(
+                        &dp,
+                        &mut Buffers { input: &pin, weight: &pw, output: band },
+                        bases,
+                    );
+                }
+            }
+            assert_eq!(acc, want, "{}: {tiles}-tile split diverges", prog.name);
+        }
+    }
+}
+
+#[test]
+fn racing_batch_fanout_with_partitioned_layers_matches_sequential() {
+    let machine = MachineConfig::neon(128);
+    let plan = mixed_partitioned_plan(machine, 2);
+    let prepared = PreparedNetwork::prepare(&plan).unwrap();
+    let inputs: Vec<ActTensor> = (0..9)
+        .map(|s| ActTensor::random(ActShape::new(16, 8, 8), ActLayout::NCHWc { c: 16 }, 40 + s))
+        .collect();
+    let refs: Vec<&ActTensor> = inputs.iter().collect();
+    // Sequential single-core baseline: 1 image thread, tiles in order.
+    let sequential = prepared.run_batch_with(&refs, SHIFT, 1, 1);
+    // Image threads × tile threads racing together.
+    for (threads, intra) in [(4usize, 2usize), (3, 4), (9, 2)] {
+        let racing = prepared.run_batch_with(&refs, SHIFT, threads, intra);
+        assert_eq!(sequential.len(), racing.len());
+        for (i, (s, p)) in sequential.iter().zip(&racing).enumerate() {
+            assert_eq!(
+                s.as_ref().unwrap().data,
+                p.as_ref().unwrap().data,
+                "batch fan-out ({threads} threads, intra {intra}) diverges at image {i}"
+            );
+        }
+    }
+}
