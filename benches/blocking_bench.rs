@@ -1,0 +1,216 @@
+//! Bench: cache-blocked invocation schedules vs the baseline order.
+//!
+//! For each layer in the sweep, the same weight-bound plan is prepared
+//! unblocked (the baseline) and once per analytic `TileSpec` candidate
+//! from the L1/L2 hierarchy (plus the planner's own `cache_blocking`
+//! pick, marked in the output). Every blocked engine's outputs are
+//! asserted **bit-identical** to the baseline on the benchmark inputs
+//! (blocking is a pure permutation — the contract), then per-image
+//! latency is measured single-core, the axis the blocking model prices:
+//! L1/L2 fill traffic at identical instruction streams.
+//!
+//! Sweep: paper-§V-sized convs whose accumulator working sets outgrow
+//! L1 — 56×56×64, 28×28×128, a 1×1 (dense-shaped) reduction — at
+//! 128-bit vectors.
+//!
+//! Modes:
+//! * `--smoke` — CI mode: small shapes, bit-identity gate + one timed
+//!   round per layer/spec, no file side effects.
+//! * `--json [PATH]` — additionally write a BENCH_7.json-style record
+//!   (default path `BENCH_7.json`): per-layer images/sec for the
+//!   baseline and every candidate, speedup vs unblocked, and which
+//!   spec the planner chose.
+//!
+//! Run: `cargo bench --bench blocking_bench [-- --smoke|--json]`
+
+use std::time::Instant;
+
+#[path = "common/mod.rs"]
+mod common;
+
+use yflows::coordinator::plan::{NetworkPlan, Planner, PlannerOptions};
+use yflows::exec::PreparedNetwork;
+use yflows::explore::blocking::{candidates, ConvShape, TileSpec};
+use yflows::layer::{ConvConfig, LayerConfig};
+use yflows::machine::cache::Hierarchy;
+use yflows::machine::MachineConfig;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::bench::black_box;
+use yflows::util::json::Json;
+
+const SHIFT: u32 = 9;
+
+struct SweepLayer {
+    name: &'static str,
+    machine: MachineConfig,
+    cfg: ConvConfig,
+    pad: usize,
+    plan: NetworkPlan,
+    input_shape: ActShape,
+}
+
+fn conv_layer(
+    name: &'static str,
+    machine: MachineConfig,
+    cfg: ConvConfig,
+    pad: usize,
+    seed: u64,
+) -> SweepLayer {
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), pad);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+        WeightLayout::CKRSc { c },
+        seed,
+    ));
+    let input_shape = ActShape::new(cfg.in_channels, cfg.ih - 2 * pad, cfg.iw - 2 * pad);
+    SweepLayer { name, machine, cfg, pad, plan: NetworkPlan::chain(name, vec![lp]), input_shape }
+}
+
+fn sweep(smoke: bool) -> Vec<SweepLayer> {
+    let m = MachineConfig::neon(128);
+    if smoke {
+        // Small shapes that still have analytic candidates (their
+        // accumulator working sets exceed the 48 KiB L1 slack), so the
+        // gate exercises real reorders.
+        return vec![
+            conv_layer("conv3x3-16x16x64", m, ConvConfig::simple(18, 18, 3, 3, 1, 32, 64), 1, 71),
+            conv_layer("conv3x3-16x16x128", m, ConvConfig::simple(18, 18, 3, 3, 1, 64, 128), 1, 72),
+        ];
+    }
+    vec![
+        conv_layer("conv3x3-56x56x64", m, ConvConfig::simple(58, 58, 3, 3, 1, 64, 64), 1, 71),
+        conv_layer("conv3x3-28x28x128", m, ConvConfig::simple(30, 30, 3, 3, 1, 128, 128), 1, 72),
+        conv_layer("conv1x1-28x28x256", m, ConvConfig::simple(28, 28, 1, 1, 1, 128, 256), 0, 73),
+    ]
+}
+
+/// Per-image single-core throughput of `engine`.
+fn images_per_sec(engine: &PreparedNetwork, inputs: &[ActTensor], rounds: usize) -> f64 {
+    let mut arena = engine.new_arena();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for input in inputs {
+            black_box(engine.run(input, SHIFT, &mut arena).expect("bench run"));
+        }
+    }
+    (inputs.len() * rounds) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let common::BenchArgs { smoke, json_path } = common::parse_args("BENCH_7.json");
+
+    let images: usize = if smoke { 2 } else { 4 };
+    let rounds: usize = if smoke { 1 } else { 10 };
+    let hier = Hierarchy::neoverse_n1();
+
+    let mut layer_rows: Vec<Json> = Vec::new();
+    println!("== blocking_bench: baseline order vs analytic L1/L2 TileSpecs ==");
+    for layer in sweep(smoke) {
+        let c = layer.machine.c_int8();
+        let shape = ConvShape::of(&layer.cfg, c);
+        let inputs: Vec<ActTensor> = (0..images as u64)
+            .map(|s| ActTensor::random(layer.input_shape, ActLayout::NCHWc { c }, 3000 + s))
+            .collect();
+        let baseline = PreparedNetwork::prepare(&layer.plan).expect("baseline engine");
+        let mut arena = baseline.new_arena();
+        let want: Vec<Vec<i8>> = inputs
+            .iter()
+            .map(|i| baseline.run(i, SHIFT, &mut arena).expect("baseline run").data)
+            .collect();
+
+        // The planner's own pick, to mark in the sweep output.
+        let planner_pick = {
+            let mut planner = Planner::new(PlannerOptions {
+                machine: layer.machine,
+                cache_blocking: true,
+                ..Default::default()
+            });
+            planner.plan_layer(&LayerConfig::Conv(layer.cfg), layer.pad).blocking
+        };
+
+        let specs: Vec<Option<TileSpec>> = std::iter::once(None)
+            .chain(candidates(&shape, &hier).into_iter().map(Some))
+            .collect();
+        assert!(specs.len() > 1, "{}: sweep layer has no blocking candidates", layer.name);
+
+        let mut row = Json::obj();
+        row.set("layer", Json::s(layer.name));
+        row.set(
+            "planner_pick",
+            planner_pick.map(|s| Json::s(&s.signature())).unwrap_or(Json::Null),
+        );
+        let mut spec_rows: Vec<Json> = Vec::new();
+        let mut base_ips = 0.0f64;
+        for spec in specs {
+            let mut plan = layer.plan.clone();
+            plan.layers[0].blocking = spec;
+            let engine = PreparedNetwork::prepare(&plan).expect("blocked engine");
+
+            // Correctness gate: blocked output bytes == baseline. The
+            // reorder is a pure permutation, so any diff is a bug.
+            let mut arena = engine.new_arena();
+            for (i, input) in inputs.iter().enumerate() {
+                let got = engine.run(input, SHIFT, &mut arena).expect("gate run");
+                assert_eq!(
+                    got.data,
+                    want[i],
+                    "{}: blocked output diverges at image {i} ({})",
+                    layer.name,
+                    spec.map(|s| s.signature()).unwrap_or_else(|| "unblocked".into())
+                );
+            }
+
+            let ips = images_per_sec(&engine, &inputs, rounds);
+            if spec.is_none() {
+                base_ips = ips;
+            }
+            let speedup = ips / base_ips;
+            let label = spec.map(|s| s.signature()).unwrap_or_else(|| "unblocked".into());
+            let picked = spec == planner_pick && spec.is_some();
+            println!(
+                "{:<18} {:<20} {:>9.1} img/s   speedup {:>5.2}x{}",
+                layer.name,
+                label,
+                ips,
+                speedup,
+                if picked { "   <- planner pick" } else { "" },
+            );
+            let mut sr = Json::obj();
+            sr.set("blocking", spec.map(|s| Json::s(&s.signature())).unwrap_or(Json::Null))
+                .set("images_per_sec", Json::Num(ips))
+                .set("speedup_vs_unblocked", Json::Num(speedup))
+                .set("planner_pick", Json::Bool(picked));
+            spec_rows.push(sr);
+        }
+        row.set("spec_points", Json::Arr(spec_rows));
+        layer_rows.push(row);
+    }
+    if smoke {
+        println!("smoke OK: every TileSpec bit-identical to the baseline order");
+        return;
+    }
+
+    if let Some(path) = json_path {
+        let mut obj = Json::obj();
+        obj.set("bench", Json::s("blocking_bench"))
+            .set(
+                "workload",
+                Json::s("large conv sweep: 56x56x64, 28x28x128, 1x1 28x28x256 @128-bit"),
+            )
+            .set("images", Json::from_u64(images as u64))
+            .set("rounds", Json::from_u64(rounds as u64))
+            .set("requant_shift", Json::from_u64(SHIFT as u64))
+            .set("bit_identical", Json::Bool(true))
+            .set("layers", Json::Arr(layer_rows))
+            .set(
+                "target",
+                Json::s(
+                    "single-core latency from L1/L2 fill reduction at an identical \
+                     instruction stream; bit-identity for every TileSpec",
+                ),
+            );
+        common::write_json(&path, &obj);
+    }
+}

@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::dataflow::DataflowSpec;
 use crate::exec::Partition;
+use crate::explore::blocking::TileSpec;
 use crate::explore::{self, ExploreConfig};
 use crate::isa::Program;
 use crate::layer::{ConvConfig, ConvKind, LayerConfig};
@@ -96,6 +97,17 @@ pub struct LayerPlan {
     /// [`crate::exec::PreparedNetwork`] — execution is bit-identical
     /// for every value, only latency changes.
     pub partition: Partition,
+    /// Cache-blocking spec for this layer's invocation schedule
+    /// ([`crate::explore::blocking`]): `None` (the default) keeps the
+    /// baseline cb-outer/k-inner order; `Some` reorders the schedule
+    /// into L1/L2-sized blocks at prepare time
+    /// ([`crate::exec::PreparedNetwork`]). Chosen analytically by the
+    /// planner when [`PlannerOptions::cache_blocking`] is on, overridden
+    /// by measured tuning winners ([`crate::tune`]). The reorder is a
+    /// pure permutation preserving each output element's accumulation
+    /// sequence, so execution stays bit-identical — only cache traffic
+    /// changes. Applies to simple convs ([`PlanKind::Generated`]) only.
+    pub blocking: Option<TileSpec>,
 }
 
 impl LayerPlan {
@@ -251,6 +263,15 @@ pub struct PlannerOptions {
     /// prices the split as a win; the chosen count lands in
     /// [`LayerPlan::partition`].
     pub max_tiles: usize,
+    /// Enable the cache-blocking stage ([`crate::explore::blocking`]):
+    /// for each simple conv, analytic [`TileSpec`] candidates are priced
+    /// per hierarchy level
+    /// ([`crate::machine::PerfModel::blocked_cycles`]) and a strictly
+    /// cheaper non-trivial winner lands in [`LayerPlan::blocking`].
+    /// `false` (the default) keeps plans byte-identical to the
+    /// unblocked planner. Composes with `max_tiles`: bands split first,
+    /// blocks reorder within a band.
+    pub cache_blocking: bool,
 }
 
 impl PlannerOptions {
@@ -275,6 +296,7 @@ impl Default for PlannerOptions {
             tune_config: crate::tune::TuneConfig::default(),
             tune_db: None,
             max_tiles: 1,
+            cache_blocking: false,
         }
     }
 }
@@ -359,14 +381,41 @@ impl Planner {
                 best.unwrap()
             })
             .clone();
+        // Cache-blocking axis: price analytic TileSpec candidates per
+        // hierarchy level against the unblocked baseline (the simulated
+        // stats supply the candidate-independent compute component) and
+        // keep a strictly cheaper winner. The layer's modeled cost is
+        // ratio-scaled so blocked and unblocked plans stay comparable
+        // under the same simulated baseline.
+        let mut stats = stats;
+        let mut blocking = None;
+        if self.opts.cache_blocking {
+            let shape = explore::blocking::ConvShape::of(&padded, machine.c_int8());
+            let pm = PerfModel::neoverse_n1();
+            let choice = explore::blocking::choose_blocking(&shape, &pm, &stats);
+            if let Some(bspec) = choice.spec {
+                blocking = Some(bspec);
+                stats.cycles *= choice.blocked_cycles / choice.trivial_cycles;
+            }
+        }
         // Intra-layer partition axis: with a core budget, ask the
         // partitioned perf model whether sharding this conv's output
         // channels wins, and record the modeled (max-over-tiles +
         // fork/join + LLC-contention) latency as the layer's cost.
-        let mut stats = stats;
+        // Runs on the blocked schedule when one was chosen — bands
+        // split the blocked order, exactly as `exec` will.
         let mut partition = Partition::single();
         if self.opts.max_tiles > 1 {
             let schedule = crate::codegen::schedule(&padded, &machine);
+            let schedule = match &blocking {
+                Some(bspec) => explore::blocking::blocked_schedule(
+                    &schedule,
+                    padded.in_channels / machine.c_int8().max(1),
+                    padded.out_channels,
+                    bspec,
+                ),
+                None => schedule,
+            };
             let acc_elems = padded.out_channels * padded.e_size();
             let (tiles, cycles) = explore::choose_tiles(
                 &prog,
@@ -389,6 +438,7 @@ impl Planner {
             weights: None,
             packed: OnceLock::new(),
             partition,
+            blocking,
         }
     }
 
@@ -474,6 +524,9 @@ impl Planner {
             weights: None,
             packed: OnceLock::new(),
             partition,
+            // Depthwise schedules have no k axis — blocking is the
+            // identity there, so the planner never sets it.
+            blocking: None,
         }
     }
 
@@ -509,6 +562,9 @@ impl Planner {
             weights: None,
             packed: OnceLock::new(),
             partition,
+            // Grouped layers run per-group kernel passes over small
+            // per-group views; blocking applies to simple convs only.
+            blocking: None,
         }
     }
 
@@ -521,6 +577,7 @@ impl Planner {
             weights: None,
             packed: OnceLock::new(),
             partition: Partition::single(),
+            blocking: None,
         }
     }
 
@@ -647,6 +704,13 @@ pub fn plan_fingerprint(plan: &NetworkPlan) -> u64 {
         // arena pool), so it must split prepared-cache entries even
         // though outputs stay bit-identical.
         h = eat(h, format!("part:{}", lp.partition.tiles).as_bytes());
+        // Same for blocking: a blocked schedule is a different prepared
+        // engine (reordered invocation order) with identical outputs.
+        let blk = lp
+            .blocking
+            .map(|b| b.signature())
+            .unwrap_or_else(|| "-".into());
+        h = eat(h, format!("blk:{blk}").as_bytes());
         if let Some(w) = &lp.weights {
             h = eat(h, format!("{:?}:{:?}", w.shape, w.layout).as_bytes());
             h = eat_i8(h, &w.data);
@@ -681,6 +745,11 @@ pub struct PlanCacheKey {
     /// Intra-layer tile budget ([`PlannerOptions::max_tiles`]) — a
     /// different budget yields differently partitioned plans.
     pub max_tiles: usize,
+    /// Cache-blocking stage toggle
+    /// ([`PlannerOptions::cache_blocking`]) — blocked and unblocked
+    /// plans differ (schedule order, modeled cost), so they never
+    /// cross-serve.
+    pub cache_blocking: bool,
 }
 
 impl PlanCacheKey {
@@ -698,6 +767,7 @@ impl PlanCacheKey {
             tune_backend,
             tune_epoch,
             max_tiles: opts.max_tiles,
+            cache_blocking: opts.cache_blocking,
         }
     }
 }
@@ -1181,6 +1251,59 @@ mod tests {
         assert_ne!(cached_native, cached_interp);
         assert_ne!(cached_native, off_native);
         assert_eq!(cached_native.tune_epoch, db.epoch());
+    }
+
+    #[test]
+    fn cache_blocking_picks_a_nontrivial_tilespec_on_large_layers() {
+        // Acceptance: the planner must block a 56×56×64 conv (whose
+        // accumulator working set outgrows L1) and leave small layers
+        // alone. Default (blocking off) plans are unchanged.
+        let big = ConvConfig::simple(58, 58, 3, 3, 1, 64, 64);
+        let layer = LayerConfig::Conv(big);
+        let mut base = Planner::new(PlannerOptions::default());
+        let plain = base.plan_layer(&layer, 0);
+        assert!(plain.blocking.is_none(), "blocking is opt-in");
+
+        let mut planner = Planner::new(PlannerOptions {
+            cache_blocking: true,
+            ..Default::default()
+        });
+        let lp = planner.plan_layer(&layer, 0);
+        let spec = lp.blocking.expect("56x56x64 must pick a TileSpec");
+        let shape = crate::explore::blocking::ConvShape::of(&big, 16);
+        assert!(!spec.is_trivial(&shape), "{}", spec.signature());
+        assert!(
+            lp.stats.cycles < plain.stats.cycles,
+            "blocked {} !< unblocked {}",
+            lp.stats.cycles,
+            plain.stats.cycles
+        );
+
+        // Small layer: working set already fits, the baseline wins.
+        let small = LayerConfig::Conv(ConvConfig::simple(12, 12, 3, 3, 1, 16, 16));
+        assert!(planner.plan_layer(&small, 0).blocking.is_none());
+    }
+
+    #[test]
+    fn fingerprint_and_cache_key_split_on_blocking() {
+        let machine = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 16, 16);
+        let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+        let lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
+        let plan = NetworkPlan::chain("blk-fp", vec![lp]);
+        let mut blocked = plan.clone();
+        blocked.layers[0].blocking =
+            Some(TileSpec { oh: 4, ow: 4, oc: 8, ic: 1, l2_oc: 16, l2_ic: 1 });
+        // Blocked and unblocked prepared engines must never cross-serve.
+        assert_ne!(plan_fingerprint(&plan), plan_fingerprint(&blocked));
+
+        let net = nets::resnet18();
+        let off = PlanCacheKey::new(&net, &PlannerOptions::default());
+        let on = PlanCacheKey::new(
+            &net,
+            &PlannerOptions { cache_blocking: true, ..Default::default() },
+        );
+        assert_ne!(off, on);
     }
 
     #[test]

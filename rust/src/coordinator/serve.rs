@@ -776,6 +776,7 @@ mod tests {
                 pad,
                 spec: crate::dataflow::DataflowSpec::optimized_os(&machine, cfg.r_size()),
                 tiles: 1,
+                blocking: None,
                 model_cycles: 1.0,
                 measured_sec: 1e-6,
                 spread: 0.0,

@@ -664,6 +664,20 @@ fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLaye
             crate::isa::validate(prog, machine.num_regs)?;
             let dp = DecodedProgram::decode(prog);
             let sched = crate::codegen::schedule(cfg, machine);
+            // Cache blocking: reorder the invocation schedule into
+            // L1/L2-sized blocks before validation and band splitting —
+            // a pure permutation (per-element accumulation order
+            // unchanged), so outputs stay bit-identical and the bounds
+            // checks below cover exactly the bases that will run.
+            let sched = match &lp.blocking {
+                Some(bspec) => crate::explore::blocking::blocked_schedule(
+                    &sched,
+                    cfg.in_channels / c,
+                    cfg.out_channels,
+                    bspec,
+                ),
+                None => sched,
+            };
             let in_elems = cfg.in_channels * cfg.h_size();
             let acc_elems = cfg.out_channels * cfg.e_size();
             for &b in &sched {

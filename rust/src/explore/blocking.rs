@@ -1,0 +1,414 @@
+//! Cache blocking: an outer loop-blocking axis over the invocation
+//! schedule (ROADMAP item 1).
+//!
+//! The dataflow search optimizes register-level reuse; what happens at
+//! L1/L2 is whatever the baseline `(cb, k)` loop order happens to do.
+//! On real layer sizes (56×56×64 and up) the per-channel accumulator
+//! planes alone outgrow L1, and the baseline cb-outer/k-inner order
+//! streams the **entire** output tensor through the cache once per
+//! input-channel block. A [`TileSpec`] reorders the schedule into
+//! cache-sized blocks — L1 blocks inner, L2 blocks outer — generated
+//! analytically from the [`Hierarchy`] capacities (working-set-fits-
+//! with-slack rule over power-of-two candidates, the PolyDL recipe) and
+//! priced per hierarchy level by
+//! [`crate::machine::PerfModel::blocked_mem_cycles`].
+//!
+//! **Granularity.** A generated program covers one full ofmap plane for
+//! one (input-channel-block, output-channel) pair, so the schedule is
+//! only addressable at `(cb, k)` granularity: `oc`/`ic` blocks reorder
+//! invocations, while [`TileSpec::oh`]/[`TileSpec::ow`] are pinned to
+//! the full plane (kept in the spec — and in fingerprints — so a future
+//! sub-plane program generator extends the same axis instead of
+//! re-keying everything). Depthwise schedules have no `k` axis
+//! (blocking is the identity); grouped layers apply blocking within
+//! each group's simple-conv view.
+//!
+//! **Bit-identity by construction.** [`blocked_schedule`] is a pure
+//! permutation of the baseline schedule that, for every fixed output
+//! channel `k`, visits the input-channel blocks `cb` in the same
+//! ascending order as the baseline. Each output element's accumulation
+//! sequence is therefore unchanged — not merely equivalent under
+//! reassociation but the *same* wrapping-add order — so blocked outputs
+//! are byte-identical to unblocked ones, for every kernel kind. The
+//! `blocking_equivalence` suite and the tuner's interpreter-oracle gate
+//! enforce this end to end.
+
+use crate::layer::ConvConfig;
+use crate::machine::cache::Hierarchy;
+use crate::machine::{Bases, PerfModel, PerfStats};
+
+/// Fraction of a cache level a blocked working set may claim. The
+/// slack absorbs conflict misses (the caches are set-associative, not
+/// fully associative) and the streams that share the level with the
+/// resident block (weights, spilled temporaries).
+pub const WS_SLACK: f64 = 0.75;
+
+/// Block sizes per cache level for one layer's invocation schedule.
+///
+/// `oc`/`ic` are the **L1 (inner) block**: output channels and
+/// input-channel blocks per block. `l2_oc`/`l2_ic` are the **L2
+/// (outer) block** the inner blocks tile within. `oh`/`ow` record the
+/// spatial block — always the full ofmap plane at the current program
+/// granularity (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileSpec {
+    /// Output rows per block (full plane: programs are not splittable
+    /// spatially).
+    pub oh: usize,
+    /// Output columns per block (full plane, like `oh`).
+    pub ow: usize,
+    /// Output channels per L1 block.
+    pub oc: usize,
+    /// Input-channel blocks (groups of `c` channels) per L1 block.
+    pub ic: usize,
+    /// Output channels per L2 block (clamped to at least `oc`).
+    pub l2_oc: usize,
+    /// Input-channel blocks per L2 block (clamped to at least `ic`).
+    pub l2_ic: usize,
+}
+
+impl TileSpec {
+    /// The identity blocking for `shape`: one block spanning the whole
+    /// layer, i.e. the baseline schedule order.
+    pub fn trivial(shape: &ConvShape) -> TileSpec {
+        TileSpec {
+            oh: shape.oh,
+            ow: shape.ow,
+            oc: shape.out_channels,
+            ic: shape.num_blocks,
+            l2_oc: shape.out_channels,
+            l2_ic: shape.num_blocks,
+        }
+    }
+
+    /// True when this spec does not reorder `shape`'s schedule at all.
+    pub fn is_trivial(&self, shape: &ConvShape) -> bool {
+        self.oc >= shape.out_channels && self.ic >= shape.num_blocks
+    }
+
+    /// Stable textual form for fingerprints and diagnostics:
+    /// `oh x ow x oc x ic @ l2_oc x l2_ic`.
+    pub fn signature(&self) -> String {
+        format!(
+            "{}x{}x{}x{}@{}x{}",
+            self.oh, self.ow, self.oc, self.ic, self.l2_oc, self.l2_ic
+        )
+    }
+}
+
+/// The schedule-level shape of a (padded) conv layer: everything the
+/// blocking stage needs, independent of the program's instruction
+/// stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Input-channel blocks (`in_channels / c`).
+    pub num_blocks: usize,
+    /// Output channels (one invocation per (block, channel) pair).
+    pub out_channels: usize,
+    /// Output plane height / width (recorded into [`TileSpec::oh`] /
+    /// [`TileSpec::ow`]).
+    pub oh: usize,
+    pub ow: usize,
+    /// Bytes of one input-channel block's padded input plane.
+    pub in_block_bytes: usize,
+    /// Bytes of one (block, channel) weight tile.
+    pub wgt_block_bytes: usize,
+    /// Bytes of one output channel's i32 accumulator plane.
+    pub acc_plane_bytes: usize,
+}
+
+impl ConvShape {
+    /// Shape of a simple conv under channel-block size `c`.
+    pub fn of(cfg: &ConvConfig, c: usize) -> ConvShape {
+        ConvShape {
+            num_blocks: cfg.in_channels / c.max(1),
+            out_channels: cfg.out_channels,
+            oh: cfg.oh(),
+            ow: cfg.ow(),
+            in_block_bytes: cfg.h_size() * c,
+            wgt_block_bytes: cfg.r_size() * c,
+            acc_plane_bytes: cfg.e_size() * 4,
+        }
+    }
+
+    /// Total schedule length (`num_blocks * out_channels` invocations).
+    pub fn invocations(&self) -> usize {
+        self.num_blocks * self.out_channels
+    }
+}
+
+/// Analytic candidate generation: power-of-two block sizes whose
+/// working set fits each level with slack.
+///
+/// For every power-of-two `oc` block whose accumulator band
+/// (`oc · acc_plane + weights`) fits L1 with [`WS_SLACK`], one
+/// candidate is emitted; its `ic` block is the largest power of two
+/// whose input slice also stays L1-co-resident (usually 1 on large
+/// planes), and its L2 block is the largest power-of-two `oc` multiple
+/// whose band plus the full input fits L2 with slack. The trivial spec
+/// is **not** in the list — callers compare candidates against it
+/// explicitly ([`crate::machine::PerfModel::choose_blocking`]).
+pub fn candidates(shape: &ConvShape, hier: &Hierarchy) -> Vec<TileSpec> {
+    let l1 = hier.l1.capacity_bytes() as f64 * WS_SLACK;
+    let l2 = hier.l2.capacity_bytes() as f64 * WS_SLACK;
+    let mut out = Vec::new();
+    let mut oc = 1usize;
+    while oc < shape.out_channels {
+        let band = (oc * shape.acc_plane_bytes + oc * shape.wgt_block_bytes) as f64;
+        if band > l1 {
+            break;
+        }
+        // Largest ic block whose input slice co-resides with the band.
+        let mut ic = 1usize;
+        while ic * 2 <= shape.num_blocks
+            && band + (ic * 2 * shape.in_block_bytes) as f64 <= l1
+        {
+            ic *= 2;
+        }
+        // Largest L2 oc block: band + the whole input must fit.
+        let total_in = (shape.num_blocks * shape.in_block_bytes) as f64;
+        let mut l2_oc = oc;
+        while l2_oc * 2 <= shape.out_channels
+            && (l2_oc * 2 * shape.acc_plane_bytes) as f64 + total_in <= l2
+        {
+            l2_oc *= 2;
+        }
+        out.push(TileSpec {
+            oh: shape.oh,
+            ow: shape.ow,
+            oc,
+            ic,
+            l2_oc,
+            l2_ic: shape.num_blocks,
+        });
+        oc *= 2;
+    }
+    out
+}
+
+/// The blocking stage's verdict for one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockingChoice {
+    /// The winning non-trivial spec, or `None` when the unblocked
+    /// baseline prices cheapest (small layers whose working sets
+    /// already fit).
+    pub spec: Option<TileSpec>,
+    /// Modeled cycles of the returned choice (equals `trivial_cycles`
+    /// when `spec` is `None`).
+    pub blocked_cycles: f64,
+    /// Modeled cycles of the unblocked baseline under the same model.
+    pub trivial_cycles: f64,
+}
+
+/// Select a blocking spec for one layer: price every analytic candidate
+/// *and* the trivial baseline through the same per-level model
+/// ([`PerfModel::blocked_cycles`], seeded with the layer's simulated
+/// baseline stats for the compute component) and keep a candidate only
+/// if it is strictly cheaper than not blocking. Mirrors
+/// [`super::choose_tiles`]'s argmin-vs-baseline shape.
+pub fn choose_blocking(
+    shape: &ConvShape,
+    model: &PerfModel,
+    base: &PerfStats,
+) -> BlockingChoice {
+    let trivial_cycles = model.blocked_cycles(shape, &TileSpec::trivial(shape), base);
+    let mut best: Option<(TileSpec, f64)> = None;
+    for spec in candidates(shape, &model.hier) {
+        let cycles = model.blocked_cycles(shape, &spec, base);
+        if best.as_ref().map(|&(_, c)| cycles < c).unwrap_or(true) {
+            best = Some((spec, cycles));
+        }
+    }
+    match best {
+        Some((spec, cycles)) if cycles < trivial_cycles => {
+            BlockingChoice { spec: Some(spec), blocked_cycles: cycles, trivial_cycles }
+        }
+        _ => BlockingChoice { spec: None, blocked_cycles: trivial_cycles, trivial_cycles },
+    }
+}
+
+/// Reorder a cb-outer/k-inner schedule (`sched[cb * out_channels + k]`)
+/// into blocked order: L2 blocks outer, L1 blocks within, and the
+/// baseline cb-outer/k-inner element order inside each L1 block. The
+/// k-blocks are the **outer** loop at each level so an L1 block's
+/// accumulator band stays resident across the whole cb sweep — the
+/// interchange that pays for the blocking.
+///
+/// This is a permutation that preserves, for each fixed `k`, the
+/// ascending order of `cb` (see the module docs on bit-identity). A
+/// trivial spec returns the baseline order unchanged. Works on any
+/// schedule with this factorization — simple conv, binary conv, and a
+/// grouped layer's per-group view; a depthwise schedule is the
+/// degenerate `out_channels = 1` case (identity for any spec).
+pub fn blocked_schedule(
+    sched: &[Bases],
+    num_blocks: usize,
+    out_channels: usize,
+    spec: &TileSpec,
+) -> Vec<Bases> {
+    assert_eq!(
+        sched.len(),
+        num_blocks * out_channels,
+        "schedule is not a (cb x k) factorization"
+    );
+    let k1 = spec.oc.clamp(1, out_channels.max(1));
+    let c1 = spec.ic.clamp(1, num_blocks.max(1));
+    let k2 = spec.l2_oc.clamp(k1, out_channels.max(1));
+    let c2 = spec.l2_ic.clamp(c1, num_blocks.max(1));
+    let mut out = Vec::with_capacity(sched.len());
+    for k2_0 in (0..out_channels).step_by(k2) {
+        let k2_end = (k2_0 + k2).min(out_channels);
+        for c2_0 in (0..num_blocks).step_by(c2) {
+            let c2_end = (c2_0 + c2).min(num_blocks);
+            for k1_0 in (k2_0..k2_end).step_by(k1) {
+                let k1_end = (k1_0 + k1).min(k2_end);
+                for c1_0 in (c2_0..c2_end).step_by(c1) {
+                    let c1_end = (c1_0 + c1).min(c2_end);
+                    for cb in c1_0..c1_end {
+                        for k in k1_0..k1_end {
+                            out.push(sched[cb * out_channels + k]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MachineConfig;
+
+    fn shape_56x56x64() -> ConvShape {
+        let cfg = ConvConfig::simple(58, 58, 3, 3, 1, 64, 64);
+        ConvShape::of(&cfg, 16)
+    }
+
+    fn index_schedule(nb: usize, k: usize) -> Vec<Bases> {
+        // Encode (cb, k) into the bases so a reorder is reconstructible.
+        let mut s = Vec::new();
+        for cb in 0..nb {
+            for kk in 0..k {
+                s.push(Bases {
+                    input: cb as u32,
+                    weight: (cb * k + kk) as u32,
+                    output: kk as u32,
+                });
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn blocked_schedule_is_a_permutation_preserving_cb_order_per_k() {
+        for (nb, k, spec) in [
+            (4, 64, TileSpec { oh: 56, ow: 56, oc: 2, ic: 1, l2_oc: 16, l2_ic: 4 }),
+            (3, 7, TileSpec { oh: 8, ow: 8, oc: 4, ic: 2, l2_oc: 4, l2_ic: 3 }),
+            (1, 5, TileSpec { oh: 8, ow: 8, oc: 2, ic: 1, l2_oc: 2, l2_ic: 1 }),
+            (6, 1, TileSpec { oh: 8, ow: 8, oc: 1, ic: 2, l2_oc: 1, l2_ic: 4 }),
+        ] {
+            let base = index_schedule(nb, k);
+            let blocked = blocked_schedule(&base, nb, k, &spec);
+            assert_eq!(blocked.len(), base.len());
+            // Permutation: every (cb, k) appears exactly once.
+            let mut seen: Vec<u32> = blocked.iter().map(|b| b.weight).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..(nb * k) as u32).collect::<Vec<_>>());
+            // For each fixed k, cb values appear in ascending order —
+            // the per-element accumulation sequence is unchanged.
+            for kk in 0..k {
+                let cbs: Vec<u32> = blocked
+                    .iter()
+                    .filter(|b| b.output == kk as u32)
+                    .map(|b| b.input)
+                    .collect();
+                assert_eq!(cbs.len(), nb);
+                assert!(cbs.windows(2).all(|w| w[0] < w[1]), "k={kk}: {cbs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn trivial_spec_is_the_identity_reorder() {
+        let shape = shape_56x56x64();
+        let base = index_schedule(shape.num_blocks, shape.out_channels);
+        let spec = TileSpec::trivial(&shape);
+        assert!(spec.is_trivial(&shape));
+        assert_eq!(
+            blocked_schedule(&base, shape.num_blocks, shape.out_channels, &spec),
+            base
+        );
+        // Depthwise degenerate case: no k axis, any spec is identity.
+        let dw = index_schedule(8, 1);
+        let aggressive = TileSpec { oh: 8, ow: 8, oc: 1, ic: 2, l2_oc: 1, l2_ic: 4 };
+        assert_eq!(blocked_schedule(&dw, 8, 1, &aggressive), dw);
+    }
+
+    #[test]
+    fn candidates_fit_l1_with_slack_and_are_nontrivial_on_large_layers() {
+        let shape = shape_56x56x64();
+        let hier = Hierarchy::neoverse_n1();
+        let cands = candidates(&shape, &hier);
+        assert!(!cands.is_empty(), "56x56x64 must generate blocking candidates");
+        let l1 = hier.l1.capacity_bytes() as f64 * WS_SLACK;
+        for spec in &cands {
+            assert!(!spec.is_trivial(&shape), "{}", spec.signature());
+            assert!(spec.oc.is_power_of_two() && spec.ic.is_power_of_two());
+            assert!(spec.l2_oc >= spec.oc && spec.l2_ic >= spec.ic);
+            let band = (spec.oc * (shape.acc_plane_bytes + shape.wgt_block_bytes)) as f64;
+            assert!(band <= l1, "{} band {band} exceeds L1 slack {l1}", spec.signature());
+            assert_eq!((spec.oh, spec.ow), (shape.oh, shape.ow), "spatial blocks are full-plane");
+        }
+        // Tiny layers whose whole accumulator fits L1 produce no
+        // (non-trivial) candidates worth pricing against the baseline.
+        let small = ConvShape::of(&ConvConfig::simple(10, 10, 3, 3, 1, 16, 16), 16);
+        for spec in candidates(&small, &hier) {
+            assert!(!spec.is_trivial(&small));
+        }
+    }
+
+    #[test]
+    fn choose_blocking_blocks_large_layers_and_leaves_small_ones_alone() {
+        let pm = PerfModel::neoverse_n1();
+        // Synthetic simulated baseline: only the compute recovery uses
+        // it, and the compute component is candidate-independent.
+        let base = PerfStats {
+            cycles: 5e7,
+            l1_misses: 200_000,
+            l2_misses: 40_000,
+            ..PerfStats::default()
+        };
+        let big = shape_56x56x64();
+        let choice = choose_blocking(&big, &pm, &base);
+        let spec = choice.spec.expect("56x56x64 must pick a non-trivial TileSpec");
+        assert!(!spec.is_trivial(&big));
+        assert!(choice.blocked_cycles < choice.trivial_cycles);
+        // A small layer whose working set already fits never blocks:
+        // extra rounds only add input re-fetches.
+        let small = ConvShape::of(&ConvConfig::simple(12, 12, 3, 3, 1, 16, 16), 16);
+        let choice = choose_blocking(&small, &pm, &base);
+        assert!(choice.spec.is_none(), "{:?}", choice.spec.map(|s| s.signature()));
+        assert_eq!(choice.blocked_cycles, choice.trivial_cycles);
+    }
+
+    #[test]
+    fn schedule_matches_codegen_factorization() {
+        // The real simple-conv schedule under a non-trivial spec stays a
+        // permutation of itself with intact bases.
+        let machine = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 48, 8);
+        let base = crate::codegen::schedule(&cfg, &machine);
+        let nb = cfg.in_channels / machine.c_int8();
+        let spec = TileSpec { oh: 8, ow: 8, oc: 4, ic: 2, l2_oc: 8, l2_ic: 2 };
+        let blocked = blocked_schedule(&base, nb, cfg.out_channels, &spec);
+        let mut a: Vec<Bases> = base.clone();
+        let mut b: Vec<Bases> = blocked.clone();
+        let key = |x: &Bases| (x.input, x.weight, x.output);
+        a.sort_by_key(key);
+        b.sort_by_key(key);
+        assert_eq!(a, b);
+        assert_ne!(base, blocked, "non-trivial spec must actually reorder");
+    }
+}

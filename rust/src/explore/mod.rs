@@ -8,6 +8,7 @@
 //! dataflows by varying vector register allocation schemes using a code
 //! generator."
 
+pub mod blocking;
 pub mod layout_dp;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -54,7 +55,10 @@ impl Exploration {
     /// empirical tuner ([`crate::tune`]) measures on the host. Always
     /// non-empty (k saturates at 1 from below); entry 0 is the model's
     /// own pick, so a measured selection can only match or beat the
-    /// model on the measured set.
+    /// model on the measured set. Duplicate specs (possible when a
+    /// caller assembles candidate lists by hand, or heuristic ties land
+    /// one spec in the list twice) are deduplicated so the tuner never
+    /// times the same candidate twice.
     pub fn shortlist(&self, k: usize) -> Vec<(DataflowSpec, f64)> {
         let mut order: Vec<usize> = (0..self.candidates.len()).collect();
         order.sort_by(|&a, &b| {
@@ -64,8 +68,18 @@ impl Exploration {
                 .partial_cmp(&self.candidates[b].stats.cycles)
                 .unwrap()
         });
+        let mut seen: Vec<&DataflowSpec> = Vec::new();
         order
             .into_iter()
+            .filter(|&i| {
+                let spec = &self.candidates[i].spec;
+                if seen.contains(&spec) {
+                    false
+                } else {
+                    seen.push(spec);
+                    true
+                }
+            })
             .take(k.max(1))
             .map(|i| (self.candidates[i].spec.clone(), self.candidates[i].stats.cycles))
             .collect()
@@ -417,6 +431,33 @@ mod tests {
         // k saturates: never empty, never beyond the candidate count.
         assert_eq!(ex.shortlist(0).len(), 1);
         assert_eq!(ex.shortlist(10_000).len(), ex.candidates.len());
+    }
+
+    #[test]
+    fn shortlist_dedups_duplicate_specs() {
+        // Hand-build an exploration whose candidate list carries the
+        // same spec twice (score ties can do this when candidate lists
+        // are assembled by hand): the shortlist must time it once.
+        let spec_a = DataflowSpec::extended(Anchor::Output, vec![(AuxKind::Weight, 3)]);
+        let spec_b = DataflowSpec::basic(Anchor::Input);
+        let stats = |cycles: f64| PerfStats { cycles, ..PerfStats::default() };
+        let ex = Exploration {
+            candidates: vec![
+                Candidate { spec: spec_a.clone(), heuristic_gain: 1.0, stats: stats(100.0) },
+                Candidate { spec: spec_a.clone(), heuristic_gain: 1.0, stats: stats(100.0) },
+                Candidate { spec: spec_b.clone(), heuristic_gain: 0.5, stats: stats(200.0) },
+                Candidate { spec: spec_a.clone(), heuristic_gain: 1.0, stats: stats(300.0) },
+            ],
+            best: 0,
+        };
+        let top = ex.shortlist(10);
+        assert_eq!(top.len(), 2, "duplicates must collapse: {top:?}");
+        assert_eq!(top[0].0, spec_a);
+        assert_eq!(top[1].0, spec_b);
+        // The kept entry is the best-ranked instance of the spec.
+        assert_eq!(top[0].1, 100.0);
+        // k still counts unique entries.
+        assert_eq!(ex.shortlist(1).len(), 1);
     }
 
     #[test]

@@ -97,11 +97,27 @@ impl Cache {
         self.sets * self.ways * self.line_bytes
     }
 
+    /// Line size in bytes (geometry accessor — the traffic-to-miss
+    /// conversion factor for analytic pricing).
+    pub fn line_bytes(&self) -> usize {
+        self.line_bytes
+    }
+
     /// A fresh (cold) cache holding this one's per-core slice of a
     /// shared capacity: same ways and line size, `1/parts` of the sets
     /// (rounded down to a power of two, at least one set). Used by the
     /// partitioned perf model — when `parts` tiles contend for a shared
     /// LLC, each tile's effective capacity is its slice.
+    ///
+    /// The set count **floors at one**: for `parts > sets` (more tiles
+    /// than sets — degenerate, but reachable when a caller slices a
+    /// small cache by a huge tile count) every slice is the same
+    /// one-set, `ways × line_bytes`-byte cache rather than zero
+    /// capacity, because `Cache::new` requires a power-of-two set count
+    /// and a zero-capacity level would divide by zero in the pricing
+    /// code. Slices are therefore *not* an exact partition of the
+    /// parent capacity in that regime — `parts` slices can sum to more
+    /// than the parent.
     pub fn sliced(&self, parts: usize) -> Cache {
         let parts = parts.max(1);
         let mut sets = (self.sets / parts).max(1);
@@ -212,6 +228,27 @@ mod tests {
         assert_eq!(l2.sliced(3).capacity_bytes(), 256 * 1024);
         // Never below one set.
         assert!(l2.sliced(1 << 20).capacity_bytes() >= 8 * 64);
+    }
+
+    #[test]
+    fn sliced_floors_at_one_set_when_parts_exceed_sets() {
+        // n1_l2 geometry: 2048 sets x 8 ways x 64 B. Any parts >= the
+        // set count pins the slice at exactly one set (ways x line
+        // bytes), still a usable power-of-two cache.
+        let l2 = Cache::n1_l2();
+        let floor = 8 * 64; // ways * line_bytes
+        for parts in [2048, 2049, 4096, usize::MAX] {
+            let s = l2.sliced(parts);
+            assert_eq!(s.capacity_bytes(), floor, "parts = {parts}");
+            assert_eq!(s.line_bytes(), 64);
+            // The floored slice still behaves like a cache: a line can
+            // be cached and re-hit.
+            let mut s = s;
+            assert_eq!(s.access(0, 16), 1);
+            assert_eq!(s.access(0, 16), 0);
+        }
+        // Just below the floor boundary the division still rules.
+        assert_eq!(l2.sliced(1024).capacity_bytes(), 2 * 8 * 64);
     }
 
     #[test]

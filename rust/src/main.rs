@@ -31,8 +31,8 @@ Experiments (paper artifacts):
 Tools:
   explore     Explore dataflows for one conv layer    [--f 3 --i 56 --nf 128 --s 1 --vl 128]
   codegen     Dump generated NEON C for a dataflow    [--anchor os --f 3 --i 8]
-  plan        Plan a network end-to-end               [--net resnet18 --vl 128 --tiles 4]
-  tune        Measure the §V layer set on this CPU    [--quick --vl 128 --k 4 --reps 5 --tiles 4 --db tune_db.json]
+  plan        Plan a network end-to-end               [--net resnet18 --vl 128 --tiles 4 --blocking]
+  tune        Measure the §V layer set on this CPU    [--quick --vl 128 --k 4 --reps 5 --tiles 4 --blocking --db tune_db.json]
               (model vs measured rankings + rank correlation; --quick strongly
                recommended for a first run — the full grid measures 18 layers)
   validate    Cross-validate vs PJRT artifact         [--artifact artifacts/conv3x3.hlo.txt]
@@ -201,6 +201,12 @@ fn main() -> yflows::Result<()> {
             if let Some(t) = args.opt("tiles") {
                 opts.max_tiles = t.parse::<usize>().unwrap_or(1).max(1);
             }
+            // `--blocking` turns on the cache-blocking stage (see
+            // `[planner] cache_blocking`): layers whose per-level
+            // pricing wins are planned with a blocked schedule order.
+            if args.flag("blocking") {
+                opts.cache_blocking = true;
+            }
             opts.perf_sample = sample;
             let plan = yflows::coordinator::plan_network(&net, opts);
             println!("{}", yflows::coordinator::metrics::plan_table(&plan).render());
@@ -240,6 +246,10 @@ fn main() -> yflows::Result<()> {
                 // counts 1,2,...,N (powers of two) so the db records
                 // the measured partition winner too.
                 max_tiles: args.get_parse::<usize>("tiles", opts.max_tiles),
+                // `--blocking` adds the cache-blocking axis to the
+                // measured grid (see `[planner] tune_blocking`), so the
+                // db records the measured blocking winner too.
+                blocking: args.flag("blocking") || opts.tune_config.blocking,
                 ..base
             };
             let db = match args.opt("db") {

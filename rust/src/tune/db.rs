@@ -8,7 +8,7 @@
 //!
 //! ```json
 //! {
-//!   "schema_version": 2,
+//!   "schema_version": 3,
 //!   "entries": [
 //!     {
 //!       "layer_fp": "0f3a...", "layer": "conv3x3s1-...", "pad": 1,
@@ -16,12 +16,15 @@
 //!       "backend": "native",
 //!       "spec": {"anchor": "OS", "aux": [["wgt", 5], ["in", 2]]},
 //!       "tiles": 1,
+//!       "blocking": {"oh": 56, "ow": 56, "oc": 2, "ic": 1, "l2_oc": 32, "l2_ic": 4},
 //!       "model_cycles": 1.2e6, "measured_sec": 3.4e-5,
 //!       "spread": 0.04, "samples": 5
 //!     }
 //!   ]
 //! }
 //! ```
+//!
+//! (`"blocking": null` = the unblocked baseline schedule won.)
 //!
 //! Loading is **strict**: an unknown `schema_version`, a malformed
 //! entry, or an unparseable spec is an error — a stale or hand-mangled
@@ -47,6 +50,7 @@ use std::sync::Mutex;
 
 use crate::dataflow::{Anchor, AuxKind, DataflowSpec};
 use crate::exec::Backend;
+use crate::explore::blocking::TileSpec;
 use crate::layer::ConvConfig;
 use crate::machine::MachineConfig;
 use crate::util::json::Json;
@@ -57,8 +61,11 @@ use crate::util::json::Json;
 ///
 /// History: v1 = spec-only winners; v2 added the intra-layer partition
 /// winner (`tiles`) — v1 entries were measured without the partition
-/// axis, so serving them as "tiles: 1 wins" would be untrue.
-pub const SCHEMA_VERSION: u64 = 2;
+/// axis, so serving them as "tiles: 1 wins" would be untrue; v3 added
+/// the cache-blocking winner (`blocking`) — v2 entries were measured
+/// without the blocking axis, so serving them as "unblocked wins"
+/// would be equally untrue.
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// Stable 64-bit FNV-1a fingerprint of a (padded) conv layer config —
 /// the layer half of a [`TuneKey`]. The coordinator's spatial `pad` is
@@ -111,6 +118,10 @@ pub struct TuneEntry {
     /// won (or the partition axis was not in the measured candidate
     /// set).
     pub tiles: usize,
+    /// The empirically fastest cache-blocking spec measured with `spec`
+    /// ([`crate::explore::blocking::TileSpec`]); `None` = the unblocked
+    /// baseline schedule won (or the blocking axis was not measured).
+    pub blocking: Option<TileSpec>,
     /// The perf model's cycle estimate for `spec` (for model-vs-measured
     /// reporting).
     pub model_cycles: f64,
@@ -323,6 +334,10 @@ fn entry_to_json(key: &TuneKey, e: &TuneEntry) -> Json {
         .set("backend", Json::s(key.backend.name()))
         .set("spec", spec_to_json(&e.spec))
         .set("tiles", Json::from_u64(e.tiles as u64))
+        .set(
+            "blocking",
+            e.blocking.as_ref().map(tilespec_to_json).unwrap_or(Json::Null),
+        )
         .set("model_cycles", Json::Num(e.model_cycles))
         .set("measured_sec", Json::Num(e.measured_sec))
         .set("spread", Json::Num(e.spread))
@@ -359,12 +374,45 @@ fn entry_from_json(v: &Json) -> Result<(TuneKey, TuneEntry), String> {
         pad: v.get("pad").and_then(Json::as_u64).unwrap_or(0) as usize,
         spec,
         tiles: (v.get("tiles").and_then(Json::as_u64).unwrap_or(1) as usize).max(1),
+        blocking: match v.get("blocking") {
+            None | Some(Json::Null) => None,
+            Some(b) => Some(tilespec_from_json(b)?),
+        },
         model_cycles: v.get("model_cycles").and_then(Json::as_f64).ok_or("bad model_cycles")?,
         measured_sec: v.get("measured_sec").and_then(Json::as_f64).ok_or("bad measured_sec")?,
         spread: v.get("spread").and_then(Json::as_f64).unwrap_or(0.0),
         samples: v.get("samples").and_then(Json::as_u64).unwrap_or(0) as usize,
     };
     Ok((key, entry))
+}
+
+/// `{"oh": 56, "ow": 56, "oc": 2, "ic": 1, "l2_oc": 32, "l2_ic": 4}`.
+pub(crate) fn tilespec_to_json(b: &TileSpec) -> Json {
+    let mut o = Json::obj();
+    o.set("oh", Json::from_u64(b.oh as u64))
+        .set("ow", Json::from_u64(b.ow as u64))
+        .set("oc", Json::from_u64(b.oc as u64))
+        .set("ic", Json::from_u64(b.ic as u64))
+        .set("l2_oc", Json::from_u64(b.l2_oc as u64))
+        .set("l2_ic", Json::from_u64(b.l2_ic as u64));
+    o
+}
+
+pub(crate) fn tilespec_from_json(v: &Json) -> Result<TileSpec, String> {
+    let field = |k: &str| {
+        v.get(k)
+            .and_then(Json::as_u64)
+            .map(|n| n as usize)
+            .ok_or_else(|| format!("bad blocking.{k}"))
+    };
+    Ok(TileSpec {
+        oh: field("oh")?,
+        ow: field("ow")?,
+        oc: field("oc")?,
+        ic: field("ic")?,
+        l2_oc: field("l2_oc")?,
+        l2_ic: field("l2_ic")?,
+    })
 }
 
 /// `{"anchor": "OS", "aux": [["wgt", 5], ["in", 2]]}`.
@@ -423,6 +471,7 @@ mod tests {
             pad: 1,
             spec: DataflowSpec::optimized_os(&machine, 9),
             tiles: 1,
+            blocking: None,
             model_cycles: 12345.0,
             measured_sec: 4.2e-5,
             spread: 0.07,
@@ -454,16 +503,35 @@ mod tests {
             let db = TuneDb::open(&path).unwrap();
             assert!(db.is_empty());
             db.record(key, entry.clone()).unwrap();
-            // Second entry under another backend: same layer, distinct key.
+            // Second entry under another backend: same layer, distinct
+            // key, and a measured blocking winner to round-trip.
             let key2 = TuneKey { backend: Backend::Interp, ..key };
-            db.record(key2, TuneEntry { spec: DataflowSpec::basic(Anchor::Input), ..entry.clone() })
-                .unwrap();
+            db.record(
+                key2,
+                TuneEntry {
+                    spec: DataflowSpec::basic(Anchor::Input),
+                    blocking: Some(TileSpec {
+                        oh: 10,
+                        ow: 10,
+                        oc: 2,
+                        ic: 1,
+                        l2_oc: 16,
+                        l2_ic: 1,
+                    }),
+                    ..entry.clone()
+                },
+            )
+            .unwrap();
         }
         let reloaded = TuneDb::open(&path).unwrap();
         assert_eq!(reloaded.len(), 2);
         assert_eq!(reloaded.get(&key), Some(entry.clone()));
         let got = reloaded.get(&TuneKey { backend: Backend::Interp, ..key }).unwrap();
         assert_eq!(got.spec, DataflowSpec::basic(Anchor::Input));
+        assert_eq!(
+            got.blocking,
+            Some(TileSpec { oh: 10, ow: 10, oc: 2, ic: 1, l2_oc: 16, l2_ic: 1 })
+        );
         // No tmp file left behind by the atomic rewrite.
         assert!(!tmp_path(&path).exists());
         std::fs::remove_file(&path).ok();
@@ -501,6 +569,10 @@ mod tests {
         // measured without the tiles axis.
         std::fs::write(&path, r#"{"schema_version": 1, "entries": []}"#).unwrap();
         assert!(TuneDb::open(&path).is_err());
+        // So are v2 (pre-blocking) files: those winners were measured
+        // without the blocking axis.
+        std::fs::write(&path, r#"{"schema_version": 2, "entries": []}"#).unwrap();
+        assert!(TuneDb::open(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 
@@ -509,7 +581,7 @@ mod tests {
         let path = temp_path("malformed");
         std::fs::write(
             &path,
-            r#"{"schema_version": 2, "entries": [{"layer_fp": "zz"}]}"#,
+            r#"{"schema_version": 3, "entries": [{"layer_fp": "zz"}]}"#,
         )
         .unwrap();
         assert!(TuneDb::open(&path).is_err());

@@ -32,6 +32,7 @@ use crate::coordinator::plan::{LayerPlan, NetworkPlan, PlanKind};
 use crate::coordinator::run_network_functional;
 use crate::dataflow::DataflowSpec;
 use crate::exec::{Backend, Partition, PreparedNetwork};
+use crate::explore::blocking::TileSpec;
 use crate::layer::{ConvConfig, ConvKind, LayerConfig};
 use crate::machine::MachineConfig;
 use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
@@ -51,6 +52,10 @@ pub struct CandidateMeasurement {
     /// Intra-layer tile count this candidate ran with
     /// ([`crate::exec::Partition`]); 1 = single-core.
     pub tiles: usize,
+    /// Cache-blocking spec this candidate ran with
+    /// ([`crate::explore::blocking`]); `None` = the baseline schedule
+    /// order.
+    pub blocking: Option<TileSpec>,
     /// Analytic model estimate (cycles) — the stage-1 ranking. For
     /// `tiles > 1` this is the partitioned estimate
     /// ([`crate::machine::PerfModel::estimate_layer_partitioned`]), so
@@ -75,8 +80,9 @@ pub struct TuneOutcome {
     pub cfg: ConvConfig,
     pub pad: usize,
     /// Candidates in **model-rank order** (ascending model cycles),
-    /// tile counts ascending within each spec, so `measurements[0]` is
-    /// the analytic single-core pick.
+    /// tile counts ascending within each spec and the unblocked
+    /// baseline before any blocked variant, so `measurements[0]` is
+    /// the analytic unblocked single-core pick.
     pub measurements: Vec<CandidateMeasurement>,
     /// Index of the measured winner in `measurements`.
     pub winner: usize,
@@ -108,6 +114,7 @@ impl TuneOutcome {
             pad: self.pad,
             spec: w.spec.clone(),
             tiles: w.tiles,
+            blocking: w.blocking,
             model_cycles: w.model_cycles,
             measured_sec: w.median_sec,
             spread: w.spread,
@@ -208,13 +215,33 @@ pub fn tune_conv(
         t *= 2;
     }
 
-    let mut measurements = Vec::with_capacity(shortlist.len() * tile_counts.len());
+    // The cache-blocking axis ([`crate::explore::blocking`]): when
+    // enabled, the top analytic TileSpec candidates join the grid next
+    // to the unblocked baseline, so the recorded winner is a
+    // (spec, tiles, blocking) triple. `None` comes first, keeping
+    // `measurements[0]` the analytic unblocked single-core pick.
+    let mut blocking_opts: Vec<Option<TileSpec>> = vec![None];
+    if tcfg.blocking {
+        let shape = crate::explore::blocking::ConvShape::of(cfg, c);
+        let hier = crate::machine::cache::Hierarchy::neoverse_n1();
+        blocking_opts.extend(
+            crate::explore::blocking::candidates(&shape, &hier)
+                .into_iter()
+                .take(2)
+                .map(Some),
+        );
+    }
+
+    let mut measurements =
+        Vec::with_capacity(shortlist.len() * tile_counts.len() * blocking_opts.len());
     for (spec, model_cycles) in shortlist {
         for &tiles in &tile_counts {
-            measurements.push(measure_candidate(
-                cfg, pad, machine, backend, tcfg, &weights, &spec, tiles, model_cycles,
-                &probes,
-            )?);
+            for &blocking in &blocking_opts {
+                measurements.push(measure_candidate(
+                    cfg, pad, machine, backend, tcfg, &weights, &spec, tiles, blocking,
+                    model_cycles, &probes,
+                )?);
+            }
         }
     }
 
@@ -258,6 +285,7 @@ fn measure_candidate(
     weights: &WeightTensor,
     spec: &DataflowSpec,
     tiles: usize,
+    blocking: Option<TileSpec>,
     model_cycles: f64,
     probes: &[Probe],
 ) -> crate::Result<CandidateMeasurement> {
@@ -280,6 +308,25 @@ fn measure_candidate(
     } else {
         model_cycles
     };
+    // Blocked candidates ratio-scale on the per-level analytic pricing,
+    // mirroring the planner (`Planner::plan_simple_conv`) so the
+    // recorded model score matches what a plan built from this entry
+    // would carry.
+    let model_cycles = match &blocking {
+        Some(b) => {
+            let pm = crate::machine::PerfModel::neoverse_n1();
+            let shape = crate::explore::blocking::ConvShape::of(cfg, machine.c_int8());
+            let trivial =
+                pm.blocked_cycles(&shape, &TileSpec::trivial(&shape), &stats);
+            let blocked = pm.blocked_cycles(&shape, b, &stats);
+            if trivial > 0.0 {
+                model_cycles * (blocked / trivial)
+            } else {
+                model_cycles
+            }
+        }
+        None => model_cycles,
+    };
     let mut lp = LayerPlan {
         layer: LayerConfig::Conv(*cfg),
         kind: PlanKind::Generated { spec: spec.clone(), prog, machine: *machine, pad },
@@ -288,6 +335,7 @@ fn measure_candidate(
         weights: None,
         packed: std::sync::OnceLock::new(),
         partition: Partition::banded(tiles),
+        blocking,
     };
     lp.bind_weights(weights.clone());
     let plan = NetworkPlan::chain(format!("tune-{}", spec.name()), vec![lp]);
@@ -306,6 +354,7 @@ fn measure_candidate(
             return Ok(CandidateMeasurement {
                 spec: spec.clone(),
                 tiles,
+                blocking,
                 model_cycles,
                 median_sec: f64::INFINITY,
                 spread: 0.0,
@@ -360,6 +409,7 @@ fn measure_candidate(
     Ok(CandidateMeasurement {
         spec: spec.clone(),
         tiles,
+        blocking,
         model_cycles,
         median_sec,
         spread,
@@ -428,6 +478,33 @@ mod tests {
         assert!(entry.tiles == 1 || entry.tiles == 2);
         // measurements[0] stays the analytic single-core pick.
         assert_eq!(out.model_pick().tiles, 1);
+    }
+
+    #[test]
+    fn blocking_axis_gates_blocked_candidates_on_the_oracle() {
+        // 32 input channels → 2 channel blocks, so a blocked schedule
+        // genuinely reorders. Every blocked candidate must pass the same
+        // bit-identity oracle gate — through the real prepared path —
+        // as the unblocked ones.
+        let machine = MachineConfig::neon(128);
+        let cfg = padded_conv(&ConvConfig::simple(8, 8, 3, 3, 1, 32, 32), &machine);
+        let tcfg = TuneConfig { blocking: true, ..TuneConfig::quick() };
+        let out = tune_conv(&cfg, 0, &machine, Backend::Native, &tcfg, None).unwrap();
+        assert!(
+            out.measurements.iter().any(|m| m.blocking.is_some()),
+            "blocking axis must add blocked candidates"
+        );
+        assert!(out.measurements.iter().all(|m| m.oracle_ok));
+        // measurements[0] stays the analytic unblocked single-core pick.
+        assert_eq!(out.model_pick().tiles, 1);
+        assert!(out.model_pick().blocking.is_none());
+        // The recorded entry carries the winner's blocking verbatim.
+        assert_eq!(out.entry().blocking, out.winner().blocking);
+        // Blocking off keeps the candidate set blocking-free.
+        let plain =
+            tune_conv(&cfg, 0, &machine, Backend::Native, &TuneConfig::quick(), None)
+                .unwrap();
+        assert!(plain.measurements.iter().all(|m| m.blocking.is_none()));
     }
 
     #[test]

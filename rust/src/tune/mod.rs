@@ -94,6 +94,12 @@ pub struct TuneConfig {
     /// timed, so the recorded winner is a (spec, tiles) pair. 1 (the
     /// default) keeps the pre-partition single-core candidate set.
     pub max_tiles: usize,
+    /// Measure the cache-blocking axis ([`crate::explore::blocking`]):
+    /// the top analytic [`crate::explore::blocking::TileSpec`]
+    /// candidates join the grid next to the unblocked baseline, so the
+    /// recorded winner is a (spec, tiles, blocking) triple. `false`
+    /// (the default) keeps the pre-blocking candidate set.
+    pub blocking: bool,
 }
 
 impl Default for TuneConfig {
@@ -107,6 +113,7 @@ impl Default for TuneConfig {
             spread_tolerance: 0.25,
             perf_sample: 2,
             max_tiles: 1,
+            blocking: false,
         }
     }
 }
@@ -123,6 +130,7 @@ impl TuneConfig {
             spread_tolerance: 0.6,
             perf_sample: 1,
             max_tiles: 1,
+            blocking: false,
         }
     }
 }
@@ -188,8 +196,9 @@ pub(crate) fn kernel_for_spec(
 }
 
 /// Rebuild `plan` with every generated-conv kernel replaced by its
-/// recorded tuning winner — dataflow spec *and* intra-layer partition
-/// ([`TuneEntry::tiles`]) — when the db knows one for this machine +
+/// recorded tuning winner — dataflow spec, intra-layer partition
+/// ([`TuneEntry::tiles`]), *and* cache blocking
+/// ([`TuneEntry::blocking`]) — when the db knows one for this machine +
 /// backend and it differs from the current kernel. Returns `None` when
 /// nothing changes. `perf_sample` feeds the re-estimated model stats of
 /// swapped kernels (pass the planner/tuner sampling in use). Weights
@@ -216,7 +225,10 @@ pub fn retune_plan(
         let key = TuneKey::for_layer(&cfg, &machine, backend);
         let Some(entry) = db.get(&key) else { continue };
         let tuned_partition = crate::exec::Partition::banded(entry.tiles);
-        if entry.spec == spec && tuned_partition == lp.partition {
+        if entry.spec == spec
+            && tuned_partition == lp.partition
+            && entry.blocking == lp.blocking
+        {
             continue;
         }
         let Some(tuned_spec) = usable_entry_spec(&entry, &machine) else { continue };
@@ -239,6 +251,10 @@ pub fn retune_plan(
         lp.kind = PlanKind::Generated { spec: tuned_spec, prog, machine, pad };
         lp.stats = stats;
         lp.partition = tuned_partition;
+        // A measured blocking winner rides along (like tiles, any
+        // TileSpec is bit-identical — a hand-edited value is at worst
+        // slow, never wrong; `blocked_schedule` clamps block sizes).
+        lp.blocking = entry.blocking;
         changed = true;
     }
     changed.then_some(out)
@@ -296,6 +312,7 @@ mod tests {
                 pad,
                 spec: other.clone(),
                 tiles: 1,
+                blocking: None,
                 model_cycles: 1.0,
                 measured_sec: 1e-6,
                 spread: 0.0,
@@ -322,6 +339,7 @@ mod tests {
                 pad,
                 spec: cur_spec.clone(),
                 tiles: 1,
+                blocking: None,
                 model_cycles: 1.0,
                 measured_sec: 1e-6,
                 spread: 0.0,
@@ -341,6 +359,7 @@ mod tests {
                 pad,
                 spec: cur_spec,
                 tiles: 2,
+                blocking: None,
                 model_cycles: 1.0,
                 measured_sec: 1e-6,
                 spread: 0.0,
@@ -353,6 +372,49 @@ mod tests {
         assert_ne!(plan_fingerprint(&plan), plan_fingerprint(&tiled));
         // And the tiled plan stays servable + bit-identical.
         assert!(tiled.layers[0].weights().is_some());
+    }
+
+    #[test]
+    fn retune_applies_a_measured_blocking_winner() {
+        let machine = MachineConfig::neon(128);
+        let plan = tiny_plan(machine);
+        let (cfg, pad, cur_spec) = match (&plan.layers[0].layer, &plan.layers[0].kind) {
+            (LayerConfig::Conv(c), PlanKind::Generated { spec, pad, .. }) => {
+                (*c, *pad, spec.clone())
+            }
+            _ => unreachable!(),
+        };
+        let blk = crate::explore::blocking::TileSpec {
+            oh: 4,
+            ow: 4,
+            oc: 8,
+            ic: 1,
+            l2_oc: 16,
+            l2_ic: 1,
+        };
+        let db = TuneDb::in_memory();
+        db.record(
+            TuneKey::for_layer(&cfg, &machine, Backend::Native),
+            TuneEntry {
+                layer: cfg.name(),
+                pad,
+                spec: cur_spec,
+                tiles: 1,
+                blocking: Some(blk),
+                model_cycles: 1.0,
+                measured_sec: 1e-6,
+                spread: 0.0,
+                samples: 3,
+            },
+        )
+        .unwrap();
+        // Same spec, same tiles, different blocking: still a retune,
+        // and the fingerprint splits so engines never cross-serve.
+        let tuned = retune_plan(&plan, &db, Backend::Native, 2).expect("must retune");
+        assert_eq!(tuned.layers[0].blocking, Some(blk));
+        assert_ne!(plan_fingerprint(&plan), plan_fingerprint(&tuned));
+        // Re-tuning the already-blocked plan is a no-op.
+        assert!(retune_plan(&tuned, &db, Backend::Native, 2).is_none());
     }
 
     #[test]
@@ -376,6 +438,7 @@ mod tests {
                 pad,
                 spec: huge,
                 tiles: 1,
+                blocking: None,
                 model_cycles: 1.0,
                 measured_sec: 1e-6,
                 spread: 0.0,

@@ -75,10 +75,15 @@ pub fn run_layers(
         let row = TuneReportRow {
             layer: cfg.name(),
             model_pick: m.spec.name(),
-            measured_pick: if w.tiles > 1 {
-                format!("{} x{} tiles", w.spec.name(), w.tiles)
-            } else {
-                w.spec.name()
+            measured_pick: {
+                let mut name = w.spec.name();
+                if w.tiles > 1 {
+                    name = format!("{name} x{} tiles", w.tiles);
+                }
+                if let Some(b) = &w.blocking {
+                    name = format!("{name} blk:{}", b.signature());
+                }
+                name
             },
             agree: outcome.agrees_with_model(),
             spearman: outcome.spearman,

@@ -158,6 +158,8 @@ pub const PLANNER_KEYS: &[&str] = &[
     "backend",
     "tune",
     "max_tiles",
+    "cache_blocking",
+    "tune_blocking",
 ];
 
 /// Build [`crate::coordinator::plan::PlannerOptions`] from `[planner]`.
@@ -215,6 +217,18 @@ pub fn planner_from(cfg: &Config) -> crate::coordinator::plan::PlannerOptions {
                 );
                 crate::tune::TuneMode::Off
             }
+        },
+        // `cache_blocking = true` turns on the cache-blocking stage
+        // ([`crate::explore::blocking`]): the planner may reorder a
+        // conv's invocation schedule into L1/L2-sized blocks when the
+        // per-level pricing says it wins. Off (the default) plans
+        // exactly as before the axis existed.
+        cache_blocking: cfg.get_bool("planner", "cache_blocking", false),
+        // `tune_blocking = true` adds the blocking axis to the measured
+        // tuning grid (only meaningful with `tune = measure`).
+        tune_config: crate::tune::TuneConfig {
+            blocking: cfg.get_bool("planner", "tune_blocking", false),
+            ..Default::default()
         },
         ..Default::default()
     }
@@ -377,10 +391,29 @@ vls = 128, 512
     }
 
     #[test]
+    fn planner_reads_cache_blocking() {
+        let c = Config::parse("[planner]\ncache_blocking = true\n").unwrap();
+        assert!(planner_from(&c).cache_blocking);
+        // Absent keeps the stage off — default plans are unchanged.
+        assert!(!planner_from(&Config::default()).cache_blocking);
+        let c = Config::parse("[planner]\ntune_blocking = true\n").unwrap();
+        let p = planner_from(&c);
+        assert!(p.tune_config.blocking);
+        assert!(!p.cache_blocking);
+    }
+
+    #[test]
     fn flags_unknown_planner_keys() {
         // `tunee` is the §V-sweep typo this check exists for.
         let c = Config::parse("[planner]\ntunee = measure\nvector_length = 128\n").unwrap();
         assert_eq!(c.unknown_keys("planner", PLANNER_KEYS), vec!["tunee".to_string()]);
+        // `cache_blockingg` is the blocking-era typo of the same class:
+        // it must be flagged, not silently plan unblocked.
+        let c = Config::parse("[planner]\ncache_blockingg = true\n").unwrap();
+        assert_eq!(
+            c.unknown_keys("planner", PLANNER_KEYS),
+            vec!["cache_blockingg".to_string()]
+        );
         // Every known key passes clean.
         let all = PLANNER_KEYS
             .iter()

@@ -1,0 +1,355 @@
+//! Integration: cache-blocked schedules are bit-identical to the
+//! baseline order on every kernel kind, through the real prepared
+//! engine.
+//!
+//! * Forced `TileSpec`s (L1/L2 block sizes swept by hand) on extended-OS,
+//!   stride-2, 256-bit, and 1×1 convs match `run_network_functional`
+//!   byte-for-byte — and the blocked schedule really is a reorder, not
+//!   a no-op, wherever the shape admits one.
+//! * Blocking composes with PR-6 output-band partitioning: blocked
+//!   schedules split into tiles and still match at every intra-thread
+//!   count.
+//! * Randomized property: random conv shapes × random block sizes ×
+//!   random tile counts never change a byte.
+//! * A planner with `cache_blocking` enabled picks a non-trivial spec
+//!   on a large layer, the prepared plan still matches the functional
+//!   path, and the choice is part of the plan fingerprint.
+//! * Mixed chains (simple → depthwise → grouped) with blocking forced on
+//!   every conv stay bit-identical: depthwise/grouped kinds ignore the
+//!   field by design, the simple conv actually reorders.
+//! * Binary XNOR schedules share the `(cb, k)` factorization, so they
+//!   are covered at the raw schedule level: the blocked interpreter
+//!   accumulator equals the baseline accumulator exactly.
+
+use yflows::codegen::binary;
+use yflows::coordinator::{
+    self,
+    plan::{plan_fingerprint, NetworkPlan, Planner, PlannerOptions},
+};
+use yflows::exec::{Partition, PreparedNetwork};
+use yflows::explore::blocking::{blocked_schedule, candidates, ConvShape, TileSpec};
+use yflows::layer::{ConvConfig, LayerConfig};
+use yflows::machine::cache::Hierarchy;
+use yflows::machine::{Buffers, DecodedProgram, Interp, MachineConfig};
+use yflows::quant::{pack_binary_act, pack_binary_wgt};
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::prop::check;
+
+const SHIFT: u32 = 9;
+
+/// Single-conv chain plan with weights bound (the blocking under test is
+/// forced by the caller afterwards).
+fn conv_plan(machine: MachineConfig, cfg: ConvConfig, pad: usize, seed: u64) -> NetworkPlan {
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions {
+        machine,
+        explore_each_layer: false,
+        perf_sample: 1,
+        explore_threads: 1,
+        ..Default::default()
+    });
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), pad);
+    let depthwise = cfg.groups == cfg.in_channels && cfg.groups > 1;
+    lp.bind_weights(if depthwise {
+        WeightTensor::random(
+            WeightShape::new(1, cfg.in_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRS,
+            seed,
+        )
+    } else {
+        WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            seed,
+        )
+    });
+    NetworkPlan::chain("blocking-case", vec![lp])
+}
+
+fn conv_input(machine: &MachineConfig, cfg: &ConvConfig, pad: usize, seed: u64) -> ActTensor {
+    ActTensor::random(
+        ActShape::new(cfg.in_channels, cfg.ih - 2 * pad, cfg.iw - 2 * pad),
+        ActLayout::NCHWc { c: machine.c_int8() },
+        seed,
+    )
+}
+
+/// The core check: force `spec` (and optionally a banded partition) on
+/// every conv layer, prepare, and assert outputs match the functional
+/// path byte-for-byte at several intra-thread counts.
+fn assert_blocked_bit_identity(
+    plan: &mut NetworkPlan,
+    input: &ActTensor,
+    spec: TileSpec,
+    tiles: usize,
+) {
+    let want = coordinator::run_network_functional(plan, input, SHIFT).expect("functional");
+
+    for lp in plan.layers.iter_mut() {
+        if matches!(lp.layer, LayerConfig::Conv(_)) {
+            lp.blocking = Some(spec);
+            if tiles > 1 {
+                lp.partition = Partition::banded(tiles);
+            }
+        }
+    }
+    let prepared = PreparedNetwork::prepare(plan).expect("prepare blocked");
+    let mut arena = prepared.new_arena();
+    for intra in [1usize, 2, 4] {
+        let got = prepared.run_with(input, SHIFT, &mut arena, intra).expect("blocked run");
+        assert_eq!(got.shape, want.shape, "shape diverges: {} tiles {tiles}", spec.signature());
+        assert_eq!(got.layout, want.layout, "layout diverges: {}", spec.signature());
+        assert_eq!(
+            got.data,
+            want.data,
+            "bytes diverge under blocking {} at {tiles} tiles, intra {intra}",
+            spec.signature()
+        );
+    }
+}
+
+/// Block specs that exercise distinct nest shapes: single-channel L1
+/// blocks, square-ish blocks, and an L2 level strictly between L1 and
+/// the full layer. `blocked_schedule` clamps, so oversized values are
+/// safe on any shape.
+fn forced_specs() -> [TileSpec; 3] {
+    [
+        TileSpec { oh: 8, ow: 8, oc: 1, ic: 1, l2_oc: 4, l2_ic: 64 },
+        TileSpec { oh: 8, ow: 8, oc: 2, ic: 1, l2_oc: 8, l2_ic: 64 },
+        TileSpec { oh: 8, ow: 8, oc: 4, ic: 2, l2_oc: 16, l2_ic: 2 },
+    ]
+}
+
+#[test]
+fn forced_blockings_match_functional_across_dataflows() {
+    // (machine, cfg, pad): extended OS at 128-bit, stride 2, wide
+    // vector variables at 256-bit, and a 1×1 (dense-shaped) conv. All
+    // have num_blocks >= 2 so the reorder is real.
+    let m128 = MachineConfig::neon(128);
+    let m256 = MachineConfig::neon(256);
+    let cases = [
+        (m128, ConvConfig::simple(10, 10, 3, 3, 1, 32, 32), 1, 41u64),
+        (m128, ConvConfig::simple(9, 9, 3, 3, 2, 32, 32), 1, 42),
+        (m256, ConvConfig::simple(10, 10, 3, 3, 1, 64, 64), 1, 43),
+        (m128, ConvConfig::simple(6, 6, 1, 1, 1, 32, 48), 0, 44),
+    ];
+    for (machine, cfg, pad, seed) in cases {
+        let input = conv_input(&machine, &cfg, pad, seed);
+        for spec in forced_specs() {
+            // Non-vacuity: at schedule level the spec must reorder.
+            let sched = yflows::codegen::schedule(&cfg, &machine);
+            let nb = cfg.in_channels / machine.c_int8();
+            let blocked = blocked_schedule(&sched, nb, cfg.out_channels, &spec);
+            assert_ne!(sched, blocked, "{}: spec {} is a no-op", cfg.name(), spec.signature());
+
+            let mut plan = conv_plan(machine, cfg, pad, seed);
+            assert_blocked_bit_identity(&mut plan, &input, spec, 1);
+        }
+    }
+}
+
+#[test]
+fn blocking_composes_with_output_band_partitioning() {
+    // PR-6 interaction: bands split the blocked schedule by output base
+    // (order within each band preserved), so blocking × tiles must stay
+    // bit-identical at every combination.
+    let machine = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 32, 48);
+    let input = conv_input(&machine, &cfg, 1, 51);
+    for spec in forced_specs() {
+        for tiles in [2usize, 3, 8] {
+            let mut plan = conv_plan(machine, cfg, 1, 51);
+            assert_blocked_bit_identity(&mut plan, &input, spec, tiles);
+        }
+    }
+}
+
+#[test]
+fn random_shapes_blocks_and_tiles_never_change_bytes() {
+    check("blocking-equivalence", 10, |rng| {
+        let machine = MachineConfig::neon(128);
+        let hw = rng.range(6, 11);
+        let stride = rng.range(1, 2);
+        let (fh, pad) = if rng.range(0, 1) == 0 { (3, 1) } else { (1, 0) };
+        // Keep (ih - fh) divisible by stride so the planner's padded
+        // shape is the drawn shape.
+        let ih = {
+            let mut ih = hw + 2 * pad;
+            while (ih - fh) % stride != 0 {
+                ih += 1;
+            }
+            ih
+        };
+        let in_ch = *rng.pick(&[32usize, 48, 64]);
+        let out_ch = *rng.pick(&[16usize, 32, 48]);
+        let cfg = ConvConfig::simple(ih, ih, fh, fh, stride, in_ch, out_ch);
+        let spec = TileSpec {
+            oh: cfg.oh(),
+            ow: cfg.ow(),
+            oc: 1 << rng.range(0, 3),
+            ic: 1 << rng.range(0, 1),
+            l2_oc: 1 << rng.range(2, 5),
+            l2_ic: 1 << rng.range(1, 2),
+        };
+        let tiles = rng.range(1, 5);
+        let seed = rng.next_u64();
+        let mut plan = conv_plan(machine, cfg, pad, seed);
+        let input = conv_input(&machine, &cfg, pad, seed ^ 0x5A);
+        assert_blocked_bit_identity(&mut plan, &input, spec, tiles);
+    });
+}
+
+#[test]
+fn planner_chosen_blocking_is_bit_identical_and_fingerprinted() {
+    // A layer whose accumulator working set outgrows L1 (16×16 planes ×
+    // 128 channels ≈ 128 KiB of i32): the analytic stage must pick a
+    // non-trivial spec, and the resulting plan must execute exactly
+    // like the unblocked one.
+    let machine = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(18, 18, 3, 3, 1, 32, 128);
+    let c = machine.c_int8();
+    let plan_with = |cache_blocking: bool| {
+        let mut planner = Planner::new(PlannerOptions {
+            machine,
+            cache_blocking,
+            explore_each_layer: false,
+            perf_sample: 1,
+            explore_threads: 1,
+            ..Default::default()
+        });
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 1);
+        lp.bind_weights(WeightTensor::random(
+            WeightShape::new(32, 128, 3, 3),
+            WeightLayout::CKRSc { c },
+            88,
+        ));
+        NetworkPlan::chain("planner-blocked", vec![lp])
+    };
+
+    let baseline = plan_with(false);
+    assert!(baseline.layers[0].blocking.is_none(), "blocking must be opt-in");
+    let blocked = plan_with(true);
+    let spec = blocked.layers[0].blocking.expect("large layer must pick a TileSpec");
+    let shape = ConvShape::of(&cfg, c);
+    assert!(!spec.is_trivial(&shape), "picked spec must be non-trivial: {}", spec.signature());
+    assert_ne!(
+        plan_fingerprint(&baseline),
+        plan_fingerprint(&blocked),
+        "blocking must be part of the plan fingerprint"
+    );
+
+    let input = conv_input(&machine, &cfg, 1, 89);
+    let want = coordinator::run_network_functional(&baseline, &input, SHIFT).unwrap();
+    let prepared = PreparedNetwork::prepare(&blocked).unwrap();
+    let mut arena = prepared.new_arena();
+    let got = prepared.run(&input, SHIFT, &mut arena).unwrap();
+    assert_eq!(got.data, want.data, "planner-chosen blocking {} diverges", spec.signature());
+
+    // The analytic candidates the planner chose from all fit L1 with
+    // slack — the same invariant the unit suite checks, re-asserted on
+    // this integration shape.
+    assert!(!candidates(&shape, &Hierarchy::neoverse_n1()).is_empty());
+}
+
+#[test]
+fn mixed_kinds_with_forced_blocking_match_functional() {
+    // simple conv (really reordered) → depthwise → grouped: the
+    // depthwise and grouped plan kinds ignore a hand-set blocking field
+    // by design (the planner never sets it for them), so the whole
+    // chain must stay byte-identical with blocking forced everywhere.
+    let machine = MachineConfig::neon(128);
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut layers = Vec::new();
+
+    let conv = ConvConfig::simple(10, 10, 3, 3, 1, 32, 32);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(conv), 1);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(32, 32, 3, 3),
+        WeightLayout::CKRSc { c },
+        701,
+    ));
+    layers.push(lp);
+
+    let dw = ConvConfig::depthwise(10, 10, 3, 3, 1, 32);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(dw), 1);
+    lp.bind_weights(WeightTensor::random(WeightShape::new(1, 32, 3, 3), WeightLayout::CKRS, 702));
+    layers.push(lp);
+
+    let grouped = ConvConfig::grouped(10, 10, 3, 3, 1, 32, 32, 2);
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(grouped), 1);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(16, 32, 3, 3),
+        WeightLayout::CKRSc { c },
+        703,
+    ));
+    layers.push(lp);
+
+    let mut plan = NetworkPlan::chain("mixed-blocked", layers);
+    let input = ActTensor::random(ActShape::new(32, 8, 8), ActLayout::NCHWc { c }, 71);
+    let spec = TileSpec { oh: 8, ow: 8, oc: 4, ic: 1, l2_oc: 8, l2_ic: 2 };
+    for tiles in [1usize, 2] {
+        assert_blocked_bit_identity(&mut plan, &input, spec, tiles);
+    }
+}
+
+#[test]
+fn binary_schedules_block_bit_identically_at_raw_level() {
+    // Binary convs never flow through coordinator plans, so cover them
+    // at the schedule level: the blocked interpreter accumulator must
+    // equal the baseline one exactly. Two input-channel blocks so the
+    // reorder is real.
+    let machine = MachineConfig::neon(128);
+    let c_bits = machine.c_binary();
+    // 8 output channels: every forced spec has an L1 k-block smaller
+    // than the k extent, so each one really reorders.
+    let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 2 * c_bits, 8);
+    let mut rng = yflows::util::rng::Rng::new(23);
+    let mut input = ActTensor::zeros(
+        ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+        ActLayout::NCHWc { c: c_bits },
+    );
+    for v in input.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let mut weights = WeightTensor::zeros(
+        WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+        WeightLayout::CKRSc { c: c_bits },
+    );
+    for v in weights.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let pin = pack_binary_act(&input, c_bits);
+    let pw = pack_binary_wgt(&weights, c_bits);
+    let sched = binary::schedule_binary(&cfg, &machine);
+    let nb = cfg.in_channels / c_bits;
+    let acc_elems = cfg.out_channels * cfg.e_size();
+
+    for prog in [binary::gen_binary_os(&cfg, &machine), binary::gen_binary_ws(&cfg, &machine)] {
+        let dp = DecodedProgram::decode(&prog);
+        let run = |order: &[yflows::machine::Bases]| {
+            let mut acc = vec![0i32; acc_elems];
+            let mut interp = Interp::new(machine.num_regs);
+            for &bases in order {
+                interp.run_decoded(
+                    &dp,
+                    &mut Buffers { input: &pin, weight: &pw, output: &mut acc },
+                    bases,
+                );
+            }
+            acc
+        };
+        let want = run(&sched);
+        for spec in forced_specs() {
+            let blocked = blocked_schedule(&sched, nb, cfg.out_channels, &spec);
+            assert_ne!(sched, blocked, "{}: {} is a no-op", prog.name, spec.signature());
+            assert_eq!(
+                run(&blocked),
+                want,
+                "{}: blocked accumulator diverges under {}",
+                prog.name,
+                spec.signature()
+            );
+        }
+    }
+}

@@ -113,6 +113,7 @@ fn tune_mode_off_reproduces_todays_plans_exactly() {
                     pad: *pad,
                     spec: DataflowSpec::basic(Anchor::Input),
                     tiles: 1,
+                    blocking: None,
                     model_cycles: 1.0,
                     measured_sec: 1e-9,
                     spread: 0.0,
@@ -188,6 +189,7 @@ fn tune_db_round_trips_and_rejects_stale_or_mismatched_state() {
         pad: 1,
         spec: DataflowSpec::optimized_os(&machine, 9),
         tiles: 1,
+        blocking: None,
         model_cycles: 9.9e4,
         measured_sec: 1.2e-5,
         spread: 0.03,
@@ -209,7 +211,7 @@ fn tune_db_round_trips_and_rejects_stale_or_mismatched_state() {
     let stale = temp_db_path("stale");
     let bumped = std::fs::read_to_string(&path)
         .unwrap()
-        .replace("\"schema_version\":2", "\"schema_version\":0");
+        .replace("\"schema_version\":3", "\"schema_version\":0");
     std::fs::write(&stale, bumped).unwrap();
     let err = TuneDb::open(&stale).unwrap_err().to_string();
     assert!(err.contains("schema_version"), "{err}");
