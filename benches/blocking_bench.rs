@@ -2,12 +2,21 @@
 //!
 //! For each layer in the sweep, the same weight-bound plan is prepared
 //! unblocked (the baseline) and once per analytic `TileSpec` candidate
-//! from the L1/L2 hierarchy (plus the planner's own `cache_blocking`
-//! pick, marked in the output). Every blocked engine's outputs are
+//! from the L1/L2/LLC hierarchy (plus the planner's own
+//! `cache_blocking` pick, marked in the output — and asserted to be one
+//! of the generated candidates). Every blocked engine's outputs are
 //! asserted **bit-identical** to the baseline on the benchmark inputs
-//! (blocking is a pure permutation — the contract), then per-image
-//! latency is measured single-core, the axis the blocking model prices:
-//! L1/L2 fill traffic at identical instruction streams.
+//! (blocking is a pure permutation/tiling of an exact integer conv —
+//! the contract), then per-image latency is measured single-core, the
+//! axis the blocking model prices: L1/L2/LLC fill traffic at identical
+//! arithmetic.
+//!
+//! Each spec point also reports the model-priced memory cycles
+//! (`PerfModel::blocked_mem_cycles`). On layers where spatial sub-plane
+//! candidates exist (the 56×56 class), the best sub-plane spec is
+//! asserted to price strictly below the best channel-only (full-plane)
+//! spec — the PR-8 claim that oh/ow blocking beats pure channel
+//! blocking once the input plane outgrows L1.
 //!
 //! Sweep: paper-§V-sized convs whose accumulator working sets outgrow
 //! L1 — 56×56×64, 28×28×128, a 1×1 (dense-shaped) reduction — at
@@ -16,10 +25,17 @@
 //! Modes:
 //! * `--smoke` — CI mode: small shapes, bit-identity gate + one timed
 //!   round per layer/spec, no file side effects.
-//! * `--json [PATH]` — additionally write a BENCH_7.json-style record
-//!   (default path `BENCH_7.json`): per-layer images/sec for the
-//!   baseline and every candidate, speedup vs unblocked, and which
-//!   spec the planner chose.
+//! * `--smoke --baseline PATH` — CI perf gate: additionally compare the
+//!   unblocked throughput of each smoke layer against the
+//!   `smoke_baseline` section of PATH (the checked-in `BENCH_8.json`)
+//!   and fail on a >30% regression. Baselines with `null` measurements
+//!   (recorded on machines without a toolchain) skip the comparison
+//!   loudly instead of failing.
+//! * `--json [PATH]` — additionally write a BENCH_8.json-style record
+//!   (default path `BENCH_8.json`): per-layer images/sec and modeled
+//!   memory cycles for the baseline and every candidate, speedup vs
+//!   unblocked, which spec the planner chose, and a fresh
+//!   `smoke_baseline` section for the CI gate.
 //!
 //! Run: `cargo bench --bench blocking_bench [-- --smoke|--json]`
 
@@ -32,13 +48,15 @@ use yflows::coordinator::plan::{NetworkPlan, Planner, PlannerOptions};
 use yflows::exec::PreparedNetwork;
 use yflows::explore::blocking::{candidates, ConvShape, TileSpec};
 use yflows::layer::{ConvConfig, LayerConfig};
-use yflows::machine::cache::Hierarchy;
-use yflows::machine::MachineConfig;
+use yflows::machine::{MachineConfig, PerfModel};
 use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
 use yflows::util::bench::black_box;
 use yflows::util::json::Json;
 
 const SHIFT: u32 = 9;
+/// CI perf gate: fail when a smoke layer's unblocked throughput drops
+/// more than this fraction below the checked-in baseline.
+const REGRESSION_SLACK: f64 = 0.30;
 
 struct SweepLayer {
     name: &'static str,
@@ -98,15 +116,79 @@ fn images_per_sec(engine: &PreparedNetwork, inputs: &[ActTensor], rounds: usize)
     (inputs.len() * rounds) as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// Compare measured smoke throughput against the `smoke_baseline`
+/// section of a checked-in bench record. `null` or missing baselines
+/// skip the comparison loudly; a >`REGRESSION_SLACK` drop fails.
+fn check_baseline(path: &str, measured: &[(String, f64)]) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("perf-smoke: cannot read baseline {path} ({e}); skipping comparison");
+            return;
+        }
+    };
+    let json = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            println!("perf-smoke: unparseable baseline {path} ({e}); skipping comparison");
+            return;
+        }
+    };
+    let rows = match json.get("smoke_baseline").and_then(|s| s.get("layers")) {
+        Some(Json::Arr(rows)) => rows,
+        _ => {
+            println!("perf-smoke: {path} has no smoke_baseline.layers; skipping comparison");
+            return;
+        }
+    };
+    let mut failed = false;
+    for (name, ips) in measured {
+        let base = rows
+            .iter()
+            .find(|r| r.get("layer").and_then(|l| l.as_str()) == Some(name))
+            .and_then(|r| r.get("images_per_sec"))
+            .and_then(|v| v.as_f64());
+        match base {
+            None => println!(
+                "perf-smoke: {name}: no recorded baseline in {path} (null or absent); skipping"
+            ),
+            Some(base) => {
+                let floor = base * (1.0 - REGRESSION_SLACK);
+                let verdict = if *ips < floor { "REGRESSION" } else { "ok" };
+                println!(
+                    "perf-smoke: {name}: {ips:.1} img/s vs baseline {base:.1} \
+                     (floor {floor:.1}) — {verdict}"
+                );
+                failed |= *ips < floor;
+            }
+        }
+    }
+    if failed {
+        eprintln!(
+            "perf-smoke: unblocked throughput regressed more than {:.0}% below {path}",
+            REGRESSION_SLACK * 100.0
+        );
+        std::process::exit(1);
+    }
+}
+
 fn main() {
-    let common::BenchArgs { smoke, json_path } = common::parse_args("BENCH_7.json");
+    let common::BenchArgs { smoke, json_path } = common::parse_args("BENCH_8.json");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let baseline_path = argv
+        .iter()
+        .position(|a| a == "--baseline")
+        .and_then(|i| argv.get(i + 1))
+        .filter(|p| !p.starts_with("--"))
+        .cloned();
 
     let images: usize = if smoke { 2 } else { 4 };
     let rounds: usize = if smoke { 1 } else { 10 };
-    let hier = Hierarchy::neoverse_n1();
+    let pm = PerfModel::neoverse_n1();
 
     let mut layer_rows: Vec<Json> = Vec::new();
-    println!("== blocking_bench: baseline order vs analytic L1/L2 TileSpecs ==");
+    let mut smoke_measured: Vec<(String, f64)> = Vec::new();
+    println!("== blocking_bench: baseline order vs analytic L1/L2/LLC TileSpecs ==");
     for layer in sweep(smoke) {
         let c = layer.machine.c_int8();
         let shape = ConvShape::of(&layer.cfg, c);
@@ -130,10 +212,42 @@ fn main() {
             planner.plan_layer(&LayerConfig::Conv(layer.cfg), layer.pad).blocking
         };
 
-        let specs: Vec<Option<TileSpec>> = std::iter::once(None)
-            .chain(candidates(&shape, &hier).into_iter().map(Some))
-            .collect();
-        assert!(specs.len() > 1, "{}: sweep layer has no blocking candidates", layer.name);
+        let cands = candidates(&shape, &pm.hier);
+        assert!(!cands.is_empty(), "{}: sweep layer has no blocking candidates", layer.name);
+        // The planner must choose from the analytic candidate set, not
+        // invent a spec the sweep never prices.
+        if let Some(pick) = planner_pick {
+            assert!(
+                cands.contains(&pick),
+                "{}: planner pick {} is not among the {} generated candidates",
+                layer.name,
+                pick.signature(),
+                cands.len()
+            );
+        }
+        // PR-8 claim, priced by the model: where sub-plane candidates
+        // exist, the best one undercuts the best channel-only spec.
+        let best_sub = cands
+            .iter()
+            .filter(|s| s.is_subplane(&shape))
+            .map(|s| pm.blocked_mem_cycles(&shape, s))
+            .fold(f64::INFINITY, f64::min);
+        let best_chan = cands
+            .iter()
+            .filter(|s| !s.is_subplane(&shape))
+            .map(|s| pm.blocked_mem_cycles(&shape, s))
+            .fold(f64::INFINITY, f64::min);
+        if best_sub.is_finite() && best_chan.is_finite() {
+            assert!(
+                best_sub < best_chan,
+                "{}: best sub-plane spec ({best_sub:.0} modeled mem cycles) must price \
+                 strictly below the channel-only best ({best_chan:.0})",
+                layer.name
+            );
+        }
+
+        let specs: Vec<Option<TileSpec>> =
+            std::iter::once(None).chain(cands.into_iter().map(Some)).collect();
 
         let mut row = Json::obj();
         row.set("layer", Json::s(layer.name));
@@ -149,7 +263,7 @@ fn main() {
             let engine = PreparedNetwork::prepare(&plan).expect("blocked engine");
 
             // Correctness gate: blocked output bytes == baseline. The
-            // reorder is a pure permutation, so any diff is a bug.
+            // reorder/tiling is exact, so any diff is a bug.
             let mut arena = engine.new_arena();
             for (i, input) in inputs.iter().enumerate() {
                 let got = engine.run(input, SHIFT, &mut arena).expect("gate run");
@@ -162,6 +276,11 @@ fn main() {
                 );
             }
 
+            // Model-priced memory cycles: the trivial spec prices the
+            // unblocked row, so the column is comparable down the sweep.
+            let model_spec = spec.unwrap_or_else(|| TileSpec::trivial(&shape));
+            let model_cycles = pm.blocked_mem_cycles(&shape, &model_spec);
+
             let ips = images_per_sec(&engine, &inputs, rounds);
             if spec.is_none() {
                 base_ips = ips;
@@ -170,29 +289,57 @@ fn main() {
             let label = spec.map(|s| s.signature()).unwrap_or_else(|| "unblocked".into());
             let picked = spec == planner_pick && spec.is_some();
             println!(
-                "{:<18} {:<20} {:>9.1} img/s   speedup {:>5.2}x{}",
+                "{:<18} {:<28} {:>9.1} img/s   model {:>12.0} cyc   speedup {:>5.2}x{}",
                 layer.name,
                 label,
                 ips,
+                model_cycles,
                 speedup,
                 if picked { "   <- planner pick" } else { "" },
             );
             let mut sr = Json::obj();
             sr.set("blocking", spec.map(|s| Json::s(&s.signature())).unwrap_or(Json::Null))
                 .set("images_per_sec", Json::Num(ips))
+                .set("model_mem_cycles", Json::Num(model_cycles))
                 .set("speedup_vs_unblocked", Json::Num(speedup))
                 .set("planner_pick", Json::Bool(picked));
             spec_rows.push(sr);
         }
         row.set("spec_points", Json::Arr(spec_rows));
         layer_rows.push(row);
+        if smoke {
+            smoke_measured.push((layer.name.to_string(), base_ips));
+        }
     }
     if smoke {
         println!("smoke OK: every TileSpec bit-identical to the baseline order");
+        if let Some(path) = baseline_path {
+            check_baseline(&path, &smoke_measured);
+        }
         return;
     }
 
     if let Some(path) = json_path {
+        // Stamp a fresh smoke baseline alongside the sweep so the CI
+        // perf gate (`--smoke --baseline BENCH_8.json`) has real numbers
+        // the next time this record is regenerated on hardware.
+        let mut smoke_rows: Vec<Json> = Vec::new();
+        for layer in sweep(true) {
+            let c = layer.machine.c_int8();
+            let inputs: Vec<ActTensor> = (0..2u64)
+                .map(|s| ActTensor::random(layer.input_shape, ActLayout::NCHWc { c }, 3000 + s))
+                .collect();
+            let engine = PreparedNetwork::prepare(&layer.plan).expect("smoke engine");
+            let ips = images_per_sec(&engine, &inputs, 3);
+            let mut sr = Json::obj();
+            sr.set("layer", Json::s(layer.name)).set("images_per_sec", Json::Num(ips));
+            smoke_rows.push(sr);
+        }
+        let mut smoke_obj = Json::obj();
+        smoke_obj
+            .set("layers", Json::Arr(smoke_rows))
+            .set("regression_slack", Json::Num(REGRESSION_SLACK));
+
         let mut obj = Json::obj();
         obj.set("bench", Json::s("blocking_bench"))
             .set(
@@ -204,11 +351,13 @@ fn main() {
             .set("requant_shift", Json::from_u64(SHIFT as u64))
             .set("bit_identical", Json::Bool(true))
             .set("layers", Json::Arr(layer_rows))
+            .set("smoke_baseline", smoke_obj)
             .set(
                 "target",
                 Json::s(
-                    "single-core latency from L1/L2 fill reduction at an identical \
-                     instruction stream; bit-identity for every TileSpec",
+                    "single-core latency from L1/L2/LLC fill reduction at identical \
+                     arithmetic; bit-identity for every TileSpec; sub-plane specs price \
+                     below channel-only blocking on the 56x56 class",
                 ),
             );
         common::write_json(&path, &obj);

@@ -27,6 +27,7 @@ pub mod ws;
 pub mod binary;
 pub mod depthwise;
 pub mod emit_c;
+pub mod subplane;
 
 use crate::dataflow::{Anchor, DataflowSpec};
 use crate::isa::{Buf, Mode, Program, VInstr, REG_BYTES};

@@ -1,0 +1,317 @@
+//! Sub-plane program generation: a program covering an
+//! `(oh_block × ow_block)` sub-rectangle of the ofmap, invocable at any
+//! tile origin via base adjustment alone (ROADMAP item 1, spatial axis).
+//!
+//! A generated program bakes the output-plane walk into its instruction
+//! offsets, so full-plane programs cannot be blocked spatially — the
+//! whole plane streams through cache once per `(cb, k)` invocation.
+//! This module produces a **tile program** instead: run the ordinary
+//! generator ([`super::generate`]) on a *tile-shaped* config — input
+//! dims `(ohb−1)·stride + fh` by `(owb−1)·stride + fw`, the tile's
+//! receptive field including its halo — then remap every buffer offset
+//! from the tile's local coordinates to the full layer's strides:
+//!
+//! * **Input** offsets factor as `pixel · c + lane`; the pixel's tile
+//!   coordinates `(y, x)` re-linearize against the full input width.
+//!   The lane part is preserved, so multi-register (256-bit) variables
+//!   remap per physical load. Loads must not straddle a pixel's
+//!   `c`-byte block (the NCHWc generators never do; asserted).
+//! * **Output** offsets factor as `(oy, ox)` against the tile's output
+//!   width and re-linearize against the full plane's. Vector output
+//!   spans ([`VInstr::VStoreOut`]/[`VInstr::VAccOut`]) would be torn by
+//!   this remap if they crossed a tile row — they only occur in
+//!   depthwise programs, which are excluded from spatial blocking;
+//!   asserted here so misuse fails loudly, not wrongly.
+//! * **Weight** offsets are origin-independent and pass through.
+//!
+//! The remapped program computes, per `(cb, k)` invocation at a tile
+//! origin, exactly the taps the full-plane program applies to those
+//! output elements, **in the same per-element order**: the generators'
+//! tap walks depend only on tap geometry `(ry, rx)` relative to the
+//! output element, which is translation-invariant, and tile input
+//! origins are multiples of the stride so stride-parity is preserved.
+//! Outputs are therefore byte-identical to the full-plane program by
+//! construction — the property `explore::blocking::spatial_schedule`
+//! and the `blocking_equivalence` suite rely on.
+
+use crate::dataflow::DataflowSpec;
+use crate::isa::{Buf, Program, VInstr, I8_LANES, REG_BYTES};
+use crate::layer::{ConvConfig, ConvKind};
+use crate::machine::MachineConfig;
+
+/// The standalone conv config of one `(ohb × owb)` output tile of
+/// `cfg`: same filter/stride/channels, input dims shrunk to the tile's
+/// receptive field. Panics on non-simple kinds (depthwise/grouped
+/// schedules are excluded from spatial blocking) and on blocks that
+/// don't fit the plane.
+pub fn tile_cfg(cfg: &ConvConfig, ohb: usize, owb: usize) -> ConvConfig {
+    assert_eq!(cfg.kind, ConvKind::Simple, "sub-plane programs are simple-conv only");
+    assert!(
+        (1..=cfg.oh()).contains(&ohb) && (1..=cfg.ow()).contains(&owb),
+        "tile {ohb}x{owb} outside plane {}x{}",
+        cfg.oh(),
+        cfg.ow()
+    );
+    ConvConfig::simple(
+        (ohb - 1) * cfg.stride + cfg.fh,
+        (owb - 1) * cfg.stride + cfg.fw,
+        cfg.fh,
+        cfg.fw,
+        cfg.stride,
+        cfg.in_channels,
+        cfg.out_channels,
+    )
+}
+
+/// Generate the sub-plane program for an `(ohb × owb)` tile of `cfg`
+/// under dataflow `spec`: the tile-shaped program, offsets remapped to
+/// the full layer's input/output strides. Pair with
+/// [`crate::explore::blocking::spatial_schedule`] bases.
+pub fn generate_subplane(
+    cfg: &ConvConfig,
+    spec: &DataflowSpec,
+    machine: &MachineConfig,
+    ohb: usize,
+    owb: usize,
+) -> Program {
+    let tcfg = tile_cfg(cfg, ohb, owb);
+    let tile = super::generate(&tcfg, spec, machine);
+    remap_to_plane(tile, &tcfg, cfg, machine)
+}
+
+/// Remap a tile-shaped program's buffer offsets from the tile's local
+/// coordinate system to the full layer's strides (see module docs).
+pub fn remap_to_plane(
+    tile: Program,
+    tcfg: &ConvConfig,
+    cfg: &ConvConfig,
+    machine: &MachineConfig,
+) -> Program {
+    assert_eq!(
+        (tcfg.fh, tcfg.fw, tcfg.stride, tcfg.in_channels, tcfg.out_channels),
+        (cfg.fh, cfg.fw, cfg.stride, cfg.in_channels, cfg.out_channels),
+        "tile config is not a sub-plane of the layer"
+    );
+    assert!(tcfg.ih <= cfg.ih && tcfg.iw <= cfg.iw);
+    let c = machine.c_int8().max(1);
+    let (tile_iw, full_iw) = (tcfg.iw, cfg.iw);
+    let (tile_ow, full_ow) = (tcfg.ow(), cfg.ow());
+    let in_off = |off: u32| -> u32 {
+        let o = off as usize;
+        let (pos, lane) = (o / c, o % c);
+        assert!(
+            lane + REG_BYTES <= c,
+            "input access straddles a pixel block (off {o}, c {c}) — not remappable"
+        );
+        let (y, x) = (pos / tile_iw, pos % tile_iw);
+        (((y * full_iw + x) * c) + lane) as u32
+    };
+    let out_off = |off: u32| -> u32 {
+        let o = off as usize;
+        let (oy, ox) = (o / tile_ow, o % tile_ow);
+        (oy * full_ow + ox) as u32
+    };
+    let out_span = |off: u32| -> u32 {
+        let ox = off as usize % tile_ow;
+        assert!(
+            ox + I8_LANES <= tile_ow,
+            "vector output span at {off} crosses a tile row (tile_ow {tile_ow}) — \
+             spatial blocking does not support this program shape"
+        );
+        out_off(off)
+    };
+    let name = format!("{}@tile{}x{}", tile.name, tcfg.oh(), tcfg.ow());
+    let instrs = tile
+        .instrs
+        .into_iter()
+        .map(|i| match i {
+            VInstr::VLoad { dst, buf: Buf::In, off } => {
+                VInstr::VLoad { dst, buf: Buf::In, off: in_off(off) }
+            }
+            VInstr::VStore { src, buf: Buf::In, off } => {
+                VInstr::VStore { src, buf: Buf::In, off: in_off(off) }
+            }
+            VInstr::RedSumAcc { src, off } => VInstr::RedSumAcc { src, off: out_off(off) },
+            VInstr::RedSumStore { src, off } => VInstr::RedSumStore { src, off: out_off(off) },
+            VInstr::RedSumScaleAcc { src, off, scale, bias } => {
+                VInstr::RedSumScaleAcc { src, off: out_off(off), scale, bias }
+            }
+            VInstr::PopcntAcc { src, off, scale, bias } => {
+                VInstr::PopcntAcc { src, off: out_off(off), scale, bias }
+            }
+            VInstr::VStoreOut { src, off } => VInstr::VStoreOut { src, off: out_span(off) },
+            VInstr::VAccOut { src, off } => VInstr::VAccOut { src, off: out_span(off) },
+            other => other,
+        })
+        .collect();
+    Program::new(name, tile.mode, instrs).with_irregularity(tile.irregular_transitions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Anchor;
+    use crate::explore::blocking::{spatial_schedule, ConvShape, TileSpec};
+    use crate::isa::{validate, Buf, Mode};
+    use crate::layer::oracle::conv_ref;
+    use crate::machine::interp::{Buffers, Interp};
+    use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+
+    /// Run the sub-plane program for `(ohb, owb)` over the full layer via
+    /// the spatial schedule and compare byte-for-byte with the reference.
+    fn check_tiles(
+        cfg: &ConvConfig,
+        machine: &MachineConfig,
+        anchor: Anchor,
+        ohb: usize,
+        owb: usize,
+    ) {
+        let c = machine.c_int8();
+        let input = ActTensor::random(
+            ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+            ActLayout::NCHWc { c },
+            42,
+        );
+        let weights = WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            43,
+        );
+        let spec = DataflowSpec::basic(anchor);
+        let prog = generate_subplane(cfg, &spec, machine, ohb, owb);
+        validate::validate(&prog, machine.num_regs).unwrap();
+        validate::validate_readonly_operands(&prog).unwrap();
+        let shape = ConvShape::of(cfg, c);
+        let tspec = TileSpec { oh: ohb, ow: owb, ..TileSpec::trivial(&shape) };
+        let sched = spatial_schedule(cfg, c, &tspec);
+        assert_eq!(
+            sched.len(),
+            (cfg.oh() / ohb) * (cfg.ow() / owb) * (cfg.in_channels / c) * cfg.out_channels
+        );
+        let mut out = crate::tensor::OutTensor::zeros(cfg.out_channels, cfg.oh(), cfg.ow());
+        let mut interp = Interp::new(machine.num_regs);
+        let max_in = prog.max_offset(Buf::In).unwrap_or(0) as usize;
+        let max_out = prog.max_offset(Buf::Out).unwrap_or(0) as usize;
+        for &bases in &sched {
+            // Sub-plane bases + remapped offsets stay in bounds.
+            assert!(bases.input as usize + max_in <= input.data.len(), "{bases:?}");
+            assert!(bases.output as usize + max_out <= out.data.len(), "{bases:?}");
+            interp.run(
+                &prog,
+                &mut Buffers {
+                    input: &input.data,
+                    weight: &weights.data,
+                    output: &mut out.data,
+                },
+                bases,
+            );
+        }
+        let want = conv_ref(cfg, &input, &weights);
+        assert_eq!(out.data, want.data, "{} diverges from oracle at {ohb}x{owb}", prog.name);
+    }
+
+    #[test]
+    fn full_plane_tile_is_the_identity_remap() {
+        // ih − fh divisible by stride, so the full-plane tile config
+        // reconstructs the layer exactly.
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(8, 8, 3, 3, 1, 16, 4);
+        let spec = DataflowSpec::basic(Anchor::Output);
+        let full = super::super::generate(&cfg, &spec, &m);
+        let tiled = generate_subplane(&cfg, &spec, &m, cfg.oh(), cfg.ow());
+        assert_eq!(tile_cfg(&cfg, cfg.oh(), cfg.ow()), cfg);
+        assert_eq!(tiled.instrs, full.instrs);
+        assert_eq!(tiled.mode, Mode::Int8);
+    }
+
+    #[test]
+    fn subplane_tiles_match_oracle_all_basic_dataflows() {
+        let m = MachineConfig::neon(128);
+        // 12x12 input, 3x3 s1 → 10x10 plane; 5x10 row tiles and 2x5 grid.
+        let cfg = ConvConfig::simple(12, 12, 3, 3, 1, 32, 4);
+        for anchor in [Anchor::Output, Anchor::Input, Anchor::Weight] {
+            check_tiles(&cfg, &m, anchor, 5, 10);
+            check_tiles(&cfg, &m, anchor, 2, 5);
+            check_tiles(&cfg, &m, anchor, 1, 10);
+        }
+    }
+
+    #[test]
+    fn subplane_tiles_match_oracle_stride2_and_wide_vectors() {
+        // Stride-2: tile input origins are stride multiples, parity kept.
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(13, 13, 3, 3, 2, 16, 3);
+        assert_eq!((cfg.oh(), cfg.ow()), (6, 6));
+        for anchor in [Anchor::Output, Anchor::Input] {
+            check_tiles(&cfg, &m, anchor, 3, 6);
+            check_tiles(&cfg, &m, anchor, 2, 3);
+        }
+        // 256-bit machine: c = 32, two physical loads per pixel block —
+        // the lane part of input offsets must survive the remap.
+        let wide = MachineConfig::neon(256);
+        let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 32, 4);
+        check_tiles(&cfg, &wide, Anchor::Output, 4, 8);
+        check_tiles(&cfg, &wide, Anchor::Input, 2, 4);
+    }
+
+    #[test]
+    fn extended_dataflows_remap_too() {
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(12, 12, 3, 3, 1, 16, 4);
+        let c = m.c_int8();
+        let input = ActTensor::random(
+            ActShape::new(cfg.in_channels, cfg.ih, cfg.iw),
+            ActLayout::NCHWc { c },
+            7,
+        );
+        let weights = WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c },
+            8,
+        );
+        let spec = DataflowSpec::optimized_os(&m, cfg.r_size());
+        let prog = generate_subplane(&cfg, &spec, &m, 5, 5);
+        let shape = ConvShape::of(&cfg, c);
+        let tspec = TileSpec { oh: 5, ow: 5, ..TileSpec::trivial(&shape) };
+        let mut out = crate::tensor::OutTensor::zeros(cfg.out_channels, cfg.oh(), cfg.ow());
+        let mut interp = Interp::new(m.num_regs);
+        for bases in spatial_schedule(&cfg, c, &tspec) {
+            interp.run(
+                &prog,
+                &mut Buffers {
+                    input: &input.data,
+                    weight: &weights.data,
+                    output: &mut out.data,
+                },
+                bases,
+            );
+        }
+        assert_eq!(out.data, conv_ref(&cfg, &input, &weights).data);
+    }
+
+    #[test]
+    #[should_panic(expected = "crosses a tile row")]
+    fn vector_output_spans_are_rejected() {
+        // A hand-built "tile program" with a 16-wide output span on a
+        // 5-wide tile row must be refused, not silently torn.
+        let m = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(12, 12, 3, 3, 1, 16, 16);
+        let tcfg = tile_cfg(&cfg, 5, 5);
+        let bad = Program::new(
+            "bad",
+            Mode::Int8,
+            vec![
+                VInstr::VLoad { dst: 0, buf: Buf::In, off: 0 },
+                VInstr::VStoreOut { src: 0, off: 0 },
+            ],
+        );
+        let _ = remap_to_plane(bad, &tcfg, &cfg, &m);
+    }
+
+    #[test]
+    #[should_panic(expected = "simple-conv only")]
+    fn depthwise_tiles_are_rejected() {
+        let cfg = ConvConfig::depthwise(12, 12, 3, 3, 1, 16);
+        let _ = tile_cfg(&cfg, 2, 5);
+    }
+}

@@ -406,19 +406,36 @@ impl Planner {
         // split the blocked order, exactly as `exec` will.
         let mut partition = Partition::single();
         if self.opts.max_tiles > 1 {
-            let schedule = crate::codegen::schedule(&padded, &machine);
-            let schedule = match &blocking {
-                Some(bspec) => explore::blocking::blocked_schedule(
-                    &schedule,
-                    padded.in_channels / machine.c_int8().max(1),
-                    padded.out_channels,
-                    bspec,
+            let c = machine.c_int8().max(1);
+            let shape = explore::blocking::ConvShape::of(&padded, c);
+            // A sub-plane spec executes a tile-granularity program over
+            // the spatial schedule (exactly what `exec` will build), so
+            // the tile pricing must see that pair; channel-only specs
+            // keep the full-plane program under the blocked permutation.
+            let (tile_prog, schedule) = match &blocking {
+                Some(bspec) if bspec.is_subplane(&shape) => {
+                    let (ohb, owb) = explore::blocking::effective_spatial(&shape, bspec);
+                    (
+                        Some(crate::codegen::subplane::generate_subplane(
+                            &padded, &spec, &machine, ohb, owb,
+                        )),
+                        explore::blocking::spatial_schedule(&padded, c, bspec),
+                    )
+                }
+                Some(bspec) => (
+                    None,
+                    explore::blocking::blocked_schedule(
+                        &crate::codegen::schedule(&padded, &machine),
+                        padded.in_channels / c,
+                        padded.out_channels,
+                        bspec,
+                    ),
                 ),
-                None => schedule,
+                None => (None, crate::codegen::schedule(&padded, &machine)),
             };
             let acc_elems = padded.out_channels * padded.e_size();
             let (tiles, cycles) = explore::choose_tiles(
-                &prog,
+                tile_prog.as_ref().unwrap_or(&prog),
                 &schedule,
                 acc_elems,
                 padded.e_size(),
@@ -1272,6 +1289,10 @@ mod tests {
         let spec = lp.blocking.expect("56x56x64 must pick a TileSpec");
         let shape = crate::explore::blocking::ConvShape::of(&big, 16);
         assert!(!spec.is_trivial(&shape), "{}", spec.signature());
+        // On this plane the L1 failure is spatial: the winner must be a
+        // sub-plane spec (PR 8 acceptance — oh/ow strictly smaller than
+        // the ofmap plane).
+        assert!(spec.is_subplane(&shape), "picked {}", spec.signature());
         assert!(
             lp.stats.cycles < plain.stats.cycles,
             "blocked {} !< unblocked {}",
@@ -1292,8 +1313,16 @@ mod tests {
         let lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
         let plan = NetworkPlan::chain("blk-fp", vec![lp]);
         let mut blocked = plan.clone();
-        blocked.layers[0].blocking =
-            Some(TileSpec { oh: 4, ow: 4, oc: 8, ic: 1, l2_oc: 16, l2_ic: 1 });
+        blocked.layers[0].blocking = Some(TileSpec {
+            oh: 4,
+            ow: 4,
+            oc: 8,
+            ic: 1,
+            l2_oc: 16,
+            l2_ic: 1,
+            l3_oc: 16,
+            l3_ic: 1,
+        });
         // Blocked and unblocked prepared engines must never cross-serve.
         assert_ne!(plan_fingerprint(&plan), plan_fingerprint(&blocked));
 

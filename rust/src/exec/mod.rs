@@ -643,7 +643,7 @@ fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLaye
         Backend::Interp => None,
     };
     match (&lp.layer, &lp.kind) {
-        (LayerConfig::Conv(cfg), PlanKind::Generated { prog, machine, pad, .. }) => {
+        (LayerConfig::Conv(cfg), PlanKind::Generated { spec, prog, machine, pad, .. }) => {
             let c = machine.c_int8();
             let weights = lp.weights.as_ref().ok_or_else(|| {
                 anyhow::anyhow!("no weights bound for {}", lp.layer.name())
@@ -659,24 +659,47 @@ fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLaye
                 cfg.out_channels,
                 lp.layer.name()
             );
-            // Def-before-use holds, so one register file can be reused
-            // across layers and images without leaking state.
-            crate::isa::validate(prog, machine.num_regs)?;
-            let dp = DecodedProgram::decode(prog);
-            let sched = crate::codegen::schedule(cfg, machine);
             // Cache blocking: reorder the invocation schedule into
-            // L1/L2-sized blocks before validation and band splitting —
-            // a pure permutation (per-element accumulation order
-            // unchanged), so outputs stay bit-identical and the bounds
-            // checks below cover exactly the bases that will run.
-            let sched = match &lp.blocking {
-                Some(bspec) => crate::explore::blocking::blocked_schedule(
-                    &sched,
-                    cfg.in_channels / c,
-                    cfg.out_channels,
-                    bspec,
-                ),
-                None => sched,
+            // cache-sized blocks before validation and band splitting.
+            // Channel-only specs permute the full-plane schedule; a
+            // sub-plane spec instead regenerates the program at tile
+            // granularity (same dataflow spec, offsets remapped — see
+            // `codegen::subplane`) and pairs it with the spatial
+            // schedule. Both keep every output element's accumulation
+            // order identical to the baseline, so outputs stay
+            // bit-identical and the bounds checks below cover exactly
+            // the bases that will run.
+            let shape = crate::explore::blocking::ConvShape::of(cfg, c);
+            let subplane = lp.blocking.as_ref().filter(|b| {
+                b.is_subplane(&shape) && prog.mode == crate::isa::Mode::Int8
+            });
+            let (dp, sched) = if let Some(bspec) = subplane {
+                let (ohb, owb) =
+                    crate::explore::blocking::effective_spatial(&shape, bspec);
+                let sprog = crate::codegen::subplane::generate_subplane(
+                    cfg, spec, machine, ohb, owb,
+                );
+                // Def-before-use holds, so one register file can be
+                // reused across layers and images without leaking state.
+                crate::isa::validate(&sprog, machine.num_regs)?;
+                (
+                    DecodedProgram::decode(&sprog),
+                    crate::explore::blocking::spatial_schedule(cfg, c, bspec),
+                )
+            } else {
+                crate::isa::validate(prog, machine.num_regs)?;
+                let dp = DecodedProgram::decode(prog);
+                let sched = crate::codegen::schedule(cfg, machine);
+                let sched = match &lp.blocking {
+                    Some(bspec) => crate::explore::blocking::blocked_schedule(
+                        &sched,
+                        cfg.in_channels / c,
+                        cfg.out_channels,
+                        bspec,
+                    ),
+                    None => sched,
+                };
+                (dp, sched)
             };
             let in_elems = cfg.in_channels * cfg.h_size();
             let acc_elems = cfg.out_channels * cfg.e_size();
@@ -690,8 +713,15 @@ fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLaye
             }
             // Output-channel band partition: each tile's rebased
             // sub-schedule is validated against its own slice.
-            let tile_scheds =
-                split_tiles(&dp, &sched, lp.partition, acc_elems, cfg.e_size(), in_elems, weights.data.len())?;
+            let tile_scheds = split_tiles(
+                &dp,
+                &sched,
+                lp.partition,
+                acc_elems,
+                cfg.e_size(),
+                in_elems,
+                weights.data.len(),
+            )?;
             Ok(node(
                 PreparedKind::Conv(PreparedConv {
                     cfg: *cfg,

@@ -7,33 +7,44 @@
 //! planes alone outgrow L1, and the baseline cb-outer/k-inner order
 //! streams the **entire** output tensor through the cache once per
 //! input-channel block. A [`TileSpec`] reorders the schedule into
-//! cache-sized blocks — L1 blocks inner, L2 blocks outer — generated
-//! analytically from the [`Hierarchy`] capacities (working-set-fits-
-//! with-slack rule over power-of-two candidates, the PolyDL recipe) and
-//! priced per hierarchy level by
+//! cache-sized blocks — L1 blocks inner, L2 blocks around them, LLC
+//! blocks outermost — generated analytically from the [`Hierarchy`]
+//! capacities (working-set-fits-with-slack rule over power-of-two
+//! candidates, the PolyDL recipe) and priced per hierarchy level by
 //! [`crate::machine::PerfModel::blocked_mem_cycles`].
 //!
-//! **Granularity.** A generated program covers one full ofmap plane for
-//! one (input-channel-block, output-channel) pair, so the schedule is
-//! only addressable at `(cb, k)` granularity: `oc`/`ic` blocks reorder
-//! invocations, while [`TileSpec::oh`]/[`TileSpec::ow`] are pinned to
-//! the full plane (kept in the spec — and in fingerprints — so a future
-//! sub-plane program generator extends the same axis instead of
-//! re-keying everything). Depthwise schedules have no `k` axis
-//! (blocking is the identity); grouped layers apply blocking within
-//! each group's simple-conv view.
+//! **Granularity.** A generated program covers one ofmap rectangle for
+//! one (input-channel-block, output-channel) pair. For full-plane
+//! programs the schedule is addressable at `(cb, k)` granularity only;
+//! the sub-plane program generator ([`crate::codegen::subplane`])
+//! additionally lets [`TileSpec::oh`]/[`TileSpec::ow`] block the ofmap
+//! **spatially**: a tile-sized program is invoked once per
+//! (spatial tile, cb, k) triple with origin-adjusted bases
+//! ([`spatial_schedule`]), shrinking the per-tile working set until
+//! input and accumulator co-reside in L1 — the halo rows adjacent tiles
+//! share are re-read, which the perf model prices explicitly. Spatial
+//! blocks must **divide the plane evenly** (one program serves every
+//! tile); non-divisor or non-simple-conv specs clamp back to the full
+//! plane ([`effective_spatial`]). Depthwise schedules have no `k` axis
+//! (channel blocking is the identity) and are excluded from spatial
+//! blocking, as are binary and grouped kernels.
 //!
 //! **Bit-identity by construction.** [`blocked_schedule`] is a pure
 //! permutation of the baseline schedule that, for every fixed output
 //! channel `k`, visits the input-channel blocks `cb` in the same
-//! ascending order as the baseline. Each output element's accumulation
-//! sequence is therefore unchanged — not merely equivalent under
-//! reassociation but the *same* wrapping-add order — so blocked outputs
-//! are byte-identical to unblocked ones, for every kernel kind. The
-//! `blocking_equivalence` suite and the tuner's interpreter-oracle gate
-//! enforce this end to end.
+//! ascending order as the baseline. [`spatial_schedule`] extends the
+//! same invariant to sub-plane tiles: tiles write disjoint output
+//! rectangles, and within a tile every element sees `cb` ascending with
+//! the same per-element tap order as the full-plane program (the
+//! sub-plane program is the same generator run on a tile-shaped config,
+//! offset-remapped — see [`crate::codegen::subplane`]). Each output
+//! element's accumulation sequence is therefore unchanged — not merely
+//! equivalent under reassociation but the *same* wrapping-add order —
+//! so blocked outputs are byte-identical to unblocked ones, for every
+//! kernel kind. The `blocking_equivalence` suite and the tuner's
+//! interpreter-oracle gate enforce this end to end.
 
-use crate::layer::ConvConfig;
+use crate::layer::{ConvConfig, ConvKind};
 use crate::machine::cache::Hierarchy;
 use crate::machine::{Bases, PerfModel, PerfStats};
 
@@ -46,16 +57,17 @@ pub const WS_SLACK: f64 = 0.75;
 /// Block sizes per cache level for one layer's invocation schedule.
 ///
 /// `oc`/`ic` are the **L1 (inner) block**: output channels and
-/// input-channel blocks per block. `l2_oc`/`l2_ic` are the **L2
-/// (outer) block** the inner blocks tile within. `oh`/`ow` record the
-/// spatial block — always the full ofmap plane at the current program
-/// granularity (see the module docs).
+/// input-channel blocks per block. `l2_oc`/`l2_ic` are the **L2 block**
+/// the inner blocks tile within, `l3_oc`/`l3_ic` the **LLC (outermost)
+/// block** around those. `oh`/`ow` are the spatial block: the full
+/// ofmap plane for channel-only blocking, or a divisor sub-rectangle
+/// executed by a sub-plane program ([`crate::codegen::subplane`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct TileSpec {
-    /// Output rows per block (full plane: programs are not splittable
-    /// spatially).
+    /// Output rows per spatial block (must divide the plane's rows to
+    /// take effect; clamps to the full plane otherwise).
     pub oh: usize,
-    /// Output columns per block (full plane, like `oh`).
+    /// Output columns per spatial block (divisor rule like `oh`).
     pub ow: usize,
     /// Output channels per L1 block.
     pub oc: usize,
@@ -65,6 +77,10 @@ pub struct TileSpec {
     pub l2_oc: usize,
     /// Input-channel blocks per L2 block (clamped to at least `ic`).
     pub l2_ic: usize,
+    /// Output channels per LLC block (clamped to at least `l2_oc`).
+    pub l3_oc: usize,
+    /// Input-channel blocks per LLC block (clamped to at least `l2_ic`).
+    pub l3_ic: usize,
 }
 
 impl TileSpec {
@@ -78,20 +94,33 @@ impl TileSpec {
             ic: shape.num_blocks,
             l2_oc: shape.out_channels,
             l2_ic: shape.num_blocks,
+            l3_oc: shape.out_channels,
+            l3_ic: shape.num_blocks,
         }
     }
 
-    /// True when this spec does not reorder `shape`'s schedule at all.
+    /// True when this spec does not reorder or spatially split
+    /// `shape`'s schedule at all.
     pub fn is_trivial(&self, shape: &ConvShape) -> bool {
-        self.oc >= shape.out_channels && self.ic >= shape.num_blocks
+        self.oc >= shape.out_channels
+            && self.ic >= shape.num_blocks
+            && !self.is_subplane(shape)
+    }
+
+    /// True when this spec's *effective* (divisor-valid) spatial block
+    /// covers less than `shape`'s full ofmap plane — i.e. executing it
+    /// requires a sub-plane program.
+    pub fn is_subplane(&self, shape: &ConvShape) -> bool {
+        let (ohb, owb) = effective_spatial(shape, self);
+        ohb < shape.oh || owb < shape.ow
     }
 
     /// Stable textual form for fingerprints and diagnostics:
-    /// `oh x ow x oc x ic @ l2_oc x l2_ic`.
+    /// `oh x ow x oc x ic @ l2_oc x l2_ic @ l3_oc x l3_ic`.
     pub fn signature(&self) -> String {
         format!(
-            "{}x{}x{}x{}@{}x{}",
-            self.oh, self.ow, self.oc, self.ic, self.l2_oc, self.l2_ic
+            "{}x{}x{}x{}@{}x{}@{}x{}",
+            self.oh, self.ow, self.oc, self.ic, self.l2_oc, self.l2_ic, self.l3_oc, self.l3_ic
         )
     }
 }
@@ -105,10 +134,23 @@ pub struct ConvShape {
     pub num_blocks: usize,
     /// Output channels (one invocation per (block, channel) pair).
     pub out_channels: usize,
-    /// Output plane height / width (recorded into [`TileSpec::oh`] /
-    /// [`TileSpec::ow`]).
+    /// Output plane height / width (the full-plane values of
+    /// [`TileSpec::oh`] / [`TileSpec::ow`]).
     pub oh: usize,
     pub ow: usize,
+    /// Padded input plane height / width (sub-plane input-base math).
+    pub ih: usize,
+    pub iw: usize,
+    /// Filter dims and stride (halo geometry of a spatial tile).
+    pub fh: usize,
+    pub fw: usize,
+    pub stride: usize,
+    /// Channel-block element count (bytes per pixel of one block).
+    pub c: usize,
+    /// Whether sub-plane (spatial) blocking is executable for this
+    /// layer: simple convs only — depthwise/grouped/binary kernels keep
+    /// channel blocking but clamp `oh`/`ow` to the full plane.
+    pub spatial_ok: bool,
     /// Bytes of one input-channel block's padded input plane.
     pub in_block_bytes: usize,
     /// Bytes of one (block, channel) weight tile.
@@ -120,68 +162,195 @@ pub struct ConvShape {
 impl ConvShape {
     /// Shape of a simple conv under channel-block size `c`.
     pub fn of(cfg: &ConvConfig, c: usize) -> ConvShape {
+        let c = c.max(1);
         ConvShape {
-            num_blocks: cfg.in_channels / c.max(1),
+            num_blocks: cfg.in_channels / c,
             out_channels: cfg.out_channels,
             oh: cfg.oh(),
             ow: cfg.ow(),
+            ih: cfg.ih,
+            iw: cfg.iw,
+            fh: cfg.fh,
+            fw: cfg.fw,
+            stride: cfg.stride,
+            c,
+            spatial_ok: cfg.kind == ConvKind::Simple,
             in_block_bytes: cfg.h_size() * c,
             wgt_block_bytes: cfg.r_size() * c,
             acc_plane_bytes: cfg.e_size() * 4,
         }
     }
 
-    /// Total schedule length (`num_blocks * out_channels` invocations).
+    /// Total schedule length (`num_blocks * out_channels` invocations)
+    /// at full-plane granularity.
     pub fn invocations(&self) -> usize {
         self.num_blocks * self.out_channels
     }
+
+    /// Input rows/columns one `(ohb × owb)` output tile reads — the
+    /// tile's receptive field including the stride/filter halo shared
+    /// with adjacent tiles.
+    pub fn tile_input_dims(&self, ohb: usize, owb: usize) -> (usize, usize) {
+        (
+            (ohb.max(1) - 1) * self.stride + self.fh,
+            (owb.max(1) - 1) * self.stride + self.fw,
+        )
+    }
+}
+
+/// The executable spatial block dims of `spec` on `shape`: a sub-plane
+/// axis passes through only when the shape supports spatial programs
+/// ([`ConvShape::spatial_ok`]) and the block evenly divides the plane —
+/// a single tile program must cover every tile, so ragged edges are not
+/// representable. Anything else clamps to the full plane.
+pub fn effective_spatial(shape: &ConvShape, spec: &TileSpec) -> (usize, usize) {
+    if !shape.spatial_ok {
+        return (shape.oh, shape.ow);
+    }
+    let ok = |b: usize, full: usize| b > 0 && b < full && full % b == 0;
+    let ohb = if ok(spec.oh, shape.oh) { spec.oh } else { shape.oh };
+    let owb = if ok(spec.ow, shape.ow) { spec.ow } else { shape.ow };
+    (ohb, owb)
+}
+
+/// Divisors of `n`, ascending.
+fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// The spatial `(oh, ow)` block candidates for `shape`: the full plane
+/// first (channel-only blocking, the PR 7 axis), then — when sub-plane
+/// programs are executable and the full-plane working set cannot
+/// co-reside in L1 — up to two divisor sub-planes, chosen by a cheap
+/// L1-fill proxy (halo'd input stream + accumulator write-back + weight
+/// stream per tile, times the tile count), so the emitted tiles balance
+/// halo overhead against L1 residency.
+fn spatial_blocks(shape: &ConvShape, l1: f64) -> Vec<(usize, usize)> {
+    let mut out = vec![(shape.oh, shape.ow)];
+    if !shape.spatial_ok || shape.oh == 0 || shape.ow == 0 || shape.out_channels == 0 {
+        return out;
+    }
+    let wgt = shape.wgt_block_bytes as f64;
+    let tile_bytes = |ohb: usize, owb: usize| {
+        let (tih, tiw) = shape.tile_input_dims(ohb, owb);
+        ((tih * tiw * shape.c) as f64, (ohb * owb * 4) as f64)
+    };
+    let fits = |ohb: usize, owb: usize| {
+        let (in_b, acc_b) = tile_bytes(ohb, owb);
+        in_b + acc_b + wgt <= l1
+    };
+    // Sub-planes pay halo re-reads, so they are only worth emitting
+    // when the full plane fails input/accumulator co-residency — the
+    // exact regime PR 7 left unexplored.
+    if fits(shape.oh, shape.ow) {
+        return out;
+    }
+    // Row blocks (full width) keep input rows contiguous; column
+    // blocks only when even single-row tiles are too wide for L1.
+    let mut subs: Vec<(usize, usize)> = divisors(shape.oh)
+        .into_iter()
+        .filter(|&d| d < shape.oh && fits(d, shape.ow))
+        .map(|d| (d, shape.ow))
+        .collect();
+    if subs.is_empty() {
+        subs = divisors(shape.ow)
+            .into_iter()
+            .filter(|&d| d < shape.ow && fits(1, d))
+            .map(|d| (1, d))
+            .collect();
+    }
+    // Rank by the L1-fill proxy: n_sp × (input rounds + accumulator
+    // write-back + weight stream), with the largest L1-fitting oc band.
+    let nb = shape.num_blocks.max(1) as f64;
+    let k = shape.out_channels.max(1) as f64;
+    let proxy = |&(ohb, owb): &(usize, usize)| {
+        let (in_b, acc_b) = tile_bytes(ohb, owb);
+        let n_sp = ((shape.oh / ohb.max(1)) * (shape.ow / owb.max(1))).max(1) as f64;
+        let mut k1 = 1.0f64;
+        while k1 * 2.0 <= k && (k1 * 2.0) * (acc_b + wgt) <= l1 {
+            k1 *= 2.0;
+        }
+        let rounds = (k / k1).ceil();
+        n_sp * (rounds * nb * in_b + 2.0 * k * acc_b + nb * k * wgt)
+    };
+    subs.sort_by(|a, b| proxy(a).partial_cmp(&proxy(b)).unwrap());
+    subs.truncate(2);
+    out.extend(subs);
+    out
 }
 
 /// Analytic candidate generation: power-of-two block sizes whose
-/// working set fits each level with slack.
+/// working set fits each level with slack, over every spatial block
+/// [`spatial_blocks`] emits.
 ///
 /// For every power-of-two `oc` block whose accumulator band
-/// (`oc · acc_plane + weights`) fits L1 with [`WS_SLACK`], one
-/// candidate is emitted; its `ic` block is the largest power of two
-/// whose input slice also stays L1-co-resident (usually 1 on large
-/// planes), and its L2 block is the largest power-of-two `oc` multiple
-/// whose band plus the full input fits L2 with slack. The trivial spec
-/// is **not** in the list — callers compare candidates against it
-/// explicitly ([`crate::machine::PerfModel::choose_blocking`]).
+/// (`oc · acc + weights`, with `acc` the spatial block's sub-plane when
+/// one is in play) fits L1 with [`WS_SLACK`], one candidate is emitted;
+/// its `ic` block is the largest power of two whose input slice also
+/// stays L1-co-resident, its L2 block is the largest power-of-two `oc`
+/// multiple whose band plus the (tile's) input fits L2 with slack, and
+/// its LLC block is the largest power-of-two multiple of that whose
+/// **full-layer** accumulator band plus the whole input fits the last
+/// level — the third blocking level. The trivial spec is **not** in the
+/// list — callers compare candidates against it explicitly
+/// ([`choose_blocking`]).
 pub fn candidates(shape: &ConvShape, hier: &Hierarchy) -> Vec<TileSpec> {
     let l1 = hier.l1.capacity_bytes() as f64 * WS_SLACK;
     let l2 = hier.l2.capacity_bytes() as f64 * WS_SLACK;
+    let llc = hier.llc.capacity_bytes() as f64 * WS_SLACK;
+    let full_in = (shape.num_blocks * shape.in_block_bytes) as f64;
     let mut out = Vec::new();
-    let mut oc = 1usize;
-    while oc < shape.out_channels {
-        let band = (oc * shape.acc_plane_bytes + oc * shape.wgt_block_bytes) as f64;
-        if band > l1 {
-            break;
+    for (ohb, owb) in spatial_blocks(shape, l1) {
+        let full_plane = ohb >= shape.oh && owb >= shape.ow;
+        let (in_b, acc_b) = if full_plane {
+            (shape.in_block_bytes, shape.acc_plane_bytes)
+        } else {
+            let (tih, tiw) = shape.tile_input_dims(ohb, owb);
+            (tih * tiw * shape.c, ohb * owb * 4)
+        };
+        let mut oc = 1usize;
+        while oc < shape.out_channels {
+            let band = (oc * (acc_b + shape.wgt_block_bytes)) as f64;
+            if band > l1 {
+                break;
+            }
+            // Largest ic block whose input slice co-resides with the band.
+            let mut ic = 1usize;
+            while ic * 2 <= shape.num_blocks
+                && band + (ic * 2 * in_b) as f64 <= l1
+            {
+                ic *= 2;
+            }
+            // Largest L2 oc block: band + the (tile's) whole input must fit.
+            let total_in = (shape.num_blocks * in_b) as f64;
+            let mut l2_oc = oc;
+            while l2_oc * 2 <= shape.out_channels
+                && (l2_oc * 2 * acc_b) as f64 + total_in <= l2
+            {
+                l2_oc *= 2;
+            }
+            // Largest LLC oc block: the full-layer accumulator band plus
+            // the whole input must fit the last level (spatial tiles
+            // share the LLC-resident footprint, so full-layer
+            // quantities rule here).
+            let mut l3_oc = l2_oc;
+            while l3_oc * 2 <= shape.out_channels
+                && (l3_oc * 2 * shape.acc_plane_bytes) as f64 + full_in <= llc
+            {
+                l3_oc *= 2;
+            }
+            out.push(TileSpec {
+                oh: ohb,
+                ow: owb,
+                oc,
+                ic,
+                l2_oc,
+                l2_ic: shape.num_blocks,
+                l3_oc,
+                l3_ic: shape.num_blocks,
+            });
+            oc *= 2;
         }
-        // Largest ic block whose input slice co-resides with the band.
-        let mut ic = 1usize;
-        while ic * 2 <= shape.num_blocks
-            && band + (ic * 2 * shape.in_block_bytes) as f64 <= l1
-        {
-            ic *= 2;
-        }
-        // Largest L2 oc block: band + the whole input must fit.
-        let total_in = (shape.num_blocks * shape.in_block_bytes) as f64;
-        let mut l2_oc = oc;
-        while l2_oc * 2 <= shape.out_channels
-            && (l2_oc * 2 * shape.acc_plane_bytes) as f64 + total_in <= l2
-        {
-            l2_oc *= 2;
-        }
-        out.push(TileSpec {
-            oh: shape.oh,
-            ow: shape.ow,
-            oc,
-            ic,
-            l2_oc,
-            l2_ic: shape.num_blocks,
-        });
-        oc *= 2;
     }
     out
 }
@@ -227,19 +396,65 @@ pub fn choose_blocking(
     }
 }
 
-/// Reorder a cb-outer/k-inner schedule (`sched[cb * out_channels + k]`)
-/// into blocked order: L2 blocks outer, L1 blocks within, and the
+/// The `(cb, k)` visit order of the 3-level channel nest: LLC blocks
+/// outermost, L2 blocks within, L1 blocks within those, and the
 /// baseline cb-outer/k-inner element order inside each L1 block. The
-/// k-blocks are the **outer** loop at each level so an L1 block's
+/// k-blocks are the **outer** loop at every level so a block's
 /// accumulator band stays resident across the whole cb sweep — the
-/// interchange that pays for the blocking.
+/// interchange that pays for the blocking. For each fixed `k`, `cb`
+/// ascends (c1 blocks ascend within c2, c2 within c3), preserving every
+/// element's accumulation order.
+fn channel_nest_order(
+    num_blocks: usize,
+    out_channels: usize,
+    spec: &TileSpec,
+) -> Vec<(usize, usize)> {
+    let k1 = spec.oc.clamp(1, out_channels.max(1));
+    let c1 = spec.ic.clamp(1, num_blocks.max(1));
+    let k2 = spec.l2_oc.clamp(k1, out_channels.max(1));
+    let c2 = spec.l2_ic.clamp(c1, num_blocks.max(1));
+    let k3 = spec.l3_oc.clamp(k2, out_channels.max(1));
+    let c3 = spec.l3_ic.clamp(c2, num_blocks.max(1));
+    let mut out = Vec::with_capacity(num_blocks * out_channels);
+    for k3_0 in (0..out_channels).step_by(k3) {
+        let k3_end = (k3_0 + k3).min(out_channels);
+        for c3_0 in (0..num_blocks).step_by(c3) {
+            let c3_end = (c3_0 + c3).min(num_blocks);
+            for k2_0 in (k3_0..k3_end).step_by(k2) {
+                let k2_end = (k2_0 + k2).min(k3_end);
+                for c2_0 in (c3_0..c3_end).step_by(c2) {
+                    let c2_end = (c2_0 + c2).min(c3_end);
+                    for k1_0 in (k2_0..k2_end).step_by(k1) {
+                        let k1_end = (k1_0 + k1).min(k2_end);
+                        for c1_0 in (c2_0..c2_end).step_by(c1) {
+                            let c1_end = (c1_0 + c1).min(c2_end);
+                            for cb in c1_0..c1_end {
+                                for k in k1_0..k1_end {
+                                    out.push((cb, k));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reorder a cb-outer/k-inner schedule (`sched[cb * out_channels + k]`)
+/// into blocked order ([`channel_nest_order`]): the channel half of the
+/// blocking axis, usable on any schedule with this factorization —
+/// simple conv, binary conv, and a grouped layer's per-group view; a
+/// depthwise schedule is the degenerate `out_channels = 1` case
+/// (identity for any spec). Spatial (`oh`/`ow`) blocks do **not**
+/// apply here — a full-plane program cannot be split spatially; the
+/// executor switches to [`spatial_schedule`] plus a sub-plane program
+/// for those specs.
 ///
 /// This is a permutation that preserves, for each fixed `k`, the
 /// ascending order of `cb` (see the module docs on bit-identity). A
-/// trivial spec returns the baseline order unchanged. Works on any
-/// schedule with this factorization — simple conv, binary conv, and a
-/// grouped layer's per-group view; a depthwise schedule is the
-/// degenerate `out_channels = 1` case (identity for any spec).
+/// trivial spec returns the baseline order unchanged.
 pub fn blocked_schedule(
     sched: &[Bases],
     num_blocks: usize,
@@ -251,25 +466,49 @@ pub fn blocked_schedule(
         num_blocks * out_channels,
         "schedule is not a (cb x k) factorization"
     );
-    let k1 = spec.oc.clamp(1, out_channels.max(1));
-    let c1 = spec.ic.clamp(1, num_blocks.max(1));
-    let k2 = spec.l2_oc.clamp(k1, out_channels.max(1));
-    let c2 = spec.l2_ic.clamp(c1, num_blocks.max(1));
-    let mut out = Vec::with_capacity(sched.len());
-    for k2_0 in (0..out_channels).step_by(k2) {
-        let k2_end = (k2_0 + k2).min(out_channels);
-        for c2_0 in (0..num_blocks).step_by(c2) {
-            let c2_end = (c2_0 + c2).min(num_blocks);
-            for k1_0 in (k2_0..k2_end).step_by(k1) {
-                let k1_end = (k1_0 + k1).min(k2_end);
-                for c1_0 in (c2_0..c2_end).step_by(c1) {
-                    let c1_end = (c1_0 + c1).min(c2_end);
-                    for cb in c1_0..c1_end {
-                        for k in k1_0..k1_end {
-                            out.push(sched[cb * out_channels + k]);
-                        }
-                    }
-                }
+    channel_nest_order(num_blocks, out_channels, spec)
+        .into_iter()
+        .map(|(cb, k)| sched[cb * out_channels + k])
+        .collect()
+}
+
+/// Build the invocation schedule for a **sub-plane** blocked simple
+/// conv: one invocation per (spatial tile, cb, k) triple — spatial
+/// tiles outermost in row-major order, the 3-level channel nest of
+/// [`channel_nest_order`] within each tile. Each invocation's bases
+/// address the tile's input origin (stride-scaled, so halo rows resolve
+/// to the right pixels), its weight block (origin-independent), and its
+/// output origin; the program they pair with must be the offset-
+/// remapped sub-plane program for the same effective block dims
+/// ([`crate::codegen::subplane::generate_subplane`]).
+///
+/// Tiles write disjoint output rectangles and every element sees `cb`
+/// ascending, so the result is byte-identical to the baseline schedule
+/// by construction. Falls back to the plain blocked permutation of the
+/// full-plane schedule when `spec`'s spatial block clamps to the full
+/// plane ([`effective_spatial`]).
+pub fn spatial_schedule(cfg: &ConvConfig, c: usize, spec: &TileSpec) -> Vec<Bases> {
+    let c = c.max(1);
+    assert!(cfg.in_channels % c == 0, "C={} not a multiple of c={c}", cfg.in_channels);
+    let shape = ConvShape::of(cfg, c);
+    let (ohb, owb) = effective_spatial(&shape, spec);
+    let num_blocks = cfg.in_channels / c;
+    let h_bytes = cfg.h_size() * c;
+    let r_bytes = cfg.r_size() * c;
+    let (ow, e) = (cfg.ow(), cfg.e_size());
+    let (n_th, n_tw) = (shape.oh / ohb.max(1), shape.ow / owb.max(1));
+    let nest = channel_nest_order(num_blocks, cfg.out_channels, spec);
+    let mut out = Vec::with_capacity(n_th * n_tw * nest.len());
+    for ty in 0..n_th {
+        for tx in 0..n_tw {
+            let in_origin = ((ty * ohb * cfg.stride) * cfg.iw + tx * owb * cfg.stride) * c;
+            let out_origin = (ty * ohb) * ow + tx * owb;
+            for &(cb, k) in &nest {
+                out.push(Bases {
+                    input: (cb * h_bytes + in_origin) as u32,
+                    weight: ((cb * cfg.out_channels + k) * r_bytes) as u32,
+                    output: (k * e + out_origin) as u32,
+                });
             }
         }
     }
@@ -301,13 +540,33 @@ mod tests {
         s
     }
 
+    /// A channel-only spec (full-plane spatial dims filled in by the
+    /// test from `nb`/`k`-independent plane dims).
+    fn chan(oc: usize, ic: usize, l2_oc: usize, l2_ic: usize) -> TileSpec {
+        TileSpec { oh: 8, ow: 8, oc, ic, l2_oc, l2_ic, l3_oc: l2_oc, l3_ic: l2_ic }
+    }
+
     #[test]
     fn blocked_schedule_is_a_permutation_preserving_cb_order_per_k() {
+        let deep = TileSpec {
+            oh: 56,
+            ow: 56,
+            oc: 2,
+            ic: 1,
+            l2_oc: 16,
+            l2_ic: 4,
+            l3_oc: 32,
+            l3_ic: 4,
+        };
+        // A spec whose l3 level genuinely blocks (l3 < full extent).
+        let l3_real =
+            TileSpec { oh: 8, ow: 8, oc: 2, ic: 1, l2_oc: 4, l2_ic: 2, l3_oc: 8, l3_ic: 4 };
         for (nb, k, spec) in [
-            (4, 64, TileSpec { oh: 56, ow: 56, oc: 2, ic: 1, l2_oc: 16, l2_ic: 4 }),
-            (3, 7, TileSpec { oh: 8, ow: 8, oc: 4, ic: 2, l2_oc: 4, l2_ic: 3 }),
-            (1, 5, TileSpec { oh: 8, ow: 8, oc: 2, ic: 1, l2_oc: 2, l2_ic: 1 }),
-            (6, 1, TileSpec { oh: 8, ow: 8, oc: 1, ic: 2, l2_oc: 1, l2_ic: 4 }),
+            (4, 64, deep),
+            (3, 7, chan(4, 2, 4, 3)),
+            (1, 5, chan(2, 1, 2, 1)),
+            (6, 1, chan(1, 2, 1, 4)),
+            (4, 16, l3_real),
         ] {
             let base = index_schedule(nb, k);
             let blocked = blocked_schedule(&base, nb, k, &spec);
@@ -336,18 +595,40 @@ mod tests {
         let base = index_schedule(shape.num_blocks, shape.out_channels);
         let spec = TileSpec::trivial(&shape);
         assert!(spec.is_trivial(&shape));
+        assert!(!spec.is_subplane(&shape));
         assert_eq!(
             blocked_schedule(&base, shape.num_blocks, shape.out_channels, &spec),
             base
         );
         // Depthwise degenerate case: no k axis, any spec is identity.
         let dw = index_schedule(8, 1);
-        let aggressive = TileSpec { oh: 8, ow: 8, oc: 1, ic: 2, l2_oc: 1, l2_ic: 4 };
+        let aggressive = chan(1, 2, 1, 4);
         assert_eq!(blocked_schedule(&dw, 8, 1, &aggressive), dw);
     }
 
     #[test]
-    fn candidates_fit_l1_with_slack_and_are_nontrivial_on_large_layers() {
+    fn effective_spatial_applies_divisor_subplanes_and_clamps_the_rest() {
+        let shape = shape_56x56x64(); // 56x56 plane, spatial_ok
+        let sub = TileSpec { oh: 8, ow: 56, ..TileSpec::trivial(&shape) };
+        assert_eq!(effective_spatial(&shape, &sub), (8, 56));
+        assert!(sub.is_subplane(&shape));
+        assert!(!sub.is_trivial(&shape), "a sub-plane spec is not trivial");
+        // Non-divisor rows clamp back to the full plane.
+        let ragged = TileSpec { oh: 10, ow: 56, ..TileSpec::trivial(&shape) };
+        assert_eq!(effective_spatial(&shape, &ragged), (56, 56));
+        assert!(!ragged.is_subplane(&shape));
+        // Column blocking works independently of row blocking.
+        let cols = TileSpec { oh: 56, ow: 14, ..TileSpec::trivial(&shape) };
+        assert_eq!(effective_spatial(&shape, &cols), (56, 14));
+        // Non-simple kinds never go sub-plane.
+        let mut dw_shape = shape;
+        dw_shape.spatial_ok = false;
+        assert_eq!(effective_spatial(&dw_shape, &sub), (56, 56));
+        assert!(!sub.is_subplane(&dw_shape));
+    }
+
+    #[test]
+    fn candidates_fit_l1_with_slack_and_include_subplanes_on_large_layers() {
         let shape = shape_56x56x64();
         let hier = Hierarchy::neoverse_n1();
         let cands = candidates(&shape, &hier);
@@ -357,15 +638,32 @@ mod tests {
             assert!(!spec.is_trivial(&shape), "{}", spec.signature());
             assert!(spec.oc.is_power_of_two() && spec.ic.is_power_of_two());
             assert!(spec.l2_oc >= spec.oc && spec.l2_ic >= spec.ic);
-            let band = (spec.oc * (shape.acc_plane_bytes + shape.wgt_block_bytes)) as f64;
+            assert!(spec.l3_oc >= spec.l2_oc && spec.l3_ic >= spec.l2_ic);
+            let (ohb, owb) = effective_spatial(&shape, spec);
+            assert_eq!((ohb, owb), (spec.oh, spec.ow), "candidates carry executable dims");
+            assert!(shape.oh % ohb == 0 && shape.ow % owb == 0, "divisor tiles only");
+            let acc_b =
+                if spec.is_subplane(&shape) { ohb * owb * 4 } else { shape.acc_plane_bytes };
+            let band = (spec.oc * (acc_b + shape.wgt_block_bytes)) as f64;
             assert!(band <= l1, "{} band {band} exceeds L1 slack {l1}", spec.signature());
-            assert_eq!((spec.oh, spec.ow), (shape.oh, shape.ow), "spatial blocks are full-plane");
         }
+        // The spatial half of the axis is now explored: this plane's
+        // input cannot co-reside in L1, so sub-plane candidates exist.
+        assert!(
+            cands.iter().any(|s| s.is_subplane(&shape)),
+            "56x56x64 must emit sub-plane candidates"
+        );
+        assert!(
+            cands.iter().any(|s| !s.is_subplane(&shape)),
+            "channel-only candidates stay in the list"
+        );
         // Tiny layers whose whole accumulator fits L1 produce no
-        // (non-trivial) candidates worth pricing against the baseline.
+        // (non-trivial) candidates worth pricing against the baseline,
+        // and no sub-planes at all.
         let small = ConvShape::of(&ConvConfig::simple(10, 10, 3, 3, 1, 16, 16), 16);
         for spec in candidates(&small, &hier) {
             assert!(!spec.is_trivial(&small));
+            assert!(!spec.is_subplane(&small), "small planes stay full-plane");
         }
     }
 
@@ -385,12 +683,93 @@ mod tests {
         let spec = choice.spec.expect("56x56x64 must pick a non-trivial TileSpec");
         assert!(!spec.is_trivial(&big));
         assert!(choice.blocked_cycles < choice.trivial_cycles);
+        // On this plane the L1 co-residency failure is spatial: the
+        // winner must be a sub-plane spec (the acceptance shape of the
+        // spatial axis).
+        assert!(spec.is_subplane(&big), "picked {}", spec.signature());
         // A small layer whose working set already fits never blocks:
         // extra rounds only add input re-fetches.
         let small = ConvShape::of(&ConvConfig::simple(12, 12, 3, 3, 1, 16, 16), 16);
         let choice = choose_blocking(&small, &pm, &base);
         assert!(choice.spec.is_none(), "{:?}", choice.spec.map(|s| s.signature()));
         assert_eq!(choice.blocked_cycles, choice.trivial_cycles);
+    }
+
+    #[test]
+    fn spatial_schedule_covers_the_plane_disjointly_with_cb_ascending() {
+        let machine = MachineConfig::neon(128);
+        let cfg = ConvConfig::simple(58, 58, 3, 3, 1, 64, 8);
+        let c = machine.c_int8();
+        let shape = ConvShape::of(&cfg, c);
+        let spec = TileSpec {
+            oh: 8,
+            ow: 28,
+            oc: 4,
+            ic: 1,
+            l2_oc: 8,
+            l2_ic: 4,
+            l3_oc: 8,
+            l3_ic: 4,
+        };
+        let sched = spatial_schedule(&cfg, c, &spec);
+        let (n_th, n_tw) = (56 / 8, 56 / 28);
+        let nb = cfg.in_channels / c;
+        assert_eq!(sched.len(), n_th * n_tw * nb * cfg.out_channels);
+        // Every (tile, cb, k) triple appears exactly once: output bases
+        // partition into k planes × tile origins, each seen nb times.
+        use std::collections::HashMap;
+        let mut seen: HashMap<(u32, u32), Vec<u32>> = HashMap::new();
+        for b in &sched {
+            let k = b.output / cfg.e_size() as u32;
+            let origin = b.output % cfg.e_size() as u32;
+            seen.entry((k, origin)).or_default().push(b.input);
+        }
+        assert_eq!(seen.len(), cfg.out_channels * n_th * n_tw);
+        let h_bytes = (cfg.h_size() * c) as u32;
+        for ((k, origin), ins) in &seen {
+            assert!(*k < cfg.out_channels as u32);
+            // Origins are tile corners: row multiple of ohb, col of owb.
+            let (oy, ox) = (origin / cfg.ow() as u32, origin % cfg.ow() as u32);
+            assert_eq!(oy % 8, 0, "row origin {oy}");
+            assert_eq!(ox % 28, 0, "col origin {ox}");
+            // cb ascending per (tile, k): the input bases net of the
+            // tile origin are cb * h_bytes, strictly increasing.
+            assert_eq!(ins.len(), nb);
+            let cbs: Vec<u32> = ins.iter().map(|i| i / h_bytes).collect();
+            assert!(cbs.windows(2).all(|w| w[0] < w[1]), "{cbs:?}");
+        }
+        // Input origins track output origins through the stride.
+        let first_tile_row = &sched[0];
+        assert_eq!(first_tile_row.input % h_bytes, 0);
+        // A full-plane spec degrades to the blocked permutation of the
+        // baseline schedule.
+        let full = TileSpec { oh: 56, ow: 56, ..spec };
+        let base = crate::codegen::schedule(&cfg, &machine);
+        assert_eq!(
+            spatial_schedule(&cfg, c, &full),
+            blocked_schedule(&base, nb, cfg.out_channels, &full)
+        );
+    }
+
+    #[test]
+    fn spatial_schedule_origins_scale_with_stride() {
+        let cfg = ConvConfig::simple(59, 59, 3, 3, 2, 16, 4);
+        assert_eq!((cfg.oh(), cfg.ow()), (29, 29)); // (59-3)/2+1
+        let c = 16;
+        let shape = ConvShape::of(&cfg, c);
+        let spec = TileSpec { oh: 29, ow: 1, ..TileSpec::trivial(&shape) };
+        let sched = spatial_schedule(&cfg, c, &spec);
+        assert_eq!(sched.len(), 29 * 1 * cfg.out_channels);
+        // Column tile tx starts at input column tx * owb * stride.
+        let col_bases: Vec<u32> = sched
+            .iter()
+            .filter(|b| b.output < cfg.e_size() as u32) // k = 0 plane
+            .map(|b| b.input)
+            .collect();
+        assert_eq!(col_bases.len(), 29);
+        for (tx, base) in col_bases.iter().enumerate() {
+            assert_eq!(*base as usize, tx * 2 * c, "tile {tx}");
+        }
     }
 
     #[test]
@@ -401,7 +780,7 @@ mod tests {
         let cfg = ConvConfig::simple(10, 10, 3, 3, 1, 48, 8);
         let base = crate::codegen::schedule(&cfg, &machine);
         let nb = cfg.in_channels / machine.c_int8();
-        let spec = TileSpec { oh: 8, ow: 8, oc: 4, ic: 2, l2_oc: 8, l2_ic: 2 };
+        let spec = chan(4, 2, 8, 2);
         let blocked = blocked_schedule(&base, nb, cfg.out_channels, &spec);
         let mut a: Vec<Bases> = base.clone();
         let mut b: Vec<Bases> = blocked.clone();

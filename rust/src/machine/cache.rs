@@ -1,8 +1,11 @@
-//! Set-associative LRU cache model (L1D + L2) for the performance model.
+//! Set-associative LRU cache model (L1D + L2 + LLC) for the performance
+//! model.
 //!
 //! Calibrated to the paper's testbed, ARM Neoverse-N1: 64 KiB 4-way L1D,
-//! 1 MiB 8-way private L2, 64-byte lines. Only hit/miss classification is
-//! modeled — the perf model turns misses into cycle penalties.
+//! 1 MiB 8-way private L2, and an 8 MiB 16-way system-level cache (the
+//! shared SLC the cores fill from), 64-byte lines throughout. Only
+//! hit/miss classification is modeled — the perf model turns misses into
+//! cycle penalties.
 
 /// One cache level.
 #[derive(Clone, Debug)]
@@ -44,6 +47,12 @@ impl Cache {
     /// Neoverse-N1 private L2: 1 MiB, 8-way, 64 B lines.
     pub fn n1_l2() -> Cache {
         Cache::new(1024 * 1024, 8, 64)
+    }
+
+    /// Neoverse-N1 shared system-level cache (LLC): 8 MiB, 16-way,
+    /// 64 B lines.
+    pub fn n1_llc() -> Cache {
+        Cache::new(8 * 1024 * 1024, 16, 64)
     }
 
     /// Access `bytes` bytes at `addr`; returns the number of *missing*
@@ -142,36 +151,46 @@ impl Cache {
     }
 }
 
-/// Two-level hierarchy: returns (l1_misses, l2_misses) per access.
+/// Three-level hierarchy: returns (l1_misses, l2_misses, llc_misses)
+/// per access. Inclusive fill: each level sees only the misses of the
+/// level above, so `llc_misses` is the DRAM traffic.
 #[derive(Clone, Debug)]
 pub struct Hierarchy {
     pub l1: Cache,
     pub l2: Cache,
+    pub llc: Cache,
 }
 
 impl Hierarchy {
     pub fn neoverse_n1() -> Hierarchy {
-        Hierarchy { l1: Cache::n1_l1d(), l2: Cache::n1_l2() }
+        Hierarchy { l1: Cache::n1_l1d(), l2: Cache::n1_l2(), llc: Cache::n1_llc() }
     }
 
-    /// Access; L2 sees only L1 misses (inclusive fill).
-    pub fn access(&mut self, addr: u64, bytes: usize) -> (usize, usize) {
+    /// Access; L2 sees only L1 misses, the LLC only L2 misses
+    /// (inclusive fill).
+    pub fn access(&mut self, addr: u64, bytes: usize) -> (usize, usize, usize) {
         let l1_miss = self.l1.access(addr, bytes);
         let mut l2_miss = 0;
+        let mut llc_miss = 0;
         if l1_miss > 0 {
             l2_miss = self.l2.access(addr, bytes);
         }
-        (l1_miss, l2_miss)
+        if l2_miss > 0 {
+            llc_miss = self.llc.access(addr, bytes);
+        }
+        (l1_miss, l2_miss, llc_miss)
     }
 
     pub fn flush(&mut self) {
         self.l1.flush();
         self.l2.flush();
+        self.llc.flush();
     }
 
     pub fn reset_stats(&mut self) {
         self.l1.reset_stats();
         self.l2.reset_stats();
+        self.llc.reset_stats();
     }
 }
 
@@ -213,6 +232,26 @@ mod tests {
             }
             if pass == 1 {
                 assert_eq!(h.l1.misses, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn llc_backstops_l2_overflow() {
+        let mut h = Hierarchy::neoverse_n1();
+        // A 4 MiB working set overflows L2 (1 MiB) but fits the 8 MiB
+        // LLC: the second pass still misses in L2, yet every one of
+        // those misses is an LLC hit (no DRAM traffic).
+        for pass in 0..2 {
+            h.reset_stats();
+            let mut addr = 0u64;
+            while addr < 4 * 1024 * 1024 {
+                h.access(addr, 64);
+                addr += 64;
+            }
+            if pass == 1 {
+                assert!(h.l2.misses > 0, "4 MiB cannot live in a 1 MiB L2");
+                assert_eq!(h.llc.misses, 0, "the LLC holds the whole set");
             }
         }
     }

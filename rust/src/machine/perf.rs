@@ -67,8 +67,13 @@ pub struct CostModel {
     pub redsum_scale_acc: f64,
     /// Additional cycles per L1D miss (hit in L2).
     pub l1_miss: f64,
-    /// Additional cycles per L2 miss (DRAM).
+    /// Additional cycles per L2 miss (served by the LLC or beyond).
     pub l2_miss: f64,
+    /// Additional cycles when an L2 miss also misses the shared LLC
+    /// (true DRAM fill) — charged *on top of* `l2_miss`, so two-level
+    /// relative orderings are preserved and the third level only adds
+    /// resolution.
+    pub llc_miss: f64,
     /// Instruction-cache capacity (bytes); programs larger than this pay
     /// a refill penalty per invocation for the excess.
     pub icache_bytes: usize,
@@ -119,6 +124,7 @@ impl CostModel {
             redsum_scale_acc: 8.0,
             l1_miss: 8.0,
             l2_miss: 70.0,
+            llc_miss: 40.0,
             icache_bytes: 64 * 1024,
             icache_refill: 10.0,
             invocation_overhead: 8.0,
@@ -160,6 +166,7 @@ pub struct PerfStats {
     pub mem_writes: u64,
     pub l1_misses: u64,
     pub l2_misses: u64,
+    pub llc_misses: u64,
     pub invocations: u64,
 }
 
@@ -171,6 +178,7 @@ impl PerfStats {
         self.mem_writes += other.mem_writes;
         self.l1_misses += other.l1_misses;
         self.l2_misses += other.l2_misses;
+        self.llc_misses += other.llc_misses;
         self.invocations += other.invocations;
     }
 
@@ -183,6 +191,7 @@ impl PerfStats {
             mem_writes: (self.mem_writes as f64 * factor).round() as u64,
             l1_misses: (self.l1_misses as f64 * factor).round() as u64,
             l2_misses: (self.l2_misses as f64 * factor).round() as u64,
+            llc_misses: (self.llc_misses as f64 * factor).round() as u64,
             invocations: (self.invocations as f64 * factor).round() as u64,
         }
     }
@@ -203,8 +212,10 @@ impl PerfStats {
 pub struct LevelTraffic {
     /// Bytes entering L1 (served by L2 or beyond).
     pub l1_fill_bytes: f64,
-    /// Bytes entering L2 from memory.
+    /// Bytes entering L2 (served by the LLC or beyond).
     pub l2_fill_bytes: f64,
+    /// Bytes entering the LLC from memory (true DRAM traffic).
+    pub llc_fill_bytes: f64,
 }
 
 /// Virtual address bases of the three buffers (disjoint regions so the
@@ -287,10 +298,13 @@ impl PerfModel {
     }
 
     fn charge_access(&mut self, addr: u64, bytes: usize, s: &mut PerfStats) {
-        let (l1m, l2m) = self.hier.access(addr, bytes);
+        let (l1m, l2m, llcm) = self.hier.access(addr, bytes);
         s.l1_misses += l1m as u64;
         s.l2_misses += l2m as u64;
-        s.cycles += l1m as f64 * self.cost.l1_miss + l2m as f64 * self.cost.l2_miss;
+        s.llc_misses += llcm as u64;
+        s.cycles += l1m as f64 * self.cost.l1_miss
+            + l2m as f64 * self.cost.l2_miss
+            + llcm as f64 * self.cost.llc_miss;
     }
 
     /// Exact accounting over a full invocation schedule.
@@ -364,8 +378,12 @@ impl PerfModel {
                 hier: Hierarchy {
                     // Private L1 per core: full geometry, cold.
                     l1: self.hier.l1.sliced(1),
-                    // Shared LLC: this tile's capacity slice.
+                    // Shared levels: this tile's capacity slice (L2 kept
+                    // sliced as in the two-level model so the partition
+                    // pricing PR 6 calibrated is unchanged; the LLC
+                    // slice adds DRAM-vs-LLC resolution on top).
                     l2: self.hier.l2.sliced(bounds.len()),
+                    llc: self.hier.llc.sliced(bounds.len()),
                 },
             };
             let st = pm.estimate_layer(prog, ts, sample);
@@ -439,6 +457,15 @@ impl PerfModel {
     ///   round — otherwise one pass per invocation. At the L2 level the
     ///   whole input stays resident beside the L2 accumulator band when
     ///   it fits, else it is re-fetched once per L2 round.
+    /// * **Spatial sub-planes** (`spec.oh`/`spec.ow` smaller than the
+    ///   ofmap plane): each of the `n_sp` tiles replays the L1/L2 reuse
+    ///   structure over *tile-sized* planes — the per-tile input slice
+    ///   includes the stride/filter halo rows shared with its
+    ///   neighbours, so the `n_sp ×` per-tile traffic prices the halo
+    ///   re-reads explicitly. At the LLC the footprint is the layer's,
+    ///   not the tile's (halo re-reads are LLC hits), so the third
+    ///   level's terms use the full-layer quantities and only the `l3`
+    ///   channel blocks matter there.
     pub fn blocked_traffic(
         &self,
         shape: &crate::explore::blocking::ConvShape,
@@ -447,37 +474,83 @@ impl PerfModel {
         let slack = crate::explore::blocking::WS_SLACK;
         let nb = shape.num_blocks.max(1) as f64;
         let k = shape.out_channels.max(1) as f64;
-        let in_b = shape.in_block_bytes as f64;
         let wgt_b = shape.wgt_block_bytes as f64;
-        let acc_b = shape.acc_plane_bytes as f64;
+        let in_full = shape.in_block_bytes as f64;
+        let acc_full = shape.acc_plane_bytes as f64;
+        let (ohb, owb) = crate::explore::blocking::effective_spatial(shape, spec);
+        let full_plane = ohb >= shape.oh && owb >= shape.ow;
+        let n_sp = if full_plane {
+            1.0
+        } else {
+            ((shape.oh / ohb.max(1)) * (shape.ow / owb.max(1))).max(1) as f64
+        };
+        // Per-(spatial tile, cb) input slice (halo included) and
+        // per-(tile, k) accumulator sub-plane; full-plane specs use the
+        // exact layer quantities.
+        let (in_b, acc_b) = if full_plane {
+            (in_full, acc_full)
+        } else {
+            let (tile_ih, tile_iw) = shape.tile_input_dims(ohb, owb);
+            ((tile_ih * tile_iw * shape.c) as f64, (ohb * owb * 4) as f64)
+        };
         let k1 = spec.oc.clamp(1, shape.out_channels.max(1)) as f64;
         let c1 = spec.ic.clamp(1, shape.num_blocks.max(1)) as f64;
         let k2 = spec.l2_oc.max(spec.oc).clamp(1, shape.out_channels.max(1)) as f64;
+        let k3 = spec
+            .l3_oc
+            .max(spec.l2_oc)
+            .max(spec.oc)
+            .clamp(1, shape.out_channels.max(1)) as f64;
         let rounds1 = (k / k1).ceil();
         let rounds2 = (k / k2).ceil();
+        let rounds3 = (k / k3).ceil();
         let l1 = self.hier.l1.capacity_bytes() as f64 * slack;
         let l2 = self.hier.l2.capacity_bytes() as f64 * slack;
+        let llc = self.hier.llc.capacity_bytes() as f64 * slack;
 
-        let wgt_fill = nb * k * wgt_b;
-        let in_l1 = if c1 * in_b + acc_b + wgt_b <= l1 {
-            rounds1 * nb * in_b
+        // L1: per spatial tile, the PR 7 reuse structure over tile-sized
+        // planes; every tile re-reads its halo rows and its weight
+        // stream.
+        let wgt_l1 = n_sp * nb * k * wgt_b;
+        let in_l1 = n_sp
+            * if c1 * in_b + acc_b + wgt_b <= l1 {
+                rounds1 * nb * in_b
+            } else {
+                nb * k * in_b
+            };
+        let acc_l1 = n_sp
+            * if k1 * (acc_b + wgt_b) <= l1 {
+                2.0 * k * acc_b
+            } else {
+                2.0 * nb * k * acc_b
+            };
+        // L2: the tile's input slice vs the L2 accumulator band; the
+        // weight stream stays L2-resident across spatial tiles when it
+        // fits.
+        let in_l2 = n_sp
+            * if nb * in_b + k2 * acc_b <= l2 {
+                nb * in_b
+            } else {
+                rounds2 * nb * in_b
+            };
+        let acc_l2 =
+            n_sp * if k2 * acc_b <= l2 { 2.0 * k * acc_b } else { 2.0 * nb * k * acc_b };
+        let wgt_l2 = if nb * k * wgt_b <= l2 { nb * k * wgt_b } else { n_sp * nb * k * wgt_b };
+        // LLC: full-layer footprints — spatial halo re-reads are served
+        // here, so only the l3 channel blocking can change DRAM traffic.
+        let in_llc = if nb * in_full + k3 * acc_full <= llc {
+            nb * in_full
         } else {
-            nb * k * in_b
+            rounds3 * nb * in_full
         };
-        let acc_l1 = if k1 * (acc_b + wgt_b) <= l1 {
-            2.0 * k * acc_b
-        } else {
-            2.0 * nb * k * acc_b
-        };
-        let in_l2 = if nb * in_b + k2 * acc_b <= l2 {
-            nb * in_b
-        } else {
-            rounds2 * nb * in_b
-        };
-        let acc_l2 = if k2 * acc_b <= l2 { 2.0 * k * acc_b } else { 2.0 * nb * k * acc_b };
+        let acc_llc =
+            if k3 * acc_full <= llc { 2.0 * k * acc_full } else { 2.0 * nb * k * acc_full };
+        let wgt_llc =
+            if nb * k * wgt_b <= llc { nb * k * wgt_b } else { n_sp * nb * k * wgt_b };
         LevelTraffic {
-            l1_fill_bytes: in_l1 + acc_l1 + wgt_fill,
-            l2_fill_bytes: in_l2 + acc_l2 + wgt_fill,
+            l1_fill_bytes: in_l1 + acc_l1 + wgt_l1,
+            l2_fill_bytes: in_l2 + acc_l2 + wgt_l2,
+            llc_fill_bytes: in_llc + acc_llc + wgt_llc,
         }
     }
 
@@ -494,6 +567,7 @@ impl PerfModel {
         let line = self.hier.l1.line_bytes().max(1) as f64;
         (t.l1_fill_bytes / line) * self.cost.l1_miss
             + (t.l2_fill_bytes / line) * self.cost.l2_miss
+            + (t.llc_fill_bytes / line) * self.cost.llc_miss
     }
 
     /// Total modeled cycles of a layer under `spec`: the compute
@@ -511,7 +585,8 @@ impl PerfModel {
     ) -> f64 {
         let compute = (base.cycles
             - base.l1_misses as f64 * self.cost.l1_miss
-            - base.l2_misses as f64 * self.cost.l2_miss)
+            - base.l2_misses as f64 * self.cost.l2_miss
+            - base.llc_misses as f64 * self.cost.llc_miss)
             .max(0.0);
         compute + self.blocked_mem_cycles(shape, spec)
     }
@@ -698,6 +773,8 @@ mod tests {
             ic: 1,
             l2_oc: oc.max(16),
             l2_ic: shape.num_blocks,
+            l3_oc: shape.out_channels,
+            l3_ic: shape.num_blocks,
         };
         // 28x28 planes, 64 -> 128 channels: the input plane co-resides
         // with an accumulator plane in L1, so a bigger oc block means
@@ -720,6 +797,44 @@ mod tests {
         let c16 = pm.blocked_mem_cycles(&big_plane, &spec(&big_plane, 16));
         assert!(c2 <= c1, "non-increasing while the band fits L1");
         assert!(c16 > c2, "an L1-overflowing band is strictly worse than a fitting one");
+    }
+
+    #[test]
+    fn spatial_subplane_pricing_beats_channel_only_on_56x56x64() {
+        use crate::explore::blocking::{candidates, ConvShape};
+        use crate::layer::ConvConfig;
+        let pm = PerfModel::neoverse_n1();
+        // 56x56 output planes: the input plane (~53 KiB per channel
+        // block) cannot co-reside in L1 with an accumulator plane, so
+        // channel-only blocking streams the input once per invocation.
+        // A sub-plane tile shrinks both planes until they co-reside —
+        // the halo re-reads it pays are far cheaper than that stream.
+        let cfg = ConvConfig::simple(58, 58, 3, 3, 1, 64, 64);
+        let shape = ConvShape::of(&cfg, 16);
+        let cands = candidates(&shape, &pm.hier);
+        let best = |sub: bool| {
+            cands
+                .iter()
+                .filter(|s| s.is_subplane(&shape) == sub)
+                .map(|s| pm.blocked_mem_cycles(&shape, s))
+                .fold(f64::INFINITY, f64::min)
+        };
+        let spatial = best(true);
+        let channel_only = best(false);
+        assert!(spatial.is_finite(), "56x56x64 must generate sub-plane candidates");
+        assert!(channel_only.is_finite(), "channel-only candidates must survive");
+        assert!(
+            spatial < channel_only,
+            "spatial {spatial} !< channel-only best {channel_only}"
+        );
+        // The win is at L1/L2; DRAM traffic must not grow (halo
+        // re-reads are LLC hits).
+        let sub = cands.iter().find(|s| s.is_subplane(&shape)).unwrap();
+        let full = cands.iter().find(|s| !s.is_subplane(&shape)).unwrap();
+        let st = pm.blocked_traffic(&shape, sub);
+        let ft = pm.blocked_traffic(&shape, full);
+        assert!(st.l1_fill_bytes < ft.l1_fill_bytes);
+        assert!(st.llc_fill_bytes <= ft.llc_fill_bytes);
     }
 
     #[test]

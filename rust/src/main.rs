@@ -250,6 +250,11 @@ fn main() -> yflows::Result<()> {
                 // measured grid (see `[planner] tune_blocking`), so the
                 // db records the measured blocking winner too.
                 blocking: args.flag("blocking") || opts.tune_config.blocking,
+                // `--budget N` caps the measured grid; overflow drops
+                // candidates with a loud log (`[planner]
+                // tune_max_measured` is the config-file spelling).
+                max_measured: args
+                    .get_parse::<usize>("budget", opts.tune_config.max_measured),
                 ..base
             };
             let db = match args.opt("db") {

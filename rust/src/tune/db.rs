@@ -8,7 +8,7 @@
 //!
 //! ```json
 //! {
-//!   "schema_version": 3,
+//!   "schema_version": 4,
 //!   "entries": [
 //!     {
 //!       "layer_fp": "0f3a...", "layer": "conv3x3s1-...", "pad": 1,
@@ -16,7 +16,8 @@
 //!       "backend": "native",
 //!       "spec": {"anchor": "OS", "aux": [["wgt", 5], ["in", 2]]},
 //!       "tiles": 1,
-//!       "blocking": {"oh": 56, "ow": 56, "oc": 2, "ic": 1, "l2_oc": 32, "l2_ic": 4},
+//!       "blocking": {"oh": 8, "ow": 56, "oc": 2, "ic": 1, "l2_oc": 32, "l2_ic": 4,
+//!                    "l3_oc": 64, "l3_ic": 4},
 //!       "model_cycles": 1.2e6, "measured_sec": 3.4e-5,
 //!       "spread": 0.04, "samples": 5
 //!     }
@@ -64,8 +65,11 @@ use crate::util::json::Json;
 /// axis, so serving them as "tiles: 1 wins" would be untrue; v3 added
 /// the cache-blocking winner (`blocking`) — v2 entries were measured
 /// without the blocking axis, so serving them as "unblocked wins"
-/// would be equally untrue.
-pub const SCHEMA_VERSION: u64 = 3;
+/// would be equally untrue; v4 added the spatial (`oh`/`ow` sub-plane)
+/// and LLC (`l3_oc`/`l3_ic`) blocking dimensions — v3 entries were
+/// measured with blocking pinned to the full plane and two levels, so
+/// their recorded winners no longer name a point in the measured space.
+pub const SCHEMA_VERSION: u64 = 4;
 
 /// Stable 64-bit FNV-1a fingerprint of a (padded) conv layer config —
 /// the layer half of a [`TuneKey`]. The coordinator's spatial `pad` is
@@ -386,7 +390,8 @@ fn entry_from_json(v: &Json) -> Result<(TuneKey, TuneEntry), String> {
     Ok((key, entry))
 }
 
-/// `{"oh": 56, "ow": 56, "oc": 2, "ic": 1, "l2_oc": 32, "l2_ic": 4}`.
+/// `{"oh": 8, "ow": 56, "oc": 2, "ic": 1, "l2_oc": 32, "l2_ic": 4,
+/// "l3_oc": 64, "l3_ic": 4}`.
 pub(crate) fn tilespec_to_json(b: &TileSpec) -> Json {
     let mut o = Json::obj();
     o.set("oh", Json::from_u64(b.oh as u64))
@@ -394,7 +399,9 @@ pub(crate) fn tilespec_to_json(b: &TileSpec) -> Json {
         .set("oc", Json::from_u64(b.oc as u64))
         .set("ic", Json::from_u64(b.ic as u64))
         .set("l2_oc", Json::from_u64(b.l2_oc as u64))
-        .set("l2_ic", Json::from_u64(b.l2_ic as u64));
+        .set("l2_ic", Json::from_u64(b.l2_ic as u64))
+        .set("l3_oc", Json::from_u64(b.l3_oc as u64))
+        .set("l3_ic", Json::from_u64(b.l3_ic as u64));
     o
 }
 
@@ -412,6 +419,8 @@ pub(crate) fn tilespec_from_json(v: &Json) -> Result<TileSpec, String> {
         ic: field("ic")?,
         l2_oc: field("l2_oc")?,
         l2_ic: field("l2_ic")?,
+        l3_oc: field("l3_oc")?,
+        l3_ic: field("l3_ic")?,
     })
 }
 
@@ -511,12 +520,14 @@ mod tests {
                 TuneEntry {
                     spec: DataflowSpec::basic(Anchor::Input),
                     blocking: Some(TileSpec {
-                        oh: 10,
+                        oh: 5,
                         ow: 10,
                         oc: 2,
                         ic: 1,
                         l2_oc: 16,
                         l2_ic: 1,
+                        l3_oc: 16,
+                        l3_ic: 1,
                     }),
                     ..entry.clone()
                 },
@@ -530,7 +541,17 @@ mod tests {
         assert_eq!(got.spec, DataflowSpec::basic(Anchor::Input));
         assert_eq!(
             got.blocking,
-            Some(TileSpec { oh: 10, ow: 10, oc: 2, ic: 1, l2_oc: 16, l2_ic: 1 })
+            Some(TileSpec {
+                oh: 5,
+                ow: 10,
+                oc: 2,
+                ic: 1,
+                l2_oc: 16,
+                l2_ic: 1,
+                l3_oc: 16,
+                l3_ic: 1,
+            }),
+            "spatial and LLC dims survive the disk round-trip"
         );
         // No tmp file left behind by the atomic rewrite.
         assert!(!tmp_path(&path).exists());
@@ -573,6 +594,10 @@ mod tests {
         // without the blocking axis.
         std::fs::write(&path, r#"{"schema_version": 2, "entries": []}"#).unwrap();
         assert!(TuneDb::open(&path).is_err());
+        // And v3 (pre-spatial/LLC) files: their blocking winners were
+        // measured with oh/ow pinned to the full plane and no l3 level.
+        std::fs::write(&path, r#"{"schema_version": 3, "entries": []}"#).unwrap();
+        assert!(TuneDb::open(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 
@@ -581,7 +606,7 @@ mod tests {
         let path = temp_path("malformed");
         std::fs::write(
             &path,
-            r#"{"schema_version": 3, "entries": [{"layer_fp": "zz"}]}"#,
+            r#"{"schema_version": 4, "entries": [{"layer_fp": "zz"}]}"#,
         )
         .unwrap();
         assert!(TuneDb::open(&path).is_err());

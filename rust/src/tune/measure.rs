@@ -223,12 +223,55 @@ pub fn tune_conv(
     let mut blocking_opts: Vec<Option<TileSpec>> = vec![None];
     if tcfg.blocking {
         let shape = crate::explore::blocking::ConvShape::of(cfg, c);
-        let hier = crate::machine::cache::Hierarchy::neoverse_n1();
-        blocking_opts.extend(
-            crate::explore::blocking::candidates(&shape, &hier)
-                .into_iter()
-                .take(2)
-                .map(Some),
+        let pm = crate::machine::PerfModel::neoverse_n1();
+        let mut cands = crate::explore::blocking::candidates(&shape, &pm.hier);
+        // Rank by the analytic per-level pricing (not list order) so
+        // the grid spends its budget on the model's best blockings —
+        // spatial sub-plane specs included — and the planner's
+        // `choose_blocking` argmin is in the measured set by
+        // construction.
+        cands.sort_by(|a, b| {
+            pm.blocked_mem_cycles(&shape, a)
+                .partial_cmp(&pm.blocked_mem_cycles(&shape, b))
+                .unwrap()
+        });
+        cands.truncate(4);
+        blocking_opts.extend(cands.into_iter().map(Some));
+    }
+
+    // Explicit grid budget: the cross-product (specs × tiles ×
+    // blocking) can explode now that blocking carries spatial specs.
+    // Overflow drops whole axis entries from the back — the lowest-
+    // ranked blocking specs first, then the largest tile counts, then
+    // the lowest-ranked dataflow specs — and says so loudly; the
+    // leading entries (the analytic picks) are never dropped.
+    let mut shortlist = shortlist;
+    let budget = tcfg.max_measured.max(1);
+    let full_grid = shortlist.len() * tile_counts.len() * blocking_opts.len();
+    let mut dropped: Vec<String> = Vec::new();
+    while shortlist.len() * tile_counts.len() * blocking_opts.len() > budget {
+        if blocking_opts.len() > 1 {
+            if let Some(Some(b)) = blocking_opts.pop() {
+                dropped.push(format!("blocking {}", b.signature()));
+            }
+        } else if tile_counts.len() > 1 {
+            if let Some(t) = tile_counts.pop() {
+                dropped.push(format!("tiles {t}"));
+            }
+        } else if shortlist.len() > 1 {
+            if let Some((s, _)) = shortlist.pop() {
+                dropped.push(format!("spec {}", s.name()));
+            }
+        } else {
+            break;
+        }
+    }
+    if !dropped.is_empty() {
+        eprintln!(
+            "yflows tune: measured grid for {} ({full_grid} candidates) exceeds the \
+             budget of {budget} (TuneConfig::max_measured) — dropping {}",
+            cfg.name(),
+            dropped.join(", ")
         );
     }
 
@@ -505,6 +548,29 @@ mod tests {
             tune_conv(&cfg, 0, &machine, Backend::Native, &TuneConfig::quick(), None)
                 .unwrap();
         assert!(plain.measurements.iter().all(|m| m.blocking.is_none()));
+    }
+
+    #[test]
+    fn grid_budget_caps_the_measured_set_loudly() {
+        let machine = MachineConfig::neon(128);
+        let cfg = padded_conv(&ConvConfig::simple(8, 8, 3, 3, 1, 32, 32), &machine);
+        let tcfg = TuneConfig {
+            blocking: true,
+            max_tiles: 2,
+            max_measured: 4,
+            ..TuneConfig::quick()
+        };
+        let out = tune_conv(&cfg, 0, &machine, Backend::Native, &tcfg, None).unwrap();
+        assert!(
+            out.measurements.len() <= 4,
+            "budget of 4 exceeded: {}",
+            out.measurements.len()
+        );
+        // Truncation drops from the back: the analytic unblocked
+        // single-core pick is never dropped.
+        assert_eq!(out.model_pick().tiles, 1);
+        assert!(out.model_pick().blocking.is_none());
+        assert!(out.measurements.iter().all(|m| m.oracle_ok));
     }
 
     #[test]

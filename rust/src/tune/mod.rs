@@ -100,6 +100,12 @@ pub struct TuneConfig {
     /// recorded winner is a (spec, tiles, blocking) triple. `false`
     /// (the default) keeps the pre-blocking candidate set.
     pub blocking: bool,
+    /// Hard budget on the measured grid size (specs × tiles ×
+    /// blocking — four axes once spatial TileSpecs are in play). When
+    /// the full cross-product exceeds this, whole axis entries are
+    /// dropped from the back (blocking specs first, then tile counts,
+    /// then dataflow specs) with a loud log line — never silently.
+    pub max_measured: usize,
 }
 
 impl Default for TuneConfig {
@@ -114,6 +120,7 @@ impl Default for TuneConfig {
             perf_sample: 2,
             max_tiles: 1,
             blocking: false,
+            max_measured: 48,
         }
     }
 }
@@ -131,6 +138,7 @@ impl TuneConfig {
             perf_sample: 1,
             max_tiles: 1,
             blocking: false,
+            max_measured: 24,
         }
     }
 }
@@ -391,6 +399,8 @@ mod tests {
             ic: 1,
             l2_oc: 16,
             l2_ic: 1,
+            l3_oc: 16,
+            l3_ic: 1,
         };
         let db = TuneDb::in_memory();
         db.record(

@@ -160,6 +160,7 @@ pub const PLANNER_KEYS: &[&str] = &[
     "max_tiles",
     "cache_blocking",
     "tune_blocking",
+    "tune_max_measured",
 ];
 
 /// Build [`crate::coordinator::plan::PlannerOptions`] from `[planner]`.
@@ -225,9 +226,16 @@ pub fn planner_from(cfg: &Config) -> crate::coordinator::plan::PlannerOptions {
         // exactly as before the axis existed.
         cache_blocking: cfg.get_bool("planner", "cache_blocking", false),
         // `tune_blocking = true` adds the blocking axis to the measured
-        // tuning grid (only meaningful with `tune = measure`).
+        // tuning grid (only meaningful with `tune = measure`);
+        // `tune_max_measured = N` caps the measured grid (specs × tiles
+        // × blocking), with a loud log when candidates are dropped.
         tune_config: crate::tune::TuneConfig {
             blocking: cfg.get_bool("planner", "tune_blocking", false),
+            max_measured: cfg.get_parse(
+                "planner",
+                "tune_max_measured",
+                crate::tune::TuneConfig::default().max_measured,
+            ),
             ..Default::default()
         },
         ..Default::default()

@@ -6,11 +6,14 @@
 //!   stride-2, 256-bit, and 1×1 convs match `run_network_functional`
 //!   byte-for-byte — and the blocked schedule really is a reorder, not
 //!   a no-op, wherever the shape admits one.
+//! * Forced *sub-plane* specs (oh/ow strictly inside the ofmap, so the
+//!   engine swaps in tile-remapped programs): odd tile origins, stride-2
+//!   input bases, pad>0 halo rows, and 256-bit lanes, each × PR-6 bands.
 //! * Blocking composes with PR-6 output-band partitioning: blocked
 //!   schedules split into tiles and still match at every intra-thread
 //!   count.
-//! * Randomized property: random conv shapes × random block sizes ×
-//!   random tile counts never change a byte.
+//! * Randomized property: random conv shapes × random spatial divisors ×
+//!   random channel blocks × random tile counts never change a byte.
 //! * A planner with `cache_blocking` enabled picks a non-trivial spec
 //!   on a large layer, the prepared plan still matches the functional
 //!   path, and the choice is part of the plan fingerprint.
@@ -114,9 +117,9 @@ fn assert_blocked_bit_identity(
 /// safe on any shape.
 fn forced_specs() -> [TileSpec; 3] {
     [
-        TileSpec { oh: 8, ow: 8, oc: 1, ic: 1, l2_oc: 4, l2_ic: 64 },
-        TileSpec { oh: 8, ow: 8, oc: 2, ic: 1, l2_oc: 8, l2_ic: 64 },
-        TileSpec { oh: 8, ow: 8, oc: 4, ic: 2, l2_oc: 16, l2_ic: 2 },
+        TileSpec { oh: 8, ow: 8, oc: 1, ic: 1, l2_oc: 4, l2_ic: 64, l3_oc: 4, l3_ic: 64 },
+        TileSpec { oh: 8, ow: 8, oc: 2, ic: 1, l2_oc: 8, l2_ic: 64, l3_oc: 16, l3_ic: 64 },
+        TileSpec { oh: 8, ow: 8, oc: 4, ic: 2, l2_oc: 16, l2_ic: 2, l3_oc: 32, l3_ic: 4 },
     ]
 }
 
@@ -146,6 +149,94 @@ fn forced_blockings_match_functional_across_dataflows() {
             assert_blocked_bit_identity(&mut plan, &input, spec, 1);
         }
     }
+}
+
+#[test]
+fn forced_subplane_specs_match_functional_across_shapes() {
+    // Sub-plane tiling through the real prepared engine: the exec layer
+    // regenerates a tile-sized program per spec and walks it over the
+    // plane with halo-overlapped input bases. Cases pin down the
+    // delicate corners: odd tile origins, stride-2 base math, 256-bit
+    // lane remapping, and halo-free 1×1 filters — each at 1 and 2
+    // output bands (PR-6 composition).
+    let m128 = MachineConfig::neon(128);
+    let m256 = MachineConfig::neon(256);
+    // (machine, cfg, pad, (ohb, owb), seed)
+    let cases = [
+        // 9×9 plane in 3×3 tiles: origins land on odd rows/columns, and
+        // pad 1 puts halo rows on every boundary tile.
+        (m128, ConvConfig::simple(11, 11, 3, 3, 1, 32, 32), 1, (3, 3), 61u64),
+        // Stride 2: tile input bases advance by block*stride pixels.
+        (m128, ConvConfig::simple(13, 13, 3, 3, 2, 32, 32), 1, (3, 2), 62),
+        // 256-bit vectors: 32-lane channel blocks remap per 16-byte
+        // physical register.
+        (m256, ConvConfig::simple(10, 10, 3, 3, 1, 64, 64), 1, (4, 4), 63),
+        // 1×1 filter: no halo, tile input width equals the block width.
+        (m128, ConvConfig::simple(6, 6, 1, 1, 1, 32, 48), 0, (2, 3), 64),
+    ];
+    for (machine, cfg, pad, (ohb, owb), seed) in cases {
+        let spec = TileSpec {
+            oh: ohb,
+            ow: owb,
+            oc: 2,
+            ic: 1,
+            l2_oc: 8,
+            l2_ic: 2,
+            l3_oc: 16,
+            l3_ic: 4,
+        };
+        // Non-vacuity: every case must actually take the sub-plane path.
+        let shape = ConvShape::of(&cfg, machine.c_int8());
+        assert!(spec.is_subplane(&shape), "{}: {} is not sub-plane", cfg.name(), spec.signature());
+        let input = conv_input(&machine, &cfg, pad, seed);
+        for tiles in [1usize, 2] {
+            let mut plan = conv_plan(machine, cfg, pad, seed);
+            assert_blocked_bit_identity(&mut plan, &input, spec, tiles);
+        }
+    }
+}
+
+#[test]
+fn planner_chosen_subplane_is_bit_identical_on_56x56() {
+    // PR-8 acceptance: on a 56×56×64 ofmap the analytic stage must pick
+    // a spec with oh/ow strictly smaller than the plane, and the
+    // prepared engine — running tile-remapped programs under a 2-way
+    // PR-6 band partition — must match the functional oracle
+    // byte-for-byte.
+    let machine = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(58, 58, 3, 3, 1, 64, 64);
+    let c = machine.c_int8();
+    let mut planner = Planner::new(PlannerOptions {
+        machine,
+        cache_blocking: true,
+        explore_each_layer: false,
+        perf_sample: 1,
+        explore_threads: 1,
+        ..Default::default()
+    });
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 1);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(64, 64, 3, 3),
+        WeightLayout::CKRSc { c },
+        97,
+    ));
+    let spec = lp.blocking.expect("56x56x64 must pick a TileSpec");
+    let shape = ConvShape::of(&cfg, c);
+    assert!(
+        spec.is_subplane(&shape) && (spec.oh < shape.oh || spec.ow < shape.ow),
+        "planner must cut the 56x56 plane spatially, picked {}",
+        spec.signature()
+    );
+    lp.partition = Partition::banded(2);
+    let plan = NetworkPlan::chain("subplane-56", vec![lp]);
+
+    let input = conv_input(&machine, &cfg, 1, 98);
+    let want = coordinator::run_network_functional(&plan, &input, SHIFT).expect("functional");
+    let prepared = PreparedNetwork::prepare(&plan).expect("prepare sub-plane");
+    let mut arena = prepared.new_arena();
+    let got = prepared.run_with(&input, SHIFT, &mut arena, 2).expect("sub-plane run");
+    assert_eq!(got.shape, want.shape);
+    assert_eq!(got.data, want.data, "sub-plane {} diverges on 56x56", spec.signature());
 }
 
 #[test]
@@ -183,13 +274,19 @@ fn random_shapes_blocks_and_tiles_never_change_bytes() {
         let in_ch = *rng.pick(&[32usize, 48, 64]);
         let out_ch = *rng.pick(&[16usize, 32, 48]);
         let cfg = ConvConfig::simple(ih, ih, fh, fh, stride, in_ch, out_ch);
+        // Spatial blocks drawn from the plane's divisors, so a good
+        // fraction of iterations exercise the sub-plane program path
+        // (the rest stay full-plane and cover the channel-only nest).
+        let divisors = |n: usize| (1..=n).filter(|d| n % d == 0).collect::<Vec<_>>();
         let spec = TileSpec {
-            oh: cfg.oh(),
-            ow: cfg.ow(),
+            oh: *rng.pick(&divisors(cfg.oh())),
+            ow: *rng.pick(&divisors(cfg.ow())),
             oc: 1 << rng.range(0, 3),
             ic: 1 << rng.range(0, 1),
             l2_oc: 1 << rng.range(2, 5),
             l2_ic: 1 << rng.range(1, 2),
+            l3_oc: 1 << rng.range(4, 6),
+            l3_ic: 1 << rng.range(1, 2),
         };
         let tiles = rng.range(1, 5);
         let seed = rng.next_u64();
@@ -287,7 +384,12 @@ fn mixed_kinds_with_forced_blocking_match_functional() {
 
     let mut plan = NetworkPlan::chain("mixed-blocked", layers);
     let input = ActTensor::random(ActShape::new(32, 8, 8), ActLayout::NCHWc { c }, 71);
-    let spec = TileSpec { oh: 8, ow: 8, oc: 4, ic: 1, l2_oc: 8, l2_ic: 2 };
+    // A sub-plane spec: the simple conv swaps in 4×8 tile programs, while
+    // depthwise and grouped kinds must ignore the spatial dims entirely.
+    let spec = TileSpec { oh: 4, ow: 8, oc: 4, ic: 1, l2_oc: 8, l2_ic: 2, l3_oc: 8, l3_ic: 2 };
+    assert!(spec.is_subplane(&ConvShape::of(&conv, c)), "simple conv must go sub-plane");
+    assert!(!spec.is_subplane(&ConvShape::of(&dw, c)), "depthwise is excluded from sub-planes");
+    assert!(!spec.is_subplane(&ConvShape::of(&grouped, c)), "grouped is excluded from sub-planes");
     for tiles in [1usize, 2] {
         assert_blocked_bit_identity(&mut plan, &input, spec, tiles);
     }
