@@ -156,10 +156,10 @@ fn serve_requests() {
     let mut pending = Vec::new();
     for seed in 0..n_requests {
         let input = ActTensor::random(ActShape::new(16, 16, 16), ActLayout::NCHWc { c: 16 }, seed);
-        pending.push(server.submit(input));
+        pending.push(server.submit(input).expect("request admitted"));
     }
     for rx in pending {
-        let out = rx.recv().unwrap().expect("inference failed");
+        let out = rx.recv().expect("inference failed");
         assert_eq!(out.shape.channels, 64);
     }
     let wall = t0.elapsed().as_secs_f64();

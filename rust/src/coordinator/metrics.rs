@@ -10,11 +10,34 @@ use super::plan::{NetworkPlan, PlanCacheStats};
 use super::CLOCK_HZ;
 
 /// Aggregated request metrics of a serving session.
+///
+/// Accounting invariant (checked by [`SessionMetrics::accounted`],
+/// valid once a session is drained): every submission is counted in
+/// exactly one of `answered`, `rejected`, or `shed_deadline`, so
+/// `requests == answered + rejected + shed_deadline`.
 #[derive(Clone, Debug, Default)]
 pub struct SessionMetrics {
-    /// Per-request wall-clock latencies (seconds), submit → response.
+    /// Per-request wall-clock latencies (seconds), submit → response —
+    /// one entry per *answered* request.
     pub latencies: Vec<f64>,
+    /// Submissions observed, admitted or not (counted at submit time).
     pub requests: u64,
+    /// Requests that received an answer from a worker — an output, or
+    /// an isolated per-request/per-batch error. Excludes admission
+    /// rejects and deadline sheds.
+    pub answered: u64,
+    /// Submissions rejected at admission (queue full, or the server was
+    /// shutting down).
+    pub rejected: u64,
+    /// Admitted requests shed because their deadline passed before a
+    /// worker executed them.
+    pub shed_deadline: u64,
+    /// Batches whose execution panicked and was isolated
+    /// (`catch_unwind`); their requests are counted in `answered`.
+    pub worker_panics: u64,
+    /// Admission-queue depth sampled by the batcher at every dispatch,
+    /// in dispatch order — the congestion signal under overload.
+    pub queue_depths: Vec<usize>,
     /// Size of every batch the scheduler dispatched, in dispatch order.
     pub batch_sizes: Vec<usize>,
     /// Wall-clock seconds each dispatched batch spent *executing* (no
@@ -30,9 +53,70 @@ pub struct SessionMetrics {
 }
 
 impl SessionMetrics {
+    /// Record one *answered* request's submit→response latency.
+    /// (Submissions are counted separately at admission time by
+    /// [`SessionMetrics::record_submitted`] /
+    /// [`SessionMetrics::record_rejected`].)
     pub fn record(&mut self, latency_s: f64) {
         self.latencies.push(latency_s);
+        self.answered += 1;
+    }
+
+    /// Record one admitted submission.
+    pub fn record_submitted(&mut self) {
         self.requests += 1;
+    }
+
+    /// Record one submission rejected at admission.
+    pub fn record_rejected(&mut self) {
+        self.requests += 1;
+        self.rejected += 1;
+    }
+
+    /// Record one admitted request shed past its deadline.
+    pub fn record_shed(&mut self) {
+        self.shed_deadline += 1;
+    }
+
+    /// Record one isolated worker panic (a whole batch).
+    pub fn record_worker_panic(&mut self) {
+        self.worker_panics += 1;
+    }
+
+    /// Record the admission-queue depth observed at one dispatch.
+    pub fn record_queue_depth(&mut self, depth: usize) {
+        self.queue_depths.push(depth);
+    }
+
+    /// Whether the accounting invariant holds:
+    /// `requests == answered + rejected + shed_deadline`. Only
+    /// meaningful once the session is drained (e.g. on the metrics
+    /// returned by `Server::shutdown`) — mid-flight requests are
+    /// submitted but not yet answered.
+    pub fn accounted(&self) -> bool {
+        self.requests == self.answered + self.rejected + self.shed_deadline
+    }
+
+    /// Deepest admission-queue backlog any dispatch observed.
+    pub fn queue_depth_max(&self) -> usize {
+        self.queue_depths.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Mean sampled admission-queue depth (0 when never sampled).
+    pub fn queue_depth_mean(&self) -> f64 {
+        if self.queue_depths.is_empty() {
+            return 0.0;
+        }
+        self.queue_depths.iter().sum::<usize>() as f64 / self.queue_depths.len() as f64
+    }
+
+    /// Fraction of submissions that were not answered (rejected at
+    /// admission or shed past deadline). 0 for an idle session.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        (self.rejected + self.shed_deadline) as f64 / self.requests as f64
     }
 
     /// Record one dispatched batch of `size` requests.
@@ -132,6 +216,16 @@ pub fn session_table(m: &SessionMetrics, cache: &PlanCacheStats) -> Table {
     let mut t = Table::new(&["metric", "value"]);
     let s = m.summary();
     t.row(&["requests".to_string(), m.requests.to_string()]);
+    t.row(&["answered".to_string(), m.answered.to_string()]);
+    t.row(&["rejected (queue full)".to_string(), m.rejected.to_string()]);
+    t.row(&["shed (deadline)".to_string(), m.shed_deadline.to_string()]);
+    t.row(&["worker panics".to_string(), m.worker_panics.to_string()]);
+    if !m.queue_depths.is_empty() {
+        t.row(&[
+            "queue depth (mean/max)".to_string(),
+            format!("{:.1} / {}", m.queue_depth_mean(), m.queue_depth_max()),
+        ]);
+    }
     t.row(&["mean latency (ms)".to_string(), format!("{:.3}", s.mean * 1e3)]);
     t.row(&["p50 latency (ms)".to_string(), format!("{:.3}", m.p50() * 1e3)]);
     t.row(&["p95 latency (ms)".to_string(), format!("{:.3}", m.p95() * 1e3)]);
@@ -179,11 +273,63 @@ mod tests {
     #[test]
     fn metrics_summary() {
         let mut m = SessionMetrics::default();
+        m.record_submitted();
         m.record(0.010);
+        m.record_submitted();
         m.record(0.020);
         assert_eq!(m.requests, 2);
+        assert_eq!(m.answered, 2);
+        assert!(m.accounted());
         assert!((m.summary().mean - 0.015).abs() < 1e-12);
         assert!((m.throughput() - 1.0 / 0.015).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overload_accounting_partitions_submissions() {
+        let mut m = SessionMetrics::default();
+        // 3 answered + 2 rejected + 1 shed = 6 submissions.
+        for _ in 0..4 {
+            m.record_submitted();
+        }
+        for _ in 0..2 {
+            m.record_rejected();
+        }
+        for _ in 0..3 {
+            m.record(0.001);
+        }
+        m.record_shed();
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.answered, 3);
+        assert_eq!(m.rejected, 2);
+        assert_eq!(m.shed_deadline, 1);
+        assert!(m.accounted());
+        assert!((m.shed_rate() - 0.5).abs() < 1e-12);
+        // An unanswered in-flight request breaks the partition — the
+        // invariant is a drained-session property.
+        m.record_submitted();
+        assert!(!m.accounted());
+    }
+
+    #[test]
+    fn queue_depth_samples_summarize() {
+        let mut m = SessionMetrics::default();
+        assert_eq!(m.queue_depth_max(), 0);
+        assert_eq!(m.queue_depth_mean(), 0.0);
+        for d in [0, 4, 2] {
+            m.record_queue_depth(d);
+        }
+        assert_eq!(m.queue_depth_max(), 4);
+        assert!((m.queue_depth_mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worker_panics_are_counted() {
+        let mut m = SessionMetrics::default();
+        m.record_worker_panic();
+        m.record_worker_panic();
+        assert_eq!(m.worker_panics, 2);
+        let rendered = session_table(&m, &PlanCacheStats::default()).render();
+        assert!(rendered.contains("worker panics"));
     }
 
     #[test]
@@ -237,8 +383,15 @@ mod tests {
         let rendered = session_table(&m, &cache).render();
         assert!(rendered.contains("plan cache hit rate"));
         assert!(rendered.contains("75%"));
+        assert!(rendered.contains("rejected (queue full)"));
+        assert!(rendered.contains("shed (deadline)"));
+        // No queue-depth row when the batcher never sampled one.
+        assert!(!rendered.contains("queue depth"));
         // No tuner row for untuned sessions.
         assert!(!rendered.contains("tuned layers"));
+        m.record_queue_depth(3);
+        let rendered = session_table(&m, &cache).render();
+        assert!(rendered.contains("queue depth (mean/max)"));
     }
 
     #[test]

@@ -25,7 +25,9 @@ pub use plan::{
     PlanCacheStats, PlanKind, Planner, PlannerOptions,
 };
 pub use metrics::SessionMetrics;
-pub use serve::{Server, ServerConfig};
+#[cfg(any(test, feature = "failpoints"))]
+pub use serve::FaultPlan;
+pub use serve::{ResponseHandle, ServeError, Server, ServerConfig, SubmitError};
 
 use std::borrow::Cow;
 

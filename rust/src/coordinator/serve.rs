@@ -1,32 +1,48 @@
-//! The batched serving engine (L3 of the architecture).
+//! The batched serving engine (L3 of the architecture), built to
+//! survive overload and partial failure.
 //!
-//! Requests enter a single submission channel. A dedicated **batcher**
-//! thread coalesces queued requests into batches: it dispatches as soon
-//! as [`ServerConfig::max_batch`] requests are pending, or when the
-//! oldest request in the forming batch has waited
-//! [`ServerConfig::batch_deadline`] — the classic
-//! throughput-vs-tail-latency knob of TPU-style serving. A pool of
-//! **worker** threads executes whole batches on the **prepared
-//! execution engine** ([`crate::exec::PreparedNetwork`], compiled once
-//! at startup and shared through the plan cache): per-request
-//! replanning/packing/allocation is gone, and each batch's images fan
-//! out across [`ServerConfig::exec_threads`] threads with thread-local
-//! arenas + register files. Plans that cannot be prepared (no weights
+//! Requests enter a **bounded** submission queue
+//! ([`ServerConfig::queue_capacity`]): admission control is the first
+//! line of defence, so offered load beyond capacity is rejected at the
+//! door ([`SubmitError::QueueFull`]) instead of growing an unbounded
+//! backlog until the process dies. [`Server::submit`] is the
+//! non-blocking try-path (reject loudly, caller decides);
+//! [`Server::submit_blocking`] applies backpressure instead (the caller
+//! waits for a queue slot). Memory held by the serving tier is bounded
+//! by construction: `queue_capacity` queued requests, plus at most one
+//! forming batch in the batcher, `workers` batches in the (also
+//! bounded) dispatch channel, and one executing batch per worker.
+//!
+//! A dedicated **batcher** thread coalesces queued requests into
+//! batches: it dispatches as soon as [`ServerConfig::max_batch`]
+//! requests are pending, or when the oldest request in the forming
+//! batch has waited [`ServerConfig::batch_deadline`] — the classic
+//! throughput-vs-tail-latency knob of TPU-style serving. Each request
+//! may carry a **deadline** ([`ServerConfig::request_timeout`] by
+//! default, overridable per request via [`Server::submit_with`]);
+//! already-expired requests are shed at dequeue time with
+//! [`ServeError::DeadlineExceeded`] — a cheap reply instead of a worker
+//! slot wasted computing an answer nobody is waiting for — and workers
+//! re-check once more immediately before executing.
+//!
+//! A pool of **worker** threads executes whole batches on the
+//! **prepared execution engine** ([`crate::exec::PreparedNetwork`],
+//! compiled once at startup and shared through the plan cache). Batch
+//! execution runs under `catch_unwind`: a panicking batch answers its
+//! requests with [`ServeError::Internal`], bumps the `worker_panics`
+//! metric, and the worker keeps serving — one poisoned input can never
+//! take down the pool, and every serve-path mutex is acquired through a
+//! poison-tolerant helper so an unwind can never cascade into
+//! dead-locked siblings. Plans that cannot be prepared (no weights
 //! bound) fall back to the sequential functional path
-//! ([`super::run_network_batch`]). Batch amortization on warm caches is
-//! modeled by [`crate::machine::PerfModel::estimate_layer_batched`]
-//! (see [`super::modeled_batch_speedup`]).
+//! ([`super::run_network_batch`]) with the same isolation.
 //!
-//! The tradeoff is explicit: a batch occupies one worker, so
-//! latency-sensitive deployments with idle workers should set
-//! `max_batch: 1` (which recovers the old per-request dispatch exactly)
-//! or a small `batch_deadline`; throughput-bound deployments raise
-//! both.
-//!
-//! Batching never changes results: a batched request produces the
-//! bit-identical output of an unbatched
-//! [`super::run_network_functional`] call (`serve_concurrency`
-//! integration test).
+//! Batching, shedding and isolation never change results: an answered
+//! request produces the bit-identical output of an unbatched
+//! [`super::run_network_functional`] call (`serve_concurrency` and
+//! `serve_overload` integration tests; the latter proves the overload
+//! behaviour under deterministic fault injection — see [`FaultPlan`],
+//! available under `cfg(test)` and the `failpoints` feature).
 //!
 //! With [`ServerConfig::tune`] enabled, the server additionally applies
 //! recorded tuning-db winners to the plan at startup, and
@@ -39,9 +55,9 @@
 //! std::thread + mpsc, not tokio: tokio is unavailable offline, and a
 //! blocking pool is the right tool for a CPU-bound inference server.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -64,6 +80,19 @@ pub struct ServerConfig {
     /// How long the batcher holds an under-full batch open waiting for
     /// more requests before dispatching it anyway.
     pub batch_deadline: Duration,
+    /// Admission-control bound: the maximum number of submitted
+    /// requests queued ahead of the batcher. When the queue is full,
+    /// [`Server::submit`] returns [`SubmitError::QueueFull`] (and
+    /// [`Server::submit_blocking`] blocks) — the server's memory
+    /// footprint under overload is bounded by this knob instead of by
+    /// the offered load. Clamped to ≥ 1.
+    pub queue_capacity: usize,
+    /// Default per-request deadline, measured from submission (`None` =
+    /// requests never expire). An expired request is shed with
+    /// [`ServeError::DeadlineExceeded`] at batcher dequeue or worker
+    /// pickup — it never occupies an execution slot. Override per
+    /// request with [`Server::submit_with`].
+    pub request_timeout: Option<Duration>,
     /// Requantization shift applied after every conv layer.
     pub requant_shift: u32,
     /// Threads the prepared engine fans one batch's images across
@@ -109,6 +138,11 @@ pub struct ServerConfig {
     /// Observed requests before the background tuner starts measuring
     /// (it tunes what traffic actually exercises, not cold plans).
     pub tune_min_requests: u64,
+    /// Deterministic fault injection for tests and chaos drills (the
+    /// `failpoints` feature; always present under `cfg(test)`). `None`
+    /// (the default) injects nothing.
+    #[cfg(any(test, feature = "failpoints"))]
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServerConfig {
@@ -117,6 +151,8 @@ impl Default for ServerConfig {
             workers: 2,
             max_batch: 8,
             batch_deadline: Duration::from_millis(2),
+            queue_capacity: 256,
+            request_timeout: None,
             requant_shift: 8,
             exec_threads: 0,
             intra_threads: 0,
@@ -126,15 +162,217 @@ impl Default for ServerConfig {
             tune_config: TuneConfig::quick(),
             tune_hot_layers: 2,
             tune_min_requests: 8,
+            #[cfg(any(test, feature = "failpoints"))]
+            faults: None,
         }
     }
 }
 
-/// A request: input tensor + response channel + submission stamp.
+/// Why a request was not admitted. Both variants hand the input tensor
+/// back so the caller can retry (after backoff, or on another replica)
+/// without cloning up front.
+pub enum SubmitError {
+    /// The admission queue is at [`ServerConfig::queue_capacity`]: the
+    /// server is overloaded and this request was shed at the door.
+    QueueFull(ActTensor),
+    /// The batcher is gone — the server is shutting down (or its
+    /// batcher died). Nothing will be admitted again.
+    ShuttingDown(ActTensor),
+}
+
+impl SubmitError {
+    /// Recover the input tensor for a retry.
+    pub fn into_input(self) -> ActTensor {
+        match self {
+            SubmitError::QueueFull(t) | SubmitError::ShuttingDown(t) => t,
+        }
+    }
+
+    pub fn is_queue_full(&self) -> bool {
+        matches!(self, SubmitError::QueueFull(_))
+    }
+}
+
+// Manual Debug/Display: dumping the rejected tensor's bytes into a log
+// line would be noise (and a large one).
+impl std::fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(_) => write!(f, "QueueFull"),
+            SubmitError::ShuttingDown(_) => write!(f, "ShuttingDown"),
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(_) => {
+                write!(f, "server overloaded: admission queue full, request rejected")
+            }
+            SubmitError::ShuttingDown(_) => {
+                write!(f, "server shutting down: request not admitted")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why an *admitted* request did not produce an output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's deadline passed before a worker executed it; it
+    /// was shed without occupying an execution slot.
+    DeadlineExceeded,
+    /// The worker executing this request's batch panicked; the batch
+    /// was isolated ([`std::panic::catch_unwind`]) and the pool keeps
+    /// serving. Carries the panic message.
+    Internal(String),
+    /// The execution engine returned an error for this request (e.g.
+    /// the functional fallback path on a weightless plan).
+    Failed(String),
+    /// The reply channel was dropped without an answer — only possible
+    /// if the serving pipeline itself was torn down abnormally.
+    Disconnected,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded: request shed"),
+            ServeError::Internal(msg) => write!(f, "internal error (worker panic): {msg}"),
+            ServeError::Failed(msg) => write!(f, "execution failed: {msg}"),
+            ServeError::Disconnected => write!(f, "reply channel dropped without an answer"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Outcome of one admitted request.
+pub type ServeResult = Result<ActTensor, ServeError>;
+
+/// Handle to one admitted request's eventual answer.
+pub struct ResponseHandle {
+    rx: mpsc::Receiver<ServeResult>,
+}
+
+impl ResponseHandle {
+    /// Block until the request is answered (output, shed, or isolated
+    /// failure). Every admitted request is answered — shutdown drains
+    /// the queue, and worker panics reply [`ServeError::Internal`] —
+    /// so this returns [`ServeError::Disconnected`] only if the
+    /// pipeline was torn down abnormally.
+    pub fn recv(&self) -> ServeResult {
+        self.rx.recv().unwrap_or(Err(ServeError::Disconnected))
+    }
+
+    /// [`ResponseHandle::recv`] with a wait bound; `None` on timeout
+    /// (the request is still in flight).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<ServeResult> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => Some(Err(ServeError::Disconnected)),
+        }
+    }
+}
+
+/// Poison-tolerant lock: the value, whether or not another thread
+/// panicked while holding the mutex. Every serve-path lock goes
+/// through here so a single panicking worker cannot cascade into a
+/// pool-wide deadlock via poisoned mutexes. The guarded values stay
+/// coherent across an unwind by construction: metrics are
+/// monotonically-appended counters/vectors, the engine slot holds an
+/// `Arc` swapped atomically under the lock, and the batch receiver is
+/// only ever `recv`'d.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Deterministic fault injection for the serving tier, compiled under
+/// `cfg(test)` and the off-by-default `failpoints` feature. Attach one
+/// to [`ServerConfig::faults`]; the worker loop fires it once per
+/// executed batch. Used by the `serve_overload` suite to prove panic
+/// isolation, bounded queues, and deadline shedding without relying on
+/// timing luck.
+#[cfg(any(test, feature = "failpoints"))]
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Panic while executing the Nth batch (0-based, counted across
+    /// the whole pool in dispatch order).
+    panic_on_batch: Option<u64>,
+    /// Artificial execution latency added to every batch — the
+    /// deterministic way to hold workers busy and fill the admission
+    /// queue.
+    exec_delay: Option<Duration>,
+    /// Pretend the plan cannot be prepared, forcing the functional
+    /// fallback path (so its isolation is testable too).
+    fail_prepare: bool,
+    /// Batches executed so far (the failpoint's own counter, so the
+    /// serving hot path carries no fault bookkeeping when no plan is
+    /// attached).
+    dispatched: std::sync::atomic::AtomicU64,
+}
+
+#[cfg(any(test, feature = "failpoints"))]
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Panic while executing batch `n` (0-based dispatch order).
+    pub fn panic_on_batch(mut self, n: u64) -> FaultPlan {
+        self.panic_on_batch = Some(n);
+        self
+    }
+
+    /// Sleep `d` inside every batch execution.
+    pub fn exec_delay(mut self, d: Duration) -> FaultPlan {
+        self.exec_delay = Some(d);
+        self
+    }
+
+    /// Force the prepare step to "fail" → functional fallback path.
+    pub fn fail_prepare(mut self) -> FaultPlan {
+        self.fail_prepare = true;
+        self
+    }
+
+    /// Fired by a worker at the start of each executed batch, inside
+    /// the `catch_unwind` region.
+    fn fire(&self) {
+        let idx = self.dispatched.fetch_add(1, Ordering::Relaxed);
+        if let Some(d) = self.exec_delay {
+            std::thread::sleep(d);
+        }
+        if self.panic_on_batch == Some(idx) {
+            panic!("failpoint: injected worker panic on batch {idx}");
+        }
+    }
+}
+
+/// A request: input tensor + response channel + submission stamp +
+/// optional deadline.
 struct Request {
     input: ActTensor,
-    reply: mpsc::Sender<crate::Result<ActTensor>>,
+    reply: mpsc::Sender<ServeResult>,
     enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+impl Request {
+    fn expired_at(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Reply `DeadlineExceeded` and account the shed — the cheap path that
+/// replaces wasting an execution slot on an expired request.
+fn shed(metrics: &Mutex<SessionMetrics>, req: Request) {
+    lock_clean(metrics).record_shed();
+    let _ = req.reply.send(Err(ServeError::DeadlineExceeded));
 }
 
 /// A coalesced batch handed from the batcher to the worker pool.
@@ -144,7 +382,11 @@ struct Batch {
 
 /// Batched threaded inference server over a functional plan.
 pub struct Server {
-    tx: Option<mpsc::Sender<Request>>,
+    tx: Option<mpsc::SyncSender<Request>>,
+    /// Requests admitted but not yet pulled by the batcher — sampled
+    /// into the queue-depth metric at every dispatch.
+    depth: Arc<AtomicUsize>,
+    request_timeout: Option<Duration>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     /// Background tuning thread ([`TuneMode::Measure`] only).
@@ -194,6 +436,7 @@ impl Server {
         let config = ServerConfig {
             workers: workers_n,
             max_batch: config.max_batch.max(1),
+            queue_capacity: config.queue_capacity.max(1),
             exec_threads,
             ..config
         };
@@ -211,23 +454,42 @@ impl Server {
                 plan = tuned;
             }
         }
-        let (tx, submit_rx) = mpsc::channel::<Request>();
-        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        // Bounded pipeline end to end: `queue_capacity` admitted
+        // requests, at most `workers` coalesced batches in flight to
+        // the pool. A full batch channel blocks the batcher, which
+        // leaves requests in the admission queue, which rejects — so
+        // backpressure propagates to the door instead of into memory.
+        let (tx, submit_rx) = mpsc::sync_channel::<Request>(config.queue_capacity);
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(config.workers);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let depth = Arc::new(AtomicUsize::new(0));
         let metrics = Arc::new(Mutex::new(SessionMetrics::default()));
-        let prepared_net = match super::plan::global_plan_cache().prepared(&plan, config.backend)
-        {
-            Ok(p) => Some(p),
-            Err(e) => {
-                // Weightless plans are the expected case here; a *bound*
-                // plan failing to prepare is a real defect the operator
-                // should see, so the reason is never swallowed silently.
-                eprintln!(
-                    "yflows server: plan '{}' not prepared ({e:#}); \
-                     falling back to the sequential functional path",
-                    plan.name
-                );
-                None
+        let force_fallback = {
+            #[cfg(any(test, feature = "failpoints"))]
+            {
+                config.faults.as_ref().is_some_and(|f| f.fail_prepare)
+            }
+            #[cfg(not(any(test, feature = "failpoints")))]
+            {
+                false
+            }
+        };
+        let prepared_net = if force_fallback {
+            None
+        } else {
+            match super::plan::global_plan_cache().prepared(&plan, config.backend) {
+                Ok(p) => Some(p),
+                Err(e) => {
+                    // Weightless plans are the expected case here; a *bound*
+                    // plan failing to prepare is a real defect the operator
+                    // should see, so the reason is never swallowed silently.
+                    eprintln!(
+                        "yflows server: plan '{}' not prepared ({e:#}); \
+                         falling back to the sequential functional path",
+                        plan.name
+                    );
+                    None
+                }
             }
         };
         // Workers read the current engine per batch through this slot;
@@ -239,28 +501,77 @@ impl Server {
         let batcher = std::thread::spawn({
             let max_batch = config.max_batch;
             let deadline = config.batch_deadline;
+            let metrics = Arc::clone(&metrics);
+            let depth = Arc::clone(&depth);
             move || {
-                loop {
-                    // Block for the batch's first request.
-                    let Ok(first) = submit_rx.recv() else { break };
+                let mut disconnected = false;
+                'serve: while !disconnected {
+                    // Block for the batch's first *live* request;
+                    // already-expired requests are shed here, at
+                    // dequeue time, without ever forming a batch.
+                    let first = loop {
+                        match submit_rx.recv() {
+                            Ok(req) => {
+                                depth.fetch_sub(1, Ordering::Relaxed);
+                                if req.expired_at(Instant::now()) {
+                                    shed(&metrics, req);
+                                    continue;
+                                }
+                                break req;
+                            }
+                            // All senders dropped and the buffer is
+                            // empty — fully drained.
+                            Err(mpsc::RecvError) => break 'serve,
+                        }
+                    };
                     let mut requests = vec![first];
                     let close_at = Instant::now() + deadline;
-                    let mut disconnected = false;
-                    while requests.len() < max_batch {
+                    while requests.len() < max_batch && !disconnected {
                         let now = Instant::now();
                         if now >= close_at {
                             break;
                         }
                         match submit_rx.recv_timeout(close_at - now) {
-                            Ok(req) => requests.push(req),
-                            Err(mpsc::RecvTimeoutError::Timeout) => break,
-                            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                                disconnected = true;
-                                break;
+                            Ok(req) => {
+                                depth.fetch_sub(1, Ordering::Relaxed);
+                                if req.expired_at(Instant::now()) {
+                                    shed(&metrics, req);
+                                } else {
+                                    requests.push(req);
+                                }
                             }
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
                         }
                     }
-                    if batch_tx.send(Batch { requests }).is_err() || disconnected {
+                    lock_clean(&metrics).record_queue_depth(depth.load(Ordering::Relaxed));
+                    if batch_tx.send(Batch { requests }).is_err() {
+                        // Worker pool gone (all receivers dropped):
+                        // nothing downstream can answer, stop pulling.
+                        break;
+                    }
+                }
+                // Explicit drain: mpsc only reports Disconnected once
+                // the buffer is empty, so nothing can be left — but the
+                // guarantee is made structural rather than implicit
+                // (`drain_answers_every_admitted_request` unit test):
+                // anything still buffered is batched out before exit.
+                loop {
+                    let mut requests = Vec::new();
+                    while requests.len() < max_batch {
+                        match submit_rx.try_recv() {
+                            Ok(req) => {
+                                depth.fetch_sub(1, Ordering::Relaxed);
+                                if req.expired_at(Instant::now()) {
+                                    shed(&metrics, req);
+                                } else {
+                                    requests.push(req);
+                                }
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                    if requests.is_empty() || batch_tx.send(Batch { requests }).is_err() {
                         break;
                     }
                 }
@@ -278,41 +589,98 @@ impl Server {
             let shift = config.requant_shift;
             let exec_threads = config.exec_threads;
             let intra_threads = config.intra_threads;
+            #[cfg(any(test, feature = "failpoints"))]
+            let faults = config.faults.clone();
             workers.push(std::thread::spawn(move || loop {
                 let batch = {
-                    let guard = batch_rx.lock().unwrap();
+                    let guard = lock_clean(&batch_rx);
                     guard.recv()
                 };
                 let Ok(batch) = batch else { break };
-                let inputs: Vec<&ActTensor> =
-                    batch.requests.iter().map(|r| &r.input).collect();
+                // Last-chance deadline check: requests that expired
+                // while the batch sat in the dispatch channel are shed
+                // now, before they cost an execution slot.
+                let now = Instant::now();
+                let mut live = Vec::with_capacity(batch.requests.len());
+                for req in batch.requests {
+                    if req.expired_at(now) {
+                        shed(&metrics, req);
+                    } else {
+                        live.push(req);
+                    }
+                }
+                if live.is_empty() {
+                    continue;
+                }
+                let inputs: Vec<&ActTensor> = live.iter().map(|r| &r.input).collect();
                 let exec_start = Instant::now();
                 // Snapshot the current engine (the tuner may swap a
                 // re-tuned one in between batches; in-flight batches
                 // finish on the engine they started with).
-                let engine = engine_slot.lock().unwrap().clone();
-                let outputs = match &engine {
-                    // Hot path: prepared engine, images fanned across
-                    // threads — bit-identical to the functional path.
-                    // Cores the batch leaves idle go to intra-layer
-                    // tiles (see `ServerConfig::intra_threads`).
-                    Some(p) => {
-                        let intra = intra_for_batch(intra_threads, exec_threads, inputs.len());
-                        p.run_batch_with(&inputs, shift, exec_threads, intra)
+                let engine = lock_clean(&engine_slot).clone();
+                // Panic isolation: batch execution owns no shared
+                // mutable state — the engine is an immutable
+                // `Arc<PreparedNetwork>` (arenas and register files
+                // are created per call inside `run_batch_with`), and
+                // the metrics/engine-slot locks are only taken outside
+                // this closure. An unwind therefore cannot leave
+                // partially-updated state behind, which is what makes
+                // `AssertUnwindSafe` sound here.
+                let outputs = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    #[cfg(any(test, feature = "failpoints"))]
+                    if let Some(f) = &faults {
+                        f.fire();
                     }
-                    None => run_network_batch(&plan, &inputs, shift),
-                };
+                    match &engine {
+                        // Hot path: prepared engine, images fanned
+                        // across threads — bit-identical to the
+                        // functional path. Cores the batch leaves idle
+                        // go to intra-layer tiles (see
+                        // `ServerConfig::intra_threads`).
+                        Some(p) => {
+                            let intra =
+                                intra_for_batch(intra_threads, exec_threads, inputs.len());
+                            p.run_batch_with(&inputs, shift, exec_threads, intra)
+                        }
+                        None => run_network_batch(&plan, &inputs, shift),
+                    }
+                }));
                 let exec_seconds = exec_start.elapsed().as_secs_f64();
-                {
-                    let mut m = metrics.lock().unwrap();
-                    m.record_batch(batch.requests.len());
-                    m.record_batch_exec(exec_seconds);
-                    for req in &batch.requests {
-                        m.record(req.enqueued.elapsed().as_secs_f64());
+                match outputs {
+                    Ok(outputs) => {
+                        {
+                            let mut m = lock_clean(&metrics);
+                            m.record_batch(live.len());
+                            m.record_batch_exec(exec_seconds);
+                            for req in &live {
+                                m.record(req.enqueued.elapsed().as_secs_f64());
+                            }
+                        }
+                        for (req, out) in live.into_iter().zip(outputs) {
+                            let _ =
+                                req.reply.send(out.map_err(|e| {
+                                    ServeError::Failed(format!("{e:#}"))
+                                }));
+                        }
                     }
-                }
-                for (req, out) in batch.requests.into_iter().zip(outputs) {
-                    let _ = req.reply.send(out);
+                    Err(panic) => {
+                        // The batch is answered (loudly) and the worker
+                        // keeps serving: one poisoned batch never takes
+                        // down the pool or strands its own callers.
+                        let msg = panic_message(panic.as_ref());
+                        {
+                            let mut m = lock_clean(&metrics);
+                            m.record_batch(live.len());
+                            m.record_batch_exec(exec_seconds);
+                            m.record_worker_panic();
+                            for req in &live {
+                                m.record(req.enqueued.elapsed().as_secs_f64());
+                            }
+                        }
+                        for req in live {
+                            let _ = req.reply.send(Err(ServeError::Internal(msg.clone())));
+                        }
+                    }
                 }
             }));
         }
@@ -348,6 +716,8 @@ impl Server {
 
         Server {
             tx: Some(tx),
+            depth,
+            request_timeout: config.request_timeout,
             batcher: Some(batcher),
             workers,
             tuner,
@@ -368,23 +738,110 @@ impl Server {
         &self.config
     }
 
-    /// Submit a request; returns the response receiver.
-    pub fn submit(&self, input: ActTensor) -> mpsc::Receiver<crate::Result<ActTensor>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("server already shut down")
-            .send(Request { input, reply, enqueued: Instant::now() })
-            .expect("batcher hung up");
-        rx
+    /// Submit a request, non-blocking: admitted into the bounded queue
+    /// or rejected immediately with [`SubmitError::QueueFull`] — under
+    /// overload the caller learns *now*, instead of the server growing
+    /// an unbounded backlog. Applies the
+    /// [`ServerConfig::request_timeout`] deadline, if any.
+    pub fn submit(&self, input: ActTensor) -> Result<ResponseHandle, SubmitError> {
+        self.admit(input, self.request_timeout)
     }
 
-    /// Drain and join: pending requests are still batched and answered.
-    /// The background tuner (if any) is signalled first so it winds
-    /// down while the workers drain; it finishes at most its in-flight
-    /// layer measurement (the stop flag is checked between layers and
-    /// again before the engine-swap stage, which is skipped on
-    /// shutdown).
+    /// [`Server::submit`] with a per-request deadline override
+    /// (`None` = this request never expires, regardless of the
+    /// configured default).
+    pub fn submit_with(
+        &self,
+        input: ActTensor,
+        timeout: Option<Duration>,
+    ) -> Result<ResponseHandle, SubmitError> {
+        self.admit(input, timeout)
+    }
+
+    /// Submit with backpressure: when the queue is full, block until a
+    /// slot frees instead of rejecting — the closed-loop flavour for
+    /// callers that would rather wait than shed. Only fails with
+    /// [`SubmitError::ShuttingDown`].
+    pub fn submit_blocking(&self, input: ActTensor) -> Result<ResponseHandle, SubmitError> {
+        self.admit_blocking(input, self.request_timeout)
+    }
+
+    fn admit(
+        &self,
+        input: ActTensor,
+        timeout: Option<Duration>,
+    ) -> Result<ResponseHandle, SubmitError> {
+        let Some(tx) = self.tx.as_ref() else {
+            lock_clean(&self.metrics).record_rejected();
+            return Err(SubmitError::ShuttingDown(input));
+        };
+        let (reply, rx) = mpsc::channel();
+        let now = Instant::now();
+        let req = Request {
+            input,
+            reply,
+            enqueued: now,
+            deadline: timeout.map(|t| now + t),
+        };
+        // Depth is incremented *before* the send so a racing batcher
+        // decrement can never observe (and record) a negative depth.
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match tx.try_send(req) {
+            Ok(()) => {
+                lock_clean(&self.metrics).record_submitted();
+                Ok(ResponseHandle { rx })
+            }
+            Err(e) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                lock_clean(&self.metrics).record_rejected();
+                Err(match e {
+                    mpsc::TrySendError::Full(req) => SubmitError::QueueFull(req.input),
+                    mpsc::TrySendError::Disconnected(req) => {
+                        SubmitError::ShuttingDown(req.input)
+                    }
+                })
+            }
+        }
+    }
+
+    fn admit_blocking(
+        &self,
+        input: ActTensor,
+        timeout: Option<Duration>,
+    ) -> Result<ResponseHandle, SubmitError> {
+        let Some(tx) = self.tx.as_ref() else {
+            lock_clean(&self.metrics).record_rejected();
+            return Err(SubmitError::ShuttingDown(input));
+        };
+        let (reply, rx) = mpsc::channel();
+        let now = Instant::now();
+        let req = Request {
+            input,
+            reply,
+            enqueued: now,
+            deadline: timeout.map(|t| now + t),
+        };
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match tx.send(req) {
+            Ok(()) => {
+                lock_clean(&self.metrics).record_submitted();
+                Ok(ResponseHandle { rx })
+            }
+            Err(mpsc::SendError(req)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                lock_clean(&self.metrics).record_rejected();
+                Err(SubmitError::ShuttingDown(req.input))
+            }
+        }
+    }
+
+    /// Drain and join: pending admitted requests are still batched and
+    /// answered (or shed if their deadline passed — either way every
+    /// admitted request receives a reply). The background tuner (if
+    /// any) is signalled first so it winds down while the workers
+    /// drain; it finishes at most its in-flight layer measurement (the
+    /// stop flag is checked between layers and again before the
+    /// engine-swap stage, which is skipped on shutdown).
     pub fn shutdown(mut self) -> SessionMetrics {
         self.tuner_stop.store(true, Ordering::Relaxed);
         drop(self.tx.take());
@@ -397,8 +854,20 @@ impl Server {
         if let Some(t) = self.tuner.take() {
             let _ = t.join();
         }
-        let m = self.metrics.lock().unwrap();
+        let m = lock_clean(&self.metrics);
         m.clone()
+    }
+}
+
+/// Best-effort panic payload → message (panics carry `&str` or
+/// `String` in practice).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked (non-string payload)".to_string()
     }
 }
 
@@ -436,7 +905,7 @@ fn background_tuner(
     // off the metrics mutex the serving hot path records through —
     // tuning start latency is not latency-sensitive.
     while !stop.load(Ordering::Relaxed) {
-        if metrics.lock().unwrap().requests >= min_requests {
+        if lock_clean(metrics).requests >= min_requests {
             break;
         }
         std::thread::sleep(Duration::from_millis(20));
@@ -507,7 +976,7 @@ fn background_tuner(
     // already persisted, the next session's startup retune applies them).
     if stop.load(Ordering::Relaxed) {
         if !measured.is_empty() {
-            metrics.lock().unwrap().record_tuning(measured, false);
+            lock_clean(metrics).record_tuning(measured, false);
         }
         return;
     }
@@ -515,7 +984,7 @@ fn background_tuner(
         Some(new_plan) => {
             match super::plan::global_plan_cache().prepared(&new_plan, backend) {
                 Ok(engine) => {
-                    *engine_slot.lock().unwrap() = Some(engine);
+                    *lock_clean(engine_slot) = Some(engine);
                     true
                 }
                 Err(e) => {
@@ -530,7 +999,7 @@ fn background_tuner(
         None => false,
     };
     if !measured.is_empty() || swapped {
-        metrics.lock().unwrap().record_tuning(measured, swapped);
+        lock_clean(metrics).record_tuning(measured, swapped);
     }
 }
 
@@ -555,25 +1024,32 @@ mod tests {
         NetworkPlan::chain("tiny", vec![lp])
     }
 
+    fn input(seed: u64) -> ActTensor {
+        ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed)
+    }
+
     #[test]
     fn serves_requests_and_records_metrics() {
         let server = Server::start(tiny_plan(), 2, 8);
         let mut rxs = Vec::new();
         for seed in 0..6 {
-            let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed);
-            rxs.push(server.submit(input));
+            rxs.push(server.submit(input(seed)).expect("admitted"));
         }
         for rx in rxs {
-            let out = rx.recv().unwrap().unwrap();
+            let out = rx.recv().unwrap();
             assert_eq!(out.shape.channels, 16);
             assert_eq!(out.shape.h, 4);
         }
         let metrics = server.shutdown();
         assert_eq!(metrics.requests, 6);
+        assert_eq!(metrics.answered, 6);
+        assert!(metrics.accounted(), "requests != answered + rejected + shed");
         assert!(metrics.summary().mean > 0.0);
         // Every request went through some batch; none oversize.
         assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), 6);
         assert!(metrics.max_batch_observed() <= 8);
+        // The batcher samples the queue depth at every dispatch.
+        assert_eq!(metrics.queue_depths.len(), metrics.batch_sizes.len());
     }
 
     #[test]
@@ -585,9 +1061,8 @@ mod tests {
             ..Default::default()
         };
         let server = Server::start_with(tiny_plan(), config);
-        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 1);
-        let rx = server.submit(input);
-        let out = rx.recv().unwrap().unwrap();
+        let rx = server.submit(input(1)).unwrap();
+        let out = rx.recv().unwrap();
         assert_eq!(out.shape.channels, 16);
         let metrics = server.shutdown();
         assert_eq!(metrics.batch_sizes, vec![1]);
@@ -597,8 +1072,7 @@ mod tests {
     fn server_uses_prepared_engine_and_times_batches() {
         let server = Server::start(tiny_plan(), 1, 8);
         assert!(server.is_prepared(), "weight-bound plan must prepare");
-        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 4);
-        server.submit(input).recv().unwrap().unwrap();
+        server.submit(input(4)).unwrap().recv().unwrap();
         let metrics = server.shutdown();
         assert_eq!(metrics.batch_exec_seconds.len(), metrics.batch_sizes.len());
         assert!(metrics.exec_images_per_sec() > 0.0);
@@ -606,7 +1080,7 @@ mod tests {
 
     #[test]
     fn interp_and_native_backends_serve_identical_bytes() {
-        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 77);
+        let x = input(77);
         let mut outs = Vec::new();
         for backend in [Backend::Interp, Backend::Native] {
             let server = Server::start_with(
@@ -614,7 +1088,7 @@ mod tests {
                 ServerConfig { workers: 1, backend, ..Default::default() },
             );
             assert!(server.is_prepared());
-            outs.push(server.submit(input.clone()).recv().unwrap().unwrap());
+            outs.push(server.submit(x.clone()).unwrap().recv().unwrap());
             server.shutdown();
         }
         assert_eq!(outs[0].data, outs[1].data, "backend outputs diverge");
@@ -635,15 +1109,15 @@ mod tests {
     fn partitioned_plans_serve_bit_identical_bytes() {
         let mut plan = tiny_plan();
         plan.layers[0].partition = crate::exec::Partition::banded(2);
-        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 31);
-        let reference = crate::coordinator::run_network_functional(&plan, &input, 8).unwrap();
+        let x = input(31);
+        let reference = crate::coordinator::run_network_functional(&plan, &x, 8).unwrap();
         for intra in [0usize, 3] {
             let server = Server::start_with(
                 plan.clone(),
                 ServerConfig { workers: 1, intra_threads: intra, ..Default::default() },
             );
             assert!(server.is_prepared());
-            let out = server.submit(input.clone()).recv().unwrap().unwrap();
+            let out = server.submit(x.clone()).unwrap().recv().unwrap();
             assert_eq!(out.data, reference.data, "intra_threads={intra} changed bytes");
             server.shutdown();
         }
@@ -658,11 +1132,169 @@ mod tests {
         let plan = NetworkPlan::chain("weightless", vec![lp]);
         let server = Server::start(plan, 1, 8);
         assert!(!server.is_prepared());
-        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 1);
-        // Old behaviour preserved: the request itself errors.
-        let out = server.submit(input).recv().unwrap();
-        assert!(out.is_err());
+        // Old behaviour preserved: the request itself errors, now with
+        // the typed `Failed` variant.
+        let out = server.submit(input(1)).unwrap().recv();
+        assert!(matches!(out, Err(ServeError::Failed(_))), "got {out:?}");
         server.shutdown();
+    }
+
+    #[test]
+    fn injected_worker_panic_is_isolated_and_pool_keeps_serving() {
+        let plan = tiny_plan();
+        let reference =
+            crate::coordinator::run_network_functional(&plan, &input(3), 8).unwrap();
+        let server = Server::start_with(
+            plan,
+            ServerConfig {
+                workers: 2,
+                max_batch: 1,
+                faults: Some(Arc::new(FaultPlan::new().panic_on_batch(0))),
+                ..Default::default()
+            },
+        );
+        // Batch 0 panics: its request is answered with Internal, not
+        // dropped, not hung.
+        let first = server.submit(input(3)).unwrap().recv();
+        assert!(matches!(first, Err(ServeError::Internal(_))), "got {first:?}");
+        // The pool survives: later batches serve bit-identical bytes,
+        // on both workers' turns.
+        for _ in 0..4 {
+            let out = server.submit(input(3)).unwrap().recv().unwrap();
+            assert_eq!(out.data, reference.data, "post-panic serving diverged");
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.worker_panics, 1);
+        assert_eq!(metrics.requests, 5);
+        assert!(metrics.accounted());
+    }
+
+    #[test]
+    fn full_queue_rejects_with_queue_full() {
+        // One slow worker + capacity-1 queue: a burst must hit
+        // QueueFull within a handful of submissions — and never block
+        // or panic.
+        let server = Server::start_with(
+            tiny_plan(),
+            ServerConfig {
+                workers: 1,
+                max_batch: 1,
+                queue_capacity: 1,
+                faults: Some(Arc::new(
+                    FaultPlan::new().exec_delay(Duration::from_millis(100)),
+                )),
+                ..Default::default()
+            },
+        );
+        let mut handles = Vec::new();
+        let mut rejected = 0u64;
+        for seed in 0..32 {
+            match server.submit(input(seed)) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    assert!(e.is_queue_full(), "expected QueueFull, got {e:?}");
+                    // The rejected input comes back for a retry.
+                    let _ = e.into_input();
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "a 32-burst against a 1-slot queue must shed");
+        // Bounded admission: queue (1) + forming batch (1) + dispatch
+        // buffer (workers) + executing (workers), each ≤ max_batch.
+        assert!(handles.len() <= 1 + 3, "admitted {} > bound", handles.len());
+        // Every admitted request is still answered on drain.
+        for h in &handles {
+            h.recv().expect("admitted request must be answered");
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.rejected, rejected);
+        assert_eq!(metrics.answered as usize, handles.len());
+        assert!(metrics.accounted());
+    }
+
+    #[test]
+    fn zero_deadline_requests_are_shed_without_execution() {
+        let server = Server::start_with(
+            tiny_plan(),
+            ServerConfig { workers: 1, max_batch: 4, ..Default::default() },
+        );
+        // Expired on arrival: shed at dequeue, never executed.
+        let doomed: Vec<_> = (0..3)
+            .map(|s| server.submit_with(input(s), Some(Duration::ZERO)).unwrap())
+            .collect();
+        // A live request on the same queue still gets served.
+        let alive = server.submit_with(input(9), None).unwrap();
+        for h in &doomed {
+            let out = h.recv();
+            assert!(matches!(out, Err(ServeError::DeadlineExceeded)), "got {out:?}");
+        }
+        alive.recv().expect("undeadlined request must be answered");
+        let metrics = server.shutdown();
+        assert_eq!(metrics.shed_deadline, 3);
+        assert_eq!(metrics.answered, 1);
+        // Shed requests never occupied a worker: only the live one is
+        // in the batch accounting.
+        assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), 1);
+        assert!(metrics.accounted());
+    }
+
+    #[test]
+    fn drain_answers_every_admitted_request() {
+        // The lost-wakeup regression test for the batcher's explicit
+        // drain loop: a backlog behind a deliberately slow worker is
+        // admitted, shutdown begins (senders drop → Disconnected), and
+        // every admitted request must still be answered — nothing may
+        // be dropped between disconnect and worker drain.
+        let server = Server::start_with(
+            tiny_plan(),
+            ServerConfig {
+                workers: 1,
+                max_batch: 3,
+                queue_capacity: 16,
+                faults: Some(Arc::new(
+                    FaultPlan::new().exec_delay(Duration::from_millis(5)),
+                )),
+                ..Default::default()
+            },
+        );
+        let handles: Vec<_> =
+            (0..10).map(|s| server.submit(input(s)).expect("admitted")).collect();
+        let metrics = server.shutdown();
+        for h in &handles {
+            h.recv().expect("request dropped across shutdown drain");
+        }
+        assert_eq!(metrics.requests, 10);
+        assert_eq!(metrics.answered, 10);
+        assert!(metrics.accounted());
+    }
+
+    #[test]
+    fn submit_blocking_applies_backpressure_and_all_are_answered() {
+        let server = Server::start_with(
+            tiny_plan(),
+            ServerConfig {
+                workers: 1,
+                max_batch: 1,
+                queue_capacity: 1,
+                faults: Some(Arc::new(
+                    FaultPlan::new().exec_delay(Duration::from_millis(5)),
+                )),
+                ..Default::default()
+            },
+        );
+        // Blocking submits never reject on a live server: the caller
+        // waits for a queue slot instead (6 > capacity forces waits).
+        let handles: Vec<_> = (0..6)
+            .map(|s| server.submit_blocking(input(s)).expect("blocking submit"))
+            .collect();
+        for h in &handles {
+            h.recv().expect("backpressured request must be answered");
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.requests, 6);
+        assert_eq!(metrics.rejected, 0);
+        assert!(metrics.accounted());
     }
 
     /// A deliberately *mistuned* single-conv plan: the kernel is the
@@ -698,9 +1330,7 @@ mod tests {
         // Unbatched functional reference of the plan as handed in.
         let reference: Vec<ActTensor> = (0..8u64)
             .map(|seed| {
-                let input =
-                    ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed);
-                crate::coordinator::run_network_functional(&plan, &input, SHIFT).unwrap()
+                crate::coordinator::run_network_functional(&plan, &input(seed), SHIFT).unwrap()
             })
             .collect();
         let db = Arc::new(crate::tune::TuneDb::in_memory());
@@ -720,9 +1350,7 @@ mod tests {
         );
         assert!(server.is_prepared());
         let check = |seed: u64| {
-            let input =
-                ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed);
-            let out = server.submit(input).recv().unwrap().unwrap();
+            let out = server.submit(input(seed)).unwrap().recv().unwrap();
             assert_eq!(
                 out.data, reference[seed as usize].data,
                 "request {seed} diverged from the unbatched reference"
@@ -736,7 +1364,7 @@ mod tests {
         // kernel: basics are pruned out of the model-ranked shortlist).
         let deadline = Instant::now() + Duration::from_secs(30);
         loop {
-            if server.metrics.lock().unwrap().tune_swaps >= 1 {
+            if lock_clean(&server.metrics).tune_swaps >= 1 {
                 break;
             }
             assert!(Instant::now() < deadline, "tuner never swapped an engine in");
@@ -757,9 +1385,9 @@ mod tests {
         const SHIFT: u32 = 8;
         let machine = MachineConfig::neon(128);
         let plan = mistuned_plan(machine);
-        let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, 9);
+        let x = input(9);
         let reference =
-            crate::coordinator::run_network_functional(&plan, &input, SHIFT).unwrap();
+            crate::coordinator::run_network_functional(&plan, &x, SHIFT).unwrap();
         // Pre-seed the db: the "measured" winner is the optimized OS
         // dataflow (as a real measurement would record).
         let db = Arc::new(crate::tune::TuneDb::in_memory());
@@ -796,7 +1424,7 @@ mod tests {
         );
         // Cached mode never spawns the measuring thread.
         assert!(server.tuner.is_none());
-        let out = server.submit(input).recv().unwrap().unwrap();
+        let out = server.submit(x).unwrap().recv().unwrap();
         assert_eq!(out.data, reference.data, "startup retune changed served bytes");
         server.shutdown();
     }
@@ -809,13 +1437,12 @@ mod tests {
         );
         let mut rxs = Vec::new();
         for seed in 0..9 {
-            let input = ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed);
-            rxs.push(server.submit(input));
+            rxs.push(server.submit(input(seed)).expect("admitted"));
         }
         let metrics = server.shutdown();
         assert_eq!(metrics.requests, 9);
         for rx in rxs {
-            assert!(rx.recv().unwrap().is_ok());
+            assert!(rx.recv().is_ok());
         }
     }
 }

@@ -29,6 +29,9 @@ Experiments (paper artifacts):
   isa-compare Register-file comparison (NEON/SSE4/AVX2/SVE)
 
 Tools:
+  serve       Open-loop Poisson load demo against the batched server
+              [--requests 64 --rate 200 --seed 42; [server] queue_capacity /
+               request_timeout_ms from --config control admission + shedding]
   explore     Explore dataflows for one conv layer    [--f 3 --i 56 --nf 128 --s 1 --vl 128]
   codegen     Dump generated NEON C for a dataflow    [--anchor os --f 3 --i 8]
   plan        Plan a network end-to-end               [--net resnet18 --vl 128 --tiles 4 --blocking]
@@ -139,6 +142,92 @@ fn main() -> yflows::Result<()> {
             println!("== Ablation 3: weight-stash variable sweep ==\n{}", t3.render());
             let t4 = report::ablation::jam_sweep(&cfg, &machine, sample);
             println!("== Ablation 4: unroll-and-jam width sweep (§VII-a) ==\n{}", t4.render());
+        }
+        Some("serve") => {
+            // Overload-robustness demo: an open-loop Poisson load
+            // generator (deterministic, seeded) against the batched
+            // server. Requests past `[server] queue_capacity` are
+            // rejected at the door; `[server] request_timeout_ms`
+            // sheds expired requests — the session table shows the
+            // full admission/shedding accounting.
+            use yflows::coordinator::plan::{NetworkPlan, Planner, PlannerOptions};
+            use yflows::coordinator::{metrics::session_table, ServeError, Server, SubmitError};
+            use yflows::layer::LayerConfig;
+            use yflows::tensor::{
+                ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor,
+            };
+            use yflows::util::rng::Rng;
+
+            let n = args.get_parse::<usize>("requests", 64);
+            let rate = args.get_parse::<f64>("rate", 200.0);
+            let seed = args.get_parse::<u64>("seed", 42);
+            let config = yflows::util::config::server_from(&file_cfg);
+
+            let machine = MachineConfig::neon(128);
+            let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+            let c = machine.c_int8();
+            let mut layers = Vec::new();
+            for (idx, (conv, pad)) in [
+                (ConvConfig::simple(10, 10, 3, 3, 1, 16, 32), 1usize),
+                (ConvConfig::simple(8, 8, 3, 3, 1, 32, 16), 0),
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                let mut lp = planner.plan_layer(&LayerConfig::Conv(conv), pad);
+                lp.bind_weights(WeightTensor::random(
+                    WeightShape::new(conv.in_channels, conv.out_channels, conv.fh, conv.fw),
+                    WeightLayout::CKRSc { c },
+                    40 + idx as u64,
+                ));
+                layers.push(lp);
+            }
+            let plan = NetworkPlan::chain("serve-demo", layers);
+
+            println!(
+                "serving {n} Poisson-arrival requests at {rate:.0}/s (seed {seed}): \
+                 queue_capacity {}, request_timeout {:?}",
+                config.queue_capacity, config.request_timeout
+            );
+            let server = Server::start_with(plan, config);
+            let mut rng = Rng::new(seed);
+            let t0 = std::time::Instant::now();
+            let mut next_at = 0.0f64;
+            let mut handles = Vec::new();
+            let mut rejected = 0usize;
+            for s in 0..n as u64 {
+                // Exponential inter-arrival times → a Poisson arrival
+                // process at `rate`, replayable exactly from the seed.
+                next_at += -(1.0 - rng.unit_f64()).ln() / rate;
+                let due = std::time::Duration::from_secs_f64(next_at);
+                if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(wait);
+                }
+                let input =
+                    ActTensor::random(ActShape::new(16, 8, 8), ActLayout::NCHWc { c: 16 }, s);
+                match server.submit(input) {
+                    Ok(h) => handles.push(h),
+                    Err(SubmitError::QueueFull(_)) => rejected += 1,
+                    Err(e) => anyhow::bail!("submit failed: {e}"),
+                }
+            }
+            let mut answered = 0usize;
+            let mut shed = 0usize;
+            for h in &handles {
+                match h.recv() {
+                    Ok(_) => answered += 1,
+                    Err(ServeError::DeadlineExceeded) => shed += 1,
+                    Err(e) => anyhow::bail!("request failed: {e}"),
+                }
+            }
+            let metrics = server.shutdown();
+            let cache = yflows::coordinator::plan::global_plan_cache().stats();
+            println!("{}", session_table(&metrics, &cache).render());
+            println!(
+                "offered {n}: answered {answered}, rejected {rejected}, shed {shed} \
+                 (shed rate {:.1}%)",
+                metrics.shed_rate() * 100.0
+            );
         }
         Some("explore") => {
             let f = args.get_parse::<usize>("f", 3);

@@ -250,6 +250,8 @@ pub const SERVER_KEYS: &[&str] = &[
     "requant_shift",
     "exec_threads",
     "intra_threads",
+    "queue_capacity",
+    "request_timeout_ms",
 ];
 
 /// Build [`crate::coordinator::ServerConfig`] from `[server]` (backend
@@ -271,6 +273,16 @@ pub fn server_from(cfg: &Config) -> crate::coordinator::ServerConfig {
         requant_shift: cfg.get_parse("server", "requant_shift", d.requant_shift),
         exec_threads: cfg.get_parse("server", "exec_threads", d.exec_threads),
         intra_threads: cfg.get_parse("server", "intra_threads", d.intra_threads),
+        // Admission-control bound on the submission queue (overload is
+        // rejected at the door past it). Clamped ≥ 1 by the server.
+        queue_capacity: cfg.get_parse("server", "queue_capacity", d.queue_capacity),
+        // `request_timeout_ms = N` gives every request an N-millisecond
+        // deadline (expired requests shed with `DeadlineExceeded`);
+        // 0 or absent means requests never expire.
+        request_timeout: match cfg.get_parse("server", "request_timeout_ms", 0u64) {
+            0 => d.request_timeout,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
         ..d
     }
 }
@@ -370,6 +382,37 @@ vls = 128, 512
         let s = server_from(&Config::default());
         assert_eq!(s.workers, d.workers);
         assert_eq!(s.intra_threads, d.intra_threads);
+    }
+
+    #[test]
+    fn server_reads_overload_knobs() {
+        let c = Config::parse("[server]\nqueue_capacity = 64\nrequest_timeout_ms = 250\n")
+            .unwrap();
+        let s = server_from(&c);
+        assert_eq!(s.queue_capacity, 64);
+        assert_eq!(s.request_timeout, Some(std::time::Duration::from_millis(250)));
+        // 0 and absent both mean "requests never expire".
+        let c = Config::parse("[server]\nrequest_timeout_ms = 0\n").unwrap();
+        assert_eq!(server_from(&c).request_timeout, None);
+        let d = crate::coordinator::ServerConfig::default();
+        let s = server_from(&Config::default());
+        assert_eq!(s.queue_capacity, d.queue_capacity);
+        assert_eq!(s.request_timeout, None);
+    }
+
+    #[test]
+    fn flags_misspelt_overload_keys() {
+        // The typo class this audit exists for, extended to the
+        // overload knobs: `queue_capcity = 4` must not silently serve
+        // with a 256-deep queue.
+        let c = Config::parse("[server]\nqueue_capcity = 4\nworkers = 2\n").unwrap();
+        assert_eq!(c.unknown_keys("server", SERVER_KEYS), vec!["queue_capcity".to_string()]);
+        let c = Config::parse("[server]\nrequest_timeout = 250\n").unwrap();
+        assert_eq!(
+            c.unknown_keys("server", SERVER_KEYS),
+            vec!["request_timeout".to_string()],
+            "the key is `request_timeout_ms` — the unitless spelling must be flagged"
+        );
     }
 
     #[test]

@@ -65,18 +65,24 @@ fn server_round_trips_many_requests() {
     let server = Server::start(bound_plan(machine), 3, 9);
     let mut rxs = Vec::new();
     for seed in 0..12 {
-        rxs.push(server.submit(ActTensor::random(
-            ActShape::new(16, 12, 12),
-            ActLayout::NCHWc { c: 16 },
-            seed,
-        )));
+        rxs.push(
+            server
+                .submit(ActTensor::random(
+                    ActShape::new(16, 12, 12),
+                    ActLayout::NCHWc { c: 16 },
+                    seed,
+                ))
+                .expect("admitted"),
+        );
     }
     for rx in rxs {
-        let out = rx.recv().unwrap().unwrap();
+        let out = rx.recv().unwrap();
         assert_eq!((out.shape.h, out.shape.w), (4, 4));
     }
     let metrics = server.shutdown();
     assert_eq!(metrics.requests, 12);
+    assert_eq!(metrics.answered, 12);
+    assert!(metrics.accounted());
 }
 
 #[test]

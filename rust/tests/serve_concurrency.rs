@@ -83,11 +83,8 @@ fn concurrent_submissions_all_answered_batched_and_bit_identical() {
             scope.spawn(move || {
                 for k in 0..PER_THREAD {
                     let id = t * PER_THREAD + k;
-                    let rx = server.submit(input_for(id as u64));
-                    let out = rx
-                        .recv()
-                        .expect("server dropped reply")
-                        .expect("inference failed");
+                    let rx = server.submit(input_for(id as u64)).expect("admitted");
+                    let out = rx.recv().expect("inference failed");
                     assert_eq!(
                         out.data, reference[id].data,
                         "request {id}: batched result differs from unbatched"
@@ -99,6 +96,9 @@ fn concurrent_submissions_all_answered_batched_and_bit_identical() {
 
     let metrics = server.shutdown();
     assert_eq!(metrics.requests as usize, N, "every request must be answered");
+    assert_eq!(metrics.answered as usize, N);
+    assert_eq!(metrics.rejected, 0, "undeadlined requests under capacity never reject");
+    assert!(metrics.accounted(), "requests != answered + rejected + shed");
     assert_eq!(
         metrics.batch_sizes.iter().sum::<usize>(),
         N,
@@ -131,13 +131,17 @@ fn backlog_behind_single_worker_coalesces() {
     let server = Server::start_with(two_layer_plan(machine), config);
     let mut pending = Vec::new();
     for seed in 0..N as u64 {
-        pending.push(server.submit(input_for(seed)));
+        // Blocking submit: the backlog test wants all N admitted, so
+        // apply backpressure instead of shedding past queue_capacity.
+        pending.push(server.submit_blocking(input_for(seed)).expect("admitted"));
     }
     for rx in pending {
-        rx.recv().unwrap().unwrap();
+        rx.recv().unwrap();
     }
     let metrics = server.shutdown();
     assert_eq!(metrics.requests as usize, N);
+    assert_eq!(metrics.answered as usize, N);
+    assert!(metrics.accounted());
     assert!(metrics.batch_sizes.iter().all(|&b| b <= MAX_BATCH));
     assert!(
         metrics.mean_batch_size() > 1.0,

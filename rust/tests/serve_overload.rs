@@ -1,0 +1,402 @@
+//! Integration: the serving tier under overload and partial failure.
+//!
+//! The always-on tests prove the admission/shedding/drain contract with
+//! real timing; the `#[cfg(feature = "failpoints")]` tests additionally
+//! use deterministic fault injection (`FaultPlan`) to prove the
+//! acceptance criteria without timing luck:
+//!
+//! * (a) an injected worker panic answers its batch with
+//!   `Err(Internal)` and subsequent batches on the same pool still
+//!   serve bit-identical bytes;
+//! * (b) at offered load > capacity with a full queue, `submit` returns
+//!   `QueueFull` — never blocks unboundedly, never panics — and the
+//!   number of admitted-and-buffered requests stays bounded;
+//! * (c) expired requests are shed with `DeadlineExceeded` without ever
+//!   occupying a worker;
+//! * (d) `shutdown()` still drains and answers every admitted request.
+//!
+//! Run the full suite with `cargo test --test serve_overload --features
+//! failpoints` (CI does); without the feature the fault-dependent tests
+//! compile out and the timing-based subset runs.
+
+use std::time::Duration;
+
+use yflows::coordinator::{
+    self,
+    plan::{NetworkPlan, Planner, PlannerOptions},
+    ServeError, Server, ServerConfig,
+};
+use yflows::layer::{ConvConfig, LayerConfig};
+use yflows::machine::MachineConfig;
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::rng::Rng;
+
+const SHIFT: u32 = 8;
+
+fn bound_plan() -> NetworkPlan {
+    let machine = MachineConfig::neon(128);
+    let cfg = ConvConfig::simple(6, 6, 3, 3, 1, 16, 16);
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut lp = planner.plan_layer(&LayerConfig::Conv(cfg), 0);
+    lp.bind_weights(WeightTensor::random(
+        WeightShape::new(16, 16, 3, 3),
+        WeightLayout::CKRSc { c: 16 },
+        7,
+    ));
+    NetworkPlan::chain("overload", vec![lp])
+}
+
+fn input(seed: u64) -> ActTensor {
+    ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed)
+}
+
+/// (d) Shutdown drains: every admitted request is answered even when a
+/// deep backlog is admitted right before shutdown.
+#[test]
+fn shutdown_answers_every_admitted_request() {
+    let server = Server::start_with(
+        bound_plan(),
+        ServerConfig { workers: 2, max_batch: 4, queue_capacity: 64, ..Default::default() },
+    );
+    let handles: Vec<_> =
+        (0..24).map(|s| server.submit(input(s)).expect("admitted")).collect();
+    let metrics = server.shutdown();
+    for h in &handles {
+        h.recv().expect("admitted request dropped across shutdown");
+    }
+    assert_eq!(metrics.requests, 24);
+    assert_eq!(metrics.answered, 24);
+    assert_eq!(metrics.rejected, 0);
+    assert!(metrics.accounted(), "requests != answered + rejected + shed");
+}
+
+/// (c) Deterministic shedding without fault injection: a zero deadline
+/// is expired on arrival, so the batcher sheds it at dequeue time and
+/// it never reaches a worker (the batch-size accounting proves it).
+#[test]
+fn expired_requests_shed_without_occupying_a_worker() {
+    let server = Server::start_with(
+        bound_plan(),
+        ServerConfig { workers: 1, max_batch: 4, ..Default::default() },
+    );
+    let doomed: Vec<_> = (0..5)
+        .map(|s| server.submit_with(input(s), Some(Duration::ZERO)).expect("admitted"))
+        .collect();
+    let alive = server.submit_with(input(9), None).expect("admitted");
+    for h in &doomed {
+        let out = h.recv();
+        assert!(matches!(out, Err(ServeError::DeadlineExceeded)), "got {out:?}");
+    }
+    alive.recv().expect("undeadlined request must be answered");
+    let metrics = server.shutdown();
+    assert_eq!(metrics.shed_deadline, 5);
+    assert_eq!(metrics.answered, 1);
+    // Shed requests never entered a dispatched batch.
+    assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), 1);
+    assert!(metrics.accounted());
+}
+
+/// Bit-identity under pressure: a narrow queue with blocking submits
+/// (constant backpressure) still serves exactly the functional
+/// reference's bytes.
+#[test]
+fn overloaded_serving_is_bit_identical_to_functional_reference() {
+    const N: u64 = 16;
+    let plan = bound_plan();
+    let reference: Vec<ActTensor> = (0..N)
+        .map(|s| coordinator::run_network_functional(&plan, &input(s), SHIFT).unwrap())
+        .collect();
+    let server = Server::start_with(
+        plan,
+        ServerConfig {
+            workers: 2,
+            max_batch: 3,
+            queue_capacity: 2,
+            requant_shift: SHIFT,
+            ..Default::default()
+        },
+    );
+    let handles: Vec<_> = (0..N)
+        .map(|s| server.submit_blocking(input(s)).expect("backpressured submit"))
+        .collect();
+    for (s, h) in handles.iter().enumerate() {
+        let out = h.recv().expect("answered");
+        assert_eq!(out.data, reference[s].data, "request {s} diverged under pressure");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.answered, N);
+    assert!(metrics.accounted());
+}
+
+/// Accounting property: `requests == answered + rejected + shed` holds
+/// across randomized overload configurations (queue sizes, batch
+/// shapes, worker counts, deadlines, mixed blocking/non-blocking
+/// submits) once the session is drained — no submission is ever
+/// double-counted or lost, whatever the overload behaviour was.
+#[test]
+fn accounting_invariant_holds_across_randomized_overload_runs() {
+    let plan = bound_plan();
+    let mut rng = Rng::new(0xC0FFEE);
+    for round in 0..12 {
+        let config = ServerConfig {
+            workers: 1 + rng.below(3) as usize,
+            max_batch: 1 + rng.below(4) as usize,
+            queue_capacity: 1 + rng.below(8) as usize,
+            request_timeout: match rng.below(4) {
+                0 => None,
+                1 => Some(Duration::ZERO),
+                2 => Some(Duration::from_millis(1)),
+                _ => Some(Duration::from_millis(50)),
+            },
+            requant_shift: SHIFT,
+            ..Default::default()
+        };
+        let server = Server::start_with(plan.clone(), config);
+        let n = 8 + rng.below(25);
+        let mut accepted = Vec::new();
+        let mut rejected = 0u64;
+        for s in 0..n {
+            let blocking = rng.below(2) == 0;
+            let r = if blocking {
+                server.submit_blocking(input(s))
+            } else {
+                server.submit(input(s))
+            };
+            match r {
+                Ok(h) => accepted.push(h),
+                Err(e) => {
+                    assert!(e.is_queue_full(), "round {round}: unexpected {e}");
+                    assert!(!blocking, "round {round}: blocking submit rejected");
+                    rejected += 1;
+                }
+            }
+        }
+        let mut answered = 0u64;
+        let mut shed = 0u64;
+        for h in &accepted {
+            match h.recv() {
+                Ok(_) => answered += 1,
+                Err(ServeError::DeadlineExceeded) => shed += 1,
+                Err(e) => panic!("round {round}: admitted request failed: {e}"),
+            }
+        }
+        let metrics = server.shutdown();
+        assert!(
+            metrics.accounted(),
+            "round {round}: {} != {} + {} + {}",
+            metrics.requests,
+            metrics.answered,
+            metrics.rejected,
+            metrics.shed_deadline
+        );
+        assert_eq!(metrics.requests, n, "round {round}");
+        assert_eq!(metrics.rejected, rejected, "round {round}");
+        assert_eq!(metrics.answered, answered, "round {round}");
+        assert_eq!(metrics.shed_deadline, shed, "round {round}");
+        assert_eq!(accepted.len() as u64, answered + shed, "round {round}");
+    }
+}
+
+#[cfg(feature = "failpoints")]
+mod failpoints {
+    use super::*;
+    use std::sync::Arc;
+    use yflows::coordinator::FaultPlan;
+
+    /// (a) Panic isolation: the injected panic's batch answers
+    /// `Err(Internal)`, and the same pool then serves bit-identical
+    /// bytes — across enough batches to hit both workers.
+    #[test]
+    fn injected_panic_answers_batch_and_pool_keeps_serving_identically() {
+        let plan = bound_plan();
+        let reference =
+            coordinator::run_network_functional(&plan, &input(5), SHIFT).unwrap();
+        let server = Server::start_with(
+            plan,
+            ServerConfig {
+                workers: 2,
+                max_batch: 1,
+                requant_shift: SHIFT,
+                faults: Some(Arc::new(FaultPlan::new().panic_on_batch(0))),
+                ..Default::default()
+            },
+        );
+        let first = server.submit(input(5)).unwrap().recv();
+        assert!(
+            matches!(first, Err(ServeError::Internal(_))),
+            "panicked batch must answer Internal, got {first:?}"
+        );
+        for i in 0..8 {
+            let out = server.submit(input(5)).unwrap().recv().unwrap();
+            assert_eq!(out.data, reference.data, "post-panic request {i} diverged");
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.worker_panics, 1);
+        assert_eq!(metrics.requests, 9);
+        assert_eq!(metrics.answered, 9, "panicked requests are answered, not lost");
+        assert!(metrics.accounted());
+    }
+
+    /// (b) Bounded queue: with workers held busy by an injected delay,
+    /// a burst far beyond capacity is rejected with `QueueFull` (no
+    /// blocking, no panic) and the number of admitted-and-buffered
+    /// requests never exceeds the pipeline's structural bound — the
+    /// memory-boundedness proof.
+    #[test]
+    fn full_queue_rejects_and_admission_stays_bounded() {
+        let server = Server::start_with(
+            bound_plan(),
+            ServerConfig {
+                workers: 1,
+                max_batch: 1,
+                queue_capacity: 4,
+                requant_shift: SHIFT,
+                faults: Some(Arc::new(
+                    FaultPlan::new().exec_delay(Duration::from_millis(50)),
+                )),
+                ..Default::default()
+            },
+        );
+        let mut handles = Vec::new();
+        let mut rejected = 0u64;
+        for s in 0..64 {
+            match server.submit(input(s)) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    assert!(e.is_queue_full(), "expected QueueFull, got {e:?}");
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "64-burst against a 4-slot queue must reject");
+        // Structural bound on buffered admissions: the queue itself
+        // (queue_capacity) + the batch forming in the batcher + batches
+        // buffered in the dispatch channel (workers) + one executing
+        // per worker, each batch ≤ max_batch. Here: 4 + 1 + 1 + 1 = 7.
+        assert!(
+            handles.len() <= 7,
+            "admitted {} requests > structural bound 7 — queue not bounded",
+            handles.len()
+        );
+        for h in &handles {
+            h.recv().expect("every admitted request is answered on drain");
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.requests, 64);
+        assert_eq!(metrics.rejected, rejected);
+        assert_eq!(metrics.answered as usize, handles.len());
+        assert!(metrics.accounted());
+    }
+
+    /// (c) Deadline shedding under a busy worker: requests that expire
+    /// while the (delayed) worker is busy are shed without ever
+    /// entering a dispatched batch.
+    #[test]
+    fn requests_expiring_behind_a_busy_worker_are_shed_unexecuted() {
+        let server = Server::start_with(
+            bound_plan(),
+            ServerConfig {
+                workers: 1,
+                max_batch: 1,
+                queue_capacity: 16,
+                request_timeout: Some(Duration::from_millis(5)),
+                requant_shift: SHIFT,
+                faults: Some(Arc::new(
+                    FaultPlan::new().exec_delay(Duration::from_millis(60)),
+                )),
+                ..Default::default()
+            },
+        );
+        // First request occupies the worker for 60ms; the rest expire
+        // (5ms deadline) while queued behind it.
+        let first = server.submit(input(0)).unwrap();
+        let stuck: Vec<_> = (1..7).map(|s| server.submit(input(s)).unwrap()).collect();
+        first.recv().expect("first request is answered");
+        for h in &stuck {
+            let out = h.recv();
+            assert!(matches!(out, Err(ServeError::DeadlineExceeded)), "got {out:?}");
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.answered, 1);
+        assert_eq!(metrics.shed_deadline, 6);
+        // The shed requests never cost an execution slot.
+        assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), 1);
+        assert!(metrics.accounted());
+    }
+
+    /// The functional fallback path (forced via the prepare failpoint)
+    /// serves the same bytes as the prepared path, and its panics are
+    /// isolated identically.
+    #[test]
+    fn forced_prepare_failure_falls_back_bit_identically() {
+        let plan = bound_plan();
+        let reference =
+            coordinator::run_network_functional(&plan, &input(2), SHIFT).unwrap();
+        let server = Server::start_with(
+            plan,
+            ServerConfig {
+                workers: 1,
+                requant_shift: SHIFT,
+                faults: Some(Arc::new(FaultPlan::new().fail_prepare())),
+                ..Default::default()
+            },
+        );
+        assert!(!server.is_prepared(), "prepare failpoint must force the fallback");
+        let out = server.submit(input(2)).unwrap().recv().unwrap();
+        assert_eq!(out.data, reference.data, "fallback path diverged");
+        server.shutdown();
+    }
+
+    /// Fallback-path panic isolation: the catch_unwind region covers
+    /// `run_network_batch` too.
+    #[test]
+    fn fallback_path_panics_are_isolated_too() {
+        let server = Server::start_with(
+            bound_plan(),
+            ServerConfig {
+                workers: 1,
+                max_batch: 1,
+                requant_shift: SHIFT,
+                faults: Some(Arc::new(FaultPlan::new().fail_prepare().panic_on_batch(0))),
+                ..Default::default()
+            },
+        );
+        assert!(!server.is_prepared());
+        let first = server.submit(input(1)).unwrap().recv();
+        assert!(matches!(first, Err(ServeError::Internal(_))), "got {first:?}");
+        server.submit(input(1)).unwrap().recv().expect("pool keeps serving");
+        let metrics = server.shutdown();
+        assert_eq!(metrics.worker_panics, 1);
+        assert!(metrics.accounted());
+    }
+
+    /// `submit_blocking` against a saturated queue waits instead of
+    /// rejecting, and every backpressured request is answered.
+    #[test]
+    fn blocking_submits_backpressure_instead_of_rejecting() {
+        let server = Server::start_with(
+            bound_plan(),
+            ServerConfig {
+                workers: 1,
+                max_batch: 1,
+                queue_capacity: 1,
+                requant_shift: SHIFT,
+                faults: Some(Arc::new(
+                    FaultPlan::new().exec_delay(Duration::from_millis(10)),
+                )),
+                ..Default::default()
+            },
+        );
+        let handles: Vec<_> = (0..8)
+            .map(|s| server.submit_blocking(input(s)).expect("blocking submit"))
+            .collect();
+        for h in &handles {
+            h.recv().expect("backpressured request answered");
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.requests, 8);
+        assert_eq!(metrics.rejected, 0, "blocking submits never shed at the door");
+        assert_eq!(metrics.answered, 8);
+        assert!(metrics.accounted());
+    }
+}

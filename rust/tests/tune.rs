@@ -286,8 +286,8 @@ fn background_tuning_under_concurrent_serving_stays_bit_identical() {
                     let id = t * PER_THREAD + k;
                     let out = server
                         .submit(input_for(id as u64))
+                        .expect("admitted")
                         .recv()
-                        .expect("server dropped reply")
                         .expect("inference failed");
                     assert_eq!(
                         out.data, reference[id].data,
@@ -303,14 +303,14 @@ fn background_tuning_under_concurrent_serving_stays_bit_identical() {
     let mut seed = (THREADS * PER_THREAD) as u64;
     while server.metrics.lock().unwrap().tune_swaps == 0 {
         assert!(Instant::now() < deadline, "background tuner never swapped");
-        let out = server.submit(input_for(seed % 8)).recv().unwrap().unwrap();
+        let out = server.submit(input_for(seed % 8)).unwrap().recv().unwrap();
         assert_eq!(out.data, reference[(seed % 8) as usize].data);
         seed += 1;
         std::thread::sleep(Duration::from_millis(1));
     }
     // Post-swap traffic is still byte-identical.
     for id in 0..8u64 {
-        let out = server.submit(input_for(id)).recv().unwrap().unwrap();
+        let out = server.submit(input_for(id)).unwrap().recv().unwrap();
         assert_eq!(out.data, reference[id as usize].data, "post-swap request {id}");
     }
 
