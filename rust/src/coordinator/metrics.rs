@@ -2,12 +2,41 @@
 //! batch-size histogram of the batched scheduler, plan-cache hit rates,
 //! and per-layer accounting — rendered for the e2e experiments and the
 //! serving example.
+//!
+//! The overload counters (`requests`/`answered`/`rejected`/
+//! `shed_deadline`/`worker_panics`), the queue-depth gauge, and the
+//! latency histogram live in an [`obs::Registry`]: the session table
+//! and the Prometheus exposition (`Registry::snapshot_text`) read the
+//! same atomics, so they can never disagree.
 
+use std::sync::Arc;
+
+use crate::obs::{Counter, Gauge, Histogram, Registry};
 use crate::util::stats::{percentile, Summary};
 use crate::util::table::Table;
 
 use super::plan::{NetworkPlan, PlanCacheStats};
 use super::CLOCK_HZ;
+
+/// Registry name of the submissions counter.
+pub const M_REQUESTS: &str = "yflows_requests_total";
+/// Registry name of the answered-requests counter.
+pub const M_ANSWERED: &str = "yflows_answered_total";
+/// Registry name of the admission-rejects counter.
+pub const M_REJECTED: &str = "yflows_rejected_total";
+/// Registry name of the deadline-sheds counter.
+pub const M_SHED_DEADLINE: &str = "yflows_shed_deadline_total";
+/// Registry name of the isolated-worker-panics counter.
+pub const M_WORKER_PANICS: &str = "yflows_worker_panics_total";
+/// Registry name of the admission-queue-depth gauge (its high-water
+/// mark is exposed as `yflows_queue_depth_high_water`).
+pub const M_QUEUE_DEPTH: &str = "yflows_queue_depth";
+/// Registry name of the answered-request latency histogram.
+pub const M_LATENCY: &str = "yflows_request_latency_seconds";
+
+/// Latency histogram bucket upper bounds (seconds); `+Inf` implicit.
+pub const LATENCY_BOUNDS: [f64; 10] =
+    [1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1];
 
 /// Aggregated request metrics of a serving session.
 ///
@@ -15,28 +44,15 @@ use super::CLOCK_HZ;
 /// valid once a session is drained): every submission is counted in
 /// exactly one of `answered`, `rejected`, or `shed_deadline`, so
 /// `requests == answered + rejected + shed_deadline`.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct SessionMetrics {
     /// Per-request wall-clock latencies (seconds), submit → response —
     /// one entry per *answered* request.
     pub latencies: Vec<f64>,
-    /// Submissions observed, admitted or not (counted at submit time).
-    pub requests: u64,
-    /// Requests that received an answer from a worker — an output, or
-    /// an isolated per-request/per-batch error. Excludes admission
-    /// rejects and deadline sheds.
-    pub answered: u64,
-    /// Submissions rejected at admission (queue full, or the server was
-    /// shutting down).
-    pub rejected: u64,
-    /// Admitted requests shed because their deadline passed before a
-    /// worker executed them.
-    pub shed_deadline: u64,
-    /// Batches whose execution panicked and was isolated
-    /// (`catch_unwind`); their requests are counted in `answered`.
-    pub worker_panics: u64,
     /// Admission-queue depth sampled by the batcher at every dispatch,
     /// in dispatch order — the congestion signal under overload.
+    /// Submit-time samples update only the registry gauge (and its
+    /// high-water mark), keeping this vec 1:1 with `batch_sizes`.
     pub queue_depths: Vec<usize>,
     /// Size of every batch the scheduler dispatched, in dispatch order.
     pub batch_sizes: Vec<usize>,
@@ -50,42 +66,125 @@ pub struct SessionMetrics {
     /// How many times the background tuner swapped a re-tuned prepared
     /// engine into the serving path.
     pub tune_swaps: u64,
+    registry: Arc<Registry>,
+    requests: Arc<Counter>,
+    answered: Arc<Counter>,
+    rejected: Arc<Counter>,
+    shed_deadline: Arc<Counter>,
+    worker_panics: Arc<Counter>,
+    queue_depth: Arc<Gauge>,
+    latency_hist: Arc<Histogram>,
+}
+
+impl Default for SessionMetrics {
+    fn default() -> SessionMetrics {
+        let registry = Arc::new(Registry::new());
+        SessionMetrics {
+            latencies: Vec::new(),
+            queue_depths: Vec::new(),
+            batch_sizes: Vec::new(),
+            batch_exec_seconds: Vec::new(),
+            tuned_layers: Vec::new(),
+            tune_swaps: 0,
+            requests: registry.counter(M_REQUESTS),
+            answered: registry.counter(M_ANSWERED),
+            rejected: registry.counter(M_REJECTED),
+            shed_deadline: registry.counter(M_SHED_DEADLINE),
+            worker_panics: registry.counter(M_WORKER_PANICS),
+            queue_depth: registry.gauge(M_QUEUE_DEPTH),
+            latency_hist: registry.histogram(M_LATENCY, &LATENCY_BOUNDS),
+            registry,
+        }
+    }
 }
 
 impl SessionMetrics {
+    /// The backing metrics registry — the same atomics the accessors
+    /// below read, for Prometheus/JSON exposition.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Submissions observed, admitted or not (counted at submit time).
+    pub fn requests(&self) -> u64 {
+        self.requests.get()
+    }
+
+    /// Requests that received an answer from a worker — an output, or
+    /// an isolated per-request/per-batch error. Excludes admission
+    /// rejects and deadline sheds.
+    pub fn answered(&self) -> u64 {
+        self.answered.get()
+    }
+
+    /// Submissions rejected at admission (queue full, or the server was
+    /// shutting down).
+    pub fn rejected(&self) -> u64 {
+        self.rejected.get()
+    }
+
+    /// Admitted requests shed because their deadline passed before a
+    /// worker executed them.
+    pub fn shed_deadline(&self) -> u64 {
+        self.shed_deadline.get()
+    }
+
+    /// Batches whose execution panicked and was isolated
+    /// (`catch_unwind`); their requests are counted in `answered`.
+    pub fn worker_panics(&self) -> u64 {
+        self.worker_panics.get()
+    }
+
     /// Record one *answered* request's submit→response latency.
     /// (Submissions are counted separately at admission time by
     /// [`SessionMetrics::record_submitted`] /
     /// [`SessionMetrics::record_rejected`].)
     pub fn record(&mut self, latency_s: f64) {
         self.latencies.push(latency_s);
-        self.answered += 1;
+        self.latency_hist.observe(latency_s);
+        self.answered.inc();
     }
 
     /// Record one admitted submission.
     pub fn record_submitted(&mut self) {
-        self.requests += 1;
+        self.requests.inc();
     }
 
     /// Record one submission rejected at admission.
     pub fn record_rejected(&mut self) {
-        self.requests += 1;
-        self.rejected += 1;
+        self.requests.inc();
+        self.rejected.inc();
     }
 
     /// Record one admitted request shed past its deadline.
     pub fn record_shed(&mut self) {
-        self.shed_deadline += 1;
+        self.shed_deadline.inc();
     }
 
     /// Record one isolated worker panic (a whole batch).
     pub fn record_worker_panic(&mut self) {
-        self.worker_panics += 1;
+        self.worker_panics.inc();
     }
 
     /// Record the admission-queue depth observed at one dispatch.
     pub fn record_queue_depth(&mut self, depth: usize) {
         self.queue_depths.push(depth);
+        self.queue_depth.set(depth as u64);
+    }
+
+    /// Sample the queue depth outside dispatch (on submit and reject):
+    /// updates the gauge and its high-water mark without biasing the
+    /// per-dispatch `queue_depths` series. An idle-then-burst workload
+    /// whose queue drains between dispatches still shows its true peak
+    /// via [`SessionMetrics::queue_depth_high_water`].
+    pub fn sample_queue_depth(&mut self, depth: usize) {
+        self.queue_depth.set(depth as u64);
+    }
+
+    /// Deepest queue backlog observed by *any* sample — dispatch-time
+    /// or submit/reject-time — i.e. the gauge's high-water mark.
+    pub fn queue_depth_high_water(&self) -> usize {
+        self.queue_depth.high_water() as usize
     }
 
     /// Whether the accounting invariant holds:
@@ -94,7 +193,7 @@ impl SessionMetrics {
     /// returned by `Server::shutdown`) — mid-flight requests are
     /// submitted but not yet answered.
     pub fn accounted(&self) -> bool {
-        self.requests == self.answered + self.rejected + self.shed_deadline
+        self.requests() == self.answered() + self.rejected() + self.shed_deadline()
     }
 
     /// Deepest admission-queue backlog any dispatch observed.
@@ -113,10 +212,10 @@ impl SessionMetrics {
     /// Fraction of submissions that were not answered (rejected at
     /// admission or shed past deadline). 0 for an idle session.
     pub fn shed_rate(&self) -> f64 {
-        if self.requests == 0 {
+        if self.requests() == 0 {
             return 0.0;
         }
-        (self.rejected + self.shed_deadline) as f64 / self.requests as f64
+        (self.rejected() + self.shed_deadline()) as f64 / self.requests() as f64
     }
 
     /// Record one dispatched batch of `size` requests.
@@ -215,15 +314,20 @@ impl SessionMetrics {
 pub fn session_table(m: &SessionMetrics, cache: &PlanCacheStats) -> Table {
     let mut t = Table::new(&["metric", "value"]);
     let s = m.summary();
-    t.row(&["requests".to_string(), m.requests.to_string()]);
-    t.row(&["answered".to_string(), m.answered.to_string()]);
-    t.row(&["rejected (queue full)".to_string(), m.rejected.to_string()]);
-    t.row(&["shed (deadline)".to_string(), m.shed_deadline.to_string()]);
-    t.row(&["worker panics".to_string(), m.worker_panics.to_string()]);
-    if !m.queue_depths.is_empty() {
+    t.row(&["requests".to_string(), m.requests().to_string()]);
+    t.row(&["answered".to_string(), m.answered().to_string()]);
+    t.row(&["rejected (queue full)".to_string(), m.rejected().to_string()]);
+    t.row(&["shed (deadline)".to_string(), m.shed_deadline().to_string()]);
+    t.row(&["worker panics".to_string(), m.worker_panics().to_string()]);
+    if !m.queue_depths.is_empty() || m.queue_depth_high_water() > 0 {
         t.row(&[
-            "queue depth (mean/max)".to_string(),
-            format!("{:.1} / {}", m.queue_depth_mean(), m.queue_depth_max()),
+            "queue depth (mean/max/hw)".to_string(),
+            format!(
+                "{:.1} / {} / {}",
+                m.queue_depth_mean(),
+                m.queue_depth_max(),
+                m.queue_depth_high_water()
+            ),
         ]);
     }
     t.row(&["mean latency (ms)".to_string(), format!("{:.3}", s.mean * 1e3)]);
@@ -277,8 +381,8 @@ mod tests {
         m.record(0.010);
         m.record_submitted();
         m.record(0.020);
-        assert_eq!(m.requests, 2);
-        assert_eq!(m.answered, 2);
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.answered(), 2);
         assert!(m.accounted());
         assert!((m.summary().mean - 0.015).abs() < 1e-12);
         assert!((m.throughput() - 1.0 / 0.015).abs() < 1e-6);
@@ -298,16 +402,33 @@ mod tests {
             m.record(0.001);
         }
         m.record_shed();
-        assert_eq!(m.requests, 6);
-        assert_eq!(m.answered, 3);
-        assert_eq!(m.rejected, 2);
-        assert_eq!(m.shed_deadline, 1);
+        assert_eq!(m.requests(), 6);
+        assert_eq!(m.answered(), 3);
+        assert_eq!(m.rejected(), 2);
+        assert_eq!(m.shed_deadline(), 1);
         assert!(m.accounted());
         assert!((m.shed_rate() - 0.5).abs() < 1e-12);
         // An unanswered in-flight request breaks the partition — the
         // invariant is a drained-session property.
         m.record_submitted();
         assert!(!m.accounted());
+    }
+
+    #[test]
+    fn counters_read_through_the_registry() {
+        let mut m = SessionMetrics::default();
+        m.record_submitted();
+        m.record(0.003);
+        m.record_rejected();
+        // The accessors and the registry expose the same atomics.
+        let reg = m.registry().clone();
+        assert_eq!(reg.counter(M_REQUESTS).get(), m.requests());
+        assert_eq!(reg.counter(M_ANSWERED).get(), m.answered());
+        assert_eq!(reg.counter(M_REJECTED).get(), m.rejected());
+        assert_eq!(reg.histogram(M_LATENCY, &LATENCY_BOUNDS).count(), 1);
+        let text = reg.snapshot_text();
+        assert!(text.contains("yflows_requests_total 2"), "{text}");
+        assert!(text.contains("yflows_rejected_total 1"), "{text}");
     }
 
     #[test]
@@ -323,11 +444,25 @@ mod tests {
     }
 
     #[test]
+    fn submit_samples_raise_high_water_without_biasing_dispatch_series() {
+        let mut m = SessionMetrics::default();
+        // Burst observed at submit time; queue drained by dispatch.
+        m.sample_queue_depth(7);
+        m.sample_queue_depth(3);
+        m.record_queue_depth(1);
+        assert_eq!(m.queue_depths, vec![1], "submit samples must not join the series");
+        assert_eq!(m.queue_depth_max(), 1);
+        assert_eq!(m.queue_depth_high_water(), 7);
+        let text = m.registry().snapshot_text();
+        assert!(text.contains("yflows_queue_depth_high_water 7"), "{text}");
+    }
+
+    #[test]
     fn worker_panics_are_counted() {
         let mut m = SessionMetrics::default();
         m.record_worker_panic();
         m.record_worker_panic();
-        assert_eq!(m.worker_panics, 2);
+        assert_eq!(m.worker_panics(), 2);
         let rendered = session_table(&m, &PlanCacheStats::default()).render();
         assert!(rendered.contains("worker panics"));
     }
@@ -385,13 +520,13 @@ mod tests {
         assert!(rendered.contains("75%"));
         assert!(rendered.contains("rejected (queue full)"));
         assert!(rendered.contains("shed (deadline)"));
-        // No queue-depth row when the batcher never sampled one.
+        // No queue-depth row when nothing ever sampled a depth.
         assert!(!rendered.contains("queue depth"));
         // No tuner row for untuned sessions.
         assert!(!rendered.contains("tuned layers"));
         m.record_queue_depth(3);
         let rendered = session_table(&m, &cache).render();
-        assert!(rendered.contains("queue depth (mean/max)"));
+        assert!(rendered.contains("queue depth (mean/max/hw)"));
     }
 
     #[test]

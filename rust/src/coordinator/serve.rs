@@ -63,6 +63,7 @@ use std::time::{Duration, Instant};
 
 use crate::exec::{Backend, PreparedNetwork};
 use crate::layer::LayerConfig;
+use crate::obs::{ExecObs, ObsConfig, Profiler, Recorder, SpanId};
 use crate::tensor::ActTensor;
 use crate::tune::{self, TuneConfig, TuneDb, TuneKey, TuneMode};
 
@@ -138,6 +139,10 @@ pub struct ServerConfig {
     /// Observed requests before the background tuner starts measuring
     /// (it tunes what traffic actually exercises, not cold plans).
     pub tune_min_requests: u64,
+    /// Observability ([`crate::obs`]): request/exec span tracing, the
+    /// per-layer profiler, and metrics exposition. All off by default —
+    /// the disabled hooks are enum-dispatch no-ops on the hot path.
+    pub obs: ObsConfig,
     /// Deterministic fault injection for tests and chaos drills (the
     /// `failpoints` feature; always present under `cfg(test)`). `None`
     /// (the default) injects nothing.
@@ -162,6 +167,7 @@ impl Default for ServerConfig {
             tune_config: TuneConfig::quick(),
             tune_hot_layers: 2,
             tune_min_requests: 8,
+            obs: ObsConfig::default(),
             #[cfg(any(test, feature = "failpoints"))]
             faults: None,
         }
@@ -354,12 +360,17 @@ impl FaultPlan {
 }
 
 /// A request: input tensor + response channel + submission stamp +
-/// optional deadline.
+/// optional deadline (+ tracing context when tracing is on).
 struct Request {
     input: ActTensor,
     reply: mpsc::Sender<ServeResult>,
     enqueued: Instant,
     deadline: Option<Instant>,
+    /// Root span id of this request's lifecycle trace
+    /// ([`SpanId::NONE`] when tracing is off).
+    span: SpanId,
+    /// When the batcher pulled it off the admission queue.
+    dequeued: Option<Instant>,
 }
 
 impl Request {
@@ -370,9 +381,61 @@ impl Request {
 
 /// Reply `DeadlineExceeded` and account the shed — the cheap path that
 /// replaces wasting an execution slot on an expired request.
-fn shed(metrics: &Mutex<SessionMetrics>, req: Request) {
+fn shed(metrics: &Mutex<SessionMetrics>, trace: &Recorder, req: Request) {
     lock_clean(metrics).record_shed();
+    if trace.enabled() {
+        let now = Instant::now();
+        trace.record(req.span, "admit", "request", req.enqueued, req.enqueued, &[]);
+        trace.record(
+            req.span,
+            "queue",
+            "request",
+            req.enqueued,
+            req.dequeued.unwrap_or(now),
+            &[],
+        );
+        trace.record_with(
+            req.span,
+            SpanId::NONE,
+            "request",
+            "request",
+            req.enqueued,
+            now,
+            &[("outcome", "shed_deadline".to_string())],
+        );
+    }
     let _ = req.reply.send(Err(ServeError::DeadlineExceeded));
+}
+
+/// Emit the `admit → queue → batch → exec → reply` lifecycle spans and
+/// the request's root span, once its reply has been sent. `outcome` is
+/// the root span's `outcome` arg (`answered` / `failed` / `internal`).
+fn record_request_spans(
+    trace: &Recorder,
+    req: &Request,
+    exec_start: Instant,
+    exec_end: Instant,
+    outcome: &str,
+) {
+    if !trace.enabled() {
+        return;
+    }
+    let replied = Instant::now();
+    let dequeued = req.dequeued.unwrap_or(exec_start);
+    trace.record(req.span, "admit", "request", req.enqueued, req.enqueued, &[]);
+    trace.record(req.span, "queue", "request", req.enqueued, dequeued, &[]);
+    trace.record(req.span, "batch", "request", dequeued, exec_start, &[]);
+    trace.record(req.span, "exec", "request", exec_start, exec_end, &[]);
+    trace.record(req.span, "reply", "request", exec_end, replied, &[]);
+    trace.record_with(
+        req.span,
+        SpanId::NONE,
+        "request",
+        "request",
+        req.enqueued,
+        replied,
+        &[("outcome", outcome.to_string())],
+    );
 }
 
 /// A coalesced batch handed from the batcher to the worker pool.
@@ -398,6 +461,10 @@ pub struct Server {
     /// functional path is used and reports errors per request).
     prepared: bool,
     pub metrics: Arc<Mutex<SessionMetrics>>,
+    /// Span recorder — `Off` unless `[obs] trace_capacity > 0`.
+    trace: Recorder,
+    /// Per-layer profiler — `Some` iff `[obs] profile`.
+    profiler: Option<Arc<Profiler>>,
 }
 
 impl Server {
@@ -440,6 +507,7 @@ impl Server {
             exec_threads,
             ..config
         };
+        let trace = Recorder::with_capacity(config.obs.trace_capacity);
         let tune_db = match config.tune {
             TuneMode::Off => None,
             _ => Some(config.tune_db.clone().unwrap_or_else(tune::global_tune_db)),
@@ -454,6 +522,13 @@ impl Server {
                 plan = tuned;
             }
         }
+        // The profiler mirrors the plan the server actually serves
+        // (i.e. after the startup retune).
+        let profiler = if config.obs.profile {
+            Some(Arc::new(Profiler::for_plan(&plan)))
+        } else {
+            None
+        };
         // Bounded pipeline end to end: `queue_capacity` admitted
         // requests, at most `workers` coalesced batches in flight to
         // the pool. A full batch channel blocks the batcher, which
@@ -474,6 +549,7 @@ impl Server {
                 false
             }
         };
+        let prep_start = Instant::now();
         let prepared_net = if force_fallback {
             None
         } else {
@@ -492,6 +568,19 @@ impl Server {
                 }
             }
         };
+        if trace.enabled() {
+            trace.record(
+                SpanId::NONE,
+                "plan:prepare",
+                "plan",
+                prep_start,
+                Instant::now(),
+                &[
+                    ("plan", plan.name.clone()),
+                    ("prepared", prepared_net.is_some().to_string()),
+                ],
+            );
+        }
         // Workers read the current engine per batch through this slot;
         // the background tuner swaps re-tuned engines in here.
         let engine_slot: Arc<Mutex<Option<Arc<PreparedNetwork>>>> =
@@ -503,6 +592,7 @@ impl Server {
             let deadline = config.batch_deadline;
             let metrics = Arc::clone(&metrics);
             let depth = Arc::clone(&depth);
+            let trace = trace.clone();
             move || {
                 let mut disconnected = false;
                 'serve: while !disconnected {
@@ -511,10 +601,12 @@ impl Server {
                     // dequeue time, without ever forming a batch.
                     let first = loop {
                         match submit_rx.recv() {
-                            Ok(req) => {
+                            Ok(mut req) => {
                                 depth.fetch_sub(1, Ordering::Relaxed);
-                                if req.expired_at(Instant::now()) {
-                                    shed(&metrics, req);
+                                let now = Instant::now();
+                                req.dequeued = Some(now);
+                                if req.expired_at(now) {
+                                    shed(&metrics, &trace, req);
                                     continue;
                                 }
                                 break req;
@@ -532,10 +624,12 @@ impl Server {
                             break;
                         }
                         match submit_rx.recv_timeout(close_at - now) {
-                            Ok(req) => {
+                            Ok(mut req) => {
                                 depth.fetch_sub(1, Ordering::Relaxed);
-                                if req.expired_at(Instant::now()) {
-                                    shed(&metrics, req);
+                                let now = Instant::now();
+                                req.dequeued = Some(now);
+                                if req.expired_at(now) {
+                                    shed(&metrics, &trace, req);
                                 } else {
                                     requests.push(req);
                                 }
@@ -560,10 +654,12 @@ impl Server {
                     let mut requests = Vec::new();
                     while requests.len() < max_batch {
                         match submit_rx.try_recv() {
-                            Ok(req) => {
+                            Ok(mut req) => {
                                 depth.fetch_sub(1, Ordering::Relaxed);
-                                if req.expired_at(Instant::now()) {
-                                    shed(&metrics, req);
+                                let now = Instant::now();
+                                req.dequeued = Some(now);
+                                if req.expired_at(now) {
+                                    shed(&metrics, &trace, req);
                                 } else {
                                     requests.push(req);
                                 }
@@ -589,6 +685,8 @@ impl Server {
             let shift = config.requant_shift;
             let exec_threads = config.exec_threads;
             let intra_threads = config.intra_threads;
+            let trace = trace.clone();
+            let profiler = profiler.clone();
             #[cfg(any(test, feature = "failpoints"))]
             let faults = config.faults.clone();
             workers.push(std::thread::spawn(move || loop {
@@ -604,7 +702,7 @@ impl Server {
                 let mut live = Vec::with_capacity(batch.requests.len());
                 for req in batch.requests {
                     if req.expired_at(now) {
-                        shed(&metrics, req);
+                        shed(&metrics, &trace, req);
                     } else {
                         live.push(req);
                     }
@@ -614,6 +712,15 @@ impl Server {
                 }
                 let inputs: Vec<&ActTensor> = live.iter().map(|r| &r.input).collect();
                 let exec_start = Instant::now();
+                // Pre-allocate the batch umbrella span so per-layer and
+                // per-tile spans inside execution can parent to it; the
+                // span itself is recorded once the batch finishes.
+                let batch_span = trace.next_id();
+                let obs = ExecObs {
+                    trace: trace.clone(),
+                    parent: batch_span,
+                    profiler: profiler.clone(),
+                };
                 // Snapshot the current engine (the tuner may swap a
                 // re-tuned one in between batches; in-flight batches
                 // finish on the engine they started with).
@@ -640,12 +747,24 @@ impl Server {
                         Some(p) => {
                             let intra =
                                 intra_for_batch(intra_threads, exec_threads, inputs.len());
-                            p.run_batch_with(&inputs, shift, exec_threads, intra)
+                            p.run_batch_obs(&inputs, shift, exec_threads, intra, &obs)
                         }
                         None => run_network_batch(&plan, &inputs, shift),
                     }
                 }));
-                let exec_seconds = exec_start.elapsed().as_secs_f64();
+                let exec_end = Instant::now();
+                let exec_seconds = (exec_end - exec_start).as_secs_f64();
+                if trace.enabled() {
+                    trace.record_with(
+                        batch_span,
+                        SpanId::NONE,
+                        "batch_exec",
+                        "serve",
+                        exec_start,
+                        exec_end,
+                        &[("batch_size", live.len().to_string())],
+                    );
+                }
                 match outputs {
                     Ok(outputs) => {
                         {
@@ -657,10 +776,14 @@ impl Server {
                             }
                         }
                         for (req, out) in live.into_iter().zip(outputs) {
+                            let outcome = if out.is_ok() { "answered" } else { "failed" };
                             let _ =
                                 req.reply.send(out.map_err(|e| {
                                     ServeError::Failed(format!("{e:#}"))
                                 }));
+                            record_request_spans(
+                                &trace, &req, exec_start, exec_end, outcome,
+                            );
                         }
                     }
                     Err(panic) => {
@@ -679,6 +802,9 @@ impl Server {
                         }
                         for req in live {
                             let _ = req.reply.send(Err(ServeError::Internal(msg.clone())));
+                            record_request_spans(
+                                &trace, &req, exec_start, exec_end, "internal",
+                            );
                         }
                     }
                 }
@@ -697,6 +823,7 @@ impl Server {
                 let tcfg = config.tune_config;
                 let hot_layers = config.tune_hot_layers;
                 let min_requests = config.tune_min_requests;
+                let trace = trace.clone();
                 Some(std::thread::spawn(move || {
                     background_tuner(
                         &plan,
@@ -708,6 +835,7 @@ impl Server {
                         &metrics,
                         &engine_slot,
                         &stop,
+                        &trace,
                     )
                 }))
             }
@@ -725,6 +853,8 @@ impl Server {
             config,
             prepared: has_prepared,
             metrics,
+            trace,
+            profiler,
         }
     }
 
@@ -732,6 +862,18 @@ impl Server {
     /// functional fallback for unpreparable plans).
     pub fn is_prepared(&self) -> bool {
         self.prepared
+    }
+
+    /// The session's span recorder. Clone it before
+    /// [`Server::shutdown`] to export the trace afterwards (clones
+    /// share the ring).
+    pub fn trace(&self) -> &Recorder {
+        &self.trace
+    }
+
+    /// The per-layer profiler, when `[obs] profile` is on.
+    pub fn profiler(&self) -> Option<&Arc<Profiler>> {
+        self.profiler.as_ref()
     }
 
     pub fn config(&self) -> &ServerConfig {
@@ -766,6 +908,26 @@ impl Server {
         self.admit_blocking(input, self.request_timeout)
     }
 
+    /// Record the root span of a submission rejected at admission, so
+    /// per-request span counts reconcile with `requests` even under
+    /// overload.
+    fn record_rejected_span(&self, span: SpanId, enqueued: Instant) {
+        if !self.trace.enabled() {
+            return;
+        }
+        let now = Instant::now();
+        self.trace.record(span, "admit", "request", enqueued, now, &[]);
+        self.trace.record_with(
+            span,
+            SpanId::NONE,
+            "request",
+            "request",
+            enqueued,
+            now,
+            &[("outcome", "rejected".to_string())],
+        );
+    }
+
     fn admit(
         &self,
         input: ActTensor,
@@ -773,6 +935,7 @@ impl Server {
     ) -> Result<ResponseHandle, SubmitError> {
         let Some(tx) = self.tx.as_ref() else {
             lock_clean(&self.metrics).record_rejected();
+            self.record_rejected_span(self.trace.next_id(), Instant::now());
             return Err(SubmitError::ShuttingDown(input));
         };
         let (reply, rx) = mpsc::channel();
@@ -782,21 +945,35 @@ impl Server {
             reply,
             enqueued: now,
             deadline: timeout.map(|t| now + t),
+            span: self.trace.next_id(),
+            dequeued: None,
         };
         // Depth is incremented *before* the send so a racing batcher
         // decrement can never observe (and record) a negative depth.
-        self.depth.fetch_add(1, Ordering::Relaxed);
+        let depth_now = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
         match tx.try_send(req) {
             Ok(()) => {
-                lock_clean(&self.metrics).record_submitted();
+                let mut m = lock_clean(&self.metrics);
+                m.record_submitted();
+                // Submit-time depth sample: bursts between dispatches
+                // reach the gauge's high-water mark.
+                m.sample_queue_depth(depth_now);
                 Ok(ResponseHandle { rx })
             }
             Err(e) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
-                lock_clean(&self.metrics).record_rejected();
+                let backlog = self.depth.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
+                {
+                    let mut m = lock_clean(&self.metrics);
+                    m.record_rejected();
+                    m.sample_queue_depth(backlog);
+                }
                 Err(match e {
-                    mpsc::TrySendError::Full(req) => SubmitError::QueueFull(req.input),
+                    mpsc::TrySendError::Full(req) => {
+                        self.record_rejected_span(req.span, req.enqueued);
+                        SubmitError::QueueFull(req.input)
+                    }
                     mpsc::TrySendError::Disconnected(req) => {
+                        self.record_rejected_span(req.span, req.enqueued);
                         SubmitError::ShuttingDown(req.input)
                     }
                 })
@@ -811,6 +988,7 @@ impl Server {
     ) -> Result<ResponseHandle, SubmitError> {
         let Some(tx) = self.tx.as_ref() else {
             lock_clean(&self.metrics).record_rejected();
+            self.record_rejected_span(self.trace.next_id(), Instant::now());
             return Err(SubmitError::ShuttingDown(input));
         };
         let (reply, rx) = mpsc::channel();
@@ -820,16 +998,24 @@ impl Server {
             reply,
             enqueued: now,
             deadline: timeout.map(|t| now + t),
+            span: self.trace.next_id(),
+            dequeued: None,
         };
         self.depth.fetch_add(1, Ordering::Relaxed);
         match tx.send(req) {
             Ok(()) => {
-                lock_clean(&self.metrics).record_submitted();
+                let mut m = lock_clean(&self.metrics);
+                m.record_submitted();
+                // The send may have blocked; sample the depth as it is
+                // now, not as it was at the (possibly long-past)
+                // submission attempt.
+                m.sample_queue_depth(self.depth.load(Ordering::Relaxed));
                 Ok(ResponseHandle { rx })
             }
             Err(mpsc::SendError(req)) => {
                 self.depth.fetch_sub(1, Ordering::Relaxed);
                 lock_clean(&self.metrics).record_rejected();
+                self.record_rejected_span(req.span, req.enqueued);
                 Err(SubmitError::ShuttingDown(req.input))
             }
         }
@@ -899,13 +1085,14 @@ fn background_tuner(
     metrics: &Mutex<SessionMetrics>,
     engine_slot: &Mutex<Option<Arc<PreparedNetwork>>>,
     stop: &AtomicBool,
+    trace: &Recorder,
 ) {
     // Tune what traffic actually exercises: idle until the session has
     // seen real requests. A coarse poll interval keeps an idle tuner
     // off the metrics mutex the serving hot path records through —
     // tuning start latency is not latency-sensitive.
     while !stop.load(Ordering::Relaxed) {
-        if lock_clean(metrics).requests >= min_requests {
+        if lock_clean(metrics).requests() >= min_requests {
             break;
         }
         std::thread::sleep(Duration::from_millis(20));
@@ -955,7 +1142,9 @@ fn background_tuner(
         }
         // Measure with the layer's real weights so the oracle gate
         // checks the numerics this server actually serves.
-        match tune::tune_conv(cfg, *pad, machine, backend, tcfg, lp.weights()) {
+        let measure_start = Instant::now();
+        let measured_layer = match tune::tune_conv(cfg, *pad, machine, backend, tcfg, lp.weights())
+        {
             Ok(outcome) => {
                 measured.push(lp.layer.name());
                 if let Err(e) = db.record(key, outcome.entry()) {
@@ -964,8 +1153,25 @@ fn background_tuner(
                         lp.layer.name()
                     );
                 }
+                true
             }
-            Err(e) => eprintln!("yflows tuner: {} not measurable ({e:#})", lp.layer.name()),
+            Err(e) => {
+                eprintln!("yflows tuner: {} not measurable ({e:#})", lp.layer.name());
+                false
+            }
+        };
+        if trace.enabled() {
+            trace.record(
+                SpanId::NONE,
+                "tune:measure",
+                "tune",
+                measure_start,
+                Instant::now(),
+                &[
+                    ("layer", lp.layer.name()),
+                    ("measured", measured_layer.to_string()),
+                ],
+            );
         }
     }
 
@@ -985,6 +1191,15 @@ fn background_tuner(
             match super::plan::global_plan_cache().prepared(&new_plan, backend) {
                 Ok(engine) => {
                     *lock_clean(engine_slot) = Some(engine);
+                    if trace.enabled() {
+                        trace.event(
+                            SpanId::NONE,
+                            "tune:swap",
+                            "tune",
+                            Instant::now(),
+                            &[("plan", new_plan.name.clone())],
+                        );
+                    }
                     true
                 }
                 Err(e) => {
@@ -1041,15 +1256,18 @@ mod tests {
             assert_eq!(out.shape.h, 4);
         }
         let metrics = server.shutdown();
-        assert_eq!(metrics.requests, 6);
-        assert_eq!(metrics.answered, 6);
+        assert_eq!(metrics.requests(), 6);
+        assert_eq!(metrics.answered(), 6);
         assert!(metrics.accounted(), "requests != answered + rejected + shed");
         assert!(metrics.summary().mean > 0.0);
         // Every request went through some batch; none oversize.
         assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), 6);
         assert!(metrics.max_batch_observed() <= 8);
-        // The batcher samples the queue depth at every dispatch.
+        // The batcher samples the queue depth at every dispatch;
+        // submit-time samples go to the gauge only.
         assert_eq!(metrics.queue_depths.len(), metrics.batch_sizes.len());
+        // Every successful submit sampled a depth ≥ 1 (itself).
+        assert!(metrics.queue_depth_high_water() >= 1);
     }
 
     #[test]
@@ -1164,8 +1382,8 @@ mod tests {
             assert_eq!(out.data, reference.data, "post-panic serving diverged");
         }
         let metrics = server.shutdown();
-        assert_eq!(metrics.worker_panics, 1);
-        assert_eq!(metrics.requests, 5);
+        assert_eq!(metrics.worker_panics(), 1);
+        assert_eq!(metrics.requests(), 5);
         assert!(metrics.accounted());
     }
 
@@ -1208,8 +1426,8 @@ mod tests {
             h.recv().expect("admitted request must be answered");
         }
         let metrics = server.shutdown();
-        assert_eq!(metrics.rejected, rejected);
-        assert_eq!(metrics.answered as usize, handles.len());
+        assert_eq!(metrics.rejected(), rejected);
+        assert_eq!(metrics.answered() as usize, handles.len());
         assert!(metrics.accounted());
     }
 
@@ -1231,8 +1449,8 @@ mod tests {
         }
         alive.recv().expect("undeadlined request must be answered");
         let metrics = server.shutdown();
-        assert_eq!(metrics.shed_deadline, 3);
-        assert_eq!(metrics.answered, 1);
+        assert_eq!(metrics.shed_deadline(), 3);
+        assert_eq!(metrics.answered(), 1);
         // Shed requests never occupied a worker: only the live one is
         // in the batch accounting.
         assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), 1);
@@ -1264,8 +1482,8 @@ mod tests {
         for h in &handles {
             h.recv().expect("request dropped across shutdown drain");
         }
-        assert_eq!(metrics.requests, 10);
-        assert_eq!(metrics.answered, 10);
+        assert_eq!(metrics.requests(), 10);
+        assert_eq!(metrics.answered(), 10);
         assert!(metrics.accounted());
     }
 
@@ -1292,8 +1510,8 @@ mod tests {
             h.recv().expect("backpressured request must be answered");
         }
         let metrics = server.shutdown();
-        assert_eq!(metrics.requests, 6);
-        assert_eq!(metrics.rejected, 0);
+        assert_eq!(metrics.requests(), 6);
+        assert_eq!(metrics.rejected(), 0);
         assert!(metrics.accounted());
     }
 
@@ -1440,7 +1658,7 @@ mod tests {
             rxs.push(server.submit(input(seed)).expect("admitted"));
         }
         let metrics = server.shutdown();
-        assert_eq!(metrics.requests, 9);
+        assert_eq!(metrics.requests(), 9);
         for rx in rxs {
             assert!(rx.recv().is_ok());
         }

@@ -76,7 +76,10 @@ use crate::coordinator::{
 };
 use crate::layer::{ConvConfig, LayerConfig, PoolConfig};
 use crate::machine::{Bases, Buffers, DecodedProgram, Interp, LowerStats, NativeKernel, RegFile};
+use crate::obs::{ExecObs, Recorder, SpanId};
 use crate::tensor::{ActLayout, ActShape, ActTensor, WeightLayout};
+
+use std::time::Instant;
 
 /// Which executor a prepared engine compiles its kernels for.
 ///
@@ -195,6 +198,8 @@ enum PreparedKind {
 /// One compiled layer executor (= one graph node).
 pub struct PreparedLayer {
     kind: PreparedKind,
+    /// Layer display name from the plan (span labels / profiler rows).
+    name: String,
     /// Input edges, copied from the plan (empty = network input).
     inputs: Vec<usize>,
     /// Arena slot this node's output lives in (liveness-assigned at
@@ -429,6 +434,24 @@ impl PreparedNetwork {
         arena: &mut ExecArena,
         intra_threads: usize,
     ) -> crate::Result<ActTensor> {
+        self.run_obs(input, shift, arena, intra_threads, &ExecObs::off())
+    }
+
+    /// [`PreparedNetwork::run_with`] with observation hooks: per-layer
+    /// wall time into `obs`'s profiler and per-layer (plus, for
+    /// partitioned convs, per-tile) spans into its recorder, parented
+    /// under `obs.parent`. With [`ExecObs::off`] this *is* `run_with`
+    /// — one enabled check per layer, no clock reads, no allocation —
+    /// and hooks never change output bytes either way (timing reads
+    /// around the layer body, never inside the arithmetic).
+    pub fn run_obs(
+        &self,
+        input: &ActTensor,
+        shift: u32,
+        arena: &mut ExecArena,
+        intra_threads: usize,
+        obs: &ExecObs,
+    ) -> crate::Result<ActTensor> {
         let n = self.layers.len();
         if n == 0 {
             return Ok(input.clone());
@@ -441,6 +464,13 @@ impl PreparedNetwork {
         let mut outs: Vec<Option<ActTensor>> = (0..n).map(|_| None).collect();
         for i in 0..n {
             let layer = &self.layers[i];
+            // Pre-allocate the layer's span id so tile spans recorded
+            // *during* the layer can parent to it; the span itself is
+            // recorded after the layer body with the same id. `None` /
+            // `SpanId::NONE` on the disabled path — no clock read.
+            let layer_start = obs.enabled().then(Instant::now);
+            let layer_span = obs.trace.next_id();
+            let lt = LayerTrace { trace: &obs.trace, span: layer_span };
             let out = {
                 let src0: &ActTensor = match layer.inputs.first() {
                     Some(&j) => outs[j].as_ref().ok_or_else(|| {
@@ -450,13 +480,13 @@ impl PreparedNetwork {
                 };
                 match &layer.kind {
                     PreparedKind::Conv(pc) => {
-                        exec_conv(pc, src0, shift, layer.slot, arena, intra_threads)?
+                        exec_conv(pc, src0, shift, layer.slot, arena, intra_threads, lt)?
                     }
                     PreparedKind::Depthwise(pc) => {
-                        exec_depthwise(pc, src0, shift, layer.slot, arena, intra_threads)?
+                        exec_depthwise(pc, src0, shift, layer.slot, arena, intra_threads, lt)?
                     }
                     PreparedKind::Grouped(pg) => {
-                        exec_grouped(pg, src0, shift, layer.slot, arena, intra_threads)?
+                        exec_grouped(pg, src0, shift, layer.slot, arena, intra_threads, lt)?
                     }
                     PreparedKind::Pool(p) => exec_pool(p, src0, layer.slot, arena),
                     PreparedKind::Gap => {
@@ -488,6 +518,13 @@ impl PreparedNetwork {
                     }
                 }
             };
+            if let Some(t0) = layer_start {
+                let t1 = Instant::now();
+                if let Some(p) = &obs.profiler {
+                    p.record(i, t1 - t0);
+                }
+                obs.trace.record_with(layer_span, obs.parent, &layer.name, "exec", t0, t1, &[]);
+            }
             // Recycle inputs whose last consumer just ran — their slots
             // go back to the arena for reuse by later nodes.
             for &j in &layer.inputs {
@@ -547,12 +584,27 @@ impl PreparedNetwork {
         threads: usize,
         intra_threads: usize,
     ) -> Vec<crate::Result<ActTensor>> {
+        self.run_batch_obs(inputs, shift, threads, intra_threads, &ExecObs::off())
+    }
+
+    /// [`PreparedNetwork::run_batch_with`] with observation hooks: one
+    /// `ExecObs` shared by every fan-out thread (its sinks are atomic /
+    /// lock-guarded, so concurrent layer and tile recordings are safe).
+    /// [`ExecObs::off`] makes this exactly `run_batch_with`.
+    pub fn run_batch_obs(
+        &self,
+        inputs: &[&ActTensor],
+        shift: u32,
+        threads: usize,
+        intra_threads: usize,
+        obs: &ExecObs,
+    ) -> Vec<crate::Result<ActTensor>> {
         let threads = threads.max(1).min(inputs.len().max(1));
         if threads <= 1 {
             let mut arena = self.new_arena();
             return inputs
                 .iter()
-                .map(|&i| self.run_with(i, shift, &mut arena, intra_threads))
+                .map(|&i| self.run_obs(i, shift, &mut arena, intra_threads, obs))
                 .collect();
         }
         let sizes = balanced_chunk_sizes(inputs.len(), threads);
@@ -572,7 +624,7 @@ impl PreparedNetwork {
                     scope.spawn(move || {
                         let mut arena = self.new_arena();
                         part.iter()
-                            .map(|&i| self.run_with(i, shift, &mut arena, intra_threads))
+                            .map(|&i| self.run_obs(i, shift, &mut arena, intra_threads, obs))
                             .collect()
                     })
                 })
@@ -631,6 +683,7 @@ fn scoped_jobs<T: Send, F: Fn(&mut T) + Sync>(jobs: &mut [T], threads: usize, f:
 fn prepare_layer(lp: &LayerPlan, backend: Backend) -> crate::Result<PreparedLayer> {
     let node = |kind: PreparedKind, est_out_elems: usize| PreparedLayer {
         kind,
+        name: lp.layer.name(),
         inputs: lp.inputs.clone(),
         slot: 0, // assigned by the liveness walk in `prepare`
         est_out_elems,
@@ -921,6 +974,18 @@ fn split_tiles(
     Ok(tiles)
 }
 
+/// Span context for the layer currently executing, handed to the conv
+/// executors so partitioned paths can record per-tile spans under the
+/// layer's span. The id is pre-allocated by the run loop (the layer
+/// span itself is recorded *after* the layer body, same id), so tiles
+/// can reference a parent exported later. With the recorder off the id
+/// is [`SpanId::NONE`] and every recording is a cheap no-op.
+#[derive(Clone, Copy)]
+struct LayerTrace<'a> {
+    trace: &'a Recorder,
+    span: SpanId,
+}
+
 /// The per-layer executor a kernel loop resolved from its backend: one
 /// place that knows how to run a prevalidated invocation schedule, so
 /// the conv/grouped bodies are written once instead of per backend.
@@ -1040,6 +1105,7 @@ fn run_conv_kernel(
     slot: usize,
     arena: &mut ExecArena,
     intra_threads: usize,
+    lt: LayerTrace<'_>,
 ) -> crate::Result<ActTensor> {
     let padded = stage_padded(&pc.cfg, pc.c, pc.pad, src, arena)?;
     debug_assert_eq!(padded.data.len(), pc.in_elems);
@@ -1050,7 +1116,7 @@ fn run_conv_kernel(
         exec.run_schedule(&padded.data, &pc.weights, acc, &pc.sched);
     } else {
         let (pool, acc) = arena.tiles_and_acc();
-        run_tiled_conv(pc, &padded.data, acc, pool, intra_threads);
+        run_tiled_conv(pc, &padded.data, acc, pool, intra_threads, lt);
     }
     arena.put_padded(padded);
     Ok(arena.take_act(
@@ -1070,6 +1136,7 @@ fn run_tiled_conv(
     acc: &mut [i32],
     pool: &mut [(Interp, RegFile)],
     threads: usize,
+    lt: LayerTrace<'_>,
 ) {
     assert!(
         pool.len() >= pc.tile_scheds.len(),
@@ -1077,19 +1144,24 @@ fn run_tiled_conv(
         pool.len(),
         pc.tile_scheds.len()
     );
-    let mut jobs: Vec<(&TileSched, &mut [i32], &mut (Interp, RegFile))> =
+    let mut jobs: Vec<(usize, &TileSched, &mut [i32], &mut (Interp, RegFile))> =
         Vec::with_capacity(pc.tile_scheds.len());
     let mut rest = acc;
-    for (t, ex) in pc.tile_scheds.iter().zip(pool.iter_mut()) {
+    for (idx, (t, ex)) in pc.tile_scheds.iter().zip(pool.iter_mut()).enumerate() {
         let (band, tail) = std::mem::take(&mut rest).split_at_mut(t.len);
         rest = tail;
-        jobs.push((t, band, ex));
+        jobs.push((idx, t, band, ex));
     }
     let (native, dp, weights) = (pc.native.as_ref(), &pc.prog, &pc.weights[..]);
+    let trace_on = lt.trace.enabled();
     scoped_jobs(&mut jobs, threads, |job| {
-        let (t, band, ex) = job;
+        let (idx, t, band, ex) = job;
+        let t0 = trace_on.then(Instant::now);
         let mut exec = BackendExec::resolve(native, dp, &mut ex.0, &mut ex.1);
         exec.run_schedule(input, weights, band, &t.sched);
+        if let Some(t0) = t0 {
+            lt.trace.record(lt.span, &format!("tile{idx}"), "exec", t0, Instant::now(), &[]);
+        }
     });
 }
 
@@ -1100,8 +1172,9 @@ fn exec_conv(
     slot: usize,
     arena: &mut ExecArena,
     intra_threads: usize,
+    lt: LayerTrace<'_>,
 ) -> crate::Result<ActTensor> {
-    let mut out = run_conv_kernel(pc, src, slot, arena, intra_threads)?;
+    let mut out = run_conv_kernel(pc, src, slot, arena, intra_threads, lt)?;
     requant_conv_into(&arena.acc, shift, pc.c, &mut out);
     Ok(out)
 }
@@ -1113,8 +1186,9 @@ fn exec_depthwise(
     slot: usize,
     arena: &mut ExecArena,
     intra_threads: usize,
+    lt: LayerTrace<'_>,
 ) -> crate::Result<ActTensor> {
-    let mut out = run_conv_kernel(pc, src, slot, arena, intra_threads)?;
+    let mut out = run_conv_kernel(pc, src, slot, arena, intra_threads, lt)?;
     // Position-major raw output coincides flat-index-wise with NCHWc.
     crate::codegen::depthwise::dw_requantize_relu_into(&arena.acc, shift, &mut out);
     Ok(out)
@@ -1127,6 +1201,7 @@ fn exec_grouped(
     slot: usize,
     arena: &mut ExecArena,
     intra_threads: usize,
+    lt: LayerTrace<'_>,
 ) -> crate::Result<ActTensor> {
     let padded = stage_padded(&pg.cfg, pg.c, pg.pad, src, arena)?;
     debug_assert_eq!(padded.data.len(), pg.in_elems);
@@ -1153,20 +1228,22 @@ fn exec_grouped(
             pool.len(),
             pg.tile_groups.len()
         );
-        let mut jobs: Vec<((usize, usize), &mut [i32], &mut (Interp, RegFile))> =
+        let mut jobs: Vec<(usize, (usize, usize), &mut [i32], &mut (Interp, RegFile))> =
             Vec::with_capacity(pg.tile_groups.len());
         let mut rest = acc;
-        for (&(g_lo, g_hi), ex) in pg.tile_groups.iter().zip(pool.iter_mut()) {
+        for (idx, (&(g_lo, g_hi), ex)) in pg.tile_groups.iter().zip(pool.iter_mut()).enumerate() {
             let (band, tail) =
                 std::mem::take(&mut rest).split_at_mut((g_hi - g_lo) * pg.group_out_elems);
             rest = tail;
-            jobs.push(((g_lo, g_hi), band, ex));
+            jobs.push((idx, (g_lo, g_hi), band, ex));
         }
         let (native, dp) = (pg.native.as_ref(), &pg.prog);
         let pdata = &padded.data[..];
+        let trace_on = lt.trace.enabled();
         scoped_jobs(&mut jobs, intra_threads, |job| {
-            let (range, band, ex) = job;
+            let (idx, range, band, ex) = job;
             let (g_lo, g_hi) = *range;
+            let t0 = trace_on.then(Instant::now);
             let mut exec = BackendExec::resolve(native, dp, &mut ex.0, &mut ex.1);
             for g in g_lo..g_hi {
                 let gin = &pdata[g * pg.group_in_elems..(g + 1) * pg.group_in_elems];
@@ -1177,6 +1254,9 @@ fn exec_grouped(
                     &mut band[o..o + pg.group_out_elems],
                     &pg.sched,
                 );
+            }
+            if let Some(t0) = t0 {
+                lt.trace.record(lt.span, &format!("tile{idx}"), "exec", t0, Instant::now(), &[]);
             }
         });
     }

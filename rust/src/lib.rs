@@ -47,6 +47,12 @@
 //!   fused requantization — signed for residual adds), then execute the
 //!   topological schedule per image with no plan-derived work —
 //!   bit-identical to the functional path, parallel across a batch.
+//! * [`obs`] — end-to-end observability: an atomic metrics registry
+//!   (Prometheus text + JSON snapshots) backing the session metrics, a
+//!   bounded span recorder exporting Chrome `trace_event` JSON for the
+//!   request lifecycle and per-layer/per-tile execution, and an opt-in
+//!   per-layer profiler pairing measured wall time with `PerfModel`
+//!   cycles (modeled-vs-measured table + Spearman).
 //! * [`tune`] — the empirical autotuner: measures the heuristic-pruned
 //!   candidate shortlist on the host CPU through the real execution
 //!   path (bit-identity-gated against the interpreter oracle) and
@@ -70,6 +76,7 @@ pub mod explore;
 pub mod nets;
 pub mod coordinator;
 pub mod exec;
+pub mod obs;
 pub mod tune;
 pub mod runtime;
 pub mod report;

@@ -31,7 +31,11 @@ Experiments (paper artifacts):
 Tools:
   serve       Open-loop Poisson load demo against the batched server
               [--requests 64 --rate 200 --seed 42; [server] queue_capacity /
-               request_timeout_ms from --config control admission + shedding]
+               request_timeout_ms from --config control admission + shedding;
+               --trace-out trace.json dumps a Chrome trace on shutdown,
+               --metrics-out metrics.prom the Prometheus text exposition]
+  profile     Per-layer modeled-vs-measured wall-time profile of a
+              prepared network [--reps 16 --vl 128 --shift 9]
   explore     Explore dataflows for one conv layer    [--f 3 --i 56 --nf 128 --s 1 --vl 128]
   codegen     Dump generated NEON C for a dataflow    [--anchor os --f 3 --i 8]
   plan        Plan a network end-to-end               [--net resnet18 --vl 128 --tiles 4 --blocking]
@@ -161,7 +165,17 @@ fn main() -> yflows::Result<()> {
             let n = args.get_parse::<usize>("requests", 64);
             let rate = args.get_parse::<f64>("rate", 200.0);
             let seed = args.get_parse::<u64>("seed", 42);
-            let config = yflows::util::config::server_from(&file_cfg);
+            let mut config = yflows::util::config::server_from(&file_cfg);
+            // `--trace-out` / `--metrics-out` imply the matching [obs]
+            // switches, so the demo needs no config file to observe.
+            let trace_out = args.opt("trace-out").map(str::to_string);
+            let metrics_out = args.opt("metrics-out").map(str::to_string);
+            if trace_out.is_some() && config.obs.trace_capacity == 0 {
+                config.obs.trace_capacity = 65_536;
+            }
+            if metrics_out.is_some() {
+                config.obs.metrics = true;
+            }
 
             let machine = MachineConfig::neon(128);
             let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
@@ -220,6 +234,11 @@ fn main() -> yflows::Result<()> {
                     Err(e) => anyhow::bail!("request failed: {e}"),
                 }
             }
+            // The recorder and profiler are handles into state shared
+            // with the server — clone them out before shutdown consumes
+            // it, then dump after the session table.
+            let trace = server.trace().clone();
+            let profiler = server.profiler().cloned();
             let metrics = server.shutdown();
             let cache = yflows::coordinator::plan::global_plan_cache().stats();
             println!("{}", session_table(&metrics, &cache).render());
@@ -228,6 +247,83 @@ fn main() -> yflows::Result<()> {
                  (shed rate {:.1}%)",
                 metrics.shed_rate() * 100.0
             );
+            if let Some(path) = &trace_out {
+                let doc = trace.chrome_trace();
+                yflows::obs::validate_chrome_trace(&doc)
+                    .map_err(|e| anyhow::anyhow!("trace export failed validation: {e}"))?;
+                std::fs::write(path, doc.render())?;
+                println!(
+                    "wrote {} spans to {path} ({} dropped by the ring)",
+                    trace.len(),
+                    trace.dropped()
+                );
+            }
+            if let Some(path) = &metrics_out {
+                std::fs::write(path, metrics.registry().snapshot_text())?;
+                println!("wrote metrics exposition to {path}");
+            }
+            if let Some(p) = &profiler {
+                println!("== per-layer modeled vs measured ==\n{}", p.table().render());
+                println!("spearman(modeled, measured) = {:.3}", p.spearman());
+            }
+        }
+        Some("profile") => {
+            // Defend (or indict) the perf model on this CPU: run a
+            // prepared demo network with the per-layer profiler
+            // attached and print modeled vs measured wall time per
+            // layer plus their Spearman rank correlation.
+            use yflows::coordinator::plan::{NetworkPlan, Planner, PlannerOptions};
+            use yflows::exec::PreparedNetwork;
+            use yflows::layer::LayerConfig;
+            use yflows::obs::{ExecObs, Profiler};
+            use yflows::tensor::{
+                ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor,
+            };
+
+            let reps = args.get_parse::<usize>("reps", 16);
+            let vl = args.get_parse::<usize>("vl", 128);
+            let shift = args.get_parse::<u32>("shift", 9);
+            let machine = MachineConfig::neon(vl);
+            let c = machine.c_int8();
+            let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+            // A four-conv chain with deliberately uneven layer costs,
+            // so the rank correlation has something to rank.
+            let mut layers = Vec::new();
+            for (idx, (conv, pad)) in [
+                (ConvConfig::simple(18, 18, 3, 3, 1, c, 32), 1usize),
+                (ConvConfig::simple(16, 16, 3, 3, 1, 32, 32), 0),
+                (ConvConfig::simple(14, 14, 3, 3, 1, 32, 16), 0),
+                (ConvConfig::simple(12, 12, 3, 3, 1, 16, 16), 0),
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                let mut lp = planner.plan_layer(&LayerConfig::Conv(conv), pad);
+                lp.bind_weights(WeightTensor::random(
+                    WeightShape::new(conv.in_channels, conv.out_channels, conv.fh, conv.fw),
+                    WeightLayout::CKRSc { c },
+                    70 + idx as u64,
+                ));
+                layers.push(lp);
+            }
+            let plan = NetworkPlan::chain("profile-demo", layers);
+            let prepared = PreparedNetwork::prepare(&plan)?;
+            let profiler = std::sync::Arc::new(Profiler::for_plan(&plan));
+            let obs = ExecObs { profiler: Some(profiler.clone()), ..ExecObs::off() };
+            let mut arena = prepared.new_arena();
+            let input =
+                ActTensor::random(ActShape::new(c, 16, 16), ActLayout::NCHWc { c }, 7);
+            for _ in 0..reps {
+                prepared.run_obs(&input, shift, &mut arena, 1, &obs)?;
+            }
+            println!(
+                "== {}: {} layers x {reps} runs (vl {vl}, backend {}) ==",
+                plan.name,
+                prepared.num_layers(),
+                prepared.backend().name()
+            );
+            println!("{}", profiler.table().render());
+            println!("spearman(modeled, measured) = {:.3}", profiler.spearman());
         }
         Some("explore") => {
             let f = args.get_parse::<usize>("f", 3);

@@ -1,0 +1,71 @@
+//! End-to-end observability: metrics registry, span tracing, and the
+//! per-layer modeled-vs-measured profiler.
+//!
+//! Three cooperating pieces, all opt-in and all near-zero cost when
+//! disabled:
+//!
+//! - [`registry`] — named counters/gauges/histograms behind atomics,
+//!   with Prometheus-style text exposition and a JSON snapshot. The
+//!   serving tier's [`crate::coordinator::SessionMetrics`] overload
+//!   counters read through a registry, so the session table and
+//!   `metrics.prom` can never disagree.
+//! - [`trace`] — a bounded ring of spans with explicit parent ids
+//!   covering the request lifecycle (`admit → queue → batch → exec →
+//!   reply`), per-layer and per-tile execution, plan preparation, and
+//!   tuner activity; exported as Chrome `trace_event` JSON.
+//! - [`profile`] — per-layer wall time recorded inside prepared
+//!   execution next to `PerfModel` modeled cycles, reported as a
+//!   modeled-vs-measured table with Spearman rank correlation.
+//!
+//! Configured by the `[obs]` config section ([`ObsConfig`]) and wired
+//! through `ServerConfig` and the `yflows profile` / `yflows serve
+//! --trace-out/--metrics-out` CLI.
+
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+pub use profile::{ProfileRow, Profiler};
+pub use registry::{Counter, Gauge, Histogram, Registry};
+pub use trace::{validate_chrome_trace, Recorder, Span, SpanId};
+
+use std::sync::Arc;
+
+/// The `[obs]` config section. Everything defaults to off: the
+/// default server runs with a no-op recorder and no profiler.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Emit the registry's Prometheus text exposition on shutdown
+    /// (`yflows serve --metrics-out` implies this).
+    pub metrics: bool,
+    /// Span ring capacity; 0 disables tracing entirely.
+    pub trace_capacity: usize,
+    /// Attach a per-layer [`Profiler`] to the serving engine.
+    pub profile: bool,
+}
+
+/// Observation hooks threaded into prepared execution. One `ExecObs`
+/// is shared by every thread of a batch fan-out (all fields are
+/// `Sync`); [`ExecObs::off`] is the permanent hot-path default and
+/// makes `run_obs` behave exactly like the un-instrumented `run_with`.
+#[derive(Clone, Debug, Default)]
+pub struct ExecObs {
+    /// Span sink; layer and tile spans parent under [`ExecObs::parent`].
+    pub trace: Recorder,
+    /// Enclosing span (the serve tier's per-batch `batch_exec` span).
+    pub parent: SpanId,
+    /// Per-layer wall-time sink, if profiling is on.
+    pub profiler: Option<Arc<Profiler>>,
+}
+
+impl ExecObs {
+    /// The all-off hooks: no tracing, no profiling, no allocation.
+    pub fn off() -> ExecObs {
+        ExecObs::default()
+    }
+
+    /// True when any hook would record something.
+    pub fn enabled(&self) -> bool {
+        self.trace.enabled() || self.profiler.is_some()
+    }
+}

@@ -1,0 +1,170 @@
+//! Opt-in per-layer profiler: wall time measured inside
+//! `PreparedNetwork::run` recorded next to the `PerfModel`'s modeled
+//! cycles for the same layers, so the planner's per-layer ranking can
+//! be defended (or indicted) on real hardware.
+//!
+//! The profiler is built from a [`NetworkPlan`] — prepared layers are
+//! a 1:1, order-preserving image of plan layers, so layer index `i` in
+//! execution is layer `i` here. Recording is two relaxed atomic adds;
+//! the execution path only calls it when a profiler was attached via
+//! `ExecObs`, so the disabled path costs one `Option` check per layer.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::coordinator::plan::NetworkPlan;
+use crate::coordinator::CLOCK_HZ;
+use crate::util::stats::spearman;
+use crate::util::table::Table;
+
+/// Accumulated measurements for one layer.
+#[derive(Debug)]
+struct LayerProf {
+    name: String,
+    kernel: String,
+    modeled_cycles: f64,
+    nanos: AtomicU64,
+    runs: AtomicU64,
+}
+
+/// One row of the modeled-vs-measured report.
+#[derive(Clone, Debug)]
+pub struct ProfileRow {
+    pub name: String,
+    pub kernel: String,
+    /// `PerfModel` estimate converted at the model clock.
+    pub modeled_ms: f64,
+    /// Mean measured wall time per run (0 when the layer never ran).
+    pub measured_ms: f64,
+    pub runs: u64,
+    /// This layer's share of total modeled time.
+    pub modeled_share: f64,
+    /// This layer's share of total measured time.
+    pub measured_share: f64,
+}
+
+/// Per-layer wall-time profiler paired with modeled cycles.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    layers: Vec<LayerProf>,
+}
+
+impl Profiler {
+    /// Build a profiler mirroring `plan`'s layer order.
+    pub fn for_plan(plan: &NetworkPlan) -> Profiler {
+        Profiler {
+            layers: plan
+                .layers
+                .iter()
+                .map(|lp| LayerProf {
+                    name: lp.layer.name(),
+                    kernel: lp.kind.name(),
+                    modeled_cycles: lp.stats.cycles,
+                    nanos: AtomicU64::new(0),
+                    runs: AtomicU64::new(0),
+                })
+                .collect(),
+        }
+    }
+
+    /// Record one execution of layer `i`. Out-of-range indices are
+    /// ignored (a stale profiler after an engine swap must not panic a
+    /// worker).
+    pub fn record(&self, i: usize, elapsed: Duration) {
+        if let Some(l) = self.layers.get(i) {
+            l.nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+            l.runs.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Total recorded runs across all layers (zero means the profiler
+    /// never saw traffic — the disabled-path tests assert on this).
+    pub fn samples(&self) -> u64 {
+        self.layers.iter().map(|l| l.runs.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Snapshot the modeled-vs-measured rows in plan layer order.
+    pub fn rows(&self) -> Vec<ProfileRow> {
+        let mut rows: Vec<ProfileRow> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let runs = l.runs.load(Ordering::Relaxed);
+                let nanos = l.nanos.load(Ordering::Relaxed);
+                let measured_ms =
+                    if runs == 0 { 0.0 } else { nanos as f64 / runs as f64 / 1e6 };
+                ProfileRow {
+                    name: l.name.clone(),
+                    kernel: l.kernel.clone(),
+                    modeled_ms: l.modeled_cycles / CLOCK_HZ * 1e3,
+                    measured_ms,
+                    runs,
+                    modeled_share: 0.0,
+                    measured_share: 0.0,
+                }
+            })
+            .collect();
+        let modeled_total: f64 = rows.iter().map(|r| r.modeled_ms).sum();
+        let measured_total: f64 = rows.iter().map(|r| r.measured_ms).sum();
+        for r in &mut rows {
+            if modeled_total > 0.0 {
+                r.modeled_share = r.modeled_ms / modeled_total;
+            }
+            if measured_total > 0.0 {
+                r.measured_share = r.measured_ms / measured_total;
+            }
+        }
+        rows
+    }
+
+    /// Spearman rank correlation between modeled cycles and mean
+    /// measured time over the layers that actually ran — the same
+    /// statistic the tuner reports, now available on live traffic.
+    /// Returns 0.0 with fewer than two measured layers.
+    pub fn spearman(&self) -> f64 {
+        let measured: Vec<(f64, f64)> = self
+            .rows()
+            .into_iter()
+            .filter(|r| r.runs > 0)
+            .map(|r| (r.modeled_ms, r.measured_ms))
+            .collect();
+        if measured.len() < 2 {
+            return 0.0;
+        }
+        let (xs, ys): (Vec<f64>, Vec<f64>) = measured.into_iter().unzip();
+        spearman(&xs, &ys)
+    }
+
+    /// Render the modeled-vs-measured table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "layer",
+            "kernel",
+            "runs",
+            "ms(model)",
+            "ms(measured)",
+            "model%",
+            "measured%",
+        ]);
+        for r in self.rows() {
+            t.row(&[
+                r.name.clone(),
+                r.kernel.clone(),
+                r.runs.to_string(),
+                format!("{:.4}", r.modeled_ms),
+                format!("{:.4}", r.measured_ms),
+                format!("{:.1}", r.modeled_share * 100.0),
+                format!("{:.1}", r.measured_share * 100.0),
+            ]);
+        }
+        t
+    }
+}

@@ -1,0 +1,345 @@
+//! Process-wide metrics registry: named counters, gauges, and
+//! fixed-bucket histograms behind atomics.
+//!
+//! The registry is the single source of truth for serving-tier
+//! counters — [`crate::coordinator::SessionMetrics`] draws its
+//! overload counters from here, so the rendered session table and the
+//! Prometheus exposition ([`Registry::snapshot_text`]) can never
+//! disagree: they read the same atomics. Instruments are handed out as
+//! `Arc`s, so hot paths increment lock-free; the registry's own maps
+//! are only locked at registration and snapshot time.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use crate::util::json::Json;
+
+/// A monotonically-increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time gauge that additionally tracks its high-water mark
+/// (the largest value ever set) — overload bursts stay visible even
+/// when the gauge has drained back to zero by snapshot time.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+    hi: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+        self.hi.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// Largest value ever [`Gauge::set`].
+    pub fn high_water(&self) -> u64 {
+        self.hi.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-bucket histogram: upper bounds are set at registration and
+/// never change, so observation is a linear scan over a handful of
+/// bounds plus three relaxed atomic adds.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Ascending bucket upper bounds (`le` in exposition terms); an
+    /// implicit `+Inf` bucket follows the last.
+    bounds: Vec<f64>,
+    /// One slot per bound plus the `+Inf` overflow slot.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Running sum of observed values as an `f64` bit pattern,
+    /// accumulated with a CAS loop (no `AtomicF64` on stable).
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx =
+            self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Cumulative bucket counts, one per bound plus the final `+Inf`
+    /// total (equal to [`Histogram::count`]).
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.buckets
+            .iter()
+            .map(|b| {
+                acc += b.load(Ordering::Relaxed);
+                acc
+            })
+            .collect()
+    }
+}
+
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A named-instrument registry. Instruments register on first use and
+/// live for the registry's lifetime; snapshots iterate in name order,
+/// so exposition output is deterministic.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-register the named counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            lock_clean(&self.counters).entry(name.to_string()).or_default(),
+        )
+    }
+
+    /// Get-or-register the named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(lock_clean(&self.gauges).entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-register the named histogram. Bounds apply on first
+    /// registration; later calls return the existing instrument
+    /// unchanged (bounds are part of the instrument's identity).
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        Arc::clone(
+            lock_clean(&self.histograms)
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new(bounds))),
+        )
+    }
+
+    /// Prometheus-style text exposition of every instrument, in name
+    /// order. Gauges additionally expose their high-water mark as
+    /// `<name>_high_water`.
+    pub fn snapshot_text(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in lock_clean(&self.counters).iter() {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        }
+        for (name, g) in lock_clean(&self.gauges).iter() {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", g.get());
+            let _ = writeln!(out, "# TYPE {name}_high_water gauge");
+            let _ = writeln!(out, "{name}_high_water {}", g.high_water());
+        }
+        for (name, h) in lock_clean(&self.histograms).iter() {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let cum = h.cumulative();
+            for (b, n) in h.bounds().iter().zip(&cum) {
+                let _ = writeln!(out, "{name}_bucket{{le=\"{b}\"}} {n}");
+            }
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{le=\"+Inf\"}} {}",
+                cum.last().copied().unwrap_or(0)
+            );
+            let _ = writeln!(out, "{name}_sum {}", h.sum());
+            let _ = writeln!(out, "{name}_count {}", h.count());
+        }
+        out
+    }
+
+    /// JSON snapshot of every instrument (same data as
+    /// [`Registry::snapshot_text`], machine-readable).
+    pub fn snapshot_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (name, c) in lock_clean(&self.counters).iter() {
+            counters.set(name, Json::from_u64(c.get()));
+        }
+        let mut gauges = Json::obj();
+        for (name, g) in lock_clean(&self.gauges).iter() {
+            let mut o = Json::obj();
+            o.set("value", Json::from_u64(g.get()))
+                .set("high_water", Json::from_u64(g.high_water()));
+            gauges.set(name, o);
+        }
+        let mut histograms = Json::obj();
+        for (name, h) in lock_clean(&self.histograms).iter() {
+            let cum = h.cumulative();
+            let mut buckets: Vec<Json> = h
+                .bounds()
+                .iter()
+                .zip(&cum)
+                .map(|(b, n)| {
+                    let mut o = Json::obj();
+                    o.set("le", Json::Num(*b)).set("count", Json::from_u64(*n));
+                    o
+                })
+                .collect();
+            let mut inf = Json::obj();
+            inf.set("le", Json::s("+Inf"))
+                .set("count", Json::from_u64(cum.last().copied().unwrap_or(0)));
+            buckets.push(inf);
+            let mut o = Json::obj();
+            o.set("count", Json::from_u64(h.count()))
+                .set("sum", Json::Num(h.sum()))
+                .set("buckets", Json::Arr(buckets));
+            histograms.set(name, o);
+        }
+        let mut root = Json::obj();
+        root.set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", histograms);
+        root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_register_once_and_accumulate() {
+        let reg = Registry::new();
+        let a = reg.counter("hits");
+        let b = reg.counter("hits");
+        a.inc();
+        b.add(4);
+        assert_eq!(a.get(), 5, "both handles must alias one instrument");
+        assert_eq!(reg.counter("hits").get(), 5);
+        assert_eq!(reg.counter("other").get(), 0);
+    }
+
+    #[test]
+    fn gauge_tracks_high_water() {
+        let g = Gauge::default();
+        g.set(3);
+        g.set(9);
+        g.set(1);
+        assert_eq!(g.get(), 1);
+        assert_eq!(g.high_water(), 9);
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum() {
+        let h = Histogram::new(&[0.001, 0.01, 0.1]);
+        for v in [0.0005, 0.002, 0.02, 0.02, 5.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 5.0425).abs() < 1e-12);
+        // Cumulative: ≤1ms: 1, ≤10ms: 2, ≤100ms: 4, +Inf: 5.
+        assert_eq!(h.cumulative(), vec![1, 2, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn histogram_rejects_unsorted_bounds() {
+        Histogram::new(&[0.1, 0.01]);
+    }
+
+    #[test]
+    fn text_snapshot_is_prometheus_shaped() {
+        let reg = Registry::new();
+        reg.counter("req_total").add(7);
+        reg.gauge("depth").set(4);
+        reg.gauge("depth").set(2);
+        reg.histogram("lat_seconds", &[0.01, 0.1]).observe(0.05);
+        let text = reg.snapshot_text();
+        assert!(text.contains("# TYPE req_total counter\nreq_total 7\n"), "{text}");
+        assert!(text.contains("depth 2\n"), "{text}");
+        assert!(text.contains("depth_high_water 4\n"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"0.01\"} 0"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"0.1\"} 1"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("lat_seconds_sum 0.05"), "{text}");
+        assert!(text.contains("lat_seconds_count 1"), "{text}");
+    }
+
+    #[test]
+    fn json_snapshot_round_trips() {
+        let reg = Registry::new();
+        reg.counter("req_total").add(3);
+        reg.gauge("depth").set(5);
+        reg.histogram("lat", &[1.0]).observe(0.5);
+        let doc = reg.snapshot_json();
+        let parsed = Json::parse(&doc.render()).expect("snapshot must be valid JSON");
+        assert_eq!(
+            parsed.get("counters").and_then(|c| c.get("req_total")).and_then(Json::as_u64),
+            Some(3)
+        );
+        assert_eq!(
+            parsed
+                .get("gauges")
+                .and_then(|g| g.get("depth"))
+                .and_then(|d| d.get("high_water"))
+                .and_then(Json::as_u64),
+            Some(5)
+        );
+        let hist = parsed.get("histograms").and_then(|h| h.get("lat")).unwrap();
+        assert_eq!(hist.get("count").and_then(Json::as_u64), Some(1));
+        assert_eq!(hist.get("buckets").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+    }
+}

@@ -242,6 +242,23 @@ pub fn planner_from(cfg: &Config) -> crate::coordinator::plan::PlannerOptions {
     }
 }
 
+/// The `[obs]` keys [`obs_from`] understands.
+pub const OBS_KEYS: &[&str] = &["metrics", "trace_capacity", "profile"];
+
+/// Build [`crate::obs::ObsConfig`] from `[obs]`. Everything defaults
+/// to off (the hot path stays uninstrumented); same loud unknown-key
+/// policy as the other sections — a `trace_capcity = 65536` typo must
+/// not silently serve untraced.
+pub fn obs_from(cfg: &Config) -> crate::obs::ObsConfig {
+    warn_unknown_keys(cfg, "obs", OBS_KEYS);
+    crate::obs::ObsConfig {
+        metrics: cfg.get_bool("obs", "metrics", false),
+        // Span ring capacity; 0 (the default) disables tracing.
+        trace_capacity: cfg.get_parse("obs", "trace_capacity", 0usize),
+        profile: cfg.get_bool("obs", "profile", false),
+    }
+}
+
 /// The `[server]` keys [`server_from`] understands.
 pub const SERVER_KEYS: &[&str] = &[
     "workers",
@@ -283,6 +300,9 @@ pub fn server_from(cfg: &Config) -> crate::coordinator::ServerConfig {
             0 => d.request_timeout,
             ms => Some(std::time::Duration::from_millis(ms)),
         },
+        // Observability comes from its own `[obs]` section so one
+        // config file cannot say two different things about it.
+        obs: obs_from(cfg),
         ..d
     }
 }
@@ -432,13 +452,35 @@ vls = 128, 512
         assert_eq!(c.unknown_keys("server", SERVER_KEYS), vec!["exec_treads".to_string()]);
         let c = Config::parse("[sweep]\nfilers = 3\n").unwrap();
         assert_eq!(c.unknown_keys("sweep", SWEEP_KEYS), vec!["filers".to_string()]);
-        // Every known key passes clean in both sections.
-        for (section, keys) in [("server", SERVER_KEYS), ("sweep", SWEEP_KEYS)] {
+        // `trace_capcity` is the observability typo of the same class.
+        let c = Config::parse("[obs]\ntrace_capcity = 4096\n").unwrap();
+        assert_eq!(c.unknown_keys("obs", OBS_KEYS), vec!["trace_capcity".to_string()]);
+        // Every known key passes clean in every audited section.
+        for (section, keys) in [("server", SERVER_KEYS), ("sweep", SWEEP_KEYS), ("obs", OBS_KEYS)] {
             let all =
                 keys.iter().map(|k| format!("{k} = 1")).collect::<Vec<_>>().join("\n");
             let c = Config::parse(&format!("[{section}]\n{all}\n")).unwrap();
             assert!(c.unknown_keys(section, keys).is_empty());
         }
+    }
+
+    #[test]
+    fn obs_section_defaults_off_and_reads_through_server() {
+        // Absent section: everything off — the default server carries
+        // a no-op recorder and no profiler.
+        let o = obs_from(&Config::default());
+        assert_eq!(o, crate::obs::ObsConfig::default());
+        assert!(!o.metrics && !o.profile);
+        assert_eq!(o.trace_capacity, 0);
+        let c = Config::parse(
+            "[obs]\nmetrics = true\ntrace_capacity = 4096\nprofile = yes\n",
+        )
+        .unwrap();
+        let o = obs_from(&c);
+        assert!(o.metrics && o.profile);
+        assert_eq!(o.trace_capacity, 4096);
+        // `server_from` carries the section into the server config.
+        assert_eq!(server_from(&c).obs, o);
     }
 
     #[test]

@@ -80,8 +80,8 @@ fn server_round_trips_many_requests() {
         assert_eq!((out.shape.h, out.shape.w), (4, 4));
     }
     let metrics = server.shutdown();
-    assert_eq!(metrics.requests, 12);
-    assert_eq!(metrics.answered, 12);
+    assert_eq!(metrics.requests(), 12);
+    assert_eq!(metrics.answered(), 12);
     assert!(metrics.accounted());
 }
 

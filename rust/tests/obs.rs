@@ -1,0 +1,328 @@
+//! Integration: the observability subsystem end to end.
+//!
+//! Proves the PR-10 acceptance criteria from the outside:
+//!
+//! * the metrics registry sums exactly under concurrent writers and its
+//!   Prometheus exposition agrees with the `SessionMetrics` accessors;
+//! * a traced serve session emits the `admit → queue → batch → exec →
+//!   reply` lifecycle under a root `request` span per request, and the
+//!   root-span count reconciles with `requests == answered + rejected +
+//!   shed_deadline`;
+//! * per-layer spans nest under the batch umbrella span and per-tile
+//!   spans nest under their layer span;
+//! * the Chrome `trace_event` export round-trips through the schema
+//!   validator (and the validator rejects malformed documents);
+//! * the disabled path records nothing — no spans, no samples — and
+//!   instrumented execution is bit-identical to the plain path.
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use yflows::coordinator::plan::{NetworkPlan, Planner, PlannerOptions};
+use yflows::coordinator::{Server, ServerConfig};
+use yflows::exec::{Partition, PreparedNetwork};
+use yflows::layer::{ConvConfig, LayerConfig};
+use yflows::machine::MachineConfig;
+use yflows::obs::{
+    validate_chrome_trace, ExecObs, ObsConfig, Profiler, Recorder, Registry, Span, SpanId,
+};
+use yflows::tensor::{ActLayout, ActShape, ActTensor, WeightLayout, WeightShape, WeightTensor};
+use yflows::util::json::Json;
+
+const SHIFT: u32 = 8;
+
+/// A small conv chain in the serve-tier test shape (16ch 6×6 input).
+fn conv_plan(name: &str, convs: &[ConvConfig]) -> NetworkPlan {
+    let machine = MachineConfig::neon(128);
+    let mut planner = Planner::new(PlannerOptions { machine, ..Default::default() });
+    let mut layers = Vec::new();
+    for (idx, cfg) in convs.iter().enumerate() {
+        let mut lp = planner.plan_layer(&LayerConfig::Conv(*cfg), 0);
+        lp.bind_weights(WeightTensor::random(
+            WeightShape::new(cfg.in_channels, cfg.out_channels, cfg.fh, cfg.fw),
+            WeightLayout::CKRSc { c: 16 },
+            40 + idx as u64,
+        ));
+        layers.push(lp);
+    }
+    NetworkPlan::chain(name, layers)
+}
+
+fn bound_plan() -> NetworkPlan {
+    conv_plan("obs", &[ConvConfig::simple(6, 6, 3, 3, 1, 16, 16)])
+}
+
+fn input(seed: u64) -> ActTensor {
+    ActTensor::random(ActShape::new(16, 6, 6), ActLayout::NCHWc { c: 16 }, seed)
+}
+
+fn outcome(span: &Span) -> &str {
+    span.args
+        .iter()
+        .find(|(k, _)| k == "outcome")
+        .map(|(_, v)| v.as_str())
+        .unwrap_or("")
+}
+
+/// Registry concurrency smoke: N threads × M increments on shared
+/// instruments sum exactly — no lost updates on counters, histogram
+/// counts, or the gauge's high-water mark.
+#[test]
+fn registry_concurrent_updates_sum_exactly() {
+    let reg = Registry::new();
+    let threads: u64 = 8;
+    let per: u64 = 9_999; // divisible by 3: the histogram sum is exact
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let reg = &reg;
+            s.spawn(move || {
+                let c = reg.counter("obs_test_total");
+                let g = reg.gauge("obs_test_depth");
+                let h = reg.histogram("obs_test_seconds", &[0.5, 1.5]);
+                for i in 0..per {
+                    c.inc();
+                    g.set(t * per + i);
+                    h.observe((i % 3) as f64);
+                }
+            });
+        }
+    });
+    let total = threads * per;
+    assert_eq!(reg.counter("obs_test_total").get(), total);
+    assert_eq!(reg.gauge("obs_test_depth").high_water(), total - 1);
+    let h = reg.histogram("obs_test_seconds", &[0.5, 1.5]);
+    assert_eq!(h.count(), total);
+    // Each thread observes 0,1,2 in a cycle: per/3 cycles of sum 3.
+    assert_eq!(h.sum(), (threads * per) as f64);
+    let text = reg.snapshot_text();
+    assert!(text.contains(&format!("obs_test_total {total}")), "exposition disagrees:\n{text}");
+}
+
+/// The tentpole acceptance test: a traced serve session's span counts
+/// reconcile with the session counters, every answered request carries
+/// the full lifecycle under its root span, per-layer spans nest under a
+/// batch umbrella span, and the Chrome export validates.
+#[test]
+fn serve_trace_reconciles_with_session_metrics() {
+    let server = Server::start_with(
+        bound_plan(),
+        ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            obs: ObsConfig { trace_capacity: 4096, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    assert!(server.trace().enabled());
+    let handles: Vec<_> = (0..12).map(|s| server.submit(input(s)).expect("admitted")).collect();
+    // Expired on arrival: shed at dequeue, root span outcome
+    // `shed_deadline` — the reconciliation below must still balance.
+    let shed = server.submit_with(input(99), Some(Duration::ZERO)).expect("admitted");
+    for h in &handles {
+        h.recv().expect("answered");
+    }
+    assert!(shed.recv().is_err(), "zero-deadline request must be shed");
+    let trace = server.trace().clone();
+    let metrics = server.shutdown();
+    assert!(metrics.accounted(), "requests != answered + rejected + shed");
+    assert!(metrics.queue_depth_high_water() >= 1, "submit-side depth sampling missing");
+
+    let spans = trace.spans();
+    assert_eq!(trace.dropped(), 0, "ring too small for this test");
+    let roots: Vec<&Span> =
+        spans.iter().filter(|s| s.cat == "request" && s.name == "request").collect();
+    assert_eq!(roots.len() as u64, metrics.requests(), "one root span per request");
+    let answered = roots.iter().filter(|r| outcome(r) == "answered").count() as u64;
+    let shed_n = roots.iter().filter(|r| outcome(r) == "shed_deadline").count() as u64;
+    assert_eq!(answered, metrics.answered());
+    assert_eq!(shed_n, metrics.shed_deadline());
+
+    // Every answered root has the five lifecycle children, keyed by
+    // explicit parent id.
+    for root in roots.iter().filter(|r| outcome(r) == "answered") {
+        let children: BTreeSet<&str> =
+            spans.iter().filter(|s| s.parent == root.id).map(|s| s.name.as_str()).collect();
+        for want in ["admit", "queue", "batch", "exec", "reply"] {
+            assert!(children.contains(want), "root {:?} missing {want:?}: {children:?}", root.id);
+        }
+    }
+
+    // Per-layer execution spans parent under a `batch_exec` umbrella.
+    let batch_ids: HashSet<SpanId> =
+        spans.iter().filter(|s| s.name == "batch_exec").map(|s| s.id).collect();
+    assert!(!batch_ids.is_empty(), "no batch_exec spans recorded");
+    assert!(spans.iter().filter(|s| s.name == "batch_exec").all(|s| s.cat == "serve"));
+    let layer_spans: Vec<&Span> =
+        spans.iter().filter(|s| s.cat == "exec" && !s.name.starts_with("tile")).collect();
+    assert!(!layer_spans.is_empty(), "no per-layer spans recorded");
+    for l in &layer_spans {
+        assert!(batch_ids.contains(&l.parent), "layer span {:?} not under batch_exec", l.name);
+    }
+    assert!(spans.iter().any(|s| s.cat == "plan"), "plan preparation span missing");
+
+    // The same ring exports a schema-valid Chrome trace.
+    let events = validate_chrome_trace(&trace.chrome_trace()).expect("valid Chrome trace");
+    assert_eq!(events, spans.len());
+
+    // Satellite: the session counters read through the registry, so
+    // the Prometheus exposition can never disagree with the table.
+    let text = metrics.registry().snapshot_text();
+    assert!(text.contains(&format!("yflows_requests_total {}", metrics.requests())));
+    assert!(text.contains(&format!("yflows_answered_total {}", metrics.answered())));
+    assert!(text.contains(&format!("yflows_shed_deadline_total {}", metrics.shed_deadline())));
+}
+
+/// Disabled path: the default server runs with a no-op recorder and no
+/// profiler, records zero spans under traffic, and instrumented
+/// execution with all-off hooks is bit-identical to the plain path —
+/// including when tracing *is* on (observability never changes bytes).
+#[test]
+fn disabled_obs_records_nothing_and_never_changes_bytes() {
+    let server =
+        Server::start_with(bound_plan(), ServerConfig { workers: 2, ..Default::default() });
+    assert!(!server.trace().enabled());
+    assert!(server.profiler().is_none());
+    let handles: Vec<_> = (0..6).map(|s| server.submit(input(s)).expect("admitted")).collect();
+    for h in &handles {
+        h.recv().expect("answered");
+    }
+    let trace = server.trace().clone();
+    server.shutdown();
+    assert!(trace.spans().is_empty());
+    assert_eq!(trace.next_id(), SpanId::NONE);
+    assert_eq!(trace.dropped(), 0);
+
+    let plan = bound_plan();
+    let prepared = PreparedNetwork::prepare(&plan).expect("prepare");
+    let mut arena = prepared.new_arena();
+    let x = input(3);
+    let base = prepared.run_with(&x, SHIFT, &mut arena, 1).expect("run");
+    let off = prepared.run_obs(&x, SHIFT, &mut arena, 1, &ExecObs::off()).expect("run");
+    assert_eq!(base.data, off.data, "ExecObs::off() changed output bytes");
+    let rec = Recorder::with_capacity(1024);
+    let obs = ExecObs { trace: rec.clone(), parent: SpanId::NONE, profiler: None };
+    let traced = prepared.run_obs(&x, SHIFT, &mut arena, 1, &obs).expect("run");
+    assert_eq!(base.data, traced.data, "tracing changed output bytes");
+    assert!(!rec.spans().is_empty(), "enabled recorder saw no layer spans");
+}
+
+/// Per-tile spans: with a banded partition forced onto the conv layer,
+/// tile spans parent to their layer span, which parents to the span id
+/// supplied in `ExecObs::parent`.
+#[test]
+fn tile_spans_nest_under_layer_spans() {
+    let mut plan = bound_plan();
+    for lp in plan.layers.iter_mut() {
+        if matches!(lp.layer, LayerConfig::Conv(_)) {
+            lp.partition = Partition::banded(2);
+        }
+    }
+    let prepared = PreparedNetwork::prepare(&plan).expect("prepare");
+    assert!(prepared.max_tiles() > 1, "banded partition did not take");
+    let rec = Recorder::with_capacity(1024);
+    let parent = rec.next_id();
+    let obs = ExecObs { trace: rec.clone(), parent, profiler: None };
+    let mut arena = prepared.new_arena();
+    prepared.run_obs(&input(5), SHIFT, &mut arena, 2, &obs).expect("run");
+    let spans = rec.spans();
+    let layers: HashMap<SpanId, &Span> = spans
+        .iter()
+        .filter(|s| s.cat == "exec" && !s.name.starts_with("tile"))
+        .map(|s| (s.id, s))
+        .collect();
+    assert!(!layers.is_empty(), "no layer spans recorded");
+    let tiles: Vec<&Span> = spans.iter().filter(|s| s.name.starts_with("tile")).collect();
+    assert!(tiles.len() >= 2, "expected per-tile spans, got {}", tiles.len());
+    for t in &tiles {
+        let layer = layers.get(&t.parent).expect("tile span must parent to a layer span");
+        assert_eq!(layer.parent, parent, "layer span must parent to ExecObs::parent");
+    }
+}
+
+/// The profiler pairs measured wall time with `PerfModel` cycles per
+/// layer: row counts, run counts, shares, and the Spearman statistic
+/// all come out of real instrumented runs.
+#[test]
+fn profiler_reports_modeled_vs_measured_rows() {
+    let plan = conv_plan(
+        "profiled",
+        &[ConvConfig::simple(6, 6, 3, 3, 1, 16, 16), ConvConfig::simple(4, 4, 3, 3, 1, 16, 16)],
+    );
+    let prepared = PreparedNetwork::prepare(&plan).expect("prepare");
+    let profiler = Arc::new(Profiler::for_plan(&plan));
+    assert_eq!(profiler.len(), 2);
+    assert_eq!(profiler.samples(), 0, "fresh profiler must have no samples");
+    assert_eq!(profiler.spearman(), 0.0, "spearman undefined without measurements");
+    let obs = ExecObs {
+        trace: Recorder::Off,
+        parent: SpanId::NONE,
+        profiler: Some(profiler.clone()),
+    };
+    let mut arena = prepared.new_arena();
+    let reps: u64 = 4;
+    for r in 0..reps {
+        prepared.run_obs(&input(r), SHIFT, &mut arena, 1, &obs).expect("run");
+    }
+    assert_eq!(profiler.samples(), reps * 2);
+    let rows = profiler.rows();
+    assert_eq!(rows.len(), 2);
+    for row in &rows {
+        assert_eq!(row.runs, reps);
+        assert!(row.modeled_ms > 0.0, "layer {} has no modeled cost", row.name);
+        assert!(row.measured_ms > 0.0, "layer {} has no measured time", row.name);
+    }
+    let share: f64 = rows.iter().map(|r| r.measured_share).sum();
+    assert!((share - 1.0).abs() < 1e-9, "measured shares must sum to 1, got {share}");
+    let s = profiler.spearman();
+    assert!((-1.0..=1.0).contains(&s), "spearman out of range: {s}");
+    let table = profiler.table().render();
+    assert!(table.contains(&rows[0].name), "table missing layer name:\n{table}");
+    // Out-of-range records are ignored (stale profiler after a swap).
+    profiler.record(99, Duration::from_millis(1));
+    assert_eq!(profiler.samples(), reps * 2);
+}
+
+/// The bounded ring never grows past its capacity, reports evictions,
+/// and still exports a validator-clean document (orphaned parents are
+/// tolerated once drops are declared).
+#[test]
+fn trace_ring_stays_bounded_and_reports_drops() {
+    let rec = Recorder::with_capacity(4);
+    let t0 = Instant::now();
+    let root = rec.record(SpanId::NONE, "root", "exec", t0, t0, &[]);
+    for i in 0..9 {
+        rec.record(root, &format!("s{i}"), "exec", t0, Instant::now(), &[]);
+    }
+    assert_eq!(rec.len(), 4);
+    assert_eq!(rec.dropped(), 6);
+    let n = validate_chrome_trace(&rec.chrome_trace())
+        .expect("a ring with declared drops must still export valid JSON");
+    assert_eq!(n, 4);
+}
+
+/// The schema validator rejects malformed documents: missing
+/// `traceEvents`, events without required fields, zero span ids, and —
+/// when no drops are declared — dangling parent references.
+#[test]
+fn chrome_trace_validator_rejects_malformed_documents() {
+    let no_events = Json::parse("{}").expect("parse");
+    assert!(validate_chrome_trace(&no_events).is_err());
+    let bad_event = Json::parse(r#"{"traceEvents":[{"ph":"X"}],"dropped":0}"#).expect("parse");
+    assert!(validate_chrome_trace(&bad_event).is_err());
+    let zero_id = Json::parse(
+        r#"{"traceEvents":[{"name":"a","cat":"exec","ph":"X","ts":0,"dur":1,"pid":1,"tid":1,
+            "args":{"id":0,"parent":0}}],"dropped":0}"#,
+    )
+    .expect("parse");
+    assert!(validate_chrome_trace(&zero_id).is_err());
+    let dangling = Json::parse(
+        r#"{"traceEvents":[{"name":"a","cat":"exec","ph":"X","ts":0,"dur":1,"pid":1,"tid":1,
+            "args":{"id":1,"parent":7}}],"dropped":0}"#,
+    )
+    .expect("parse");
+    assert!(
+        validate_chrome_trace(&dangling).is_err(),
+        "dangling parent with zero drops must be rejected"
+    );
+}

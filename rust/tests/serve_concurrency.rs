@@ -95,9 +95,9 @@ fn concurrent_submissions_all_answered_batched_and_bit_identical() {
     });
 
     let metrics = server.shutdown();
-    assert_eq!(metrics.requests as usize, N, "every request must be answered");
-    assert_eq!(metrics.answered as usize, N);
-    assert_eq!(metrics.rejected, 0, "undeadlined requests under capacity never reject");
+    assert_eq!(metrics.requests() as usize, N, "every request must be answered");
+    assert_eq!(metrics.answered() as usize, N);
+    assert_eq!(metrics.rejected(), 0, "undeadlined requests under capacity never reject");
     assert!(metrics.accounted(), "requests != answered + rejected + shed");
     assert_eq!(
         metrics.batch_sizes.iter().sum::<usize>(),
@@ -139,8 +139,8 @@ fn backlog_behind_single_worker_coalesces() {
         rx.recv().unwrap();
     }
     let metrics = server.shutdown();
-    assert_eq!(metrics.requests as usize, N);
-    assert_eq!(metrics.answered as usize, N);
+    assert_eq!(metrics.requests() as usize, N);
+    assert_eq!(metrics.answered() as usize, N);
     assert!(metrics.accounted());
     assert!(metrics.batch_sizes.iter().all(|&b| b <= MAX_BATCH));
     assert!(

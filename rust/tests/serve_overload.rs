@@ -64,9 +64,9 @@ fn shutdown_answers_every_admitted_request() {
     for h in &handles {
         h.recv().expect("admitted request dropped across shutdown");
     }
-    assert_eq!(metrics.requests, 24);
-    assert_eq!(metrics.answered, 24);
-    assert_eq!(metrics.rejected, 0);
+    assert_eq!(metrics.requests(), 24);
+    assert_eq!(metrics.answered(), 24);
+    assert_eq!(metrics.rejected(), 0);
     assert!(metrics.accounted(), "requests != answered + rejected + shed");
 }
 
@@ -89,8 +89,8 @@ fn expired_requests_shed_without_occupying_a_worker() {
     }
     alive.recv().expect("undeadlined request must be answered");
     let metrics = server.shutdown();
-    assert_eq!(metrics.shed_deadline, 5);
-    assert_eq!(metrics.answered, 1);
+    assert_eq!(metrics.shed_deadline(), 5);
+    assert_eq!(metrics.answered(), 1);
     // Shed requests never entered a dispatched batch.
     assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), 1);
     assert!(metrics.accounted());
@@ -124,7 +124,7 @@ fn overloaded_serving_is_bit_identical_to_functional_reference() {
         assert_eq!(out.data, reference[s].data, "request {s} diverged under pressure");
     }
     let metrics = server.shutdown();
-    assert_eq!(metrics.answered, N);
+    assert_eq!(metrics.answered(), N);
     assert!(metrics.accounted());
 }
 
@@ -184,15 +184,15 @@ fn accounting_invariant_holds_across_randomized_overload_runs() {
         assert!(
             metrics.accounted(),
             "round {round}: {} != {} + {} + {}",
-            metrics.requests,
-            metrics.answered,
-            metrics.rejected,
-            metrics.shed_deadline
+            metrics.requests(),
+            metrics.answered(),
+            metrics.rejected(),
+            metrics.shed_deadline()
         );
-        assert_eq!(metrics.requests, n, "round {round}");
-        assert_eq!(metrics.rejected, rejected, "round {round}");
-        assert_eq!(metrics.answered, answered, "round {round}");
-        assert_eq!(metrics.shed_deadline, shed, "round {round}");
+        assert_eq!(metrics.requests(), n, "round {round}");
+        assert_eq!(metrics.rejected(), rejected, "round {round}");
+        assert_eq!(metrics.answered(), answered, "round {round}");
+        assert_eq!(metrics.shed_deadline(), shed, "round {round}");
         assert_eq!(accepted.len() as u64, answered + shed, "round {round}");
     }
 }
@@ -231,9 +231,9 @@ mod failpoints {
             assert_eq!(out.data, reference.data, "post-panic request {i} diverged");
         }
         let metrics = server.shutdown();
-        assert_eq!(metrics.worker_panics, 1);
-        assert_eq!(metrics.requests, 9);
-        assert_eq!(metrics.answered, 9, "panicked requests are answered, not lost");
+        assert_eq!(metrics.worker_panics(), 1);
+        assert_eq!(metrics.requests(), 9);
+        assert_eq!(metrics.answered(), 9, "panicked requests are answered, not lost");
         assert!(metrics.accounted());
     }
 
@@ -282,9 +282,9 @@ mod failpoints {
             h.recv().expect("every admitted request is answered on drain");
         }
         let metrics = server.shutdown();
-        assert_eq!(metrics.requests, 64);
-        assert_eq!(metrics.rejected, rejected);
-        assert_eq!(metrics.answered as usize, handles.len());
+        assert_eq!(metrics.requests(), 64);
+        assert_eq!(metrics.rejected(), rejected);
+        assert_eq!(metrics.answered() as usize, handles.len());
         assert!(metrics.accounted());
     }
 
@@ -317,8 +317,8 @@ mod failpoints {
             assert!(matches!(out, Err(ServeError::DeadlineExceeded)), "got {out:?}");
         }
         let metrics = server.shutdown();
-        assert_eq!(metrics.answered, 1);
-        assert_eq!(metrics.shed_deadline, 6);
+        assert_eq!(metrics.answered(), 1);
+        assert_eq!(metrics.shed_deadline(), 6);
         // The shed requests never cost an execution slot.
         assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), 1);
         assert!(metrics.accounted());
@@ -366,7 +366,7 @@ mod failpoints {
         assert!(matches!(first, Err(ServeError::Internal(_))), "got {first:?}");
         server.submit(input(1)).unwrap().recv().expect("pool keeps serving");
         let metrics = server.shutdown();
-        assert_eq!(metrics.worker_panics, 1);
+        assert_eq!(metrics.worker_panics(), 1);
         assert!(metrics.accounted());
     }
 
@@ -394,9 +394,9 @@ mod failpoints {
             h.recv().expect("backpressured request answered");
         }
         let metrics = server.shutdown();
-        assert_eq!(metrics.requests, 8);
-        assert_eq!(metrics.rejected, 0, "blocking submits never shed at the door");
-        assert_eq!(metrics.answered, 8);
+        assert_eq!(metrics.requests(), 8);
+        assert_eq!(metrics.rejected(), 0, "blocking submits never shed at the door");
+        assert_eq!(metrics.answered(), 8);
         assert!(metrics.accounted());
     }
 }
